@@ -1,0 +1,18 @@
+//! Dynamic adaptation example (Fig. 3a's scenario).
+//!
+//! The field-deployed ADC degrades from 8-bit to 6-bit; the analog
+//! weights cannot be reprogrammed, but retraining ONLY the LoRA weights
+//! off-chip and reloading them onto the DPUs recovers most of the lost
+//! accuracy.
+//!
+//! ```bash
+//! cargo run --release --example dynamic_adaptation -- --steps 200
+//! ```
+
+use ahwa_lora::experiments;
+use ahwa_lora::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    experiments::run("fig3a", &args)
+}

@@ -1,0 +1,67 @@
+//! Quickstart: the 60-second tour of the public API.
+//!
+//! ```bash
+//! make artifacts            # once: AOT-compile the jax/pallas graphs
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Loads the AOT artifacts, AHWA-LoRA-trains the tiny encoder for a few
+//! steps on synthetic QA, programs it onto the simulated PCM arrays, and
+//! evaluates at two drift times.
+
+use ahwa_lora::config::run::TrainConfig;
+use ahwa_lora::data::squad::SquadTask;
+use ahwa_lora::eval::drift_eval::{pcm_eval_hw, AnalogDeployment, QaEvalSet};
+use ahwa_lora::model::checkpoint;
+use ahwa_lora::pcm::PcmModel;
+use ahwa_lora::runtime::Engine;
+use ahwa_lora::train::{OwnedArg, OwnedBatch, Trainer};
+use ahwa_lora::util::rng::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Engine: PJRT CPU client + manifest of AOT-compiled graphs.
+    let engine = Engine::from_artifacts()?;
+    println!("loaded manifest with {} graphs", engine.manifest.graphs.len());
+
+    // 2. Initial parameters, exported by the python compile path.
+    let variant = engine.manifest.variant("tiny")?.clone();
+    let meta = checkpoint::load(engine.manifest.init_path("tiny.meta"))?;
+    let train0 = checkpoint::load(engine.manifest.init_path("tiny.step_qa_lora.train"))?;
+    println!(
+        "tiny encoder: {} meta params, {} trainable (LoRA+head)",
+        meta.numel(),
+        train0.numel()
+    );
+
+    // 3. AHWA-LoRA training: noisy analog forward, gradients into LoRA.
+    let task = SquadTask::new(variant.vocab, variant.seq);
+    let cfg = TrainConfig {
+        steps: 40,
+        lr: 5e-3,
+        log_every: 10,
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(&engine, "tiny/step_qa_lora", meta.clone(), train0, cfg)?;
+    let b = variant.train_batch;
+    trainer.run(move |_, rng| {
+        let batch = task.batch(b, rng);
+        OwnedBatch(vec![
+            OwnedArg::I32(batch.tokens),
+            OwnedArg::I32(batch.starts),
+            OwnedArg::I32(batch.ends),
+        ])
+    })?;
+    println!("final loss: {:.4}", trainer.tail_loss(5));
+
+    // 4. Deploy to the simulated analog substrate and evaluate drift.
+    let fwd = engine.load("tiny/fwd_qa")?;
+    let eval = QaEvalSet::generate(&SquadTask::new(variant.vocab, variant.seq), 32, 7);
+    let mut rng = Pcg64::new(1);
+    let dep = AnalogDeployment::program(meta, PcmModel::default(), 3.0, &mut rng);
+    for (label, secs) in [("0s", 0.0), ("1y", 31_536_000.0)] {
+        let meta_t = dep.meta_at(secs, true, &mut rng);
+        let (f1, em) = eval.score(&fwd, &meta_t, &trainer.train, pcm_eval_hw(127.0, 127.0, 0.04), 3)?;
+        println!("drift {label}: F1 {f1:.2}  EM {em:.2}");
+    }
+    Ok(())
+}

@@ -1,0 +1,19 @@
+//! End-to-end driver (EXPERIMENTS.md §E2E):
+//!
+//! digital pretraining of the MobileBERT-proxy base → AHWA-LoRA
+//! adaptation under the paper's hardware constraints (6.7 % weight
+//! noise, 3σ clipping, 8-bit DAC/ADC) with a logged loss curve → PCM
+//! programming → drift evaluation 0 s … 10 y with global drift
+//! compensation.
+//!
+//! ```bash
+//! cargo run --release --example train_e2e -- --steps 300 --trials 3
+//! ```
+
+use ahwa_lora::experiments;
+use ahwa_lora::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    experiments::run("e2e", &args)
+}

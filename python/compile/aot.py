@@ -1,0 +1,332 @@
+"""AOT compile path: lower every (variant x graph) to HLO TEXT + manifest.
+
+Python runs ONCE here (`make artifacts`); the rust coordinator loads the
+emitted artifacts via PJRT and never touches python again.
+
+Interchange is HLO *text* — jax >= 0.5 serializes HloModuleProto with
+64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md). Lowering goes
+stablehlo -> XlaComputation (return_tuple=True) -> as_hlo_text().
+
+Outputs
+-------
+artifacts/<graph_key>.hlo.txt      one per graph (weights are runtime
+                                   inputs, so files stay small)
+artifacts/init/<name>.bin          initial parameter values (ALTB format,
+                                   read by rust/src/model/checkpoint.rs)
+artifacts/manifest.json            variants, graph I/O orders, roles
+
+Graph inventory (DESIGN.md experiment index):
+  encoders: fwd_qa, fwd_cls, step_qa_lora, step_qa_full, step_cls_lora,
+            step_reg_lora (+ rank/placement variants for Fig. 2)
+  decoders: fwd_lm, step_lm_lora, step_lm_full, step_grpo_lora
+"""
+
+import argparse
+import json
+import os
+import struct
+import sys
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import train_graph as TG
+from .configs import HW, VARIANTS, variant_dict
+
+GRPO_GROUP = 16
+
+
+def to_hlo_text(lowered, expected_params: int) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # jax silently dead-code-eliminates unused graph inputs; the rust
+    # coordinator packs literals from the manifest, so any mismatch must
+    # fail the build, not the first execution.
+    got = len(comp.program_shape().parameter_shapes())
+    if got != expected_params:
+        raise RuntimeError(
+            f"lowered graph kept {got} parameters but manifest lists "
+            f"{expected_params}: some model input is unused (DCE'd)"
+        )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# ALTB tensor container (mirrored by rust/src/model/checkpoint.rs)
+# ---------------------------------------------------------------------------
+
+
+def write_altb(path: str, tensors: List[Tuple[str, np.ndarray]]):
+    with open(path, "wb") as f:
+        f.write(b"ALTB")
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors:
+            arr = np.asarray(arr, np.float32)
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+# ---------------------------------------------------------------------------
+# Spec helpers
+# ---------------------------------------------------------------------------
+
+
+def _sds(tree):
+    """ShapeDtypeStructs for a flat (name, arr) list."""
+    return [jax.ShapeDtypeStruct(a.shape, a.dtype) for _, a in tree]
+
+
+def _io_entry(name, role, arr_or_sds):
+    return {
+        "name": name,
+        "role": role,
+        "shape": list(arr_or_sds.shape),
+        "dtype": str(arr_or_sds.dtype),
+    }
+
+
+def _batch_spec(loss: str, cfg, batch_size: int):
+    """(names, ShapeDtypeStructs) of the data inputs for a loss kind."""
+    i32, f32 = jnp.int32, jnp.float32
+    B, S = batch_size, cfg.seq
+    sd = jax.ShapeDtypeStruct
+    if loss == "qa":
+        return ["tokens", "starts", "ends"], [sd((B, S), i32), sd((B,), i32), sd((B,), i32)]
+    if loss == "cls":
+        return ["tokens", "labels"], [sd((B, S), i32), sd((B,), i32)]
+    if loss == "reg":
+        return ["tokens", "targets"], [sd((B, S), i32), sd((B,), f32)]
+    if loss == "lm":
+        return ["tokens", "mask"], [sd((B, S), i32), sd((B, S), f32)]
+    if loss == "grpo":
+        G = GRPO_GROUP
+        return ["tokens", "mask", "adv"], [sd((G, S), i32), sd((G, S), f32), sd((G,), f32)]
+    raise ValueError(loss)
+
+
+KEY_SDS = jax.ShapeDtypeStruct((2,), jnp.uint32)
+HW_SDS = jax.ShapeDtypeStruct((5,), jnp.float32)
+OPT_SDS = jax.ShapeDtypeStruct((3,), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+
+
+def lower_step(cfg, loss: str, regime: str, rank=None, placement=None):
+    """Lower one optimizer-step graph; returns (hlo_text, manifest_entry,
+    init tensors)."""
+    key0 = jax.random.PRNGKey(0)
+    # Rebuild templates with the requested rank/placement
+    meta_t = M.init_meta(cfg, key0)
+    lora_t = M.init_lora(cfg, jax.random.PRNGKey(1), rank=rank, placement=placement)
+    head_name = {"qa": "qa", "cls": "cls", "reg": "cls", "lm": "lm", "grpo": "lm"}[loss]
+    head_t = M.init_head(cfg, head_name, jax.random.PRNGKey(2))
+    train_t = {"head": head_t, "lora": lora_t} if regime == "lora" else {"head": head_t, "meta": meta_t}
+
+    flat_meta = M.flatten_params(meta_t)
+    flat_train = M.flatten_params(train_t)
+    loss_fn = TG.LOSSES[loss]
+    n_layers = cfg.n_layers
+
+    # In the "full" regime the meta weights live INSIDE the trainable
+    # tree; a separate meta input would be dead (jax DCEs it and the
+    # compiled parameter list would disagree with the manifest), so the
+    # graph signature drops it.
+    has_meta_input = regime == "lora"
+
+    def step(fm, ft, m, v, batch, key, hw_vec, opt_vec):
+        hw = TG._hw_from_vec(hw_vec)
+        meta = M.unflatten_params(meta_t, fm) if has_meta_input else None
+
+        def compute_loss(ft_):
+            tr = M.unflatten_params(train_t, ft_)
+            lora = tr.get("lora", {"layers": [{} for _ in range(n_layers)]})
+            mt = tr.get("meta", meta)
+            return loss_fn(cfg, mt, lora, tr["head"], batch, key, hw)
+
+        lossv, grads = jax.value_and_grad(compute_loss)(ft)
+        new_t, new_m, new_v = TG.adamw_update(ft, grads, m, v, opt_vec[2], opt_vec[0], opt_vec[1])
+        return new_t, new_m, new_v, lossv
+
+    bnames, bsds = _batch_spec(loss, cfg, cfg.train_batch)
+    meta_sds, train_sds = _sds(flat_meta), _sds(flat_train)
+    # None is an empty pytree: the "full" graphs simply have no meta
+    # inputs (jit flattens None to zero parameters).
+    lowered = jax.jit(step).lower(
+        meta_sds if has_meta_input else None,
+        train_sds, train_sds, train_sds, tuple(bsds), KEY_SDS, HW_SDS, OPT_SDS
+    )
+
+    inputs = (
+        ([_io_entry("meta." + n, "meta", a) for n, a in flat_meta] if has_meta_input else [])
+        + [_io_entry(n, "train", a) for n, a in flat_train]
+        + [_io_entry(n, "m", a) for n, a in flat_train]
+        + [_io_entry(n, "v", a) for n, a in flat_train]
+        + [_io_entry(n, "data", s) for n, s in zip(bnames, bsds)]
+        + [_io_entry("key", "key", KEY_SDS), _io_entry("hw", "hw", HW_SDS), _io_entry("opt", "opt", OPT_SDS)]
+    )
+    outputs = (
+        [_io_entry(n, "train", a) for n, a in flat_train]
+        + [_io_entry(n, "m", a) for n, a in flat_train]
+        + [_io_entry(n, "v", a) for n, a in flat_train]
+        + [{"name": "loss", "role": "loss", "shape": [], "dtype": "float32"}]
+    )
+    entry = {"variant": cfg.name, "kind": f"step_{loss}_{regime}", "inputs": inputs, "outputs": outputs}
+    inits = {"meta": flat_meta, "train": flat_train}
+    return to_hlo_text(lowered, len(inputs)), entry, inits
+
+
+def lower_fwd(cfg, head_name: str, rank=None, placement=None, batch=None):
+    key0 = jax.random.PRNGKey(0)
+    meta_t = M.init_meta(cfg, key0)
+    lora_t = M.init_lora(cfg, jax.random.PRNGKey(1), rank=rank, placement=placement)
+    head_t = M.init_head(cfg, head_name, jax.random.PRNGKey(2))
+    train_t = {"head": head_t, "lora": lora_t}
+    flat_meta = M.flatten_params(meta_t)
+    flat_train = M.flatten_params(train_t)
+
+    def fwd(fm, ft, tokens, key, hw_vec):
+        hw = TG._hw_from_vec(hw_vec)
+        meta = M.unflatten_params(meta_t, fm)
+        tr = M.unflatten_params(train_t, ft)
+        if head_name == "qa":
+            return M.fwd_qa(cfg, meta, tr["lora"], tr["head"], tokens, key, hw)
+        if head_name == "cls":
+            return (M.fwd_cls(cfg, meta, tr["lora"], tr["head"], tokens, key, hw),)
+        return (M.fwd_lm(cfg, meta, tr["lora"], tokens, key, hw),)
+
+    B = batch or cfg.eval_batch
+    tok_sds = jax.ShapeDtypeStruct((B, cfg.seq), jnp.int32)
+    lowered = jax.jit(fwd).lower(_sds(flat_meta), _sds(flat_train), tok_sds, KEY_SDS, HW_SDS)
+
+    inputs = (
+        [_io_entry("meta." + n, "meta", a) for n, a in flat_meta]
+        + [_io_entry(n, "train", a) for n, a in flat_train]
+        + [_io_entry("tokens", "data", tok_sds)]
+        + [_io_entry("key", "key", KEY_SDS), _io_entry("hw", "hw", HW_SDS)]
+    )
+    S, V, C = cfg.seq, cfg.vocab, cfg.n_cls
+    if head_name == "qa":
+        outputs = [
+            {"name": "start_logits", "role": "logits", "shape": [B, S], "dtype": "float32"},
+            {"name": "end_logits", "role": "logits", "shape": [B, S], "dtype": "float32"},
+        ]
+    elif head_name == "cls":
+        outputs = [{"name": "logits", "role": "logits", "shape": [B, C], "dtype": "float32"}]
+    else:
+        outputs = [{"name": "logits", "role": "logits", "shape": [B, S, V], "dtype": "float32"}]
+    entry = {"variant": cfg.name, "kind": f"fwd_{head_name}", "inputs": inputs, "outputs": outputs}
+    return to_hlo_text(lowered, len(inputs)), entry, {"meta": flat_meta, "train": flat_train}
+
+
+# ---------------------------------------------------------------------------
+# Build plan
+# ---------------------------------------------------------------------------
+
+
+def build_plan() -> List[dict]:
+    """(graph_key, lower_kwargs) for every artifact. See DESIGN.md."""
+    plan = []
+
+    def add(key, **kw):
+        plan.append({"key": key, **kw})
+
+    for vn in ["tiny", "mobilebert_proxy"]:
+        add(f"{vn}/fwd_qa", variant=vn, fn="fwd", head="qa")
+        add(f"{vn}/fwd_cls", variant=vn, fn="fwd", head="cls")
+        add(f"{vn}/step_qa_lora", variant=vn, fn="step", loss="qa", regime="lora")
+        add(f"{vn}/step_qa_full", variant=vn, fn="step", loss="qa", regime="full")
+        add(f"{vn}/step_cls_lora", variant=vn, fn="step", loss="cls", regime="lora")
+        add(f"{vn}/step_reg_lora", variant=vn, fn="step", loss="reg", regime="lora")
+
+    # rank sweep (Fig. 2a / Table II) and placement ablation (Fig. 2b)
+    for r in [1, 2, 4, 16]:
+        add(f"mobilebert_proxy/step_qa_lora@r{r}", variant="mobilebert_proxy", fn="step", loss="qa", regime="lora", rank=r)
+        add(f"mobilebert_proxy/fwd_qa@r{r}", variant="mobilebert_proxy", fn="fwd", head="qa", rank=r)
+    for pl in ["qkv", "ffn"]:
+        add(f"mobilebert_proxy/step_qa_lora@{pl}", variant="mobilebert_proxy", fn="step", loss="qa", regime="lora", placement=pl)
+        add(f"mobilebert_proxy/fwd_qa@{pl}", variant="mobilebert_proxy", fn="fwd", head="qa", placement=pl)
+
+    for vn in ["bert_base_proxy", "bert_large_proxy"]:
+        add(f"{vn}/fwd_qa", variant=vn, fn="fwd", head="qa")
+        add(f"{vn}/step_qa_lora", variant=vn, fn="step", loss="qa", regime="lora")
+        add(f"{vn}/step_qa_full", variant=vn, fn="step", loss="qa", regime="full")
+
+    for vn in ["tiny_dec", "llama_proxy"]:
+        add(f"{vn}/fwd_lm", variant=vn, fn="fwd", head="lm")
+        add(f"{vn}/step_lm_lora", variant=vn, fn="step", loss="lm", regime="lora")
+        add(f"{vn}/step_lm_full", variant=vn, fn="step", loss="lm", regime="full")
+        add(f"{vn}/step_grpo_lora", variant=vn, fn="step", loss="grpo", regime="lora")
+    return plan
+
+
+def key_to_file(key: str) -> str:
+    return key.replace("/", ".") + ".hlo.txt"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter on graph keys")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    os.makedirs(os.path.join(args.out_dir, "init"), exist_ok=True)
+
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    manifest = {"hw": HW.__dict__, "grpo_group": GRPO_GROUP, "variants": {}, "graphs": {}}
+    if os.path.exists(manifest_path) and args.only:
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+
+    for name, cfg in VARIANTS.items():
+        manifest["variants"][name] = variant_dict(cfg)
+
+    written_inits = set()
+    plan = build_plan()
+    if args.only:
+        plan = [p for p in plan if args.only in p["key"]]
+    for i, spec in enumerate(plan):
+        key = spec["key"]
+        cfg = VARIANTS[spec["variant"]]
+        print(f"[{i + 1}/{len(plan)}] lowering {key}", flush=True)
+        if spec["fn"] == "fwd":
+            hlo, entry, inits = lower_fwd(cfg, spec["head"], rank=spec.get("rank"), placement=spec.get("placement"))
+        else:
+            hlo, entry, inits = lower_step(cfg, spec["loss"], spec["regime"], rank=spec.get("rank"), placement=spec.get("placement"))
+        fname = key_to_file(key)
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(hlo)
+        entry["file"] = fname
+        manifest["graphs"][key] = entry
+
+        # initial values: meta once per variant; train tree once per
+        # (variant, regime/rank/placement) signature
+        vtag = spec["variant"]
+        if vtag not in written_inits:
+            write_altb(os.path.join(args.out_dir, "init", f"{vtag}.meta.bin"), [(n, np.asarray(a)) for n, a in inits["meta"]])
+            written_inits.add(vtag)
+        ttag = key.replace("/", ".")
+        write_altb(os.path.join(args.out_dir, "init", f"{ttag}.train.bin"), [(n, np.asarray(a)) for n, a in inits["train"]])
+
+        with open(manifest_path, "w") as f:
+            json.dump(manifest, f, indent=1)
+    print(f"wrote {len(plan)} graphs + manifest to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

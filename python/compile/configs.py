@@ -1,0 +1,193 @@
+"""Model-variant and hardware configurations shared between the python
+compile path (L1/L2) and the rust coordinator (L3).
+
+Every variant is an architecturally faithful, CPU-trainable proxy of a
+paper model (see DESIGN.md — Environment constraints & substitutions).
+The variant dict is serialized into artifacts/manifest.json so the rust
+side never hard-codes shapes.
+"""
+
+from dataclasses import dataclass, field, asdict
+from typing import Dict, List, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Transformer family configuration (encoder or decoder).
+
+    Mirrors the paper's model inventory: MobileBERT / BERT-Base /
+    BERT-Large (encoder) and LLaMA-3.1 (decoder), at proxy scale.
+    """
+
+    name: str
+    kind: str  # "encoder" | "decoder"
+    vocab: int
+    seq: int  # maximum sequence length baked into artifacts
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    d_emb: int  # embedding width before the (analog) embedding transform
+    n_cls: int  # padded classifier width (GLUE heads slice from this)
+    rank: int  # default LoRA rank (paper: 8 for encoders, 16 for LLaMA)
+    lora_alpha: float = 16.0
+    # Which linear layers carry LoRA adapters: "all" | "qkv" | "ffn" | "none"
+    lora_placement: str = "all"
+    train_batch: int = 8
+    eval_batch: int = 32
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+
+@dataclass(frozen=True)
+class HardwareConfig:
+    """AIMC tile + PCM device constants (Methods — Model Mapping).
+
+    The quantizer levels are *runtime scalars* in the exported graphs so a
+    single artifact serves the 8-bit and 6-bit ADC studies (Fig. 3a).
+    These defaults document the paper's configuration.
+    """
+
+    tile_rows: int = 512
+    tile_cols: int = 512
+    g_max_us: float = 25.0  # maximum device conductance, microsiemens
+    dac_bits: int = 8
+    adc_bits: int = 8
+    weight_noise: float = 0.067  # effective Gaussian amplitude (training)
+    adc_noise: float = 0.04  # relative output (ADC) noise amplitude
+    clip_sigma: float = 3.0  # channel-wise clipping threshold, in sigmas
+    t0_seconds: float = 20.0  # drift reference time (programming read)
+
+
+# ---------------------------------------------------------------------------
+# Variant registry.
+# Proxy scaling keeps the paper's depth/width *ratios* and the full linear-
+# layer inventory (QKV + output proj + FFN + embedding transform + task
+# heads) while remaining trainable on a single CPU core. See DESIGN.md.
+# ---------------------------------------------------------------------------
+
+VARIANTS: Dict[str, ModelConfig] = {
+    cfg.name: cfg
+    for cfg in [
+        # unit-test scale
+        ModelConfig(
+            name="tiny",
+            kind="encoder",
+            vocab=64,
+            seq=16,
+            d_model=32,
+            n_layers=2,
+            n_heads=2,
+            d_ff=96,
+            d_emb=16,
+            n_cls=4,
+            rank=4,
+            train_batch=4,
+            eval_batch=8,
+        ),
+        ModelConfig(
+            name="tiny_dec",
+            kind="decoder",
+            vocab=64,
+            seq=16,
+            d_model=32,
+            n_layers=2,
+            n_heads=2,
+            d_ff=96,
+            d_emb=32,  # decoders: tied-width embeddings (no analog transform)
+            n_cls=4,
+            rank=4,
+            train_batch=4,
+            eval_batch=8,
+        ),
+        # MobileBERT proxy (paper: 25.3M) — main experimental workhorse
+        ModelConfig(
+            name="mobilebert_proxy",
+            kind="encoder",
+            vocab=512,
+            seq=48,
+            d_model=128,
+            n_layers=4,
+            n_heads=4,
+            d_ff=384,
+            d_emb=64,
+            n_cls=4,
+            rank=8,
+        ),
+        # BERT-Base proxy (paper: 108M)
+        ModelConfig(
+            name="bert_base_proxy",
+            kind="encoder",
+            vocab=512,
+            seq=48,
+            d_model=192,
+            n_layers=6,
+            n_heads=6,
+            d_ff=576,
+            d_emb=96,
+            n_cls=4,
+            rank=8,
+        ),
+        # BERT-Large proxy (paper: 334M)
+        ModelConfig(
+            name="bert_large_proxy",
+            kind="encoder",
+            vocab=512,
+            seq=48,
+            d_model=256,
+            n_layers=8,
+            n_heads=8,
+            d_ff=768,
+            d_emb=128,
+            n_cls=4,
+            rank=8,
+        ),
+        # LLaMA-3.1-8B proxy (decoder-only; paper rank 16)
+        ModelConfig(
+            name="llama_proxy",
+            kind="decoder",
+            vocab=512,
+            seq=64,
+            d_model=128,
+            n_layers=4,
+            n_heads=4,
+            d_ff=384,
+            d_emb=128,  # decoders use tied-width embeddings (no transform)
+            n_cls=4,
+            rank=16,
+            train_batch=8,
+            eval_batch=16,
+        ),
+    ]
+}
+
+HW = HardwareConfig()
+
+# Linear-layer inventory per transformer block, used by LoRA placement and
+# by the rust-side tile allocator. Matches the paper's mapping: QKV + attn
+# output + both FFN matrices live on AIMC tiles.
+QKV_LINEARS = ("wq", "wk", "wv")
+ATTN_LINEARS = QKV_LINEARS + ("wo",)
+FFN_LINEARS = ("w1", "w2")
+ALL_LINEARS = ATTN_LINEARS + FFN_LINEARS
+
+
+def lora_targets(placement: str) -> Tuple[str, ...]:
+    """Which per-block linears receive LoRA adapters (Fig. 2b study)."""
+    if placement == "all":
+        return ALL_LINEARS
+    if placement == "qkv":
+        return QKV_LINEARS
+    if placement == "ffn":
+        return FFN_LINEARS
+    if placement == "none":
+        return ()
+    raise ValueError(f"unknown lora placement: {placement}")
+
+
+def variant_dict(cfg: ModelConfig) -> dict:
+    d = asdict(cfg)
+    d["d_head"] = cfg.d_head
+    return d

@@ -1,0 +1,155 @@
+"""L1 Pallas kernel: one AIMC tile matrix-vector-multiply pipeline.
+
+Models the paper's analog datapath for a dense layer mapped onto
+512x512 PCM crossbar tiles (Methods - Model Mapping):
+
+    DAC-quantize activations  ->  analog MVM against the (already noisy)
+    meta-weights              ->  ADC-quantize per output channel
+                              ->  digital affine rescale
+
+Grid layout mirrors the physical tiling: one grid step = one crossbar
+tile's worth of (tokens x 512-in x 512-out) work, with the k-dimension
+accumulated digitally across tiles exactly as the chip's digital
+periphery sums per-tile partial results. BlockSpec expresses the
+HBM->VMEM schedule the crossbar mapping implies (DESIGN.md - Hardware
+adaptation).
+
+Quantizer *levels* are runtime scalars (float), so one compiled artifact
+serves the 8-bit and 6-bit ADC studies (Fig. 3a); levels <= 0 disables a
+quantizer (used by the LLaMA-proxy experiments, which omit explicit
+DAC/ADC modeling per the paper).
+
+interpret=True everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls; real-TPU efficiency is estimated structurally (DESIGN.md
+section Perf).
+
+Gradients: the quantizers are straight-through (the paper trains through
+the simulated hardware constraints); `analog_matmul` carries a
+custom_vjp whose backward is the plain dense rule evaluated at the noisy
+weights, which is exactly STE through round().
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Physical tile geometry (HardwareConfig.tile_rows/cols). Token-block of
+# 128 matches the paper's largest parallel-token count t=128.
+TILE_K = 512
+TILE_N = 512
+TILE_M = 128
+
+_EPS = 1e-9
+
+
+def _quant_sym(v, scale, levels):
+    """Symmetric mid-tread quantizer with dynamic range `scale`.
+
+    levels = 2^(bits-1) - 1 as a float; levels <= 0 bypasses (identity).
+    """
+    s = jnp.maximum(scale, _EPS)
+    q = jnp.clip(jnp.round(v / s * levels), -levels, levels) / jnp.maximum(levels, 1.0) * s
+    return jnp.where(levels > 0, q, v)
+
+
+def _aimc_kernel(x_ref, w_ref, dac_ref, adc_ref, o_ref, *, nk: int):
+    """One (token-block x tile) step; k accumulated across grid dim 2."""
+    ik = pl.program_id(2)
+
+    # --- DAC: per-tile dynamic input ranging (bound management) ---
+    x = x_ref[...]
+    dac_levels = dac_ref[0, 0]
+    x_scale = jnp.max(jnp.abs(x))
+    xq = _quant_sym(x, x_scale, dac_levels)
+
+    # --- analog MVM on this tile (MXU-shaped 512-wide MAC) ---
+    part = jnp.dot(xq, w_ref[...], preferred_element_type=jnp.float32)
+
+    # --- digital accumulation of per-tile partial sums ---
+    @pl.when(ik == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += part
+
+    # --- ADC on the completed column sum: per-channel dynamic ranging ---
+    @pl.when(ik == nk - 1)
+    def _adc():
+        acc = o_ref[...]
+        adc_levels = adc_ref[0, 0]
+        ch_scale = jnp.max(jnp.abs(acc), axis=0, keepdims=True)
+        o_ref[...] = _quant_sym(acc, ch_scale, adc_levels)
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def aimc_matmul_raw(x, w, dac_levels, adc_levels):
+    """Tiled AIMC forward: x [m,k] @ w [k,n] through the tile pipeline.
+
+    Inputs are zero-padded up to whole blocks (zero rows/cols change
+    neither the dynamic quantizer ranges — abs-max is unaffected by
+    zeros — nor the matmul), mirroring how unused crossbar rows are left
+    at zero conductance on the physical tile.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bm, bk, bn = min(m, TILE_M), min(k, TILE_K), min(n, TILE_N)
+    nm, nk, nn = _ceil_div(m, bm), _ceil_div(k, bk), _ceil_div(n, bn)
+
+    mp, kp, np_ = nm * bm, nk * bk, nn * bn
+    if (mp, kp) != (m, k):
+        x = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    if (kp, np_) != (k, n):
+        w = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+
+    dac = jnp.asarray(dac_levels, jnp.float32).reshape(1, 1)
+    adc = jnp.asarray(adc_levels, jnp.float32).reshape(1, 1)
+
+    out = pl.pallas_call(
+        functools.partial(_aimc_kernel, nk=nk),
+        grid=(nm, nn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda im, i_n, ik: (im, ik)),
+            pl.BlockSpec((bk, bn), lambda im, i_n, ik: (ik, i_n)),
+            pl.BlockSpec((1, 1), lambda im, i_n, ik: (0, 0)),
+            pl.BlockSpec((1, 1), lambda im, i_n, ik: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda im, i_n, ik: (im, i_n)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(x, w, dac, adc)
+    return out[:m, :n] if (mp, np_) != (m, n) else out
+
+
+@jax.custom_vjp
+def analog_matmul(x, w, dac_levels, adc_levels):
+    """Differentiable AIMC tile matmul (straight-through quantizers).
+
+    `w` is the *already perturbed* weight (noise is sampled in L2 so the
+    kernel stays deterministic, mirroring the real chip where stochastic
+    behaviour lives in the devices, not the datapath).
+    """
+    return aimc_matmul_raw(x, w, dac_levels, adc_levels)
+
+
+def _fwd(x, w, dac_levels, adc_levels):
+    return aimc_matmul_raw(x, w, dac_levels, adc_levels), (x, w)
+
+
+def _bwd(res, g):
+    x, w = res
+    # STE: d/dx round(x) ~= 1. Plain dense backward at the noisy weights.
+    return (
+        jnp.dot(g, w.T, preferred_element_type=jnp.float32),
+        jnp.dot(x.T, g, preferred_element_type=jnp.float32),
+        None,
+        None,
+    )
+
+
+analog_matmul.defvjp(_fwd, _bwd)

@@ -1,0 +1,75 @@
+"""L1 Pallas kernel: fused low-rank adapter path  X @ A @ B.
+
+On the paper's hardware this is the PMCA's job (Fig. 1b): while the AIMC
+tile integrates X.W, the digital cluster computes the rank-r update
+X.A.B and adds it to the tile output. The kernel keeps A [k,r] and
+B [r,n] resident (r <= 16, so both fit comfortably in VMEM) and streams
+token blocks, matching the PMCA's TCDM-resident adapter weights
+(Fig. 4b).
+
+interpret=True; see aimc_linear.py for why.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_M = 128
+
+
+def _lora_kernel(x_ref, a_ref, b_ref, scale_ref, o_ref):
+    x = x_ref[...]
+    # rank-r bottleneck: two thin matmuls entirely in VMEM
+    xa = jnp.dot(x, a_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.dot(xa, b_ref[...], preferred_element_type=jnp.float32) * scale_ref[0, 0]
+
+
+def lora_matmul_raw(x, a, b, scale):
+    """x [m,k] @ a [k,r] @ b [r,n], scaled by alpha/r."""
+    m, k = x.shape
+    k2, r = a.shape
+    r2, n = b.shape
+    assert k == k2 and r == r2, (x.shape, a.shape, b.shape)
+    bm = min(m, BLOCK_M)
+    nm = -(-m // bm)
+    mp = nm * bm
+    if mp != m:  # zero-pad the token dimension up to whole blocks
+        x = jnp.pad(x, ((0, mp - m), (0, 0)))
+    sc = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+    out = pl.pallas_call(
+        _lora_kernel,
+        grid=(nm,),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda im: (im, 0)),
+            pl.BlockSpec((k, r), lambda im: (0, 0)),
+            pl.BlockSpec((r, n), lambda im: (0, 0)),
+            pl.BlockSpec((1, 1), lambda im: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda im: (im, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, n), jnp.float32),
+        interpret=True,
+    )(x, a, b, sc)
+    return out[:m] if mp != m else out
+
+
+@jax.custom_vjp
+def lora_matmul(x, a, b, scale):
+    """Differentiable fused LoRA path (the only trained weights)."""
+    return lora_matmul_raw(x, a, b, scale)
+
+
+def _fwd(x, a, b, scale):
+    return lora_matmul_raw(x, a, b, scale), (x, a, b, scale)
+
+
+def _bwd(res, g):
+    x, a, b, scale = res
+    gs = g * scale
+    gb_in = jnp.dot(x, a)  # [m, r]
+    gx = jnp.dot(jnp.dot(gs, b.T), a.T)
+    ga = jnp.dot(x.T, jnp.dot(gs, b.T))
+    gb = jnp.dot(gb_in.T, gs)
+    return gx, ga, gb, None
+
+
+lora_matmul.defvjp(_fwd, _bwd)

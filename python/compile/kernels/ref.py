@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These implement the *same* semantics as aimc_linear.py / lora.py with no
+pallas machinery; pytest asserts allclose between kernel and oracle over
+hypothesis-generated shapes/values (python/tests/test_kernels.py).
+
+The only subtlety is quantizer *ranging granularity*: the kernel ranges
+the DAC per (token-block x k-tile) block and the ADC per
+(token-block x n-tile) column block, because that is what each physical
+tile's converters see. The oracle reproduces exactly that blocking.
+"""
+
+import jax.numpy as jnp
+
+from .aimc_linear import TILE_K, TILE_M, TILE_N, _EPS
+
+
+def quant_sym(v, scale, levels):
+    s = jnp.maximum(scale, _EPS)
+    q = jnp.clip(jnp.round(v / s * levels), -levels, levels) / jnp.maximum(levels, 1.0) * s
+    return jnp.where(levels > 0, q, v)
+
+
+def aimc_matmul_ref(x, w, dac_levels, adc_levels):
+    """Reference AIMC pipeline with identical tile blocking."""
+    m, k = x.shape
+    _, n = w.shape
+    bm, bk, bn = min(m, TILE_M), min(k, TILE_K), min(n, TILE_N)
+    dac_levels = jnp.float32(dac_levels)
+    adc_levels = jnp.float32(adc_levels)
+
+    out = jnp.zeros((m, n), jnp.float32)
+    for i0 in range(0, m, bm):
+        for j0 in range(0, n, bn):
+            acc = jnp.zeros((min(bm, m - i0), min(bn, n - j0)), jnp.float32)
+            for k0 in range(0, k, bk):
+                xb = x[i0 : i0 + bm, k0 : k0 + bk]
+                wb = w[k0 : k0 + bk, j0 : j0 + bn]
+                xq = quant_sym(xb, jnp.max(jnp.abs(xb)), dac_levels)
+                acc = acc + jnp.dot(xq, wb)
+            ch = jnp.max(jnp.abs(acc), axis=0, keepdims=True)
+            out = out.at[i0 : i0 + bm, j0 : j0 + bn].set(quant_sym(acc, ch, adc_levels))
+    return out
+
+
+def lora_matmul_ref(x, a, b, scale):
+    return jnp.dot(jnp.dot(x, a), b) * jnp.float32(scale)

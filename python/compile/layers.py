@@ -1,0 +1,111 @@
+"""L2 building blocks: analog-mapped linears, LoRA adapters, attention.
+
+Responsibility split mirrors the paper's Fig. 1:
+
+* `analog_linear`   — dense layers whose weights live on AIMC tiles:
+    per-channel clipping -> fresh Gaussian weight perturbation (the
+    AHWA noise model, sampled *here* so the L1 kernel stays
+    deterministic) -> L1 `analog_matmul` (DAC/MVM/ADC) -> ADC read
+    noise -> digital bias -> optional LoRA path on the PMCA.
+* attention scores  — dynamic matmuls; computed digitally (the paper
+    assigns them to the PMCAs since weight-stationary AIMC cannot hold
+    activations), so plain jnp here.
+* LayerNorm, heads  — digital periphery / DPU-resident parameters.
+
+All stochastic draws key off an explicit PRNG key threaded from the
+graph inputs so the rust coordinator fully controls randomness.
+"""
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.aimc_linear import analog_matmul
+from .kernels.lora import lora_matmul
+
+_EPS = 1e-9
+
+
+def clip_channelwise(w, clip_sigma):
+    """Per-output-channel c-sigma clipping (Methods: 3-sigma on the fitted
+    weight distribution, differential channel-wise mapping). clip_sigma<=0
+    disables (the LLaMA experiments omit clipping)."""
+    std = jnp.std(w, axis=0, keepdims=True) + _EPS
+    lim = clip_sigma * std
+    return jnp.where(clip_sigma > 0, jnp.clip(w, -lim, lim), w)
+
+
+def perturb_weight(w, key, noise_level):
+    """AHWA effective-noise model: zero-mean Gaussian with std equal to
+    noise_level * max|w| (relative amplitude, AIHWKIT convention). The
+    master weight stays clean; the draw is i.i.d. per minibatch."""
+    amp = noise_level * jnp.max(jnp.abs(w))
+    return w + amp * jax.random.normal(key, w.shape, w.dtype)
+
+
+def analog_linear(
+    x,
+    w,
+    b,
+    key,
+    hw,
+    lora: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+    lora_scale: float = 1.0,
+):
+    """One AIMC-mapped dense layer with optional PMCA LoRA path.
+
+    x: [..., k]; w: [k, n]; b: [n] or None.
+    hw: dict of runtime scalars {noise, clip_sigma, dac_levels,
+        adc_levels, adc_noise}.
+    """
+    shp = x.shape
+    x2 = x.reshape(-1, shp[-1])
+
+    kw, ko = jax.random.split(key)
+    w_eff = clip_channelwise(w, hw["clip_sigma"])
+    w_eff = perturb_weight(w_eff, kw, hw["noise"])
+
+    y = analog_matmul(x2, w_eff, hw["dac_levels"], hw["adc_levels"])
+
+    # ADC read noise: relative to the per-channel conversion range.
+    ch = jax.lax.stop_gradient(jnp.max(jnp.abs(y), axis=0, keepdims=True))
+    y = y + hw["adc_noise"] * ch * jax.random.normal(ko, y.shape, y.dtype)
+
+    if lora is not None:
+        a, bb = lora
+        y = y + lora_matmul(x2, a, bb, lora_scale)
+    if b is not None:
+        y = y + b
+    return y.reshape(shp[:-1] + (w.shape[1],))
+
+
+def layer_norm(x, g, b):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * g + b
+
+
+def attention_scores(q, k, v, causal: bool):
+    """Digital (PMCA-assigned) scaled dot-product attention.
+
+    q,k,v: [B, H, S, Dh] -> [B, H, S, Dh].
+    """
+    dh = q.shape[-1]
+    att = jnp.einsum("bhsd,bhtd->bhst", q, k) / jnp.sqrt(jnp.float32(dh))
+    if causal:
+        s = q.shape[2]
+        mask = jnp.tril(jnp.ones((s, s), jnp.bool_))
+        att = jnp.where(mask[None, None], att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", att, v)
+
+
+def split_heads(x, n_heads):
+    b, s, d = x.shape
+    return x.reshape(b, s, n_heads, d // n_heads).transpose(0, 2, 1, 3)
+
+
+def merge_heads(x):
+    b, h, s, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * dh)

@@ -1,0 +1,284 @@
+"""L2: the transformer family (encoder + decoder) with AnalogLinear+LoRA.
+
+Parameter trees
+---------------
+`init_meta(cfg)`   -> the frozen, AIMC-mapped "meta-weights" (paper's
+                      pre-trained base). Every matrix listed in
+                      configs.ALL_LINEARS plus the embedding transform and
+                      the LM output matrix lives on tiles; LayerNorms,
+                      biases and embedding *lookup* are digital.
+`init_lora(cfg,..)`-> LoRA adapter tree (A zero-centred Gaussian, B zero,
+                      so the adapted model starts exactly at the base).
+`init_head(cfg,h)` -> digital task head ("qa" | "cls" | none for LM).
+
+Trees flatten to a canonical `sorted-by-name` order via `flatten_params`;
+artifacts/manifest.json records that order and the rust coordinator packs
+PJRT literals to match (rust/src/runtime/pack.rs mirrors this function).
+
+Forward passes take a `hw` dict of runtime scalars (noise level, clip
+sigma, DAC/ADC levels, ADC noise) and a PRNG key, so one compiled
+artifact covers the whole noise/bit-width experimental grid.
+"""
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import configs
+from .configs import ModelConfig, lora_targets
+from .layers import (
+    analog_linear,
+    attention_scores,
+    layer_norm,
+    merge_heads,
+    split_heads,
+)
+
+Params = Dict
+
+
+# ---------------------------------------------------------------------------
+# Initialisation
+# ---------------------------------------------------------------------------
+
+
+def init_meta(cfg: ModelConfig, key) -> Params:
+    """The base-model ("meta") weights, later programmed onto AIMC tiles."""
+    ks = jax.random.split(key, 4 + cfg.n_layers)
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.d_emb
+
+    def dense(k, i, o):
+        return jax.random.normal(k, (i, o), jnp.float32) * (0.8 / jnp.sqrt(i))
+
+    p: Params = {
+        "tok_emb": jax.random.normal(ks[0], (cfg.vocab, e)) * 0.1,
+        "pos_emb": jax.random.normal(ks[1], (cfg.seq, e)) * 0.02,
+        "layers": [],
+    }
+    if cfg.kind == "encoder":
+        p["emb_proj"] = dense(ks[2], e, d)  # MobileBERT-style embedding transform (analog)
+    else:
+        # decoder-only: analog LM output layer + final norm. (Encoders
+        # must not carry these — jax DCEs unused graph inputs and the
+        # manifest would disagree with the compiled parameter list.)
+        p["w_lm"] = dense(ks[3], d, cfg.vocab)
+        p["lm_ln_g"] = jnp.ones((d,))
+        p["lm_ln_b"] = jnp.zeros((d,))
+
+    for li in range(cfg.n_layers):
+        kq, kk, kv, ko, k1, k2 = jax.random.split(ks[4 + li], 6)
+        p["layers"].append(
+            {
+                "wq": dense(kq, d, d),
+                "wk": dense(kk, d, d),
+                "wv": dense(kv, d, d),
+                "wo": dense(ko, d, d),
+                "w1": dense(k1, d, f),
+                "w2": dense(k2, f, d),
+                "bq": jnp.zeros((d,)),
+                "bk": jnp.zeros((d,)),
+                "bv": jnp.zeros((d,)),
+                "bo": jnp.zeros((d,)),
+                "b1": jnp.zeros((f,)),
+                "b2": jnp.zeros((d,)),
+                "ln1_g": jnp.ones((d,)),
+                "ln1_b": jnp.zeros((d,)),
+                "ln2_g": jnp.ones((d,)),
+                "ln2_b": jnp.zeros((d,)),
+            }
+        )
+    return p
+
+
+_LINEAR_DIMS = {
+    "wq": ("d", "d"),
+    "wk": ("d", "d"),
+    "wv": ("d", "d"),
+    "wo": ("d", "d"),
+    "w1": ("d", "f"),
+    "w2": ("f", "d"),
+}
+
+
+def init_lora(cfg: ModelConfig, key, rank: Optional[int] = None, placement: Optional[str] = None) -> Params:
+    """LoRA adapters for the selected per-block linears (Fig. 2b study)."""
+    rank = rank or cfg.rank
+    placement = placement or cfg.lora_placement
+    targets = lora_targets(placement)
+    dims = {"d": cfg.d_model, "f": cfg.d_ff}
+    p: Params = {"layers": []}
+    for li in range(cfg.n_layers):
+        blk = {}
+        for t in targets:
+            di, do = (_LINEAR_DIMS[t][0], _LINEAR_DIMS[t][1])
+            key, ka = jax.random.split(key)
+            blk[t + "_a"] = jax.random.normal(ka, (dims[di], rank)) * (1.0 / jnp.sqrt(dims[di]))
+            blk[t + "_b"] = jnp.zeros((rank, dims[do]))
+        p["layers"].append(blk)
+    return p
+
+
+def init_head(cfg: ModelConfig, head: str, key) -> Params:
+    """Digital, DPU-resident task head (the paper's 'unmappable' params)."""
+    d = cfg.d_model
+    if head == "qa":
+        return {
+            "w_span": jax.random.normal(key, (d, 2)) * 0.02,
+            "b_span": jnp.zeros((2,)),
+        }
+    if head == "cls":
+        return {
+            "w_cls": jax.random.normal(key, (d, cfg.n_cls)) * 0.02,
+            "b_cls": jnp.zeros((cfg.n_cls,)),
+        }
+    if head == "lm":
+        return {}
+    raise ValueError(head)
+
+
+def default_hw(noise=0.0, clip_sigma=0.0, dac_levels=0.0, adc_levels=0.0, adc_noise=0.0):
+    f = jnp.float32
+    return {
+        "noise": f(noise),
+        "clip_sigma": f(clip_sigma),
+        "dac_levels": f(dac_levels),
+        "adc_levels": f(adc_levels),
+        "adc_noise": f(adc_noise),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def _lora_of(blk: Params, name: str) -> Optional[Tuple]:
+    a = blk.get(name + "_a")
+    return None if a is None else (a, blk[name + "_b"])
+
+
+def _block(cfg, x, mp, lp, key, hw, lora_scale, causal):
+    """One transformer block; analog linears + digital attention/LN."""
+    keys = jax.random.split(key, 6)
+
+    def lin(name, inp, k):
+        return analog_linear(
+            inp, mp[name], mp["b" + name[1:]], k, hw, _lora_of(lp, name), lora_scale
+        )
+
+    if cfg.kind == "encoder":  # post-LN (BERT family)
+        q = lin("wq", x, keys[0])
+        kk = lin("wk", x, keys[1])
+        v = lin("wv", x, keys[2])
+        att = attention_scores(
+            split_heads(q, cfg.n_heads), split_heads(kk, cfg.n_heads), split_heads(v, cfg.n_heads), causal
+        )
+        x = layer_norm(x + lin("wo", merge_heads(att), keys[3]), mp["ln1_g"], mp["ln1_b"])
+        h = jax.nn.gelu(lin("w1", x, keys[4]))
+        x = layer_norm(x + lin("w2", h, keys[5]), mp["ln2_g"], mp["ln2_b"])
+    else:  # pre-LN (LLaMA family)
+        xin = layer_norm(x, mp["ln1_g"], mp["ln1_b"])
+        q = lin("wq", xin, keys[0])
+        kk = lin("wk", xin, keys[1])
+        v = lin("wv", xin, keys[2])
+        att = attention_scores(
+            split_heads(q, cfg.n_heads), split_heads(kk, cfg.n_heads), split_heads(v, cfg.n_heads), causal
+        )
+        x = x + lin("wo", merge_heads(att), keys[3])
+        xin = layer_norm(x, mp["ln2_g"], mp["ln2_b"])
+        h = jax.nn.gelu(lin("w1", xin, keys[4]))
+        x = x + lin("w2", h, keys[5])
+    return x
+
+
+def encode(cfg: ModelConfig, meta: Params, lora: Params, tokens, key, hw):
+    """Shared trunk: tokens [B,S] int32 -> hidden states [B,S,D]."""
+    b, s = tokens.shape
+    x = meta["tok_emb"][tokens] + meta["pos_emb"][None, :s]
+    key, ke = jax.random.split(key)
+    if cfg.kind == "encoder":
+        x = analog_linear(x, meta["emb_proj"], None, ke, hw)
+    lora_scale = jnp.float32(cfg.lora_alpha) / _lora_rank(lora)
+    causal = cfg.kind == "decoder"
+    for li in range(cfg.n_layers):
+        key, kb = jax.random.split(key)
+        lp = lora["layers"][li] if lora["layers"] else {}
+        x = _block(cfg, x, meta["layers"][li], lp, kb, hw, lora_scale, causal)
+    if cfg.kind == "decoder":
+        x = layer_norm(x, meta["lm_ln_g"], meta["lm_ln_b"])
+    return x
+
+
+def _lora_rank(lora: Params):
+    for blk in lora["layers"]:
+        for v in blk.values():
+            return jnp.float32(v.shape[-1] if v.ndim == 2 and v.shape[-1] < v.shape[0] else v.shape[0])
+    return jnp.float32(1.0)
+
+
+def fwd_qa(cfg, meta, lora, head, tokens, key, hw):
+    """Span-extraction head: -> (start_logits, end_logits) [B,S]."""
+    x = encode(cfg, meta, lora, tokens, key, hw)
+    logits = jnp.einsum("bsd,dk->bsk", x, head["w_span"]) + head["b_span"]
+    return logits[..., 0], logits[..., 1]
+
+
+def fwd_cls(cfg, meta, lora, head, tokens, key, hw):
+    """Sequence classification/regression: -> logits [B, n_cls].
+
+    Pooled on token 0 ([CLS]); regression tasks read channel 0.
+    """
+    x = encode(cfg, meta, lora, tokens, key, hw)
+    pooled = x[:, 0]
+    return pooled @ head["w_cls"] + head["b_cls"]
+
+
+def fwd_lm(cfg, meta, lora, tokens, key, hw):
+    """Decoder LM logits [B,T,V] through the analog output layer."""
+    x = encode(cfg, meta, lora, tokens, key, hw)
+    key, ko = jax.random.split(key)
+    return analog_linear(x, meta["w_lm"], None, ko, hw)
+
+
+# ---------------------------------------------------------------------------
+# Canonical flattening (mirrored by rust/src/runtime/pack.rs)
+# ---------------------------------------------------------------------------
+
+
+def flatten_params(tree, prefix="") -> List[Tuple[str, jnp.ndarray]]:
+    """Deterministic name-sorted flattening of a params tree."""
+    out = []
+    if isinstance(tree, dict):
+        for k in sorted(tree.keys()):
+            out += flatten_params(tree[k], f"{prefix}{k}." if prefix or True else k)
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out += flatten_params(v, f"{prefix}{i}.")
+    else:
+        out.append((prefix[:-1], tree))
+    return out
+
+
+def unflatten_params(template, flat: List[jnp.ndarray]):
+    """Rebuild a tree shaped like `template` from the canonical flat list."""
+    it = iter(flat)
+
+    def go(t):
+        if isinstance(t, dict):
+            return {k: go(t[k]) for k in sorted(t.keys())}
+        if isinstance(t, (list, tuple)):
+            return [go(v) for v in t]
+        return next(it)
+
+    out = go(template)
+    # exhaustiveness check
+    try:
+        next(it)
+        raise ValueError("flat list longer than template")
+    except StopIteration:
+        return out
+
+
+def param_count(tree) -> int:
+    return sum(int(v.size) for _, v in flatten_params(tree))

@@ -1,0 +1,195 @@
+"""L2: loss functions and full training-step graphs (AOT-lowered).
+
+Each `make_*_step` returns a pure function suitable for jax.jit(...).lower:
+the ENTIRE optimizer step — noisy forward, backward through the simulated
+hardware constraints, global-norm gradient clipping, AdamW update on the
+*trainable* tree only — is one HLO executable, so the rust training loop
+(rust/src/train) is a thin driver that shuttles literals.
+
+Trainable-tree selection implements the paper's two regimes:
+
+* AHWA-LoRA: trainable = {LoRA adapters + digital task head}; the meta
+  weights appear only as non-differentiated inputs ("the model senses the
+  hardware, LoRA learns to compensate").
+* full AHWA (baseline, Table I/II): trainable = {meta + head}; no LoRA.
+
+The GRPO step implements Group Relative Policy Optimization exactly as
+used in the paper (Methods — RL): advantages are computed by the rust
+coordinator from grouped rewards; the graph computes the policy-gradient
+loss -E[adv * mean-token-logp] over realized completions and applies
+AdamW to the LoRA tree.
+"""
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+from .configs import ModelConfig
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+
+def qa_loss(cfg, meta, lora, head, batch, key, hw):
+    tokens, starts, ends = batch
+    sl, el = M.fwd_qa(cfg, meta, lora, head, tokens, key, hw)
+    ls = -jnp.mean(jax.nn.log_softmax(sl, -1)[jnp.arange(sl.shape[0]), starts])
+    le = -jnp.mean(jax.nn.log_softmax(el, -1)[jnp.arange(el.shape[0]), ends])
+    return 0.5 * (ls + le)
+
+
+def cls_loss(cfg, meta, lora, head, batch, key, hw):
+    tokens, labels = batch
+    logits = M.fwd_cls(cfg, meta, lora, head, tokens, key, hw)
+    lp = jax.nn.log_softmax(logits, -1)
+    return -jnp.mean(lp[jnp.arange(logits.shape[0]), labels])
+
+
+def reg_loss(cfg, meta, lora, head, batch, key, hw):
+    tokens, targets = batch
+    logits = M.fwd_cls(cfg, meta, lora, head, tokens, key, hw)
+    return jnp.mean((logits[:, 0] - targets) ** 2)
+
+
+def lm_loss(cfg, meta, lora, head, batch, key, hw):
+    """Masked next-token cross-entropy (mask=1 on supervised positions)."""
+    tokens, mask = batch
+    logits = M.fwd_lm(cfg, meta, lora, tokens, key, hw)
+    lp = jax.nn.log_softmax(logits[:, :-1], -1)
+    tgt = tokens[:, 1:]
+    tok_lp = jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+    m = mask[:, 1:]
+    return -jnp.sum(tok_lp * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def grpo_loss(cfg, meta, lora, head, batch, key, hw):
+    """Policy-gradient objective with group-relative advantages.
+
+    batch = (tokens [G,T], mask [G,T] response positions, adv [G]).
+    """
+    tokens, mask, adv = batch
+    logits = M.fwd_lm(cfg, meta, lora, tokens, key, hw)
+    lp = jax.nn.log_softmax(logits[:, :-1], -1)
+    tok_lp = jnp.take_along_axis(lp, tokens[:, 1:][..., None], axis=-1)[..., 0]
+    m = mask[:, 1:]
+    seq_lp = jnp.sum(tok_lp * m, axis=-1) / jnp.maximum(jnp.sum(m, axis=-1), 1.0)
+    return -jnp.mean(adv * seq_lp)
+
+
+LOSSES: Dict[str, Callable] = {
+    "qa": qa_loss,
+    "cls": cls_loss,
+    "reg": reg_loss,
+    "lm": lm_loss,
+    "grpo": grpo_loss,
+}
+
+
+# ---------------------------------------------------------------------------
+# AdamW on a flat list of trainables
+# ---------------------------------------------------------------------------
+
+
+def adamw_update(params, grads, m, v, step, lr, wd, b1=0.9, b2=0.999, eps=1e-8):
+    """One AdamW step over flat lists; returns (params', m', v')."""
+    # global-norm gradient clipping at 1.0
+    gn = jnp.sqrt(sum(jnp.sum(g * g) for g in grads) + 1e-12)
+    scale = jnp.minimum(1.0, 1.0 / gn)
+    grads = [g * scale for g in grads]
+
+    bc1 = 1.0 - b1**step
+    bc2 = 1.0 - b2**step
+    new_p, new_m, new_v = [], [], []
+    for p, g, mi, vi in zip(params, grads, m, v):
+        mi = b1 * mi + (1 - b1) * g
+        vi = b2 * vi + (1 - b2) * g * g
+        upd = (mi / bc1) / (jnp.sqrt(vi / bc2) + eps)
+        new_p.append(p - lr * (upd + wd * p))
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_p, new_m, new_v
+
+
+# ---------------------------------------------------------------------------
+# Step factories
+# ---------------------------------------------------------------------------
+
+
+def _hw_from_vec(hw_vec):
+    return {
+        "noise": hw_vec[0],
+        "clip_sigma": hw_vec[1],
+        "dac_levels": hw_vec[2],
+        "adc_levels": hw_vec[3],
+        "adc_noise": hw_vec[4],
+    }
+
+
+def make_step(cfg: ModelConfig, loss_name: str, regime: str):
+    """Build step(flat_meta, flat_train, flat_m, flat_v, *batch, key,
+    hw_vec[5], opt_vec[3]) -> (flat_train', flat_m', flat_v', loss).
+
+    regime: "lora" (trainable = lora+head) | "full" (trainable = meta+head).
+    opt_vec = [lr, weight_decay, step_index].
+    Templates for unflattening are captured at lowering time from the
+    variant's init shapes; the manifest records the canonical order.
+    """
+    loss_fn = LOSSES[loss_name]
+    key0 = jax.random.PRNGKey(0)
+    meta_t = M.init_meta(cfg, key0)
+    lora_t = M.init_lora(cfg, key0)
+    head_name = {"qa": "qa", "cls": "cls", "reg": "cls", "lm": "lm", "grpo": "lm"}[loss_name]
+    head_t = M.init_head(cfg, head_name, key0)
+
+    def step(flat_meta, flat_train, flat_m, flat_v, batch, key, hw_vec, opt_vec):
+        hw = _hw_from_vec(hw_vec)
+        meta = M.unflatten_params(meta_t, flat_meta)
+
+        if regime == "lora":
+            train_template = {"head": head_t, "lora": lora_t}
+        else:
+            train_template = {"head": head_t, "meta": meta_t}
+
+        def compute_loss(flat_train_):
+            tr = M.unflatten_params(train_template, flat_train_)
+            lora = tr.get("lora", {"layers": [{} for _ in range(cfg.n_layers)]})
+            mt = tr.get("meta", meta)
+            return loss_fn(cfg, mt, lora, tr["head"], batch, key, hw)
+
+        loss, grads = jax.value_and_grad(compute_loss)(flat_train)
+        lr, wd, st = opt_vec[0], opt_vec[1], opt_vec[2]
+        new_t, new_m, new_v = adamw_update(flat_train, grads, flat_m, flat_v, st, lr, wd)
+        return new_t, new_m, new_v, loss
+
+    return step, meta_t, (
+        {"head": head_t, "lora": lora_t} if regime == "lora" else {"head": head_t, "meta": meta_t}
+    )
+
+
+def make_fwd(cfg: ModelConfig, head_name: str):
+    """Inference graph: (flat_meta, flat_train, tokens, key, hw_vec) -> logits.
+
+    flat_train = {head, lora} so a single artifact serves pre/post
+    adaptation, any adapter set (multi-task serving), and any noise level.
+    """
+    key0 = jax.random.PRNGKey(0)
+    meta_t = M.init_meta(cfg, key0)
+    lora_t = M.init_lora(cfg, key0)
+    head_t = M.init_head(cfg, head_name, key0)
+    train_t = {"head": head_t, "lora": lora_t}
+
+    def fwd(flat_meta, flat_train, tokens, key, hw_vec):
+        hw = _hw_from_vec(hw_vec)
+        meta = M.unflatten_params(meta_t, flat_meta)
+        tr = M.unflatten_params(train_t, flat_train)
+        if head_name == "qa":
+            sl, el = M.fwd_qa(cfg, meta, tr["lora"], tr["head"], tokens, key, hw)
+            return sl, el
+        if head_name == "cls":
+            return (M.fwd_cls(cfg, meta, tr["lora"], tr["head"], tokens, key, hw),)
+        return (M.fwd_lm(cfg, meta, tr["lora"], tokens, key, hw),)
+
+    return fwd, meta_t, train_t

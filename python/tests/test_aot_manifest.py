@@ -1,0 +1,137 @@
+"""AOT/manifest invariants: I/O ordering, ALTB container, HLO text form.
+
+These tests lower only the tiny variants so they stay fast; the full
+artifact build is exercised by `make artifacts` + the rust integration
+tests.
+"""
+
+import json
+import os
+import struct
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+from compile.configs import VARIANTS
+
+
+class TestAltb:
+    def test_roundtrip_layout(self):
+        ts = [("b_name", np.arange(6, dtype=np.float32).reshape(2, 3)), ("a", np.zeros((1,), np.float32))]
+        with tempfile.TemporaryDirectory() as d:
+            p = os.path.join(d, "t.bin")
+            aot.write_altb(p, ts)
+            with open(p, "rb") as f:
+                assert f.read(4) == b"ALTB"
+                (n,) = struct.unpack("<I", f.read(4))
+                assert n == 2
+                (ln,) = struct.unpack("<H", f.read(2))
+                assert f.read(ln) == b"b_name"
+                (nd,) = struct.unpack("<B", f.read(1))
+                dims = struct.unpack(f"<{nd}I", f.read(4 * nd))
+                assert dims == (2, 3)
+                data = np.frombuffer(f.read(24), np.float32)
+                np.testing.assert_allclose(data, np.arange(6, dtype=np.float32))
+
+
+class TestLowering:
+    @pytest.fixture(scope="class")
+    def tiny_fwd(self):
+        cfg = VARIANTS["tiny"]
+        return aot.lower_fwd(cfg, "qa")
+
+    def test_hlo_is_text(self, tiny_fwd):
+        hlo, entry, _ = tiny_fwd
+        assert hlo.startswith("HloModule")
+        assert "ENTRY" in hlo
+
+    def test_input_order_meta_train_data_scalars(self, tiny_fwd):
+        _, entry, _ = tiny_fwd
+        roles = [i["role"] for i in entry["inputs"]]
+        # canonical segment order
+        segs = []
+        for r in roles:
+            if not segs or segs[-1] != r:
+                segs.append(r)
+        assert segs == ["meta", "train", "data", "key", "hw"]
+
+    def test_meta_names_sorted(self, tiny_fwd):
+        _, entry, _ = tiny_fwd
+        metas = [i["name"] for i in entry["inputs"] if i["role"] == "meta"]
+        assert metas == sorted(metas)
+
+    def test_hlo_param_count_matches_manifest(self, tiny_fwd):
+        hlo, entry, _ = tiny_fwd
+        n_params = hlo.count("parameter(")
+        assert n_params >= len(entry["inputs"])  # fusion params repeat; entry count lower-bounds
+
+    def test_step_outputs_shape(self):
+        cfg = VARIANTS["tiny"]
+        hlo, entry, inits = aot.lower_step(cfg, "qa", "lora")
+        n_train = sum(1 for i in entry["inputs"] if i["role"] == "train")
+        n_out = len(entry["outputs"])
+        assert n_out == 3 * n_train + 1  # train', m', v', loss
+        assert entry["outputs"][-1]["role"] == "loss"
+
+    def test_rank_changes_train_shapes(self):
+        cfg = VARIANTS["tiny"]
+        _, e1, _ = aot.lower_step(cfg, "qa", "lora", rank=1)
+        _, e8, _ = aot.lower_step(cfg, "qa", "lora", rank=8)
+
+        def lora_sizes(e):
+            return sum(
+                int(np.prod(i["shape"]))
+                for i in e["inputs"]
+                if i["role"] == "train" and i["name"].startswith("lora.")
+            )
+
+        assert lora_sizes(e8) == 8 * lora_sizes(e1)
+
+
+class TestBuildPlan:
+    def test_covers_every_experiment_surface(self):
+        keys = {p["key"] for p in aot.build_plan()}
+        # Table I / II / VI-VIII need lora+full steps on the workhorse
+        assert "mobilebert_proxy/step_qa_lora" in keys
+        assert "mobilebert_proxy/step_qa_full" in keys
+        # Fig 2a rank sweep
+        for r in (1, 2, 4, 16):
+            assert f"mobilebert_proxy/step_qa_lora@r{r}" in keys
+        # Fig 2b placement
+        for pl in ("qkv", "ffn"):
+            assert f"mobilebert_proxy/step_qa_lora@{pl}" in keys
+        # Fig 3b scalability
+        assert "bert_base_proxy/step_qa_lora" in keys and "bert_large_proxy/step_qa_lora" in keys
+        # Tables IV/V/IX/X
+        assert "llama_proxy/step_grpo_lora" in keys and "llama_proxy/step_lm_lora" in keys
+        # GLUE (Table III)
+        assert "mobilebert_proxy/step_cls_lora" in keys and "mobilebert_proxy/step_reg_lora" in keys
+
+    def test_key_to_file_bijective_enough(self):
+        keys = [p["key"] for p in aot.build_plan()]
+        files = {aot.key_to_file(k) for k in keys}
+        assert len(files) == len(keys)
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+    reason="artifacts not built",
+)
+class TestBuiltManifest:
+    def test_manifest_graphs_exist_on_disk(self):
+        root = os.path.join(os.path.dirname(__file__), "../../artifacts")
+        with open(os.path.join(root, "manifest.json")) as f:
+            man = json.load(f)
+        for k, g in man["graphs"].items():
+            assert os.path.exists(os.path.join(root, g["file"])), k
+
+    def test_variants_recorded(self):
+        root = os.path.join(os.path.dirname(__file__), "../../artifacts")
+        with open(os.path.join(root, "manifest.json")) as f:
+            man = json.load(f)
+        assert "mobilebert_proxy" in man["variants"]
+        assert man["variants"]["mobilebert_proxy"]["d_model"] == 128

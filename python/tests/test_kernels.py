@@ -1,0 +1,191 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes/values; every property asserts allclose against
+the reference implementation — this is the CORE correctness signal for
+the compute hot-spot.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYP = True
+except ImportError:  # pragma: no cover - hypothesis is expected in-image
+    HAVE_HYP = False
+
+from compile.kernels.aimc_linear import analog_matmul, aimc_matmul_raw, _quant_sym
+from compile.kernels.lora import lora_matmul, lora_matmul_raw
+from compile.kernels.ref import aimc_matmul_ref, lora_matmul_ref, quant_sym
+
+
+def rnd(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+# ---------------------------------------------------------------------------
+# Quantizer unit behaviour
+# ---------------------------------------------------------------------------
+
+
+class TestQuantizer:
+    def test_bypass_when_levels_zero(self):
+        v = rnd(0, (8, 8))
+        out = _quant_sym(v, jnp.max(jnp.abs(v)), jnp.float32(0.0))
+        np.testing.assert_allclose(out, v)
+
+    def test_levels_bound_error(self):
+        v = rnd(1, (64, 64))
+        s = jnp.max(jnp.abs(v))
+        for bits in (4, 6, 8):
+            levels = float(2 ** (bits - 1) - 1)
+            q = _quant_sym(v, s, jnp.float32(levels))
+            step = float(s) / levels
+            assert float(jnp.max(jnp.abs(q - v))) <= step / 2 + 1e-6
+
+    def test_idempotent(self):
+        v = rnd(2, (32, 32))
+        s = jnp.max(jnp.abs(v))
+        q1 = _quant_sym(v, s, jnp.float32(127.0))
+        q2 = _quant_sym(q1, s, jnp.float32(127.0))
+        np.testing.assert_allclose(q1, q2, atol=1e-6)
+
+    def test_preserves_sign_and_clip(self):
+        v = jnp.array([[-10.0, -0.1, 0.0, 0.1, 10.0]])
+        q = _quant_sym(v, jnp.float32(1.0), jnp.float32(127.0))
+        assert float(q[0, 0]) == -1.0 and float(q[0, 4]) == 1.0
+        assert float(q[0, 2]) == 0.0
+
+    def test_matches_ref_quant(self):
+        v = rnd(3, (16, 16), 2.0)
+        s = jnp.max(jnp.abs(v))
+        np.testing.assert_allclose(
+            _quant_sym(v, s, jnp.float32(31.0)), quant_sym(v, s, jnp.float32(31.0)), atol=1e-7
+        )
+
+
+# ---------------------------------------------------------------------------
+# AIMC matmul kernel vs oracle
+# ---------------------------------------------------------------------------
+
+AIMC_SHAPES = [
+    (1, 8, 8),
+    (4, 16, 8),
+    (20, 130, 70),  # multiple token blocks? no — m<128; k<512
+    (130, 64, 64),  # multiple m blocks
+    (16, 600, 40),  # k crosses the 512 tile boundary -> 2-tile accumulate
+    (8, 1030, 520),  # 3 k-tiles, 2 n-tiles
+    (256, 520, 12),
+]
+
+
+class TestAimcKernel:
+    @pytest.mark.parametrize("m,k,n", AIMC_SHAPES)
+    def test_matches_ref(self, m, k, n):
+        x = rnd(m * 7 + n, (m, k))
+        w = rnd(k * 3 + 1, (k, n), 0.1)
+        y = aimc_matmul_raw(x, w, 127.0, 127.0)
+        yr = aimc_matmul_ref(x, w, 127.0, 127.0)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("levels", [0.0, 7.0, 31.0, 127.0])
+    def test_levels_sweep(self, levels):
+        x, w = rnd(5, (24, 96)), rnd(6, (96, 48), 0.1)
+        y = aimc_matmul_raw(x, w, levels, levels)
+        yr = aimc_matmul_ref(x, w, levels, levels)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-5, atol=1e-5)
+
+    def test_no_quant_equals_dense(self):
+        x, w = rnd(7, (16, 32)), rnd(8, (32, 24), 0.1)
+        y = aimc_matmul_raw(x, w, 0.0, 0.0)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w), rtol=1e-4, atol=1e-5)
+
+    def test_quant_error_shrinks_with_bits(self):
+        x, w = rnd(9, (32, 64)), rnd(10, (64, 32), 0.1)
+        exact = np.asarray(x @ w)
+        errs = []
+        for bits in (4, 6, 8):
+            lv = float(2 ** (bits - 1) - 1)
+            y = np.asarray(aimc_matmul_raw(x, w, lv, lv))
+            errs.append(np.abs(y - exact).mean())
+        assert errs[0] > errs[1] > errs[2]
+
+    def test_gradients_are_dense_ste(self):
+        x, w = rnd(11, (8, 16)), rnd(12, (16, 8), 0.1)
+
+        def f(x_, w_):
+            return jnp.sum(analog_matmul(x_, w_, 127.0, 127.0) ** 2)
+
+        gx, gw = jax.grad(f, argnums=(0, 1))(x, w)
+        y = analog_matmul(x, w, 127.0, 127.0)
+        np.testing.assert_allclose(np.asarray(gx), np.asarray(2 * y @ w.T), rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(gw), np.asarray(x.T @ (2 * y)), rtol=1e-4, atol=1e-4)
+
+    if HAVE_HYP:
+
+        @settings(max_examples=25, deadline=None)
+        @given(
+            m=st.integers(1, 140),
+            k=st.integers(1, 560),
+            n=st.integers(1, 70),
+            levels=st.sampled_from([0.0, 31.0, 127.0]),
+            seed=st.integers(0, 2**16),
+        )
+        def test_hypothesis_shapes(self, m, k, n, levels, seed):
+            x = rnd(seed, (m, k))
+            w = rnd(seed + 1, (k, n), 0.1)
+            y = aimc_matmul_raw(x, w, levels, levels)
+            yr = aimc_matmul_ref(x, w, levels, levels)
+            np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# LoRA kernel vs oracle
+# ---------------------------------------------------------------------------
+
+
+class TestLoraKernel:
+    @pytest.mark.parametrize("m,k,r,n", [(1, 8, 1, 8), (16, 32, 4, 32), (200, 128, 8, 128), (300, 64, 16, 48)])
+    def test_matches_ref(self, m, k, r, n):
+        x, a, b = rnd(1, (m, k)), rnd(2, (k, r), 0.3), rnd(3, (r, n), 0.3)
+        y = lora_matmul_raw(x, a, b, 2.0)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(lora_matmul_ref(x, a, b, 2.0)), rtol=1e-4, atol=1e-5)
+
+    def test_zero_b_gives_zero(self):
+        x, a = rnd(4, (8, 16)), rnd(5, (16, 4))
+        y = lora_matmul_raw(x, a, jnp.zeros((4, 8)), 2.0)
+        assert float(jnp.max(jnp.abs(y))) == 0.0
+
+    def test_gradients_match_dense(self):
+        x, a, b = rnd(6, (8, 16)), rnd(7, (16, 4), 0.3), rnd(8, (4, 8), 0.3)
+
+        def f_kernel(a_, b_):
+            return jnp.sum(lora_matmul(x, a_, b_, 2.0) ** 2)
+
+        def f_ref(a_, b_):
+            return jnp.sum(lora_matmul_ref(x, a_, b_, 2.0) ** 2)
+
+        gk = jax.grad(f_kernel, argnums=(0, 1))(a, b)
+        gr = jax.grad(f_ref, argnums=(0, 1))(a, b)
+        for k_, r_ in zip(gk, gr):
+            np.testing.assert_allclose(np.asarray(k_), np.asarray(r_), rtol=1e-4, atol=1e-5)
+
+    if HAVE_HYP:
+
+        @settings(max_examples=20, deadline=None)
+        @given(
+            m=st.integers(1, 260),
+            k=st.sampled_from([16, 64, 128]),
+            r=st.sampled_from([1, 2, 4, 8, 16]),
+            n=st.sampled_from([16, 48, 128]),
+            seed=st.integers(0, 2**16),
+        )
+        def test_hypothesis_shapes(self, m, k, r, n, seed):
+            x, a, b = rnd(seed, (m, k)), rnd(seed + 1, (k, r), 0.3), rnd(seed + 2, (r, n), 0.3)
+            y = lora_matmul_raw(x, a, b, 0.5)
+            np.testing.assert_allclose(
+                np.asarray(y), np.asarray(lora_matmul_ref(x, a, b, 0.5)), rtol=1e-4, atol=1e-4
+            )

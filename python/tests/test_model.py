@@ -1,0 +1,164 @@
+"""L2 model tests: shapes, noise semantics, LoRA identities, flattening."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.configs import VARIANTS, lora_targets
+from compile.layers import clip_channelwise, perturb_weight
+
+CFG = VARIANTS["tiny"]
+DEC = VARIANTS["tiny_dec"]
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def meta():
+    return M.init_meta(CFG, KEY)
+
+
+@pytest.fixture(scope="module")
+def lora():
+    return M.init_lora(CFG, KEY)
+
+
+def tokens(cfg, b=2, seed=0):
+    return jax.random.randint(jax.random.PRNGKey(seed), (b, cfg.seq), 0, cfg.vocab)
+
+
+class TestInit:
+    def test_meta_inventory(self, meta):
+        assert "emb_proj" in meta and "w_lm" not in meta  # LM head is decoder-only
+        assert len(meta["layers"]) == CFG.n_layers
+        for blk in meta["layers"]:
+            for n in ("wq", "wk", "wv", "wo", "w1", "w2"):
+                assert n in blk
+
+    def test_decoder_has_no_emb_proj(self):
+        m = M.init_meta(DEC, KEY)
+        assert "emb_proj" not in m
+        assert "w_lm" in m and "lm_ln_g" in m
+
+    def test_lora_b_zero_init(self, lora):
+        for blk in lora["layers"]:
+            for n, v in blk.items():
+                if n.endswith("_b"):
+                    assert float(jnp.max(jnp.abs(v))) == 0.0
+
+    @pytest.mark.parametrize("placement,n_per_block", [("all", 12), ("qkv", 6), ("ffn", 4), ("none", 0)])
+    def test_placement(self, placement, n_per_block):
+        lp = M.init_lora(CFG, KEY, placement=placement)
+        assert all(len(blk) == n_per_block for blk in lp["layers"])
+
+    @pytest.mark.parametrize("rank", [1, 2, 4, 8, 16])
+    def test_rank_scales_params_linearly(self, rank):
+        lp = M.init_lora(CFG, KEY, rank=rank)
+        n = M.param_count(lp)
+        lp1 = M.init_lora(CFG, KEY, rank=1)
+        assert n == rank * M.param_count(lp1)
+
+
+class TestNoiseModel:
+    def test_perturb_amplitude(self):
+        w = jax.random.normal(KEY, (64, 64))
+        dw = perturb_weight(w, KEY, jnp.float32(0.1)) - w
+        expected = 0.1 * float(jnp.max(jnp.abs(w)))
+        assert 0.7 * expected < float(jnp.std(dw)) < 1.3 * expected
+
+    def test_perturb_zero_level_is_identity(self):
+        w = jax.random.normal(KEY, (16, 16))
+        np.testing.assert_allclose(perturb_weight(w, KEY, jnp.float32(0.0)), w)
+
+    def test_perturb_unbiased(self):
+        w = jax.random.normal(KEY, (64, 64))
+        draws = [perturb_weight(w, jax.random.PRNGKey(i), jnp.float32(0.1)) for i in range(64)]
+        mean = jnp.mean(jnp.stack(draws), 0)
+        assert float(jnp.max(jnp.abs(mean - w))) < 0.05 * float(jnp.max(jnp.abs(w)))
+
+    def test_clip_channelwise(self):
+        w = jax.random.normal(KEY, (128, 8)) * jnp.linspace(0.1, 2.0, 8)
+        c = clip_channelwise(w, jnp.float32(1.0))
+        std = np.asarray(jnp.std(w, axis=0))
+        assert np.all(np.asarray(jnp.max(jnp.abs(c), axis=0)) <= std * 1.0 + 1e-5)
+
+    def test_clip_disabled(self):
+        w = jax.random.normal(KEY, (32, 4)) * 10
+        np.testing.assert_allclose(clip_channelwise(w, jnp.float32(0.0)), w)
+
+
+class TestForward:
+    def test_qa_shapes(self, meta, lora):
+        head = M.init_head(CFG, "qa", KEY)
+        hw = M.default_hw()
+        sl, el = M.fwd_qa(CFG, meta, lora, head, tokens(CFG), KEY, hw)
+        assert sl.shape == (2, CFG.seq) and el.shape == (2, CFG.seq)
+
+    def test_cls_shapes(self, meta, lora):
+        head = M.init_head(CFG, "cls", KEY)
+        logits = M.fwd_cls(CFG, meta, lora, head, tokens(CFG), KEY, M.default_hw())
+        assert logits.shape == (2, CFG.n_cls)
+
+    def test_lm_shapes(self):
+        m = M.init_meta(DEC, KEY)
+        lp = M.init_lora(DEC, KEY)
+        logits = M.fwd_lm(DEC, m, lp, tokens(DEC), KEY, M.default_hw())
+        assert logits.shape == (2, DEC.seq, DEC.vocab)
+
+    def test_fresh_lora_is_identity(self, meta, lora):
+        """B=0 init => adapted model == base model exactly."""
+        head = M.init_head(CFG, "qa", KEY)
+        none_lora = M.init_lora(CFG, KEY, placement="none")
+        hw = M.default_hw()
+        sl1, _ = M.fwd_qa(CFG, meta, lora, head, tokens(CFG), KEY, hw)
+        sl2, _ = M.fwd_qa(CFG, meta, none_lora, head, tokens(CFG), KEY, hw)
+        np.testing.assert_allclose(np.asarray(sl1), np.asarray(sl2), atol=1e-5)
+
+    def test_noise_changes_output_and_key_reproduces(self, meta, lora):
+        head = M.init_head(CFG, "qa", KEY)
+        hw = M.default_hw(noise=0.067)
+        a1, _ = M.fwd_qa(CFG, meta, lora, head, tokens(CFG), KEY, hw)
+        a2, _ = M.fwd_qa(CFG, meta, lora, head, tokens(CFG), KEY, hw)
+        b1, _ = M.fwd_qa(CFG, meta, lora, head, tokens(CFG), jax.random.PRNGKey(9), hw)
+        np.testing.assert_allclose(np.asarray(a1), np.asarray(a2))
+        assert float(jnp.max(jnp.abs(a1 - b1))) > 1e-4
+
+    def test_causal_masking(self):
+        """Changing a future token must not affect past decoder logits."""
+        m = M.init_meta(DEC, KEY)
+        lp = M.init_lora(DEC, KEY)
+        hw = M.default_hw()
+        t1 = tokens(DEC, 1)
+        t2 = t1.at[0, -1].set((t1[0, -1] + 1) % DEC.vocab)
+        l1 = M.fwd_lm(DEC, m, lp, t1, KEY, hw)
+        l2 = M.fwd_lm(DEC, m, lp, t2, KEY, hw)
+        np.testing.assert_allclose(np.asarray(l1[0, :-1]), np.asarray(l2[0, :-1]), atol=1e-5)
+
+
+class TestFlattening:
+    def test_roundtrip(self, meta):
+        flat = M.flatten_params(meta)
+        rebuilt = M.unflatten_params(meta, [a for _, a in flat])
+        for (n1, a1), (n2, a2) in zip(flat, M.flatten_params(rebuilt)):
+            assert n1 == n2
+            np.testing.assert_allclose(np.asarray(a1), np.asarray(a2))
+
+    def test_sorted_names(self, meta):
+        names = [n for n, _ in M.flatten_params(meta)]
+        assert names == sorted(names)
+
+    def test_names_are_dotted_paths(self, meta):
+        names = [n for n, _ in M.flatten_params(meta)]
+        assert "layers.0.wq" in names and "tok_emb" in names
+
+    def test_length_mismatch_raises(self, meta):
+        flat = [a for _, a in M.flatten_params(meta)]
+        with pytest.raises(ValueError):
+            M.unflatten_params(meta, flat + [flat[0]])
+
+    def test_param_count_tiny(self, meta):
+        n = M.param_count(meta)
+        assert n > 10_000  # sanity: all layers present
+        lora = M.init_lora(CFG, KEY)
+        assert M.param_count(lora) < 0.25 * n  # adapters are "lightweight"

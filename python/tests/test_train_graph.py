@@ -1,0 +1,164 @@
+"""L2 training-step graphs: losses decrease, the right tree is updated."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import train_graph as TG
+from compile.configs import VARIANTS
+
+CFG = VARIANTS["tiny"]
+DEC = VARIANTS["tiny_dec"]
+KEY = jax.random.PRNGKey(0)
+
+
+def flat(tree):
+    return [a for _, a in M.flatten_params(tree)]
+
+
+def make_state(cfg, loss, regime):
+    step, meta_t, train_t = TG.make_step(cfg, loss, regime)
+    fm = flat(M.init_meta(cfg, KEY))
+    ft = flat(
+        {"head": M.init_head(cfg, {"qa": "qa", "cls": "cls", "reg": "cls", "lm": "lm", "grpo": "lm"}[loss], KEY)}
+        | ({"lora": M.init_lora(cfg, KEY)} if regime == "lora" else {"meta": M.init_meta(cfg, KEY)})
+    )
+    m = [jnp.zeros_like(a) for a in ft]
+    v = [jnp.zeros_like(a) for a in ft]
+    return jax.jit(step), fm, ft, m, v
+
+
+def qa_batch(cfg, seed=0):
+    k = jax.random.PRNGKey(seed)
+    toks = jax.random.randint(k, (cfg.train_batch, cfg.seq), 0, cfg.vocab)
+    return (toks, jnp.zeros((cfg.train_batch,), jnp.int32), jnp.ones((cfg.train_batch,), jnp.int32))
+
+
+HW = jnp.array([0.05, 3.0, 127.0, 127.0, 0.02], jnp.float32)
+OPT = jnp.array([1e-2, 0.0, 1.0], jnp.float32)
+
+
+class TestLoraStep:
+    def test_loss_decreases(self):
+        step, fm, ft, m, v = make_state(CFG, "qa", "lora")
+        batch = qa_batch(CFG)
+        losses = []
+        opt = np.array(OPT)
+        for i in range(12):
+            opt[2] = i + 1
+            ft, m, v, loss = step(fm, ft, m, v, batch, jax.random.PRNGKey(i), HW, jnp.asarray(opt))
+            losses.append(float(loss))
+        assert losses[-1] < losses[0]
+
+    def test_meta_not_an_output(self):
+        """AHWA-LoRA trains ONLY the lora+head tree."""
+        step, fm, ft, m, v = make_state(CFG, "qa", "lora")
+        out_t, out_m, out_v, _ = step(fm, ft, m, v, qa_batch(CFG), KEY, HW, OPT)
+        assert len(out_t) == len(ft) and len(ft) < len(fm)
+
+    def test_full_regime_updates_meta(self):
+        step, fm, ft, m, v = make_state(CFG, "qa", "full")
+        out_t, _, _, _ = step(fm, ft, m, v, qa_batch(CFG), KEY, HW, OPT)
+        assert len(out_t) == len(ft) and len(ft) > len(fm)  # meta + head
+
+    def test_trainable_params_actually_change(self):
+        step, fm, ft, m, v = make_state(CFG, "qa", "lora")
+        out_t, _, _, _ = step(fm, ft, m, v, qa_batch(CFG), KEY, HW, OPT)
+        deltas = [float(jnp.max(jnp.abs(a - b))) for a, b in zip(out_t, ft)]
+        assert max(deltas) > 0
+
+
+class TestLosses:
+    def test_cls_and_reg(self):
+        for loss in ("cls", "reg"):
+            step, fm, ft, m, v = make_state(CFG, loss, "lora")
+            toks = jax.random.randint(KEY, (CFG.train_batch, CFG.seq), 0, CFG.vocab)
+            lab = (
+                jnp.zeros((CFG.train_batch,), jnp.int32)
+                if loss == "cls"
+                else jnp.zeros((CFG.train_batch,), jnp.float32)
+            )
+            _, _, _, lv = step(fm, ft, m, v, (toks, lab), KEY, HW, OPT)
+            assert np.isfinite(float(lv))
+
+    def test_lm_mask_zero_positions_ignored(self):
+        step, meta_t, train_t = TG.make_step(DEC, "lm", "lora")
+        fm = flat(M.init_meta(DEC, KEY))
+        ft = flat({"head": {}, "lora": M.init_lora(DEC, KEY)})
+        m = [jnp.zeros_like(a) for a in ft]
+        v = [jnp.zeros_like(a) for a in ft]
+        toks = jax.random.randint(KEY, (DEC.train_batch, DEC.seq), 0, DEC.vocab)
+        mask = jnp.zeros((DEC.train_batch, DEC.seq), jnp.float32)
+        js = jax.jit(step)
+        _, _, _, lv = js(fm, ft, m, v, (toks, mask), KEY, HW, OPT)
+        assert float(lv) == 0.0  # no supervised positions -> zero loss
+
+    def test_grpo_zero_advantage_is_noop_loss(self):
+        step, _, _ = TG.make_step(DEC, "grpo", "lora")
+        fm = flat(M.init_meta(DEC, KEY))
+        ft = flat({"head": {}, "lora": M.init_lora(DEC, KEY)})
+        m = [jnp.zeros_like(a) for a in ft]
+        v = [jnp.zeros_like(a) for a in ft]
+        G = 4
+        toks = jax.random.randint(KEY, (G, DEC.seq), 0, DEC.vocab)
+        mask = jnp.ones((G, DEC.seq), jnp.float32)
+        adv = jnp.zeros((G,), jnp.float32)
+        _, _, _, lv = jax.jit(step)(fm, ft, m, v, (toks, mask, adv), KEY, HW, OPT)
+        assert float(lv) == 0.0
+
+    def test_grpo_prefers_high_advantage(self):
+        """After steps with +adv on sequence s, logp(s) increases."""
+        step, _, _ = TG.make_step(DEC, "grpo", "lora")
+        meta = M.init_meta(DEC, KEY)
+        fm = flat(meta)
+        lora0 = M.init_lora(DEC, KEY)
+        ft = flat({"head": {}, "lora": lora0})
+        m = [jnp.zeros_like(a) for a in ft]
+        v = [jnp.zeros_like(a) for a in ft]
+        G = 4
+        toks = jax.random.randint(KEY, (G, DEC.seq), 0, DEC.vocab)
+        mask = jnp.ones((G, DEC.seq), jnp.float32)
+        adv = jnp.array([2.0, -1.0, -0.5, -0.5], jnp.float32)
+        hw0 = jnp.array([0.0, 0.0, 0.0, 0.0, 0.0], jnp.float32)
+
+        def seq_lp(lora_tree):
+            logits = M.fwd_lm(DEC, meta, lora_tree, toks, KEY, M.default_hw())
+            lp = jax.nn.log_softmax(logits[:, :-1], -1)
+            tlp = jnp.take_along_axis(lp, toks[:, 1:][..., None], -1)[..., 0]
+            return float(jnp.mean(tlp[0]))
+
+        before = seq_lp(lora0)
+        js = jax.jit(step)
+        opt = np.array([5e-2, 0.0, 1.0])
+        for i in range(8):
+            opt[2] = i + 1
+            ft, m, v, _ = js(fm, ft, m, v, (toks, mask, adv), jax.random.PRNGKey(i), hw0, jnp.asarray(opt))
+        lora_after = M.unflatten_params({"head": {}, "lora": lora0}, list(ft))["lora"]
+        assert seq_lp(lora_after) > before
+
+
+class TestAdamW:
+    def test_moves_toward_minimum(self):
+        p = [jnp.array([4.0]), jnp.array([-3.0])]
+        m = [jnp.zeros(1)] * 2
+        v = [jnp.zeros(1)] * 2
+        for t in range(1, 200):
+            g = [2 * x for x in p]  # grad of x^2
+            p, m, v = TG.adamw_update(p, g, m, v, jnp.float32(t), 0.1, 0.0)
+        assert abs(float(p[0][0])) < 0.1 and abs(float(p[1][0])) < 0.1
+
+    def test_grad_clipping_bounds_update(self):
+        p = [jnp.array([0.0])]
+        m = [jnp.zeros(1)]
+        v = [jnp.zeros(1)]
+        p2, _, _ = TG.adamw_update(p, [jnp.array([1e6])], m, v, jnp.float32(1), 0.1, 0.0)
+        assert abs(float(p2[0][0])) < 0.2  # clipped to unit norm then adam-scaled
+
+    def test_weight_decay_shrinks(self):
+        p = [jnp.array([10.0])]
+        m = [jnp.zeros(1)]
+        v = [jnp.zeros(1)]
+        p2, _, _ = TG.adamw_update(p, [jnp.zeros(1)], m, v, jnp.float32(1), 0.1, 0.5)
+        assert float(p2[0][0]) < 10.0

@@ -1,0 +1,68 @@
+//! Hot-path micro-benchmarks (EXPERIMENTS.md §Perf, L3 targets).
+//!
+//! The drift-evaluation inner loop regenerates every analog weight per
+//! trial (PCG normals → drift exp → read noise → compensation), so the
+//! PCM pipeline throughput bounds the whole evaluation harness; the
+//! batcher/JSON/quant paths bound the serving coordinator.
+
+use ahwa_lora::aimc::mapping::program_tensor;
+use ahwa_lora::aimc::quant;
+use ahwa_lora::pcm::{read_tensor, PcmModel};
+use ahwa_lora::serve::batcher::Batcher;
+use ahwa_lora::util::bench::{black_box, Bencher};
+use ahwa_lora::util::json::Value;
+use ahwa_lora::util::rng::Pcg64;
+
+fn main() {
+    let mut b = Bencher::with_budget(1.5);
+    println!("== hot paths ==");
+
+    // RNG: the substrate of every stochastic device model
+    let mut rng = Pcg64::new(1);
+    let mut buf = vec![0f32; 1 << 16];
+    b.bench_items("rng/fill_normal 64k", Some(buf.len() as u64), || {
+        rng.fill_normal(&mut buf, 0.0, 1.0);
+        black_box(buf[0]);
+    });
+
+    // PCM: program once / read per (drift time x trial) — the eval hot path
+    let model = PcmModel::default();
+    let mut w = vec![0f32; 128 * 128];
+    rng.fill_normal(&mut w, 0.0, 0.05);
+    b.bench_items("pcm/program_tensor 128x128", Some((128 * 128) as u64), || {
+        black_box(program_tensor(&model, &w, 128, 128, 3.0, &mut rng));
+    });
+    let pt = program_tensor(&model, &w, 128, 128, 3.0, &mut rng);
+    b.bench_items("pcm/read_tensor 128x128 @1y", Some((128 * 128) as u64), || {
+        black_box(read_tensor(&model, &pt, 31_536_000.0, true, &mut rng));
+    });
+
+    // quantizer sweep (ADC model)
+    let mut q = vec![0f32; 4096];
+    rng.fill_normal(&mut q, 0.0, 1.0);
+    b.bench_items("aimc/quant_block 4k @8bit", Some(4096), || {
+        let mut v = q.clone();
+        quant::quant_block(&mut v, 127.0);
+        black_box(v[0]);
+    });
+
+    // serving batcher ops
+    b.bench("serve/batcher push+pop (8 tasks)", || {
+        let mut batcher: Batcher<u32> = Batcher::new(8, std::time::Duration::from_millis(0));
+        for i in 0..64u32 {
+            batcher.push(["a", "b", "c", "d", "e", "f", "g", "h"][(i % 8) as usize], i);
+        }
+        while batcher.pop_ready(std::time::Instant::now()).is_some() {}
+        black_box(batcher.pending());
+    });
+
+    // manifest-scale JSON parse
+    let manifest_path = ahwa_lora::config::manifest::default_artifacts_dir().join("manifest.json");
+    if let Ok(text) = std::fs::read_to_string(&manifest_path) {
+        b.bench_items("json/parse manifest", Some(text.len() as u64), || {
+            black_box(Value::parse(&text).unwrap());
+        });
+    }
+
+    println!("\nall hot-path benches done");
+}

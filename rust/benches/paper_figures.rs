@@ -1,0 +1,73 @@
+//! Benches regenerating the paper's FIGURES (Figs. 2–4).
+//!
+//! Fig. 4 is fully simulator-driven and prints the actual series; the
+//! Fig. 2/3 training-dependent figures are exercised via their
+//! per-step/per-eval hot paths (full runs live in `ahwa-lora exp`).
+
+use ahwa_lora::pipeline::balance::{best, sweep};
+use ahwa_lora::pipeline::schedule::{pipeline_latency, INTEGRATION_TIMES_NS, TOKEN_PARALLELISM};
+use ahwa_lora::pmca::cluster::SnitchCluster;
+use ahwa_lora::pmca::kernels::LoraWorkload;
+use ahwa_lora::pmca::redmule::RedMulE;
+use ahwa_lora::pmca::tcdm;
+use ahwa_lora::util::bench::{black_box, Bencher};
+
+fn main() {
+    let mut b = Bencher::with_budget(1.0);
+    let (c, e) = (SnitchCluster::default(), RedMulE::default());
+
+    println!("== Fig. 4a — PMCA/AIMC latency ratios (model output) ==");
+    for (name, m, n) in [("128x128", 128usize, 128usize), ("512x128", 512, 128)] {
+        for t_int in INTEGRATION_TIMES_NS {
+            let series: Vec<String> = TOKEN_PARALLELISM
+                .iter()
+                .map(|&t| {
+                    let w = LoraWorkload { m, n, r: 8, t };
+                    let p = pipeline_latency(&w, t_int, 320, &c, &e);
+                    format!("t={t}:{:.2}", p.ratio())
+                })
+                .collect();
+            println!("  {name} @{t_int}ns  {}", series.join("  "));
+        }
+    }
+
+    println!("\n== Fig. 4b — TCDM KiB vs t (model output) ==");
+    for (name, m, n) in [("128x128", 128usize, 128usize), ("512x128", 512, 128)] {
+        let series: Vec<String> = TOKEN_PARALLELISM
+            .iter()
+            .map(|&t| {
+                let w = LoraWorkload { m, n, r: 8, t };
+                format!("t={t}:{:.1}", tcdm::footprint(&w).kib())
+            })
+            .collect();
+        println!("  {name}  {}", series.join("  "));
+    }
+
+    println!("\n== Fig. 4c — steady-state overhead at best balance ==");
+    for (name, m, n) in [("128x128", 128usize, 128usize), ("512x128", 512, 128)] {
+        for t_int in INTEGRATION_TIMES_NS {
+            let p = best(&sweep(m, n, 8, t_int, 320, &c, &e));
+            println!(
+                "  {name} @{t_int}ns  best t={} overhead {:+.2}%",
+                p.t,
+                100.0 * p.latency.overhead()
+            );
+        }
+    }
+
+    println!("\n== simulator throughput ==");
+    b.bench_items("fig4/full sweep (2 layers x 3 T_int x 5 t)", Some(30), || {
+        for (m, n) in [(128usize, 128usize), (512, 128)] {
+            for t_int in INTEGRATION_TIMES_NS {
+                black_box(best(&sweep(m, n, 8, t_int, 320, &c, &e)));
+            }
+        }
+    });
+
+    // Fig. 2a counterpart: per-rank LoRA pipeline latency scaling
+    println!("\n== Fig. 2a counterpart — PMCA latency vs rank ==");
+    for r in [1usize, 2, 4, 8, 16] {
+        let w = LoraWorkload { m: 128, n: 128, r, t: 64 };
+        println!("  r={r}: {:.2} µs / batch", w.latency_ns(&c, &e) / 1e3);
+    }
+}

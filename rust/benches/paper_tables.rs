@@ -1,0 +1,123 @@
+//! Benches regenerating the paper's TABLES' end-to-end hot paths:
+//!
+//! * Table I/VI–VIII — optimizer-step latency, AHWA-LoRA vs full AHWA
+//!   (the >15× trainable-parameter gap shows up as step-time and
+//!   state-transfer cost),
+//! * Table II — parameter/memory accounting (exact counts, printed),
+//! * Table III — serving throughput with adapter hot-swaps and drift
+//!   evaluation trial latency.
+//!
+//! Requires `make artifacts`. Skips gracefully if missing.
+
+use ahwa_lora::config::manifest::{default_artifacts_dir, Role};
+use ahwa_lora::config::run::TrainConfig;
+use ahwa_lora::data::squad::SquadTask;
+use ahwa_lora::eval::drift_eval::{pcm_eval_hw, AnalogDeployment, QaEvalSet};
+use ahwa_lora::model::checkpoint;
+use ahwa_lora::model::params::ParamStore;
+use ahwa_lora::pcm::PcmModel;
+use ahwa_lora::runtime::Engine;
+use ahwa_lora::train::memory::{graph_param_counts, training_memory, MemoryModel};
+use ahwa_lora::train::{OwnedArg, OwnedBatch, Trainer};
+use ahwa_lora::util::bench::Bencher;
+use ahwa_lora::util::rng::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    if !default_artifacts_dir().join("manifest.json").exists() {
+        println!("artifacts not built — run `make artifacts` first; skipping");
+        return Ok(());
+    }
+    let engine = Engine::from_artifacts()?;
+    let variant = "mobilebert_proxy";
+    let v = engine.manifest.variant(variant)?.clone();
+    let task = SquadTask::new(v.vocab, v.seq);
+    let mut b = Bencher::with_budget(5.0);
+
+    // ---- Table I hot path: one optimizer step, LoRA vs full ----------
+    println!("== Table I/II counterpart — optimizer-step latency ==");
+    let meta = checkpoint::load(engine.manifest.init_path(&format!("{variant}.meta")))?;
+    for (label, graph_key, use_meta) in [
+        ("step/ahwa-lora", format!("{variant}/step_qa_lora"), true),
+        ("step/full-ahwa", format!("{variant}/step_qa_full"), false),
+    ] {
+        let train0 = checkpoint::load(
+            engine
+                .manifest
+                .init_path(&format!("{}.train", graph_key.replace('/', "."))),
+        )?;
+        let m = if use_meta { meta.clone() } else { ParamStore::default() };
+        let cfg = TrainConfig {
+            log_every: 0,
+            ..Default::default()
+        };
+        let mut trainer = Trainer::new(&engine, &graph_key, m, train0, cfg)?;
+        let mut rng = Pcg64::new(7);
+        let batch = task.batch(v.train_batch, &mut rng);
+        let owned = OwnedBatch(vec![
+            OwnedArg::I32(batch.tokens),
+            OwnedArg::I32(batch.starts),
+            OwnedArg::I32(batch.ends),
+        ]);
+        // warm compile happens on first call inside bench warmup
+        b.bench(label, || {
+            trainer.step(&owned.args()).unwrap();
+        });
+    }
+
+    // ---- Table II: exact counts + analytic memory ---------------------
+    println!("\n== Table II — exact parameter accounting ==");
+    let mm = MemoryModel {
+        batch: 32,
+        seq: v.seq,
+        d_model: v.d_model,
+        d_ff: v.d_ff,
+        n_layers: v.n_layers,
+        act_tensors_per_layer: 6.0,
+    };
+    for key in [
+        format!("{variant}/step_qa_full"),
+        format!("{variant}/step_qa_lora"),
+        format!("{variant}/step_qa_lora@r1"),
+        format!("{variant}/step_qa_lora@r16"),
+    ] {
+        let spec = engine.manifest.graph(&key)?;
+        let (n_total, n_map, n_train) = graph_param_counts(spec);
+        let mem = training_memory(&mm, n_total, n_map, n_train);
+        println!(
+            "  {key:<40} trainable {:>9}  mem {:.3} GB",
+            n_train,
+            mem.total_gb()
+        );
+    }
+
+    // ---- Table I/III drift-eval trial latency --------------------------
+    println!("\n== drift-evaluation trial hot path ==");
+    let fwd = engine.load(&format!("{variant}/fwd_qa"))?;
+    let train0 = checkpoint::load(engine.manifest.init_path(&format!("{variant}.step_qa_lora.train")))?;
+    let eval = QaEvalSet::generate(&task, 64, 3);
+    let mut rng = Pcg64::new(5);
+    let dep = AnalogDeployment::program(meta.clone(), PcmModel::default(), 3.0, &mut rng);
+    b.bench("pcm/meta_at 1y (all layers)", || {
+        let _ = dep.meta_at(31_536_000.0, true, &mut rng);
+    });
+    let meta_1y = dep.meta_at(31_536_000.0, true, &mut rng);
+    b.bench_items("eval/qa 64 examples", Some(64), || {
+        eval.score(&fwd, &meta_1y, &train0, pcm_eval_hw(127.0, 127.0, 0.04), 3)
+            .unwrap();
+    });
+
+    // ---- Table III serving hot path ------------------------------------
+    println!("\n== Table III counterpart — adapter swap cost ==");
+    let spec = engine.manifest.graph(&format!("{variant}/step_cls_lora"))?;
+    println!(
+        "  adapter set: {:.3} M params -> swap = clone of that store only",
+        spec.param_count(Role::Train) as f64 / 1e6
+    );
+    let adapter = checkpoint::load(engine.manifest.init_path(&format!("{variant}.step_cls_lora.train")))?;
+    b.bench("serve/adapter clone (hot-swap cost)", || {
+        let _ = std::hint::black_box(adapter.clone());
+    });
+
+    println!("\npaper_tables benches done");
+    Ok(())
+}

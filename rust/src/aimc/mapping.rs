@@ -1,0 +1,165 @@
+//! Differential channel-wise weight→conductance mapping.
+//!
+//! Each weight is stored on a device *pair*: `w ∝ g⁺ − g⁻` with only one
+//! of the pair non-zero (sign split). Per output channel (column), the
+//! mapping scale is chosen so the clipping threshold — c·σ of the fitted
+//! channel weight distribution (paper: 3σ; Supplementary Table VIII
+//! ablates 2σ/2.5σ/3σ/fixed) — lands on G_max.
+
+use crate::pcm::{drift, programming, PcmModel, ProgrammedTensor};
+use crate::util::rng::Pcg64;
+
+/// Per-channel clip threshold: `clip_sigma`·σ(channel), or the channel
+/// abs-max when `clip_sigma <= 0` (no clipping; LLaMA experiments).
+pub fn channel_clip(w: &[f32], rows: usize, cols: usize, clip_sigma: f32) -> Vec<f32> {
+    let mut out = vec![0f32; cols];
+    for c in 0..cols {
+        let mut sum = 0f64;
+        let mut sum2 = 0f64;
+        let mut amax = 0f32;
+        for r in 0..rows {
+            let v = w[r * cols + c];
+            sum += v as f64;
+            sum2 += (v * v) as f64;
+            amax = amax.max(v.abs());
+        }
+        let n = rows as f64;
+        let var = (sum2 / n - (sum / n).powi(2)).max(0.0);
+        out[c] = if clip_sigma > 0.0 {
+            (clip_sigma * var.sqrt() as f32).max(1e-9)
+        } else {
+            amax.max(1e-9)
+        };
+    }
+    out
+}
+
+/// Program a weight matrix (row-major `rows`×`cols`) onto PCM device
+/// pairs: clip → scale per channel → sign-split → programming noise →
+/// sample per-device drift exponents → record the GDC reference read.
+pub fn program_tensor(
+    model: &PcmModel,
+    w: &[f32],
+    rows: usize,
+    cols: usize,
+    clip_sigma: f32,
+    rng: &mut Pcg64,
+) -> ProgrammedTensor {
+    assert_eq!(w.len(), rows * cols);
+    let clip = channel_clip(w, rows, cols, clip_sigma);
+    let col_scale: Vec<f32> = clip.iter().map(|&c| model.g_max / c).collect();
+
+    let n = rows * cols;
+    let mut g_plus = vec![0f32; n];
+    let mut g_minus = vec![0f32; n];
+    for r in 0..rows {
+        for c in 0..cols {
+            let i = r * cols + c;
+            let clipped = w[i].clamp(-clip[c], clip[c]);
+            let g = clipped * col_scale[c];
+            if g >= 0.0 {
+                g_plus[i] = g;
+            } else {
+                g_minus[i] = -g;
+            }
+        }
+    }
+    programming::apply_programming_noise(model, &mut g_plus, rng);
+    programming::apply_programming_noise(model, &mut g_minus, rng);
+    let nu_plus = drift::sample_nu(model, &g_plus, rng);
+    let nu_minus = drift::sample_nu(model, &g_minus, rng);
+    let gdc_reference = crate::pcm::compensation::gdc_reference(&g_plus, &g_minus);
+
+    ProgrammedTensor {
+        rows,
+        cols,
+        g_plus,
+        g_minus,
+        nu_plus,
+        nu_minus,
+        col_scale,
+        gdc_reference,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+
+    #[test]
+    fn sign_split_is_exclusive() {
+        let model = PcmModel::ideal();
+        let mut rng = Pcg64::new(1);
+        let mut w = vec![0f32; 64 * 16];
+        rng.fill_normal(&mut w, 0.0, 0.1);
+        let t = program_tensor(&model, &w, 64, 16, 3.0, &mut rng);
+        for i in 0..w.len() {
+            assert!(t.g_plus[i] == 0.0 || t.g_minus[i] == 0.0);
+            assert!(t.g_plus[i] >= 0.0 && t.g_minus[i] >= 0.0);
+        }
+    }
+
+    #[test]
+    fn clip_threshold_scales_with_sigma() {
+        let mut rng = Pcg64::new(2);
+        let mut w = vec![0f32; 512 * 4];
+        rng.fill_normal(&mut w, 0.0, 0.2);
+        let c2 = channel_clip(&w, 512, 4, 2.0);
+        let c3 = channel_clip(&w, 512, 4, 3.0);
+        for (a, b) in c2.iter().zip(&c3) {
+            assert!((b / a - 1.5).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn no_clip_uses_absmax() {
+        let w = vec![0.1f32, -0.5, 0.2, 0.05, 1.5, -0.3]; // 3x2
+        let c = channel_clip(&w, 3, 2, 0.0);
+        assert!((c[0] - 1.5).abs() < 1e-6);
+        assert!((c[1] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ideal_roundtrip_within_clip() {
+        // Inside the clip range, mapping→read must reconstruct exactly
+        // under the ideal model.
+        proptest::check("mapping-roundtrip", 20, |g| {
+            let rows = g.usize_in(2, 40);
+            let cols = g.usize_in(1, 12);
+            let w = g.vec_normal(rows * cols, 0.0, 0.05);
+            let model = PcmModel::ideal();
+            let mut rng = Pcg64::new(g.seed);
+            let t = program_tensor(&model, &w, rows, cols, 0.0, &mut rng); // absmax clip: lossless
+            let got = crate::pcm::read_tensor(&model, &t, 0.0, false, &mut rng);
+            for (a, b) in got.iter().zip(&w) {
+                assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn clipping_saturates_outliers() {
+        let model = PcmModel::ideal();
+        let mut rng = Pcg64::new(3);
+        let mut w = vec![0f32; 256];
+        rng.fill_normal(&mut w, 0.0, 0.05);
+        w[0] = 10.0; // enormous outlier
+        let t = program_tensor(&model, &w, 256, 1, 3.0, &mut rng);
+        let got = crate::pcm::read_tensor(&model, &t, 0.0, false, &mut rng);
+        // the outlier saturates at 3sigma of the channel distribution
+        // (which it inflates itself: sigma ~ sqrt(100/256) ~ 0.63)
+        assert!(got[0] < 2.0, "outlier should clip, got {}", got[0]);
+        assert!(got[0] > 1.0, "clip should keep the 3-sigma mass, got {}", got[0]);
+    }
+
+    #[test]
+    fn gdc_reference_recorded() {
+        let model = PcmModel::default();
+        let mut rng = Pcg64::new(4);
+        let mut w = vec![0f32; 128];
+        rng.fill_normal(&mut w, 0.0, 0.1);
+        let t = program_tensor(&model, &w, 32, 4, 3.0, &mut rng);
+        assert!(t.gdc_reference > 0.0);
+    }
+}

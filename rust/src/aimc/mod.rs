@@ -1,0 +1,13 @@
+//! AIMC crossbar-tile model.
+//!
+//! * [`mapping`] — differential channel-wise weight→conductance mapping
+//!   with adaptive c·σ clipping (Methods — Model Mapping).
+//! * [`tile`] — 512×512 tile allocator: how a layer's weight matrix is
+//!   partitioned across physical tiles (drives Fig. 4's layer geometry
+//!   and Table III's "mappable parameters" accounting).
+//! * [`quant`] — DAC/ADC quantizer models (rust mirror of the L1 kernel
+//!   semantics, used for analysis and cross-layer consistency tests).
+
+pub mod mapping;
+pub mod quant;
+pub mod tile;

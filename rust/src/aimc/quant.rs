@@ -1,0 +1,96 @@
+//! DAC/ADC quantizer models — rust mirror of the L1 kernel semantics
+//! (`python/compile/kernels/aimc_linear.py::_quant_sym`), used for
+//! analysis, the Fig. 3a precision study, and cross-layer consistency
+//! tests (the python and rust implementations must agree bit-for-bit in
+//! f32 on shared inputs).
+
+/// Symmetric mid-tread quantizer; `levels = 2^(bits-1) - 1`, `levels<=0`
+/// bypasses.
+#[inline]
+pub fn quant_sym(v: f32, scale: f32, levels: f32) -> f32 {
+    if levels <= 0.0 {
+        return v;
+    }
+    let s = scale.max(1e-9);
+    (v / s * levels).round().clamp(-levels, levels) / levels.max(1.0) * s
+}
+
+pub fn levels_for_bits(bits: u32) -> f32 {
+    ((1u32 << (bits - 1)) - 1) as f32
+}
+
+/// Quantize a buffer against its abs-max (per-tile DAC ranging).
+pub fn quant_block(v: &mut [f32], levels: f32) {
+    if levels <= 0.0 {
+        return;
+    }
+    let scale = v.iter().fold(0f32, |m, x| m.max(x.abs()));
+    for x in v.iter_mut() {
+        *x = quant_sym(*x, scale, levels);
+    }
+}
+
+/// RMS quantization error of a signal at a given bit width (analysis
+/// helper for the ADC-precision study).
+pub fn rms_quant_error(v: &[f32], bits: u32) -> f64 {
+    let levels = levels_for_bits(bits);
+    let scale = v.iter().fold(0f32, |m, x| m.max(x.abs()));
+    let mut e = 0f64;
+    for &x in v {
+        let q = quant_sym(x, scale, levels);
+        e += ((q - x) as f64).powi(2);
+    }
+    (e / v.len().max(1) as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+
+    #[test]
+    fn bits_to_levels() {
+        assert_eq!(levels_for_bits(8), 127.0);
+        assert_eq!(levels_for_bits(6), 31.0);
+        assert_eq!(levels_for_bits(4), 7.0);
+    }
+
+    #[test]
+    fn error_bounded_by_half_step() {
+        proptest::check("quant-halfstep", 50, |g| {
+            let v = g.f32_in(-2.0, 2.0);
+            let scale = 2.0;
+            let levels = levels_for_bits(*g.pick(&[4, 6, 8]));
+            let q = quant_sym(v, scale, levels);
+            assert!((q - v).abs() <= scale / levels / 2.0 + 1e-6);
+        });
+    }
+
+    #[test]
+    fn idempotent() {
+        proptest::check("quant-idempotent", 50, |g| {
+            let v = g.f32_in(-1.0, 1.0);
+            let q1 = quant_sym(v, 1.0, 127.0);
+            let q2 = quant_sym(q1, 1.0, 127.0);
+            assert!((q1 - q2).abs() < 1e-7);
+        });
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let mut rng = crate::util::rng::Pcg64::new(1);
+        let mut v = vec![0f32; 4096];
+        rng.fill_normal(&mut v, 0.0, 1.0);
+        let e4 = rms_quant_error(&v, 4);
+        let e6 = rms_quant_error(&v, 6);
+        let e8 = rms_quant_error(&v, 8);
+        assert!(e4 > e6 && e6 > e8);
+        // roughly 2 bits = 4x error ratio
+        assert!((e4 / e6 - 4.0).abs() < 1.0, "{}", e4 / e6);
+    }
+
+    #[test]
+    fn bypass() {
+        assert_eq!(quant_sym(0.1234, 1.0, 0.0), 0.1234);
+    }
+}

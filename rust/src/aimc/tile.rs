@@ -1,0 +1,118 @@
+//! 512×512 crossbar tile allocation.
+//!
+//! A dense layer `rows×cols` occupies `⌈rows/512⌉ × ⌈cols/512⌉` physical
+//! tiles; the k-dimension partials are summed by the digital periphery
+//! (mirroring the L1 kernel's grid). This accounting drives the Fig. 4
+//! layer geometry, the multi-chip comparison in Table III, and the
+//! "mappable vs unmappable parameter" split.
+
+/// Physical tile geometry (unit cells).
+pub const TILE_ROWS: usize = 512;
+pub const TILE_COLS: usize = 512;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileGrid {
+    pub layer_rows: usize,
+    pub layer_cols: usize,
+    pub tiles_r: usize,
+    pub tiles_c: usize,
+}
+
+impl TileGrid {
+    pub fn for_layer(rows: usize, cols: usize) -> TileGrid {
+        TileGrid {
+            layer_rows: rows,
+            layer_cols: cols,
+            tiles_r: rows.div_ceil(TILE_ROWS),
+            tiles_c: cols.div_ceil(TILE_COLS),
+        }
+    }
+
+    pub fn n_tiles(&self) -> usize {
+        self.tiles_r * self.tiles_c
+    }
+
+    /// Unit cells consumed (each holds one differential pair).
+    pub fn cells_used(&self) -> usize {
+        self.layer_rows * self.layer_cols
+    }
+
+    /// Fraction of allocated tile area actually holding weights.
+    pub fn utilization(&self) -> f64 {
+        self.cells_used() as f64 / (self.n_tiles() * TILE_ROWS * TILE_COLS) as f64
+    }
+}
+
+/// Mappability rule from the paper: linear (dense) layer weights go to
+/// tiles; LayerNorm/bias/embedding-lookup and task heads stay digital.
+pub fn is_mappable(name: &str) -> bool {
+    let leaf = name.rsplit('.').next().unwrap_or(name);
+    matches!(leaf, "wq" | "wk" | "wv" | "wo" | "w1" | "w2" | "emb_proj" | "w_lm")
+}
+
+/// Split a named parameter inventory into (mappable, unmappable) counts.
+pub fn mappability_split(params: &[(String, Vec<usize>)]) -> (usize, usize) {
+    let mut mappable = 0;
+    let mut unmappable = 0;
+    for (name, shape) in params {
+        let n: usize = shape.iter().product();
+        if is_mappable(name) {
+            mappable += n;
+        } else {
+            unmappable += n;
+        }
+    }
+    (mappable, unmappable)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_fit() {
+        let g = TileGrid::for_layer(512, 512);
+        assert_eq!(g.n_tiles(), 1);
+        assert_eq!(g.utilization(), 1.0);
+    }
+
+    #[test]
+    fn paper_fig4_layers() {
+        // Fig. 4 studies 128x128 and 512x128 MobileBERT layer slices:
+        // both fit a single tile.
+        assert_eq!(TileGrid::for_layer(128, 128).n_tiles(), 1);
+        assert_eq!(TileGrid::for_layer(512, 128).n_tiles(), 1);
+        // A BERT-Large FFN (1024x4096) needs 2x8 tiles.
+        let g = TileGrid::for_layer(1024, 4096);
+        assert_eq!((g.tiles_r, g.tiles_c), (2, 8));
+    }
+
+    #[test]
+    fn partial_tiles_lower_utilization() {
+        let g = TileGrid::for_layer(600, 100);
+        assert_eq!(g.n_tiles(), 2);
+        assert!(g.utilization() < 0.5);
+    }
+
+    #[test]
+    fn mappability_matches_paper_inventory() {
+        assert!(is_mappable("layers.3.wq"));
+        assert!(is_mappable("emb_proj"));
+        assert!(is_mappable("w_lm"));
+        assert!(!is_mappable("layers.0.ln1_g"));
+        assert!(!is_mappable("layers.2.bq"));
+        assert!(!is_mappable("tok_emb")); // lookup table stays digital
+        assert!(!is_mappable("head.w_cls"));
+    }
+
+    #[test]
+    fn split_counts() {
+        let params = vec![
+            ("layers.0.wq".to_string(), vec![128, 128]),
+            ("layers.0.bq".to_string(), vec![128]),
+        ];
+        let (m, u) = mappability_split(&params);
+        assert_eq!(m, 128 * 128);
+        assert_eq!(u, 128);
+    }
+}

@@ -1,0 +1,286 @@
+//! Parse `artifacts/manifest.json` into typed configuration.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Value;
+
+/// Tensor role inside a graph's flat I/O list (mirrors aot.py).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    Meta,
+    Train,
+    M,
+    V,
+    Data,
+    Key,
+    Hw,
+    Opt,
+    Logits,
+    Loss,
+}
+
+impl Role {
+    pub fn parse(s: &str) -> Result<Role> {
+        Ok(match s {
+            "meta" => Role::Meta,
+            "train" => Role::Train,
+            "m" => Role::M,
+            "v" => Role::V,
+            "data" => Role::Data,
+            "key" => Role::Key,
+            "hw" => Role::Hw,
+            "opt" => Role::Opt,
+            "logits" => Role::Logits,
+            "loss" => Role::Loss,
+            _ => return Err(anyhow!("unknown role '{s}'")),
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub role: Role,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl IoSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct GraphSpec {
+    pub key: String,
+    pub kind: String,
+    pub variant: String,
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+impl GraphSpec {
+    pub fn inputs_with_role(&self, role: Role) -> impl Iterator<Item = &IoSpec> {
+        self.inputs.iter().filter(move |i| i.role == role)
+    }
+
+    pub fn n_inputs_with_role(&self, role: Role) -> usize {
+        self.inputs_with_role(role).count()
+    }
+
+    pub fn param_count(&self, role: Role) -> usize {
+        self.inputs_with_role(role).map(|i| i.numel()).sum()
+    }
+}
+
+/// Architecture of one model variant (proxy of a paper model).
+#[derive(Clone, Debug)]
+pub struct VariantCfg {
+    pub name: String,
+    pub kind: String, // "encoder" | "decoder"
+    pub vocab: usize,
+    pub seq: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub d_emb: usize,
+    pub n_cls: usize,
+    pub rank: usize,
+    pub lora_alpha: f64,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+}
+
+/// Hardware defaults recorded by the compile path.
+#[derive(Clone, Debug)]
+pub struct HwDefaults {
+    pub weight_noise: f64,
+    pub adc_noise: f64,
+    pub clip_sigma: f64,
+    pub dac_bits: u32,
+    pub adc_bits: u32,
+    pub g_max_us: f64,
+    pub t0_seconds: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub hw: HwDefaults,
+    pub grpo_group: usize,
+    pub variants: BTreeMap<String, VariantCfg>,
+    pub graphs: BTreeMap<String, GraphSpec>,
+}
+
+impl Manifest {
+    /// Load from an artifacts directory (default: `artifacts/`).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let root = dir.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        let v = Value::parse(&text).context("parsing manifest.json")?;
+
+        let hw_v = v.get("hw")?;
+        let hw = HwDefaults {
+            weight_noise: hw_v.get("weight_noise")?.as_f64()?,
+            adc_noise: hw_v.get("adc_noise")?.as_f64()?,
+            clip_sigma: hw_v.get("clip_sigma")?.as_f64()?,
+            dac_bits: hw_v.get("dac_bits")?.as_f64()? as u32,
+            adc_bits: hw_v.get("adc_bits")?.as_f64()? as u32,
+            g_max_us: hw_v.get("g_max_us")?.as_f64()?,
+            t0_seconds: hw_v.get("t0_seconds")?.as_f64()?,
+        };
+
+        let mut variants = BTreeMap::new();
+        for (name, cv) in v.get("variants")?.as_obj()? {
+            variants.insert(
+                name.clone(),
+                VariantCfg {
+                    name: name.clone(),
+                    kind: cv.get("kind")?.as_str()?.to_string(),
+                    vocab: cv.get("vocab")?.as_usize()?,
+                    seq: cv.get("seq")?.as_usize()?,
+                    d_model: cv.get("d_model")?.as_usize()?,
+                    n_layers: cv.get("n_layers")?.as_usize()?,
+                    n_heads: cv.get("n_heads")?.as_usize()?,
+                    d_ff: cv.get("d_ff")?.as_usize()?,
+                    d_emb: cv.get("d_emb")?.as_usize()?,
+                    n_cls: cv.get("n_cls")?.as_usize()?,
+                    rank: cv.get("rank")?.as_usize()?,
+                    lora_alpha: cv.get("lora_alpha")?.as_f64()?,
+                    train_batch: cv.get("train_batch")?.as_usize()?,
+                    eval_batch: cv.get("eval_batch")?.as_usize()?,
+                },
+            );
+        }
+
+        let mut graphs = BTreeMap::new();
+        for (key, gv) in v.get("graphs")?.as_obj()? {
+            let parse_io = |arr: &Value| -> Result<Vec<IoSpec>> {
+                arr.as_arr()?
+                    .iter()
+                    .map(|io| {
+                        Ok(IoSpec {
+                            name: io.get("name")?.as_str()?.to_string(),
+                            role: Role::parse(io.get("role")?.as_str()?)?,
+                            shape: io.get("shape")?.usize_arr()?,
+                            dtype: io.get("dtype")?.as_str()?.to_string(),
+                        })
+                    })
+                    .collect()
+            };
+            graphs.insert(
+                key.clone(),
+                GraphSpec {
+                    key: key.clone(),
+                    kind: gv.get("kind")?.as_str()?.to_string(),
+                    variant: gv.get("variant")?.as_str()?.to_string(),
+                    file: gv.get("file")?.as_str()?.to_string(),
+                    inputs: parse_io(gv.get("inputs")?)?,
+                    outputs: parse_io(gv.get("outputs")?)?,
+                },
+            );
+        }
+
+        Ok(Manifest {
+            root,
+            hw,
+            grpo_group: v.opt("grpo_group").map(|g| g.as_usize()).transpose()?.unwrap_or(16),
+            variants,
+            graphs,
+        })
+    }
+
+    pub fn graph(&self, key: &str) -> Result<&GraphSpec> {
+        self.graphs
+            .get(key)
+            .ok_or_else(|| anyhow!("graph '{key}' not in manifest (have: {:?})", self.graphs.keys().take(8).collect::<Vec<_>>()))
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantCfg> {
+        self.variants
+            .get(name)
+            .ok_or_else(|| anyhow!("variant '{name}' not in manifest"))
+    }
+
+    pub fn hlo_path(&self, g: &GraphSpec) -> PathBuf {
+        self.root.join(&g.file)
+    }
+
+    pub fn init_path(&self, tag: &str) -> PathBuf {
+        self.root.join("init").join(format!("{tag}.bin"))
+    }
+}
+
+/// Locate the artifacts directory relative to the current working dir
+/// (supports running from repo root or from `rust/`).
+pub fn default_artifacts_dir() -> PathBuf {
+    for cand in ["artifacts", "../artifacts", "../../artifacts"] {
+        let p = PathBuf::from(cand);
+        if p.join("manifest.json").exists() {
+            return p;
+        }
+    }
+    PathBuf::from("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        default_artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(default_artifacts_dir()).unwrap();
+        assert!(m.variants.contains_key("mobilebert_proxy"));
+        assert!(m.graphs.contains_key("tiny/step_qa_lora"));
+        assert_eq!(m.hw.dac_bits, 8);
+    }
+
+    #[test]
+    fn graph_roles_are_ordered() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(default_artifacts_dir()).unwrap();
+        let g = m.graph("tiny/step_qa_lora").unwrap();
+        // canonical segment order: meta, train, m, v, data, key, hw, opt
+        let first_train = g.inputs.iter().position(|i| i.role == Role::Train).unwrap();
+        let last_meta = g.inputs.iter().rposition(|i| i.role == Role::Meta).unwrap();
+        assert!(last_meta < first_train);
+        assert_eq!(g.inputs.last().unwrap().role, Role::Opt);
+        // outputs end with the scalar loss
+        assert_eq!(g.outputs.last().unwrap().role, Role::Loss);
+        assert_eq!(
+            g.n_inputs_with_role(Role::Train),
+            g.n_inputs_with_role(Role::M)
+        );
+    }
+
+    #[test]
+    fn lora_param_budget_matches_paper_scale() {
+        if !have_artifacts() {
+            return;
+        }
+        // AHWA-LoRA trains only a few percent of what full AHWA trains
+        // (paper: 1.63M vs 24.67M on MobileBERT, >15x reduction).
+        let m = Manifest::load(default_artifacts_dir()).unwrap();
+        let lora = m.graph("mobilebert_proxy/step_qa_lora").unwrap().param_count(Role::Train);
+        let full = m.graph("mobilebert_proxy/step_qa_full").unwrap().param_count(Role::Train);
+        assert!(full > 8 * lora, "full={full} lora={lora}");
+    }
+}

@@ -1,0 +1,10 @@
+//! Manifest-driven configuration.
+//!
+//! `artifacts/manifest.json` (written by `python/compile/aot.py`) is the
+//! single source of truth for model variants, graph I/O layouts, and
+//! hardware defaults; nothing about tensor shapes is hard-coded on the
+//! rust side. [`manifest`] parses it; [`run`] holds runtime knobs
+//! (training schedule, eval trials, noise levels) with paper defaults.
+
+pub mod manifest;
+pub mod run;

@@ -1,0 +1,190 @@
+//! Runtime configuration with the paper's experimental defaults
+//! (Methods — Training and Inference Details), overridable from the CLI.
+
+use crate::util::cli::Args;
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Peak learning rate (paper: 2e-4, Adam, linear decay).
+    pub lr: f64,
+    /// AdamW weight decay (paper: 0 for encoders, 0.01 for SFT).
+    pub weight_decay: f64,
+    /// Total optimizer steps (paper trains 15 epochs; proxy tasks
+    /// converge in a few hundred steps — see EXPERIMENTS.md).
+    pub steps: usize,
+    /// Linear warmup steps (paper SFT: 5).
+    pub warmup: usize,
+    /// Relative Gaussian weight-noise amplitude during training
+    /// (paper: 0.067; RL: 0.030).
+    pub weight_noise: f64,
+    /// ADC output-noise amplitude (paper: 0.04).
+    pub adc_noise: f64,
+    /// Channel clipping threshold in sigmas (paper: 3.0; 0 disables).
+    pub clip_sigma: f64,
+    /// DAC/ADC bit widths (0 disables explicit converter modeling).
+    pub dac_bits: u32,
+    pub adc_bits: u32,
+    pub seed: u64,
+    /// Print a log line every `log_every` steps.
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            lr: 2e-4,
+            weight_decay: 0.0,
+            steps: 300,
+            warmup: 10,
+            weight_noise: 0.067,
+            adc_noise: 0.04,
+            clip_sigma: 3.0,
+            dac_bits: 8,
+            adc_bits: 8,
+            seed: 7,
+            log_every: 50,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Digital (no hardware constraints) configuration for baselines and
+    /// base-model "pretraining".
+    pub fn digital() -> Self {
+        TrainConfig {
+            weight_noise: 0.0,
+            adc_noise: 0.0,
+            clip_sigma: 0.0,
+            dac_bits: 0,
+            adc_bits: 0,
+            ..Default::default()
+        }
+    }
+
+    pub fn from_args(args: &Args) -> Self {
+        let mut c = TrainConfig::default();
+        c.lr = args.f64("lr", c.lr);
+        c.weight_decay = args.f64("wd", c.weight_decay);
+        c.steps = args.usize("steps", c.steps);
+        c.warmup = args.usize("warmup", c.warmup);
+        c.weight_noise = args.f64("noise", c.weight_noise);
+        c.adc_noise = args.f64("adc-noise", c.adc_noise);
+        c.clip_sigma = args.f64("clip", c.clip_sigma);
+        c.dac_bits = args.usize("dac-bits", c.dac_bits as usize) as u32;
+        c.adc_bits = args.usize("adc-bits", c.adc_bits as usize) as u32;
+        c.seed = args.u64("seed", c.seed);
+        c
+    }
+
+    /// Learning rate at `step`: linear warmup then linear decay to zero
+    /// (the paper's schedule).
+    pub fn lr_at(&self, step: usize) -> f64 {
+        if step < self.warmup {
+            self.lr * (step + 1) as f64 / self.warmup.max(1) as f64
+        } else {
+            let remain = (self.steps - step) as f64 / (self.steps - self.warmup).max(1) as f64;
+            self.lr * remain.max(0.0)
+        }
+    }
+
+    /// The 5-scalar hw vector consumed by every exported graph.
+    pub fn hw_vec(&self) -> [f32; 5] {
+        [
+            self.weight_noise as f32,
+            self.clip_sigma as f32,
+            levels(self.dac_bits),
+            levels(self.adc_bits),
+            self.adc_noise as f32,
+        ]
+    }
+}
+
+fn levels(bits: u32) -> f32 {
+    if bits == 0 {
+        0.0
+    } else {
+        ((1u32 << (bits - 1)) - 1) as f32
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct EvalConfig {
+    /// Monte-Carlo trials per drift time (paper: 10).
+    pub trials: usize,
+    /// Evaluation examples per task.
+    pub examples: usize,
+    /// Apply global drift compensation (paper: yes).
+    pub compensate: bool,
+    /// Inference-time Gaussian noise level (Tables IX/X sweeps); when
+    /// negative, the full PCM statistical model is used instead.
+    pub gaussian_noise: f64,
+    pub seed: u64,
+}
+
+impl Default for EvalConfig {
+    fn default() -> Self {
+        EvalConfig {
+            trials: 3,
+            examples: 256,
+            compensate: true,
+            gaussian_noise: -1.0,
+            seed: 1234,
+        }
+    }
+}
+
+impl EvalConfig {
+    pub fn from_args(args: &Args) -> Self {
+        let mut c = EvalConfig::default();
+        c.trials = args.usize("trials", c.trials);
+        c.examples = args.usize("examples", c.examples);
+        c.compensate = !args.bool("no-gdc");
+        c.gaussian_noise = args.f64("eval-noise", c.gaussian_noise);
+        c.seed = args.u64("eval-seed", c.seed);
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_shape() {
+        let c = TrainConfig {
+            lr: 1.0,
+            steps: 100,
+            warmup: 10,
+            ..Default::default()
+        };
+        assert!(c.lr_at(0) < c.lr_at(9));
+        assert!((c.lr_at(9) - 1.0).abs() < 1e-9);
+        assert!(c.lr_at(50) < 1.0);
+        assert!(c.lr_at(99) < c.lr_at(50));
+        assert!(c.lr_at(99) >= 0.0);
+    }
+
+    #[test]
+    fn hw_vec_bits() {
+        let c = TrainConfig::default();
+        let v = c.hw_vec();
+        assert_eq!(v[2], 127.0);
+        assert_eq!(v[3], 127.0);
+        let d = TrainConfig::digital();
+        assert_eq!(d.hw_vec(), [0.0; 5]);
+    }
+
+    #[test]
+    fn args_override() {
+        let args = Args::parse(
+            "x --lr 0.001 --steps 42 --noise 0.03 --adc-bits 6"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let c = TrainConfig::from_args(&args);
+        assert_eq!(c.lr, 0.001);
+        assert_eq!(c.steps, 42);
+        assert_eq!(c.weight_noise, 0.03);
+        assert_eq!(c.hw_vec()[3], 31.0);
+    }
+}

@@ -1,0 +1,423 @@
+//! Synthetic 8-task GLUE stand-in (Table III).
+//!
+//! One generator per GLUE task, each with the *same metric* as the
+//! original and a task structure exercising an analogous capability —
+//! at a difficulty a proxy-scale encoder can learn from scratch
+//! (DESIGN.md §Substitutions):
+//!
+//! | task    | structure                                       | metric  |
+//! |---------|-------------------------------------------------|---------|
+//! | SST-2   | majority token polarity (low/high content pool) | acc     |
+//! | MNLI-m  | topic-token relation at fixed positions (3-way) | acc     |
+//! | MNLI-mm | same, shifted token domain                      | acc     |
+//! | MRPC    | paraphrase: s2 = noisy copy vs unrelated        | F1      |
+//! | QNLI    | does the sentence mention any entity marker?    | acc     |
+//! | QQP     | duplicate detection, heavier perturbation       | F1      |
+//! | RTE     | entity-mention entailment + 25 % label noise    | acc     |
+//! | STS-B   | token-overlap similarity regression             | Pearson |
+//! | CoLA    | "grammar": position-parity token classes        | Matthews|
+//!
+//! RTE's label noise and CoLA's sensitivity to small logit shifts are
+//! deliberate: the paper's Table III shows exactly those two tasks
+//! degrading hardest under analog constraints.
+
+use super::squad::ENTITY_POOL;
+use super::tokenizer::{CLS, CONTENT_START, SEP};
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Metric {
+    Accuracy,
+    F1,
+    Matthews,
+    PearsonSpearman,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum GlueTask {
+    Sst2,
+    MnliM,
+    MnliMm,
+    Mrpc,
+    Qnli,
+    Qqp,
+    Rte,
+    StsB,
+    Cola,
+}
+
+pub const ALL_TASKS: [GlueTask; 9] = [
+    GlueTask::Sst2,
+    GlueTask::MnliM,
+    GlueTask::MnliMm,
+    GlueTask::Mrpc,
+    GlueTask::Qnli,
+    GlueTask::Qqp,
+    GlueTask::Rte,
+    GlueTask::StsB,
+    GlueTask::Cola,
+];
+
+impl GlueTask {
+    pub fn name(&self) -> &'static str {
+        match self {
+            GlueTask::Sst2 => "SST-2",
+            GlueTask::MnliM => "MNLI-m",
+            GlueTask::MnliMm => "MNLI-mm",
+            GlueTask::Mrpc => "MRPC",
+            GlueTask::Qnli => "QNLI",
+            GlueTask::Qqp => "QQP",
+            GlueTask::Rte => "RTE",
+            GlueTask::StsB => "STS-B",
+            GlueTask::Cola => "CoLA",
+        }
+    }
+
+    pub fn metric(&self) -> Metric {
+        match self {
+            GlueTask::Mrpc | GlueTask::Qqp => Metric::F1,
+            GlueTask::StsB => Metric::PearsonSpearman,
+            GlueTask::Cola => Metric::Matthews,
+            _ => Metric::Accuracy,
+        }
+    }
+
+    pub fn n_classes(&self) -> usize {
+        match self {
+            GlueTask::MnliM | GlueTask::MnliMm => 3,
+            GlueTask::StsB => 1, // regression
+            _ => 2,
+        }
+    }
+
+    pub fn is_regression(&self) -> bool {
+        matches!(self, GlueTask::StsB)
+    }
+
+    /// MNLI-mm and -m share an adapter (one MNLI model reports m/mm in
+    /// the paper's table); everything else trains its own.
+    pub fn adapter_key(&self) -> &'static str {
+        match self {
+            GlueTask::MnliM | GlueTask::MnliMm => "MNLI",
+            t => t.name(),
+        }
+    }
+}
+
+/// Classification/regression example batch.
+#[derive(Clone, Debug)]
+pub struct ClsBatch {
+    pub tokens: Vec<i32>,  // [b, seq]
+    pub labels: Vec<i32>,  // [b] (classification)
+    pub targets: Vec<f32>, // [b] (regression)
+    pub b: usize,
+    pub seq: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct GlueGen {
+    pub task: GlueTask,
+    pub vocab: usize,
+    pub seq: usize,
+}
+
+impl GlueGen {
+    pub fn new(task: GlueTask, vocab: usize, seq: usize) -> GlueGen {
+        GlueGen { task, vocab, seq }
+    }
+
+    fn content(&self) -> usize {
+        self.vocab - CONTENT_START as usize
+    }
+
+    /// Random content token from a fractional sub-range of the content
+    /// alphabet (pools: polarity classes, topic domains, …).
+    fn rand_content(&self, rng: &mut Pcg64, lo_frac: f64, hi_frac: f64) -> i32 {
+        let n = self.content() as f64;
+        let lo = (n * lo_frac) as usize;
+        let hi = ((n * hi_frac) as usize).max(lo + 1);
+        CONTENT_START + (lo + rng.below(hi - lo)) as i32
+    }
+
+    /// Generate one example: (tokens, class_label, regression_target).
+    pub fn example(&self, rng: &mut Pcg64) -> (Vec<i32>, i32, f32) {
+        let s = self.seq;
+        let mut t = vec![0i32; s];
+        t[0] = CLS;
+        let body = s - 1;
+        let half = body / 2;
+
+        match self.task {
+            GlueTask::Sst2 => {
+                // majority polarity: pool A = low half of content ids,
+                // pool B = high half; 70/30 mix keeps headroom.
+                let label = rng.below(2) as i32;
+                let maj = (body * 7) / 10;
+                for i in 0..body {
+                    let from_major = i < maj;
+                    let positive = (label == 1) == from_major;
+                    t[1 + i] = if positive {
+                        self.rand_content(rng, 0.5, 1.0)
+                    } else {
+                        self.rand_content(rng, 0.0, 0.5)
+                    };
+                }
+                rng.shuffle(&mut t[1..]);
+                (t, label, 0.0)
+            }
+            GlueTask::MnliM | GlueTask::MnliMm => {
+                // topic tokens at FIXED positions (1 and half+2): the
+                // premise topic and hypothesis topic. entail = same
+                // topic; contradict = "opposite" topic (same index in
+                // the complementary pool); neutral = unrelated topic.
+                // -mm shifts the filler domain (domain transfer).
+                let (lo, hi) = if self.task == GlueTask::MnliMm {
+                    (0.5, 1.0)
+                } else {
+                    (0.0, 0.5)
+                };
+                let label = rng.below(3) as i32;
+                let n_topics = 8usize;
+                let topic = rng.below(n_topics);
+                let topic_tok = |k: usize, pool: usize| -> i32 {
+                    // two disjoint topic alphabets at the bottom of the
+                    // content range
+                    CONTENT_START + (pool * n_topics + k) as i32
+                };
+                t[1] = topic_tok(topic, 0);
+                for i in 2..=half {
+                    t[i] = self.rand_content(rng, lo, hi);
+                }
+                t[half + 1] = SEP;
+                t[half + 2] = match label {
+                    0 => topic_tok(topic, 0),                                  // entailment
+                    1 => topic_tok(topic, 1),                                  // contradiction
+                    _ => topic_tok((topic + 1 + rng.below(n_topics - 1)) % n_topics, 0), // neutral
+                };
+                for i in half + 3..s {
+                    t[i] = self.rand_content(rng, lo, hi);
+                }
+                (t, label, 0.0)
+            }
+            GlueTask::Mrpc | GlueTask::Qqp => {
+                let noise = if self.task == GlueTask::Qqp { 0.3 } else { 0.15 };
+                let label = rng.below(2) as i32;
+                // sentence pools: a paraphrase shares its source pool
+                let pool = rng.below(4);
+                let (plo, phi) = (pool as f64 * 0.25, pool as f64 * 0.25 + 0.25);
+                let s1: Vec<i32> = (0..half - 1).map(|_| self.rand_content(rng, plo, phi)).collect();
+                let s2: Vec<i32> = if label == 1 {
+                    s1.iter()
+                        .map(|&v| {
+                            if rng.uniform() < noise {
+                                self.rand_content(rng, plo, phi)
+                            } else {
+                                v
+                            }
+                        })
+                        .collect()
+                } else {
+                    // unrelated: different pool entirely
+                    let other = (pool + 1 + rng.below(3)) % 4;
+                    let (qlo, qhi) = (other as f64 * 0.25, other as f64 * 0.25 + 0.25);
+                    (0..half - 1).map(|_| self.rand_content(rng, qlo, qhi)).collect()
+                };
+                for (i, &v) in s1.iter().enumerate() {
+                    t[1 + i] = v;
+                }
+                t[1 + s1.len()] = SEP;
+                for (j, &v) in s2.iter().enumerate().take(s - 2 - s1.len()) {
+                    t[2 + s1.len() + j] = v;
+                }
+                (t, label, 0.0)
+            }
+            GlueTask::Qnli | GlueTask::Rte => {
+                // entailment = the sentence mentions an entity marker
+                // (reserved pool, detectable like the QA task's spans)
+                let label = rng.below(2) as i32; // 0 = entailed/mentioned
+                t[1] = super::tokenizer::QTOK;
+                t[2] = SEP;
+                for i in 3..s {
+                    t[i] = self.rand_content(rng, 0.0, 1.0);
+                }
+                if label == 0 {
+                    let p = 3 + rng.below(s - 3);
+                    t[p] = ENTITY_POOL[rng.below(ENTITY_POOL.len())];
+                }
+                let mut final_label = label;
+                if self.task == GlueTask::Rte && rng.uniform() < 0.25 {
+                    final_label = 1 - label; // label noise: RTE's low ceiling
+                }
+                (t, final_label, 0.0)
+            }
+            GlueTask::StsB => {
+                // similarity = 5 * pool-overlap fraction between halves
+                let pool = rng.below(4);
+                let (plo, phi) = (pool as f64 * 0.25, pool as f64 * 0.25 + 0.25);
+                let other = (pool + 1 + rng.below(3)) % 4;
+                let (qlo, qhi) = (other as f64 * 0.25, other as f64 * 0.25 + 0.25);
+                let overlap = rng.uniform();
+                let s1_len = half - 1;
+                let s2_len = s - 2 - s1_len;
+                let mut shared = 0usize;
+                for i in 0..s1_len {
+                    t[1 + i] = self.rand_content(rng, plo, phi);
+                }
+                t[1 + s1_len] = SEP;
+                for j in 0..s2_len {
+                    t[2 + s1_len + j] = if rng.uniform() < overlap {
+                        shared += 1;
+                        self.rand_content(rng, plo, phi)
+                    } else {
+                        self.rand_content(rng, qlo, qhi)
+                    };
+                }
+                let target = 5.0 * shared as f32 / s2_len as f32;
+                (t, 0, target)
+            }
+            GlueTask::Cola => {
+                // "grammatical" = even body positions from the low pool,
+                // odd from the high pool; corruptions flip the parity of
+                // a few positions.
+                let label = rng.below(2) as i32;
+                for i in 0..body {
+                    let (lo, hi) = if i % 2 == 0 { (0.0, 0.5) } else { (0.5, 1.0) };
+                    t[1 + i] = self.rand_content(rng, lo, hi);
+                }
+                if label == 0 {
+                    for _ in 0..3 {
+                        let i = rng.below(body);
+                        let (lo, hi) = if i % 2 == 0 { (0.5, 1.0) } else { (0.0, 0.5) };
+                        t[1 + i] = self.rand_content(rng, lo, hi);
+                    }
+                }
+                (t, label, 0.0)
+            }
+        }
+    }
+
+    pub fn batch(&self, b: usize, rng: &mut Pcg64) -> ClsBatch {
+        let mut tokens = Vec::with_capacity(b * self.seq);
+        let mut labels = Vec::with_capacity(b);
+        let mut targets = Vec::with_capacity(b);
+        for _ in 0..b {
+            let (t, l, y) = self.example(rng);
+            tokens.extend_from_slice(&t);
+            labels.push(l);
+            targets.push(y);
+        }
+        ClsBatch {
+            tokens,
+            labels,
+            targets,
+            b,
+            seq: self.seq,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tasks_generate_valid_batches() {
+        for task in ALL_TASKS {
+            let g = GlueGen::new(task, 512, 48);
+            let mut rng = Pcg64::new(1);
+            let b = g.batch(16, &mut rng);
+            assert_eq!(b.tokens.len(), 16 * 48, "{task:?}");
+            assert!(b.tokens.iter().all(|&t| t >= 0 && (t as usize) < 512), "{task:?}");
+            if !task.is_regression() {
+                assert!(b.labels.iter().all(|&l| (l as usize) < task.n_classes()), "{task:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn labels_are_balanced_enough() {
+        for task in [GlueTask::Sst2, GlueTask::Mrpc, GlueTask::Cola] {
+            let g = GlueGen::new(task, 512, 48);
+            let mut rng = Pcg64::new(2);
+            let b = g.batch(400, &mut rng);
+            let ones = b.labels.iter().filter(|&&l| l == 1).count();
+            assert!((120..280).contains(&ones), "{task:?}: {ones}/400");
+        }
+    }
+
+    #[test]
+    fn stsb_targets_in_range() {
+        let g = GlueGen::new(GlueTask::StsB, 512, 48);
+        let mut rng = Pcg64::new(3);
+        let b = g.batch(100, &mut rng);
+        assert!(b.targets.iter().all(|&y| (0.0..=5.0).contains(&y)));
+        let lo = b.targets.iter().cloned().fold(f32::MAX, f32::min);
+        let hi = b.targets.iter().cloned().fold(f32::MIN, f32::max);
+        assert!(hi - lo > 2.0);
+    }
+
+    #[test]
+    fn mnli_topic_positions_encode_label() {
+        let g = GlueGen::new(GlueTask::MnliM, 512, 48);
+        let mut rng = Pcg64::new(4);
+        let half = 47 / 2;
+        for _ in 0..50 {
+            let (t, label, _) = g.example(&mut rng);
+            assert_eq!(t[half + 1], SEP);
+            let prem = t[1];
+            let hyp = t[half + 2];
+            match label {
+                0 => assert_eq!(prem, hyp),
+                1 => assert_eq!(hyp - prem, 8), // complementary pool
+                _ => {
+                    assert_ne!(prem, hyp);
+                    assert!(hyp < CONTENT_START + 8);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mnli_domains_differ() {
+        let m = GlueGen::new(GlueTask::MnliM, 512, 48);
+        let mm = GlueGen::new(GlueTask::MnliMm, 512, 48);
+        let mut rng = Pcg64::new(4);
+        let bm = m.batch(50, &mut rng);
+        let bmm = mm.batch(50, &mut rng);
+        let avg = |b: &ClsBatch| {
+            let filler: Vec<f64> = b
+                .tokens
+                .iter()
+                .filter(|&&t| t >= CONTENT_START + 16)
+                .map(|&t| t as f64)
+                .collect();
+            filler.iter().sum::<f64>() / filler.len() as f64
+        };
+        assert!(avg(&bmm) > avg(&bm) + 50.0, "domain shift missing");
+    }
+
+    #[test]
+    fn qnli_mention_matches_label() {
+        let g = GlueGen::new(GlueTask::Qnli, 512, 48);
+        let mut rng = Pcg64::new(5);
+        for _ in 0..50 {
+            let (t, label, _) = g.example(&mut rng);
+            let mentioned = t[3..].iter().any(|tok| ENTITY_POOL.contains(tok));
+            assert_eq!(mentioned, label == 0);
+        }
+    }
+
+    #[test]
+    fn metric_assignment_matches_glue() {
+        assert_eq!(GlueTask::Cola.metric(), Metric::Matthews);
+        assert_eq!(GlueTask::StsB.metric(), Metric::PearsonSpearman);
+        assert_eq!(GlueTask::Qqp.metric(), Metric::F1);
+        assert_eq!(GlueTask::Sst2.metric(), Metric::Accuracy);
+    }
+
+    #[test]
+    fn mnli_shares_adapter() {
+        assert_eq!(GlueTask::MnliM.adapter_key(), GlueTask::MnliMm.adapter_key());
+        assert_ne!(GlueTask::Sst2.adapter_key(), GlueTask::Qqp.adapter_key());
+    }
+}

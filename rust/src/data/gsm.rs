@@ -1,0 +1,153 @@
+//! Synthetic multi-step arithmetic with chain-of-thought (GSM8K
+//! stand-in for the RL experiments, Table V / Supp. Note 3).
+//!
+//! Problem: `a + b = ?` with a, b < 50. The model is trained (via GRPO)
+//! to emit the paper's exact output grammar:
+//!
+//! `<start_working_out> a-digits + b-digits <end_working_out>
+//!  <SOLUTION> c-digits </SOLUTION>`
+//!
+//! Rewards (4 components, max 9.5 — Methods: "maximum achievable reward
+//! of 9.5") live in `rl::reward` and parse this format.
+
+use super::tokenizer::{encode_number, BOS, EQUALS, PLUS, SEP};
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Debug)]
+pub struct GsmProblem {
+    pub a: u32,
+    pub b: u32,
+    /// Prompt tokens: [BOS] a + b = [SEP]
+    pub prompt: Vec<i32>,
+}
+
+impl GsmProblem {
+    pub fn answer(&self) -> u32 {
+        self.a + self.b
+    }
+
+    /// The ideal completion in the required format (reference policy /
+    /// format oracle for tests).
+    pub fn ideal_completion(&self) -> Vec<i32> {
+        use super::tokenizer::{EOW, ESOL, SOL, SOW};
+        let mut out = vec![SOW];
+        encode_number(self.a, &mut out);
+        out.push(PLUS);
+        encode_number(self.b, &mut out);
+        out.push(EOW);
+        out.push(SOL);
+        encode_number(self.answer(), &mut out);
+        out.push(ESOL);
+        out
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct GsmTask {
+    pub seq: usize,
+    pub max_operand: u32,
+}
+
+impl GsmTask {
+    pub fn new(seq: usize) -> GsmTask {
+        GsmTask {
+            seq,
+            max_operand: 50,
+        }
+    }
+
+    pub fn problem(&self, rng: &mut Pcg64) -> GsmProblem {
+        let a = rng.below(self.max_operand as usize) as u32;
+        let b = rng.below(self.max_operand as usize) as u32;
+        let mut prompt = vec![BOS];
+        encode_number(a, &mut prompt);
+        prompt.push(PLUS);
+        encode_number(b, &mut prompt);
+        prompt.push(EQUALS);
+        prompt.push(SEP);
+        GsmProblem { a, b, prompt }
+    }
+
+    /// SFT-style batch of ideal completions (used to warm-start the
+    /// policy and for the "digital post-LoRA" baseline row of Table V).
+    pub fn sft_batch(&self, b: usize, rng: &mut Pcg64) -> (Vec<i32>, Vec<f32>) {
+        let mut tokens = Vec::with_capacity(b * self.seq);
+        let mut mask = Vec::with_capacity(b * self.seq);
+        for _ in 0..b {
+            let p = self.problem(rng);
+            let mut toks = p.prompt.clone();
+            let start = toks.len();
+            toks.extend(p.ideal_completion());
+            toks.resize(self.seq, super::tokenizer::PAD);
+            let mut m = vec![0f32; self.seq];
+            let end = (start + p.ideal_completion().len()).min(self.seq);
+            for v in m.iter_mut().take(end).skip(start) {
+                *v = 1.0;
+            }
+            tokens.extend_from_slice(&toks);
+            mask.extend_from_slice(&m);
+        }
+        (tokens, mask)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tokenizer::{decode_number, ESOL, SOL};
+
+    #[test]
+    fn prompt_layout() {
+        let task = GsmTask::new(64);
+        let mut rng = Pcg64::new(1);
+        let p = task.problem(&mut rng);
+        assert_eq!(p.prompt[0], BOS);
+        assert_eq!(*p.prompt.last().unwrap(), SEP);
+        assert!(p.prompt.len() <= 8);
+    }
+
+    #[test]
+    fn ideal_completion_contains_answer_in_solution_tags() {
+        let p = GsmProblem {
+            a: 17,
+            b: 25,
+            prompt: vec![],
+        };
+        let c = p.ideal_completion();
+        let sol = c.iter().position(|&t| t == SOL).unwrap();
+        let (val, _) = decode_number(&c, sol + 1).unwrap();
+        assert_eq!(val, 42);
+        assert_eq!(*c.last().unwrap(), ESOL);
+    }
+
+    #[test]
+    fn sft_batch_masks_only_completions() {
+        let task = GsmTask::new(32);
+        let mut rng = Pcg64::new(2);
+        let (tokens, mask) = task.sft_batch(4, &mut rng);
+        assert_eq!(tokens.len(), 4 * 32);
+        assert_eq!(mask.len(), 4 * 32);
+        for ex in 0..4 {
+            let m = &mask[ex * 32..(ex + 1) * 32];
+            let t = &tokens[ex * 32..(ex + 1) * 32];
+            // prompt positions unmasked
+            assert_eq!(m[0], 0.0);
+            // some completion positions masked
+            assert!(m.iter().sum::<f32>() >= 6.0);
+            // first masked position is the SOW tag
+            let first = m.iter().position(|&x| x > 0.0).unwrap();
+            assert_eq!(t[first], crate::data::tokenizer::SOW);
+        }
+    }
+
+    #[test]
+    fn operands_in_range() {
+        let task = GsmTask::new(64);
+        let mut rng = Pcg64::new(3);
+        for _ in 0..100 {
+            let p = task.problem(&mut rng);
+            assert!(p.a < 50 && p.b < 50);
+            assert!(p.answer() < 100);
+        }
+    }
+}

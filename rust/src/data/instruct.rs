@@ -1,0 +1,180 @@
+//! Synthetic instruction-tuning corpus (Alpaca stand-in) and zero-shot
+//! evaluation suites (the Table IV benchmark battery stand-in).
+//!
+//! A prompt is `[BOS] <type> src… [SEP]` and the target response is a
+//! deterministic transform of `src` selected by the instruction type:
+//! copy, reverse, or +1-map over content ids. SFT supervises response
+//! positions only (mask). The three *eval suites* reuse the same
+//! machinery with held-out source sequences; suite accuracy is
+//! greedy-decode exact-match, playing the role of the paper's
+//! HellaSwag/BoolQ/PIQA battery.
+
+use super::tokenizer::{BOS, CONTENT_START, EOS, SEP};
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Instruction {
+    Copy,
+    Reverse,
+    MapPlusOne,
+}
+
+pub const ALL_INSTRUCTIONS: [Instruction; 3] = [Instruction::Copy, Instruction::Reverse, Instruction::MapPlusOne];
+
+impl Instruction {
+    /// Instruction-type token (drawn from the low content range so tiny
+    /// vocabs still work).
+    pub fn type_token(&self) -> i32 {
+        match self {
+            Instruction::Copy => CONTENT_START,
+            Instruction::Reverse => CONTENT_START + 1,
+            Instruction::MapPlusOne => CONTENT_START + 2,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Instruction::Copy => "copy-suite",
+            Instruction::Reverse => "reverse-suite",
+            Instruction::MapPlusOne => "map-suite",
+        }
+    }
+
+    pub fn apply(&self, src: &[i32], vocab: usize) -> Vec<i32> {
+        match self {
+            Instruction::Copy => src.to_vec(),
+            Instruction::Reverse => src.iter().rev().copied().collect(),
+            Instruction::MapPlusOne => {
+                let (lo, hi) = source_alphabet(vocab);
+                src.iter()
+                    .map(|&t| if t + 1 >= hi { lo } else { t + 1 })
+                    .collect()
+            }
+        }
+    }
+}
+
+/// Source tokens come from a small alphabet (32 symbols) so the +1-map
+/// instruction is learnable at proxy scale — the model must learn the
+/// full permutation table, which is feasible over 32 symbols but not
+/// over the whole content vocabulary.
+pub fn source_alphabet(vocab: usize) -> (i32, i32) {
+    let lo = CONTENT_START + 3; // skip the 3 instruction-type tokens
+    let hi = (lo + 32).min(vocab as i32);
+    (lo, hi)
+}
+
+/// One supervised LM example: full token buffer + response mask.
+#[derive(Clone, Debug)]
+pub struct LmExample {
+    pub tokens: Vec<i32>,
+    pub mask: Vec<f32>,
+    /// Index of the first response token.
+    pub response_start: usize,
+    pub response: Vec<i32>,
+}
+
+#[derive(Clone, Debug)]
+pub struct InstructTask {
+    pub vocab: usize,
+    pub seq: usize,
+    pub src_len: usize,
+}
+
+impl InstructTask {
+    pub fn new(vocab: usize, seq: usize) -> InstructTask {
+        // prompt = BOS + type + src + SEP; response = src_len + EOS
+        let src_len = ((seq - 4) / 2).min(6);
+        InstructTask { vocab, seq, src_len }
+    }
+
+    pub fn example(&self, kind: Instruction, rng: &mut Pcg64) -> LmExample {
+        let (lo, hi) = source_alphabet(self.vocab);
+        let src: Vec<i32> = (0..self.src_len)
+            .map(|_| lo + rng.below((hi - lo) as usize) as i32)
+            .collect();
+        let resp = kind.apply(&src, self.vocab);
+
+        let mut tokens = vec![0i32; self.seq];
+        let mut mask = vec![0f32; self.seq];
+        tokens[0] = BOS;
+        tokens[1] = kind.type_token();
+        for (i, &s) in src.iter().enumerate() {
+            tokens[2 + i] = s;
+        }
+        let sep_at = 2 + src.len();
+        tokens[sep_at] = SEP;
+        let response_start = sep_at + 1;
+        for (j, &t) in resp.iter().enumerate() {
+            tokens[response_start + j] = t;
+            mask[response_start + j] = 1.0;
+        }
+        tokens[response_start + resp.len()] = EOS;
+        mask[response_start + resp.len()] = 1.0;
+        LmExample {
+            tokens,
+            mask,
+            response_start,
+            response: resp,
+        }
+    }
+
+    /// Mixed-instruction SFT batch (graph-ready flat arrays).
+    pub fn batch(&self, b: usize, rng: &mut Pcg64) -> (Vec<i32>, Vec<f32>) {
+        let mut tokens = Vec::with_capacity(b * self.seq);
+        let mut mask = Vec::with_capacity(b * self.seq);
+        for _ in 0..b {
+            let kind = *ALL_INSTRUCTIONS.get(rng.below(3)).unwrap();
+            let ex = self.example(kind, rng);
+            tokens.extend_from_slice(&ex.tokens);
+            mask.extend_from_slice(&ex.mask);
+        }
+        (tokens, mask)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transforms_are_correct() {
+        let src = vec![40, 41, 45];
+        assert_eq!(Instruction::Copy.apply(&src, 64), vec![40, 41, 45]);
+        assert_eq!(Instruction::Reverse.apply(&src, 64), vec![45, 41, 40]);
+        assert_eq!(Instruction::MapPlusOne.apply(&src, 64), vec![41, 42, 46]);
+        // wraparound at the source-alphabet edge
+        let (lo, hi) = source_alphabet(64);
+        assert_eq!(Instruction::MapPlusOne.apply(&[hi - 1], 64), vec![lo]);
+    }
+
+    #[test]
+    fn example_layout() {
+        let task = InstructTask::new(512, 64);
+        let mut rng = Pcg64::new(1);
+        let ex = task.example(Instruction::Reverse, &mut rng);
+        assert_eq!(ex.tokens[0], BOS);
+        assert_eq!(ex.tokens[1], Instruction::Reverse.type_token());
+        assert_eq!(ex.tokens[ex.response_start - 1], SEP);
+        // mask covers exactly response + EOS
+        let n_masked = ex.mask.iter().filter(|&&m| m > 0.0).count();
+        assert_eq!(n_masked, ex.response.len() + 1);
+        // response tokens appear at the masked positions
+        for (j, &t) in ex.response.iter().enumerate() {
+            assert_eq!(ex.tokens[ex.response_start + j], t);
+        }
+    }
+
+    #[test]
+    fn fits_sequence() {
+        for seq in [16usize, 32, 64] {
+            let task = InstructTask::new(64, seq);
+            let mut rng = Pcg64::new(2);
+            for kind in ALL_INSTRUCTIONS {
+                let ex = task.example(kind, &mut rng);
+                assert_eq!(ex.tokens.len(), seq);
+                assert!(ex.response_start + ex.response.len() + 1 <= seq);
+            }
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! Synthetic task suite.
+//!
+//! The offline image has no SQuAD/GLUE/Alpaca/GSM8K; these generators
+//! build structurally analogous tasks over a small token vocabulary so
+//! that every code path the paper exercises — span extraction QA,
+//! 8-task classification/regression with GLUE's metric zoo, instruction
+//! following, and multi-step arithmetic with chain-of-thought format —
+//! runs end-to-end (DESIGN.md §Substitutions).
+//!
+//! All generators are deterministic in (task, seed) and stream batches
+//! without materialising datasets.
+
+pub mod glue;
+pub mod gsm;
+pub mod instruct;
+pub mod squad;
+pub mod tokenizer;

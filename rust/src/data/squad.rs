@@ -1,0 +1,191 @@
+//! Synthetic span-extraction QA (SQuAD v1.1 stand-in).
+//!
+//! Each passage embeds an *entity span*: an entity marker from a small
+//! reserved pool (token ids 25–31), followed by 1–3 content tokens,
+//! closed by a delimiter. The question names the entity
+//! (`[CLS] Q <entity> [SEP] …`) and the answer is the whole span,
+//! marker through delimiter inclusive. Both span edges are therefore
+//! token-identity detections, which a proxy-scale encoder learns from
+//! scratch to ~zero loss; edges defined by *relative* position (or
+//! distractor entities requiring query matching) measurably do NOT
+//! train at this scale — see DESIGN.md §Substitutions for the
+//! learnability study. `n_distractors` is kept configurable for larger
+//! substrates. F1/EM are token-overlap / exact-span, exactly as SQuAD.
+
+use super::tokenizer::{CLS, CONTENT_START, QTOK, SEP};
+use crate::util::rng::Pcg64;
+
+/// Entity-marker pool (reserved ids below CONTENT_START).
+pub const ENTITY_POOL: [i32; 7] = [25, 26, 27, 28, 29, 30, 31];
+/// Span delimiter token.
+pub const DELIM: i32 = 24;
+
+#[derive(Clone, Debug)]
+pub struct SquadTask {
+    pub vocab: usize,
+    pub seq: usize,
+    /// Maximum answer span length in content tokens (marker adds 1).
+    pub max_span: usize,
+    /// Distractor entity spans per passage.
+    pub n_distractors: usize,
+}
+
+/// One batch of QA examples as graph-ready flat arrays.
+#[derive(Clone, Debug)]
+pub struct QaBatch {
+    pub tokens: Vec<i32>, // [b, seq]
+    pub starts: Vec<i32>, // [b]
+    pub ends: Vec<i32>,   // [b]
+    pub b: usize,
+    pub seq: usize,
+}
+
+impl SquadTask {
+    pub fn new(vocab: usize, seq: usize) -> SquadTask {
+        // short test sequences get a reduced layout that still fits
+        let max_span = if seq < 32 { 2 } else { 3 };
+        SquadTask {
+            vocab,
+            seq,
+            max_span,
+            n_distractors: 0,
+        }
+    }
+
+    const Q_LEN: usize = 4; // [CLS] QTOK entity [SEP]
+
+    /// Generate one example; returns (tokens, start, end), span
+    /// inclusive: tokens[start] is the entity marker, tokens[end] the
+    /// closing delimiter.
+    pub fn example(&self, rng: &mut Pcg64) -> (Vec<i32>, usize, usize) {
+        let content = (self.vocab - CONTENT_START as usize) as i32;
+        debug_assert!(content > 8, "vocab too small for QA task");
+
+        let n_entities = 1 + self.n_distractors;
+        let picks = rng.choose(ENTITY_POOL.len(), n_entities);
+
+        let mut toks = vec![0i32; self.seq];
+        toks[0] = CLS;
+        toks[1] = QTOK;
+        toks[2] = ENTITY_POOL[picks[0]];
+        toks[3] = SEP;
+        for t in toks.iter_mut().skip(Self::Q_LEN) {
+            *t = CONTENT_START + rng.below(content as usize) as i32;
+        }
+
+        // place disjoint entity spans: marker + span + delim needs
+        // max_span + 2 slots; keep a gap so spans never merge
+        let mut slots: Vec<(usize, usize)> = Vec::with_capacity(n_entities);
+        let lo = Self::Q_LEN;
+        let hi = self.seq - (self.max_span + 2);
+        let mut guard = 0;
+        while slots.len() < n_entities {
+            guard += 1;
+            assert!(guard < 10_000, "seq too short for entity layout");
+            let span_len = 1 + rng.below(self.max_span);
+            let p = lo + rng.below(hi - lo + 1);
+            if slots
+                .iter()
+                .all(|&(q, ql)| p + span_len + 1 < q || q + ql + 1 < p)
+            {
+                slots.push((p, span_len));
+            }
+        }
+        for (slot, &pick) in slots.iter().zip(&picks) {
+            let (p, span_len) = *slot;
+            toks[p] = ENTITY_POOL[pick];
+            toks[p + span_len + 1] = DELIM;
+        }
+        let (p, span_len) = slots[0];
+        (toks, p, p + span_len + 1)
+    }
+
+    pub fn batch(&self, b: usize, rng: &mut Pcg64) -> QaBatch {
+        let mut tokens = Vec::with_capacity(b * self.seq);
+        let mut starts = Vec::with_capacity(b);
+        let mut ends = Vec::with_capacity(b);
+        for _ in 0..b {
+            let (t, s, e) = self.example(rng);
+            tokens.extend_from_slice(&t);
+            starts.push(s as i32);
+            ends.push(e as i32);
+        }
+        QaBatch {
+            tokens,
+            starts,
+            ends,
+            b,
+            seq: self.seq,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+
+    #[test]
+    fn example_structure() {
+        proptest::check("squad-structure", 30, |g| {
+            let task = SquadTask::new(*g.pick(&[64usize, 512]), 48);
+            let mut rng = Pcg64::new(g.seed);
+            let (toks, s, e) = task.example(&mut rng);
+            assert_eq!(toks.len(), task.seq);
+            assert_eq!(toks[0], CLS);
+            assert_eq!(toks[3], SEP);
+            let entity = toks[2];
+            assert!(ENTITY_POOL.contains(&entity));
+            // the gold span starts at the queried entity's marker
+            assert_eq!(toks[s], entity);
+            // and ends on the delimiter
+            assert_eq!(toks[e], DELIM);
+            assert!(e > s && e < task.seq);
+            assert!(e - s <= task.max_span + 1);
+            // gold entity appears exactly once in the passage
+            let occ = (4..task.seq).filter(|&i| toks[i] == entity).count();
+            assert_eq!(occ, 1);
+            // distractor entities present
+            let n_markers = (4..task.seq)
+                .filter(|&i| ENTITY_POOL.contains(&toks[i]))
+                .count();
+            assert_eq!(n_markers, 1 + task.n_distractors);
+            assert_eq!(task.n_distractors, 0); // default: see module docs
+        });
+    }
+
+    #[test]
+    fn tiny_seq_still_fits() {
+        let task = SquadTask {
+            vocab: 64,
+            seq: 16,
+            max_span: 2,
+            n_distractors: 1,
+        };
+        let mut rng = Pcg64::new(1);
+        for _ in 0..50 {
+            let (toks, s, e) = task.example(&mut rng);
+            assert_eq!(toks.len(), 16);
+            assert!(e < 16 && s >= 4);
+        }
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let task = SquadTask::new(512, 48);
+        let mut rng = Pcg64::new(9);
+        let b = task.batch(8, &mut rng);
+        assert_eq!(b.tokens.len(), 8 * 48);
+        assert_eq!(b.starts.len(), 8);
+        assert!(b.starts.iter().zip(&b.ends).all(|(s, e)| e >= s));
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let task = SquadTask::new(512, 48);
+        let a = task.batch(4, &mut Pcg64::new(5));
+        let b = task.batch(4, &mut Pcg64::new(5));
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.starts, b.starts);
+    }
+}

@@ -1,0 +1,103 @@
+//! Shared token-id conventions for the synthetic vocabulary.
+//!
+//! Layout (within any variant's vocab size V):
+//!   0..=5   control: PAD CLS SEP MASK BOS EOS
+//!   6..=15  digits 0-9 (GSM arithmetic)
+//!   16..=23 operators / format tags: + = <sow> <eow> <sol> </sol> Q A
+//!   32..V   content tokens
+
+pub const PAD: i32 = 0;
+pub const CLS: i32 = 1;
+pub const SEP: i32 = 2;
+pub const MASK: i32 = 3;
+pub const BOS: i32 = 4;
+pub const EOS: i32 = 5;
+
+pub const DIGIT0: i32 = 6; // ..=15
+
+pub const PLUS: i32 = 16;
+pub const EQUALS: i32 = 17;
+pub const SOW: i32 = 18; // <start_working_out>
+pub const EOW: i32 = 19; // <end_working_out>
+pub const SOL: i32 = 20; // <SOLUTION>
+pub const ESOL: i32 = 21; // </SOLUTION>
+pub const QTOK: i32 = 22;
+pub const ATOK: i32 = 23;
+
+pub const CONTENT_START: i32 = 32;
+
+pub fn digit(d: u32) -> i32 {
+    debug_assert!(d < 10);
+    DIGIT0 + d as i32
+}
+
+pub fn digit_value(tok: i32) -> Option<u32> {
+    if (DIGIT0..DIGIT0 + 10).contains(&tok) {
+        Some((tok - DIGIT0) as u32)
+    } else {
+        None
+    }
+}
+
+/// Encode a non-negative number as digit tokens (most-significant first).
+pub fn encode_number(n: u32, out: &mut Vec<i32>) {
+    if n >= 10 {
+        encode_number(n / 10, out);
+    }
+    out.push(digit(n % 10));
+}
+
+/// Decode a digit-token run starting at `pos`; returns (value, len).
+pub fn decode_number(toks: &[i32], pos: usize) -> Option<(u32, usize)> {
+    let mut val: u64 = 0;
+    let mut len = 0;
+    while pos + len < toks.len() {
+        match digit_value(toks[pos + len]) {
+            Some(d) if len < 9 => {
+                val = val * 10 + d as u64;
+                len += 1;
+            }
+            _ => break,
+        }
+    }
+    if len == 0 {
+        None
+    } else {
+        Some((val as u32, len))
+    }
+}
+
+/// Number of content tokens available in a vocab of size `v`.
+pub fn content_range(v: usize) -> std::ops::Range<i32> {
+    CONTENT_START..v as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn number_roundtrip() {
+        for n in [0u32, 7, 10, 42, 99, 123, 999] {
+            let mut toks = vec![];
+            encode_number(n, &mut toks);
+            let (val, len) = decode_number(&toks, 0).unwrap();
+            assert_eq!(val, n);
+            assert_eq!(len, toks.len());
+        }
+    }
+
+    #[test]
+    fn decode_stops_at_non_digit() {
+        let toks = vec![digit(4), digit(2), PLUS, digit(1)];
+        assert_eq!(decode_number(&toks, 0), Some((42, 2)));
+        assert_eq!(decode_number(&toks, 2), None);
+    }
+
+    #[test]
+    fn content_range_disjoint_from_specials() {
+        let r = content_range(64);
+        assert!(r.start > ESOL && r.start > ATOK);
+        assert_eq!(r.end, 64);
+    }
+}

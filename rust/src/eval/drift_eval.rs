@@ -1,0 +1,297 @@
+//! Drift evaluation harness.
+//!
+//! Implements the paper's inference protocol (Methods — Training and
+//! Inference Details): program the trained model's mappable weights
+//! onto simulated PCM arrays once, then for each drift time t ∈
+//! {0 s … 10 y} and Monte-Carlo trial, read the arrays through the full
+//! device model (programming noise → drift(t) → read noise → global
+//! drift compensation), run the AOT-compiled forward graph with the
+//! perturbed weights, and score the task metric. Results are averaged
+//! over trials (paper: 10).
+//!
+//! The alternative `gaussian` mode reproduces the Table IX/X protocol:
+//! additive Gaussian weight noise at a chosen relative amplitude,
+//! using the graph's own in-graph noise path (fresh key per trial).
+
+use anyhow::Result;
+
+use crate::aimc::mapping::program_tensor;
+use crate::aimc::tile::is_mappable;
+use crate::config::manifest::Role;
+use crate::model::params::ParamStore;
+use crate::pcm::{read_tensor, PcmModel, ProgrammedTensor};
+use crate::runtime::pack::{assemble_inputs, literal_to_f32, DataArg};
+use crate::runtime::{Engine, LoadedGraph};
+use crate::util::rng::Pcg64;
+
+/// A trained model programmed onto the simulated analog substrate.
+pub struct AnalogDeployment {
+    /// (tensor name, programmed devices) for every mappable meta tensor.
+    pub programmed: Vec<(String, ProgrammedTensor)>,
+    /// Clean meta store (unmappable tensors are used as-is).
+    pub meta: ParamStore,
+    pub model: PcmModel,
+}
+
+impl AnalogDeployment {
+    /// Program every mappable tensor (paper: all linear layers; ~81 % of
+    /// MobileBERT parameters) with `clip_sigma` channel clipping.
+    pub fn program(meta: ParamStore, model: PcmModel, clip_sigma: f32, rng: &mut Pcg64) -> Self {
+        let mut programmed = Vec::new();
+        for t in &meta.tensors {
+            if is_mappable(&t.name) && t.shape.len() == 2 {
+                let pt = program_tensor(&model, &t.data, t.shape[0], t.shape[1], clip_sigma, rng);
+                programmed.push((t.name.clone(), pt));
+            }
+        }
+        AnalogDeployment {
+            programmed,
+            meta,
+            model,
+        }
+    }
+
+    /// Devices on the analog substrate (2 per weight, differential).
+    pub fn n_devices(&self) -> usize {
+        self.programmed.iter().map(|(_, p)| p.n_devices()).sum()
+    }
+
+    /// Effective meta weights at drift time `t_seconds` for one trial.
+    pub fn meta_at(&self, t_seconds: f64, compensate: bool, rng: &mut Pcg64) -> ParamStore {
+        let mut out = self.meta.clone();
+        for (name, pt) in &self.programmed {
+            let w = read_tensor(&self.model, pt, t_seconds, compensate, rng);
+            out.get_mut(name).expect("programmed tensor in meta").data = w;
+        }
+        out
+    }
+}
+
+/// Inference-time hardware vector: PCM perturbations come from the rust
+/// device model, so the in-graph noise path is disabled and clipping is
+/// already burned into the programmed conductances.
+pub fn pcm_eval_hw(dac_levels: f32, adc_levels: f32, adc_noise: f32) -> [f32; 5] {
+    [0.0, 0.0, dac_levels, adc_levels, adc_noise]
+}
+
+// ---------------------------------------------------------------------------
+// Forward-pass evaluation wrappers
+// ---------------------------------------------------------------------------
+
+/// Run a QA forward graph over an eval set; returns predicted spans.
+/// The search window excludes the question region (SQuAD decode rule
+/// adapted to the synthetic layout).
+pub fn qa_predict(
+    graph: &LoadedGraph,
+    meta: &ParamStore,
+    train: &ParamStore,
+    tokens: &[i32],
+    hw: [f32; 5],
+    seed: u64,
+) -> Result<Vec<(usize, usize)>> {
+    let (b, s) = fwd_batch_shape(graph);
+    let n = tokens.len() / s;
+    let mut preds = Vec::with_capacity(n);
+    let mut chunk = vec![0i32; b * s];
+    let mut done = 0;
+    while done < n {
+        let take = (n - done).min(b);
+        chunk[..take * s].copy_from_slice(&tokens[done * s..(done + take) * s]);
+        for v in chunk[take * s..].iter_mut() {
+            *v = 0;
+        }
+        let inputs = assemble_inputs(
+            &graph.spec,
+            meta,
+            train,
+            None,
+            &[DataArg::I32(&chunk)],
+            seed ^ (done as u64).wrapping_mul(0x9e37),
+            hw,
+            None,
+        )?;
+        let outs = graph.run(&inputs)?;
+        let sl = literal_to_f32(&outs[0])?;
+        let el = literal_to_f32(&outs[1])?;
+        for i in 0..take {
+            let srow = &sl[i * s..(i + 1) * s];
+            let erow = &el[i * s..(i + 1) * s];
+            // passage starts after [CLS] Q marker [SEP]; window must
+            // admit the longest legal span (marker + 3 tokens + delim)
+            let (ps, pe) = super::metrics::best_span(&srow[4..], &erow[4..], 6);
+            preds.push((ps + 4, pe + 4));
+        }
+        done += take;
+    }
+    Ok(preds)
+}
+
+/// Run a classification forward graph; returns raw logit rows.
+pub fn cls_logits(
+    graph: &LoadedGraph,
+    meta: &ParamStore,
+    train: &ParamStore,
+    tokens: &[i32],
+    hw: [f32; 5],
+    seed: u64,
+) -> Result<Vec<Vec<f32>>> {
+    let (b, s) = fwd_batch_shape(graph);
+    let n_cls = graph.spec.outputs[0].shape[1];
+    let n = tokens.len() / s;
+    let mut rows = Vec::with_capacity(n);
+    let mut chunk = vec![0i32; b * s];
+    let mut done = 0;
+    while done < n {
+        let take = (n - done).min(b);
+        chunk[..take * s].copy_from_slice(&tokens[done * s..(done + take) * s]);
+        for v in chunk[take * s..].iter_mut() {
+            *v = 0;
+        }
+        let inputs = assemble_inputs(
+            &graph.spec,
+            meta,
+            train,
+            None,
+            &[DataArg::I32(&chunk)],
+            seed ^ (done as u64).wrapping_mul(0x517c),
+            hw,
+            None,
+        )?;
+        let outs = graph.run(&inputs)?;
+        let logits = literal_to_f32(&outs[0])?;
+        for i in 0..take {
+            rows.push(logits[i * n_cls..(i + 1) * n_cls].to_vec());
+        }
+        done += take;
+    }
+    Ok(rows)
+}
+
+/// Full-sequence LM logits for a batch of token rows (decoder eval /
+/// sampling). `tokens` must be exactly [b, s] for the graph.
+pub fn lm_logits(
+    graph: &LoadedGraph,
+    meta: &ParamStore,
+    train: &ParamStore,
+    tokens: &[i32],
+    hw: [f32; 5],
+    seed: u64,
+) -> Result<Vec<f32>> {
+    let inputs = assemble_inputs(
+        &graph.spec,
+        meta,
+        train,
+        None,
+        &[DataArg::I32(tokens)],
+        seed,
+        hw,
+        None,
+    )?;
+    let outs = graph.run(&inputs)?;
+    literal_to_f32(&outs[0])
+}
+
+pub fn fwd_batch_shape(graph: &LoadedGraph) -> (usize, usize) {
+    let io = graph
+        .spec
+        .inputs_with_role(Role::Data)
+        .next()
+        .expect("fwd graph has a tokens input");
+    (io.shape[0], io.shape[1])
+}
+
+// ---------------------------------------------------------------------------
+// Drift-grid driver
+// ---------------------------------------------------------------------------
+
+/// Score one (metric_fn) over the drift grid. `metric_fn` receives the
+/// perturbed meta store and a trial seed and returns a scalar metric.
+pub fn drift_grid<F>(
+    deployment: &AnalogDeployment,
+    times: &[(&str, f64)],
+    trials: usize,
+    compensate: bool,
+    seed: u64,
+    mut metric_fn: F,
+) -> Result<Vec<(String, f64)>>
+where
+    F: FnMut(&ParamStore, u64) -> Result<f64>,
+{
+    let mut out = Vec::with_capacity(times.len());
+    for (label, secs) in times {
+        let mut acc = 0.0;
+        for trial in 0..trials {
+            let mut rng = Pcg64::with_stream(seed, 0xd41f7 ^ (trial as u64) << 8);
+            let meta_t = deployment.meta_at(*secs, compensate, &mut rng);
+            acc += metric_fn(&meta_t, seed ^ (trial as u64).wrapping_mul(0xabcd_1234))?;
+        }
+        out.push((label.to_string(), acc / trials as f64));
+    }
+    Ok(out)
+}
+
+/// Convenience: QA F1/EM on a fixed eval set at one weight instance.
+pub struct QaEvalSet {
+    pub tokens: Vec<i32>,
+    pub golds: Vec<(usize, usize)>,
+}
+
+impl QaEvalSet {
+    pub fn generate(task: &crate::data::squad::SquadTask, n: usize, seed: u64) -> QaEvalSet {
+        let mut rng = Pcg64::new(seed);
+        let b = task.batch(n, &mut rng);
+        let golds = b
+            .starts
+            .iter()
+            .zip(&b.ends)
+            .map(|(&s, &e)| (s as usize, e as usize))
+            .collect();
+        QaEvalSet {
+            tokens: b.tokens,
+            golds,
+        }
+    }
+
+    pub fn score(
+        &self,
+        graph: &LoadedGraph,
+        meta: &ParamStore,
+        train: &ParamStore,
+        hw: [f32; 5],
+        seed: u64,
+    ) -> Result<(f64, f64)> {
+        let preds = qa_predict(graph, meta, train, &self.tokens, hw, seed)?;
+        Ok(super::metrics::span_f1_em(&preds, &self.golds))
+    }
+}
+
+/// Shared helper: load a fwd graph and the engine in one call.
+pub fn load_fwd<'e>(engine: &'e Engine, key: &str) -> Result<std::rc::Rc<LoadedGraph>> {
+    engine.load(key)
+}
+
+#[cfg(test)]
+mod probe_tests {
+    use super::*;
+    use crate::data::squad::SquadTask;
+
+    /// Diagnostic: noise sensitivity of the trained table1 checkpoint.
+    #[test]
+    #[ignore]
+    fn probe_noise_sensitivity() {
+        let engine = Engine::from_artifacts().unwrap();
+        let runs = engine.manifest.root.join("runs");
+        let meta = crate::model::checkpoint::load(runs.join("mobilebert_proxy.pretrained.meta.bin")).unwrap();
+        let train = crate::model::checkpoint::load(runs.join("mobilebert_proxy.table1.lora.train.bin")).unwrap();
+        let fwd = engine.load("mobilebert_proxy/fwd_qa").unwrap();
+        let v = engine.manifest.variant("mobilebert_proxy").unwrap().clone();
+        let task = SquadTask::new(v.vocab, v.seq);
+        let eval = QaEvalSet::generate(&task, 128, 3);
+        for noise in [0.0f32, 0.067, 0.15, 0.25, 0.4, 0.6] {
+            // use the graph's own noise path with varying key
+            let hw = [noise, 3.0, 127.0, 127.0, 0.04];
+            let (f1, em) = eval.score(&fwd, &meta, &train, hw, 42).unwrap();
+            eprintln!("noise={noise}: F1 {f1:.2} EM {em:.2}");
+        }
+    }
+}

@@ -1,0 +1,179 @@
+//! Task metrics: SQuAD span F1/EM, accuracy, binary F1, Matthews
+//! correlation, Pearson/Spearman — the exact set the paper reports.
+
+use crate::util::stats;
+
+/// SQuAD-style span scoring: predictions and golds are inclusive token
+/// index ranges. F1 = token-overlap F1, EM = exact span match, both in
+/// percent, averaged over examples.
+pub fn span_f1_em(pred: &[(usize, usize)], gold: &[(usize, usize)]) -> (f64, f64) {
+    assert_eq!(pred.len(), gold.len());
+    if pred.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mut f1_sum = 0.0;
+    let mut em_sum = 0.0;
+    for (&(ps, pe), &(gs, ge)) in pred.iter().zip(gold) {
+        if (ps, pe) == (gs, ge) {
+            em_sum += 1.0;
+        }
+        let (ps, pe) = (ps.min(pe), ps.max(pe));
+        let inter = overlap(ps, pe, gs, ge);
+        if inter > 0 {
+            let p_len = pe - ps + 1;
+            let g_len = ge - gs + 1;
+            let prec = inter as f64 / p_len as f64;
+            let rec = inter as f64 / g_len as f64;
+            f1_sum += 2.0 * prec * rec / (prec + rec);
+        }
+    }
+    let n = pred.len() as f64;
+    (100.0 * f1_sum / n, 100.0 * em_sum / n)
+}
+
+fn overlap(a0: usize, a1: usize, b0: usize, b1: usize) -> usize {
+    let lo = a0.max(b0);
+    let hi = a1.min(b1);
+    hi.saturating_sub(lo) + usize::from(hi >= lo)
+}
+
+/// Classification accuracy in percent.
+pub fn accuracy(pred: &[i32], gold: &[i32]) -> f64 {
+    assert_eq!(pred.len(), gold.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    100.0 * pred.iter().zip(gold).filter(|(p, g)| p == g).count() as f64 / pred.len() as f64
+}
+
+/// Binary F1 (positive class = 1) in percent (MRPC/QQP).
+pub fn binary_f1(pred: &[i32], gold: &[i32]) -> f64 {
+    let tp = count(pred, gold, 1, 1);
+    let fp = count(pred, gold, 1, 0);
+    let fn_ = count(pred, gold, 0, 1);
+    if tp == 0 {
+        return 0.0;
+    }
+    let prec = tp as f64 / (tp + fp) as f64;
+    let rec = tp as f64 / (tp + fn_) as f64;
+    100.0 * 2.0 * prec * rec / (prec + rec)
+}
+
+/// Matthews correlation coefficient ×100 (CoLA).
+pub fn matthews(pred: &[i32], gold: &[i32]) -> f64 {
+    let tp = count(pred, gold, 1, 1) as f64;
+    let tn = count(pred, gold, 0, 0) as f64;
+    let fp = count(pred, gold, 1, 0) as f64;
+    let fn_ = count(pred, gold, 0, 1) as f64;
+    let denom = ((tp + fp) * (tp + fn_) * (tn + fp) * (tn + fn_)).sqrt();
+    if denom == 0.0 {
+        return 0.0;
+    }
+    100.0 * (tp * tn - fp * fn_) / denom
+}
+
+fn count(pred: &[i32], gold: &[i32], p: i32, g: i32) -> usize {
+    pred.iter().zip(gold).filter(|(&a, &b)| a == p && b == g).count()
+}
+
+/// STS-B score: mean of Pearson and Spearman ×100 (GLUE convention).
+pub fn pearson_spearman(pred: &[f64], gold: &[f64]) -> f64 {
+    100.0 * 0.5 * (stats::pearson(pred, gold) + stats::spearman(pred, gold))
+}
+
+/// Argmax over logits row; ties break to the FIRST maximum (keeps
+/// decodes deterministic across refactors).
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, v) in row.iter().enumerate().skip(1) {
+        if *v > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Best legal span (start <= end, bounded window) from start/end logits
+/// — the standard SQuAD decoding rule.
+pub fn best_span(start_logits: &[f32], end_logits: &[f32], max_len: usize) -> (usize, usize) {
+    let s_len = start_logits.len();
+    let mut best = (0usize, 0usize);
+    let mut best_score = f32::NEG_INFINITY;
+    for s in 0..s_len {
+        for e in s..(s + max_len).min(s_len) {
+            let score = start_logits[s] + end_logits[e];
+            if score > best_score {
+                best_score = score;
+                best = (s, e);
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_exact_match() {
+        let (f1, em) = span_f1_em(&[(3, 5)], &[(3, 5)]);
+        assert_eq!((f1, em), (100.0, 100.0));
+    }
+
+    #[test]
+    fn span_partial_overlap() {
+        // pred [3,4], gold [4,5]: inter 1, p_len 2, g_len 2 -> F1 0.5
+        let (f1, em) = span_f1_em(&[(3, 4)], &[(4, 5)]);
+        assert_eq!(em, 0.0);
+        assert!((f1 - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn span_disjoint() {
+        let (f1, em) = span_f1_em(&[(0, 1)], &[(5, 6)]);
+        assert_eq!((f1, em), (0.0, 0.0));
+    }
+
+    #[test]
+    fn accuracy_basic() {
+        assert_eq!(accuracy(&[1, 0, 1, 1], &[1, 0, 0, 1]), 75.0);
+    }
+
+    #[test]
+    fn f1_ignores_true_negatives() {
+        // all-negative predictions on all-negative golds: F1 = 0 by
+        // convention (no positives)
+        assert_eq!(binary_f1(&[0, 0], &[0, 0]), 0.0);
+        assert_eq!(binary_f1(&[1, 1, 0], &[1, 1, 0]), 100.0);
+    }
+
+    #[test]
+    fn matthews_perfect_and_inverse() {
+        assert!((matthews(&[1, 1, 0, 0], &[1, 1, 0, 0]) - 100.0).abs() < 1e-9);
+        assert!((matthews(&[0, 0, 1, 1], &[1, 1, 0, 0]) + 100.0).abs() < 1e-9);
+        assert_eq!(matthews(&[1, 1, 1, 1], &[1, 1, 0, 0]), 0.0);
+    }
+
+    #[test]
+    fn pearson_spearman_perfect() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        assert!((pearson_spearman(&x, &x) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn best_span_respects_order_and_window() {
+        let s = vec![0.0, 5.0, 0.0, 4.0];
+        let e = vec![8.0, 0.0, 4.5, 0.0];
+        // e=0 has a high end logit but (0,0) scores 8 < (1,2)'s 9.5;
+        // ends before the start are never considered.
+        let (bs, be) = best_span(&s, &e, 3);
+        assert!(bs <= be);
+        assert_eq!((bs, be), (1, 2));
+    }
+
+    #[test]
+    fn argmax_ties_first() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0]), 1);
+    }
+}

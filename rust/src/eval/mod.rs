@@ -1,0 +1,10 @@
+//! Evaluation: the metric zoo and the drift-evaluation harness.
+//!
+//! [`metrics`] implements SQuAD F1/EM and the GLUE metric set;
+//! [`drift_eval`] programs a trained model onto the simulated PCM
+//! arrays and measures task metrics across the paper's 0 s – 10 y drift
+//! grid (with global drift compensation), or under plain Gaussian
+//! weight noise for the Table IX/X sweeps.
+
+pub mod drift_eval;
+pub mod metrics;

@@ -1,0 +1,290 @@
+//! Shared experiment machinery: pretraining, adaptation, cached
+//! checkpoints, drift-grid evaluation.
+//!
+//! Every experiment follows the paper's three-step pipeline
+//! (Methods — AHWA-LoRA Training):
+//!
+//! 1. **meta-weight deployment** — a pretrained base model. The image has
+//!    no HF checkpoints, so the base is *digitally pretrained here* on
+//!    the task family (cached under `artifacts/runs/`), standing in for
+//!    "pre-trained MobileBERT/BERT/LLaMA" (DESIGN.md §Substitutions).
+//! 2. **AHWA-LoRA training** — hardware constraints in the forward pass,
+//!    gradients into LoRA (+ digital head) only.
+//! 3. **deployment + drift evaluation** — program onto simulated PCM,
+//!    evaluate over 0 s … 10 y with global drift compensation.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::config::run::{EvalConfig, TrainConfig};
+use crate::data::squad::SquadTask;
+use crate::eval::drift_eval::{pcm_eval_hw, AnalogDeployment, QaEvalSet};
+use crate::model::checkpoint;
+use crate::model::params::{ParamStore, Tensor};
+use crate::pcm::drift::DRIFT_TIMES;
+use crate::pcm::PcmModel;
+use crate::runtime::Engine;
+use crate::train::{OwnedArg, OwnedBatch, Trainer};
+use crate::util::rng::Pcg64;
+
+pub struct Ctx {
+    pub engine: Engine,
+    pub runs_dir: PathBuf,
+    pub results_dir: PathBuf,
+    /// When true, ignore cached checkpoints and retrain.
+    pub fresh: bool,
+}
+
+impl Ctx {
+    pub fn new() -> Result<Ctx> {
+        let engine = Engine::from_artifacts()?;
+        let runs_dir = engine.manifest.root.join("runs");
+        let results_dir = PathBuf::from("results");
+        std::fs::create_dir_all(&runs_dir)?;
+        std::fs::create_dir_all(&results_dir)?;
+        Ok(Ctx {
+            engine,
+            runs_dir,
+            results_dir,
+            fresh: false,
+        })
+    }
+
+    pub fn init_meta(&self, variant: &str) -> Result<ParamStore> {
+        checkpoint::load(self.engine.manifest.init_path(&format!("{variant}.meta")))
+    }
+
+    pub fn init_train(&self, graph_key: &str) -> Result<ParamStore> {
+        let tag = graph_key.replace('/', ".");
+        checkpoint::load(self.engine.manifest.init_path(&format!("{tag}.train")))
+    }
+
+    pub fn save_result(&self, name: &str, markdown: &str) -> Result<()> {
+        let path = self.results_dir.join(format!("{name}.md"));
+        std::fs::write(&path, markdown)?;
+        eprintln!("[exp] wrote {}", path.display());
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Batch providers
+// ---------------------------------------------------------------------------
+
+pub fn qa_batch_fn(task: SquadTask, b: usize) -> impl FnMut(usize, &mut Pcg64) -> OwnedBatch {
+    move |_, rng| {
+        let batch = task.batch(b, rng);
+        OwnedBatch(vec![
+            OwnedArg::I32(batch.tokens),
+            OwnedArg::I32(batch.starts),
+            OwnedArg::I32(batch.ends),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Base-model pretraining (step 1 of the pipeline)
+// ---------------------------------------------------------------------------
+
+/// Extract the `meta.*` tensors of a full-regime trainable tree as a
+/// bare-named meta store; `head.*` tensors become the head store.
+pub fn split_full_tree(train: &ParamStore) -> (ParamStore, ParamStore) {
+    let mut meta = Vec::new();
+    let mut head = Vec::new();
+    for t in &train.tensors {
+        if let Some(bare) = t.name.strip_prefix("meta.") {
+            meta.push(Tensor {
+                name: bare.to_string(),
+                shape: t.shape.clone(),
+                data: t.data.clone(),
+            });
+        } else {
+            head.push(t.clone());
+        }
+    }
+    (ParamStore::from_tensors(meta), ParamStore::from_tensors(head))
+}
+
+/// Graft a head store into a lora-regime trainable tree (keeps LoRA
+/// init, replaces `head.*` values) — used to warm-start adaptation from
+/// the pretrained head.
+pub fn graft_head(train_init: &ParamStore, head: &ParamStore) -> ParamStore {
+    let mut tensors = Vec::new();
+    for t in &train_init.tensors {
+        if t.name.starts_with("head.") {
+            if let Ok(h) = head.get(&t.name) {
+                tensors.push(h.clone());
+                continue;
+            }
+        }
+        tensors.push(t.clone());
+    }
+    ParamStore::from_tensors(tensors)
+}
+
+/// Digitally pretrain the encoder base on the QA task (cached). Returns
+/// (meta, qa_head).
+pub fn pretrained_encoder(ctx: &Ctx, variant: &str, steps: usize) -> Result<(ParamStore, ParamStore)> {
+    let meta_path = ctx.runs_dir.join(format!("{variant}.pretrained.meta.bin"));
+    let head_path = ctx.runs_dir.join(format!("{variant}.pretrained.head.bin"));
+    if !ctx.fresh && meta_path.exists() && head_path.exists() {
+        return Ok((checkpoint::load(&meta_path)?, checkpoint::load(&head_path)?));
+    }
+    eprintln!("[exp] pretraining base '{variant}' ({steps} digital steps)…");
+    let v = ctx.engine.manifest.variant(variant)?.clone();
+    let graph_key = format!("{variant}/step_qa_full");
+    // full graphs take no meta inputs (meta lives in the trainable tree)
+    let empty_meta = ParamStore::default();
+    let mut train0 = ctx.init_train(&graph_key)?;
+    // seed the trainable meta from the exported init
+    let init_meta = ctx.init_meta(variant)?;
+    for t in train0.tensors.iter_mut() {
+        if let Some(bare) = t.name.strip_prefix("meta.") {
+            t.data = init_meta.get(bare)?.data.clone();
+        }
+    }
+    let cfg = TrainConfig {
+        steps,
+        lr: 1e-3,
+        log_every: 100,
+        ..TrainConfig::digital()
+    };
+    let task = SquadTask::new(v.vocab, v.seq);
+    let mut trainer = Trainer::new(&ctx.engine, &graph_key, empty_meta, train0, cfg)?;
+    trainer.run(qa_batch_fn(task, v.train_batch))?;
+    let (meta, head) = split_full_tree(&trainer.train);
+    checkpoint::save(&meta_path, &meta)?;
+    checkpoint::save(&head_path, &head)?;
+    Ok((meta, head))
+}
+
+/// Digitally pretrain a decoder base on mixed LM data (cached).
+pub fn pretrained_decoder(ctx: &Ctx, variant: &str, steps: usize) -> Result<ParamStore> {
+    let meta_path = ctx.runs_dir.join(format!("{variant}.pretrained.meta.bin"));
+    if !ctx.fresh && meta_path.exists() {
+        return Ok(checkpoint::load(&meta_path)?);
+    }
+    eprintln!("[exp] pretraining decoder base '{variant}' ({steps} digital steps)…");
+    let v = ctx.engine.manifest.variant(variant)?.clone();
+    let graph_key = format!("{variant}/step_lm_full");
+    let mut train0 = ctx.init_train(&graph_key)?;
+    let init_meta = ctx.init_meta(variant)?;
+    for t in train0.tensors.iter_mut() {
+        if let Some(bare) = t.name.strip_prefix("meta.") {
+            t.data = init_meta.get(bare)?.data.clone();
+        }
+    }
+    let cfg = TrainConfig {
+        steps,
+        lr: 1e-3,
+        log_every: 100,
+        ..TrainConfig::digital()
+    };
+    let instruct = crate::data::instruct::InstructTask::new(v.vocab, v.seq);
+    let gsm = crate::data::gsm::GsmTask::new(v.seq);
+    let b = v.train_batch;
+    let mut trainer = Trainer::new(&ctx.engine, &graph_key, ParamStore::default(), train0, cfg)?;
+    trainer.run(move |step, rng| {
+        // alternate corpora so the base has both formats
+        let (tokens, mask) = if step % 2 == 0 {
+            instruct.batch(b, rng)
+        } else {
+            gsm.sft_batch(b, rng)
+        };
+        OwnedBatch(vec![OwnedArg::I32(tokens), OwnedArg::F32(mask)])
+    })?;
+    let (meta, _) = split_full_tree(&trainer.train);
+    checkpoint::save(&meta_path, &meta)?;
+    Ok(meta)
+}
+
+// ---------------------------------------------------------------------------
+// Adaptation (step 2) + drift evaluation (step 3)
+// ---------------------------------------------------------------------------
+
+/// AHWA-LoRA adaptation on the QA task; cached under `cache_tag`.
+pub fn adapt_lora_qa(
+    ctx: &Ctx,
+    graph_key: &str,
+    meta: &ParamStore,
+    head: &ParamStore,
+    cfg: &TrainConfig,
+    cache_tag: &str,
+) -> Result<ParamStore> {
+    let path = ctx.runs_dir.join(format!("{cache_tag}.train.bin"));
+    if !ctx.fresh && path.exists() {
+        return Ok(checkpoint::load(&path)?);
+    }
+    let variant = graph_key.split('/').next().unwrap();
+    let v = ctx.engine.manifest.variant(variant)?.clone();
+    let train0 = graft_head(&ctx.init_train(graph_key)?, head);
+    let task = SquadTask::new(v.vocab, v.seq);
+    let mut trainer = Trainer::new(&ctx.engine, graph_key, meta.clone(), train0, cfg.clone())?;
+    trainer.run(qa_batch_fn(task, v.train_batch))?;
+    if trainer.collapsed() {
+        anyhow::bail!("training collapsed");
+    }
+    checkpoint::save(&path, &trainer.train)?;
+    Ok(trainer.train.clone())
+}
+
+/// Drift-grid QA evaluation of a (meta, adapter) pair.
+pub fn qa_drift_grid(
+    ctx: &Ctx,
+    fwd_key: &str,
+    meta: ParamStore,
+    train: &ParamStore,
+    ecfg: &EvalConfig,
+    hw: [f32; 5],
+) -> Result<Vec<(String, f64, f64)>> {
+    let fwd = ctx.engine.load(fwd_key)?;
+    let variant = fwd_key.split('/').next().unwrap();
+    let v = ctx.engine.manifest.variant(variant)?.clone();
+    let task = SquadTask::new(v.vocab, v.seq);
+    let eval_set = QaEvalSet::generate(&task, ecfg.examples, ecfg.seed);
+
+    let mut prog_rng = Pcg64::with_stream(ecfg.seed, 0x9209);
+    let dep = AnalogDeployment::program(meta, PcmModel::default(), hw[1].max(0.0), &mut prog_rng);
+
+    let mut out = Vec::new();
+    for (label, secs) in DRIFT_TIMES {
+        let (mut f1s, mut ems) = (0.0, 0.0);
+        for trial in 0..ecfg.trials {
+            let mut rng = Pcg64::with_stream(ecfg.seed, 0xd217 ^ ((trial as u64) << 9));
+            let meta_t = dep.meta_at(secs, ecfg.compensate, &mut rng);
+            let eval_hw = pcm_eval_hw(hw[2], hw[3], hw[4]);
+            let (f1, em) = eval_set.score(&fwd, &meta_t, train, eval_hw, ecfg.seed ^ trial as u64)?;
+            f1s += f1;
+            ems += em;
+        }
+        out.push((
+            label.to_string(),
+            f1s / ecfg.trials as f64,
+            ems / ecfg.trials as f64,
+        ));
+    }
+    Ok(out)
+}
+
+/// Digital (no hardware) QA score.
+pub fn qa_digital(
+    ctx: &Ctx,
+    fwd_key: &str,
+    meta: &ParamStore,
+    train: &ParamStore,
+    ecfg: &EvalConfig,
+) -> Result<(f64, f64)> {
+    let fwd = ctx.engine.load(fwd_key)?;
+    let variant = fwd_key.split('/').next().unwrap();
+    let v = ctx.engine.manifest.variant(variant)?.clone();
+    let task = SquadTask::new(v.vocab, v.seq);
+    let eval_set = QaEvalSet::generate(&task, ecfg.examples, ecfg.seed);
+    eval_set.score(&fwd, meta, train, [0.0; 5], ecfg.seed)
+}
+
+/// Default hw vector for PCM-backed inference at given bit widths.
+pub fn infer_hw(dac_bits: u32, adc_bits: u32, clip_sigma: f32, adc_noise: f32) -> [f32; 5] {
+    let lv = |b: u32| if b == 0 { 0.0 } else { ((1u32 << (b - 1)) - 1) as f32 };
+    [0.0, clip_sigma, lv(dac_bits), lv(adc_bits), adc_noise]
+}

@@ -1,0 +1,91 @@
+//! Figure 2 — LoRA resource-allocation studies on the MobileBERT proxy.
+//!
+//! * `rank_pareto` (Fig. 2a): F1 vs adapter memory for r ∈ {1,2,4,8,16}
+//!   across drift times — diminishing returns with a knee at r = 8.
+//! * `placement` (Fig. 2b): adapters on {all, FFN-only, QKV-only}
+//!   linears — "all" wins at every drift time.
+
+use anyhow::Result;
+
+use crate::config::manifest::Role;
+use crate::config::run::{EvalConfig, TrainConfig};
+use crate::util::cli::Args;
+use crate::util::table::{f, Table};
+
+use super::common::{adapt_lora_qa, infer_hw, pretrained_encoder, qa_drift_grid, Ctx};
+
+fn study(
+    args: &Args,
+    title: &str,
+    result_name: &str,
+    configs: &[(&str, String)], // (label, graph suffix e.g. "@r4" / "")
+) -> Result<()> {
+    let ctx = Ctx::new()?;
+    let variant = args.str("variant", "mobilebert_proxy");
+    let steps = args.usize("steps", 200);
+    let ecfg = EvalConfig::from_args(args);
+    let hw = infer_hw(8, 8, 3.0, 0.04);
+    let (meta, head) = pretrained_encoder(&ctx, &variant, args.usize("pretrain-steps", 400))?;
+
+    let mut t = Table::new(
+        title,
+        &["config", "LoRA params (K)", "0s", "1h", "1d", "1w", "1m", "1y", "10y"],
+    );
+    for (label, suffix) in configs {
+        let step_key = format!("{variant}/step_qa_lora{suffix}");
+        let fwd_key = format!("{variant}/fwd_qa{suffix}");
+        let cfg = TrainConfig {
+            steps,
+            ..TrainConfig::from_args(args)
+        };
+        let train = adapt_lora_qa(
+            &ctx,
+            &step_key,
+            &meta,
+            &head,
+            &cfg,
+            &format!("{variant}.{result_name}.{}", label.replace(['=', ' '], "_")),
+        )?;
+        // adapter budget: lora tensors only (heads are task-owned)
+        let spec = ctx.engine.manifest.graph(&step_key)?;
+        let lora_params: usize = spec
+            .inputs_with_role(Role::Train)
+            .filter(|io| io.name.starts_with("lora."))
+            .map(|io| io.numel())
+            .sum();
+        let grid = qa_drift_grid(&ctx, &fwd_key, meta.clone(), &train, &ecfg, hw)?;
+        let mut row = vec![label.to_string(), f(lora_params as f64 / 1e3, 1)];
+        row.extend(grid.iter().map(|(_, f1, _)| f(*f1, 2)));
+        t.row(row);
+    }
+    t.print();
+    Ctx::new()?.save_result(result_name, &t.render())
+}
+
+pub fn rank_pareto(args: &Args) -> Result<()> {
+    study(
+        args,
+        "Fig. 2a — F1 vs LoRA rank over drift (Pareto study)",
+        "fig2a",
+        &[
+            ("r=1", "@r1".into()),
+            ("r=2", "@r2".into()),
+            ("r=4", "@r4".into()),
+            ("r=8", "".into()),
+            ("r=16", "@r16".into()),
+        ],
+    )
+}
+
+pub fn placement(args: &Args) -> Result<()> {
+    study(
+        args,
+        "Fig. 2b — LoRA placement over drift",
+        "fig2b",
+        &[
+            ("all", "".into()),
+            ("ffn", "@ffn".into()),
+            ("qkv", "@qkv".into()),
+        ],
+    )
+}

@@ -1,0 +1,115 @@
+//! Figure 3 — dynamic adaptation (a) and scalability (b).
+
+use anyhow::Result;
+
+use crate::config::run::{EvalConfig, TrainConfig};
+use crate::util::cli::Args;
+use crate::util::table::{f, Table};
+
+use super::common::{adapt_lora_qa, infer_hw, pretrained_encoder, qa_drift_grid, Ctx};
+
+/// Fig. 3a — the ADC degrades from 8-bit to 6-bit in the field; weights
+/// on the tiles CANNOT be retrained, but re-training only the LoRA
+/// weights off-chip and reloading them ("LoRA weight reloading")
+/// recovers most of the loss.
+pub fn dynamic_adaptation(args: &Args) -> Result<()> {
+    let ctx = Ctx::new()?;
+    let variant = args.str("variant", "mobilebert_proxy");
+    let steps = args.usize("steps", 200);
+    let ecfg = EvalConfig::from_args(args);
+    let (meta, head) = pretrained_encoder(&ctx, &variant, args.usize("pretrain-steps", 400))?;
+    let fwd_key = format!("{variant}/fwd_qa");
+    let step_key = format!("{variant}/step_qa_lora");
+
+    // (1) adapters trained for the healthy 8-bit ADC
+    let cfg8 = TrainConfig {
+        steps,
+        ..TrainConfig::from_args(args)
+    };
+    let train8 = adapt_lora_qa(&ctx, &step_key, &meta, &head, &cfg8, &format!("{variant}.fig3a.8bit"))?;
+
+    // (2) same adapters evaluated on the degraded 6-bit ADC
+    let hw8 = infer_hw(8, 8, 3.0, 0.04);
+    let hw6 = infer_hw(8, 6, 3.0, 0.04);
+    let grid8 = qa_drift_grid(&ctx, &fwd_key, meta.clone(), &train8, &ecfg, hw8)?;
+    let grid6_stale = qa_drift_grid(&ctx, &fwd_key, meta.clone(), &train8, &ecfg, hw6)?;
+
+    // (3) LoRA reloading: retrain ONLY the adapters at 6-bit, same meta
+    let cfg6 = TrainConfig {
+        steps,
+        adc_bits: 6,
+        ..TrainConfig::from_args(args)
+    };
+    let train6 = adapt_lora_qa(&ctx, &step_key, &meta, &head, &cfg6, &format!("{variant}.fig3a.6bit"))?;
+    let grid6_reload = qa_drift_grid(&ctx, &fwd_key, meta.clone(), &train6, &ecfg, hw6)?;
+
+    let mut t = Table::new(
+        "Fig. 3a — dynamic adaptation to ADC degradation (F1)",
+        &["config", "0s", "1h", "1d", "1w", "1m", "1y", "10y"],
+    );
+    for (label, grid) in [
+        ("8-bit ADC (trained@8)", &grid8),
+        ("6-bit ADC (stale LoRA)", &grid6_stale),
+        ("6-bit ADC (LoRA reloaded*)", &grid6_reload),
+    ] {
+        let mut row = vec![label.to_string()];
+        row.extend(grid.iter().map(|(_, f1, _)| f(*f1, 2)));
+        t.row(row);
+    }
+    t.print();
+    let recovered = grid6_reload.last().unwrap().1 - grid6_stale.last().unwrap().1;
+    println!("LoRA reloading recovers {recovered:+.2} F1 at 10y (paper: 60.81 -> 74.23)\n");
+    ctx.save_result("fig3a", &t.render())
+}
+
+/// Fig. 3b — scalability across the encoder family: larger models score
+/// higher AND degrade less under 10-year drift.
+pub fn scalability(args: &Args) -> Result<()> {
+    let ctx = Ctx::new()?;
+    let steps = args.usize("steps", 200);
+    let ecfg = EvalConfig::from_args(args);
+    let hw = infer_hw(8, 8, 3.0, 0.04);
+
+    let mut t = Table::new(
+        "Fig. 3b — scalability (F1 over drift)",
+        &["model", "params (M)", "LoRA (K)", "0s", "1y", "10y", "drop 0s->10y"],
+    );
+    let mut drops = Vec::new();
+    for variant in ["mobilebert_proxy", "bert_base_proxy", "bert_large_proxy"] {
+        let (meta, head) = pretrained_encoder(&ctx, variant, args.usize("pretrain-steps", 400))?;
+        let cfg = TrainConfig {
+            steps,
+            ..TrainConfig::from_args(args)
+        };
+        let train = adapt_lora_qa(
+            &ctx,
+            &format!("{variant}/step_qa_lora"),
+            &meta,
+            &head,
+            &cfg,
+            &format!("{variant}.fig3b"),
+        )?;
+        let grid = qa_drift_grid(&ctx, &format!("{variant}/fwd_qa"), meta.clone(), &train, &ecfg, hw)?;
+        let f1_at = |label: &str| grid.iter().find(|(l, _, _)| l == label).unwrap().1;
+        let drop = f1_at("0s") - f1_at("10y");
+        drops.push(drop);
+        let spec = ctx.engine.manifest.graph(&format!("{variant}/step_qa_lora"))?;
+        let total = meta.numel() + spec.param_count(crate::config::manifest::Role::Train);
+        let lora: usize = spec
+            .inputs_with_role(crate::config::manifest::Role::Train)
+            .filter(|io| io.name.starts_with("lora."))
+            .map(|io| io.numel())
+            .sum();
+        t.row(vec![
+            variant.to_string(),
+            f(total as f64 / 1e6, 2),
+            f(lora as f64 / 1e3, 1),
+            f(f1_at("0s"), 2),
+            f(f1_at("1y"), 2),
+            f(f1_at("10y"), 2),
+            f(drop, 2),
+        ]);
+    }
+    t.print();
+    ctx.save_result("fig3b", &t.render())
+}

@@ -1,0 +1,97 @@
+//! Figure 4 — AIMC ⇄ PMCA latency analysis (pure simulator study; this
+//! is the paper's hardware-codesign evaluation and runs entirely on the
+//! pmca/pipeline substrates).
+
+use anyhow::Result;
+
+use crate::pipeline::balance::{best, sweep};
+use crate::pipeline::schedule::{INTEGRATION_TIMES_NS, TOKEN_PARALLELISM};
+use crate::pmca::cluster::SnitchCluster;
+use crate::pmca::kernels::LoraWorkload;
+use crate::pmca::redmule::RedMulE;
+use crate::pmca::tcdm;
+use crate::util::cli::Args;
+use crate::util::table::{f, Table};
+
+use super::common::Ctx;
+
+/// The two MobileBERT layer slices the paper studies.
+pub const LAYERS: [(&str, usize, usize); 2] = [("128x128", 128, 128), ("512x128", 512, 128)];
+const SEQ: usize = 320; // paper SL
+
+pub fn latency_balance(args: &Args) -> Result<()> {
+    let ctx = Ctx::new()?;
+    let rank = args.usize("rank", 8);
+    let (c, e) = (SnitchCluster::default(), RedMulE::default());
+    let mut t = Table::new(
+        "Fig. 4a — AIMC vs PMCA latency per token batch",
+        &["layer", "T_int (ns)", "t", "AIMC (µs)", "PMCA (µs)", "PMCA/AIMC"],
+    );
+    for (name, m, n) in LAYERS {
+        for t_int in INTEGRATION_TIMES_NS {
+            for &tok in &TOKEN_PARALLELISM {
+                let w = LoraWorkload { m, n, r: rank, t: tok };
+                let p = crate::pipeline::schedule::pipeline_latency(&w, t_int, SEQ, &c, &e);
+                t.row(vec![
+                    name.to_string(),
+                    f(t_int, 0),
+                    tok.to_string(),
+                    f(p.aimc_ns / 1e3, 2),
+                    f(p.pmca_ns / 1e3, 2),
+                    f(p.ratio(), 2),
+                ]);
+            }
+        }
+    }
+    t.print();
+    ctx.save_result("fig4a", &t.render())
+}
+
+pub fn tcdm(args: &Args) -> Result<()> {
+    let ctx = Ctx::new()?;
+    let rank = args.usize("rank", 8);
+    let c = SnitchCluster::default();
+    let mut t = Table::new(
+        "Fig. 4b — PMCA TCDM requirement vs parallel tokens",
+        &["layer", "t", "TCDM (KiB)", "fits 128 KiB?"],
+    );
+    for (name, m, n) in LAYERS {
+        for &tok in &TOKEN_PARALLELISM {
+            let w = LoraWorkload { m, n, r: rank, t: tok };
+            let fp = tcdm::footprint(&w);
+            t.row(vec![
+                name.to_string(),
+                tok.to_string(),
+                f(fp.kib(), 1),
+                if tcdm::fits(&w, &c) { "yes".into() } else { "NO (spill)".into() },
+            ]);
+        }
+    }
+    t.print();
+    ctx.save_result("fig4b", &t.render())
+}
+
+pub fn total_latency(args: &Args) -> Result<()> {
+    let ctx = Ctx::new()?;
+    let rank = args.usize("rank", 8);
+    let (c, e) = (SnitchCluster::default(), RedMulE::default());
+    let mut t = Table::new(
+        "Fig. 4c — total latency for SL=320 (balanced pipeline) vs AIMC-only",
+        &["layer", "T_int (ns)", "best t", "AIMC-only (µs)", "AHWA-LoRA (µs)", "overhead %"],
+    );
+    for (name, m, n) in LAYERS {
+        for t_int in INTEGRATION_TIMES_NS {
+            let b = best(&sweep(m, n, rank, t_int, SEQ, &c, &e));
+            t.row(vec![
+                name.to_string(),
+                f(t_int, 0),
+                b.t.to_string(),
+                f(b.latency.baseline_ns / 1e3, 2),
+                f(b.latency.steady_ns / 1e3, 2),
+                f(100.0 * b.latency.overhead(), 2),
+            ]);
+        }
+    }
+    t.print();
+    ctx.save_result("fig4c", &t.render())
+}

@@ -1,0 +1,408 @@
+//! Decoder-LLM experiments (LLaMA-3.1-8B proxy): instruction tuning
+//! (Table IV), GRPO reinforcement learning (Table V), and the
+//! noise-robustness sweeps (Supp. Tables IX/X).
+//!
+//! Following the paper's LLaMA protocol: all linear layers noisy, NO
+//! weight clipping, NO explicit DAC/ADC modeling; training noise 6.7 %
+//! (SFT) / 3.0 % (RL); evaluation applies fixed Gaussian weight noise
+//! per trial, or the full PCM model at 0 s drift.
+
+use anyhow::Result;
+
+use crate::aimc::tile::is_mappable;
+use crate::config::run::TrainConfig;
+use crate::data::instruct::{Instruction, InstructTask, ALL_INSTRUCTIONS};
+use crate::data::tokenizer::{EOS, ESOL, PAD, SEP};
+use crate::eval::drift_eval::{fwd_batch_shape, lm_logits, AnalogDeployment};
+use crate::model::params::ParamStore;
+use crate::pcm::PcmModel;
+use crate::rl::grpo::GrpoTrainer;
+use crate::rl::reward::score;
+use crate::runtime::LoadedGraph;
+use crate::train::{OwnedArg, OwnedBatch, Trainer};
+use crate::util::cli::Args;
+use crate::util::rng::Pcg64;
+use crate::util::table::{f, Table};
+
+use super::common::{pretrained_decoder, Ctx};
+
+const VARIANT: &str = "llama_proxy";
+
+/// Fixed Gaussian weight perturbation on the mappable (analog) tensors:
+/// the paper's LLM evaluation protocol (noise relative to max|w|).
+pub fn gaussian_meta(meta: &ParamStore, level: f64, rng: &mut Pcg64) -> ParamStore {
+    let mut out = meta.clone();
+    if level <= 0.0 {
+        return out;
+    }
+    for t in out.tensors.iter_mut() {
+        if is_mappable(&t.name) && t.shape.len() == 2 {
+            let amp = level as f32 * t.data.iter().fold(0f32, |m, x| m.max(x.abs()));
+            for v in t.data.iter_mut() {
+                *v += amp * rng.normal_f32();
+            }
+        }
+    }
+    out
+}
+
+/// Zero-LoRA trainable tree for the fwd graph (B=0 ⇒ exactly the base).
+fn zero_lora(ctx: &Ctx, variant: &str) -> Result<ParamStore> {
+    let mut train = ctx.init_train(&format!("{variant}/step_lm_lora"))?;
+    for t in train.tensors.iter_mut() {
+        if t.name.ends_with("_b") {
+            t.data.iter_mut().for_each(|x| *x = 0.0);
+        }
+    }
+    Ok(train)
+}
+
+// ---------------------------------------------------------------------------
+// Batched greedy decoding (evaluation path)
+// ---------------------------------------------------------------------------
+
+/// Greedy-decode many prompts at once through the fixed-batch fwd graph.
+pub fn batched_greedy(
+    graph: &LoadedGraph,
+    meta: &ParamStore,
+    train: &ParamStore,
+    prompts: &[Vec<i32>],
+    max_new: usize,
+    seed: u64,
+) -> Result<Vec<Vec<i32>>> {
+    let (b, s) = fwd_batch_shape(graph);
+    let vocab = graph.spec.outputs[0].shape[2];
+    let mut out = Vec::with_capacity(prompts.len());
+    let mut done = 0;
+    while done < prompts.len() {
+        let take = (prompts.len() - done).min(b);
+        let mut buf = vec![PAD; b * s];
+        let mut len = vec![0usize; take];
+        for (row, p) in prompts[done..done + take].iter().enumerate() {
+            let l = p.len().min(s - 1);
+            buf[row * s..row * s + l].copy_from_slice(&p[..l]);
+            len[row] = l;
+        }
+        let mut alive = vec![true; take];
+        for _ in 0..max_new {
+            if !alive.iter().any(|&a| a) {
+                break;
+            }
+            let logits = lm_logits(graph, meta, train, &buf, [0.0; 5], seed)?;
+            for row in 0..take {
+                if !alive[row] {
+                    continue;
+                }
+                let off = (row * s + len[row] - 1) * vocab;
+                let tok = crate::eval::metrics::argmax(&logits[off..off + vocab]) as i32;
+                buf[row * s + len[row]] = tok;
+                len[row] += 1;
+                if tok == ESOL || tok == EOS || len[row] >= s {
+                    alive[row] = false;
+                }
+            }
+        }
+        for row in 0..take {
+            let p = prompts[done + row].len().min(s - 1);
+            out.push(buf[row * s + p..row * s + len[row]].to_vec());
+        }
+        done += take;
+    }
+    Ok(out)
+}
+
+/// Zero-shot suite accuracy: greedy exact-match of the expected
+/// transform response (response compared up to EOS).
+fn suite_accuracy(
+    ctx: &Ctx,
+    meta: &ParamStore,
+    train: &ParamStore,
+    kind: Instruction,
+    n: usize,
+    seed: u64,
+) -> Result<f64> {
+    let fwd = ctx.engine.load(&format!("{VARIANT}/fwd_lm"))?;
+    let v = ctx.engine.manifest.variant(VARIANT)?.clone();
+    let task = InstructTask::new(v.vocab, v.seq);
+    let mut rng = Pcg64::with_stream(seed, kind.type_token() as u64);
+    let mut prompts = Vec::with_capacity(n);
+    let mut expected = Vec::with_capacity(n);
+    for _ in 0..n {
+        let ex = task.example(kind, &mut rng);
+        // prompt = everything through [SEP]
+        let sep = ex.tokens.iter().position(|&t| t == SEP).unwrap();
+        prompts.push(ex.tokens[..=sep].to_vec());
+        expected.push(ex.response);
+    }
+    let decoded = batched_greedy(&fwd, meta, train, &prompts, task.src_len + 2, seed)?;
+    let mut ok = 0;
+    for (d, e) in decoded.iter().zip(&expected) {
+        let d_trim: Vec<i32> = d.iter().copied().take_while(|&t| t != EOS).collect();
+        if d_trim == *e {
+            ok += 1;
+        }
+    }
+    Ok(100.0 * ok as f64 / n as f64)
+}
+
+/// GSM accuracy via batched greedy decoding.
+pub fn gsm_accuracy(
+    ctx: &Ctx,
+    meta: &ParamStore,
+    train: &ParamStore,
+    n: usize,
+    seed: u64,
+) -> Result<f64> {
+    let fwd = ctx.engine.load(&format!("{VARIANT}/fwd_lm"))?;
+    let v = ctx.engine.manifest.variant(VARIANT)?.clone();
+    let task = crate::data::gsm::GsmTask::new(v.seq);
+    let mut rng = Pcg64::new(seed);
+    let problems: Vec<_> = (0..n).map(|_| task.problem(&mut rng)).collect();
+    let prompts: Vec<Vec<i32>> = problems.iter().map(|p| p.prompt.clone()).collect();
+    let decoded = batched_greedy(&fwd, meta, train, &prompts, 14, seed)?;
+    let correct = decoded
+        .iter()
+        .zip(&problems)
+        .filter(|(d, p)| score(d, p.answer()).answer_exact > 0.0)
+        .count();
+    Ok(100.0 * correct as f64 / n as f64)
+}
+
+// ---------------------------------------------------------------------------
+// Adaptation runs (cached)
+// ---------------------------------------------------------------------------
+
+/// AHWA-LoRA instruction tuning (SFT) at the given training noise.
+fn sft_lora(ctx: &Ctx, meta: &ParamStore, noise: f64, steps: usize, tag: &str) -> Result<ParamStore> {
+    let cache = ctx.runs_dir.join(format!("{VARIANT}.{tag}.train.bin"));
+    if !ctx.fresh && cache.exists() {
+        return Ok(crate::model::checkpoint::load(&cache)?);
+    }
+    eprintln!("[llm] SFT '{tag}' ({steps} steps, noise {noise})…");
+    let v = ctx.engine.manifest.variant(VARIANT)?.clone();
+    let cfg = TrainConfig {
+        steps,
+        lr: 2e-4,
+        weight_decay: 0.01,
+        warmup: 5,
+        weight_noise: noise,
+        adc_noise: 0.0,
+        clip_sigma: 0.0,
+        dac_bits: 0,
+        adc_bits: 0,
+        log_every: 50,
+        ..Default::default()
+    };
+    let task = InstructTask::new(v.vocab, v.seq);
+    let b = v.train_batch;
+    let train0 = ctx.init_train(&format!("{VARIANT}/step_lm_lora"))?;
+    let mut trainer = Trainer::new(&ctx.engine, &format!("{VARIANT}/step_lm_lora"), meta.clone(), train0, cfg)?;
+    trainer.run(move |_, rng| {
+        let (tokens, mask) = task.batch(b, rng);
+        OwnedBatch(vec![OwnedArg::I32(tokens), OwnedArg::F32(mask)])
+    })?;
+    crate::model::checkpoint::save(&cache, &trainer.train)?;
+    Ok(trainer.train.clone())
+}
+
+/// GRPO run at the given training noise (cached).
+fn grpo_lora(ctx: &Ctx, meta: &ParamStore, noise: f64, steps: usize, tag: &str) -> Result<ParamStore> {
+    let cache = ctx.runs_dir.join(format!("{VARIANT}.{tag}.train.bin"));
+    if !ctx.fresh && cache.exists() {
+        return Ok(crate::model::checkpoint::load(&cache)?);
+    }
+    eprintln!("[llm] GRPO '{tag}' ({steps} steps, noise {noise})…");
+    let cfg = TrainConfig {
+        steps,
+        lr: 5e-4, // proxy-scale counterpart of the paper's 5e-6
+        weight_decay: 0.1,
+        warmup: steps / 10,
+        weight_noise: noise,
+        adc_noise: 0.0,
+        clip_sigma: 0.0,
+        dac_bits: 0,
+        adc_bits: 0,
+        log_every: 10,
+        ..Default::default()
+    };
+    let train0 = ctx.init_train(&format!("{VARIANT}/step_grpo_lora"))?;
+    let mut trainer = GrpoTrainer::new(&ctx.engine, VARIANT, meta.clone(), train0, cfg)?;
+    trainer.run()?;
+    crate::model::checkpoint::save(&cache, &trainer.train)?;
+    Ok(trainer.train.clone())
+}
+
+// ---------------------------------------------------------------------------
+// Tables
+// ---------------------------------------------------------------------------
+
+/// Table IV — zero-shot suites: digital vs analog-pre vs analog-post.
+pub fn table4(args: &Args) -> Result<()> {
+    let ctx = Ctx::new()?;
+    let steps = args.usize("steps", 150);
+    let n = args.usize("examples", 48);
+    let trials = args.usize("trials", 2);
+    let noise = args.f64("noise", 0.067);
+    let meta = pretrained_decoder(&ctx, VARIANT, args.usize("pretrain-steps", 500))?;
+    let base_train = zero_lora(&ctx, VARIANT)?;
+    let sft = sft_lora(&ctx, &meta, noise, steps, "table4.sft")?;
+
+    let mut t = Table::new(
+        "Table IV — zero-shot suite accuracy (%): digital / analog-pre / analog-post",
+        &["Model Variant", "copy-suite", "reverse-suite", "map-suite"],
+    );
+    let eval_row = |label: &str,
+                    m: &dyn Fn(&mut Pcg64) -> ParamStore,
+                    train: &ParamStore,
+                    avg_trials: usize|
+     -> Result<Vec<String>> {
+        let mut row = vec![label.to_string()];
+        for kind in ALL_INSTRUCTIONS {
+            let mut acc = 0.0;
+            for trial in 0..avg_trials {
+                let mut rng = Pcg64::with_stream(404, trial as u64);
+                let meta_t = m(&mut rng);
+                acc += suite_accuracy(&ctx, &meta_t, train, kind, n, 404 + trial as u64)?;
+            }
+            row.push(f(acc / avg_trials as f64, 1));
+        }
+        Ok(row)
+    };
+    t.row(eval_row("Digital (baseline)", &|_| meta.clone(), &base_train, 1)?);
+    t.row(eval_row(
+        "Analog (pre-AHWA-LoRA)",
+        &|rng| gaussian_meta(&meta, noise, rng),
+        &base_train,
+        trials,
+    )?);
+    t.row(eval_row(
+        "Analog (post-AHWA-LoRA)",
+        &|rng| gaussian_meta(&meta, noise, rng),
+        &sft,
+        trials,
+    )?);
+    t.print();
+    ctx.save_result("table4", &t.render())
+}
+
+/// Table V — GSM accuracy: digital pre/post-LoRA vs analog pre/post.
+pub fn table5(args: &Args) -> Result<()> {
+    let ctx = Ctx::new()?;
+    let steps = args.usize("rl-steps", 40);
+    let n = args.usize("examples", 64);
+    let trials = args.usize("trials", 2);
+    let noise = args.f64("rl-noise", 0.03);
+    let meta = pretrained_decoder(&ctx, VARIANT, args.usize("pretrain-steps", 500))?;
+    let base_train = zero_lora(&ctx, VARIANT)?;
+
+    let digital_post = grpo_lora(&ctx, &meta, 0.0, steps, "table5.grpo.digital")?;
+    let analog_post = grpo_lora(&ctx, &meta, noise, steps, "table5.grpo.analog")?;
+
+    let digital_pre = gsm_accuracy(&ctx, &meta, &base_train, n, 505)?;
+    let digital_post_acc = gsm_accuracy(&ctx, &meta, &digital_post, n, 505)?;
+    let noisy_eval = |train: &ParamStore| -> Result<f64> {
+        let mut acc = 0.0;
+        for trial in 0..trials {
+            let mut rng = Pcg64::with_stream(515, trial as u64);
+            let meta_t = gaussian_meta(&meta, noise, &mut rng);
+            acc += gsm_accuracy(&ctx, &meta_t, train, n, 505 + trial as u64)?;
+        }
+        Ok(acc / trials as f64)
+    };
+    let analog_pre = noisy_eval(&base_train)?;
+    let analog_post_acc = noisy_eval(&analog_post)?;
+
+    let mut t = Table::new(
+        "Table V — GSM accuracy (%) with CoT format",
+        &["Benchmark", "Dig. Pre-LoRA", "Dig. Post-LoRA", "Analog Pre", "Analog Post"],
+    );
+    t.row(vec![
+        "GSM-synthetic".into(),
+        f(digital_pre, 2),
+        f(digital_post_acc, 2),
+        f(analog_pre, 2),
+        f(analog_post_acc, 2),
+    ]);
+    t.print();
+    ctx.save_result("table5", &t.render())
+}
+
+/// Supp. Table IX — suite accuracy vs inference noise level (+ PCM 0s).
+pub fn table9(args: &Args) -> Result<()> {
+    let ctx = Ctx::new()?;
+    let n = args.usize("examples", 48);
+    let trials = args.usize("trials", 2);
+    let meta = pretrained_decoder(&ctx, VARIANT, args.usize("pretrain-steps", 500))?;
+    let sft = sft_lora(&ctx, &meta, 0.067, args.usize("steps", 150), "table4.sft")?;
+
+    let levels = [0.0, 0.01, 0.02, 0.03, 0.04, 0.05, 0.06, 0.067];
+    let mut hdr: Vec<String> = vec!["suite".into()];
+    hdr.extend(levels.iter().map(|l| format!("{:.1}%", l * 100.0)));
+    hdr.push("PCM(0s)".into());
+    let mut t = Table::new(
+        "Supp. Table IX — accuracy vs inference noise (trained at 6.7%)",
+        &hdr.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    let kind = Instruction::Copy; // the paper's HellaSwag analogue
+    let mut row = vec![kind.name().to_string()];
+    for level in levels {
+        let mut acc = 0.0;
+        for trial in 0..trials {
+            let mut rng = Pcg64::with_stream(909, trial as u64);
+            let meta_t = gaussian_meta(&meta, level, &mut rng);
+            acc += suite_accuracy(&ctx, &meta_t, &sft, kind, n, 909 + trial as u64)?;
+        }
+        row.push(f(acc / trials as f64, 1));
+    }
+    // full PCM statistical model at zero drift (no clipping: paper LLM protocol)
+    let mut acc = 0.0;
+    for trial in 0..trials {
+        let mut rng = Pcg64::with_stream(919, trial as u64);
+        let dep = AnalogDeployment::program(meta.clone(), PcmModel::default(), 0.0, &mut rng);
+        let meta_t = dep.meta_at(0.0, true, &mut rng);
+        acc += suite_accuracy(&ctx, &meta_t, &sft, kind, n, 919 + trial as u64)?;
+    }
+    row.push(f(acc / trials as f64, 1));
+    t.row(row);
+    t.print();
+    ctx.save_result("table9", &t.render())
+}
+
+/// Supp. Table X — GSM accuracy vs inference noise (+ PCM 0s).
+pub fn table10(args: &Args) -> Result<()> {
+    let ctx = Ctx::new()?;
+    let n = args.usize("examples", 64);
+    let trials = args.usize("trials", 2);
+    let meta = pretrained_decoder(&ctx, VARIANT, args.usize("pretrain-steps", 500))?;
+    let analog_post = grpo_lora(&ctx, &meta, 0.03, args.usize("rl-steps", 40), "table5.grpo.analog")?;
+
+    let levels = [0.0, 0.01, 0.02, 0.03];
+    let mut hdr: Vec<String> = vec!["benchmark".into()];
+    hdr.extend(levels.iter().map(|l| format!("{:.1}%", l * 100.0)));
+    hdr.push("PCM(0s)".into());
+    let mut t = Table::new(
+        "Supp. Table X — GSM accuracy vs inference noise (trained at 3.0%)",
+        &hdr.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    let mut row = vec!["GSM-synthetic".to_string()];
+    for level in levels {
+        let mut acc = 0.0;
+        for trial in 0..trials {
+            let mut rng = Pcg64::with_stream(1010, trial as u64);
+            let meta_t = gaussian_meta(&meta, level, &mut rng);
+            acc += gsm_accuracy(&ctx, &meta_t, &analog_post, n, 1010 + trial as u64)?;
+        }
+        row.push(f(acc / trials as f64, 2));
+    }
+    let mut acc = 0.0;
+    for trial in 0..trials {
+        let mut rng = Pcg64::with_stream(1020, trial as u64);
+        let dep = AnalogDeployment::program(meta.clone(), PcmModel::default(), 0.0, &mut rng);
+        let meta_t = dep.meta_at(0.0, true, &mut rng);
+        acc += gsm_accuracy(&ctx, &meta_t, &analog_post, n, 1020 + trial as u64)?;
+    }
+    row.push(f(acc / trials as f64, 2));
+    t.row(row);
+    t.print();
+    ctx.save_result("table10", &t.render())
+}

@@ -1,0 +1,67 @@
+//! One driver per paper table/figure (DESIGN.md §Experiment index).
+//!
+//! Run via the CLI: `ahwa-lora exp <id>` where `<id>` ∈
+//! {table1, table2, table3, table4, table5, table6, table7, table8,
+//!  table9, table10, fig2a, fig2b, fig3a, fig3b, fig4a, fig4b, fig4c,
+//!  e2e, all}. Results print as markdown and are written to
+//! `results/<id>.md`; EXPERIMENTS.md records paper-vs-measured.
+
+pub mod ablations;
+pub mod common;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod llm;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+
+use anyhow::{bail, Result};
+
+use crate::util::cli::Args;
+
+pub const ALL_IDS: [&str; 18] = [
+    "table1", "table2", "table3", "table4", "table5", "table6", "table7", "table8", "table9",
+    "table10", "fig2a", "fig2b", "fig3a", "fig3b", "fig4a", "fig4b", "fig4c", "e2e",
+];
+
+pub fn run(id: &str, args: &Args) -> Result<()> {
+    match id {
+        "table1" => table1::run(args),
+        "table2" => table2::run(args),
+        "table3" => table3::run(args),
+        "table4" => llm::table4(args),
+        "table5" => llm::table5(args),
+        "table6" => ablations::learning_rate(args),
+        "table7" => ablations::weight_noise(args),
+        "table8" => ablations::clipping(args),
+        "table9" => llm::table9(args),
+        "table10" => llm::table10(args),
+        "fig2a" => fig2::rank_pareto(args),
+        "fig2b" => fig2::placement(args),
+        "fig3a" => fig3::dynamic_adaptation(args),
+        "fig3b" => fig3::scalability(args),
+        "fig4a" => fig4::latency_balance(args),
+        "fig4b" => fig4::tcdm(args),
+        "fig4c" => fig4::total_latency(args),
+        "e2e" => table1::e2e(args),
+        "all" => {
+            let mut failures = Vec::new();
+            for id in ALL_IDS {
+                eprintln!("\n=== {id} ===");
+                let t0 = std::time::Instant::now();
+                if let Err(e) = run(id, args) {
+                    eprintln!("[exp] {id} FAILED: {e:#}");
+                    failures.push(id);
+                }
+                eprintln!("[exp] {id} took {:.1} s", t0.elapsed().as_secs_f64());
+            }
+            if failures.is_empty() {
+                Ok(())
+            } else {
+                bail!("experiments failed: {failures:?}")
+            }
+        }
+        _ => bail!("unknown experiment '{id}'; known: {ALL_IDS:?} or 'all'"),
+    }
+}

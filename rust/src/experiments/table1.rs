@@ -1,0 +1,167 @@
+//! Table I — AHWA vs AHWA-LoRA on synthetic SQuAD (MobileBERT proxy),
+//! F1/EM over conductance drift 0 s … 10 y. Also hosts the `e2e`
+//! end-to-end driver used by `examples/train_e2e.rs`.
+
+use anyhow::Result;
+
+use crate::config::run::{EvalConfig, TrainConfig};
+use crate::data::squad::SquadTask;
+use crate::model::params::ParamStore;
+use crate::train::Trainer;
+use crate::util::cli::Args;
+use crate::util::table::{f, Table};
+
+use super::common::{
+    self, adapt_lora_qa, graft_head, infer_hw, pretrained_encoder, qa_digital, qa_drift_grid,
+    split_full_tree, Ctx,
+};
+
+pub fn run(args: &Args) -> Result<()> {
+    let ctx = Ctx::new()?;
+    let variant = args.str("variant", "mobilebert_proxy");
+    let pre_steps = args.usize("pretrain-steps", 400);
+    let steps = args.usize("steps", 200);
+    let ecfg = EvalConfig::from_args(args);
+    let hw = infer_hw(8, 8, 3.0, 0.04);
+
+    let (meta, head) = pretrained_encoder(&ctx, &variant, pre_steps)?;
+    let fwd_key = format!("{variant}/fwd_qa");
+
+    // --- AHWA-LoRA: frozen meta, train LoRA + head under constraints ---
+    let cfg = TrainConfig {
+        steps,
+        ..TrainConfig::from_args(args)
+    };
+    let lora_train = adapt_lora_qa(
+        &ctx,
+        &format!("{variant}/step_qa_lora"),
+        &meta,
+        &head,
+        &cfg,
+        &format!("{variant}.table1.lora"),
+    )?;
+    let (lora_digital_f1, lora_digital_em) = qa_digital(&ctx, &fwd_key, &meta, &lora_train, &ecfg)?;
+    let lora_grid = qa_drift_grid(&ctx, &fwd_key, meta.clone(), &lora_train, &ecfg, hw)?;
+
+    // --- full AHWA baseline: retrain everything under constraints ---
+    let (ahwa_meta, ahwa_train) = full_ahwa(&ctx, &variant, &meta, &head, &cfg, "table1.full")?;
+    let (ahwa_digital_f1, ahwa_digital_em) = qa_digital(&ctx, &fwd_key, &ahwa_meta, &ahwa_train, &ecfg)?;
+    let ahwa_grid = qa_drift_grid(&ctx, &fwd_key, ahwa_meta, &ahwa_train, &ecfg, hw)?;
+
+    let mut hdr = vec!["Training Method".to_string(), "Metric".into(), "Baseline".into()];
+    hdr.extend(lora_grid.iter().map(|(l, _, _)| l.clone()));
+    let mut t = Table::new(
+        "Table I — AHWA vs AHWA-LoRA (synthetic SQuAD, MobileBERT proxy)",
+        &hdr.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    let row = |name: &str, metric: &str, base: f64, grid: &[(String, f64, f64)], which: usize| {
+        let mut r = vec![name.to_string(), metric.to_string(), f(base, 2)];
+        r.extend(grid.iter().map(|(_, f1, em)| f(if which == 0 { *f1 } else { *em }, 2)));
+        r
+    };
+    t.row(row("AHWA Training", "F1", ahwa_digital_f1, &ahwa_grid, 0));
+    t.row(row("AHWA Training", "EM", ahwa_digital_em, &ahwa_grid, 1));
+    t.row(row("AHWA-LoRA Training", "F1", lora_digital_f1, &lora_grid, 0));
+    t.row(row("AHWA-LoRA Training", "EM", lora_digital_em, &lora_grid, 1));
+    t.print();
+    ctx.save_result("table1", &t.render())
+}
+
+/// Full AHWA training (paper's baseline, its ref. 22): every weight is
+/// retrained under simulated hardware constraints.
+pub fn full_ahwa(
+    ctx: &Ctx,
+    variant: &str,
+    meta: &ParamStore,
+    head: &ParamStore,
+    cfg: &TrainConfig,
+    tag: &str,
+) -> Result<(ParamStore, ParamStore)> {
+    let meta_path = ctx.runs_dir.join(format!("{variant}.{tag}.meta.bin"));
+    let head_path = ctx.runs_dir.join(format!("{variant}.{tag}.head.bin"));
+    if !ctx.fresh && meta_path.exists() && head_path.exists() {
+        let m = crate::model::checkpoint::load(&meta_path)?;
+        let h = crate::model::checkpoint::load(&head_path)?;
+        return Ok((m, lora_free_train(ctx, variant, &h)?));
+    }
+    let graph_key = format!("{variant}/step_qa_full");
+    let v = ctx.engine.manifest.variant(variant)?.clone();
+    let mut train0 = ctx.init_train(&graph_key)?;
+    for t in train0.tensors.iter_mut() {
+        if let Some(bare) = t.name.strip_prefix("meta.") {
+            t.data = meta.get(bare)?.data.clone();
+        } else if let Ok(h) = head.get(&t.name) {
+            t.data = h.data.clone();
+        }
+    }
+    let task = SquadTask::new(v.vocab, v.seq);
+    let mut trainer = Trainer::new(&ctx.engine, &graph_key, ParamStore::default(), train0, cfg.clone())?;
+    trainer.run(common::qa_batch_fn(task, v.train_batch))?;
+    let (new_meta, new_head) = split_full_tree(&trainer.train);
+    crate::model::checkpoint::save(&meta_path, &new_meta)?;
+    crate::model::checkpoint::save(&head_path, &new_head)?;
+    Ok((new_meta, lora_free_train(ctx, variant, &new_head)?))
+}
+
+/// Wrap a bare head as the fwd graph's trainable tree with ZERO LoRA
+/// (B = 0 ⇒ exactly the base model) so AHWA-trained models evaluate
+/// through the same forward artifact.
+fn lora_free_train(ctx: &Ctx, variant: &str, head: &ParamStore) -> Result<ParamStore> {
+    let mut train = ctx.init_train(&format!("{variant}/step_qa_lora"))?;
+    for t in train.tensors.iter_mut() {
+        if t.name.starts_with("head.") {
+            if let Ok(h) = head.get(&t.name) {
+                t.data = h.data.clone();
+            }
+        } else if t.name.ends_with("_b") {
+            t.data.iter_mut().for_each(|x| *x = 0.0);
+        }
+    }
+    Ok(train)
+}
+
+/// End-to-end driver (EXPERIMENTS.md §E2E): digital pretrain → AHWA-LoRA
+/// adapt (logging the loss curve) → PCM drift eval → summary.
+pub fn e2e(args: &Args) -> Result<()> {
+    let ctx = Ctx::new()?;
+    let variant = args.str("variant", "mobilebert_proxy");
+    let pre_steps = args.usize("pretrain-steps", 400);
+    let steps = args.usize("steps", 300);
+    let ecfg = EvalConfig::from_args(args);
+    let hw = infer_hw(8, 8, 3.0, 0.04);
+
+    eprintln!("[e2e] stage 1: digital pretraining ({pre_steps} steps)");
+    let (meta, head) = pretrained_encoder(&ctx, &variant, pre_steps)?;
+
+    eprintln!("[e2e] stage 2: AHWA-LoRA adaptation ({steps} steps, noise 6.7%)");
+    let v = ctx.engine.manifest.variant(&variant)?.clone();
+    let cfg = TrainConfig {
+        steps,
+        log_every: 25,
+        ..TrainConfig::from_args(args)
+    };
+    let graph_key = format!("{variant}/step_qa_lora");
+    let train0 = graft_head(&ctx.init_train(&graph_key)?, &head);
+    let task = SquadTask::new(v.vocab, v.seq);
+    let mut trainer = Trainer::new(&ctx.engine, &graph_key, meta.clone(), train0, cfg)?;
+    let losses = trainer.run(common::qa_batch_fn(task, v.train_batch))?;
+
+    eprintln!("[e2e] stage 3: PCM deployment + drift evaluation");
+    let grid = qa_drift_grid(&ctx, &format!("{variant}/fwd_qa"), meta, &trainer.train, &ecfg, hw)?;
+
+    let mut t = Table::new("E2E — loss curve (sampled) and drift grid", &["quantity", "value"]);
+    for i in (0..losses.len()).step_by((losses.len() / 10).max(1)) {
+        t.row(vec![format!("loss@step{}", i + 1), f(losses[i] as f64, 4)]);
+    }
+    t.row(vec!["loss@final".into(), f(*losses.last().unwrap() as f64, 4)]);
+    for (label, f1, em) in &grid {
+        t.row(vec![format!("F1/EM@{label}"), format!("{} / {}", f(*f1, 2), f(*em, 2))]);
+    }
+    t.print();
+    let first5: f32 = losses[..5.min(losses.len())].iter().sum::<f32>() / 5.0_f32.min(losses.len() as f32);
+    anyhow::ensure!(
+        trainer.tail_loss(10) < first5,
+        "e2e loss did not decrease"
+    );
+    ctx.save_result("e2e", &t.render())
+}

@@ -1,0 +1,67 @@
+//! Table II — trainable parameters + training memory across methods,
+//! LoRA placements, and ranks. Parameter counts are EXACT (from the
+//! compiled manifest); memory comes from the analytic model in
+//! `train::memory` (DESIGN.md §Substitutions: no H100 in this image),
+//! scaled at the proxy's own batch/seq.
+
+use anyhow::Result;
+
+use crate::train::memory::{graph_param_counts, training_memory, MemoryModel};
+use crate::util::cli::Args;
+use crate::util::table::{f, Table};
+
+use super::common::Ctx;
+
+pub fn run(args: &Args) -> Result<()> {
+    let ctx = Ctx::new()?;
+    let variant = args.str("variant", "mobilebert_proxy");
+    let v = ctx.engine.manifest.variant(&variant)?.clone();
+    let mm = MemoryModel {
+        batch: 32,
+        seq: v.seq,
+        d_model: v.d_model,
+        d_ff: v.d_ff,
+        n_layers: v.n_layers,
+        act_tensors_per_layer: 6.0,
+    };
+
+    let rows: Vec<(&str, String)> = vec![
+        ("AHWA", format!("{variant}/step_qa_full")),
+        ("AHWA-LoRA", format!("{variant}/step_qa_lora")),
+        ("AHWA-LoRA (FFN)", format!("{variant}/step_qa_lora@ffn")),
+        ("AHWA-LoRA (QKV)", format!("{variant}/step_qa_lora@qkv")),
+        ("AHWA-LoRA (r=1)", format!("{variant}/step_qa_lora@r1")),
+        ("AHWA-LoRA (r=2)", format!("{variant}/step_qa_lora@r2")),
+        ("AHWA-LoRA (r=4)", format!("{variant}/step_qa_lora@r4")),
+        ("AHWA-LoRA (r=8)", format!("{variant}/step_qa_lora")),
+        ("AHWA-LoRA (r=16)", format!("{variant}/step_qa_lora@r16")),
+    ];
+
+    let mut t = Table::new(
+        "Table II — trainable parameters and training memory",
+        &["Method", "Trainable Params (M)", "Memory (GB, analytic)"],
+    );
+    let mut lora_params = 0usize;
+    let mut full_params = 0usize;
+    for (name, key) in &rows {
+        let spec = ctx.engine.manifest.graph(key)?;
+        let (n_total, n_mappable, n_train) = graph_param_counts(spec);
+        let mem = training_memory(&mm, n_total, n_mappable, n_train);
+        if *name == "AHWA" {
+            full_params = n_train;
+        }
+        if *name == "AHWA-LoRA" {
+            lora_params = n_train;
+        }
+        t.row(vec![
+            name.to_string(),
+            f(n_train as f64 / 1e6, 3),
+            f(mem.total_gb(), 3),
+        ]);
+    }
+    t.print();
+    let reduction = full_params as f64 / lora_params as f64;
+    println!("trainable-parameter reduction: {reduction:.1}x (paper: >15x)\n");
+    anyhow::ensure!(reduction > 5.0, "LoRA should cut trainable params dramatically");
+    ctx.save_result("table2", &(t.render() + &format!("\nreduction: {reduction:.1}x\n")))
+}

@@ -1,0 +1,51 @@
+//! # AHWA-LoRA — analog-hardware-aware low-rank adaptation, reproduced
+//!
+//! Rust reproduction of *"Efficient transformer adaptation for analog
+//! in-memory computing via low-rank adapters"* (Li, Ferro, Lammie,
+//! Le Gallo, Boybat, Rajendran — CS.AR 2024).
+//!
+//! This crate is **Layer 3** of the three-layer stack described in
+//! `DESIGN.md`: it owns every runtime path — the training-loop driver,
+//! the PCM/AIMC device simulation, the drift-evaluation harness, the
+//! multi-task LoRA serving coordinator, and the AIMC⇄PMCA latency
+//! pipeline model. The JAX/Pallas layers (L2/L1) run once at build time
+//! (`make artifacts`) and are loaded here as AOT-compiled HLO via PJRT
+//! (the `xla` crate); python is never on a request path.
+//!
+//! Module map (see `DESIGN.md` §System inventory):
+//!
+//! * [`util`] — infrastructure the offline image lacks crates for:
+//!   JSON, PCG RNG, stats, CLI, tables.
+//! * [`config`] — manifest-driven model/hardware/training configuration.
+//! * [`pcm`] — statistical PCM device model (programming noise, drift,
+//!   read noise, global drift compensation).
+//! * [`aimc`] — crossbar tile model: differential channel-wise mapping,
+//!   clipping, tile allocation, quantization.
+//! * [`pmca`] — RISC-V (Snitch + RedMulE) programmable multi-core
+//!   accelerator performance model.
+//! * [`pipeline`] — AIMC⇄PMCA pipeline scheduler and latency balancing.
+//! * [`runtime`] — PJRT artifact store + manifest-driven literal packing.
+//! * [`model`] — parameter trees, LoRA adapter sets, checkpoint I/O.
+//! * [`data`] — synthetic task suite (SQuAD-like, GLUE-like, instruction,
+//!   GSM-like) standing in for the paper's corpora (DESIGN.md
+//!   §Substitutions).
+//! * [`train`] — AHWA-LoRA / full-AHWA training drivers + memory model.
+//! * [`rl`] — GRPO reinforcement-learning driver (rewards, sampling).
+//! * [`eval`] — drift evaluation harness + metric zoo.
+//! * [`serve`] — multi-task serving: router, batcher, adapter registry.
+//! * [`experiments`] — one driver per paper table/figure.
+
+pub mod aimc;
+pub mod config;
+pub mod data;
+pub mod eval;
+pub mod experiments;
+pub mod model;
+pub mod pcm;
+pub mod pipeline;
+pub mod pmca;
+pub mod rl;
+pub mod runtime;
+pub mod serve;
+pub mod train;
+pub mod util;

@@ -1,0 +1,130 @@
+//! AHWA-LoRA coordinator CLI.
+//!
+//! ```text
+//! ahwa-lora exp <id> [--steps N] [--trials N] [--variant V] [--fresh]
+//! ahwa-lora train [--variant V] [--steps N] [--noise X] …
+//! ahwa-lora latency [--rank R]          # Fig. 4 pipeline study
+//! ahwa-lora serve-demo [--requests N]   # multi-task serving demo
+//! ahwa-lora list                        # artifacts + variants
+//! ```
+
+use anyhow::{bail, Result};
+
+use ahwa_lora::config::manifest::{default_artifacts_dir, Manifest};
+use ahwa_lora::experiments;
+use ahwa_lora::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.subcommand.as_str() {
+        "exp" => {
+            let id = args
+                .positional
+                .first()
+                .map(|s| s.as_str())
+                .unwrap_or("all");
+            experiments::run(id, &args)
+        }
+        "train" => {
+            // direct access to the AHWA-LoRA trainer for ad-hoc runs
+            let mut forwarded = args.clone();
+            forwarded.positional = vec!["e2e".into()];
+            experiments::run("e2e", &forwarded)
+        }
+        "latency" => {
+            experiments::run("fig4a", &args)?;
+            experiments::run("fig4b", &args)?;
+            experiments::run("fig4c", &args)
+        }
+        "serve-demo" => serve_demo(&args),
+        "list" => list(),
+        "" | "help" | "--help" => {
+            println!(
+                "usage: ahwa-lora <exp|train|latency|serve-demo|list> [flags]\n\
+                 experiments: {:?} or 'all'",
+                experiments::ALL_IDS
+            );
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' (try 'help')"),
+    }
+}
+
+fn list() -> Result<()> {
+    let m = Manifest::load(default_artifacts_dir())?;
+    println!("variants:");
+    for (name, v) in &m.variants {
+        println!(
+            "  {name:<18} {} d={} L={} V={} S={} rank={}",
+            v.kind, v.d_model, v.n_layers, v.vocab, v.seq, v.rank
+        );
+    }
+    println!("graphs ({}):", m.graphs.len());
+    for key in m.graphs.keys() {
+        println!("  {key}");
+    }
+    Ok(())
+}
+
+/// Live multi-task serving demonstration (Table III's deployment):
+/// deploy GLUE adapters, fire a mixed request wave, report routing /
+/// batching / hot-swap metrics.
+fn serve_demo(args: &Args) -> Result<()> {
+    use ahwa_lora::data::glue::{GlueGen, GlueTask};
+    use ahwa_lora::serve::registry::SharedRegistry;
+    use ahwa_lora::serve::server::{submit_wave, ServeConfig, Server};
+    use ahwa_lora::util::rng::Pcg64;
+
+    let n_requests = args.usize("requests", 64);
+    let variant = args.str("variant", "mobilebert_proxy");
+
+    let ctx = ahwa_lora::experiments::common::Ctx::new()?;
+    let v = ctx.engine.manifest.variant(&variant)?.clone();
+    let (meta, _) = ahwa_lora::experiments::common::pretrained_encoder(
+        &ctx,
+        &variant,
+        args.usize("pretrain-steps", 400),
+    )?;
+
+    // adapters: use cached GLUE adapters if present, else fresh inits
+    let registry = SharedRegistry::new();
+    let tasks = [GlueTask::Sst2, GlueTask::Qnli, GlueTask::Cola];
+    for t in tasks {
+        let cache = ctx
+            .runs_dir
+            .join(format!("{variant}.glue.{}.train.bin", t.adapter_key()));
+        let params = if cache.exists() {
+            ahwa_lora::model::checkpoint::load(&cache)?
+        } else {
+            ctx.init_train(&format!("{variant}/step_cls_lora"))?
+        };
+        registry.deploy(t.adapter_key(), params);
+    }
+    println!(
+        "deployed {} adapters ({:.2}M params total on DPUs)",
+        registry.tasks().len(),
+        registry.total_params() as f64 / 1e6
+    );
+
+    let server = Server::start(ServeConfig::new(&variant), meta, registry)?;
+    let mut rng = Pcg64::new(42);
+    let mut jobs = Vec::new();
+    for i in 0..n_requests {
+        let task = tasks[i % tasks.len()];
+        let gen = GlueGen::new(task, v.vocab, v.seq);
+        let (tokens, _, _) = gen.example(&mut rng);
+        jobs.push((task.adapter_key().to_string(), tokens));
+    }
+    let t0 = std::time::Instant::now();
+    let responses = submit_wave(&server.router, &jobs)?;
+    let wall = t0.elapsed();
+    println!(
+        "served {} requests in {:.1} ms ({:.0} req/s)",
+        responses.len(),
+        wall.as_secs_f64() * 1e3,
+        responses.len() as f64 / wall.as_secs_f64()
+    );
+    println!("metrics: {}", server.metrics.summary());
+    server.shutdown()?;
+    Ok(())
+}

@@ -1,0 +1,140 @@
+//! ALTB tensor-container I/O.
+//!
+//! Binary format written by `python/compile/aot.py::write_altb` (and by
+//! this module for training checkpoints):
+//!
+//! ```text
+//! magic "ALTB" | u32 count | count x {
+//!     u16 name_len | name utf-8 | u8 ndim | ndim x u32 dims | f32 data
+//! }
+//! ```
+//! All integers little-endian; data row-major f32.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::params::{ParamStore, Tensor};
+
+pub fn save(path: impl AsRef<Path>, store: &ParamStore) -> Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path.as_ref())?);
+    f.write_all(b"ALTB")?;
+    f.write_all(&(store.tensors.len() as u32).to_le_bytes())?;
+    for t in &store.tensors {
+        let nb = t.name.as_bytes();
+        f.write_all(&(nb.len() as u16).to_le_bytes())?;
+        f.write_all(nb)?;
+        f.write_all(&[t.shape.len() as u8])?;
+        for d in &t.shape {
+            f.write_all(&(*d as u32).to_le_bytes())?;
+        }
+        // bulk-write the payload
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
+        };
+        f.write_all(bytes)?;
+    }
+    Ok(())
+}
+
+pub fn load(path: impl AsRef<Path>) -> Result<ParamStore> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path.as_ref())
+            .with_context(|| format!("opening checkpoint {}", path.as_ref().display()))?,
+    );
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != b"ALTB" {
+        bail!("bad magic {:?} in {}", magic, path.as_ref().display());
+    }
+    let count = read_u32(&mut f)? as usize;
+    let mut tensors = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = read_u16(&mut f)? as usize;
+        let mut nb = vec![0u8; name_len];
+        f.read_exact(&mut nb)?;
+        let name = String::from_utf8(nb)?;
+        let mut ndim = [0u8; 1];
+        f.read_exact(&mut ndim)?;
+        let mut shape = Vec::with_capacity(ndim[0] as usize);
+        for _ in 0..ndim[0] {
+            shape.push(read_u32(&mut f)? as usize);
+        }
+        let numel: usize = shape.iter().product();
+        let mut data = vec![0f32; numel];
+        let bytes: &mut [u8] = unsafe {
+            std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, numel * 4)
+        };
+        f.read_exact(bytes)?;
+        tensors.push(Tensor { name, shape, data });
+    }
+    Ok(ParamStore::from_tensors(tensors))
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u16(f: &mut impl Read) -> Result<u16> {
+    let mut b = [0u8; 2];
+    f.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Pcg64::new(1);
+        let mut a = Tensor::zeros("layers.0.wq", &[8, 4]);
+        rng.fill_normal(&mut a.data, 0.0, 1.0);
+        let b = Tensor::zeros("tok_emb", &[16, 2]);
+        let store = ParamStore::from_tensors(vec![a.clone(), b]);
+        let dir = std::env::temp_dir().join("ahwa_ckpt_test");
+        let path = dir.join("t.bin");
+        save(&path, &store).unwrap();
+        let re = load(&path).unwrap();
+        assert_eq!(re.len(), 2);
+        let ra = re.get("layers.0.wq").unwrap();
+        assert_eq!(ra.shape, vec![8, 4]);
+        assert_eq!(ra.data, a.data);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn reads_python_written_init() {
+        let dir = crate::config::manifest::default_artifacts_dir();
+        let p = dir.join("init/tiny.meta.bin");
+        if !p.exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let store = load(&p).unwrap();
+        assert!(store.get("tok_emb").is_ok());
+        assert!(store.get("layers.0.wq").is_ok());
+        // name-sorted canonical order
+        let names: Vec<&str> = store.names().collect();
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(names, sorted);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("ahwa_ckpt_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,120 @@
+//! Named LoRA adapter sets — the unit of multi-task serving.
+//!
+//! The paper's Table III scenario: ONE analog base model, N adapter
+//! sets (1.6 M params each at proxy scale), hot-swapped on the DPUs to
+//! switch tasks without touching the AIMC arrays. An [`AdapterRegistry`]
+//! owns the sets; `serve::registry` wraps it behind a lock for the
+//! concurrent server.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use super::params::ParamStore;
+
+/// Metadata for one adapter set.
+#[derive(Clone, Debug)]
+pub struct AdapterInfo {
+    pub task: String,
+    /// LoRA + head parameter count (the paper's "1.6M per task").
+    pub n_params: usize,
+    /// Monotone version, bumped on every re-deployment (dynamic
+    /// adaptation / refresh after hardware degradation).
+    pub version: u64,
+}
+
+#[derive(Default)]
+pub struct AdapterRegistry {
+    sets: BTreeMap<String, (AdapterInfo, ParamStore)>,
+}
+
+impl AdapterRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Deploy (or re-deploy) an adapter set for `task`. Returns the new
+    /// version number. This is the paper's "updating the 1.6M LoRA
+    /// weights" operation — O(adapter), never O(base model).
+    pub fn deploy(&mut self, task: &str, params: ParamStore) -> u64 {
+        let n_params = params.numel();
+        let version = self.sets.get(task).map(|(i, _)| i.version + 1).unwrap_or(1);
+        self.sets.insert(
+            task.to_string(),
+            (
+                AdapterInfo {
+                    task: task.to_string(),
+                    n_params,
+                    version,
+                },
+                params,
+            ),
+        );
+        version
+    }
+
+    pub fn get(&self, task: &str) -> Result<&ParamStore> {
+        self.sets
+            .get(task)
+            .map(|(_, p)| p)
+            .ok_or_else(|| anyhow!("no adapter deployed for task '{task}'"))
+    }
+
+    pub fn info(&self, task: &str) -> Option<&AdapterInfo> {
+        self.sets.get(task).map(|(i, _)| i)
+    }
+
+    pub fn tasks(&self) -> Vec<String> {
+        self.sets.keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.sets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sets.is_empty()
+    }
+
+    /// Total adapter parameters across tasks (Table III accounting:
+    /// N×1.6M on DPUs vs N full models on N chips).
+    pub fn total_params(&self) -> usize {
+        self.sets.values().map(|(i, _)| i.n_params).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::Tensor;
+
+    fn adapter(n: usize) -> ParamStore {
+        ParamStore::from_tensors(vec![Tensor::zeros("lora.layers.0.wq_a", &[n, 8])])
+    }
+
+    #[test]
+    fn deploy_and_get() {
+        let mut r = AdapterRegistry::new();
+        assert_eq!(r.deploy("sst2", adapter(16)), 1);
+        assert_eq!(r.deploy("mnli", adapter(16)), 1);
+        assert!(r.get("sst2").is_ok());
+        assert!(r.get("qqp").is_err());
+        assert_eq!(r.len(), 2);
+    }
+
+    #[test]
+    fn redeploy_bumps_version() {
+        let mut r = AdapterRegistry::new();
+        r.deploy("sst2", adapter(16));
+        assert_eq!(r.deploy("sst2", adapter(16)), 2);
+        assert_eq!(r.info("sst2").unwrap().version, 2);
+    }
+
+    #[test]
+    fn total_params_sums_tasks() {
+        let mut r = AdapterRegistry::new();
+        r.deploy("a", adapter(4));
+        r.deploy("b", adapter(8));
+        assert_eq!(r.total_params(), 4 * 8 + 8 * 8);
+    }
+}

@@ -1,0 +1,11 @@
+//! Parameter trees, checkpoints, and LoRA adapter sets.
+//!
+//! Parameters cross the rust↔HLO boundary as flat, name-sorted tensor
+//! lists (the canonical order defined by `model.py::flatten_params` and
+//! recorded per graph in the manifest). [`params`] stores them;
+//! [`checkpoint`] persists them in the ALTB container written by
+//! `aot.py`; [`lora`] manages named adapter sets for multi-task serving.
+
+pub mod checkpoint;
+pub mod lora;
+pub mod params;

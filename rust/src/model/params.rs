@@ -1,0 +1,198 @@
+//! Flat, canonically-ordered parameter stores.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::manifest::{GraphSpec, IoSpec, Role};
+use crate::util::rng::Pcg64;
+
+/// One named f32 tensor.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(name: &str, shape: &[usize]) -> Tensor {
+        Tensor {
+            name: name.to_string(),
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Row-major matrix view accessors (most analog weights are 2-D).
+    pub fn rows(&self) -> usize {
+        if self.shape.len() >= 2 {
+            self.shape[..self.shape.len() - 1].iter().product()
+        } else {
+            1
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        *self.shape.last().unwrap_or(&1)
+    }
+}
+
+/// An ordered collection of named tensors. Order is ALWAYS the canonical
+/// (name-sorted) order used by the manifest; `index` allows O(log n)
+/// name lookup.
+#[derive(Clone, Debug, Default)]
+pub struct ParamStore {
+    pub tensors: Vec<Tensor>,
+    index: BTreeMap<String, usize>,
+}
+
+impl ParamStore {
+    pub fn from_tensors(mut tensors: Vec<Tensor>) -> ParamStore {
+        tensors.sort_by(|a, b| a.name.cmp(&b.name));
+        let index = tensors
+            .iter()
+            .enumerate()
+            .map(|(i, t)| (t.name.clone(), i))
+            .collect();
+        ParamStore { tensors, index }
+    }
+
+    /// Zero-initialised store matching a graph's tensors of one role
+    /// (used for Adam moment state).
+    pub fn zeros_like_role(spec: &GraphSpec, role: Role) -> ParamStore {
+        ParamStore::from_tensors(
+            spec.inputs_with_role(role)
+                .map(|io| Tensor::zeros(&io.name, &io.shape))
+                .collect(),
+        )
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.tensors.iter().map(|t| t.numel()).sum()
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.index
+            .get(name)
+            .map(|&i| &self.tensors[i])
+            .ok_or_else(|| anyhow!("tensor '{name}' not in store"))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut Tensor> {
+        let i = *self
+            .index
+            .get(name)
+            .ok_or_else(|| anyhow!("tensor '{name}' not in store"))?;
+        Ok(&mut self.tensors[i])
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.tensors.iter().map(|t| t.name.as_str())
+    }
+
+    /// Validate that this store exactly matches the graph's expectation
+    /// for `role` (names, order, shapes).
+    pub fn validate_against(&self, spec: &GraphSpec, role: Role) -> Result<()> {
+        let expected: Vec<&IoSpec> = spec.inputs_with_role(role).collect();
+        if expected.len() != self.tensors.len() {
+            bail!(
+                "store has {} tensors, graph '{}' expects {} for {:?}",
+                self.tensors.len(),
+                spec.key,
+                expected.len(),
+                role
+            );
+        }
+        for (t, io) in self.tensors.iter().zip(&expected) {
+            let want = strip_role_prefix(&io.name, role);
+            if t.name != want {
+                bail!("tensor order mismatch: '{}' vs manifest '{}'", t.name, want);
+            }
+            if t.shape != io.shape {
+                bail!("shape mismatch for '{}': {:?} vs {:?}", t.name, t.shape, io.shape);
+            }
+        }
+        Ok(())
+    }
+
+    /// Gaussian re-initialisation (used by ablations that restart LoRA).
+    pub fn reinit_normal(&mut self, sigma: f32, rng: &mut Pcg64) {
+        for t in &mut self.tensors {
+            rng.fill_normal(&mut t.data, 0.0, sigma);
+        }
+    }
+
+    /// L2 norm over all tensors (training diagnostics).
+    pub fn global_norm(&self) -> f64 {
+        self.tensors
+            .iter()
+            .flat_map(|t| t.data.iter())
+            .map(|v| (*v as f64).powi(2))
+            .sum::<f64>()
+            .sqrt()
+    }
+}
+
+/// Manifest meta names carry a "meta." prefix; stores keep bare names.
+pub fn strip_role_prefix(name: &str, role: Role) -> String {
+    match role {
+        Role::Meta => name.strip_prefix("meta.").unwrap_or(name).to_string(),
+        _ => name.to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> ParamStore {
+        ParamStore::from_tensors(vec![
+            Tensor::zeros("b", &[2, 3]),
+            Tensor::zeros("a", &[4]),
+            Tensor::zeros("c.0.x", &[1, 2, 2]),
+        ])
+    }
+
+    #[test]
+    fn canonical_order_is_sorted() {
+        let s = store();
+        let names: Vec<&str> = s.names().collect();
+        assert_eq!(names, vec!["a", "b", "c.0.x"]);
+    }
+
+    #[test]
+    fn numel_and_lookup() {
+        let s = store();
+        assert_eq!(s.numel(), 4 + 6 + 4);
+        assert_eq!(s.get("b").unwrap().rows(), 2);
+        assert_eq!(s.get("c.0.x").unwrap().rows(), 2);
+        assert_eq!(s.get("c.0.x").unwrap().cols(), 2);
+        assert!(s.get("zz").is_err());
+    }
+
+    #[test]
+    fn strip_prefix_only_for_meta() {
+        assert_eq!(strip_role_prefix("meta.layers.0.wq", Role::Meta), "layers.0.wq");
+        assert_eq!(strip_role_prefix("lora.layers.0.wq_a", Role::Train), "lora.layers.0.wq_a");
+    }
+
+    #[test]
+    fn global_norm() {
+        let mut s = store();
+        s.get_mut("a").unwrap().data = vec![3.0, 4.0, 0.0, 0.0];
+        assert!((s.global_norm() - 5.0).abs() < 1e-9);
+    }
+}

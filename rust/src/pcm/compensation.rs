@@ -1,0 +1,67 @@
+//! Global drift compensation (GDC).
+//!
+//! The paper mitigates temporal drift with the scheme of Joshi et al.
+//! 2020 (its ref. 22): periodically read the summed response of each
+//! layer's devices to a calibration input and re-scale the digital
+//! output by the ratio to the post-programming reference. One scalar
+//! per programmed tensor — cheap, and exactly restores the *mean*
+//! conductance scale (the stochastic spread remains, which is what the
+//! LoRA adapters then compensate).
+
+use super::{PcmModel, ProgrammedTensor};
+
+/// Reference read: Σ(g⁺ + g⁻) at programming time (t = 0, i.e. t₀).
+pub fn gdc_reference(tensor_gp: &[f32], tensor_gm: &[f32]) -> f64 {
+    tensor_gp.iter().map(|&v| v as f64).sum::<f64>() + tensor_gm.iter().map(|&v| v as f64).sum::<f64>()
+}
+
+/// Compensation factor α = S_ref / S(t) from a current read.
+pub fn gdc_factor(_model: &PcmModel, tensor: &ProgrammedTensor, gp_now: &[f32], gm_now: &[f32]) -> f32 {
+    let s_now = gdc_reference(gp_now, gm_now);
+    if s_now <= f64::EPSILON {
+        return 1.0;
+    }
+    (tensor.gdc_reference / s_now) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aimc::mapping::program_tensor;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn factor_is_one_when_nothing_drifted() {
+        let model = PcmModel::default();
+        let mut rng = Pcg64::new(1);
+        let mut w = vec![0f32; 256];
+        rng.fill_normal(&mut w, 0.0, 0.05);
+        let t = program_tensor(&model, &w, 16, 16, 3.0, &mut rng);
+        let a = gdc_factor(&model, &t, &t.g_plus, &t.g_minus);
+        assert!((a - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn factor_compensates_uniform_decay() {
+        let model = PcmModel::default();
+        let mut rng = Pcg64::new(2);
+        let mut w = vec![0f32; 256];
+        rng.fill_normal(&mut w, 0.0, 0.05);
+        let t = program_tensor(&model, &w, 16, 16, 3.0, &mut rng);
+        let gp: Vec<f32> = t.g_plus.iter().map(|v| v * 0.8).collect();
+        let gm: Vec<f32> = t.g_minus.iter().map(|v| v * 0.8).collect();
+        let a = gdc_factor(&model, &t, &gp, &gm);
+        assert!((a - 1.25).abs() < 1e-3, "alpha={a}");
+    }
+
+    #[test]
+    fn zero_read_degrades_gracefully() {
+        let model = PcmModel::default();
+        let mut rng = Pcg64::new(3);
+        let mut w = vec![0f32; 64];
+        rng.fill_normal(&mut w, 0.0, 0.05);
+        let t = program_tensor(&model, &w, 8, 8, 3.0, &mut rng);
+        let z = vec![0f32; 64];
+        assert_eq!(gdc_factor(&model, &t, &z, &z), 1.0);
+    }
+}

@@ -1,0 +1,120 @@
+//! Conductance drift: structural relaxation of the amorphous phase.
+//!
+//! g(t) = g_prog · ((t + t₀)/t₀)^(−ν), with a per-device drift exponent
+//! ν drawn once at programming time from a state-dependent normal
+//! distribution (lower-conductance = more amorphous = stronger drift),
+//! following the measured dependence in Joshi et al. 2020 / AIHWKIT:
+//!
+//!   μ_ν(g_rel) = clamp(−0.0155·ln(g_rel) + 0.0244, ν_lo, ν_hi)
+//!   σ_ν(g_rel) = clamp(−0.0125·ln(g_rel) − 0.0059, 0.008, 0.045)
+//!
+//! The `(t+t₀)/t₀` form makes t = 0 the programming-time read (factor 1)
+//! so the paper's "0 s" column is exactly the post-programming state.
+
+use super::PcmModel;
+use crate::util::rng::Pcg64;
+
+/// Mean drift exponent for a programmed conductance.
+#[inline]
+pub fn nu_mean(model: &PcmModel, g: f32) -> f32 {
+    let g_rel = (g / model.g_max).clamp(1e-4, 1.0);
+    (-0.0155 * g_rel.ln() + 0.0244).clamp(model.nu_clip.0, model.nu_clip.1)
+}
+
+/// Device-to-device spread of the drift exponent.
+#[inline]
+pub fn nu_std(model: &PcmModel, g: f32) -> f32 {
+    let g_rel = (g / model.g_max).clamp(1e-4, 1.0);
+    (-0.0125 * g_rel.ln() - 0.0059).clamp(0.008, 0.045)
+}
+
+/// Sample per-device drift exponents for programmed conductances.
+pub fn sample_nu(model: &PcmModel, g_prog: &[f32], rng: &mut Pcg64) -> Vec<f32> {
+    g_prog
+        .iter()
+        .map(|&g| {
+            let nu = nu_mean(model, g) + model.noise_scale * nu_std(model, g) * rng.normal_f32();
+            nu.clamp(model.nu_clip.0, model.nu_clip.1)
+        })
+        .collect()
+}
+
+/// Apply drift to programmed conductances, writing drifted values.
+pub fn apply_drift(model: &PcmModel, g_prog: &[f32], nu: &[f32], t_seconds: f64, out: &mut [f32]) {
+    debug_assert_eq!(g_prog.len(), nu.len());
+    debug_assert_eq!(g_prog.len(), out.len());
+    if t_seconds <= 0.0 || model.noise_scale == 0.0 {
+        out.copy_from_slice(g_prog);
+        return;
+    }
+    // factor = exp(-ν · ln((t+t0)/t0)); hoist the log out of the loop.
+    let log_ratio = ((t_seconds + model.t0) / model.t0).ln() as f32;
+    for i in 0..g_prog.len() {
+        out[i] = g_prog[i] * (-nu[i] * log_ratio).exp();
+    }
+}
+
+/// Drift-time grid used throughout the paper's tables (0 s … 10 y).
+pub const DRIFT_TIMES: [(&str, f64); 7] = [
+    ("0s", 0.0),
+    ("1h", 3600.0),
+    ("1d", 86_400.0),
+    ("1w", 604_800.0),
+    ("1m", 2_592_000.0),
+    ("1y", 31_536_000.0),
+    ("10y", 315_360_000.0),
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn low_conductance_drifts_more() {
+        let m = PcmModel::default();
+        assert!(nu_mean(&m, 1.0) > nu_mean(&m, 25.0));
+    }
+
+    #[test]
+    fn drift_is_monotone_in_time() {
+        let m = PcmModel::default();
+        let g = vec![20.0f32; 16];
+        let nu = vec![0.05f32; 16];
+        let mut a = vec![0f32; 16];
+        let mut b = vec![0f32; 16];
+        apply_drift(&m, &g, &nu, 3600.0, &mut a);
+        apply_drift(&m, &g, &nu, 86_400.0 * 365.0, &mut b);
+        assert!(b[0] < a[0] && a[0] < 20.0);
+    }
+
+    #[test]
+    fn zero_time_is_identity() {
+        let m = PcmModel::default();
+        let g = vec![5.0f32, 10.0, 20.0];
+        let nu = vec![0.08f32; 3];
+        let mut out = vec![0f32; 3];
+        apply_drift(&m, &g, &nu, 0.0, &mut out);
+        assert_eq!(out, g);
+    }
+
+    #[test]
+    fn ten_year_decay_magnitude_is_plausible() {
+        // ν≈0.024 at full conductance: (10y/20s)^-0.024 ≈ 0.66 — weights
+        // lose ~1/3 of magnitude over 10 years before compensation.
+        let m = PcmModel::default();
+        let g = vec![25.0f32];
+        let nu = vec![nu_mean(&m, 25.0)];
+        let mut out = vec![0f32];
+        apply_drift(&m, &g, &nu, 315_360_000.0, &mut out);
+        let ratio = out[0] / 25.0;
+        assert!((0.4..0.9).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn sampled_nu_within_clip() {
+        let m = PcmModel::default();
+        let g: Vec<f32> = (0..1000).map(|i| (i % 26) as f32).collect();
+        let nu = sample_nu(&m, &g, &mut Pcg64::new(4));
+        assert!(nu.iter().all(|&v| (m.nu_clip.0..=m.nu_clip.1).contains(&v)));
+    }
+}

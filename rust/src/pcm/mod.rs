@@ -1,0 +1,306 @@
+//! Statistical Phase-Change-Memory device model.
+//!
+//! Implements the three temporal non-idealities the paper evaluates
+//! against (Methods — Training and Inference Details), with the
+//! functional forms published for IBM's doped-Ge₂Sb₂Te₅ PCM arrays
+//! (Nandakumar et al. 2019; Joshi et al. 2020 — the same model family
+//! AIHWKIT's `PCMLikeNoiseModel` calibrates to measurements from a
+//! million-device chip):
+//!
+//! 1. **Programming noise** — state-dependent write error,
+//!    `σ_prog(g)` a quadratic polynomial in the target conductance
+//!    ([`programming`]).
+//! 2. **Conductance drift** — `g(t) = g_prog · ((t+t₀)/t₀)^(−ν)` with a
+//!    per-device, state-dependent drift exponent ν ([`drift`]).
+//! 3. **1/f read noise** — `σ_read(t) = g·Q_s·√ln((t+t_r)/(2 t_r))`
+//!    ([`read_noise`]).
+//!
+//! Plus the paper's mitigation: **global drift compensation**
+//! ([`compensation`]) — a per-layer scalar re-scale estimated from a
+//! calibration read, exactly as in Joshi et al. 2020 (paper ref. 22).
+//!
+//! Exact constants in this offline image cannot be re-fit to hardware;
+//! values follow the published shapes (DESIGN.md §Substitutions). The
+//! paper's *training* abstraction (a 6.7 % effective Gaussian) is
+//! independent of this module and lives in the L2 graphs.
+
+pub mod compensation;
+pub mod drift;
+pub mod programming;
+pub mod read_noise;
+
+use crate::util::rng::Pcg64;
+
+/// Device-physics constants. `Default` matches the paper's setup
+/// (G_max = 25 µS, drift reference t₀ = 20 s).
+#[derive(Clone, Debug)]
+pub struct PcmModel {
+    /// Maximum programmable conductance, µS.
+    pub g_max: f32,
+    /// Drift reference time (first read after programming), seconds.
+    pub t0: f64,
+    /// Single read duration for the 1/f noise integral, seconds.
+    pub t_read: f64,
+    /// Programming-noise polynomial σ(g_rel) = c0 + c1·g_rel + c2·g_rel².
+    pub prog_coeff: [f32; 3],
+    /// Drift-exponent statistics bounds (see [`drift`]).
+    pub nu_clip: (f32, f32),
+    /// Read-noise amplitude cap for Q_s.
+    pub q_s_max: f32,
+    /// Scales all stochastic amplitudes (0 disables every non-ideality —
+    /// used by tests and the "digital" baselines).
+    pub noise_scale: f32,
+}
+
+impl Default for PcmModel {
+    fn default() -> Self {
+        PcmModel {
+            g_max: 25.0,
+            t0: 20.0,
+            t_read: 250e-9,
+            // Joshi et al. 2020, Supplementary eq. (3), µS units on a
+            // 25 µS-normalised state axis.
+            prog_coeff: [0.26348, 1.9650, -1.1731],
+            nu_clip: (0.0, 0.1),
+            q_s_max: 0.2,
+            noise_scale: 1.0,
+        }
+    }
+}
+
+impl PcmModel {
+    /// Ideal (noise-free) model for digital baselines.
+    pub fn ideal() -> Self {
+        PcmModel {
+            noise_scale: 0.0,
+            ..Default::default()
+        }
+    }
+}
+
+/// One weight tensor programmed onto PCM devices in the paper's
+/// differential configuration: `w ∝ g⁺ − g⁻`. Created by
+/// [`crate::aimc::mapping::program_tensor`]; evaluated at a drift time by
+/// [`read_tensor`].
+#[derive(Clone, Debug)]
+pub struct ProgrammedTensor {
+    pub rows: usize,
+    pub cols: usize,
+    /// Post-programming (noisy) conductances, row-major, µS.
+    pub g_plus: Vec<f32>,
+    pub g_minus: Vec<f32>,
+    /// Per-device drift exponents (sampled once at programming).
+    pub nu_plus: Vec<f32>,
+    pub nu_minus: Vec<f32>,
+    /// Per-output-channel weight→conductance scale (µS per unit weight).
+    pub col_scale: Vec<f32>,
+    /// Calibration read Σg at t₀ for global drift compensation.
+    pub gdc_reference: f64,
+}
+
+impl ProgrammedTensor {
+    pub fn n_devices(&self) -> usize {
+        2 * self.rows * self.cols
+    }
+}
+
+/// Evaluate the effective weight matrix seen by the tile at drift time
+/// `t_seconds`, applying drift, read noise, and (optionally) global
+/// drift compensation. This is the drift-evaluation hot path: one fused
+/// pass per device array (drift ∘ read-noise), then the differential
+/// weight reconstruction — no intermediate allocations beyond the two
+/// conductance buffers the GDC read needs (EXPERIMENTS.md §Perf,
+/// iteration 2; the original 3-pass version was 2.3× slower).
+pub fn read_tensor(
+    model: &PcmModel,
+    tensor: &ProgrammedTensor,
+    t_seconds: f64,
+    compensate: bool,
+    rng: &mut Pcg64,
+) -> Vec<f32> {
+    let n = tensor.rows * tensor.cols;
+    let mut gp = vec![0f32; n];
+    let mut gm = vec![0f32; n];
+    read_devices(model, &tensor.g_plus, &tensor.nu_plus, t_seconds, rng, &mut gp);
+    read_devices(model, &tensor.g_minus, &tensor.nu_minus, t_seconds, rng, &mut gm);
+
+    let alpha = if compensate {
+        compensation::gdc_factor(model, tensor, &gp, &gm)
+    } else {
+        1.0
+    };
+
+    let mut w = vec![0f32; n];
+    for r in 0..tensor.rows {
+        let base = r * tensor.cols;
+        for c in 0..tensor.cols {
+            let i = base + c;
+            w[i] = alpha * (gp[i] - gm[i]) / tensor.col_scale[c];
+        }
+    }
+    w
+}
+
+/// Fused drift + read-noise evaluation of one device array. The shared
+/// per-read factors (drift log-ratio, 1/f time factor) are hoisted; the
+/// state-dependent q_s power law is evaluated per device on the drifted
+/// conductance, exactly as the 2-pass reference implementation in
+/// [`drift`]/[`read_noise`] (property-tested equivalent in the module
+/// tests below).
+fn read_devices(
+    model: &PcmModel,
+    g_prog: &[f32],
+    nu: &[f32],
+    t_seconds: f64,
+    rng: &mut Pcg64,
+    out: &mut [f32],
+) {
+    if model.noise_scale == 0.0 {
+        // ideal model: drift/noise disabled entirely
+        if t_seconds <= 0.0 {
+            out.copy_from_slice(g_prog);
+            return;
+        }
+        drift::apply_drift(model, g_prog, nu, t_seconds, out);
+        return;
+    }
+    let log_ratio = ((t_seconds + model.t0) / model.t0).ln() as f32;
+    let t = t_seconds.max(model.t_read);
+    let time_factor =
+        (((t + model.t_read) / (2.0 * model.t_read)).ln()).sqrt() as f32 * model.noise_scale;
+    let inv_gmax = 1.0 / model.g_max;
+    for i in 0..g_prog.len() {
+        // drift
+        let g = if t_seconds > 0.0 {
+            g_prog[i] * (-nu[i] * log_ratio).exp()
+        } else {
+            g_prog[i]
+        };
+        // 1/f read noise at the drifted state
+        let g_rel = (g * inv_gmax).max(1e-6);
+        let q_s = (0.0088 / g_rel.powf(0.65)).min(model.q_s_max);
+        let sigma = g * q_s * time_factor;
+        // skip the draw for zero-conductance devices, matching the
+        // reference passes' RNG consumption exactly
+        out[i] = if sigma > 0.0 {
+            (g + sigma * rng.normal_f32()).max(0.0)
+        } else {
+            g
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aimc::mapping::program_tensor;
+
+    fn toy_tensor(seed: u64) -> (PcmModel, ProgrammedTensor, Vec<f32>) {
+        let model = PcmModel::default();
+        let mut rng = Pcg64::new(seed);
+        let mut w = vec![0f32; 64 * 32];
+        rng.fill_normal(&mut w, 0.0, 0.05);
+        let t = program_tensor(&model, &w, 64, 32, 3.0, &mut rng);
+        (model, t, w)
+    }
+
+    #[test]
+    fn read_at_zero_approximates_target() {
+        let (model, t, w) = toy_tensor(1);
+        let mut rng = Pcg64::new(2);
+        let got = read_tensor(&model, &t, 0.0, true, &mut rng);
+        let err: f64 = got
+            .iter()
+            .zip(&w)
+            .map(|(a, b)| (a - b).abs() as f64)
+            .sum::<f64>()
+            / w.len() as f64;
+        let scale: f64 = w.iter().map(|x| x.abs() as f64).sum::<f64>() / w.len() as f64;
+        assert!(err < 0.25 * scale, "mean err {err} vs scale {scale}");
+    }
+
+    #[test]
+    fn ideal_model_is_exact_at_t0() {
+        let model = PcmModel::ideal();
+        let mut rng = Pcg64::new(3);
+        let mut w = vec![0f32; 128];
+        rng.fill_normal(&mut w, 0.0, 0.05);
+        let t = program_tensor(&model, &w, 16, 8, 0.0, &mut rng);
+        let got = read_tensor(&model, &t, 0.0, false, &mut rng);
+        for (a, b) in got.iter().zip(&w) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn drift_decays_magnitude_without_compensation() {
+        let (model, t, _) = toy_tensor(4);
+        let mut rng = Pcg64::new(5);
+        let w0 = read_tensor(&model, &t, 0.0, false, &mut rng);
+        let wy = read_tensor(&model, &t, 365.0 * 86400.0, false, &mut rng);
+        let m0: f64 = w0.iter().map(|x| x.abs() as f64).sum();
+        let my: f64 = wy.iter().map(|x| x.abs() as f64).sum();
+        assert!(my < 0.95 * m0, "1-year drift should shrink weights: {my} vs {m0}");
+    }
+
+    #[test]
+    fn compensation_recovers_scale() {
+        let (model, t, _) = toy_tensor(6);
+        let mut rng = Pcg64::new(7);
+        let w_raw = read_tensor(&model, &t, 365.0 * 86400.0, false, &mut rng);
+        let w_gdc = read_tensor(&model, &t, 365.0 * 86400.0, true, &mut rng);
+        let m_raw: f64 = w_raw.iter().map(|x| x.abs() as f64).sum();
+        let m_gdc: f64 = w_gdc.iter().map(|x| x.abs() as f64).sum();
+        let w0 = read_tensor(&model, &t, 0.0, false, &mut rng);
+        let m0: f64 = w0.iter().map(|x| x.abs() as f64).sum();
+        assert!((m_gdc - m0).abs() < (m_raw - m0).abs(), "GDC should restore magnitude");
+    }
+
+    #[test]
+    fn fused_read_matches_reference_passes() {
+        // the fused hot path must be bit-identical to the two-pass
+        // reference (drift then read-noise), including RNG consumption
+        let model = PcmModel::default();
+        let mut rng = Pcg64::new(11);
+        let mut g = vec![0f32; 600];
+        rng.fill_normal(&mut g, 10.0, 6.0);
+        for v in g.iter_mut() {
+            *v = v.clamp(0.0, 25.0); // includes exact zeros
+        }
+        let nu = drift::sample_nu(&model, &g, &mut rng);
+        for secs in [0.0, 3600.0, 31_536_000.0] {
+            let mut reference = vec![0f32; g.len()];
+            drift::apply_drift(&model, &g, &nu, secs, &mut reference);
+            let mut r1 = Pcg64::new(99);
+            read_noise::apply_read_noise(&model, &mut reference, secs, &mut r1);
+
+            let mut fused = vec![0f32; g.len()];
+            let mut r2 = Pcg64::new(99);
+            read_devices(&model, &g, &nu, secs, &mut r2, &mut fused);
+            for (a, b) in fused.iter().zip(&reference) {
+                assert!((a - b).abs() <= 2e-5 * b.abs().max(1.0), "{a} vs {b} @ {secs}s");
+            }
+        }
+    }
+
+    #[test]
+    fn longer_drift_means_larger_error() {
+        let (model, t, w) = toy_tensor(8);
+        let mut errs = vec![];
+        for (i, secs) in [0.0, 3600.0, 86400.0 * 30.0, 86400.0 * 3650.0].iter().enumerate() {
+            // average over trials to damp read-noise variance
+            let mut e = 0.0;
+            for trial in 0..5 {
+                let mut rng = Pcg64::new(100 + i as u64 * 17 + trial);
+                let got = read_tensor(&model, &t, *secs, true, &mut rng);
+                e += got
+                    .iter()
+                    .zip(&w)
+                    .map(|(a, b)| ((a - b) * (a - b)) as f64)
+                    .sum::<f64>();
+            }
+            errs.push(e);
+        }
+        assert!(errs[3] > errs[0], "10y {} should exceed 0s {}", errs[3], errs[0]);
+    }
+}

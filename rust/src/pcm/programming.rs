@@ -1,0 +1,81 @@
+//! State-dependent programming (write) noise.
+//!
+//! Iterative program-and-verify on PCM leaves a residual error whose
+//! standard deviation depends on the target state. Joshi et al. 2020
+//! fit a quadratic on the normalised target conductance; the same shape
+//! is used by AIHWKIT's `PCMLikeNoiseModel`:
+//!
+//! σ_prog(g_t) = max(c₀ + c₁·(g_t/g_max) + c₂·(g_t/g_max)², 0)  [µS]
+
+use super::PcmModel;
+use crate::util::rng::Pcg64;
+
+/// σ_prog for one target conductance (µS).
+#[inline]
+pub fn prog_sigma(model: &PcmModel, g_target: f32) -> f32 {
+    let g_rel = (g_target / model.g_max).clamp(0.0, 1.0);
+    let [c0, c1, c2] = model.prog_coeff;
+    (c0 + c1 * g_rel + c2 * g_rel * g_rel).max(0.0) * model.noise_scale
+}
+
+/// Program a buffer of target conductances in place, adding write noise
+/// and clamping to the physical range [0, 1.2·g_max] (slight overshoot
+/// is physical; negative conductance is not).
+pub fn apply_programming_noise(model: &PcmModel, g: &mut [f32], rng: &mut Pcg64) {
+    let hi = 1.2 * model.g_max;
+    for v in g.iter_mut() {
+        let sigma = prog_sigma(model, *v);
+        if sigma > 0.0 {
+            *v = (*v + sigma * rng.normal_f32()).clamp(0.0, hi);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sigma_is_state_dependent_and_positive() {
+        let m = PcmModel::default();
+        let lo = prog_sigma(&m, 0.0);
+        let peak = prog_sigma(&m, m.g_max * 0.8376); // vertex of the quadratic
+        let hi = prog_sigma(&m, m.g_max);
+        assert!(lo > 0.0 && peak > 0.0 && hi > 0.0);
+        // the Joshi'20 fit peaks at g_rel = c1/(2|c2|) ~ 0.84, interior
+        assert!(peak > lo && peak > hi);
+    }
+
+    #[test]
+    fn noise_scale_zero_disables() {
+        let m = PcmModel::ideal();
+        let mut g = vec![1.0f32, 10.0, 20.0];
+        let orig = g.clone();
+        apply_programming_noise(&m, &mut g, &mut Pcg64::new(1));
+        assert_eq!(g, orig);
+    }
+
+    #[test]
+    fn programmed_values_stay_physical() {
+        let m = PcmModel::default();
+        let mut g = vec![0.0f32; 10_000];
+        for (i, v) in g.iter_mut().enumerate() {
+            *v = (i % 26) as f32;
+        }
+        apply_programming_noise(&m, &mut g, &mut Pcg64::new(2));
+        assert!(g.iter().all(|&v| (0.0..=1.2 * m.g_max).contains(&v)));
+    }
+
+    #[test]
+    fn empirical_sigma_matches_model() {
+        let m = PcmModel::default();
+        let target = 12.5f32;
+        let n = 50_000;
+        let mut g = vec![target; n];
+        apply_programming_noise(&m, &mut g, &mut Pcg64::new(3));
+        let mean = g.iter().map(|x| *x as f64).sum::<f64>() / n as f64;
+        let sd = (g.iter().map(|x| (*x as f64 - mean).powi(2)).sum::<f64>() / n as f64).sqrt();
+        let expect = prog_sigma(&m, target) as f64;
+        assert!((sd - expect).abs() < 0.05 * expect, "sd={sd} expect={expect}");
+    }
+}

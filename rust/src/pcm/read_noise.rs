@@ -1,0 +1,78 @@
+//! Instantaneous 1/f read noise.
+//!
+//! Each read integrates device current for `t_read`; the accumulated
+//! low-frequency noise grows with the time since programming:
+//!
+//!   σ_read(g, t) = g · Q_s(g) · √ln((t + t_read) / (2·t_read))
+//!   Q_s(g)       = min(0.0088 / g_rel^0.65, q_s_max)
+//!
+//! (Joshi et al. 2020, eq. for 1/f noise; AIHWKIT `PCMLikeNoiseModel`.)
+
+use super::PcmModel;
+use crate::util::rng::Pcg64;
+
+/// Relative 1/f amplitude for one conductance.
+#[inline]
+pub fn q_s(model: &PcmModel, g: f32) -> f32 {
+    let g_rel = (g / model.g_max).max(1e-6);
+    (0.0088 / g_rel.powf(0.65)).min(model.q_s_max)
+}
+
+/// Add read noise (in place) to drifted conductances at time `t`.
+pub fn apply_read_noise(model: &PcmModel, g: &mut [f32], t_seconds: f64, rng: &mut Pcg64) {
+    if model.noise_scale == 0.0 {
+        return;
+    }
+    // Time factor is shared by every device in the read.
+    let t = t_seconds.max(model.t_read);
+    let time_factor = (((t + model.t_read) / (2.0 * model.t_read)).ln()).sqrt() as f32;
+    for v in g.iter_mut() {
+        let sigma = *v * q_s(model, *v) * time_factor * model.noise_scale;
+        if sigma > 0.0 {
+            *v = (*v + sigma * rng.normal_f32()).max(0.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn q_s_larger_for_low_states_and_capped() {
+        let m = PcmModel::default();
+        assert!(q_s(&m, 0.5) > q_s(&m, 20.0));
+        assert!(q_s(&m, 0.001) <= m.q_s_max);
+    }
+
+    #[test]
+    fn noise_grows_with_time() {
+        let m = PcmModel::default();
+        let base = vec![20.0f32; 40_000];
+        let sd_at = |t: f64, seed: u64| {
+            let mut g = base.clone();
+            apply_read_noise(&m, &mut g, t, &mut Pcg64::new(seed));
+            let mean = g.iter().map(|x| *x as f64).sum::<f64>() / g.len() as f64;
+            (g.iter().map(|x| (*x as f64 - mean).powi(2)).sum::<f64>() / g.len() as f64).sqrt()
+        };
+        let early = sd_at(1.0, 1);
+        let late = sd_at(86_400.0 * 3650.0, 2);
+        assert!(late > early, "late={late} early={early}");
+    }
+
+    #[test]
+    fn conductances_stay_non_negative() {
+        let m = PcmModel::default();
+        let mut g = vec![0.05f32; 10_000];
+        apply_read_noise(&m, &mut g, 86_400.0, &mut Pcg64::new(3));
+        assert!(g.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn ideal_model_noop() {
+        let m = PcmModel::ideal();
+        let mut g = vec![5.0f32; 8];
+        apply_read_noise(&m, &mut g, 1e6, &mut Pcg64::new(4));
+        assert_eq!(g, vec![5.0f32; 8]);
+    }
+}

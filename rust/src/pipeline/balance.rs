@@ -1,0 +1,136 @@
+//! Latency balancing: choose the token parallelism `t` that best
+//! matches PMCA latency to AIMC latency (Fig. 4a) without exceeding the
+//! TCDM (Fig. 4b), then report the end-to-end overhead (Fig. 4c).
+
+use crate::pmca::cluster::SnitchCluster;
+use crate::pmca::kernels::LoraWorkload;
+use crate::pmca::redmule::RedMulE;
+use crate::pmca::tcdm;
+
+use super::schedule::{pipeline_latency, PipelineLatency, TOKEN_PARALLELISM};
+
+#[derive(Clone, Copy, Debug)]
+pub struct BalancePoint {
+    pub t: usize,
+    pub latency: PipelineLatency,
+    pub tcdm_kib: f64,
+    pub fits_tcdm: bool,
+}
+
+/// Evaluate every candidate `t` for a layer at one integration time.
+pub fn sweep(
+    m: usize,
+    n: usize,
+    r: usize,
+    t_int_ns: f64,
+    seq_len: usize,
+    cluster: &SnitchCluster,
+    engine: &RedMulE,
+) -> Vec<BalancePoint> {
+    TOKEN_PARALLELISM
+        .iter()
+        .map(|&t| {
+            let w = LoraWorkload { m, n, r, t };
+            BalancePoint {
+                t,
+                latency: pipeline_latency(&w, t_int_ns, seq_len, cluster, engine),
+                tcdm_kib: tcdm::footprint(&w).kib(),
+                fits_tcdm: tcdm::fits(&w, cluster),
+            }
+        })
+        .collect()
+}
+
+/// The paper's balancing objective: minimise end-to-end latency; prefer
+/// points that fit the TCDM (spilling costs extra SRAM traffic).
+pub fn best(points: &[BalancePoint]) -> BalancePoint {
+    let fitting: Vec<&BalancePoint> = points.iter().filter(|p| p.fits_tcdm).collect();
+    let pool: Vec<&BalancePoint> = if fitting.is_empty() {
+        points.iter().collect()
+    } else {
+        fitting
+    };
+    **pool
+        .iter()
+        .min_by(|a, b| a.latency.total_ns.total_cmp(&b.latency.total_ns))
+        .expect("non-empty sweep")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env() -> (SnitchCluster, RedMulE) {
+        (SnitchCluster::default(), RedMulE::default())
+    }
+
+    /// The calibration anchor for the whole PMCA model: reproduce the
+    /// PMCA/AIMC latency ratios the paper reports in Fig. 4a at the
+    /// *paper's own balance points*.
+    #[test]
+    fn fig4a_ratio_calibration() {
+        let (c, e) = env();
+        // (m, n, t_int, t, paper_ratio)
+        let anchors = [
+            (128usize, 128usize, 128.0f64, 128usize, 1.04f64),
+            (128, 128, 256.0, 8, 0.63),
+            (128, 128, 512.0, 8, 0.32),
+            (512, 128, 128.0, 128, 2.57),
+            (512, 128, 256.0, 128, 1.29),
+            (512, 128, 512.0, 8, 0.70),
+        ];
+        for (m, n, t_int, t, paper) in anchors {
+            let w = LoraWorkload { m, n, r: 8, t };
+            let p = pipeline_latency(&w, t_int, 320, &c, &e);
+            let ratio = p.ratio();
+            assert!(
+                (ratio - paper).abs() / paper < 0.15,
+                "({m}x{n}, {t_int}ns, t={t}): model ratio {ratio:.2} vs paper {paper:.2}"
+            );
+        }
+    }
+
+    #[test]
+    fn best_prefers_tcdm_fitting_points() {
+        let (c, e) = env();
+        let pts = sweep(512, 128, 8, 128.0, 320, &c, &e);
+        let b = best(&pts);
+        assert!(b.fits_tcdm, "picked t={} which spills TCDM", b.t);
+    }
+
+    #[test]
+    fn longer_integration_prefers_fewer_tokens() {
+        // Slow tiles leave the PMCA idle; balance favours small t so
+        // overhead is amortised... larger t always helps AIMC-bound
+        // configs equally, so check the *ratio* moves toward balance.
+        let (c, e) = env();
+        let r128 = best(&sweep(128, 128, 8, 128.0, 320, &c, &e));
+        let r512 = best(&sweep(128, 128, 8, 512.0, 320, &c, &e));
+        assert!(r512.latency.ratio() < r128.latency.ratio());
+    }
+
+    #[test]
+    fn fig4c_overhead_at_balance_is_small() {
+        // Paper: at well-balanced operating points the LoRA overhead is
+        // a few percent (<=2.72% for 512x128, <=4.2% for 128x128). Where
+        // the PMCA is the bottleneck (512x128 at 128 ns) the paper itself
+        // reports PMCA-dominance, so only balanced points are asserted.
+        let (c, e) = env();
+        for (m, n) in [(512usize, 128usize), (128, 128)] {
+            let mut best_overhead = f64::INFINITY;
+            for t_int in [128.0, 256.0, 512.0] {
+                let b = best(&sweep(m, n, 8, t_int, 320, &c, &e));
+                if b.latency.ratio() <= 1.05 {
+                    assert!(
+                        b.latency.overhead() < 0.10,
+                        "{m}x{n}@{t_int}: balanced but overhead {:.3}",
+                        b.latency.overhead()
+                    );
+                }
+                best_overhead = best_overhead.min(b.latency.overhead());
+            }
+            // some integration time must yield the paper's few-percent regime
+            assert!(best_overhead < 0.05, "{m}x{n}: best overhead {best_overhead:.3}");
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! AIMC ⇄ PMCA pipeline scheduler (the paper's hybrid execution model).
+//!
+//! While tile `i`'s batch of `t` tokens integrates on the AIMC crossbar,
+//! the PMCA computes the LoRA path for batch `i−1`; when latencies are
+//! balanced the LoRA adapters add almost no end-to-end time (Fig. 4c:
+//! ≤ 2.7 % on the 512×128 layer, ≤ 4.2 % on 128×128).
+//!
+//! * [`schedule`] — latency of AIMC tiles, the software pipeline, and
+//!   the no-LoRA baseline.
+//! * [`balance`]  — pick the token-parallelism `t` that balances the
+//!   two engines (Fig. 4a) subject to the TCDM capacity (Fig. 4b).
+
+pub mod balance;
+pub mod schedule;

@@ -1,0 +1,87 @@
+//! Snitch-cluster configuration and cycle/latency accounting.
+
+/// Cluster architectural parameters (Methods — PMCA Performance
+/// Estimation). Defaults model the paper's "small Snitch cluster".
+#[derive(Clone, Debug)]
+pub struct SnitchCluster {
+    /// Worker cores executing parallel FP loops (one more core manages
+    /// the DMA engine and is not counted here).
+    pub worker_cores: usize,
+    /// SIMD lanes per 32-bit FPU in FP16 (mixed-precision SIMD).
+    pub simd_lanes: usize,
+    /// Sustained FPU utilisation with FREP + SSR (paper: up to ~90 %).
+    pub fpu_util: f64,
+    /// RedMulE fused-multiply-accumulate blocks (paper config: 32).
+    pub redmule_fma: usize,
+    /// TCDM capacity in bytes (paper: 128 KiB).
+    pub tcdm_bytes: usize,
+    /// DMA engine sustained bandwidth, bytes/cycle (64-bit AXI beat).
+    pub dma_bytes_per_cycle: f64,
+    /// Fixed per-offload overhead: kernel launch, barriers, SSR setup.
+    pub launch_overhead_cycles: u64,
+    /// Core clock, Hz (for cycle→ns conversion).
+    pub freq_hz: f64,
+}
+
+impl Default for SnitchCluster {
+    fn default() -> Self {
+        SnitchCluster {
+            worker_cores: 8,
+            simd_lanes: 2,
+            fpu_util: 0.9,
+            redmule_fma: 32,
+            tcdm_bytes: 128 * 1024,
+            dma_bytes_per_cycle: 8.0,
+            launch_overhead_cycles: 300,
+            freq_hz: 1.0e9,
+        }
+    }
+}
+
+impl SnitchCluster {
+    /// Peak MACs/cycle of the worker cores in FP16 SIMD.
+    pub fn core_macs_per_cycle(&self) -> f64 {
+        self.worker_cores as f64 * self.simd_lanes as f64 * self.fpu_util
+    }
+
+    /// Cycles for an element-wise vector op of `n` elements on the cores.
+    pub fn vector_op_cycles(&self, n: usize) -> u64 {
+        (n as f64 / self.core_macs_per_cycle()).ceil() as u64
+    }
+
+    /// Cycles for a DMA transfer of `bytes`.
+    pub fn dma_cycles(&self, bytes: usize) -> u64 {
+        (bytes as f64 / self.dma_bytes_per_cycle).ceil() as u64
+    }
+
+    pub fn cycles_to_ns(&self, cycles: u64) -> f64 {
+        cycles as f64 * 1e9 / self.freq_hz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_paper_text() {
+        let c = SnitchCluster::default();
+        assert_eq!(c.worker_cores, 8);
+        assert_eq!(c.redmule_fma, 32);
+        assert_eq!(c.tcdm_bytes, 128 * 1024);
+        assert!((c.fpu_util - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn vector_throughput() {
+        let c = SnitchCluster::default();
+        // 14.4 MAC/cycle -> 14400 elements ~ 1000 cycles
+        assert_eq!(c.vector_op_cycles(14_400), 1000);
+    }
+
+    #[test]
+    fn cycle_ns_conversion() {
+        let c = SnitchCluster::default();
+        assert_eq!(c.cycles_to_ns(1000), 1000.0); // 1 GHz: 1 cycle = 1 ns
+    }
+}

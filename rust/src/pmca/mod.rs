@@ -1,0 +1,19 @@
+//! PMCA — RISC-V Programmable Multi-Core Accelerator performance model.
+//!
+//! Models the paper's digital processing unit (Methods — PMCA Performance
+//! Estimation): a small Snitch cluster — nine in-order RV32IMAF cores
+//! (8 workers + 1 DMA manager), FREP + SSR ISA extensions giving ~90 %
+//! FPU utilisation on dense loops, a 128 KiB tightly-coupled data memory
+//! (TCDM) behind a single-cycle interconnect, and a RedMulE matrix
+//! accelerator configured with 32 FMA blocks (FP16).
+//!
+//! The paper obtained cycle counts from RTL simulation; this offline
+//! reproduction uses an analytic cycle model whose free parameters are
+//! calibrated so the PMCA/AIMC latency *ratios* of Fig. 4a are
+//! reproduced (see `pipeline::balance::tests`); DESIGN.md
+//! §Substitutions records the rationale.
+
+pub mod cluster;
+pub mod kernels;
+pub mod redmule;
+pub mod tcdm;

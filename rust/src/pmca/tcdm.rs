@@ -1,0 +1,108 @@
+//! TCDM (tightly-coupled data memory) footprint model — Fig. 4b.
+//!
+//! Working set for one layer's LoRA invocation at `t` parallel tokens,
+//! FP16 streams, double-buffered where the DMA overlaps compute:
+//!
+//! * activations X: t×m, double-buffered (in-flight + in-use),
+//! * adapter weights A (m×r) and B (r×n): resident, single copy,
+//! * tile results XW: t×n, double-buffered,
+//! * rank-space intermediate XA: t×r,
+//! * fused output: t×n (written in place over XW's in-use buffer).
+//!
+//! When the footprint exceeds the 128 KiB TCDM the workload needs either
+//! a larger TCDM or extra TCDM↔SRAM traffic — exactly the regime the
+//! paper flags for the 512×128 layer at large t.
+
+use super::cluster::SnitchCluster;
+use super::kernels::{LoraWorkload, FP16_BYTES};
+
+#[derive(Clone, Copy, Debug)]
+pub struct TcdmFootprint {
+    pub activations: usize,
+    pub adapters: usize,
+    pub tile_results: usize,
+    pub intermediate: usize,
+}
+
+impl TcdmFootprint {
+    pub fn total(&self) -> usize {
+        self.activations + self.adapters + self.tile_results + self.intermediate
+    }
+
+    pub fn kib(&self) -> f64 {
+        self.total() as f64 / 1024.0
+    }
+}
+
+pub fn footprint(w: &LoraWorkload) -> TcdmFootprint {
+    TcdmFootprint {
+        activations: 2 * w.t * w.m * FP16_BYTES,
+        adapters: (w.m * w.r + w.r * w.n) * FP16_BYTES,
+        tile_results: 2 * w.t * w.n * FP16_BYTES,
+        intermediate: w.t * w.r * FP16_BYTES,
+    }
+}
+
+/// Does the working set fit the cluster's TCDM?
+pub fn fits(w: &LoraWorkload, cluster: &SnitchCluster) -> bool {
+    footprint(w).total() <= cluster.tcdm_bytes
+}
+
+/// Largest power-of-two token batch that fits the TCDM.
+pub fn max_tokens(m: usize, n: usize, r: usize, cluster: &SnitchCluster) -> usize {
+    let mut best = 0;
+    let mut t = 1;
+    while t <= 1024 {
+        if fits(
+            &LoraWorkload { m, n, r, t },
+            cluster,
+        ) {
+            best = t;
+        }
+        t *= 2;
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grows_with_tokens() {
+        let f8 = footprint(&LoraWorkload { m: 128, n: 128, r: 8, t: 8 });
+        let f128 = footprint(&LoraWorkload { m: 128, n: 128, r: 8, t: 128 });
+        assert!(f128.total() > f8.total());
+    }
+
+    #[test]
+    fn fig4b_small_layer_range() {
+        // paper: 128x128 layer needs ~8.2-21 KiB over t = 8..128.
+        let lo = footprint(&LoraWorkload { m: 128, n: 128, r: 8, t: 8 }).kib();
+        assert!((4.0..32.0).contains(&lo), "lo={lo}");
+    }
+
+    #[test]
+    fn fig4b_large_layer_exceeds_tcdm_at_high_t() {
+        // paper: 512x128 at large t needs more than the 128 KiB TCDM.
+        let c = SnitchCluster::default();
+        let big = LoraWorkload { m: 512, n: 128, r: 8, t: 128 };
+        assert!(!fits(&big, &c), "{:?}", footprint(&big));
+        let small = LoraWorkload { m: 512, n: 128, r: 8, t: 8 };
+        assert!(fits(&small, &c));
+    }
+
+    #[test]
+    fn max_tokens_monotone_in_layer_size() {
+        let c = SnitchCluster::default();
+        assert!(max_tokens(128, 128, 8, &c) >= max_tokens(512, 128, 8, &c));
+        assert!(max_tokens(512, 128, 8, &c) >= 8);
+    }
+
+    #[test]
+    fn adapters_are_token_independent() {
+        let a = footprint(&LoraWorkload { m: 256, n: 256, r: 8, t: 8 }).adapters;
+        let b = footprint(&LoraWorkload { m: 256, n: 256, r: 8, t: 128 }).adapters;
+        assert_eq!(a, b);
+    }
+}

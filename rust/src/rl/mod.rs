@@ -1,0 +1,13 @@
+//! Reinforcement learning via Group Relative Policy Optimization
+//! (Methods — Instruction Tuning and Reinforcement Learning).
+//!
+//! The policy is the analog decoder (meta weights on simulated AIMC,
+//! LoRA on the DPUs); only the LoRA tree is updated. For each prompt
+//! the coordinator samples a 16-completion group ([`sampling`]), scores
+//! it with the 4-component reward capped at 9.5 ([`reward`]),
+//! normalises advantages within the group, and executes the
+//! AOT-compiled `step_grpo_lora` graph ([`grpo`]).
+
+pub mod grpo;
+pub mod reward;
+pub mod sampling;

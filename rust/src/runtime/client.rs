@@ -1,0 +1,105 @@
+//! PJRT client + compiled-executable cache.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::manifest::{GraphSpec, Manifest};
+
+/// One compiled HLO graph ready to execute.
+pub struct LoadedGraph {
+    pub spec: GraphSpec,
+    exe: xla::PjRtLoadedExecutable,
+    /// Compile wall-time (surfaced in logs; PJRT CPU compiles can take
+    /// seconds for the larger training graphs).
+    pub compile_ms: u128,
+}
+
+impl LoadedGraph {
+    /// Execute with host literals; returns the flat list of outputs
+    /// (the graphs are lowered with return_tuple=True, so the single
+    /// result tuple is decomposed here).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "graph '{}' expects {} inputs, got {}",
+                self.spec.key,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let result = self.exe.execute::<xla::Literal>(inputs)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let outs = tuple.to_tuple()?;
+        if outs.len() != self.spec.outputs.len() {
+            bail!(
+                "graph '{}' returned {} outputs, manifest says {}",
+                self.spec.key,
+                outs.len(),
+                self.spec.outputs.len()
+            );
+        }
+        Ok(outs)
+    }
+}
+
+/// PJRT engine: owns the CPU client, the manifest, and the compile cache.
+pub struct Engine {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<LoadedGraph>>>,
+    pub verbose: bool,
+}
+
+impl Engine {
+    pub fn new(manifest: Manifest) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            verbose: std::env::var("AHWA_VERBOSE").is_ok(),
+        })
+    }
+
+    /// Load from the default artifacts location.
+    pub fn from_artifacts() -> Result<Engine> {
+        let dir = crate::config::manifest::default_artifacts_dir();
+        Engine::new(Manifest::load(dir)?)
+    }
+
+    /// Fetch (compiling + caching on first use) the graph for `key`.
+    pub fn load(&self, key: &str) -> Result<Rc<LoadedGraph>> {
+        if let Some(g) = self.cache.borrow().get(key) {
+            return Ok(g.clone());
+        }
+        let spec = self.manifest.graph(key)?.clone();
+        let path = self.manifest.hlo_path(&spec);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("PJRT compile of '{key}'"))?;
+        let compile_ms = t0.elapsed().as_millis();
+        if self.verbose {
+            eprintln!("[runtime] compiled '{key}' in {compile_ms} ms");
+        }
+        let g = Rc::new(LoadedGraph {
+            spec,
+            exe,
+            compile_ms,
+        });
+        self.cache.borrow_mut().insert(key.to_string(), g.clone());
+        Ok(g)
+    }
+
+    pub fn cached_graphs(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}

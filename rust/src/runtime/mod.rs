@@ -1,0 +1,12 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
+//!
+//! Wraps the `xla` crate exactly as /opt/xla-example/load_hlo does:
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`. Compiled executables are cached per
+//! graph key ([`client`]); [`pack`] converts between [`ParamStore`]s /
+//! host arrays and XLA literals in the manifest's canonical order.
+
+pub mod client;
+pub mod pack;
+
+pub use client::{Engine, LoadedGraph};

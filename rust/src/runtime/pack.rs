@@ -1,0 +1,226 @@
+//! Literal packing: host data ⇄ XLA literals in manifest order.
+//!
+//! Every exported graph takes inputs in the canonical segment order
+//! `meta | train | m | v | data... | key | hw | [opt]` (see aot.py).
+//! [`StepIo`]/[`FwdIo`] assemble those segments from [`ParamStore`]s and
+//! host arrays, validating names/shapes against the [`GraphSpec`].
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::manifest::{GraphSpec, Role};
+use crate::model::params::{ParamStore, Tensor};
+
+// ---------------------------------------------------------------------------
+// Literal constructors / extractors
+// ---------------------------------------------------------------------------
+
+pub fn f32_literal(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    let bytes = unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        shape,
+        bytes,
+    )?)
+}
+
+pub fn i32_literal(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    let bytes = unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        shape,
+        bytes,
+    )?)
+}
+
+pub fn u32_literal(shape: &[usize], data: &[u32]) -> Result<xla::Literal> {
+    let bytes = unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::U32,
+        shape,
+        bytes,
+    )?)
+}
+
+/// PRNG key literal: jax legacy uint32[2] key from a u64 seed.
+pub fn key_literal(seed: u64) -> Result<xla::Literal> {
+    u32_literal(&[2], &[(seed >> 32) as u32, seed as u32])
+}
+
+pub fn literal_to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+/// Convert a ParamStore to literals in its canonical order.
+pub fn store_literals(store: &ParamStore) -> Result<Vec<xla::Literal>> {
+    store
+        .tensors
+        .iter()
+        .map(|t| f32_literal(&t.shape, &t.data))
+        .collect()
+}
+
+/// Overwrite a ParamStore's tensors from a slice of output literals
+/// (same canonical order).
+pub fn update_store(store: &mut ParamStore, lits: &[xla::Literal]) -> Result<()> {
+    if lits.len() != store.len() {
+        bail!("literal count {} != store tensors {}", lits.len(), store.len());
+    }
+    for (t, l) in store.tensors.iter_mut().zip(lits) {
+        let v = l.to_vec::<f32>()?;
+        if v.len() != t.data.len() {
+            bail!("numel mismatch for '{}': {} vs {}", t.name, v.len(), t.data.len());
+        }
+        t.data = v;
+    }
+    Ok(())
+}
+
+/// Build a ParamStore from output literals using the graph's role spec
+/// for names/shapes.
+pub fn store_from_outputs(spec: &GraphSpec, role: Role, lits: &[xla::Literal], offset: usize) -> Result<ParamStore> {
+    let ios: Vec<_> = spec.outputs.iter().filter(|o| o.role == role).collect();
+    let mut tensors = Vec::with_capacity(ios.len());
+    for (i, io) in ios.iter().enumerate() {
+        let v = lits[offset + i].to_vec::<f32>()?;
+        tensors.push(Tensor {
+            name: io.name.clone(),
+            shape: io.shape.clone(),
+            data: v,
+        });
+    }
+    Ok(ParamStore::from_tensors(tensors))
+}
+
+// ---------------------------------------------------------------------------
+// Graph I/O assembly
+// ---------------------------------------------------------------------------
+
+/// Data segment: the per-batch host arrays, in graph order.
+pub enum DataArg<'a> {
+    I32(&'a [i32]),
+    F32(&'a [f32]),
+}
+
+/// Assemble the full input vector for any exported graph.
+///
+/// `opt` is `Some([lr, wd, step])` for training graphs, `None` for
+/// forward graphs.
+pub fn assemble_inputs(
+    spec: &GraphSpec,
+    meta: &ParamStore,
+    train: &ParamStore,
+    moments: Option<(&ParamStore, &ParamStore)>,
+    data: &[DataArg],
+    seed: u64,
+    hw: [f32; 5],
+    opt: Option<[f32; 3]>,
+) -> Result<Vec<xla::Literal>> {
+    meta.validate_against(spec, Role::Meta)
+        .context("meta params")?;
+    train
+        .validate_against(spec, Role::Train)
+        .context("train params")?;
+
+    let mut out = Vec::with_capacity(spec.inputs.len());
+    out.extend(store_literals(meta)?);
+    out.extend(store_literals(train)?);
+    if let Some((m, v)) = moments {
+        out.extend(store_literals(m)?);
+        out.extend(store_literals(v)?);
+    }
+
+    let data_specs: Vec<_> = spec.inputs_with_role(Role::Data).collect();
+    if data_specs.len() != data.len() {
+        bail!(
+            "graph '{}' wants {} data inputs, got {}",
+            spec.key,
+            data_specs.len(),
+            data.len()
+        );
+    }
+    for (io, arg) in data_specs.iter().zip(data) {
+        let lit = match (io.dtype.as_str(), arg) {
+            ("int32", DataArg::I32(v)) => {
+                if v.len() != io.numel() {
+                    bail!("data '{}' numel {} != expected {}", io.name, v.len(), io.numel());
+                }
+                i32_literal(&io.shape, v)?
+            }
+            ("float32", DataArg::F32(v)) => {
+                if v.len() != io.numel() {
+                    bail!("data '{}' numel {} != expected {}", io.name, v.len(), io.numel());
+                }
+                f32_literal(&io.shape, v)?
+            }
+            (dt, _) => bail!("data '{}' dtype mismatch: graph wants {dt}", io.name),
+        };
+        out.push(lit);
+    }
+
+    out.push(key_literal(seed)?);
+    out.push(f32_literal(&[5], &hw)?);
+    if let Some(o) = opt {
+        out.push(f32_literal(&[3], &o)?);
+    }
+
+    if out.len() != spec.inputs.len() {
+        bail!(
+            "assembled {} inputs for '{}', manifest says {}",
+            out.len(),
+            spec.key,
+            spec.inputs.len()
+        );
+    }
+    Ok(out)
+}
+
+/// Parse a training-step graph's outputs: (train', m', v', loss).
+pub fn parse_step_outputs(
+    spec: &GraphSpec,
+    lits: &[xla::Literal],
+) -> Result<(ParamStore, ParamStore, ParamStore, f32)> {
+    let n = spec.outputs.iter().filter(|o| o.role == Role::Train).count();
+    let train = store_from_outputs(spec, Role::Train, lits, 0)?;
+    let m = store_from_outputs(spec, Role::M, lits, n)?;
+    let v = store_from_outputs(spec, Role::V, lits, 2 * n)?;
+    let loss = scalar_f32(&lits[3 * n])?;
+    Ok((train, m, v, loss))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let data = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let lit = f32_literal(&[2, 3], &data).unwrap();
+        assert_eq!(literal_to_f32(&lit).unwrap(), data);
+        assert_eq!(lit.element_count(), 6);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let data = vec![-1i32, 0, 7];
+        let lit = i32_literal(&[3], &data).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), data);
+    }
+
+    #[test]
+    fn key_literal_splits_seed() {
+        let lit = key_literal(0x1234_5678_9abc_def0).unwrap();
+        assert_eq!(lit.to_vec::<u32>().unwrap(), vec![0x1234_5678, 0x9abc_def0]);
+    }
+
+    #[test]
+    fn update_store_roundtrip() {
+        let mut store = ParamStore::from_tensors(vec![Tensor::zeros("x", &[2, 2])]);
+        let lit = f32_literal(&[2, 2], &[1.0, 2.0, 3.0, 4.0]).unwrap();
+        update_store(&mut store, &[lit]).unwrap();
+        assert_eq!(store.get("x").unwrap().data, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+}

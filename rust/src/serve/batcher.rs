@@ -1,0 +1,158 @@
+//! Per-task dynamic batching.
+//!
+//! Requests accumulate in per-task queues; a batch is released when it
+//! reaches `max_batch` (the compiled graph's batch dimension) or when
+//! its oldest request has waited `max_wait`. This is the standard
+//! dynamic-batching policy (vLLM/Triton style) adapted to the fact that
+//! task switches cost an adapter swap — batches never mix tasks.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct Pending<T> {
+    pub item: T,
+    pub enqueued: Instant,
+}
+
+#[derive(Debug)]
+pub struct Batcher<T> {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    queues: BTreeMap<String, VecDeque<Pending<T>>>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(max_batch: usize, max_wait: Duration) -> Batcher<T> {
+        Batcher {
+            max_batch,
+            max_wait,
+            queues: BTreeMap::new(),
+        }
+    }
+
+    pub fn push(&mut self, task: &str, item: T) {
+        self.queues.entry(task.to_string()).or_default().push_back(Pending {
+            item,
+            enqueued: Instant::now(),
+        });
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queues.values().map(|q| q.len()).sum()
+    }
+
+    pub fn pending_for(&self, task: &str) -> usize {
+        self.queues.get(task).map(|q| q.len()).unwrap_or(0)
+    }
+
+    /// Release the most urgent ready batch, if any. Ready = full batch
+    /// OR oldest item past the deadline. Among ready tasks, the one
+    /// with the oldest head-of-line request wins (no task starvation).
+    pub fn pop_ready(&mut self, now: Instant) -> Option<(String, Vec<T>)> {
+        let mut best: Option<(&String, Instant)> = None;
+        for (task, q) in &self.queues {
+            if q.is_empty() {
+                continue;
+            }
+            let head = q.front().unwrap().enqueued;
+            let ready = q.len() >= self.max_batch || now.duration_since(head) >= self.max_wait;
+            if ready && best.map(|(_, h)| head < h).unwrap_or(true) {
+                best = Some((task, head));
+            }
+        }
+        let task = best.map(|(t, _)| t.clone())?;
+        let q = self.queues.get_mut(&task).unwrap();
+        let n = q.len().min(self.max_batch);
+        let items = q.drain(..n).map(|p| p.item).collect();
+        Some((task, items))
+    }
+
+    /// Drain everything regardless of deadlines (shutdown path).
+    pub fn drain_all(&mut self) -> Vec<(String, Vec<T>)> {
+        let mut out = Vec::new();
+        for (task, q) in &mut self.queues {
+            while !q.is_empty() {
+                let n = q.len().min(self.max_batch);
+                out.push((task.clone(), q.drain(..n).map(|p| p.item).collect()));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn now() -> Instant {
+        Instant::now()
+    }
+
+    #[test]
+    fn full_batch_releases_immediately() {
+        let mut b: Batcher<u32> = Batcher::new(2, Duration::from_secs(60));
+        b.push("sst2", 1);
+        assert!(b.pop_ready(now()).is_none(), "partial batch must wait");
+        b.push("sst2", 2);
+        let (task, items) = b.pop_ready(now()).unwrap();
+        assert_eq!(task, "sst2");
+        assert_eq!(items, vec![1, 2]);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn deadline_releases_partial_batch() {
+        let mut b: Batcher<u32> = Batcher::new(8, Duration::from_millis(0));
+        b.push("qqp", 7);
+        let (task, items) = b.pop_ready(now() + Duration::from_millis(1)).unwrap();
+        assert_eq!(task, "qqp");
+        assert_eq!(items, vec![7]);
+    }
+
+    #[test]
+    fn tasks_never_mix() {
+        let mut b: Batcher<u32> = Batcher::new(4, Duration::from_millis(0));
+        b.push("a", 1);
+        b.push("b", 2);
+        let later = now() + Duration::from_millis(1);
+        let (t1, i1) = b.pop_ready(later).unwrap();
+        let (t2, i2) = b.pop_ready(later).unwrap();
+        assert_ne!(t1, t2);
+        assert_eq!(i1.len() + i2.len(), 2);
+    }
+
+    #[test]
+    fn oldest_head_of_line_wins() {
+        let mut b: Batcher<u32> = Batcher::new(4, Duration::from_millis(0));
+        b.push("late", 1);
+        std::thread::sleep(Duration::from_millis(2));
+        b.push("early", 2);
+        // "late" was enqueued first -> served first despite name order
+        let (t, _) = b.pop_ready(now() + Duration::from_millis(1)).unwrap();
+        assert_eq!(t, "late");
+    }
+
+    #[test]
+    fn batch_size_capped() {
+        let mut b: Batcher<u32> = Batcher::new(3, Duration::from_millis(0));
+        for i in 0..7 {
+            b.push("x", i);
+        }
+        let (_, items) = b.pop_ready(now()).unwrap();
+        assert_eq!(items.len(), 3);
+        assert_eq!(b.pending(), 4);
+    }
+
+    #[test]
+    fn drain_all_empties() {
+        let mut b: Batcher<u32> = Batcher::new(3, Duration::from_secs(60));
+        for i in 0..5 {
+            b.push("x", i);
+        }
+        b.push("y", 9);
+        let batches = b.drain_all();
+        assert_eq!(batches.iter().map(|(_, v)| v.len()).sum::<usize>(), 6);
+        assert_eq!(b.pending(), 0);
+    }
+}

@@ -1,0 +1,20 @@
+//! Multi-task serving coordinator (Table III's deployment story).
+//!
+//! ONE analog base model (weight-stationary on the AIMC tiles — here, a
+//! fixed meta store evaluated through the compiled forward graph) serves
+//! N tasks by hot-swapping N small LoRA adapter sets on the DPUs:
+//!
+//! * [`registry`] — thread-safe adapter registry (deploy / swap / version),
+//! * [`batcher`]  — per-task dynamic batching with a max-wait deadline,
+//! * [`router`]   — request admission + task routing,
+//! * [`server`]   — the worker loop that owns the PJRT engine and drains
+//!   batches through the forward graph, with latency/throughput metrics.
+//!
+//! The PJRT handles are not Send, so the engine lives on the worker
+//! thread; clients talk over mpsc channels — the same ownership shape a
+//! vLLM-style router/worker split uses.
+
+pub mod batcher;
+pub mod registry;
+pub mod router;
+pub mod server;

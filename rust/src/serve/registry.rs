@@ -1,0 +1,74 @@
+//! Thread-safe adapter registry shared between the router (deploys) and
+//! the worker (reads) — the serving-side view of `model::lora`.
+
+use std::sync::{Arc, RwLock};
+
+use anyhow::Result;
+
+use crate::model::lora::AdapterRegistry;
+use crate::model::params::ParamStore;
+
+#[derive(Clone, Default)]
+pub struct SharedRegistry(Arc<RwLock<AdapterRegistry>>);
+
+impl SharedRegistry {
+    pub fn new() -> SharedRegistry {
+        SharedRegistry(Arc::new(RwLock::new(AdapterRegistry::new())))
+    }
+
+    /// Hot-swap deployment: O(adapter size), never touches the base
+    /// model (the paper's on-chip task-switching claim).
+    pub fn deploy(&self, task: &str, params: ParamStore) -> u64 {
+        self.0.write().unwrap().deploy(task, params)
+    }
+
+    pub fn get(&self, task: &str) -> Result<ParamStore> {
+        Ok(self.0.read().unwrap().get(task)?.clone())
+    }
+
+    pub fn version(&self, task: &str) -> Option<u64> {
+        self.0.read().unwrap().info(task).map(|i| i.version)
+    }
+
+    pub fn tasks(&self) -> Vec<String> {
+        self.0.read().unwrap().tasks()
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.0.read().unwrap().total_params()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::Tensor;
+
+    #[test]
+    fn concurrent_deploy_and_read() {
+        let reg = SharedRegistry::new();
+        let mut handles = vec![];
+        for i in 0..4 {
+            let r = reg.clone();
+            handles.push(std::thread::spawn(move || {
+                let p = ParamStore::from_tensors(vec![Tensor::zeros("a", &[i + 1])]);
+                r.deploy(&format!("task{i}"), p);
+                r.get(&format!("task{i}")).unwrap();
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(reg.tasks().len(), 4);
+    }
+
+    #[test]
+    fn version_tracks_redeploys() {
+        let reg = SharedRegistry::new();
+        let p = || ParamStore::from_tensors(vec![Tensor::zeros("a", &[2])]);
+        reg.deploy("t", p());
+        reg.deploy("t", p());
+        assert_eq!(reg.version("t"), Some(2));
+        assert_eq!(reg.version("missing"), None);
+    }
+}

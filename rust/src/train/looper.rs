@@ -1,0 +1,154 @@
+//! The training loop driver (L3 side of S6 in DESIGN.md).
+
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::config::run::TrainConfig;
+use crate::model::params::ParamStore;
+use crate::runtime::pack::{assemble_inputs, parse_step_outputs, DataArg};
+use crate::runtime::{Engine, LoadedGraph};
+use crate::util::rng::Pcg64;
+
+/// Owned batch data (the borrowing [`DataArg`] view is built on demand).
+#[derive(Clone, Debug)]
+pub enum OwnedArg {
+    I32(Vec<i32>),
+    F32(Vec<f32>),
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct OwnedBatch(pub Vec<OwnedArg>);
+
+impl OwnedBatch {
+    pub fn args(&self) -> Vec<DataArg<'_>> {
+        self.0
+            .iter()
+            .map(|a| match a {
+                OwnedArg::I32(v) => DataArg::I32(v),
+                OwnedArg::F32(v) => DataArg::F32(v),
+            })
+            .collect()
+    }
+}
+
+/// Drives one AOT-compiled optimizer-step graph.
+pub struct Trainer {
+    pub graph: Rc<LoadedGraph>,
+    pub meta: ParamStore,
+    pub train: ParamStore,
+    m: ParamStore,
+    v: ParamStore,
+    pub cfg: TrainConfig,
+    pub step_idx: usize,
+    pub losses: Vec<f32>,
+    rng: Pcg64,
+}
+
+impl Trainer {
+    /// `train_init` must match the graph's trainable tree (lora+head for
+    /// AHWA-LoRA graphs, meta+head for full-AHWA graphs).
+    pub fn new(
+        engine: &Engine,
+        graph_key: &str,
+        meta: ParamStore,
+        train_init: ParamStore,
+        cfg: TrainConfig,
+    ) -> Result<Trainer> {
+        let graph = engine
+            .load(graph_key)
+            .with_context(|| format!("loading training graph '{graph_key}'"))?;
+        use crate::config::manifest::Role;
+        meta.validate_against(&graph.spec, Role::Meta)?;
+        train_init.validate_against(&graph.spec, Role::Train)?;
+        let m = ParamStore::zeros_like_role(&graph.spec, Role::M);
+        let v = ParamStore::zeros_like_role(&graph.spec, Role::V);
+        let rng = Pcg64::with_stream(cfg.seed, 0x7a41);
+        Ok(Trainer {
+            graph,
+            meta,
+            train: train_init,
+            m,
+            v,
+            cfg,
+            step_idx: 0,
+            losses: Vec::new(),
+            rng,
+        })
+    }
+
+    /// One optimizer step on a batch; returns the loss.
+    pub fn step(&mut self, data: &[DataArg]) -> Result<f32> {
+        let lr = self.cfg.lr_at(self.step_idx) as f32;
+        let opt = [lr, self.cfg.weight_decay as f32, (self.step_idx + 1) as f32];
+        let seed = self.rng.next_u64();
+        let inputs = assemble_inputs(
+            &self.graph.spec,
+            &self.meta,
+            &self.train,
+            Some((&self.m, &self.v)),
+            data,
+            seed,
+            self.cfg.hw_vec(),
+            Some(opt),
+        )?;
+        let outs = self.graph.run(&inputs)?;
+        let (train, m, v, loss) = parse_step_outputs(&self.graph.spec, &outs)?;
+        self.train = train;
+        self.m = m;
+        self.v = v;
+        self.step_idx += 1;
+        self.losses.push(loss);
+        Ok(loss)
+    }
+
+    /// Run the configured number of steps, pulling batches from
+    /// `next_batch(step, rng)`. Returns the loss curve.
+    pub fn run<F>(&mut self, mut next_batch: F) -> Result<Vec<f32>>
+    where
+        F: FnMut(usize, &mut Pcg64) -> OwnedBatch,
+    {
+        let mut batch_rng = Pcg64::with_stream(self.cfg.seed, 0xba7c);
+        let steps = self.cfg.steps;
+        let t0 = std::time::Instant::now();
+        for s in 0..steps {
+            let batch = next_batch(s, &mut batch_rng);
+            let loss = self.step(&batch.args())?;
+            if !loss.is_finite() {
+                // collapse detection: the LR/noise ablations rely on this
+                eprintln!("[train] step {s}: loss diverged ({loss}); stopping");
+                break;
+            }
+            if self.cfg.log_every > 0 && (s + 1) % self.cfg.log_every == 0 {
+                let avg: f32 =
+                    self.losses[self.losses.len().saturating_sub(self.cfg.log_every)..]
+                        .iter()
+                        .sum::<f32>()
+                        / self.cfg.log_every.min(self.losses.len()) as f32;
+                eprintln!(
+                    "[train] step {}/{} loss {:.4} ({:.0} ms/step)",
+                    s + 1,
+                    steps,
+                    avg,
+                    t0.elapsed().as_millis() as f64 / (s + 1) as f64
+                );
+            }
+        }
+        Ok(self.losses.clone())
+    }
+
+    /// Mean loss over the last `n` steps (convergence diagnostics).
+    pub fn tail_loss(&self, n: usize) -> f32 {
+        let tail = &self.losses[self.losses.len().saturating_sub(n)..];
+        if tail.is_empty() {
+            f32::NAN
+        } else {
+            tail.iter().sum::<f32>() / tail.len() as f32
+        }
+    }
+
+    /// Did training collapse (NaN/inf loss)?
+    pub fn collapsed(&self) -> bool {
+        self.losses.last().map(|l| !l.is_finite()).unwrap_or(false)
+    }
+}

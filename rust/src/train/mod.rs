@@ -1,0 +1,12 @@
+//! Training drivers.
+//!
+//! The entire optimizer step (noisy forward, backward through simulated
+//! hardware, AdamW on the trainable tree) is ONE AOT-compiled HLO
+//! executable; [`looper::Trainer`] is the thin L3 driver that streams
+//! batches and shuttles parameter literals. [`memory`] is the analytic
+//! training-cost model behind Table II.
+
+pub mod looper;
+pub mod memory;
+
+pub use looper::{OwnedArg, OwnedBatch, Trainer};

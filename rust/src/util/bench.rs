@@ -1,0 +1,176 @@
+//! Micro-benchmark harness (the image has no criterion).
+//!
+//! `cargo bench` targets use `harness = false` and drive this directly.
+//! Methodology follows criterion's core loop: warmup, then timed batches
+//! until a wall-clock budget is hit; reports mean / p50 / p95 over batch
+//! means plus throughput if an item count is supplied.
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub throughput: Option<f64>, // items / second
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let t = match self.throughput {
+            Some(t) if t >= 1e9 => format!("  {:8.2} Gitem/s", t / 1e9),
+            Some(t) if t >= 1e6 => format!("  {:8.2} Mitem/s", t / 1e6),
+            Some(t) if t >= 1e3 => format!("  {:8.2} Kitem/s", t / 1e3),
+            Some(t) => format!("  {t:8.2} item/s"),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} {:>12} iters  mean {:>12}  p50 {:>12}  p95 {:>12}{}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+            t
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3} µs", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+pub struct Bencher {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn with_budget(secs: f64) -> Bencher {
+        Bencher {
+            budget: Duration::from_secs_f64(secs),
+            ..Default::default()
+        }
+    }
+
+    /// Benchmark `f`, which performs ONE logical iteration per call.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) -> &BenchResult {
+        self.bench_items(name, None, f)
+    }
+
+    /// Benchmark with a per-iteration item count for throughput reporting.
+    pub fn bench_items<F: FnMut()>(&mut self, name: &str, items: Option<u64>, mut f: F) -> &BenchResult {
+        // Warmup + calibrate batch size so one batch is ~1-10 ms.
+        let wstart = Instant::now();
+        let mut calib_iters: u64 = 0;
+        while wstart.elapsed() < self.warmup {
+            f();
+            calib_iters += 1;
+        }
+        let per_iter = self.warmup.as_nanos() as f64 / calib_iters.max(1) as f64;
+        let batch = ((5e6 / per_iter).ceil() as u64).clamp(1, 1 << 20);
+
+        let mut batch_means: Vec<f64> = Vec::new();
+        let mut total_iters = 0u64;
+        let start = Instant::now();
+        while start.elapsed() < self.budget {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            let dt = t0.elapsed().as_nanos() as f64;
+            batch_means.push(dt / batch as f64);
+            total_iters += batch;
+        }
+        let mean_ns = stats::mean(&batch_means);
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: total_iters,
+            mean_ns,
+            p50_ns: stats::percentile(&batch_means, 50.0),
+            p95_ns: stats::percentile(&batch_means, 95.0),
+            throughput: items.map(|n| n as f64 * 1e9 / mean_ns),
+        };
+        println!("{}", result.report());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Time a single execution of a long-running section (for end-to-end
+    /// drivers where repeated runs are too expensive).
+    pub fn once<T, F: FnOnce() -> T>(&mut self, name: &str, f: F) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        let ns = t0.elapsed().as_nanos() as f64;
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: 1,
+            mean_ns: ns,
+            p50_ns: ns,
+            p95_ns: ns,
+            throughput: None,
+        };
+        println!("{}", result.report());
+        self.results.push(result);
+        out
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(10),
+            budget: Duration::from_millis(50),
+            results: vec![],
+        };
+        let mut acc = 0u64;
+        let r = b.bench_items("spin", Some(10), || {
+            for i in 0..10u64 {
+                acc = black_box(acc.wrapping_add(i));
+            }
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.throughput.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert!(fmt_ns(1.5e3).contains("µs"));
+        assert!(fmt_ns(2.5e6).contains("ms"));
+        assert!(fmt_ns(3.0e9).contains(" s"));
+    }
+}

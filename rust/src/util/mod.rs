@@ -1,0 +1,14 @@
+//! Infrastructure substrates.
+//!
+//! The build image is fully offline and the vendored crate set contains
+//! only the `xla` crate's dependency closure — no serde, clap, rand,
+//! criterion or tokio. Everything a production coordinator needs from
+//! those crates is implemented here, scoped to what this system uses.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,112 @@
+//! Property-based testing mini-framework (the image has no proptest).
+//!
+//! `check(name, cases, |g| ...)` runs a property over `cases` randomized
+//! inputs drawn through the [`Gen`] handle; on failure it reports the
+//! case seed so the exact input is reproducible with `replay`.
+
+use super::rng::Pcg64;
+
+pub struct Gen {
+    pub rng: Pcg64,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform_in(lo, hi)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform_in(lo as f64, hi as f64) as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn vec_normal(&mut self, len: usize, mu: f32, sigma: f32) -> Vec<f32> {
+        let mut v = vec![0f32; len];
+        self.rng.fill_normal(&mut v, mu, sigma);
+        v
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+}
+
+/// Run `prop` over `cases` random inputs. Panics (with the failing seed)
+/// on the first property violation.
+pub fn check<F: FnMut(&mut Gen)>(name: &str, cases: u64, mut prop: F) {
+    for case in 0..cases {
+        let seed = 0x5eed_0000 + case;
+        run_case(name, seed, &mut prop);
+    }
+}
+
+/// Re-run a single failing case by seed.
+pub fn replay<F: FnMut(&mut Gen)>(name: &str, seed: u64, mut prop: F) {
+    run_case(name, seed, &mut prop);
+}
+
+fn run_case<F: FnMut(&mut Gen)>(name: &str, seed: u64, prop: &mut F) {
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let mut g = Gen {
+            rng: Pcg64::new(seed),
+            seed,
+        };
+        prop(&mut g);
+    }));
+    if let Err(e) = result {
+        let msg = e
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_else(|| "<non-string panic>".into());
+        panic!("property '{name}' failed at seed {seed:#x}: {msg}\nreplay with util::proptest::replay(\"{name}\", {seed:#x}, ...)");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("add-commutes", 32, |g| {
+            let (a, b) = (g.f64_in(-1e3, 1e3), g.f64_in(-1e3, 1e3));
+            assert_eq!(a + b, b + a);
+            n += 1;
+        });
+        assert_eq!(n, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'sometimes-fails'")]
+    fn failing_property_reports_seed() {
+        check("sometimes-fails", 64, |g| {
+            assert!(g.usize_in(0, 9) < 9, "drew the bad value");
+        });
+    }
+
+    #[test]
+    fn gen_ranges() {
+        check("gen-ranges", 16, |g| {
+            let u = g.usize_in(3, 7);
+            assert!((3..=7).contains(&u));
+            let f = g.f32_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+            let v = g.vec_f32(10, 0.0, 1.0);
+            assert_eq!(v.len(), 10);
+        });
+    }
+}

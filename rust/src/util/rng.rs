@@ -1,0 +1,259 @@
+//! PCG64-based pseudo-random number generation.
+//!
+//! The PCM device model draws hundreds of millions of Gaussians per
+//! drift-evaluation trial (one per device, per non-ideality), so this is
+//! a genuinely hot path (see EXPERIMENTS.md §Perf). We use the PCG-XSL-RR
+//! 128/64 generator (O'Neill 2014) for the uniform stream and a cached
+//! Box–Muller transform for normals.
+
+/// PCG-XSL-RR 128/64: 128-bit LCG state, 64-bit xorshift+rotate output.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+    /// Box–Muller produces pairs; cache the second draw.
+    spare_normal: Option<f64>,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xda3e_39cb_94b9_5bdb)
+    }
+
+    /// Independent streams for the same seed (used to give every tile /
+    /// trial / worker its own generator without correlation).
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg64 {
+            state: 0,
+            inc: ((stream as u128) << 1) | 1,
+            spare_normal: None,
+        };
+        rng.next_u64();
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.next_u64();
+        rng
+    }
+
+    /// Deterministic child generator — the rust analogue of
+    /// `jax.random.fold_in`.
+    pub fn fold_in(&self, data: u64) -> Pcg64 {
+        let mut h = self.state as u64 ^ 0x9e37_79b9_7f4a_7c15;
+        h = h.wrapping_mul(0xbf58_476d_1ce4_e5b9) ^ data;
+        h = (h ^ (h >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        Pcg64::with_stream(h ^ (h >> 31), (self.inc >> 1) as u64 ^ data)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        // multiply-shift; bias is negligible for n << 2^64
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Standard normal via the Marsaglia polar method (pair-cached).
+    /// ~3× faster than sin/cos Box–Muller on this target — the device
+    /// model draws two normals per weight, so this is THE hot path
+    /// (EXPERIMENTS.md §Perf, iteration 1).
+    #[inline]
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        loop {
+            let x = 2.0 * self.uniform() - 1.0;
+            let y = 2.0 * self.uniform() - 1.0;
+            let s = x * x + y * y;
+            if s < 1.0 && s > 0.0 {
+                let f = (-2.0 * s.ln() / s).sqrt();
+                self.spare_normal = Some(y * f);
+                return x * f;
+            }
+        }
+    }
+
+    #[inline]
+    pub fn normal_f32(&mut self) -> f32 {
+        self.normal() as f32
+    }
+
+    /// Fill a slice with i.i.d. N(mu, sigma) — the vectorised hot path.
+    pub fn fill_normal(&mut self, out: &mut [f32], mu: f32, sigma: f32) {
+        // polar method writing accepted pairs directly (no Option churn)
+        let mut i = 0;
+        let n = out.len();
+        while i + 1 < n {
+            let x = 2.0 * self.uniform() - 1.0;
+            let y = 2.0 * self.uniform() - 1.0;
+            let s = x * x + y * y;
+            if s >= 1.0 || s == 0.0 {
+                continue;
+            }
+            let f = (-2.0 * s.ln() / s).sqrt();
+            out[i] = mu + sigma * (x * f) as f32;
+            out[i + 1] = mu + sigma * (y * f) as f32;
+            i += 2;
+        }
+        if i < n {
+            out[i] = mu + sigma * self.normal_f32();
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) (partial Fisher–Yates).
+    pub fn choose(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let k = k.min(n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    /// Shuffle a slice in place.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Categorical draw from unnormalised non-negative weights.
+    pub fn categorical(&mut self, weights: &[f32]) -> usize {
+        let total: f64 = weights.iter().map(|w| *w as f64).sum();
+        if total <= 0.0 {
+            return self.below(weights.len().max(1));
+        }
+        let mut u = self.uniform() * total;
+        for (i, w) in weights.iter().enumerate() {
+            u -= *w as f64;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Pcg64::with_stream(42, 1);
+        let mut b = Pcg64::with_stream(42, 2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn fold_in_children_differ() {
+        let root = Pcg64::new(7);
+        let mut c1 = root.fold_in(1);
+        let mut c2 = root.fold_in(2);
+        assert_ne!(c1.next_u64(), c2.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut r = Pcg64::new(1);
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::new(3);
+        let n = 200_000;
+        let (mut s, mut s2) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let z = r.normal();
+            s += z;
+            s2 += z * z;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn fill_normal_matches_moments() {
+        let mut r = Pcg64::new(4);
+        let mut buf = vec![0f32; 100_001]; // odd length exercises the tail
+        r.fill_normal(&mut buf, 2.0, 0.5);
+        let mean = buf.iter().map(|x| *x as f64).sum::<f64>() / buf.len() as f64;
+        let var = buf.iter().map(|x| (*x as f64 - mean).powi(2)).sum::<f64>() / buf.len() as f64;
+        assert!((mean - 2.0).abs() < 0.02);
+        assert!((var - 0.25).abs() < 0.02);
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Pcg64::new(5);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            seen[r.below(10)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn choose_distinct() {
+        let mut r = Pcg64::new(6);
+        let picked = r.choose(100, 20);
+        let mut sorted = picked.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 20);
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut r = Pcg64::new(7);
+        let mut counts = [0usize; 3];
+        for _ in 0..30_000 {
+            counts[r.categorical(&[1.0, 0.0, 3.0])] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        assert!(counts[2] > counts[0] * 2);
+    }
+}

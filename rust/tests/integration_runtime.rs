@@ -1,0 +1,148 @@
+//! End-to-end integration over the real PJRT runtime and the tiny
+//! artifacts: load HLO, train AHWA-LoRA, evaluate with the PCM device
+//! model. This is the cross-layer contract test between python/aot.py
+//! and the rust coordinator.
+
+use ahwa_lora::config::manifest::{default_artifacts_dir, Manifest, Role};
+use ahwa_lora::config::run::TrainConfig;
+use ahwa_lora::data::squad::SquadTask;
+use ahwa_lora::eval::drift_eval::{pcm_eval_hw, AnalogDeployment, QaEvalSet};
+use ahwa_lora::model::checkpoint;
+use ahwa_lora::pcm::PcmModel;
+use ahwa_lora::runtime::Engine;
+use ahwa_lora::train::{OwnedArg, OwnedBatch, Trainer};
+use ahwa_lora::util::rng::Pcg64;
+
+fn engine() -> Option<Engine> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (`make artifacts`)");
+        return None;
+    }
+    Some(Engine::new(Manifest::load(dir).unwrap()).unwrap())
+}
+
+fn load_inits(engine: &Engine, variant: &str, graph_tag: &str) -> (ahwa_lora::model::params::ParamStore, ahwa_lora::model::params::ParamStore) {
+    let meta = checkpoint::load(engine.manifest.init_path(&format!("{variant}.meta"))).unwrap();
+    let train = checkpoint::load(engine.manifest.init_path(&format!("{graph_tag}.train"))).unwrap();
+    (meta, train)
+}
+
+#[test]
+fn tiny_lora_training_reduces_loss() {
+    let Some(engine) = engine() else { return };
+    let (meta, train) = load_inits(&engine, "tiny", "tiny.step_qa_lora");
+    let cfg = TrainConfig {
+        steps: 30,
+        lr: 5e-3,
+        weight_noise: 0.05,
+        log_every: 0,
+        ..Default::default()
+    };
+    let variant = engine.manifest.variant("tiny").unwrap().clone();
+    let task = SquadTask::new(variant.vocab, variant.seq);
+    let mut trainer = Trainer::new(&engine, "tiny/step_qa_lora", meta, train, cfg).unwrap();
+    let b = variant.train_batch;
+    let losses = trainer
+        .run(|_, rng| {
+            let batch = task.batch(b, rng);
+            OwnedBatch(vec![
+                OwnedArg::I32(batch.tokens),
+                OwnedArg::I32(batch.starts),
+                OwnedArg::I32(batch.ends),
+            ])
+        })
+        .unwrap();
+    assert_eq!(losses.len(), 30);
+    let head: f32 = losses[..5].iter().sum::<f32>() / 5.0;
+    let tail = trainer.tail_loss(5);
+    assert!(
+        tail < head,
+        "loss should decrease: head {head:.4} -> tail {tail:.4}"
+    );
+    assert!(!trainer.collapsed());
+}
+
+#[test]
+fn full_ahwa_graph_trains_meta_tree() {
+    let Some(engine) = engine() else { return };
+    let g = engine.manifest.graph("tiny/step_qa_full").unwrap();
+    // trainable tree strictly larger than lora graph's
+    let lora_g = engine.manifest.graph("tiny/step_qa_lora").unwrap();
+    assert!(g.param_count(Role::Train) > 5 * lora_g.param_count(Role::Train));
+}
+
+#[test]
+fn fwd_and_pcm_drift_eval_compose() {
+    let Some(engine) = engine() else { return };
+    let (meta, train) = load_inits(&engine, "tiny", "tiny.step_qa_lora");
+    let variant = engine.manifest.variant("tiny").unwrap().clone();
+    let fwd = engine.load("tiny/fwd_qa").unwrap();
+
+    let task = SquadTask::new(variant.vocab, variant.seq);
+    let eval = QaEvalSet::generate(&task, 16, 99);
+
+    // digital score (untrained net: near-random but valid)
+    let hw = pcm_eval_hw(127.0, 127.0, 0.0);
+    let (f1_digital, em) = eval.score(&fwd, &meta, &train, hw, 1).unwrap();
+    assert!((0.0..=100.0).contains(&f1_digital) && (0.0..=100.0).contains(&em));
+
+    // program onto PCM, read at 1 year, evaluate
+    let mut rng = Pcg64::new(5);
+    let dep = AnalogDeployment::program(meta, PcmModel::default(), 3.0, &mut rng);
+    assert!(dep.n_devices() > 10_000);
+    let meta_1y = dep.meta_at(31_536_000.0, true, &mut rng);
+    let (f1_analog, _) = eval.score(&fwd, &meta_1y, &train, hw, 1).unwrap();
+    assert!((0.0..=100.0).contains(&f1_analog));
+}
+
+#[test]
+fn decoder_lm_graph_runs() {
+    let Some(engine) = engine() else { return };
+    let (meta, train) = load_inits(&engine, "tiny_dec", "tiny_dec.step_lm_lora");
+    let fwd = engine.load("tiny_dec/fwd_lm").unwrap();
+    let v = engine.manifest.variant("tiny_dec").unwrap().clone();
+    let tokens = vec![4i32; v.eval_batch * v.seq];
+    let logits = ahwa_lora::eval::drift_eval::lm_logits(
+        &fwd,
+        &meta,
+        &train,
+        &tokens,
+        pcm_eval_hw(0.0, 0.0, 0.0),
+        7,
+    )
+    .unwrap();
+    assert_eq!(logits.len(), v.eval_batch * v.seq * v.vocab);
+    assert!(logits.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn training_is_deterministic_in_seed() {
+    let Some(engine) = engine() else { return };
+    let variant = engine.manifest.variant("tiny").unwrap().clone();
+    let task = SquadTask::new(variant.vocab, variant.seq);
+    let mut run = |seed: u64| -> Vec<f32> {
+        let (meta, train) = load_inits(&engine, "tiny", "tiny.step_qa_lora");
+        let cfg = TrainConfig {
+            steps: 5,
+            seed,
+            log_every: 0,
+            ..Default::default()
+        };
+        let mut t = Trainer::new(&engine, "tiny/step_qa_lora", meta, train, cfg).unwrap();
+        t.run(|_, rng| {
+            let b = task.batch(variant.train_batch, rng);
+            OwnedBatch(vec![
+                OwnedArg::I32(b.tokens),
+                OwnedArg::I32(b.starts),
+                OwnedArg::I32(b.ends),
+            ])
+        })
+        .unwrap()
+    };
+    let a = run(11);
+    let b = run(11);
+    let c = run(12);
+    assert_eq!(a, b, "same seed must reproduce exactly");
+    assert_ne!(a, c, "different seed must differ");
+}

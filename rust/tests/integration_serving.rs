@@ -1,0 +1,117 @@
+//! Serving-stack integration: router → batcher → worker (PJRT) →
+//! responses, with adapter hot-swaps mid-stream. Needs artifacts.
+
+use std::time::Duration;
+
+use ahwa_lora::config::manifest::default_artifacts_dir;
+use ahwa_lora::data::glue::{GlueGen, GlueTask};
+use ahwa_lora::model::checkpoint;
+use ahwa_lora::serve::registry::SharedRegistry;
+use ahwa_lora::serve::server::{submit_wave, ServeConfig, Server};
+use ahwa_lora::util::rng::Pcg64;
+
+fn ready() -> bool {
+    let ok = default_artifacts_dir().join("manifest.json").exists();
+    if !ok {
+        eprintln!("skipping: artifacts not built");
+    }
+    ok
+}
+
+fn setup(tasks: &[GlueTask]) -> anyhow::Result<(Server, usize, usize)> {
+    let manifest = ahwa_lora::config::manifest::Manifest::load(default_artifacts_dir())?;
+    let v = manifest.variant("tiny")?.clone();
+    let meta = checkpoint::load(manifest.init_path("tiny.meta"))?;
+    let adapter = checkpoint::load(manifest.init_path("tiny.step_cls_lora.train"))?;
+    let registry = SharedRegistry::new();
+    for t in tasks {
+        registry.deploy(t.adapter_key(), adapter.clone());
+    }
+    let mut cfg = ServeConfig::new("tiny");
+    cfg.max_batch = 4;
+    cfg.max_wait = Duration::from_millis(2);
+    let server = Server::start(cfg, meta, registry)?;
+    Ok((server, v.vocab, v.seq))
+}
+
+#[test]
+fn serves_mixed_task_wave() {
+    if !ready() {
+        return;
+    }
+    let tasks = [GlueTask::Sst2, GlueTask::Qnli];
+    let (server, vocab, seq) = setup(&tasks).unwrap();
+    let mut rng = Pcg64::new(1);
+    let mut jobs = Vec::new();
+    for i in 0..24 {
+        let task = tasks[i % 2];
+        let gen = GlueGen::new(task, vocab, seq);
+        let (tokens, _, _) = gen.example(&mut rng);
+        jobs.push((task.adapter_key().to_string(), tokens));
+    }
+    let responses = submit_wave(&server.router, &jobs).unwrap();
+    assert_eq!(responses.len(), 24);
+    for (r, (task, _)) in responses.iter().zip(&jobs) {
+        assert_eq!(&r.task, task);
+        assert_eq!(r.logits.len(), 4); // padded n_cls
+        assert!(r.logits.iter().all(|x| x.is_finite()));
+        assert!(r.batch_size >= 1 && r.batch_size <= 4);
+    }
+    // both tasks served; swaps happened (mixed wave, single worker)
+    assert!(server.metrics.adapter_swaps.load(std::sync::atomic::Ordering::Relaxed) >= 2);
+    assert_eq!(server.metrics.served.load(std::sync::atomic::Ordering::Relaxed), 24);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn hot_swap_changes_served_version() {
+    if !ready() {
+        return;
+    }
+    let tasks = [GlueTask::Sst2];
+    let (server, vocab, seq) = setup(&tasks).unwrap();
+    let gen = GlueGen::new(GlueTask::Sst2, vocab, seq);
+    let mut rng = Pcg64::new(2);
+    let (tokens, _, _) = gen.example(&mut rng);
+
+    let jobs = vec![("SST-2".to_string(), tokens.clone())];
+    let r1 = submit_wave(&server.router, &jobs).unwrap();
+    assert_eq!(r1[0].adapter_version, 1);
+
+    // re-deploy (the paper's on-chip adaptation to new user data)
+    let manifest = ahwa_lora::config::manifest::Manifest::load(default_artifacts_dir()).unwrap();
+    let adapter = checkpoint::load(manifest.init_path("tiny.step_cls_lora.train")).unwrap();
+    server.registry.deploy("SST-2", adapter);
+    let r2 = submit_wave(&server.router, &jobs).unwrap();
+    assert_eq!(r2[0].adapter_version, 2);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn rejects_unknown_task_and_bad_shape() {
+    if !ready() {
+        return;
+    }
+    let (server, _, seq) = setup(&[GlueTask::Sst2]).unwrap();
+    assert!(server.router.submit("made-up-task", vec![0; seq]).is_err());
+    assert!(server.router.submit("SST-2", vec![0; seq + 1]).is_err());
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn shutdown_drains_pending_requests() {
+    if !ready() {
+        return;
+    }
+    let tasks = [GlueTask::Sst2];
+    let (server, vocab, seq) = setup(&tasks).unwrap();
+    let gen = GlueGen::new(GlueTask::Sst2, vocab, seq);
+    let mut rng = Pcg64::new(3);
+    // single request below max_batch: only served on deadline/drain
+    let (tokens, _, _) = gen.example(&mut rng);
+    let (_, rx) = server.router.submit("SST-2", tokens).unwrap();
+    server.shutdown().unwrap();
+    // the response must have been delivered before the worker exited
+    let resp = rx.try_recv().expect("drained response");
+    assert_eq!(resp.task, "SST-2");
+}

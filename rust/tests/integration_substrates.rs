@@ -1,0 +1,202 @@
+//! Cross-module integration over the simulation substrates (no PJRT):
+//! PCM ⊗ AIMC mapping ⊗ pipeline ⊗ data ⊗ metrics, plus property-based
+//! sweeps on the end-to-end device pipeline.
+
+use ahwa_lora::aimc::mapping::program_tensor;
+use ahwa_lora::aimc::quant;
+use ahwa_lora::data::glue::{GlueGen, ALL_TASKS};
+use ahwa_lora::data::squad::SquadTask;
+use ahwa_lora::eval::metrics;
+use ahwa_lora::pcm::drift::DRIFT_TIMES;
+use ahwa_lora::pcm::{read_tensor, PcmModel};
+use ahwa_lora::pipeline::balance::{best, sweep};
+use ahwa_lora::pmca::cluster::SnitchCluster;
+use ahwa_lora::pmca::redmule::RedMulE;
+use ahwa_lora::util::proptest;
+use ahwa_lora::util::rng::Pcg64;
+
+/// The full device pipeline must be *unbiased* at t=0 with compensation:
+/// programming + read noise average out around the target weights.
+#[test]
+fn pcm_pipeline_is_unbiased_property() {
+    proptest::check("pcm-unbiased", 8, |g| {
+        let rows = g.usize_in(16, 64);
+        let cols = g.usize_in(2, 8);
+        let w = g.vec_normal(rows * cols, 0.0, 0.05);
+        let model = PcmModel::default();
+        let trials = 24;
+        let mut mean = vec![0f32; w.len()];
+        for trial in 0..trials {
+            let mut rng = Pcg64::with_stream(g.seed, trial);
+            let t = program_tensor(&model, &w, rows, cols, 0.0, &mut rng);
+            let got = read_tensor(&model, &t, 0.0, true, &mut rng);
+            for (m, v) in mean.iter_mut().zip(&got) {
+                *m += v / trials as f32;
+            }
+        }
+        // per-weight bias below ~half the programming-noise scale
+        let wmax = w.iter().fold(0f32, |m, x| m.max(x.abs()));
+        for (m, target) in mean.iter().zip(&w) {
+            assert!(
+                (m - target).abs() < 0.5 * wmax,
+                "bias {m} vs {target} (wmax {wmax})"
+            );
+        }
+    });
+}
+
+/// Weight error must grow monotonically (statistically) along the
+/// paper's drift grid — the mechanism behind every drift table.
+#[test]
+fn drift_grid_error_is_monotone() {
+    let model = PcmModel::default();
+    let mut rng = Pcg64::new(42);
+    let mut w = vec![0f32; 128 * 16];
+    rng.fill_normal(&mut w, 0.0, 0.05);
+    let t = program_tensor(&model, &w, 128, 16, 3.0, &mut rng);
+
+    let mut errs = Vec::new();
+    for (_, secs) in DRIFT_TIMES {
+        let mut e = 0f64;
+        for trial in 0..6 {
+            let mut r = Pcg64::with_stream(7, trial);
+            let got = read_tensor(&model, &t, secs, true, &mut r);
+            e += got.iter().zip(&w).map(|(a, b)| ((a - b) * (a - b)) as f64).sum::<f64>();
+        }
+        errs.push(e);
+    }
+    assert!(errs[6] > errs[0] * 1.2, "10y {:.4} vs 0s {:.4}", errs[6], errs[0]);
+    // the long end must be ordered even if adjacent short times jitter
+    assert!(errs[6] > errs[2], "{errs:?}");
+    assert!(errs[5] > errs[1], "{errs:?}");
+}
+
+/// Quantizer + mapping compose: an 8-bit ADC read of a programmed
+/// tensor is closer to the ideal than a 4-bit one.
+#[test]
+fn quantized_readout_error_ordering() {
+    let model = PcmModel::ideal();
+    let mut rng = Pcg64::new(3);
+    let mut w = vec![0f32; 256 * 4];
+    rng.fill_normal(&mut w, 0.0, 0.1);
+    let t = program_tensor(&model, &w, 256, 4, 0.0, &mut rng);
+    let clean = read_tensor(&model, &t, 0.0, false, &mut rng);
+    let err = |bits: u32| {
+        let mut v = clean.clone();
+        quant::quant_block(&mut v, quant::levels_for_bits(bits));
+        v.iter().zip(&w).map(|(a, b)| ((a - b) * (a - b)) as f64).sum::<f64>()
+    };
+    assert!(err(4) > err(6));
+    assert!(err(6) > err(8));
+}
+
+/// Every paper operating point (layer x T_int) has a balance choice
+/// whose steady-state overhead is low for at least one integration time.
+#[test]
+fn pipeline_balance_exists_for_paper_grid() {
+    let (c, e) = (SnitchCluster::default(), RedMulE::default());
+    for (m, n) in [(128usize, 128usize), (512, 128)] {
+        let mut best_overhead = f64::INFINITY;
+        for t_int in [128.0, 256.0, 512.0] {
+            let b = best(&sweep(m, n, 8, t_int, 320, &c, &e));
+            best_overhead = best_overhead.min(b.latency.overhead());
+            assert!(b.fits_tcdm, "{m}x{n}@{t_int} spilled TCDM");
+        }
+        assert!(best_overhead < 0.05, "{m}x{n}: best overhead {best_overhead}");
+    }
+}
+
+/// Rank sweep through the pipeline: the PMCA cost axis of Fig. 2a.
+/// Latency is non-decreasing in r; at low rank the (rank-independent)
+/// DMA hand-off dominates, so the curve is flat there and strictly
+/// increasing once compute takes over — exactly why the paper can
+/// afford rank 8.
+#[test]
+fn rank_cost_axis_monotone() {
+    let (c, e) = (SnitchCluster::default(), RedMulE::default());
+    let lat = |r| {
+        ahwa_lora::pmca::kernels::LoraWorkload { m: 128, n: 128, r, t: 64 }.latency_ns(&c, &e)
+    };
+    let mut last = 0.0;
+    for r in [1usize, 2, 4, 8, 16] {
+        let l = lat(r);
+        assert!(l >= last, "r={r}: {l} < {last}");
+        last = l;
+    }
+    assert!(lat(16) > lat(1), "compute must dominate by r=16");
+    // compute cycles alone are strictly monotone in r
+    let compute = |r| {
+        ahwa_lora::pmca::kernels::LoraWorkload { m: 128, n: 128, r, t: 64 }
+            .cycles(&c, &e)
+            .compute()
+    };
+    assert!(compute(2) > compute(1) && compute(16) > compute(8));
+}
+
+/// Synthetic task suite ⊗ metric zoo: oracle predictions score 100,
+/// adversarial ones score low, on every GLUE task.
+#[test]
+fn glue_tasks_metric_roundtrip() {
+    for task in ALL_TASKS {
+        let gen = GlueGen::new(task, 512, 48);
+        let mut rng = Pcg64::new(11);
+        let b = gen.batch(200, &mut rng);
+        if task.is_regression() {
+            let golds: Vec<f64> = b.targets.iter().map(|&x| x as f64).collect();
+            let perfect = metrics::pearson_spearman(&golds, &golds);
+            assert!((perfect - 100.0).abs() < 1e-9);
+        } else {
+            let acc = metrics::accuracy(&b.labels, &b.labels);
+            assert_eq!(acc, 100.0, "{task:?}");
+            let wrong: Vec<i32> = b.labels.iter().map(|&l| 1 - l.min(1)).collect();
+            assert!(metrics::accuracy(&wrong, &b.labels) < 60.0, "{task:?}");
+        }
+    }
+}
+
+/// QA generator ⊗ span metrics: gold spans score 100/100; spans offset
+/// by one position score <100 EM but >0 F1 (token overlap survives).
+#[test]
+fn squad_metric_composition() {
+    let task = SquadTask::new(512, 48);
+    let mut rng = Pcg64::new(5);
+    let batch = task.batch(64, &mut rng);
+    let golds: Vec<(usize, usize)> = batch
+        .starts
+        .iter()
+        .zip(&batch.ends)
+        .map(|(&s, &e)| (s as usize, e as usize))
+        .collect();
+    let (f1, em) = metrics::span_f1_em(&golds, &golds);
+    assert_eq!((f1, em), (100.0, 100.0));
+    let shifted: Vec<(usize, usize)> = golds.iter().map(|&(s, e)| (s + 1, e + 1)).collect();
+    let (f1s, ems) = metrics::span_f1_em(&shifted, &golds);
+    assert!(ems < 5.0);
+    assert!(f1s > 10.0 && f1s < 95.0, "f1={f1s}");
+}
+
+/// GSM ⊗ reward: corrupting the working-out tags costs exactly that
+/// reward component.
+#[test]
+fn gsm_reward_component_sensitivity() {
+    use ahwa_lora::data::gsm::GsmTask;
+    use ahwa_lora::data::tokenizer::{EOW, SOW};
+    use ahwa_lora::rl::reward::{score, MAX_REWARD};
+
+    let task = GsmTask::new(64);
+    let mut rng = Pcg64::new(9);
+    for _ in 0..20 {
+        let p = task.problem(&mut rng);
+        let ideal = p.ideal_completion();
+        assert_eq!(score(&ideal, p.answer()).total(), MAX_REWARD);
+
+        // break the working-out tags only: lose exactly 1.0
+        let mut no_work = ideal.clone();
+        for t in no_work.iter_mut() {
+            if *t == SOW || *t == EOW {
+                *t = 40;
+            }
+        }
+        assert_eq!(score(&no_work, p.answer()).total(), MAX_REWARD - 1.0);
+    }
+}
