@@ -1,0 +1,31 @@
+#!/usr/bin/env bash
+# Lint + test gate for the public API: run before every PR.
+#
+#   ./ci.sh            # fmt --check, clippy -D warnings, tests
+#   ./ci.sh --fix      # apply rustfmt instead of checking
+#
+# PJRT-backed integration tests self-skip when `artifacts/` has not
+# been built; everything else (unit tests, channel-level serving tests)
+# runs hermetically.
+set -euo pipefail
+
+cd "$(dirname "$0")"
+
+# the cargo workspace may sit at the repo root or under rust/
+if [[ -f Cargo.toml ]]; then
+    :
+elif [[ -f rust/Cargo.toml ]]; then
+    cd rust
+else
+    echo "ci.sh: no Cargo.toml found at repo root or rust/" >&2
+    exit 1
+fi
+
+if [[ "${1:-}" == "--fix" ]]; then
+    cargo fmt --all
+else
+    cargo fmt --all -- --check
+fi
+
+cargo clippy --all-targets -- -D warnings
+cargo test -q

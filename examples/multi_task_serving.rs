@@ -1,10 +1,11 @@
 //! Multi-task serving example (Table III's deployment scenario).
 //!
 //! One analog base model; per-task LoRA adapter sets hot-swapped on the
-//! DPUs; a concurrent client wave routed + dynamically batched per task.
+//! DPUs; a concurrent client wave routed through the sharded engine
+//! pool and dynamically batched per task.
 //!
 //! ```bash
-//! cargo run --release --example multi_task_serving -- --requests 96
+//! cargo run --release --example multi_task_serving -- --requests 96 --workers 2
 //! ```
 
 use std::time::Instant;
@@ -12,13 +13,14 @@ use std::time::Instant;
 use ahwa_lora::data::glue::{GlueGen, GlueTask};
 use ahwa_lora::experiments::common::{pretrained_encoder, Ctx};
 use ahwa_lora::serve::registry::SharedRegistry;
-use ahwa_lora::serve::server::{submit_wave, ServeConfig, Server};
+use ahwa_lora::serve::{submit_wave, Server};
 use ahwa_lora::util::cli::Args;
 use ahwa_lora::util::rng::Pcg64;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
-    let n_requests = args.usize("requests", 96);
+    let n_requests = args.usize("requests", 96).max(1);
+    let workers = args.usize("workers", 2);
     let variant = args.str("variant", "mobilebert_proxy");
 
     let ctx = Ctx::new()?;
@@ -42,10 +44,22 @@ fn main() -> anyhow::Result<()> {
         println!("deployed adapter '{}' v{version}", t.adapter_key());
     }
 
-    let server = Server::start(ServeConfig::new(&variant), meta, registry.clone())?;
+    let server = Server::builder(&variant)
+        .manifest(ctx.engine.manifest.clone())
+        .workers(workers)
+        .queue_depth(args.usize("queue-depth", 128))
+        .build(meta, registry.clone())?;
+    let client = server.client();
+    for t in tasks {
+        println!(
+            "task '{}' pinned to worker {}",
+            t.adapter_key(),
+            client.shard_for(t.adapter_key())
+        );
+    }
 
-    // Mixed request wave across tasks — the batcher groups per task, the
-    // worker hot-swaps adapters between batches.
+    // Mixed request wave across tasks — each worker's batcher groups per
+    // task and hot-swaps adapters between batches.
     let mut rng = Pcg64::new(42);
     let mut jobs = Vec::new();
     for i in 0..n_requests {
@@ -55,7 +69,7 @@ fn main() -> anyhow::Result<()> {
         jobs.push((task.adapter_key().to_string(), tokens));
     }
     let t0 = Instant::now();
-    let responses = submit_wave(&server.router, &jobs)?;
+    let responses = submit_wave(&client, &jobs)?;
     let wall = t0.elapsed();
 
     println!(
@@ -64,14 +78,14 @@ fn main() -> anyhow::Result<()> {
         wall.as_secs_f64() * 1e3,
         responses.len() as f64 / wall.as_secs_f64()
     );
-    println!("worker metrics: {}", server.metrics.summary());
+    println!("{}", server.metrics_report());
 
     // On-chip task switching: re-deploy one adapter mid-flight and serve
     // again — the base model is never touched (the paper's key claim).
     let fresh = ctx.init_train(&format!("{variant}/step_cls_lora"))?;
     let new_version = registry.deploy("SST-2", fresh);
     println!("\nhot-swapped SST-2 adapter to v{new_version} (base model untouched)");
-    let again = submit_wave(&server.router, &jobs[..tasks.len().min(jobs.len())].to_vec())?;
+    let again = submit_wave(&client, &jobs[..tasks.len().min(jobs.len())])?;
     println!("post-swap responses report adapter v{}", again[0].adapter_version);
 
     server.shutdown()?;

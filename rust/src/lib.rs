@@ -32,7 +32,10 @@
 //! * [`train`] — AHWA-LoRA / full-AHWA training drivers + memory model.
 //! * [`rl`] — GRPO reinforcement-learning driver (rewards, sampling).
 //! * [`eval`] — drift evaluation harness + metric zoo.
-//! * [`serve`] — multi-task serving: router, batcher, adapter registry.
+//! * [`serve`] — multi-task serving: typed builder/client API
+//!   (`serve::api`), sharded engine pool with bounded admission and
+//!   backpressure, per-task dynamic batcher, `Arc`-snapshot adapter
+//!   registry.
 //! * [`experiments`] — one driver per paper table/figure.
 
 pub mod aimc;

@@ -4,7 +4,7 @@
 //! ahwa-lora exp <id> [--steps N] [--trials N] [--variant V] [--fresh]
 //! ahwa-lora train [--variant V] [--steps N] [--noise X] …
 //! ahwa-lora latency [--rank R]          # Fig. 4 pipeline study
-//! ahwa-lora serve-demo [--requests N]   # multi-task serving demo
+//! ahwa-lora serve-demo [--requests N] [--workers W] [--queue-depth D]
 //! ahwa-lora list                        # artifacts + variants
 //! ```
 
@@ -67,15 +67,17 @@ fn list() -> Result<()> {
 }
 
 /// Live multi-task serving demonstration (Table III's deployment):
-/// deploy GLUE adapters, fire a mixed request wave, report routing /
-/// batching / hot-swap metrics.
+/// deploy GLUE adapters, fire a mixed request wave through the sharded
+/// engine pool, report per-worker routing / batching / hot-swap metrics.
 fn serve_demo(args: &Args) -> Result<()> {
     use ahwa_lora::data::glue::{GlueGen, GlueTask};
     use ahwa_lora::serve::registry::SharedRegistry;
-    use ahwa_lora::serve::server::{submit_wave, ServeConfig, Server};
+    use ahwa_lora::serve::{submit_wave, Server};
     use ahwa_lora::util::rng::Pcg64;
 
     let n_requests = args.usize("requests", 64);
+    let workers = args.usize("workers", 2);
+    let queue_depth = args.usize("queue-depth", 128);
     let variant = args.str("variant", "mobilebert_proxy");
 
     let ctx = ahwa_lora::experiments::common::Ctx::new()?;
@@ -106,7 +108,12 @@ fn serve_demo(args: &Args) -> Result<()> {
         registry.total_params() as f64 / 1e6
     );
 
-    let server = Server::start(ServeConfig::new(&variant), meta, registry)?;
+    let server = Server::builder(&variant)
+        .manifest(ctx.engine.manifest.clone())
+        .workers(workers)
+        .queue_depth(queue_depth)
+        .build(meta, registry)?;
+    let client = server.client();
     let mut rng = Pcg64::new(42);
     let mut jobs = Vec::new();
     for i in 0..n_requests {
@@ -116,15 +123,16 @@ fn serve_demo(args: &Args) -> Result<()> {
         jobs.push((task.adapter_key().to_string(), tokens));
     }
     let t0 = std::time::Instant::now();
-    let responses = submit_wave(&server.router, &jobs)?;
+    let responses = submit_wave(&client, &jobs)?;
     let wall = t0.elapsed();
     println!(
-        "served {} requests in {:.1} ms ({:.0} req/s)",
+        "served {} requests in {:.1} ms ({:.0} req/s) across {} workers",
         responses.len(),
         wall.as_secs_f64() * 1e3,
-        responses.len() as f64 / wall.as_secs_f64()
+        responses.len() as f64 / wall.as_secs_f64(),
+        server.workers(),
     );
-    println!("metrics: {}", server.metrics.summary());
+    println!("{}", server.metrics_report());
     server.shutdown()?;
     Ok(())
 }

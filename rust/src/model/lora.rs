@@ -7,6 +7,7 @@
 //! concurrent server.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
@@ -23,9 +24,13 @@ pub struct AdapterInfo {
     pub version: u64,
 }
 
+/// Adapter sets are held behind `Arc` so readers (the serving workers)
+/// take O(pointer) snapshots instead of cloning megabytes of LoRA
+/// weights per batch; a redeploy installs a fresh `Arc` while in-flight
+/// batches keep the snapshot they started with.
 #[derive(Default)]
 pub struct AdapterRegistry {
-    sets: BTreeMap<String, (AdapterInfo, ParamStore)>,
+    sets: BTreeMap<String, (AdapterInfo, Arc<ParamStore>)>,
 }
 
 impl AdapterRegistry {
@@ -47,17 +52,26 @@ impl AdapterRegistry {
                     n_params,
                     version,
                 },
-                params,
+                Arc::new(params),
             ),
         );
         version
     }
 
-    pub fn get(&self, task: &str) -> Result<&ParamStore> {
+    pub fn get(&self, task: &str) -> Result<&Arc<ParamStore>> {
         self.sets
             .get(task)
             .map(|(_, p)| p)
             .ok_or_else(|| anyhow!("no adapter deployed for task '{task}'"))
+    }
+
+    /// Adapter + version read together (no torn view across a redeploy).
+    pub fn snapshot(&self, task: &str) -> Option<(Arc<ParamStore>, u64)> {
+        self.sets.get(task).map(|(i, p)| (p.clone(), i.version))
+    }
+
+    pub fn contains(&self, task: &str) -> bool {
+        self.sets.contains_key(task)
     }
 
     pub fn info(&self, task: &str) -> Option<&AdapterInfo> {
@@ -108,6 +122,23 @@ mod tests {
         r.deploy("sst2", adapter(16));
         assert_eq!(r.deploy("sst2", adapter(16)), 2);
         assert_eq!(r.info("sst2").unwrap().version, 2);
+    }
+
+    #[test]
+    fn snapshot_is_shared_not_cloned() {
+        let mut r = AdapterRegistry::new();
+        r.deploy("sst2", adapter(16));
+        let (a, v1) = r.snapshot("sst2").unwrap();
+        let (b, _) = r.snapshot("sst2").unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "snapshots must share one allocation");
+        assert_eq!(v1, 1);
+        // redeploy installs a NEW Arc; old snapshots stay valid
+        r.deploy("sst2", adapter(16));
+        let (c, v2) = r.snapshot("sst2").unwrap();
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(v2, 2);
+        assert_eq!(a.numel(), 16 * 8);
+        assert!(r.snapshot("missing").is_none());
     }
 
     #[test]

@@ -102,4 +102,11 @@ impl Engine {
     pub fn cached_graphs(&self) -> usize {
         self.cache.borrow().len()
     }
+
+    /// Total PJRT compile wall-time across cached graphs — the startup
+    /// cost each serving worker pays for its private engine, surfaced
+    /// in the pool's per-worker metrics.
+    pub fn total_compile_ms(&self) -> u128 {
+        self.cache.borrow().values().map(|g| g.compile_ms).sum()
+    }
 }

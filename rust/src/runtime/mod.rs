@@ -5,6 +5,13 @@
 //! `client.compile` → `execute`. Compiled executables are cached per
 //! graph key ([`client`]); [`pack`] converts between [`ParamStore`]s /
 //! host arrays and XLA literals in the manifest's canonical order.
+//!
+//! PJRT handles are not `Send`, so anything concurrent (the serving
+//! pool) creates one [`Engine`] per worker thread via [`Engine::new`]
+//! with a shared, already-parsed manifest — parse once, compile per
+//! worker.
+//!
+//! [`ParamStore`]: crate::model::params::ParamStore
 
 pub mod client;
 pub mod pack;

@@ -1,0 +1,850 @@
+//! The public serving surface: builder → server → cloneable client.
+//!
+//! ```text
+//! Server::builder("tiny")          ServerBuilder (knobs)
+//!     .workers(4)                      │ build(meta, registry)
+//!     .queue_depth(256)                ▼
+//!     .build(meta, registry)       Server ──── shutdown() drains + joins
+//!         │ client()                   │
+//!         ▼                            ▼
+//!     Client::submit(task, toks)   WorkerPool: N threads, each owning
+//!         │                        its OWN PJRT engine + batcher
+//!         ▼                        (task → worker by stable hash)
+//!     Pending::wait() ── ALWAYS resolves: Ok(Response) or ServeError
+//! ```
+//!
+//! Design invariants:
+//!
+//! * **Every admitted request gets exactly one terminal result.** Batch
+//!   failures, missing adapters, worker-init failures and shutdown all
+//!   answer with a typed [`ServeError`]; a [`Pending`] ticket can never
+//!   hang a receiver.
+//! * **Bounded admission.** Each worker has a `queue_depth` in-flight
+//!   budget; when it is exhausted `submit` fails fast with
+//!   [`ServeError::Overloaded`] (try-again backpressure) instead of
+//!   growing an unbounded queue.
+//! * **Sharded engines.** PJRT handles are not `Send`, so each worker
+//!   thread builds its own engine from ONE shared manifest load and
+//!   tasks are pinned to workers by a stable hash — per-worker batchers
+//!   keep the "batches never mix tasks" rule and minimise adapter swaps.
+
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::model::params::ParamStore;
+use crate::util::stats;
+
+use super::pool::{self, Job, WorkRequest, WorkerHandle};
+use super::registry::SharedRegistry;
+
+// ---------------------------------------------------------------------------
+// Typed errors
+// ---------------------------------------------------------------------------
+
+/// Every way a request (or the server itself) can fail, as data.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// Request token count does not match the serving graph's sequence.
+    BadShape { got: usize, want: usize },
+    /// No adapter deployed under this task name at submit time.
+    UnknownTask { task: String, known: Vec<String> },
+    /// The target worker's in-flight budget is exhausted — try again.
+    Overloaded { worker: usize, depth: usize },
+    /// Adapter disappeared between admission and execution.
+    AdapterMissing { task: String },
+    /// The forward batch failed in the engine (or by injected fault).
+    Batch { task: String, detail: String },
+    /// The worker could not bring up its PJRT engine.
+    WorkerInit { worker: usize, detail: String },
+    /// Server-level startup/configuration failure.
+    Init { detail: String },
+    /// The server is shutting down; no new work is admitted.
+    ShuttingDown,
+    /// A response channel closed without a terminal result. Guarded
+    /// against by the pool; surfaced only if a worker is killed hard or
+    /// an admission races shutdown past the drain grace window.
+    Lost,
+}
+
+impl ServeError {
+    /// `true` for transient backpressure a client should retry.
+    pub fn is_retryable(&self) -> bool {
+        matches!(self, ServeError::Overloaded { .. })
+    }
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::BadShape { got, want } => {
+                write!(f, "request has {got} tokens, serving graph expects {want}")
+            }
+            ServeError::UnknownTask { task, known } => {
+                write!(f, "unknown task '{task}' (deployed: {known:?})")
+            }
+            ServeError::Overloaded { worker, depth } => {
+                write!(f, "worker {worker} at queue depth {depth}, try again")
+            }
+            ServeError::AdapterMissing { task } => {
+                write!(f, "no adapter deployed for task '{task}'")
+            }
+            ServeError::Batch { task, detail } => {
+                write!(f, "batch for task '{task}' failed: {detail}")
+            }
+            ServeError::WorkerInit { worker, detail } => {
+                write!(f, "worker {worker} failed to initialise: {detail}")
+            }
+            ServeError::Init { detail } => write!(f, "server init failed: {detail}"),
+            ServeError::ShuttingDown => write!(f, "server is shutting down"),
+            ServeError::Lost => write!(f, "response channel closed without a result"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+pub type ServeResult<T> = Result<T, ServeError>;
+
+// ---------------------------------------------------------------------------
+// Responses and tickets
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub task: String,
+    /// Worker that executed the batch (shard of the engine pool).
+    pub worker: usize,
+    /// Per-example logits row from the task head.
+    pub logits: Vec<f32>,
+    pub latency: Duration,
+    pub batch_size: usize,
+    pub adapter_version: u64,
+}
+
+/// Ticket for one admitted request. Always resolves to a terminal
+/// `ServeResult` — the pool guarantees exactly one send per admission.
+#[derive(Debug)]
+pub struct Pending {
+    pub id: u64,
+    pub worker: usize,
+    pub(crate) rx: Receiver<ServeResult<Response>>,
+}
+
+impl Pending {
+    /// Block until the terminal result arrives.
+    pub fn wait(self) -> ServeResult<Response> {
+        self.rx.recv().unwrap_or(Err(ServeError::Lost))
+    }
+
+    /// Non-blocking poll; `None` while the request is still in flight.
+    pub fn try_wait(&self) -> Option<ServeResult<Response>> {
+        match self.rx.try_recv() {
+            Ok(r) => Some(r),
+            Err(TryRecvError::Empty) => None,
+            Err(TryRecvError::Disconnected) => Some(Err(ServeError::Lost)),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Metrics
+// ---------------------------------------------------------------------------
+
+/// Latency/batch-size percentiles are computed over a ring of the most
+/// recent batches, so a long-running server's memory stays bounded.
+const METRIC_SAMPLE_CAP: usize = 4096;
+
+fn push_sample(v: &mut Vec<f64>, idx: usize, x: f64) {
+    if v.len() < METRIC_SAMPLE_CAP {
+        v.push(x);
+    } else {
+        v[idx % METRIC_SAMPLE_CAP] = x;
+    }
+}
+
+/// Per-worker serving counters (lock-free on the hot path; latency and
+/// batch-size samples under a mutex touched once per batch).
+#[derive(Default)]
+pub struct Metrics {
+    pub served: AtomicU64,
+    pub batches: AtomicU64,
+    pub adapter_swaps: AtomicU64,
+    pub errors: AtomicU64,
+    /// Admission rejections (Overloaded), counted client-side.
+    pub rejected: AtomicU64,
+    /// PJRT compile time paid by this worker at startup.
+    pub compile_ms: AtomicU64,
+    latencies_us: Mutex<Vec<f64>>,
+    batch_sizes: Mutex<Vec<f64>>,
+}
+
+impl Metrics {
+    pub(crate) fn record(&self, n: usize, latency: Duration) {
+        self.served.fetch_add(n as u64, Ordering::Relaxed);
+        let b = self.batches.fetch_add(1, Ordering::Relaxed) as usize;
+        push_sample(&mut self.latencies_us.lock().unwrap(), b, latency.as_micros() as f64);
+        push_sample(&mut self.batch_sizes.lock().unwrap(), b, n as f64);
+    }
+
+    pub fn snapshot(&self, label: &str) -> MetricsSnapshot {
+        let lat = self.latencies_us.lock().unwrap();
+        let bs = self.batch_sizes.lock().unwrap();
+        MetricsSnapshot {
+            label: label.to_string(),
+            served: self.served.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            adapter_swaps: self.adapter_swaps.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            compile_ms: self.compile_ms.load(Ordering::Relaxed),
+            batch_mean: stats::mean(&bs),
+            lat_p50_ms: stats::percentile(&lat, 50.0) / 1e3,
+            lat_p95_ms: stats::percentile(&lat, 95.0) / 1e3,
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        self.snapshot("").to_string()
+    }
+
+    pub fn p50_latency_ms(&self) -> f64 {
+        stats::percentile(&self.latencies_us.lock().unwrap(), 50.0) / 1e3
+    }
+}
+
+/// Point-in-time view of one worker's (or the whole pool's) counters.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsSnapshot {
+    pub label: String,
+    pub served: u64,
+    pub batches: u64,
+    pub adapter_swaps: u64,
+    pub errors: u64,
+    pub rejected: u64,
+    pub compile_ms: u64,
+    pub batch_mean: f64,
+    pub lat_p50_ms: f64,
+    pub lat_p95_ms: f64,
+}
+
+impl fmt::Display for MetricsSnapshot {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if !self.label.is_empty() {
+            write!(f, "{}: ", self.label)?;
+        }
+        write!(
+            f,
+            "served={} batches={} swaps={} errors={} rejected={} batch_mean={:.1} lat_p50={:.1}ms lat_p95={:.1}ms compile={}ms",
+            self.served,
+            self.batches,
+            self.adapter_swaps,
+            self.errors,
+            self.rejected,
+            self.batch_mean,
+            self.lat_p50_ms,
+            self.lat_p95_ms,
+            self.compile_ms,
+        )
+    }
+}
+
+/// Merge per-worker metrics into one pool-level snapshot (counters sum;
+/// percentiles computed over the union of latency samples).
+pub fn aggregate<'a>(workers: impl IntoIterator<Item = &'a Metrics>) -> MetricsSnapshot {
+    let mut out = MetricsSnapshot {
+        label: "pool".to_string(),
+        ..MetricsSnapshot::default()
+    };
+    let mut lat = Vec::new();
+    let mut bs = Vec::new();
+    for m in workers {
+        out.served += m.served.load(Ordering::Relaxed);
+        out.batches += m.batches.load(Ordering::Relaxed);
+        out.adapter_swaps += m.adapter_swaps.load(Ordering::Relaxed);
+        out.errors += m.errors.load(Ordering::Relaxed);
+        out.rejected += m.rejected.load(Ordering::Relaxed);
+        out.compile_ms += m.compile_ms.load(Ordering::Relaxed);
+        lat.extend_from_slice(&m.latencies_us.lock().unwrap());
+        bs.extend_from_slice(&m.batch_sizes.lock().unwrap());
+    }
+    out.batch_mean = stats::mean(&bs);
+    out.lat_p50_ms = stats::percentile(&lat, 50.0) / 1e3;
+    out.lat_p95_ms = stats::percentile(&lat, 95.0) / 1e3;
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Builder
+// ---------------------------------------------------------------------------
+
+/// Configuration for a serving pool; `build` spawns the workers.
+#[derive(Clone, Debug)]
+pub struct ServerBuilder {
+    variant: String,
+    graph: Option<String>,
+    manifest: Option<crate::config::manifest::Manifest>,
+    workers: usize,
+    queue_depth: usize,
+    max_batch: usize,
+    max_wait: Duration,
+    hw: [f32; 5],
+    fail_every: u64,
+}
+
+impl ServerBuilder {
+    pub fn new(variant: &str) -> ServerBuilder {
+        ServerBuilder {
+            variant: variant.to_string(),
+            graph: None,
+            manifest: None,
+            workers: 1,
+            queue_depth: 64,
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+            // inference hardware vector: quantizers active, no in-graph noise
+            hw: [0.0, 0.0, 127.0, 127.0, 0.0],
+            fail_every: 0,
+        }
+    }
+
+    /// Serving graph key; defaults to `"{variant}/fwd_cls"`.
+    pub fn graph(mut self, key: &str) -> Self {
+        self.graph = Some(key.to_string());
+        self
+    }
+
+    /// Reuse an already-parsed manifest (e.g. from an experiment `Ctx`)
+    /// instead of re-reading `artifacts/` from disk.
+    pub fn manifest(mut self, m: crate::config::manifest::Manifest) -> Self {
+        self.manifest = Some(m);
+        self
+    }
+
+    /// Number of worker threads, each owning its own PJRT engine.
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = n.max(1);
+        self
+    }
+
+    /// Per-worker in-flight budget; beyond it `submit` returns
+    /// [`ServeError::Overloaded`].
+    pub fn queue_depth(mut self, n: usize) -> Self {
+        self.queue_depth = n.max(1);
+        self
+    }
+
+    pub fn max_batch(mut self, n: usize) -> Self {
+        self.max_batch = n.max(1);
+        self
+    }
+
+    pub fn max_wait(mut self, d: Duration) -> Self {
+        self.max_wait = d;
+        self
+    }
+
+    pub fn hw(mut self, hw: [f32; 5]) -> Self {
+        self.hw = hw;
+        self
+    }
+
+    /// Chaos knob: make every `every`-th batch fail inside the worker
+    /// (0 disables). Exercises the error path end to end — admitted
+    /// requests must still resolve with [`ServeError::Batch`].
+    pub fn inject_batch_failure(mut self, every: u64) -> Self {
+        self.fail_every = every;
+        self
+    }
+
+    /// Load the manifest ONCE, validate variant + graph, and spawn the
+    /// worker pool (each worker re-uses the parsed manifest for its
+    /// engine — no duplicate manifest loads).
+    pub fn build(self, meta: ParamStore, registry: SharedRegistry) -> ServeResult<Server> {
+        let init = |e: anyhow::Error| ServeError::Init { detail: format!("{e:#}") };
+        let manifest = match self.manifest {
+            Some(m) => m,
+            None => crate::config::manifest::Manifest::load(
+                crate::config::manifest::default_artifacts_dir(),
+            )
+            .map_err(init)?,
+        };
+        manifest.variant(&self.variant).map_err(init)?;
+        let graph_key = self
+            .graph
+            .clone()
+            .unwrap_or_else(|| format!("{}/fwd_cls", self.variant));
+        // admission validates against the GRAPH's sequence length, so a
+        // `.graph()` override can never admit tokens the workers would
+        // re-segment differently
+        let seq = manifest
+            .graph(&graph_key)
+            .map_err(init)?
+            .inputs_with_role(crate::config::manifest::Role::Data)
+            .next()
+            .filter(|io| io.shape.len() == 2)
+            .map(|io| io.shape[1])
+            .ok_or_else(|| ServeError::Init {
+                detail: format!("graph '{graph_key}' has no [batch, seq] data input"),
+            })?;
+
+        // the read-only base model is shared, not copied, across workers
+        let meta = Arc::new(meta);
+        let accepting = Arc::new(AtomicBool::new(true));
+        let mut shards = Vec::with_capacity(self.workers);
+        let mut worker_metrics = Vec::with_capacity(self.workers);
+        let mut joins = Vec::with_capacity(self.workers);
+        for w in 0..self.workers {
+            let cfg = pool::WorkerConfig {
+                worker: w,
+                graph_key: graph_key.clone(),
+                seq,
+                max_batch: self.max_batch,
+                max_wait: self.max_wait,
+                hw: self.hw,
+                fail_every: self.fail_every,
+            };
+            let (handle, join) = pool::spawn_worker(
+                cfg,
+                manifest.clone(),
+                meta.clone(),
+                registry.clone(),
+                self.queue_depth,
+            )
+            .map_err(|e| ServeError::Init {
+                detail: format!("spawning worker {w}: {e}"),
+            })?;
+            worker_metrics.push(handle.metrics.clone());
+            shards.push(handle);
+            joins.push(join);
+        }
+
+        let client = Client {
+            shards: Arc::new(shards),
+            next_id: Arc::new(AtomicU64::new(1)),
+            accepting,
+            registry: registry.clone(),
+            seq,
+        };
+        Ok(Server {
+            client,
+            registry,
+            worker_metrics,
+            joins,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client
+// ---------------------------------------------------------------------------
+
+/// Cloneable submission handle. Validates, stamps ids, applies bounded
+/// admission, and routes to the task's pinned worker.
+#[derive(Clone)]
+pub struct Client {
+    shards: Arc<Vec<WorkerHandle>>,
+    next_id: Arc<AtomicU64>,
+    accepting: Arc<AtomicBool>,
+    registry: SharedRegistry,
+    /// Sequence length the serving graph expects.
+    pub seq: usize,
+}
+
+impl Client {
+    pub fn workers(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Stable task → worker pinning (FNV-1a). Keeping one task on one
+    /// worker preserves per-task batching and minimises adapter swaps.
+    pub fn shard_for(&self, task: &str) -> usize {
+        (fnv1a(task) % self.shards.len() as u64) as usize
+    }
+
+    /// Submit one request. Fails fast with a typed error; on success
+    /// the returned [`Pending`] always resolves.
+    pub fn submit(&self, task: &str, tokens: &[i32]) -> ServeResult<Pending> {
+        if tokens.len() != self.seq {
+            return Err(ServeError::BadShape {
+                got: tokens.len(),
+                want: self.seq,
+            });
+        }
+        // validated against the LIVE registry: tasks deployed after the
+        // server started are immediately routable (the old Router froze
+        // its task list at startup).
+        if !self.registry.contains(task) {
+            return Err(ServeError::UnknownTask {
+                task: task.to_string(),
+                known: self.registry.tasks(),
+            });
+        }
+        if !self.accepting.load(Ordering::Acquire) {
+            return Err(ServeError::ShuttingDown);
+        }
+        let w = self.shard_for(task);
+        let h = &self.shards[w];
+        // admission: reserve an in-flight slot or bounce
+        let prev = h.inflight.fetch_add(1, Ordering::AcqRel);
+        if prev >= h.queue_depth {
+            h.inflight.fetch_sub(1, Ordering::AcqRel);
+            h.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(ServeError::Overloaded {
+                worker: w,
+                depth: h.queue_depth,
+            });
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (resp_tx, resp_rx) = channel();
+        let req = WorkRequest {
+            id,
+            task: task.to_string(),
+            tokens: tokens.to_vec(),
+            resp: resp_tx,
+        };
+        if h.tx.send(Job::Req(req)).is_err() {
+            h.inflight.fetch_sub(1, Ordering::AcqRel);
+            return Err(ServeError::ShuttingDown);
+        }
+        Ok(Pending {
+            id,
+            worker: w,
+            rx: resp_rx,
+        })
+    }
+
+    /// Submit with bounded retry on [`ServeError::Overloaded`] — the
+    /// cooperative client side of the try-again protocol.
+    pub fn submit_with_retry(
+        &self,
+        task: &str,
+        tokens: &[i32],
+        deadline: Duration,
+    ) -> ServeResult<Pending> {
+        let t0 = Instant::now();
+        loop {
+            match self.submit(task, tokens) {
+                Err(e) if e.is_retryable() && t0.elapsed() < deadline => {
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+                other => return other,
+            }
+        }
+    }
+}
+
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------------
+
+/// Handle to a running pool: hands out clients, reports metrics, and
+/// owns graceful shutdown (drain everything, join every worker).
+pub struct Server {
+    client: Client,
+    registry: SharedRegistry,
+    worker_metrics: Vec<Arc<Metrics>>,
+    joins: Vec<std::thread::JoinHandle<ServeResult<()>>>,
+}
+
+impl Server {
+    pub fn builder(variant: &str) -> ServerBuilder {
+        ServerBuilder::new(variant)
+    }
+
+    pub fn client(&self) -> Client {
+        self.client.clone()
+    }
+
+    pub fn registry(&self) -> &SharedRegistry {
+        &self.registry
+    }
+
+    pub fn workers(&self) -> usize {
+        self.worker_metrics.len()
+    }
+
+    /// Per-worker counters (index = worker id).
+    pub fn worker_metrics(&self) -> &[Arc<Metrics>] {
+        &self.worker_metrics
+    }
+
+    /// Pool-level aggregate.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        aggregate(self.worker_metrics.iter().map(|m| m.as_ref()))
+    }
+
+    /// Multi-line report: one line per worker plus the aggregate.
+    pub fn metrics_report(&self) -> String {
+        let mut out = String::new();
+        for (w, m) in self.worker_metrics.iter().enumerate() {
+            out.push_str(&m.snapshot(&format!("worker{w}")).to_string());
+            out.push('\n');
+        }
+        out.push_str(&self.metrics().to_string());
+        out
+    }
+
+    /// Graceful shutdown: stop admission, drain every queue (all pending
+    /// tickets resolve), join all workers. Returns the first worker
+    /// error, if any.
+    pub fn shutdown(mut self) -> ServeResult<()> {
+        self.begin_shutdown();
+        let mut first_err = None;
+        for j in self.joins.drain(..) {
+            match j.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    first_err.get_or_insert(e);
+                }
+                Err(_) => {
+                    first_err.get_or_insert(ServeError::Init {
+                        detail: "worker panicked".to_string(),
+                    });
+                }
+            }
+        }
+        match first_err {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
+    }
+
+    fn begin_shutdown(&self) {
+        self.client.accepting.store(false, Ordering::Release);
+        for h in self.client.shards.iter() {
+            let _ = h.tx.send(Job::Shutdown);
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        // if `shutdown` was not called, still stop the workers so
+        // lingering Client clones cannot keep threads alive forever.
+        if !self.joins.is_empty() {
+            self.begin_shutdown();
+            for j in self.joins.drain(..) {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Wave helpers (experiments / examples / demo CLI)
+// ---------------------------------------------------------------------------
+
+/// How long wave helpers keep retrying one job through `Overloaded`
+/// backpressure before giving up on it.
+pub const WAVE_RETRY_DEADLINE: Duration = Duration::from_secs(30);
+
+/// Submit many requests (retrying through backpressure for up to
+/// [`WAVE_RETRY_DEADLINE`] each), wait for every ticket, and return
+/// per-request terminal results in job order. Callers needing a
+/// different retry budget drive [`Client::submit_with_retry`] directly.
+pub fn submit_wave_results(
+    client: &Client,
+    jobs: &[(String, Vec<i32>)],
+) -> Vec<ServeResult<Response>> {
+    let tickets: Vec<ServeResult<Pending>> = jobs
+        .iter()
+        .map(|(task, tokens)| client.submit_with_retry(task, tokens, WAVE_RETRY_DEADLINE))
+        .collect();
+    tickets
+        .into_iter()
+        .map(|ticket| ticket.and_then(Pending::wait))
+        .collect()
+}
+
+/// Convenience used by the serving experiments: all-or-nothing wave.
+pub fn submit_wave(client: &Client, jobs: &[(String, Vec<i32>)]) -> ServeResult<Vec<Response>> {
+    submit_wave_results(client, jobs).into_iter().collect()
+}
+
+// ---------------------------------------------------------------------------
+// Tests (no PJRT needed: mock workers behind the same channel protocol)
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::Tensor;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::mpsc::Sender;
+
+    fn registry_with(tasks: &[&str]) -> SharedRegistry {
+        let reg = SharedRegistry::new();
+        for t in tasks {
+            reg.deploy(t, ParamStore::from_tensors(vec![Tensor::zeros("a", &[2])]));
+        }
+        reg
+    }
+
+    /// Client over hand-built worker handles; returns the raw job
+    /// receivers so tests can play the worker role.
+    fn mock_client(
+        workers: usize,
+        queue_depth: usize,
+        seq: usize,
+        registry: SharedRegistry,
+    ) -> (Client, Vec<Receiver<Job>>) {
+        let mut shards = Vec::new();
+        let mut rxs = Vec::new();
+        for _ in 0..workers {
+            let (tx, rx): (Sender<Job>, Receiver<Job>) = channel();
+            shards.push(WorkerHandle {
+                tx,
+                inflight: Arc::new(AtomicUsize::new(0)),
+                queue_depth,
+                metrics: Arc::new(Metrics::default()),
+            });
+            rxs.push(rx);
+        }
+        let client = Client {
+            shards: Arc::new(shards),
+            next_id: Arc::new(AtomicU64::new(1)),
+            accepting: Arc::new(AtomicBool::new(true)),
+            registry,
+            seq,
+        };
+        (client, rxs)
+    }
+
+    #[test]
+    fn validates_shape_and_task() {
+        let (c, _rxs) = mock_client(1, 8, 4, registry_with(&["sst2"]));
+        assert!(c.submit("sst2", &[1, 2, 3, 4]).is_ok());
+        assert_eq!(
+            c.submit("sst2", &[1]).unwrap_err(),
+            ServeError::BadShape { got: 1, want: 4 }
+        );
+        assert!(matches!(
+            c.submit("nope", &[1, 2, 3, 4]).unwrap_err(),
+            ServeError::UnknownTask { .. }
+        ));
+    }
+
+    #[test]
+    fn late_deployed_tasks_are_routable() {
+        let reg = registry_with(&[]);
+        let (c, _rxs) = mock_client(1, 8, 2, reg.clone());
+        assert!(matches!(
+            c.submit("t", &[0, 0]).unwrap_err(),
+            ServeError::UnknownTask { .. }
+        ));
+        reg.deploy("t", ParamStore::from_tensors(vec![Tensor::zeros("a", &[2])]));
+        assert!(c.submit("t", &[0, 0]).is_ok());
+    }
+
+    #[test]
+    fn ids_are_unique_across_clones() {
+        let (c1, _rxs) = mock_client(1, 8, 2, registry_with(&["t"]));
+        let c2 = c1.clone();
+        let a = c1.submit("t", &[0, 0]).unwrap();
+        let b = c2.submit("t", &[0, 0]).unwrap();
+        assert_ne!(a.id, b.id);
+    }
+
+    #[test]
+    fn bounded_admission_returns_overloaded() {
+        let (c, rxs) = mock_client(1, 2, 1, registry_with(&["t"]));
+        let _p1 = c.submit("t", &[0]).unwrap();
+        let _p2 = c.submit("t", &[0]).unwrap();
+        assert_eq!(
+            c.submit("t", &[0]).unwrap_err(),
+            ServeError::Overloaded { worker: 0, depth: 2 }
+        );
+        assert_eq!(c.shards[0].metrics.rejected.load(Ordering::Relaxed), 1);
+        // play the worker: answer one request, slot frees up
+        let Job::Req(r) = rxs[0].recv().unwrap() else {
+            panic!("expected a request")
+        };
+        let _ = r.resp.send(Err(ServeError::Lost));
+        c.shards[0].inflight.fetch_sub(1, Ordering::AcqRel);
+        assert!(c.submit("t", &[0]).is_ok());
+    }
+
+    #[test]
+    fn shard_pinning_is_stable_and_covers_workers() {
+        let (c, _rxs) = mock_client(4, 8, 1, registry_with(&["t"]));
+        let mut covered = [false; 4];
+        for i in 0..64 {
+            let name = format!("task{i}");
+            let w = c.shard_for(&name);
+            assert_eq!(w, c.shard_for(&name), "pinning must be stable");
+            covered[w] = true;
+        }
+        assert!(covered.iter().all(|&x| x), "64 tasks should hit all 4 workers");
+        // the shards used by the integration tests (2 workers)
+        let (c2, _r2) = mock_client(2, 8, 1, registry_with(&["t"]));
+        assert_ne!(c2.shard_for("SST-2"), c2.shard_for("QNLI"));
+    }
+
+    #[test]
+    fn pending_resolves_even_if_worker_dies() {
+        let (c, rxs) = mock_client(1, 8, 1, registry_with(&["t"]));
+        let p = c.submit("t", &[0]).unwrap();
+        drop(rxs); // worker vanishes without answering
+        assert!(matches!(p.wait(), Err(ServeError::Lost)));
+    }
+
+    #[test]
+    fn try_wait_polls_without_blocking() {
+        let (c, rxs) = mock_client(1, 8, 1, registry_with(&["t"]));
+        let p = c.submit("t", &[0]).unwrap();
+        assert!(p.try_wait().is_none());
+        let Job::Req(r) = rxs[0].recv().unwrap() else {
+            panic!("expected a request")
+        };
+        r.resp
+            .send(Err(ServeError::Batch {
+                task: "t".into(),
+                detail: "x".into(),
+            }))
+            .unwrap();
+        assert!(matches!(p.try_wait(), Some(Err(ServeError::Batch { .. }))));
+    }
+
+    #[test]
+    fn shutdown_flag_rejects_new_work() {
+        let (c, _rxs) = mock_client(1, 8, 1, registry_with(&["t"]));
+        c.accepting.store(false, Ordering::Release);
+        assert_eq!(c.submit("t", &[0]).unwrap_err(), ServeError::ShuttingDown);
+    }
+
+    #[test]
+    fn aggregate_merges_counters_and_percentiles() {
+        let a = Metrics::default();
+        let b = Metrics::default();
+        a.record(2, Duration::from_millis(2));
+        b.record(4, Duration::from_millis(4));
+        a.errors.fetch_add(1, Ordering::Relaxed);
+        let agg = aggregate([&a, &b]);
+        assert_eq!(agg.served, 6);
+        assert_eq!(agg.batches, 2);
+        assert_eq!(agg.errors, 1);
+        assert!((agg.batch_mean - 3.0).abs() < 1e-9);
+        assert!(agg.lat_p95_ms > agg.lat_p50_ms);
+    }
+
+    #[test]
+    fn error_display_is_actionable() {
+        let e = ServeError::Overloaded { worker: 3, depth: 64 };
+        assert!(e.to_string().contains("worker 3"));
+        assert!(e.is_retryable());
+        assert!(!ServeError::ShuttingDown.is_retryable());
+    }
+}

@@ -46,6 +46,17 @@ impl<T> Batcher<T> {
         self.queues.get(task).map(|q| q.len()).unwrap_or(0)
     }
 
+    /// Earliest instant at which a queued batch becomes deadline-ready
+    /// (`None` when empty). Lets the worker sleep exactly that long
+    /// instead of polling on a fixed tick.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.queues
+            .values()
+            .filter_map(|q| q.front())
+            .map(|p| p.enqueued + self.max_wait)
+            .min()
+    }
+
     /// Release the most urgent ready batch, if any. Ready = full batch
     /// OR oldest item past the deadline. Among ready tasks, the one
     /// with the oldest head-of-line request wins (no task starvation).
@@ -142,6 +153,21 @@ mod tests {
         let (_, items) = b.pop_ready(now()).unwrap();
         assert_eq!(items.len(), 3);
         assert_eq!(b.pending(), 4);
+    }
+
+    #[test]
+    fn next_deadline_tracks_oldest_head() {
+        let mut b: Batcher<u32> = Batcher::new(4, Duration::from_millis(10));
+        assert!(b.next_deadline().is_none());
+        b.push("a", 1);
+        let first = b.next_deadline().unwrap();
+        std::thread::sleep(Duration::from_millis(1));
+        b.push("b", 2);
+        // the deadline is set by the OLDEST head across tasks
+        assert_eq!(b.next_deadline().unwrap(), first);
+        let later = now() + Duration::from_millis(11);
+        b.pop_ready(later).unwrap();
+        assert!(b.next_deadline().unwrap() > first);
     }
 
     #[test]

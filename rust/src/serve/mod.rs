@@ -1,20 +1,40 @@
-//! Multi-task serving coordinator (Table III's deployment story).
+//! Multi-task serving (Table III's deployment story), production-shaped.
 //!
 //! ONE analog base model (weight-stationary on the AIMC tiles — here, a
 //! fixed meta store evaluated through the compiled forward graph) serves
-//! N tasks by hot-swapping N small LoRA adapter sets on the DPUs:
+//! N tasks by hot-swapping N small LoRA adapter sets on the DPUs. The
+//! public surface is [`api`]:
 //!
-//! * [`registry`] — thread-safe adapter registry (deploy / swap / version),
-//! * [`batcher`]  — per-task dynamic batching with a max-wait deadline,
-//! * [`router`]   — request admission + task routing,
-//! * [`server`]   — the worker loop that owns the PJRT engine and drains
-//!   batches through the forward graph, with latency/throughput metrics.
+//! * [`api::ServerBuilder`] — variant, graph, worker count, queue depth,
+//!   batching knobs; `build` spawns the pool.
+//! * [`api::Client`] — cloneable submit handle; `submit` returns a typed
+//!   [`api::Pending`] ticket that ALWAYS resolves (success or a
+//!   per-request [`api::ServeError`] — no hung receivers).
+//! * an engine pool — N worker threads, each owning its own PJRT engine
+//!   (the handles are not `Send`), tasks pinned to workers by stable
+//!   hash, bounded admission with `Overloaded` try-again backpressure.
+//! * [`api::Metrics`] — per-worker counters plus a pool aggregate.
 //!
-//! The PJRT handles are not Send, so the engine lives on the worker
-//! thread; clients talk over mpsc channels — the same ownership shape a
-//! vLLM-style router/worker split uses.
+//! Supporting pieces:
+//!
+//! * [`registry`] — thread-safe adapter registry handing out
+//!   `Arc<ParamStore>` snapshots (hot-swap is O(pointer) on the request
+//!   path),
+//! * [`batcher`]  — per-task dynamic batching with a max-wait deadline
+//!   (batches never mix tasks: a task switch costs an adapter swap),
+//! * [`router`] / [`server`] — deprecated shims over [`api`]. The old
+//!   call shapes (`Server::start`, `server.router`, raw `Msg` channels,
+//!   `Router::submit` returning a bare receiver) are gone; the shims
+//!   only point migrating code at the replacements.
 
+pub mod api;
 pub mod batcher;
+mod pool;
 pub mod registry;
 pub mod router;
 pub mod server;
+
+pub use api::{
+    aggregate, submit_wave, submit_wave_results, Client, Metrics, MetricsSnapshot, Pending,
+    Response, ServeError, ServeResult, Server, ServerBuilder,
+};

@@ -1,0 +1,323 @@
+//! The sharded worker pool behind [`super::api`].
+//!
+//! Each worker thread owns its own PJRT engine (the handles are not
+//! `Send`), built from the ONE manifest the builder already parsed, and
+//! drains a per-worker dynamic batcher. The pool's contract with the
+//! API layer: **every admitted request receives exactly one terminal
+//! result**, on every path — success, adapter miss, batch failure,
+//! injected fault, engine-init failure, and shutdown drain.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::config::manifest::Manifest;
+use crate::eval::drift_eval::{cls_logits, fwd_batch_shape};
+use crate::model::params::ParamStore;
+
+use super::api::{Metrics, Response, ServeError, ServeResult};
+use super::batcher::Batcher;
+use super::registry::SharedRegistry;
+
+/// One admitted request travelling to a worker.
+pub(crate) struct WorkRequest {
+    pub id: u64,
+    pub task: String,
+    pub tokens: Vec<i32>,
+    pub resp: Sender<ServeResult<Response>>,
+}
+
+pub(crate) enum Job {
+    Req(WorkRequest),
+    Shutdown,
+}
+
+/// Client-side view of one worker: its queue, in-flight budget, and
+/// counters.
+pub(crate) struct WorkerHandle {
+    pub tx: Sender<Job>,
+    pub inflight: Arc<AtomicUsize>,
+    pub queue_depth: usize,
+    pub metrics: Arc<Metrics>,
+}
+
+#[derive(Clone)]
+pub(crate) struct WorkerConfig {
+    pub worker: usize,
+    pub graph_key: String,
+    /// Sequence length the builder derived from the graph spec — the
+    /// same value admission validates against, so client and worker
+    /// can never segment a batch differently.
+    pub seq: usize,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub hw: [f32; 5],
+    /// Chaos knob: fail every n-th batch (0 = off).
+    pub fail_every: u64,
+}
+
+/// After a shutdown signal, how long to wait for admitted-but-not-yet-
+/// enqueued racers before giving up (they would resolve as `Lost`).
+const DRAIN_GRACE: Duration = Duration::from_millis(500);
+
+pub(crate) fn spawn_worker(
+    cfg: WorkerConfig,
+    manifest: Manifest,
+    meta: Arc<ParamStore>,
+    registry: SharedRegistry,
+    queue_depth: usize,
+) -> std::io::Result<(WorkerHandle, std::thread::JoinHandle<ServeResult<()>>)> {
+    let (tx, rx) = channel::<Job>();
+    let inflight = Arc::new(AtomicUsize::new(0));
+    let metrics = Arc::new(Metrics::default());
+    let handle = WorkerHandle {
+        tx,
+        inflight: inflight.clone(),
+        queue_depth,
+        metrics: metrics.clone(),
+    };
+    let name = format!("ahwa-serve-{}", cfg.worker);
+    let join = std::thread::Builder::new()
+        .name(name)
+        .spawn(move || worker_loop(cfg, manifest, meta, registry, rx, inflight, metrics))?;
+    Ok((handle, join))
+}
+
+fn worker_loop(
+    cfg: WorkerConfig,
+    manifest: Manifest,
+    meta: Arc<ParamStore>,
+    registry: SharedRegistry,
+    rx: Receiver<Job>,
+    inflight: Arc<AtomicUsize>,
+    metrics: Arc<Metrics>,
+) -> ServeResult<()> {
+    // PJRT handles are not Send: the engine is created HERE, from the
+    // manifest the builder parsed once for the whole pool.
+    let engine = match crate::runtime::Engine::new(manifest) {
+        Ok(e) => e,
+        Err(e) => return fail_all(&cfg, rx, &inflight, &metrics, format!("engine: {e:#}")),
+    };
+    let graph = match engine.load(&cfg.graph_key) {
+        Ok(g) => g,
+        Err(e) => {
+            return fail_all(
+                &cfg,
+                rx,
+                &inflight,
+                &metrics,
+                format!("graph '{}': {e:#}", cfg.graph_key),
+            )
+        }
+    };
+    metrics
+        .compile_ms
+        .store(engine.total_compile_ms() as u64, Ordering::Relaxed);
+    debug_assert_eq!(fwd_batch_shape(&graph).1, cfg.seq);
+
+    let mut batcher: Batcher<WorkRequest> = Batcher::new(cfg.max_batch, cfg.max_wait);
+    let mut last_task: Option<String> = None;
+    let mut batch_idx: u64 = 0;
+    let mut open = true;
+    let mut drain_deadline = Instant::now(); // set when `open` flips
+
+    loop {
+        if open {
+            // block until work/shutdown arrives or, if batches are
+            // queued, exactly until the earliest deadline — no fixed
+            // polling tick
+            let msg = match batcher.next_deadline() {
+                Some(d) => match rx.recv_timeout(d.saturating_duration_since(Instant::now())) {
+                    Ok(job) => Some(job),
+                    Err(RecvTimeoutError::Timeout) => None,
+                    Err(RecvTimeoutError::Disconnected) => Some(Job::Shutdown),
+                },
+                None => Some(rx.recv().unwrap_or(Job::Shutdown)),
+            };
+            match msg {
+                Some(Job::Req(r)) => {
+                    let task = r.task.clone();
+                    batcher.push(&task, r);
+                }
+                Some(Job::Shutdown) => {
+                    open = false;
+                    drain_deadline = Instant::now() + DRAIN_GRACE;
+                }
+                None => {}
+            }
+        } else {
+            // drain mode: soak up racing submits without blocking
+            while let Ok(job) = rx.try_recv() {
+                if let Job::Req(r) = job {
+                    let task = r.task.clone();
+                    batcher.push(&task, r);
+                }
+            }
+        }
+
+        // serve EVERY ready batch before sleeping again — a full batch
+        // must never wait on another task's deadline
+        loop {
+            let now = Instant::now();
+            let ready = if open {
+                batcher.pop_ready(now)
+            } else {
+                // everything goes, deadlines notwithstanding
+                batcher.pop_ready(now + cfg.max_wait + Duration::from_millis(1))
+            };
+            let Some((task, reqs)) = ready else { break };
+            batch_idx += 1;
+            serve_batch(
+                &cfg, &graph, &meta, &registry, &metrics, &inflight, batch_idx,
+                &mut last_task, task, reqs,
+            );
+            if !open {
+                // progress resets the grace window: slow batches must
+                // not eat the time reserved for in-flight racers
+                drain_deadline = Instant::now() + DRAIN_GRACE;
+            }
+        }
+
+        if !open && batcher.pending() == 0 {
+            // an admission bumps `inflight` BEFORE its send reaches the
+            // channel; wait those racers out so no ticket is lost.
+            if inflight.load(Ordering::Acquire) == 0 || Instant::now() >= drain_deadline {
+                break;
+            }
+            std::thread::sleep(Duration::from_micros(100));
+        }
+    }
+    Ok(())
+}
+
+/// Execute one task-pure batch and deliver a terminal result to every
+/// request in it.
+#[allow(clippy::too_many_arguments)]
+fn serve_batch(
+    cfg: &WorkerConfig,
+    graph: &crate::runtime::LoadedGraph,
+    meta: &ParamStore,
+    registry: &SharedRegistry,
+    metrics: &Metrics,
+    inflight: &AtomicUsize,
+    batch_idx: u64,
+    last_task: &mut Option<String>,
+    task: String,
+    reqs: Vec<WorkRequest>,
+) {
+    let n = reqs.len();
+    let Some((adapter, version)) = registry.snapshot(&task) else {
+        metrics.errors.fetch_add(n as u64, Ordering::Relaxed);
+        respond_all(reqs, inflight, |_| {
+            Err(ServeError::AdapterMissing { task: task.clone() })
+        });
+        return;
+    };
+    if last_task.as_deref() != Some(task.as_str()) {
+        metrics.adapter_swaps.fetch_add(1, Ordering::Relaxed);
+        *last_task = Some(task.clone());
+    }
+    if cfg.fail_every > 0 && batch_idx % cfg.fail_every == 0 {
+        metrics.errors.fetch_add(n as u64, Ordering::Relaxed);
+        respond_all(reqs, inflight, |_| {
+            Err(ServeError::Batch {
+                task: task.clone(),
+                detail: "injected batch failure".to_string(),
+            })
+        });
+        return;
+    }
+
+    let t0 = Instant::now();
+    let mut tokens = Vec::with_capacity(n * cfg.seq);
+    for r in &reqs {
+        tokens.extend_from_slice(&r.tokens);
+    }
+    let seed = batch_idx
+        .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+        .wrapping_add(cfg.worker as u64);
+    match cls_logits(graph, meta, &adapter, &tokens, cfg.hw, seed) {
+        Ok(rows) if rows.len() != n => {
+            metrics.errors.fetch_add(n as u64, Ordering::Relaxed);
+            let detail = format!("graph returned {} rows for {n} requests", rows.len());
+            respond_all(reqs, inflight, |_| {
+                Err(ServeError::Batch {
+                    task: task.clone(),
+                    detail: detail.clone(),
+                })
+            });
+        }
+        Ok(rows) => {
+            let latency = t0.elapsed();
+            metrics.record(n, latency);
+            for (r, row) in reqs.into_iter().zip(rows) {
+                let _ = r.resp.send(Ok(Response {
+                    id: r.id,
+                    task: task.clone(),
+                    worker: cfg.worker,
+                    logits: row,
+                    latency,
+                    batch_size: n,
+                    adapter_version: version,
+                }));
+                inflight.fetch_sub(1, Ordering::AcqRel);
+            }
+        }
+        Err(e) => {
+            metrics.errors.fetch_add(n as u64, Ordering::Relaxed);
+            let detail = format!("{e:#}");
+            respond_all(reqs, inflight, |_| {
+                Err(ServeError::Batch {
+                    task: task.clone(),
+                    detail: detail.clone(),
+                })
+            });
+        }
+    }
+}
+
+fn respond_all<F>(reqs: Vec<WorkRequest>, inflight: &AtomicUsize, mut result: F)
+where
+    F: FnMut(&WorkRequest) -> ServeResult<Response>,
+{
+    for r in reqs {
+        let out = result(&r);
+        let _ = r.resp.send(out);
+        inflight.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// Engine bring-up failed: answer every request (present and future)
+/// with a terminal `WorkerInit` error until shutdown, then surface the
+/// error to `Server::shutdown`.
+fn fail_all(
+    cfg: &WorkerConfig,
+    rx: Receiver<Job>,
+    inflight: &AtomicUsize,
+    metrics: &Metrics,
+    detail: String,
+) -> ServeResult<()> {
+    let err = ServeError::WorkerInit {
+        worker: cfg.worker,
+        detail,
+    };
+    eprintln!("[serve] worker {} init failed: {err}", cfg.worker);
+    let mut reject = |r: WorkRequest| {
+        let _ = r.resp.send(Err(err.clone()));
+        inflight.fetch_sub(1, Ordering::AcqRel);
+        metrics.errors.fetch_add(1, Ordering::Relaxed);
+    };
+    loop {
+        match rx.recv() {
+            Ok(Job::Req(r)) => reject(r),
+            Ok(Job::Shutdown) | Err(_) => break,
+        }
+    }
+    while let Ok(job) = rx.try_recv() {
+        if let Job::Req(r) = job {
+            reject(r);
+        }
+    }
+    Err(err)
+}

@@ -1,9 +1,15 @@
-//! Thread-safe adapter registry shared between the router (deploys) and
-//! the worker (reads) — the serving-side view of `model::lora`.
+//! Thread-safe adapter registry shared between clients (deploys) and
+//! the worker pool (reads) — the serving-side view of `model::lora`.
+//!
+//! Reads hand out `Arc<ParamStore>` snapshots, so the request path pays
+//! O(pointer) per batch (the paper's hot-swap claim: switching tasks
+//! must never cost a copy of the adapter, let alone the base model).
+//! A redeploy installs a fresh `Arc` + bumped version; batches already
+//! in flight finish on the snapshot they grabbed.
 
 use std::sync::{Arc, RwLock};
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::model::lora::AdapterRegistry;
 use crate::model::params::ParamStore;
@@ -16,14 +22,29 @@ impl SharedRegistry {
         SharedRegistry(Arc::new(RwLock::new(AdapterRegistry::new())))
     }
 
-    /// Hot-swap deployment: O(adapter size), never touches the base
-    /// model (the paper's on-chip task-switching claim).
+    /// Hot-swap deployment: O(adapter size) once, never touches the base
+    /// model (the paper's on-chip task-switching claim). Returns the new
+    /// monotone version.
     pub fn deploy(&self, task: &str, params: ParamStore) -> u64 {
         self.0.write().unwrap().deploy(task, params)
     }
 
-    pub fn get(&self, task: &str) -> Result<ParamStore> {
-        Ok(self.0.read().unwrap().get(task)?.clone())
+    /// O(pointer) snapshot of the current adapter set. One read path:
+    /// this is [`SharedRegistry::snapshot`] minus the version.
+    pub fn get(&self, task: &str) -> Result<Arc<ParamStore>> {
+        self.snapshot(task)
+            .map(|(p, _)| p)
+            .ok_or_else(|| anyhow!("no adapter deployed for task '{task}'"))
+    }
+
+    /// Adapter + version under ONE lock acquisition, so a concurrent
+    /// redeploy can never pair an old adapter with a new version number.
+    pub fn snapshot(&self, task: &str) -> Option<(Arc<ParamStore>, u64)> {
+        self.0.read().unwrap().snapshot(task)
+    }
+
+    pub fn contains(&self, task: &str) -> bool {
+        self.0.read().unwrap().contains(task)
     }
 
     pub fn version(&self, task: &str) -> Option<u64> {
@@ -70,5 +91,39 @@ mod tests {
         reg.deploy("t", p());
         assert_eq!(reg.version("t"), Some(2));
         assert_eq!(reg.version("missing"), None);
+    }
+
+    #[test]
+    fn get_is_pointer_cheap() {
+        let reg = SharedRegistry::new();
+        reg.deploy("t", ParamStore::from_tensors(vec![Tensor::zeros("a", &[64])]));
+        let a = reg.get("t").unwrap();
+        let b = reg.get("t").unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "get must not deep-copy the adapter");
+    }
+
+    #[test]
+    fn snapshot_version_is_consistent_under_redeploy() {
+        let reg = SharedRegistry::new();
+        let p = || ParamStore::from_tensors(vec![Tensor::zeros("a", &[2])]);
+        reg.deploy("t", p());
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let writer = {
+            let (reg, stop) = (reg.clone(), stop.clone());
+            std::thread::spawn(move || {
+                for _ in 0..200 {
+                    reg.deploy("t", ParamStore::from_tensors(vec![Tensor::zeros("a", &[2])]));
+                }
+                stop.store(true, std::sync::atomic::Ordering::Release);
+            })
+        };
+        let mut last = 0u64;
+        while !stop.load(std::sync::atomic::Ordering::Acquire) {
+            let (_, v) = reg.snapshot("t").unwrap();
+            assert!(v >= last, "versions observed monotonically");
+            last = v;
+        }
+        writer.join().unwrap();
+        assert_eq!(reg.version("t"), Some(201));
     }
 }

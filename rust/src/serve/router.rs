@@ -1,97 +1,15 @@
-//! Request admission and routing.
+//! Deprecated shim — request admission moved to [`super::api::Client`].
+//!
+//! The old `Router` exposed a raw `mpsc` receiver that could block
+//! forever if the worker dropped a batch. [`super::api::Client::submit`]
+//! returns a typed [`super::api::Pending`] ticket that always resolves,
+//! and applies bounded admission ([`super::api::ServeError::Overloaded`])
+//! instead of growing an unbounded queue.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::Sender;
-use std::sync::Arc;
+#![allow(deprecated)]
 
-use anyhow::{anyhow, Result};
+pub use super::api::{Client, Pending};
 
-use super::server::{Msg, Response};
-
-/// One inference request: a single example's tokens for a named task.
-#[derive(Debug)]
-pub struct Request {
-    pub id: u64,
-    pub task: String,
-    pub tokens: Vec<i32>,
-    pub resp: Sender<Response>,
-}
-
-/// Client-side handle: validates, stamps ids, and forwards to the
-/// worker. Cheap to clone; usable from many client threads.
-#[derive(Clone)]
-pub struct Router {
-    tx: Sender<Msg>,
-    next_id: Arc<AtomicU64>,
-    pub seq: usize,
-    known_tasks: Arc<Vec<String>>,
-}
-
-impl Router {
-    pub fn new(tx: Sender<Msg>, seq: usize, tasks: Vec<String>) -> Router {
-        Router {
-            tx,
-            next_id: Arc::new(AtomicU64::new(1)),
-            seq,
-            known_tasks: Arc::new(tasks),
-        }
-    }
-
-    /// Submit one request; returns (id, receiver for the response).
-    pub fn submit(&self, task: &str, tokens: Vec<i32>) -> Result<(u64, std::sync::mpsc::Receiver<Response>)> {
-        if tokens.len() != self.seq {
-            return Err(anyhow!(
-                "request has {} tokens, serving graph expects {}",
-                tokens.len(),
-                self.seq
-            ));
-        }
-        if !self.known_tasks.iter().any(|t| t == task) {
-            return Err(anyhow!(
-                "unknown task '{task}' (deployed: {:?})",
-                self.known_tasks
-            ));
-        }
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let (resp_tx, resp_rx) = std::sync::mpsc::channel();
-        self.tx
-            .send(Msg::Req(Request {
-                id,
-                task: task.to_string(),
-                tokens,
-                resp: resp_tx,
-            }))
-            .map_err(|_| anyhow!("server is down"))?;
-        Ok((id, resp_rx))
-    }
-
-    /// Ask the worker to stop after draining its queues.
-    pub fn shutdown(&self) {
-        let _ = self.tx.send(Msg::Shutdown);
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use std::sync::mpsc::channel;
-
-    #[test]
-    fn validates_shape_and_task() {
-        let (tx, _rx) = channel();
-        let r = Router::new(tx, 4, vec!["sst2".into()]);
-        assert!(r.submit("sst2", vec![1, 2, 3, 4]).is_ok());
-        assert!(r.submit("sst2", vec![1]).is_err());
-        assert!(r.submit("nope", vec![1, 2, 3, 4]).is_err());
-    }
-
-    #[test]
-    fn ids_are_unique_across_clones() {
-        let (tx, _rx) = channel();
-        let r1 = Router::new(tx, 2, vec!["t".into()]);
-        let r2 = r1.clone();
-        let (a, _) = r1.submit("t", vec![0, 0]).unwrap();
-        let (b, _) = r2.submit("t", vec![0, 0]).unwrap();
-        assert_ne!(a, b);
-    }
-}
+/// Deprecated alias for the new cloneable client handle.
+#[deprecated(since = "0.2.0", note = "use serve::api::Client")]
+pub type Router = Client;

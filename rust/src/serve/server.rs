@@ -1,76 +1,30 @@
-//! The serving worker: owns the PJRT engine (not Send) on its own
-//! thread, drains the dynamic batcher, and answers requests through the
-//! compiled forward graph with the task's LoRA adapter.
+//! Deprecated shim — the worker loop lives in `serve::pool`, the public
+//! surface in [`super::api`].
+//!
+//! What changed and why:
+//!
+//! * `Server::start(cfg, …)` → [`api::ServerBuilder`] (worker count,
+//!   queue depth and batching knobs in one place);
+//! * the raw `Msg` channel protocol is private to the pool — clients
+//!   hold a typed [`api::Client`];
+//! * a failed or unroutable batch now answers every request with a
+//!   typed [`api::ServeError`] instead of silently dropping it (the old
+//!   worker leaked the whole batch and left `submit_wave` blocked on
+//!   `rx.recv()` forever).
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError};
-use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+#![allow(deprecated)]
 
-use anyhow::Result;
+use std::time::Duration;
 
-use crate::eval::drift_eval::cls_logits;
 use crate::model::params::ParamStore;
-use crate::util::stats;
 
-use super::batcher::Batcher;
+use super::api;
 use super::registry::SharedRegistry;
-use super::router::{Request, Router};
 
-#[derive(Debug)]
-pub struct Response {
-    pub id: u64,
-    pub task: String,
-    /// Per-example logits row from the task head.
-    pub logits: Vec<f32>,
-    pub latency: Duration,
-    pub batch_size: usize,
-    pub adapter_version: u64,
-}
+pub use super::api::{submit_wave, Metrics, MetricsSnapshot, Response, ServeError, Server};
 
-pub enum Msg {
-    Req(Request),
-    Shutdown,
-}
-
-#[derive(Default)]
-pub struct Metrics {
-    pub served: AtomicU64,
-    pub batches: AtomicU64,
-    pub adapter_swaps: AtomicU64,
-    pub errors: AtomicU64,
-    latencies_us: Mutex<Vec<f64>>,
-    batch_sizes: Mutex<Vec<f64>>,
-}
-
-impl Metrics {
-    fn record(&self, n: usize, latency: Duration) {
-        self.served.fetch_add(n as u64, Ordering::Relaxed);
-        self.batches.fetch_add(1, Ordering::Relaxed);
-        self.latencies_us.lock().unwrap().push(latency.as_micros() as f64);
-        self.batch_sizes.lock().unwrap().push(n as f64);
-    }
-
-    pub fn summary(&self) -> String {
-        let lat = self.latencies_us.lock().unwrap();
-        let bs = self.batch_sizes.lock().unwrap();
-        format!(
-            "served={} batches={} swaps={} errors={} batch_mean={:.1} lat_p50={:.1}ms lat_p95={:.1}ms",
-            self.served.load(Ordering::Relaxed),
-            self.batches.load(Ordering::Relaxed),
-            self.adapter_swaps.load(Ordering::Relaxed),
-            self.errors.load(Ordering::Relaxed),
-            stats::mean(&bs),
-            stats::percentile(&lat, 50.0) / 1e3,
-            stats::percentile(&lat, 95.0) / 1e3,
-        )
-    }
-
-    pub fn p50_latency_ms(&self) -> f64 {
-        stats::percentile(&self.latencies_us.lock().unwrap(), 50.0) / 1e3
-    }
-}
-
+/// Deprecated: the knobs live on [`api::ServerBuilder`].
+#[deprecated(since = "0.2.0", note = "use serve::api::ServerBuilder")]
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
     /// Serving variant (its fwd_cls graph is the execution engine).
@@ -90,146 +44,22 @@ impl ServeConfig {
             hw: [0.0, 0.0, 127.0, 127.0, 0.0],
         }
     }
-}
 
-pub struct Server {
-    pub router: Router,
-    pub metrics: Arc<Metrics>,
-    pub registry: SharedRegistry,
-    worker: Option<std::thread::JoinHandle<Result<()>>>,
-}
-
-impl Server {
-    /// Start the worker with a base (meta) model — conceptually the
-    /// weights programmed once into the AIMC tiles — and a registry of
-    /// task adapters.
-    pub fn start(cfg: ServeConfig, meta: ParamStore, registry: SharedRegistry) -> Result<Server> {
-        let (tx, rx) = channel::<Msg>();
-        let metrics = Arc::new(Metrics::default());
-        let m2 = metrics.clone();
-        let reg2 = registry.clone();
-        let cfg2 = cfg.clone();
-
-        // resolve the sequence length up front for router validation
-        let manifest = crate::config::manifest::Manifest::load(
-            crate::config::manifest::default_artifacts_dir(),
-        )?;
-        let seq = manifest.variant(&cfg.variant)?.seq;
-        let tasks = registry.tasks();
-
-        let worker = std::thread::Builder::new()
-            .name("ahwa-serve-worker".into())
-            .spawn(move || worker_loop(cfg2, meta, reg2, rx, m2))?;
-
-        Ok(Server {
-            router: Router::new(tx, seq, tasks),
-            metrics,
-            registry,
-            worker: Some(worker),
-        })
-    }
-
-    /// Graceful shutdown: drain queues, join the worker.
-    pub fn shutdown(mut self) -> Result<()> {
-        self.router.shutdown();
-        if let Some(w) = self.worker.take() {
-            w.join().expect("worker panicked")?;
-        }
-        Ok(())
+    /// Forward to the new builder.
+    pub fn into_builder(self) -> api::ServerBuilder {
+        api::Server::builder(&self.variant)
+            .max_batch(self.max_batch)
+            .max_wait(self.max_wait)
+            .hw(self.hw)
     }
 }
 
-fn worker_loop(
+/// Deprecated: single-worker pool via the old entry point.
+#[deprecated(since = "0.2.0", note = "use serve::api::ServerBuilder::build")]
+pub fn start(
     cfg: ServeConfig,
     meta: ParamStore,
     registry: SharedRegistry,
-    rx: Receiver<Msg>,
-    metrics: Arc<Metrics>,
-) -> Result<()> {
-    // PJRT handles are not Send: the engine is created *here*.
-    let engine = crate::runtime::Engine::from_artifacts()?;
-    let graph = engine.load(&format!("{}/fwd_cls", cfg.variant))?;
-    let seq = crate::eval::drift_eval::fwd_batch_shape(&graph).1;
-
-    let mut batcher: Batcher<Request> = Batcher::new(cfg.max_batch, cfg.max_wait);
-    let mut last_task: Option<String> = None;
-    let mut open = true;
-
-    while open || batcher.pending() > 0 {
-        // admit work (bounded wait so deadlines fire)
-        match rx.recv_timeout(Duration::from_micros(500)) {
-            Ok(Msg::Req(r)) => batcher.push(&r.task.clone(), r),
-            Ok(Msg::Shutdown) => open = false,
-            Err(RecvTimeoutError::Timeout) => {}
-            Err(RecvTimeoutError::Disconnected) => open = false,
-        }
-
-        let now = Instant::now();
-        let ready = if open {
-            batcher.pop_ready(now)
-        } else {
-            // drain mode: everything goes
-            batcher.pop_ready(now + cfg.max_wait + Duration::from_millis(1))
-        };
-        let Some((task, reqs)) = ready else { continue };
-
-        let t0 = Instant::now();
-        let adapter = match registry.get(&task) {
-            Ok(a) => a,
-            Err(_) => {
-                metrics.errors.fetch_add(reqs.len() as u64, Ordering::Relaxed);
-                continue;
-            }
-        };
-        if last_task.as_deref() != Some(task.as_str()) {
-            metrics.adapter_swaps.fetch_add(1, Ordering::Relaxed);
-            last_task = Some(task.clone());
-        }
-        let version = registry.version(&task).unwrap_or(0);
-
-        let mut tokens = Vec::with_capacity(reqs.len() * seq);
-        for r in &reqs {
-            tokens.extend_from_slice(&r.tokens);
-        }
-        match cls_logits(&graph, &meta, &adapter, &tokens, cfg.hw, t0.elapsed().as_nanos() as u64) {
-            Ok(rows) => {
-                let latency = t0.elapsed();
-                metrics.record(reqs.len(), latency);
-                let bsz = reqs.len();
-                for (r, row) in reqs.into_iter().zip(rows) {
-                    let _ = r.resp.send(Response {
-                        id: r.id,
-                        task: task.clone(),
-                        logits: row,
-                        latency,
-                        batch_size: bsz,
-                        adapter_version: version,
-                    });
-                }
-            }
-            Err(e) => {
-                eprintln!("[serve] batch failed: {e:#}");
-                metrics.errors.fetch_add(reqs.len() as u64, Ordering::Relaxed);
-            }
-        }
-    }
-    Ok(())
-}
-
-/// Convenience used by the serving experiments: submit many requests
-/// from client threads, wait for all responses.
-pub fn submit_wave(
-    router: &Router,
-    jobs: &[(String, Vec<i32>)],
-) -> Result<Vec<Response>> {
-    let mut rxs = Vec::with_capacity(jobs.len());
-    for (task, toks) in jobs {
-        let (_, rx) = router.submit(task, toks.clone())?;
-        rxs.push(rx);
-    }
-    let mut out = Vec::with_capacity(rxs.len());
-    for rx in rxs {
-        out.push(rx.recv().map_err(|_| anyhow::anyhow!("response channel closed"))?);
-    }
-    Ok(out)
+) -> api::ServeResult<api::Server> {
+    cfg.into_builder().build(meta, registry)
 }

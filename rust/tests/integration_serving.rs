@@ -1,13 +1,15 @@
-//! Serving-stack integration: router → batcher → worker (PJRT) →
-//! responses, with adapter hot-swaps mid-stream. Needs artifacts.
+//! Serving-stack integration: client → sharded engine pool (PJRT) →
+//! typed responses, with backpressure, injected batch failures, adapter
+//! hot-swaps mid-stream, and graceful drain. Needs artifacts.
 
+use std::sync::atomic::Ordering;
 use std::time::Duration;
 
-use ahwa_lora::config::manifest::default_artifacts_dir;
+use ahwa_lora::config::manifest::{default_artifacts_dir, Manifest};
 use ahwa_lora::data::glue::{GlueGen, GlueTask};
 use ahwa_lora::model::checkpoint;
 use ahwa_lora::serve::registry::SharedRegistry;
-use ahwa_lora::serve::server::{submit_wave, ServeConfig, Server};
+use ahwa_lora::serve::{submit_wave, Pending, ServeError, Server, ServerBuilder};
 use ahwa_lora::util::rng::Pcg64;
 
 fn ready() -> bool {
@@ -18,8 +20,13 @@ fn ready() -> bool {
     ok
 }
 
-fn setup(tasks: &[GlueTask]) -> anyhow::Result<(Server, usize, usize)> {
-    let manifest = ahwa_lora::config::manifest::Manifest::load(default_artifacts_dir())?;
+/// Deploy `tasks` on a fresh registry and build a "tiny" server with
+/// test-friendly batching defaults, customised by `cfg`.
+fn setup(
+    tasks: &[GlueTask],
+    cfg: impl FnOnce(ServerBuilder) -> ServerBuilder,
+) -> anyhow::Result<(Server, usize, usize)> {
+    let manifest = Manifest::load(default_artifacts_dir())?;
     let v = manifest.variant("tiny")?.clone();
     let meta = checkpoint::load(manifest.init_path("tiny.meta"))?;
     let adapter = checkpoint::load(manifest.init_path("tiny.step_cls_lora.train"))?;
@@ -27,91 +34,264 @@ fn setup(tasks: &[GlueTask]) -> anyhow::Result<(Server, usize, usize)> {
     for t in tasks {
         registry.deploy(t.adapter_key(), adapter.clone());
     }
-    let mut cfg = ServeConfig::new("tiny");
-    cfg.max_batch = 4;
-    cfg.max_wait = Duration::from_millis(2);
-    let server = Server::start(cfg, meta, registry)?;
+    let builder = cfg(Server::builder("tiny")
+        .manifest(manifest)
+        .max_batch(4)
+        .max_wait(Duration::from_millis(2)));
+    let server = builder.build(meta, registry)?;
     Ok((server, v.vocab, v.seq))
 }
 
+fn jobs_for(tasks: &[GlueTask], vocab: usize, seq: usize, n: usize, seed: u64) -> Vec<(String, Vec<i32>)> {
+    let mut rng = Pcg64::new(seed);
+    (0..n)
+        .map(|i| {
+            let task = tasks[i % tasks.len()];
+            let gen = GlueGen::new(task, vocab, seq);
+            let (tokens, _, _) = gen.example(&mut rng);
+            (task.adapter_key().to_string(), tokens)
+        })
+        .collect()
+}
+
 #[test]
-fn serves_mixed_task_wave() {
+fn multi_worker_mixed_wave_zero_lost() {
     if !ready() {
         return;
     }
+    // SST-2 and QNLI are pinned to DIFFERENT workers under FNV-1a % 2
     let tasks = [GlueTask::Sst2, GlueTask::Qnli];
-    let (server, vocab, seq) = setup(&tasks).unwrap();
-    let mut rng = Pcg64::new(1);
-    let mut jobs = Vec::new();
-    for i in 0..24 {
-        let task = tasks[i % 2];
-        let gen = GlueGen::new(task, vocab, seq);
-        let (tokens, _, _) = gen.example(&mut rng);
-        jobs.push((task.adapter_key().to_string(), tokens));
-    }
-    let responses = submit_wave(&server.router, &jobs).unwrap();
-    assert_eq!(responses.len(), 24);
+    let (server, vocab, seq) = setup(&tasks, |b| b.workers(2)).unwrap();
+    let client = server.client();
+    assert_ne!(client.shard_for("SST-2"), client.shard_for("QNLI"));
+
+    let jobs = jobs_for(&tasks, vocab, seq, 24, 1);
+    let responses = submit_wave(&client, &jobs).unwrap();
+    assert_eq!(responses.len(), 24, "zero lost responses");
     for (r, (task, _)) in responses.iter().zip(&jobs) {
         assert_eq!(&r.task, task);
+        assert_eq!(r.worker, client.shard_for(task), "task stays on its shard");
         assert_eq!(r.logits.len(), 4); // padded n_cls
         assert!(r.logits.iter().all(|x| x.is_finite()));
         assert!(r.batch_size >= 1 && r.batch_size <= 4);
     }
-    // both tasks served; swaps happened (mixed wave, single worker)
-    assert!(server.metrics.adapter_swaps.load(std::sync::atomic::Ordering::Relaxed) >= 2);
-    assert_eq!(server.metrics.served.load(std::sync::atomic::Ordering::Relaxed), 24);
+    // per-worker AND aggregate accounting must line up
+    let per_worker: Vec<u64> = server
+        .worker_metrics()
+        .iter()
+        .map(|m| m.served.load(Ordering::Relaxed))
+        .collect();
+    assert_eq!(per_worker.len(), 2);
+    assert!(per_worker.iter().all(|&s| s > 0), "both workers served: {per_worker:?}");
+    let agg = server.metrics();
+    assert_eq!(agg.served, 24);
+    assert_eq!(per_worker.iter().sum::<u64>(), 24);
+    assert!(agg.adapter_swaps >= 2);
+    assert_eq!(agg.errors, 0);
+    let report = server.metrics_report();
+    assert!(report.contains("worker0") && report.contains("worker1"));
     server.shutdown().unwrap();
 }
 
 #[test]
-fn hot_swap_changes_served_version() {
+fn injected_batch_failures_still_resolve_every_ticket() {
+    if !ready() {
+        return;
+    }
+    let tasks = [GlueTask::Sst2, GlueTask::Qnli];
+    let (server, vocab, seq) = setup(&tasks, |b| b.workers(2).inject_batch_failure(2)).unwrap();
+    let client = server.client();
+    let jobs = jobs_for(&tasks, vocab, seq, 16, 2);
+    let pendings: Vec<Pending> = jobs
+        .iter()
+        .map(|(task, toks)| client.submit(task, toks).unwrap())
+        .collect();
+    let mut oks = 0u64;
+    let mut errs = 0u64;
+    for p in pendings {
+        match p.wait() {
+            Ok(r) => {
+                assert!(r.logits.iter().all(|x| x.is_finite()));
+                oks += 1;
+            }
+            Err(ServeError::Batch { detail, .. }) => {
+                assert!(detail.contains("injected"));
+                errs += 1;
+            }
+            Err(e) => panic!("unexpected error kind: {e}"),
+        }
+    }
+    assert_eq!(oks + errs, 16, "every admitted ticket resolved");
+    assert!(errs > 0, "fault injection fired");
+    assert!(oks > 0, "healthy batches still served");
+    assert_eq!(server.metrics().errors, errs);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn bounded_queue_backpressure_returns_overloaded() {
     if !ready() {
         return;
     }
     let tasks = [GlueTask::Sst2];
-    let (server, vocab, seq) = setup(&tasks).unwrap();
-    let gen = GlueGen::new(GlueTask::Sst2, vocab, seq);
-    let mut rng = Pcg64::new(2);
-    let (tokens, _, _) = gen.example(&mut rng);
+    // one worker, 2 in-flight slots, and a batch deadline far enough out
+    // that the queue cannot drain while we hammer it
+    let (server, vocab, seq) = setup(&tasks, |b| {
+        b.workers(1)
+            .queue_depth(2)
+            .max_batch(8)
+            .max_wait(Duration::from_secs(2))
+    })
+    .unwrap();
+    let client = server.client();
+    let jobs = jobs_for(&tasks, vocab, seq, 6, 3);
+    let mut admitted = Vec::new();
+    let mut overloaded = 0u64;
+    for (task, toks) in &jobs {
+        match client.submit(task, toks) {
+            Ok(p) => admitted.push(p),
+            Err(ServeError::Overloaded { worker, depth }) => {
+                assert_eq!(worker, 0);
+                assert_eq!(depth, 2);
+                overloaded += 1;
+            }
+            Err(e) => panic!("unexpected error kind: {e}"),
+        }
+    }
+    // a scheduler stall can let the deadline fire and free slots
+    // mid-loop, so bound rather than pin the split
+    assert!(admitted.len() >= 2, "at least queue_depth admissions");
+    assert_eq!(overloaded, 6 - admitted.len() as u64);
+    assert!(overloaded >= 1, "the bounded queue pushed back");
+    assert_eq!(server.metrics().rejected, overloaded);
+    for p in admitted {
+        assert!(p.wait().is_ok(), "admitted requests still served");
+    }
+    // slots freed -> the try-again protocol succeeds
+    let p = client
+        .submit_with_retry(&jobs[0].0, &jobs[0].1, Duration::from_secs(10))
+        .unwrap();
+    assert!(p.wait().is_ok());
+    server.shutdown().unwrap();
+}
 
-    let jobs = vec![("SST-2".to_string(), tokens.clone())];
-    let r1 = submit_wave(&server.router, &jobs).unwrap();
-    assert_eq!(r1[0].adapter_version, 1);
+#[test]
+fn concurrent_redeploy_is_version_monotonic() {
+    if !ready() {
+        return;
+    }
+    let tasks = [GlueTask::Sst2];
+    let (server, vocab, seq) = setup(&tasks, |b| b.workers(1)).unwrap();
+    let client = server.client();
+    let registry = server.registry().clone();
+    let adapter = {
+        let manifest = Manifest::load(default_artifacts_dir()).unwrap();
+        checkpoint::load(manifest.init_path("tiny.step_cls_lora.train")).unwrap()
+    };
 
-    // re-deploy (the paper's on-chip adaptation to new user data)
-    let manifest = ahwa_lora::config::manifest::Manifest::load(default_artifacts_dir()).unwrap();
+    let redeployer = std::thread::spawn(move || {
+        for _ in 0..5 {
+            registry.deploy("SST-2", adapter.clone());
+            std::thread::sleep(Duration::from_millis(3));
+        }
+    });
+    let mut versions = Vec::new();
+    for wave in 0..4 {
+        let jobs = jobs_for(&tasks, vocab, seq, 8, 10 + wave);
+        for r in submit_wave(&client, &jobs).unwrap() {
+            versions.push(r.adapter_version);
+        }
+    }
+    redeployer.join().unwrap();
+
+    let final_version = server.registry().version("SST-2").unwrap();
+    assert_eq!(final_version, 6, "1 initial + 5 redeploys");
+    assert!(versions.iter().all(|&v| v >= 1 && v <= final_version));
+    // single worker + single task => batches are FIFO, so the observed
+    // version sequence never goes backwards
+    assert!(
+        versions.windows(2).all(|w| w[0] <= w[1]),
+        "versions observed monotonically: {versions:?}"
+    );
+    // after the redeployer is done, traffic sees the final version
+    let jobs = jobs_for(&tasks, vocab, seq, 4, 99);
+    for r in submit_wave(&client, &jobs).unwrap() {
+        assert_eq!(r.adapter_version, final_version);
+    }
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn shutdown_drains_all_pending_requests() {
+    if !ready() {
+        return;
+    }
+    let tasks = [GlueTask::Sst2];
+    // deadline far in the future: ONLY the drain path can release these
+    let (server, vocab, seq) = setup(&tasks, |b| {
+        b.max_batch(8).max_wait(Duration::from_secs(60))
+    })
+    .unwrap();
+    let client = server.client();
+    let jobs = jobs_for(&tasks, vocab, seq, 3, 4);
+    let pendings: Vec<Pending> = jobs
+        .iter()
+        .map(|(task, toks)| client.submit(task, toks).unwrap())
+        .collect();
+    server.shutdown().unwrap();
+    for p in pendings {
+        let r = p.wait().expect("drained response");
+        assert_eq!(r.task, "SST-2");
+    }
+    // surviving client handles are refused cleanly
+    assert_eq!(
+        client.submit("SST-2", &jobs[0].1).unwrap_err(),
+        ServeError::ShuttingDown
+    );
+}
+
+#[test]
+fn typed_rejections_and_live_task_deploys() {
+    if !ready() {
+        return;
+    }
+    let (server, _, seq) = setup(&[GlueTask::Sst2], |b| b).unwrap();
+    let client = server.client();
+    assert!(matches!(
+        client.submit("made-up-task", &vec![0; seq]).unwrap_err(),
+        ServeError::UnknownTask { .. }
+    ));
+    assert_eq!(
+        client.submit("SST-2", &vec![0; seq + 1]).unwrap_err(),
+        ServeError::BadShape { got: seq + 1, want: seq }
+    );
+    // tasks deployed AFTER startup are immediately routable (the old
+    // Router froze its task list at start)
+    let manifest = Manifest::load(default_artifacts_dir()).unwrap();
     let adapter = checkpoint::load(manifest.init_path("tiny.step_cls_lora.train")).unwrap();
-    server.registry.deploy("SST-2", adapter);
-    let r2 = submit_wave(&server.router, &jobs).unwrap();
-    assert_eq!(r2[0].adapter_version, 2);
+    server.registry().deploy("QNLI", adapter);
+    let v = manifest.variant("tiny").unwrap().clone();
+    let mut rng = Pcg64::new(5);
+    let (tokens, _, _) = GlueGen::new(GlueTask::Qnli, v.vocab, v.seq).example(&mut rng);
+    let r = client.submit("QNLI", &tokens).unwrap().wait().unwrap();
+    assert_eq!(r.task, "QNLI");
     server.shutdown().unwrap();
 }
 
 #[test]
-fn rejects_unknown_task_and_bad_shape() {
+fn builder_rejects_unknown_variant_and_graph() {
     if !ready() {
         return;
     }
-    let (server, _, seq) = setup(&[GlueTask::Sst2]).unwrap();
-    assert!(server.router.submit("made-up-task", vec![0; seq]).is_err());
-    assert!(server.router.submit("SST-2", vec![0; seq + 1]).is_err());
-    server.shutdown().unwrap();
-}
-
-#[test]
-fn shutdown_drains_pending_requests() {
-    if !ready() {
-        return;
-    }
-    let tasks = [GlueTask::Sst2];
-    let (server, vocab, seq) = setup(&tasks).unwrap();
-    let gen = GlueGen::new(GlueTask::Sst2, vocab, seq);
-    let mut rng = Pcg64::new(3);
-    // single request below max_batch: only served on deadline/drain
-    let (tokens, _, _) = gen.example(&mut rng);
-    let (_, rx) = server.router.submit("SST-2", tokens).unwrap();
-    server.shutdown().unwrap();
-    // the response must have been delivered before the worker exited
-    let resp = rx.try_recv().expect("drained response");
-    assert_eq!(resp.task, "SST-2");
+    let manifest = Manifest::load(default_artifacts_dir()).unwrap();
+    let meta = checkpoint::load(manifest.init_path("tiny.meta")).unwrap();
+    let err = Server::builder("no-such-variant")
+        .build(meta.clone(), SharedRegistry::new())
+        .unwrap_err();
+    assert!(matches!(err, ServeError::Init { .. }));
+    let err = Server::builder("tiny")
+        .graph("tiny/no_such_graph")
+        .build(meta, SharedRegistry::new())
+        .unwrap_err();
+    assert!(matches!(err, ServeError::Init { .. }));
 }
