@@ -29,3 +29,8 @@ fi
 
 cargo clippy --all-targets -- -D warnings
 cargo test -q
+# the pipeline-latency / scheduler model tests also run in release:
+# debug_assert guards are compiled out and the hot numeric paths take
+# their optimised shapes there, which is what production serves
+cargo test --release -q
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet

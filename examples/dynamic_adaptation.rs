@@ -17,7 +17,7 @@ use ahwa_lora::data::glue::{GlueGen, GlueTask};
 use ahwa_lora::experiments;
 use ahwa_lora::experiments::common::{infer_hw, pretrained_encoder, Ctx};
 use ahwa_lora::serve::registry::SharedRegistry;
-use ahwa_lora::serve::{submit_wave, Server};
+use ahwa_lora::serve::{submit_wave, SchedConfig, Server};
 use ahwa_lora::util::cli::Args;
 use ahwa_lora::util::rng::Pcg64;
 
@@ -40,10 +40,13 @@ fn main() -> anyhow::Result<()> {
     let v1 = registry.deploy(task.adapter_key(), ctx.init_train(&format!("{variant}/step_cls_lora"))?);
     println!("deployed adapter '{}' v{v1}", task.adapter_key());
 
-    // 6-bit ADC: the degraded quantizer the deployed part is stuck with
+    // 6-bit ADC: the degraded quantizer the deployed part is stuck with.
+    // Batching stays pipeline-aware — the cost model is a property of
+    // the tiles/PMCA, not of the quantizer that degraded.
     let server = Server::builder(&variant)
         .manifest(ctx.engine.manifest.clone())
         .hw(infer_hw(8, 6, 0.0, 0.0))
+        .scheduler(SchedConfig::for_layer(v.d_model, v.d_model, v.rank))
         .build(meta, registry.clone())?;
     let client = server.client();
 

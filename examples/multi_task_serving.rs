@@ -13,7 +13,7 @@ use std::time::Instant;
 use ahwa_lora::data::glue::{GlueGen, GlueTask};
 use ahwa_lora::experiments::common::{pretrained_encoder, Ctx};
 use ahwa_lora::serve::registry::SharedRegistry;
-use ahwa_lora::serve::{submit_wave, Server};
+use ahwa_lora::serve::{submit_wave, SchedConfig, Server};
 use ahwa_lora::util::cli::Args;
 use ahwa_lora::util::rng::Pcg64;
 
@@ -44,10 +44,14 @@ fn main() -> anyhow::Result<()> {
         println!("deployed adapter '{}' v{version}", t.adapter_key());
     }
 
+    // Pipeline-aware batching: workers size batches from the Fig. 4
+    // AIMC/PMCA balancing model of this variant's projection layer.
+    let t_int = args.usize("t-int", 256) as f64;
     let server = Server::builder(&variant)
         .manifest(ctx.engine.manifest.clone())
         .workers(workers)
         .queue_depth(args.usize("queue-depth", 128))
+        .scheduler(SchedConfig::for_layer(v.d_model, v.d_model, v.rank).t_int(t_int))
         .build(meta, registry.clone())?;
     let client = server.client();
     for t in tasks {
@@ -77,6 +81,11 @@ fn main() -> anyhow::Result<()> {
         responses.len(),
         wall.as_secs_f64() * 1e3,
         responses.len() as f64 / wall.as_secs_f64()
+    );
+    let agg = server.metrics();
+    println!(
+        "scheduler model: batch latency p50 {:.3} ms modeled vs {:.3} ms measured",
+        agg.modeled_p50_ms, agg.lat_p50_ms
     );
     println!("{}", server.metrics_report());
 

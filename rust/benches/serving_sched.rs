@@ -1,0 +1,96 @@
+//! Modeled-vs-measured serving latency under the multi-task wave.
+//!
+//! Drives the pipeline-aware scheduler (`serve::sched`) end to end: a
+//! mixed GLUE request wave through the sharded engine pool, with the
+//! AIMC/PMCA cost model's predicted batch latency reported next to the
+//! measured wall time (the model predicts on-target hardware time, so
+//! on the simulation host the ratio is the point of the report, not a
+//! match). Requires `make artifacts`; skips gracefully if missing.
+
+use std::time::Duration;
+
+use ahwa_lora::config::manifest::{default_artifacts_dir, Manifest, Role};
+use ahwa_lora::data::glue::{GlueGen, GlueTask};
+use ahwa_lora::model::checkpoint;
+use ahwa_lora::serve::registry::SharedRegistry;
+use ahwa_lora::serve::{submit_wave, BatchScheduler, SchedConfig, Server};
+use ahwa_lora::util::bench::Bencher;
+use ahwa_lora::util::rng::Pcg64;
+
+const WAVE: usize = 96;
+const WORKERS: usize = 2;
+const MAX_BATCH: usize = 8;
+
+fn main() -> anyhow::Result<()> {
+    if !default_artifacts_dir().join("manifest.json").exists() {
+        println!("artifacts not built — run `make artifacts` first; skipping");
+        return Ok(());
+    }
+    let manifest = Manifest::load(default_artifacts_dir())?;
+    let v = manifest.variant("tiny")?.clone();
+    let meta = checkpoint::load(manifest.init_path("tiny.meta"))?;
+    let adapter = checkpoint::load(manifest.init_path("tiny.step_cls_lora.train"))?;
+
+    let registry = SharedRegistry::new();
+    let tasks = [GlueTask::Sst2, GlueTask::Qnli, GlueTask::Cola];
+    for t in tasks {
+        registry.deploy(t.adapter_key(), adapter.clone());
+    }
+
+    // seq resolved from the serving graph, exactly as the builder does
+    let graph_seq = manifest
+        .graph("tiny/fwd_cls")?
+        .inputs_with_role(Role::Data)
+        .next()
+        .filter(|io| io.shape.len() == 2)
+        .map(|io| io.shape[1])
+        .unwrap_or(v.seq);
+    let sched = SchedConfig::for_layer(v.d_model, v.d_model, v.rank);
+    let server = Server::builder("tiny")
+        .manifest(manifest)
+        .workers(WORKERS)
+        .max_batch(MAX_BATCH)
+        .scheduler(sched)
+        .build(meta, registry)?;
+    let client = server.client();
+
+    let mut rng = Pcg64::new(42);
+    let jobs: Vec<(String, Vec<i32>)> = (0..WAVE)
+        .map(|i| {
+            let task = tasks[i % tasks.len()];
+            let gen = GlueGen::new(task, v.vocab, v.seq);
+            let (tokens, _, _) = gen.example(&mut rng);
+            (task.adapter_key().to_string(), tokens)
+        })
+        .collect();
+
+    // the model's prediction for the whole wave: full batches at the
+    // committed token parallelism, split across the worker shards
+    let model = BatchScheduler::new(sched.seq(graph_seq), MAX_BATCH, Duration::from_millis(5));
+    let batches_per_worker = WAVE.div_ceil(MAX_BATCH * WORKERS) as f64;
+    let wave_model_ns = model.modeled_batch_ns(MAX_BATCH) * batches_per_worker;
+
+    let mut b = Bencher::with_budget(1.0);
+    println!(
+        "== serving wave, pipeline-aware sched (t_opt={} for {}x{} rank {}) ==",
+        model.t_opt(),
+        v.d_model,
+        v.d_model,
+        v.rank
+    );
+    let responses = b.once_modeled(
+        &format!("serve/multi-task wave {WAVE} reqs"),
+        wave_model_ns,
+        || submit_wave(&client, &jobs),
+    )?;
+    assert_eq!(responses.len(), WAVE, "every request must resolve");
+
+    let agg = server.metrics();
+    println!(
+        "batch latency: modeled p50 {:.3} ms vs measured p50 {:.3} ms (batch_mean {:.1})",
+        agg.modeled_p50_ms, agg.lat_p50_ms, agg.batch_mean
+    );
+    println!("{}", server.metrics_report());
+    server.shutdown()?;
+    Ok(())
+}

@@ -20,7 +20,7 @@ use crate::aimc::tile::is_mappable;
 use crate::config::manifest::Role;
 use crate::model::params::ParamStore;
 use crate::pcm::{read_tensor, PcmModel, ProgrammedTensor};
-use crate::runtime::pack::{assemble_inputs, literal_to_f32, DataArg};
+use crate::runtime::pack::{assemble_inputs, literal_to_f32, DataArg, PaddedChunks};
 use crate::runtime::{Engine, LoadedGraph};
 use crate::util::rng::Pcg64;
 
@@ -90,23 +90,16 @@ pub fn qa_predict(
     seed: u64,
 ) -> Result<Vec<(usize, usize)>> {
     let (b, s) = fwd_batch_shape(graph);
-    let n = tokens.len() / s;
-    let mut preds = Vec::with_capacity(n);
-    let mut chunk = vec![0i32; b * s];
-    let mut done = 0;
-    while done < n {
-        let take = (n - done).min(b);
-        chunk[..take * s].copy_from_slice(&tokens[done * s..(done + take) * s]);
-        for v in chunk[take * s..].iter_mut() {
-            *v = 0;
-        }
+    let mut preds = Vec::with_capacity(tokens.len() / s);
+    let mut chunks = PaddedChunks::new(tokens, b, s);
+    while let Some((chunk, take, offset)) = chunks.next_chunk() {
         let inputs = assemble_inputs(
             &graph.spec,
             meta,
             train,
             None,
-            &[DataArg::I32(&chunk)],
-            seed ^ (done as u64).wrapping_mul(0x9e37),
+            &[DataArg::I32(chunk)],
+            seed ^ (offset as u64).wrapping_mul(0x9e37),
             hw,
             None,
         )?;
@@ -121,7 +114,6 @@ pub fn qa_predict(
             let (ps, pe) = super::metrics::best_span(&srow[4..], &erow[4..], 6);
             preds.push((ps + 4, pe + 4));
         }
-        done += take;
     }
     Ok(preds)
 }
@@ -137,23 +129,16 @@ pub fn cls_logits(
 ) -> Result<Vec<Vec<f32>>> {
     let (b, s) = fwd_batch_shape(graph);
     let n_cls = graph.spec.outputs[0].shape[1];
-    let n = tokens.len() / s;
-    let mut rows = Vec::with_capacity(n);
-    let mut chunk = vec![0i32; b * s];
-    let mut done = 0;
-    while done < n {
-        let take = (n - done).min(b);
-        chunk[..take * s].copy_from_slice(&tokens[done * s..(done + take) * s]);
-        for v in chunk[take * s..].iter_mut() {
-            *v = 0;
-        }
+    let mut rows = Vec::with_capacity(tokens.len() / s);
+    let mut chunks = PaddedChunks::new(tokens, b, s);
+    while let Some((chunk, take, offset)) = chunks.next_chunk() {
         let inputs = assemble_inputs(
             &graph.spec,
             meta,
             train,
             None,
-            &[DataArg::I32(&chunk)],
-            seed ^ (done as u64).wrapping_mul(0x517c),
+            &[DataArg::I32(chunk)],
+            seed ^ (offset as u64).wrapping_mul(0x517c),
             hw,
             None,
         )?;
@@ -162,7 +147,6 @@ pub fn cls_logits(
         for i in 0..take {
             rows.push(logits[i * n_cls..(i + 1) * n_cls].to_vec());
         }
-        done += take;
     }
     Ok(rows)
 }

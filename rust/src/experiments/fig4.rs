@@ -4,7 +4,7 @@
 
 use anyhow::Result;
 
-use crate::pipeline::balance::{best, sweep};
+use crate::pipeline::balance::best_point;
 use crate::pipeline::schedule::{INTEGRATION_TIMES_NS, TOKEN_PARALLELISM};
 use crate::pmca::cluster::SnitchCluster;
 use crate::pmca::kernels::LoraWorkload;
@@ -81,14 +81,16 @@ pub fn total_latency(args: &Args) -> Result<()> {
     );
     for (name, m, n) in LAYERS {
         for t_int in INTEGRATION_TIMES_NS {
-            let b = best(&sweep(m, n, rank, t_int, SEQ, &c, &e));
+            // the same sweep+best the serving scheduler commits to at
+            // build time (pinned against it in tests/pipeline_golden.rs)
+            let b = best_point(m, n, rank, t_int, SEQ, &c, &e);
             t.row(vec![
                 name.to_string(),
                 f(t_int, 0),
                 b.t.to_string(),
                 f(b.latency.baseline_ns / 1e3, 2),
                 f(b.latency.steady_ns / 1e3, 2),
-                f(100.0 * b.latency.overhead(), 2),
+                f(100.0 * b.overhead(), 2),
             ]);
         }
     }

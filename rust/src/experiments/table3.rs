@@ -203,21 +203,27 @@ fn serve_demo(
     eval_sets: &BTreeMap<GlueTask, ClsBatch>,
 ) -> Result<String> {
     use crate::serve::registry::SharedRegistry;
-    use crate::serve::{submit_wave, Server};
+    use crate::serve::{submit_wave, SchedConfig, Server};
 
     let n_requests = args.usize("serve-requests", 48);
     if n_requests == 0 {
         return Ok(String::new());
     }
     let workers = args.usize("serve-workers", 2);
+    let t_int = args.usize("t-int", 256) as f64;
 
     let registry = SharedRegistry::new();
     for (key, params) in adapters {
         registry.deploy(key, params.clone());
     }
+    // pipeline-aware batching: model the variant's own projection shape
+    // (d_model × d_model at the trained LoRA rank) on the AIMC tiles
+    let vcfg = ctx.engine.manifest.variant(variant)?.clone();
+    let sched = SchedConfig::for_layer(vcfg.d_model, vcfg.d_model, vcfg.rank).t_int(t_int);
     let server = Server::builder(variant)
         .manifest(ctx.engine.manifest.clone())
         .workers(workers)
+        .scheduler(sched)
         .build(meta.clone(), registry.clone())?;
     let client = server.client();
 
@@ -245,6 +251,36 @@ fn serve_demo(
         responses.len() as f64 / wall.as_secs_f64(),
         server.workers(),
     );
+    // the balance point the workers committed to, and model vs reality;
+    // seq comes from the serving graph exactly as the builder resolves
+    // the SchedConfig's inherit-from-graph sentinel
+    let graph_seq = ctx
+        .engine
+        .manifest
+        .graph(&format!("{variant}/fwd_cls"))?
+        .inputs_with_role(Role::Data)
+        .next()
+        .filter(|io| io.shape.len() == 2)
+        .map(|io| io.shape[1])
+        .unwrap_or(vcfg.seq);
+    let bp = crate::pipeline::balance::best_point(
+        vcfg.d_model,
+        vcfg.d_model,
+        vcfg.rank,
+        t_int,
+        graph_seq,
+        &crate::pmca::cluster::SnitchCluster::default(),
+        &crate::pmca::redmule::RedMulE::default(),
+    );
+    let agg = server.metrics();
+    out.push_str(&format!(
+        "pipeline-aware sched: t_int={t_int:.0}ns -> token parallelism t={} \
+         (modeled steady overhead {:.2}%), batch latency model p50 {:.3} ms vs measured p50 {:.3} ms\n",
+        bp.t,
+        100.0 * bp.overhead(),
+        agg.modeled_p50_ms,
+        agg.lat_p50_ms,
+    ));
     out.push_str(&format!(
         "hot-swap: '{key}' -> v{v}, next wave served v{}\n{}",
         again

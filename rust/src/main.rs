@@ -5,6 +5,7 @@
 //! ahwa-lora train [--variant V] [--steps N] [--noise X] …
 //! ahwa-lora latency [--rank R]          # Fig. 4 pipeline study
 //! ahwa-lora serve-demo [--requests N] [--workers W] [--queue-depth D]
+//!                      [--t-int NS] [--no-sched]
 //! ahwa-lora list                        # artifacts + variants
 //! ```
 
@@ -72,12 +73,14 @@ fn list() -> Result<()> {
 fn serve_demo(args: &Args) -> Result<()> {
     use ahwa_lora::data::glue::{GlueGen, GlueTask};
     use ahwa_lora::serve::registry::SharedRegistry;
-    use ahwa_lora::serve::{submit_wave, Server};
+    use ahwa_lora::serve::{submit_wave, SchedConfig, Server};
     use ahwa_lora::util::rng::Pcg64;
 
     let n_requests = args.usize("requests", 64);
     let workers = args.usize("workers", 2);
     let queue_depth = args.usize("queue-depth", 128);
+    let t_int = args.usize("t-int", 256) as f64;
+    let no_sched = args.bool("no-sched");
     let variant = args.str("variant", "mobilebert_proxy");
 
     let ctx = ahwa_lora::experiments::common::Ctx::new()?;
@@ -108,11 +111,23 @@ fn serve_demo(args: &Args) -> Result<()> {
         registry.total_params() as f64 / 1e6
     );
 
-    let server = Server::builder(&variant)
+    let mut builder = Server::builder(&variant)
         .manifest(ctx.engine.manifest.clone())
         .workers(workers)
-        .queue_depth(queue_depth)
-        .build(meta, registry)?;
+        .queue_depth(queue_depth);
+    if no_sched {
+        println!("pipeline-aware scheduling: OFF (fixed size/deadline batching)");
+    } else {
+        // batch fills come from the Fig. 4 AIMC/PMCA balancing model of
+        // the variant's own projection layer
+        let sched = SchedConfig::for_layer(v.d_model, v.d_model, v.rank).t_int(t_int);
+        println!(
+            "pipeline-aware scheduling: {}x{} rank {} @ t_int={t_int:.0}ns (--no-sched to disable)",
+            v.d_model, v.d_model, v.rank
+        );
+        builder = builder.scheduler(sched);
+    }
+    let server = builder.build(meta, registry)?;
     let client = server.client();
     let mut rng = Pcg64::new(42);
     let mut jobs = Vec::new();

@@ -17,6 +17,15 @@ pub struct BalancePoint {
     pub fits_tcdm: bool,
 }
 
+impl BalancePoint {
+    /// Fractional steady-state overhead vs the pure-AIMC baseline at
+    /// this operating point (the Fig. 4c quantity; see
+    /// [`PipelineLatency::overhead`]).
+    pub fn overhead(&self) -> f64 {
+        self.latency.overhead()
+    }
+}
+
 /// Evaluate every candidate `t` for a layer at one integration time.
 pub fn sweep(
     m: usize,
@@ -27,10 +36,11 @@ pub fn sweep(
     cluster: &SnitchCluster,
     engine: &RedMulE,
 ) -> Vec<BalancePoint> {
+    let layer = LoraWorkload::new(m, n, r, 0);
     TOKEN_PARALLELISM
         .iter()
         .map(|&t| {
-            let w = LoraWorkload { m, n, r, t };
+            let w = layer.with_tokens(t);
             BalancePoint {
                 t,
                 latency: pipeline_latency(&w, t_int_ns, seq_len, cluster, engine),
@@ -39,6 +49,20 @@ pub fn sweep(
             }
         })
         .collect()
+}
+
+/// Sweep + [`best`] in one call — the shape both the Fig. 4 experiment
+/// and the serving scheduler consume.
+pub fn best_point(
+    m: usize,
+    n: usize,
+    r: usize,
+    t_int_ns: f64,
+    seq_len: usize,
+    cluster: &SnitchCluster,
+    engine: &RedMulE,
+) -> BalancePoint {
+    best(&sweep(m, n, r, t_int_ns, seq_len, cluster, engine))
 }
 
 /// The paper's balancing objective: minimise end-to-end latency; prefer

@@ -20,7 +20,7 @@ pub fn aimc_latency_ns(t_tokens: usize, t_int_ns: f64) -> f64 {
 /// Per-batch hand-off cost AIMC→PMCA that cannot be hidden (results of
 /// the *current* batch must land before its LoRA fuse can finish).
 pub fn handoff_ns(w: &LoraWorkload, cluster: &SnitchCluster) -> f64 {
-    cluster.cycles_to_ns(cluster.dma_cycles(crate::pmca::kernels::FP16_BYTES * w.t * w.n))
+    cluster.dma_ns(crate::pmca::kernels::FP16_BYTES * w.t * w.n)
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -71,7 +71,9 @@ pub fn pipeline_latency(
     cluster: &SnitchCluster,
     engine: &RedMulE,
 ) -> PipelineLatency {
-    let n_batches = seq_len.div_ceil(w.t);
+    // a degenerate empty sequence still costs one pipeline pass — the
+    // serving scheduler may probe fill 0 shapes and must not underflow
+    let n_batches = seq_len.div_ceil(w.t).max(1);
     let aimc_ns = aimc_latency_ns(w.t, t_int_ns);
     let pmca_ns = w.latency_ns(cluster, engine);
     let period = aimc_ns.max(pmca_ns);

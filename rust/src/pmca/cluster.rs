@@ -54,6 +54,11 @@ impl SnitchCluster {
         (bytes as f64 / self.dma_bytes_per_cycle).ceil() as u64
     }
 
+    /// Wall time for a DMA transfer of `bytes` at the core clock (ns).
+    pub fn dma_ns(&self, bytes: usize) -> f64 {
+        self.cycles_to_ns(self.dma_cycles(bytes))
+    }
+
     pub fn cycles_to_ns(&self, cycles: u64) -> f64 {
         cycles as f64 * 1e9 / self.freq_hz
     }

@@ -52,6 +52,16 @@ impl CycleBreakdown {
 }
 
 impl LoraWorkload {
+    pub fn new(m: usize, n: usize, r: usize, t: usize) -> LoraWorkload {
+        LoraWorkload { m, n, r, t }
+    }
+
+    /// Same layer/rank at a different token parallelism — the shape the
+    /// balance sweep and the serving scheduler iterate over.
+    pub fn with_tokens(self, t: usize) -> LoraWorkload {
+        LoraWorkload { t, ..self }
+    }
+
     pub fn macs(&self) -> u64 {
         (self.t * self.r * (self.m + self.n)) as u64
     }

@@ -105,6 +105,57 @@ pub enum DataArg<'a> {
     F32(&'a [f32]),
 }
 
+/// Walk a flat `[n, s]` token buffer in graph-batch-sized chunks,
+/// zero-padding the final partial chunk to exactly `[b, s]`.
+///
+/// AOT-compiled forward graphs have a fixed batch dimension, but both
+/// the eval harness and the serving pool's cost-based scheduler produce
+/// batches of any fill ≤ `b`; this is the one place that padding rule
+/// lives. The chunk buffer is reused across iterations, so this is a
+/// lending iterator: call [`PaddedChunks::next_chunk`] until it returns
+/// `None`.
+pub struct PaddedChunks<'a> {
+    tokens: &'a [i32],
+    b: usize,
+    s: usize,
+    n: usize,
+    done: usize,
+    chunk: Vec<i32>,
+}
+
+impl<'a> PaddedChunks<'a> {
+    /// `tokens.len()` must be a multiple of the sequence length `s`.
+    pub fn new(tokens: &'a [i32], b: usize, s: usize) -> PaddedChunks<'a> {
+        debug_assert!(b > 0 && s > 0);
+        debug_assert_eq!(tokens.len() % s, 0, "tokens must be whole rows");
+        PaddedChunks {
+            tokens,
+            b,
+            s,
+            n: tokens.len() / s,
+            done: 0,
+            chunk: vec![0i32; b * s],
+        }
+    }
+
+    /// Next `(padded chunk of b·s tokens, valid rows, starting row)`;
+    /// `None` once every row has been yielded.
+    pub fn next_chunk(&mut self) -> Option<(&[i32], usize, usize)> {
+        if self.done >= self.n {
+            return None;
+        }
+        let take = (self.n - self.done).min(self.b);
+        let start = self.done * self.s;
+        self.chunk[..take * self.s].copy_from_slice(&self.tokens[start..start + take * self.s]);
+        for v in self.chunk[take * self.s..].iter_mut() {
+            *v = 0;
+        }
+        let offset = self.done;
+        self.done += take;
+        Some((&self.chunk, take, offset))
+    }
+}
+
 /// Assemble the full input vector for any exported graph.
 ///
 /// `opt` is `Some([lr, wd, step])` for training graphs, `None` for
@@ -214,6 +265,29 @@ mod tests {
     fn key_literal_splits_seed() {
         let lit = key_literal(0x1234_5678_9abc_def0).unwrap();
         assert_eq!(lit.to_vec::<u32>().unwrap(), vec![0x1234_5678, 0x9abc_def0]);
+    }
+
+    #[test]
+    fn padded_chunks_cover_rows_and_zero_fill() {
+        let tokens: Vec<i32> = (1..=10).collect(); // 5 rows of s=2
+        let mut chunks = PaddedChunks::new(&tokens, 2, 2);
+        let mut seen_rows = 0;
+        let mut offsets = Vec::new();
+        while let Some((chunk, take, offset)) = chunks.next_chunk() {
+            assert_eq!(chunk.len(), 4, "always the full graph shape");
+            assert_eq!(&chunk[..take * 2], &tokens[offset * 2..(offset + take) * 2]);
+            assert!(chunk[take * 2..].iter().all(|&v| v == 0), "tail is zero-padded");
+            offsets.push(offset);
+            seen_rows += take;
+        }
+        assert_eq!(seen_rows, 5);
+        assert_eq!(offsets, vec![0, 2, 4]);
+    }
+
+    #[test]
+    fn padded_chunks_empty_input_yields_nothing() {
+        let mut chunks = PaddedChunks::new(&[], 4, 8);
+        assert!(chunks.next_chunk().is_none());
     }
 
     #[test]

@@ -39,6 +39,7 @@ use crate::util::stats;
 
 use super::pool::{self, Job, WorkRequest, WorkerHandle};
 use super::registry::SharedRegistry;
+use super::sched::{Clock, RealClock, SchedConfig};
 
 // ---------------------------------------------------------------------------
 // Typed errors
@@ -180,19 +181,33 @@ pub struct Metrics {
     pub compile_ms: AtomicU64,
     latencies_us: Mutex<Vec<f64>>,
     batch_sizes: Mutex<Vec<f64>>,
+    /// Scheduler-modeled batch latency samples (µs), recorded alongside
+    /// the measured ones when pipeline-aware scheduling is active.
+    modeled_us: Mutex<Vec<f64>>,
 }
 
 impl Metrics {
     pub(crate) fn record(&self, n: usize, latency: Duration) {
+        self.record_modeled(n, latency, None);
+    }
+
+    /// Record a served batch plus, when the scheduler supplied one, the
+    /// cost model's predicted latency — the modeled-vs-measured pair
+    /// the snapshot reports.
+    pub(crate) fn record_modeled(&self, n: usize, latency: Duration, modeled: Option<Duration>) {
         self.served.fetch_add(n as u64, Ordering::Relaxed);
         let b = self.batches.fetch_add(1, Ordering::Relaxed) as usize;
         push_sample(&mut self.latencies_us.lock().unwrap(), b, latency.as_micros() as f64);
         push_sample(&mut self.batch_sizes.lock().unwrap(), b, n as f64);
+        if let Some(m) = modeled {
+            push_sample(&mut self.modeled_us.lock().unwrap(), b, m.as_nanos() as f64 / 1e3);
+        }
     }
 
     pub fn snapshot(&self, label: &str) -> MetricsSnapshot {
         let lat = self.latencies_us.lock().unwrap();
         let bs = self.batch_sizes.lock().unwrap();
+        let modeled = self.modeled_us.lock().unwrap();
         MetricsSnapshot {
             label: label.to_string(),
             served: self.served.load(Ordering::Relaxed),
@@ -204,6 +219,7 @@ impl Metrics {
             batch_mean: stats::mean(&bs),
             lat_p50_ms: stats::percentile(&lat, 50.0) / 1e3,
             lat_p95_ms: stats::percentile(&lat, 95.0) / 1e3,
+            modeled_p50_ms: stats::percentile(&modeled, 50.0) / 1e3,
         }
     }
 
@@ -229,6 +245,10 @@ pub struct MetricsSnapshot {
     pub batch_mean: f64,
     pub lat_p50_ms: f64,
     pub lat_p95_ms: f64,
+    /// Scheduler-modeled p50 batch latency (0 when the pipeline-aware
+    /// scheduler is off). The model predicts on-target AIMC/PMCA time,
+    /// so on the simulation host it is a shape reference, not a match.
+    pub modeled_p50_ms: f64,
 }
 
 impl fmt::Display for MetricsSnapshot {
@@ -248,7 +268,11 @@ impl fmt::Display for MetricsSnapshot {
             self.lat_p50_ms,
             self.lat_p95_ms,
             self.compile_ms,
-        )
+        )?;
+        if self.modeled_p50_ms > 0.0 {
+            write!(f, " model_p50={:.3}ms", self.modeled_p50_ms)?;
+        }
+        Ok(())
     }
 }
 
@@ -261,6 +285,7 @@ pub fn aggregate<'a>(workers: impl IntoIterator<Item = &'a Metrics>) -> MetricsS
     };
     let mut lat = Vec::new();
     let mut bs = Vec::new();
+    let mut modeled = Vec::new();
     for m in workers {
         out.served += m.served.load(Ordering::Relaxed);
         out.batches += m.batches.load(Ordering::Relaxed);
@@ -270,10 +295,12 @@ pub fn aggregate<'a>(workers: impl IntoIterator<Item = &'a Metrics>) -> MetricsS
         out.compile_ms += m.compile_ms.load(Ordering::Relaxed);
         lat.extend_from_slice(&m.latencies_us.lock().unwrap());
         bs.extend_from_slice(&m.batch_sizes.lock().unwrap());
+        modeled.extend_from_slice(&m.modeled_us.lock().unwrap());
     }
     out.batch_mean = stats::mean(&bs);
     out.lat_p50_ms = stats::percentile(&lat, 50.0) / 1e3;
     out.lat_p95_ms = stats::percentile(&lat, 95.0) / 1e3;
+    out.modeled_p50_ms = stats::percentile(&modeled, 50.0) / 1e3;
     out
 }
 
@@ -282,7 +309,7 @@ pub fn aggregate<'a>(workers: impl IntoIterator<Item = &'a Metrics>) -> MetricsS
 // ---------------------------------------------------------------------------
 
 /// Configuration for a serving pool; `build` spawns the workers.
-#[derive(Clone, Debug)]
+#[derive(Clone)]
 pub struct ServerBuilder {
     variant: String,
     graph: Option<String>,
@@ -293,6 +320,24 @@ pub struct ServerBuilder {
     max_wait: Duration,
     hw: [f32; 5],
     fail_every: u64,
+    sched: Option<SchedConfig>,
+    clock: Arc<dyn Clock>,
+}
+
+impl fmt::Debug for ServerBuilder {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("ServerBuilder")
+            .field("variant", &self.variant)
+            .field("graph", &self.graph)
+            .field("workers", &self.workers)
+            .field("queue_depth", &self.queue_depth)
+            .field("max_batch", &self.max_batch)
+            .field("max_wait", &self.max_wait)
+            .field("hw", &self.hw)
+            .field("fail_every", &self.fail_every)
+            .field("sched", &self.sched)
+            .finish_non_exhaustive()
+    }
 }
 
 impl ServerBuilder {
@@ -308,6 +353,8 @@ impl ServerBuilder {
             // inference hardware vector: quantizers active, no in-graph noise
             hw: [0.0, 0.0, 127.0, 127.0, 0.0],
             fail_every: 0,
+            sched: None,
+            clock: Arc::new(RealClock),
         }
     }
 
@@ -360,6 +407,26 @@ impl ServerBuilder {
         self
     }
 
+    /// Enable pipeline-aware batch scheduling: workers pick batch fills
+    /// from the AIMC/PMCA cost model ([`super::sched`]) instead of the
+    /// fixed size/deadline policy. A `seq_len` of 0 inherits the serving
+    /// graph's sequence length.
+    pub fn scheduler(mut self, cfg: SchedConfig) -> Self {
+        self.sched = Some(cfg);
+        self
+    }
+
+    /// Time source for enqueue stamps, deadline math, and latency
+    /// metrics. Production keeps [`RealClock`]. Note the workers'
+    /// *channel waits* are wall-clock either way — deterministic-clock
+    /// tests drive [`super::batcher::Batcher`] and
+    /// [`super::sched::BatchScheduler`] directly on a
+    /// [`super::sched::VirtualClock`] instead of standing up a pool.
+    pub fn clock(mut self, clock: Arc<dyn Clock>) -> Self {
+        self.clock = clock;
+        self
+    }
+
     /// Load the manifest ONCE, validate variant + graph, and spawn the
     /// worker pool (each worker re-uses the parsed manifest for its
     /// engine — no duplicate manifest loads).
@@ -391,6 +458,15 @@ impl ServerBuilder {
                 detail: format!("graph '{graph_key}' has no [batch, seq] data input"),
             })?;
 
+        // the scheduler models whole request sequences: resolve the
+        // "inherit from graph" sentinel against the admission seq
+        let sched = self.sched.map(|mut s| {
+            if s.seq_len == 0 {
+                s.seq_len = seq;
+            }
+            s
+        });
+
         // the read-only base model is shared, not copied, across workers
         let meta = Arc::new(meta);
         let accepting = Arc::new(AtomicBool::new(true));
@@ -406,6 +482,8 @@ impl ServerBuilder {
                 max_wait: self.max_wait,
                 hw: self.hw,
                 fail_every: self.fail_every,
+                sched,
+                clock: self.clock.clone(),
             };
             let (handle, join) = pool::spawn_worker(
                 cfg,
@@ -838,6 +916,21 @@ mod tests {
         assert_eq!(agg.errors, 1);
         assert!((agg.batch_mean - 3.0).abs() < 1e-9);
         assert!(agg.lat_p95_ms > agg.lat_p50_ms);
+    }
+
+    #[test]
+    fn modeled_samples_flow_into_snapshots() {
+        let m = Metrics::default();
+        m.record_modeled(2, Duration::from_millis(3), Some(Duration::from_micros(80)));
+        let s = m.snapshot("w");
+        assert!((s.modeled_p50_ms - 0.08).abs() < 1e-9, "{}", s.modeled_p50_ms);
+        assert!(s.to_string().contains("model_p50"));
+        let agg = aggregate([&m]);
+        assert!((agg.modeled_p50_ms - 0.08).abs() < 1e-9);
+        // without a scheduler the column stays silent
+        let plain = Metrics::default();
+        plain.record(1, Duration::from_millis(1));
+        assert!(!plain.snapshot("w").to_string().contains("model_p50"));
     }
 
     #[test]

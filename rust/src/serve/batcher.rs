@@ -5,9 +5,20 @@
 //! its oldest request has waited `max_wait`. This is the standard
 //! dynamic-batching policy (vLLM/Triton style) adapted to the fact that
 //! task switches cost an adapter swap — batches never mix tasks.
+//!
+//! The fixed policy lives in [`Batcher::pop_ready`]; the pipeline-aware
+//! scheduler ([`super::sched::BatchScheduler`]) drives the same queues
+//! through [`Batcher::heads`] / [`Batcher::pop_task`] and replaces the
+//! fixed fill with a modeled-optimal one. All enqueue timestamps come
+//! from a [`Clock`](super::sched::Clock), so every timing test runs on
+//! a virtual clock with no sleeps.
 
 use std::collections::{BTreeMap, VecDeque};
+use std::fmt;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+use super::sched::{Clock, RealClock};
 
 #[derive(Clone, Debug)]
 pub struct Pending<T> {
@@ -15,26 +26,43 @@ pub struct Pending<T> {
     pub enqueued: Instant,
 }
 
-#[derive(Debug)]
 pub struct Batcher<T> {
     pub max_batch: usize,
     pub max_wait: Duration,
+    clock: Arc<dyn Clock>,
     queues: BTreeMap<String, VecDeque<Pending<T>>>,
+}
+
+impl<T: fmt::Debug> fmt::Debug for Batcher<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Batcher")
+            .field("max_batch", &self.max_batch)
+            .field("max_wait", &self.max_wait)
+            .field("queues", &self.queues)
+            .finish()
+    }
 }
 
 impl<T> Batcher<T> {
     pub fn new(max_batch: usize, max_wait: Duration) -> Batcher<T> {
+        Self::with_clock(max_batch, max_wait, Arc::new(RealClock))
+    }
+
+    /// Batcher on an explicit clock (virtual in tests).
+    pub fn with_clock(max_batch: usize, max_wait: Duration, clock: Arc<dyn Clock>) -> Batcher<T> {
         Batcher {
             max_batch,
             max_wait,
+            clock,
             queues: BTreeMap::new(),
         }
     }
 
     pub fn push(&mut self, task: &str, item: T) {
+        let now = self.clock.now();
         self.queues.entry(task.to_string()).or_default().push_back(Pending {
             item,
-            enqueued: Instant::now(),
+            enqueued: now,
         });
     }
 
@@ -44,6 +72,15 @@ impl<T> Batcher<T> {
 
     pub fn pending_for(&self, task: &str) -> usize {
         self.queues.get(task).map(|q| q.len()).unwrap_or(0)
+    }
+
+    /// Non-empty queues as `(task, depth, oldest enqueue time)` — the
+    /// view a scheduling policy needs to make a close/wait decision.
+    pub fn heads(&self) -> impl Iterator<Item = (&str, usize, Instant)> + '_ {
+        self.queues
+            .iter()
+            .filter(|(_, q)| !q.is_empty())
+            .map(|(t, q)| (t.as_str(), q.len(), q.front().unwrap().enqueued))
     }
 
     /// Earliest instant at which a queued batch becomes deadline-ready
@@ -73,10 +110,19 @@ impl<T> Batcher<T> {
             }
         }
         let task = best.map(|(t, _)| t.clone())?;
-        let q = self.queues.get_mut(&task).unwrap();
-        let n = q.len().min(self.max_batch);
-        let items = q.drain(..n).map(|p| p.item).collect();
+        let items = self.pop_task(&task, self.max_batch)?;
         Some((task, items))
+    }
+
+    /// Pop up to `n` items (at least one, at most `max_batch`) from one
+    /// task's queue — the scheduler's close primitive.
+    pub fn pop_task(&mut self, task: &str, n: usize) -> Option<Vec<T>> {
+        let q = self.queues.get_mut(task)?;
+        if q.is_empty() {
+            return None;
+        }
+        let n = n.clamp(1, self.max_batch).min(q.len());
+        Some(q.drain(..n).map(|p| p.item).collect())
     }
 
     /// Drain everything regardless of deadlines (shutdown path).
@@ -95,18 +141,25 @@ impl<T> Batcher<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::serve::sched::VirtualClock;
 
-    fn now() -> Instant {
-        Instant::now()
+    /// Batcher on a virtual clock the test controls — no sleeps anywhere.
+    fn on_virtual_clock(
+        max_batch: usize,
+        max_wait: Duration,
+    ) -> (Batcher<u32>, Arc<VirtualClock>) {
+        let clock = Arc::new(VirtualClock::new());
+        let b = Batcher::with_clock(max_batch, max_wait, clock.clone() as Arc<dyn Clock>);
+        (b, clock)
     }
 
     #[test]
     fn full_batch_releases_immediately() {
-        let mut b: Batcher<u32> = Batcher::new(2, Duration::from_secs(60));
+        let (mut b, clock) = on_virtual_clock(2, Duration::from_secs(60));
         b.push("sst2", 1);
-        assert!(b.pop_ready(now()).is_none(), "partial batch must wait");
+        assert!(b.pop_ready(clock.now()).is_none(), "partial batch must wait");
         b.push("sst2", 2);
-        let (task, items) = b.pop_ready(now()).unwrap();
+        let (task, items) = b.pop_ready(clock.now()).unwrap();
         assert_eq!(task, "sst2");
         assert_eq!(items, vec![1, 2]);
         assert_eq!(b.pending(), 0);
@@ -114,19 +167,22 @@ mod tests {
 
     #[test]
     fn deadline_releases_partial_batch() {
-        let mut b: Batcher<u32> = Batcher::new(8, Duration::from_millis(0));
+        let (mut b, clock) = on_virtual_clock(8, Duration::from_millis(3));
         b.push("qqp", 7);
-        let (task, items) = b.pop_ready(now() + Duration::from_millis(1)).unwrap();
+        assert!(b.pop_ready(clock.now()).is_none(), "deadline not reached yet");
+        clock.advance(Duration::from_millis(3));
+        let (task, items) = b.pop_ready(clock.now()).unwrap();
         assert_eq!(task, "qqp");
         assert_eq!(items, vec![7]);
     }
 
     #[test]
     fn tasks_never_mix() {
-        let mut b: Batcher<u32> = Batcher::new(4, Duration::from_millis(0));
+        let (mut b, clock) = on_virtual_clock(4, Duration::from_millis(0));
         b.push("a", 1);
         b.push("b", 2);
-        let later = now() + Duration::from_millis(1);
+        clock.advance(Duration::from_millis(1));
+        let later = clock.now();
         let (t1, i1) = b.pop_ready(later).unwrap();
         let (t2, i2) = b.pop_ready(later).unwrap();
         assert_ne!(t1, t2);
@@ -135,44 +191,73 @@ mod tests {
 
     #[test]
     fn oldest_head_of_line_wins() {
-        let mut b: Batcher<u32> = Batcher::new(4, Duration::from_millis(0));
+        let (mut b, clock) = on_virtual_clock(4, Duration::from_millis(0));
         b.push("late", 1);
-        std::thread::sleep(Duration::from_millis(2));
+        clock.advance(Duration::from_millis(2));
         b.push("early", 2);
+        clock.advance(Duration::from_millis(1));
         // "late" was enqueued first -> served first despite name order
-        let (t, _) = b.pop_ready(now() + Duration::from_millis(1)).unwrap();
+        let (t, _) = b.pop_ready(clock.now()).unwrap();
         assert_eq!(t, "late");
     }
 
     #[test]
     fn batch_size_capped() {
-        let mut b: Batcher<u32> = Batcher::new(3, Duration::from_millis(0));
+        let (mut b, clock) = on_virtual_clock(3, Duration::from_millis(0));
         for i in 0..7 {
             b.push("x", i);
         }
-        let (_, items) = b.pop_ready(now()).unwrap();
+        let (_, items) = b.pop_ready(clock.now()).unwrap();
         assert_eq!(items.len(), 3);
         assert_eq!(b.pending(), 4);
     }
 
     #[test]
     fn next_deadline_tracks_oldest_head() {
-        let mut b: Batcher<u32> = Batcher::new(4, Duration::from_millis(10));
+        let (mut b, clock) = on_virtual_clock(4, Duration::from_millis(10));
         assert!(b.next_deadline().is_none());
         b.push("a", 1);
         let first = b.next_deadline().unwrap();
-        std::thread::sleep(Duration::from_millis(1));
+        assert_eq!(first, clock.now() + Duration::from_millis(10), "deadline = enqueue + max_wait");
+        clock.advance(Duration::from_millis(1));
         b.push("b", 2);
         // the deadline is set by the OLDEST head across tasks
         assert_eq!(b.next_deadline().unwrap(), first);
-        let later = now() + Duration::from_millis(11);
-        b.pop_ready(later).unwrap();
+        clock.advance(Duration::from_millis(10));
+        b.pop_ready(clock.now()).unwrap();
         assert!(b.next_deadline().unwrap() > first);
     }
 
     #[test]
+    fn heads_and_pop_task_expose_scheduler_view() {
+        let (mut b, clock) = on_virtual_clock(4, Duration::from_millis(10));
+        b.push("a", 1);
+        clock.advance(Duration::from_millis(1));
+        b.push("a", 2);
+        b.push("b", 3);
+        let heads: Vec<(String, usize, Instant)> = b
+            .heads()
+            .map(|(t, n, h)| (t.to_string(), n, h))
+            .collect();
+        assert_eq!(heads.len(), 2);
+        let a = heads.iter().find(|(t, _, _)| t == "a").unwrap();
+        let bb = heads.iter().find(|(t, _, _)| t == "b").unwrap();
+        assert_eq!(a.1, 2);
+        assert_eq!(bb.1, 1);
+        assert!(a.2 < bb.2, "head timestamp is the OLDEST entry");
+
+        // partial close: pop_task takes exactly the requested fill
+        assert_eq!(b.pop_task("a", 1).unwrap(), vec![1]);
+        assert_eq!(b.pending_for("a"), 1);
+        // and clamps to max_batch / queue depth
+        assert_eq!(b.pop_task("a", 99).unwrap(), vec![2]);
+        assert!(b.pop_task("a", 1).is_none(), "empty queue pops nothing");
+        assert!(b.pop_task("nope", 1).is_none());
+    }
+
+    #[test]
     fn drain_all_empties() {
-        let mut b: Batcher<u32> = Batcher::new(3, Duration::from_secs(60));
+        let (mut b, _clock) = on_virtual_clock(3, Duration::from_secs(60));
         for i in 0..5 {
             b.push("x", i);
         }

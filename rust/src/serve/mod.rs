@@ -22,6 +22,11 @@
 //!   path),
 //! * [`batcher`]  — per-task dynamic batching with a max-wait deadline
 //!   (batches never mix tasks: a task switch costs an adapter swap),
+//! * [`sched`]    — pipeline-aware batch scheduling: the Fig. 4
+//!   AIMC ⇄ PMCA balancing model picks the token parallelism and the
+//!   modeled-optimal batch fill per task, and every timestamp flows
+//!   through a [`sched::Clock`] (real or virtual) so timing behaviour
+//!   is testable without sleeps,
 //! * [`router`] / [`server`] — deprecated shims over [`api`]. The old
 //!   call shapes (`Server::start`, `server.router`, raw `Msg` channels,
 //!   `Router::submit` returning a bare receiver) are gone; the shims
@@ -32,9 +37,11 @@ pub mod batcher;
 mod pool;
 pub mod registry;
 pub mod router;
+pub mod sched;
 pub mod server;
 
 pub use api::{
     aggregate, submit_wave, submit_wave_results, Client, Metrics, MetricsSnapshot, Pending,
     Response, ServeError, ServeResult, Server, ServerBuilder,
 };
+pub use sched::{BatchScheduler, Clock, RealClock, SchedConfig, VirtualClock};

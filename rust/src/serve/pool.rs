@@ -10,7 +10,7 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::config::manifest::Manifest;
 use crate::eval::drift_eval::{cls_logits, fwd_batch_shape};
@@ -19,6 +19,7 @@ use crate::model::params::ParamStore;
 use super::api::{Metrics, Response, ServeError, ServeResult};
 use super::batcher::Batcher;
 use super::registry::SharedRegistry;
+use super::sched::{BatchScheduler, Clock, Decision, SchedConfig};
 
 /// One admitted request travelling to a worker.
 pub(crate) struct WorkRequest {
@@ -55,6 +56,12 @@ pub(crate) struct WorkerConfig {
     pub hw: [f32; 5],
     /// Chaos knob: fail every n-th batch (0 = off).
     pub fail_every: u64,
+    /// Pipeline-aware scheduling: when set, batch fills come from the
+    /// AIMC/PMCA cost model instead of the fixed size/deadline policy.
+    pub sched: Option<SchedConfig>,
+    /// Time source for enqueue stamps, deadlines, and latency metrics
+    /// (virtual in deterministic tests).
+    pub clock: Arc<dyn Clock>,
 }
 
 /// After a shutdown signal, how long to wait for admitted-but-not-yet-
@@ -116,19 +123,26 @@ fn worker_loop(
         .store(engine.total_compile_ms() as u64, Ordering::Relaxed);
     debug_assert_eq!(fwd_batch_shape(&graph).1, cfg.seq);
 
-    let mut batcher: Batcher<WorkRequest> = Batcher::new(cfg.max_batch, cfg.max_wait);
+    let mut batcher: Batcher<WorkRequest> =
+        Batcher::with_clock(cfg.max_batch, cfg.max_wait, cfg.clock.clone());
+    let mut sched = cfg
+        .sched
+        .map(|s| BatchScheduler::new(s, cfg.max_batch, cfg.max_wait));
     let mut last_task: Option<String> = None;
     let mut batch_idx: u64 = 0;
     let mut open = true;
-    let mut drain_deadline = Instant::now(); // set when `open` flips
+    let mut drain_deadline = cfg.clock.now(); // set when `open` flips
 
     loop {
         if open {
             // block until work/shutdown arrives or, if batches are
             // queued, exactly until the earliest deadline — no fixed
-            // polling tick
+            // polling tick (the scheduler can only flip a queue to
+            // "ready" on an arrival or at its head's deadline, so the
+            // batcher's earliest deadline is the exact wake time for
+            // both policies)
             let msg = match batcher.next_deadline() {
-                Some(d) => match rx.recv_timeout(d.saturating_duration_since(Instant::now())) {
+                Some(d) => match rx.recv_timeout(d.saturating_duration_since(cfg.clock.now())) {
                     Ok(job) => Some(job),
                     Err(RecvTimeoutError::Timeout) => None,
                     Err(RecvTimeoutError::Disconnected) => Some(Job::Shutdown),
@@ -138,11 +152,14 @@ fn worker_loop(
             match msg {
                 Some(Job::Req(r)) => {
                     let task = r.task.clone();
+                    if let Some(s) = sched.as_mut() {
+                        s.observe_arrival(&task, cfg.clock.now());
+                    }
                     batcher.push(&task, r);
                 }
                 Some(Job::Shutdown) => {
                     open = false;
-                    drain_deadline = Instant::now() + DRAIN_GRACE;
+                    drain_deadline = cfg.clock.now() + DRAIN_GRACE;
                 }
                 None => {}
             }
@@ -159,33 +176,41 @@ fn worker_loop(
         // serve EVERY ready batch before sleeping again — a full batch
         // must never wait on another task's deadline
         loop {
-            let now = Instant::now();
-            let ready = if open {
-                batcher.pop_ready(now)
-            } else {
+            let now = cfg.clock.now();
+            let ready = if !open {
                 // everything goes, deadlines notwithstanding
                 batcher.pop_ready(now + cfg.max_wait + Duration::from_millis(1))
+            } else if let Some(s) = sched.as_ref() {
+                match s.pick(&batcher, now) {
+                    Decision::Close { task, fill } => {
+                        batcher.pop_task(&task, fill).map(|items| (task, items))
+                    }
+                    Decision::Wait { .. } | Decision::Idle => None,
+                }
+            } else {
+                batcher.pop_ready(now)
             };
             let Some((task, reqs)) = ready else { break };
             batch_idx += 1;
+            let modeled = sched.as_ref().map(|s| s.modeled_batch(reqs.len()));
             serve_batch(
                 &cfg, &graph, &meta, &registry, &metrics, &inflight, batch_idx,
-                &mut last_task, task, reqs,
+                &mut last_task, task, reqs, modeled,
             );
             if !open {
                 // progress resets the grace window: slow batches must
                 // not eat the time reserved for in-flight racers
-                drain_deadline = Instant::now() + DRAIN_GRACE;
+                drain_deadline = cfg.clock.now() + DRAIN_GRACE;
             }
         }
 
         if !open && batcher.pending() == 0 {
             // an admission bumps `inflight` BEFORE its send reaches the
             // channel; wait those racers out so no ticket is lost.
-            if inflight.load(Ordering::Acquire) == 0 || Instant::now() >= drain_deadline {
+            if inflight.load(Ordering::Acquire) == 0 || cfg.clock.now() >= drain_deadline {
                 break;
             }
-            std::thread::sleep(Duration::from_micros(100));
+            cfg.clock.sleep(Duration::from_micros(100));
         }
     }
     Ok(())
@@ -205,6 +230,7 @@ fn serve_batch(
     last_task: &mut Option<String>,
     task: String,
     reqs: Vec<WorkRequest>,
+    modeled: Option<Duration>,
 ) {
     let n = reqs.len();
     let Some((adapter, version)) = registry.snapshot(&task) else {
@@ -229,7 +255,7 @@ fn serve_batch(
         return;
     }
 
-    let t0 = Instant::now();
+    let t0 = cfg.clock.now();
     let mut tokens = Vec::with_capacity(n * cfg.seq);
     for r in &reqs {
         tokens.extend_from_slice(&r.tokens);
@@ -249,8 +275,8 @@ fn serve_batch(
             });
         }
         Ok(rows) => {
-            let latency = t0.elapsed();
-            metrics.record(n, latency);
+            let latency = cfg.clock.now().saturating_duration_since(t0);
+            metrics.record_modeled(n, latency, modeled);
             for (r, row) in reqs.into_iter().zip(rows) {
                 let _ = r.resp.send(Ok(Response {
                     id: r.id,

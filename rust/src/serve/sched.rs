@@ -1,0 +1,495 @@
+//! Pipeline-aware batch scheduling: the AIMC ⇄ PMCA cost model on the
+//! serving hot path.
+//!
+//! # The balancing contract
+//!
+//! On the target system one request batch flows through a two-stage
+//! pipeline per layer: the AIMC crossbar integrates `t` tokens per MVM
+//! hand-off while the PMCA (Snitch cluster + RedMulE) computes the LoRA
+//! delta for the *previous* hand-off. The paper's Fig. 4 analysis shows
+//! that end-to-end latency is minimised when the two stage latencies are
+//! balanced and the PMCA working set fits its 128 KiB TCDM — the exact
+//! objective [`crate::pipeline::balance::sweep`] + [`best`] encode.
+//!
+//! [`BatchScheduler`] lifts that offline model into the worker loop:
+//!
+//! * **Token parallelism.** At construction it sweeps the paper's
+//!   candidate `t` values for the configured layer shape and integration
+//!   time and commits to the TCDM-fitting latency optimum
+//!   ([`BatchScheduler::t_opt`]). An integration test pins this to
+//!   [`crate::pipeline::balance::sweep`] for every Fig. 4 configuration.
+//! * **Batch-close decision.** For a request fill `b` the modeled
+//!   steady-state service latency is `L(b)` (the pipeline model run over
+//!   `b · seq_len` tokens at `t_opt`). The scheduler closes a batch at
+//!   the smallest fill whose modeled per-request service time `L(b)/b`
+//!   keeps up with the task's observed arrival rate — the throughput-
+//!   sustaining fill. Slower arrivals → smaller batches (latency-
+//!   optimal); faster arrivals → larger batches (the fixed hand-off and
+//!   kernel-launch overheads amortise). A per-task `max_wait` deadline
+//!   still bounds worst-case queueing, exactly as in the fixed batcher.
+//! * **Modeled-vs-measured.** Every decision carries the model's
+//!   predicted batch latency so [`super::api::Metrics`] (and
+//!   `util::bench` scenarios) can report model error alongside wall
+//!   time.
+//!
+//! All timing flows through the [`Clock`] trait so the scheduler, the
+//! [`super::batcher::Batcher`], and the worker loop are testable on a
+//! [`VirtualClock`] with no wall-clock sleeps.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::pipeline::balance::{best, sweep, BalancePoint};
+use crate::pipeline::schedule::pipeline_latency;
+use crate::pmca::cluster::SnitchCluster;
+use crate::pmca::kernels::LoraWorkload;
+use crate::pmca::redmule::RedMulE;
+
+use super::batcher::Batcher;
+
+// ---------------------------------------------------------------------------
+// Clock
+// ---------------------------------------------------------------------------
+
+/// Time source for everything in the serving pool that waits or
+/// timestamps. Production uses [`RealClock`]; tests use [`VirtualClock`]
+/// and advance it explicitly, so no test ever sleeps.
+pub trait Clock: Send + Sync {
+    fn now(&self) -> Instant;
+
+    /// Pause for `d`. The virtual clock advances itself instead of
+    /// blocking the thread.
+    fn sleep(&self, d: Duration) {
+        std::thread::sleep(d);
+    }
+}
+
+/// Wall-clock time.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RealClock;
+
+impl Clock for RealClock {
+    fn now(&self) -> Instant {
+        Instant::now()
+    }
+}
+
+/// Deterministic test clock: starts at an arbitrary epoch and only moves
+/// when [`advance`](VirtualClock::advance) is called (or something
+/// `sleep`s on it).
+#[derive(Debug)]
+pub struct VirtualClock {
+    epoch: Instant,
+    offset: Mutex<Duration>,
+}
+
+impl VirtualClock {
+    pub fn new() -> VirtualClock {
+        VirtualClock {
+            epoch: Instant::now(),
+            offset: Mutex::new(Duration::ZERO),
+        }
+    }
+
+    pub fn advance(&self, d: Duration) {
+        *self.offset.lock().unwrap() += d;
+    }
+}
+
+impl Default for VirtualClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> Instant {
+        self.epoch + *self.offset.lock().unwrap()
+    }
+
+    fn sleep(&self, d: Duration) {
+        self.advance(d);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Configuration
+// ---------------------------------------------------------------------------
+
+/// Hardware-model parameters for one serving deployment: the dominant
+/// layer shape the AIMC tiles hold, the LoRA rank on the PMCA, and the
+/// tile integration time.
+#[derive(Clone, Copy, Debug)]
+pub struct SchedConfig {
+    /// Weight matrix rows of the modeled layer (input features).
+    pub m: usize,
+    /// Weight matrix cols of the modeled layer (output features).
+    pub n: usize,
+    /// LoRA rank.
+    pub r: usize,
+    /// AIMC tile integration time per MVM, ns.
+    pub t_int_ns: f64,
+    /// Tokens per request sequence. `0` means "inherit the serving
+    /// graph's sequence length" (resolved by `ServerBuilder::build`).
+    pub seq_len: usize,
+}
+
+impl SchedConfig {
+    /// Model a deployment dominated by an `m×n` layer at LoRA rank `r`,
+    /// with the paper's middle integration time (256 ns) and the
+    /// sequence length inherited from the serving graph.
+    pub fn for_layer(m: usize, n: usize, r: usize) -> SchedConfig {
+        SchedConfig {
+            m: m.max(1),
+            n: n.max(1),
+            r: r.max(1),
+            t_int_ns: 256.0,
+            seq_len: 0,
+        }
+    }
+
+    pub fn t_int(mut self, ns: f64) -> Self {
+        self.t_int_ns = ns;
+        self
+    }
+
+    pub fn seq(mut self, seq_len: usize) -> Self {
+        self.seq_len = seq_len;
+        self
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Arrival-rate estimation
+// ---------------------------------------------------------------------------
+
+/// EWMA of one task's request inter-arrival time.
+#[derive(Clone, Debug, Default)]
+struct ArrivalEstimator {
+    last: Option<Instant>,
+    ewma_ns: Option<f64>,
+}
+
+impl ArrivalEstimator {
+    const ALPHA: f64 = 0.25;
+
+    fn observe(&mut self, now: Instant) {
+        if let Some(last) = self.last {
+            let dt = now.saturating_duration_since(last).as_nanos() as f64;
+            self.ewma_ns = Some(match self.ewma_ns {
+                Some(e) => (1.0 - Self::ALPHA) * e + Self::ALPHA * dt,
+                None => dt,
+            });
+        }
+        self.last = Some(now);
+    }
+
+    /// Estimated inter-arrival time in ns; +inf until two arrivals have
+    /// been seen (an unknown rate must not hold requests back).
+    fn interarrival_ns(&self) -> f64 {
+        self.ewma_ns.unwrap_or(f64::INFINITY)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler
+// ---------------------------------------------------------------------------
+
+/// What the worker loop should do next (see [`BatchScheduler::pick`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Decision {
+    /// Pop `fill` requests of `task` and serve them now.
+    Close { task: String, fill: usize },
+    /// Nothing is ready; sleep until `until` (earliest deadline) unless
+    /// an arrival wakes the worker first.
+    Wait { until: Instant },
+    /// No queued work at all.
+    Idle,
+}
+
+/// Cost-based batch scheduler (see the module docs for the contract).
+pub struct BatchScheduler {
+    cfg: SchedConfig,
+    max_batch: usize,
+    max_wait: Duration,
+    /// Winning point of the `pipeline::balance` sweep for this layer.
+    balance: BalancePoint,
+    /// `modeled_ns[b-1]` = modeled steady-state latency (ns) of serving
+    /// a batch of `b` requests at `t_opt`.
+    modeled_ns: Vec<f64>,
+    arrivals: BTreeMap<String, ArrivalEstimator>,
+}
+
+impl BatchScheduler {
+    /// Build against the paper's default Snitch cluster + RedMulE.
+    pub fn new(cfg: SchedConfig, max_batch: usize, max_wait: Duration) -> BatchScheduler {
+        Self::with_hardware(
+            cfg,
+            max_batch,
+            max_wait,
+            &SnitchCluster::default(),
+            &RedMulE::default(),
+        )
+    }
+
+    pub fn with_hardware(
+        cfg: SchedConfig,
+        max_batch: usize,
+        max_wait: Duration,
+        cluster: &SnitchCluster,
+        engine: &RedMulE,
+    ) -> BatchScheduler {
+        let seq = cfg.seq_len.max(1);
+        let max_batch = max_batch.max(1);
+        let points = sweep(cfg.m, cfg.n, cfg.r, cfg.t_int_ns, seq, cluster, engine);
+        let balance = best(&points);
+        let w = LoraWorkload::new(cfg.m, cfg.n, cfg.r, balance.t);
+        let modeled_ns = (1..=max_batch)
+            .map(|b| pipeline_latency(&w, cfg.t_int_ns, b * seq, cluster, engine).steady_ns)
+            .collect();
+        BatchScheduler {
+            cfg,
+            max_batch,
+            max_wait,
+            balance,
+            modeled_ns,
+            arrivals: BTreeMap::new(),
+        }
+    }
+
+    pub fn config(&self) -> &SchedConfig {
+        &self.cfg
+    }
+
+    /// The chosen token parallelism — identical to
+    /// `balance::best(&balance::sweep(..)).t` by construction.
+    pub fn t_opt(&self) -> usize {
+        self.balance.t
+    }
+
+    /// The full balance point backing [`Self::t_opt`].
+    pub fn balance_point(&self) -> BalancePoint {
+        self.balance
+    }
+
+    /// Modeled steady-state latency for a batch of `fill` requests (ns).
+    pub fn modeled_batch_ns(&self, fill: usize) -> f64 {
+        self.modeled_ns[fill.clamp(1, self.modeled_ns.len()) - 1]
+    }
+
+    /// Modeled batch latency as a [`Duration`] (for metrics).
+    pub fn modeled_batch(&self, fill: usize) -> Duration {
+        Duration::from_nanos(self.modeled_batch_ns(fill).round() as u64)
+    }
+
+    /// The modeled-optimal fill for a task whose requests arrive every
+    /// `interarrival_ns`: the smallest batch whose per-request service
+    /// time keeps up with arrivals, `max_batch` if none does.
+    pub fn target_fill(&self, interarrival_ns: f64) -> usize {
+        for b in 1..=self.modeled_ns.len() {
+            if self.modeled_batch_ns(b) / b as f64 <= interarrival_ns {
+                return b;
+            }
+        }
+        self.modeled_ns.len()
+    }
+
+    /// Current inter-arrival estimate for a task (ns; +inf if unknown).
+    pub fn interarrival_ns(&self, task: &str) -> f64 {
+        self.arrivals
+            .get(task)
+            .map(|a| a.interarrival_ns())
+            .unwrap_or(f64::INFINITY)
+    }
+
+    /// Feed one observed arrival into the task's rate estimator.
+    pub fn observe_arrival(&mut self, task: &str, now: Instant) {
+        self.arrivals.entry(task.to_string()).or_default().observe(now);
+    }
+
+    /// Decide the next action over the batcher's queues. A task is
+    /// ready when it reached its modeled-optimal fill or its oldest
+    /// request hit the deadline; among ready tasks the oldest head
+    /// wins (no starvation), matching the fixed batcher's fairness.
+    pub fn pick<T>(&self, batcher: &Batcher<T>, now: Instant) -> Decision {
+        let mut close: Option<(String, usize, Instant)> = None;
+        let mut wake: Option<Instant> = None;
+        for (task, len, head) in batcher.heads() {
+            let deadline = head + self.max_wait;
+            let target = self.target_fill(self.interarrival_ns(task));
+            if len >= target || now >= deadline {
+                let older = close.as_ref().map(|(_, _, h)| head < *h).unwrap_or(true);
+                if older {
+                    close = Some((task.to_string(), len.min(self.max_batch), head));
+                }
+            } else {
+                wake = Some(wake.map_or(deadline, |w: Instant| w.min(deadline)));
+            }
+        }
+        match close {
+            Some((task, fill, _)) => Decision::Close { task, fill },
+            None => match wake {
+                Some(until) => Decision::Wait { until },
+                None => Decision::Idle,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn sched(max_batch: usize) -> BatchScheduler {
+        // the paper's small layer at the middle integration time
+        BatchScheduler::new(
+            SchedConfig::for_layer(128, 128, 8).seq(320),
+            max_batch,
+            Duration::from_millis(10),
+        )
+    }
+
+    #[test]
+    fn t_opt_matches_balance_sweep() {
+        let (c, e) = (SnitchCluster::default(), RedMulE::default());
+        for (m, n) in [(128usize, 128usize), (512, 128)] {
+            for t_int in crate::pipeline::schedule::INTEGRATION_TIMES_NS {
+                let s = BatchScheduler::new(
+                    SchedConfig::for_layer(m, n, 8).t_int(t_int).seq(320),
+                    8,
+                    Duration::from_millis(5),
+                );
+                let b = best(&sweep(m, n, 8, t_int, 320, &c, &e));
+                assert_eq!(s.t_opt(), b.t, "{m}x{n}@{t_int}");
+                assert!(s.balance_point().fits_tcdm || !b.fits_tcdm);
+            }
+        }
+    }
+
+    #[test]
+    fn per_request_model_latency_amortises() {
+        let s = sched(8);
+        // fixed hand-off/overhead amortise: per-request cost shrinks
+        let per = |b: usize| s.modeled_batch_ns(b) / b as f64;
+        assert!(per(2) < per(1));
+        assert!(per(8) < per(4));
+        // ...so target_fill is monotone in the arrival rate
+        assert_eq!(s.target_fill(f64::INFINITY), 1);
+        assert_eq!(s.target_fill(per(1) + 1.0), 1);
+        assert_eq!(s.target_fill(0.0), 8);
+        let mid = (per(3) + per(4)) / 2.0; // sustainable at 4, not at 3
+        assert_eq!(s.target_fill(mid), 4);
+    }
+
+    #[test]
+    fn close_fires_exactly_at_modeled_optimal_fill() {
+        let clock = Arc::new(VirtualClock::new());
+        let max_wait = Duration::from_millis(10);
+        let mut s = sched(8);
+        let mut b: Batcher<u32> =
+            Batcher::with_clock(8, max_wait, clock.clone() as Arc<dyn Clock>);
+
+        // arrivals paced so the modeled-optimal fill is exactly 4
+        let per = |b: usize| s.modeled_batch_ns(b) / b as f64;
+        let ia = Duration::from_nanos(((per(3) + per(4)) / 2.0).round() as u64);
+
+        // prior traffic at the same cadence primes the rate estimator
+        // (a cold task with an unknown rate closes immediately instead)
+        s.observe_arrival("sst2", clock.now());
+        clock.advance(ia);
+        s.observe_arrival("sst2", clock.now());
+
+        for i in 0..4u32 {
+            clock.advance(ia);
+            let now = clock.now();
+            s.observe_arrival("sst2", now);
+            b.push("sst2", i);
+            match s.pick(&b, now) {
+                Decision::Close { task, fill } => {
+                    assert_eq!(i, 3, "closed early at fill {}", i + 1);
+                    assert_eq!(task, "sst2");
+                    assert_eq!(fill, 4, "must close at the modeled-optimal fill");
+                }
+                Decision::Wait { until } => {
+                    assert!(i < 3, "must close once the optimal fill is reached");
+                    assert!(until > now);
+                }
+                Decision::Idle => panic!("queue is non-empty"),
+            }
+        }
+        let items = b.pop_task("sst2", 4).unwrap();
+        assert_eq!(items, vec![0, 1, 2, 3]);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn deadline_fires_on_virtual_clock_without_fill() {
+        let clock = Arc::new(VirtualClock::new());
+        let max_wait = Duration::from_millis(5);
+        let mut s = BatchScheduler::new(
+            SchedConfig::for_layer(128, 128, 8).seq(320),
+            8,
+            max_wait,
+        );
+        let mut b: Batcher<u32> =
+            Batcher::with_clock(8, max_wait, clock.clone() as Arc<dyn Clock>);
+        let t0 = clock.now();
+        b.push("qqp", 7);
+
+        // an unknown arrival rate must not hold requests back
+        assert_eq!(
+            s.pick(&b, t0),
+            Decision::Close { task: "qqp".into(), fill: 1 },
+            "unknown rate serves immediately (latency-optimal)"
+        );
+
+        // teach it a fast arrival rate so it wants a full batch...
+        let mut obs = t0;
+        for _ in 0..3 {
+            s.observe_arrival("qqp", obs);
+            obs += Duration::from_nanos(10);
+        }
+        assert_eq!(s.target_fill(s.interarrival_ns("qqp")), 8);
+        // ...but only one request ever shows up: the deadline must fire
+        match s.pick(&b, t0) {
+            Decision::Wait { until } => assert_eq!(until, t0 + max_wait),
+            other => panic!("expected Wait, got {other:?}"),
+        }
+        clock.advance(max_wait);
+        match s.pick(&b, clock.now()) {
+            Decision::Close { task, fill } => {
+                assert_eq!(task, "qqp");
+                assert_eq!(fill, 1, "deadline releases the partial batch");
+            }
+            other => panic!("expected Close, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn burst_traffic_closes_at_max_batch() {
+        let clock = Arc::new(VirtualClock::new());
+        let mut s = sched(4);
+        let mut b: Batcher<u32> =
+            Batcher::with_clock(4, Duration::from_millis(10), clock.clone() as Arc<dyn Clock>);
+        for i in 0..6u32 {
+            clock.advance(Duration::from_nanos(50)); // near-instant burst
+            let now = clock.now();
+            s.observe_arrival("x", now);
+            b.push("x", i);
+        }
+        match s.pick(&b, clock.now()) {
+            Decision::Close { fill, .. } => assert_eq!(fill, 4, "capped at max_batch"),
+            other => panic!("expected Close, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn virtual_clock_sleep_advances_time() {
+        let c = VirtualClock::new();
+        let t0 = c.now();
+        c.sleep(Duration::from_secs(3));
+        assert_eq!(c.now() - t0, Duration::from_secs(3));
+    }
+}

@@ -17,6 +17,10 @@ pub struct BenchResult {
     pub p50_ns: f64,
     pub p95_ns: f64,
     pub throughput: Option<f64>, // items / second
+    /// Cost-model prediction for one iteration (ns), when the scenario
+    /// has one (e.g. the serving scheduler's modeled batch latency);
+    /// reported next to the measurement with the model/measured ratio.
+    pub modeled_ns: Option<f64>,
 }
 
 impl BenchResult {
@@ -28,14 +32,22 @@ impl BenchResult {
             Some(t) => format!("  {t:8.2} item/s"),
             None => String::new(),
         };
+        let m = match self.modeled_ns {
+            Some(m) if self.mean_ns > 0.0 => {
+                format!("  model {:>12} ({:.2}x measured)", fmt_ns(m), m / self.mean_ns)
+            }
+            Some(m) => format!("  model {:>12}", fmt_ns(m)),
+            None => String::new(),
+        };
         format!(
-            "{:<44} {:>12} iters  mean {:>12}  p50 {:>12}  p95 {:>12}{}",
+            "{:<44} {:>12} iters  mean {:>12}  p50 {:>12}  p95 {:>12}{}{}",
             self.name,
             self.iters,
             fmt_ns(self.mean_ns),
             fmt_ns(self.p50_ns),
             fmt_ns(self.p95_ns),
-            t
+            t,
+            m
         )
     }
 }
@@ -113,6 +125,7 @@ impl Bencher {
             p50_ns: stats::percentile(&batch_means, 50.0),
             p95_ns: stats::percentile(&batch_means, 95.0),
             throughput: items.map(|n| n as f64 * 1e9 / mean_ns),
+            modeled_ns: None,
         };
         println!("{}", result.report());
         self.results.push(result);
@@ -122,6 +135,21 @@ impl Bencher {
     /// Time a single execution of a long-running section (for end-to-end
     /// drivers where repeated runs are too expensive).
     pub fn once<T, F: FnOnce() -> T>(&mut self, name: &str, f: F) -> T {
+        self.once_vs_model(name, None, f)
+    }
+
+    /// [`Self::once`], annotated with a cost-model prediction so the
+    /// report shows modeled vs measured (serving scheduler scenarios).
+    pub fn once_modeled<T, F: FnOnce() -> T>(&mut self, name: &str, modeled_ns: f64, f: F) -> T {
+        self.once_vs_model(name, Some(modeled_ns), f)
+    }
+
+    fn once_vs_model<T, F: FnOnce() -> T>(
+        &mut self,
+        name: &str,
+        modeled_ns: Option<f64>,
+        f: F,
+    ) -> T {
         let t0 = Instant::now();
         let out = f();
         let ns = t0.elapsed().as_nanos() as f64;
@@ -132,6 +160,7 @@ impl Bencher {
             p50_ns: ns,
             p95_ns: ns,
             throughput: None,
+            modeled_ns,
         };
         println!("{}", result.report());
         self.results.push(result);
@@ -164,6 +193,21 @@ mod tests {
         });
         assert!(r.mean_ns > 0.0);
         assert!(r.throughput.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn once_modeled_reports_model_column() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(1),
+            budget: Duration::from_millis(1),
+            results: vec![],
+        };
+        b.once_modeled("modeled", 1234.0, || black_box(1 + 1));
+        let r = b.results.last().unwrap();
+        assert_eq!(r.modeled_ns, Some(1234.0));
+        assert!(r.report().contains("model"));
+        b.once("plain", || black_box(0));
+        assert!(!b.results.last().unwrap().report().contains("model"));
     }
 
     #[test]

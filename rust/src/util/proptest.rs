@@ -12,8 +12,17 @@ pub struct Gen {
 }
 
 impl Gen {
+    /// Uniform integer in `[lo, hi]` (inclusive). Well-defined over the
+    /// whole domain: `hi - lo + 1` is never materialised, so ranges
+    /// reaching `usize::MAX` do not overflow.
     pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
-        lo + self.rng.below(hi - lo + 1)
+        debug_assert!(lo <= hi, "usize_in: empty range {lo}..={hi}");
+        let span = hi - lo;
+        if span == usize::MAX {
+            // full range: the +1 span would wrap to 0; draw raw bits
+            return self.rng.next_u64() as usize;
+        }
+        lo + self.rng.below(span + 1)
     }
 
     pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
@@ -95,6 +104,19 @@ mod tests {
     fn failing_property_reports_seed() {
         check("sometimes-fails", 64, |g| {
             assert!(g.usize_in(0, 9) < 9, "drew the bad value");
+        });
+    }
+
+    #[test]
+    fn usize_in_survives_extreme_ranges() {
+        check("usize-in-extremes", 64, |g| {
+            // full domain: `hi - lo + 1` used to overflow and panic
+            let _ = g.usize_in(0, usize::MAX);
+            let v = g.usize_in(usize::MAX - 1, usize::MAX);
+            assert!(v >= usize::MAX - 1);
+            assert_eq!(g.usize_in(7, 7), 7, "degenerate range is exact");
+            let w = g.usize_in(usize::MAX, usize::MAX);
+            assert_eq!(w, usize::MAX);
         });
     }
 

@@ -9,7 +9,7 @@ use ahwa_lora::config::manifest::{default_artifacts_dir, Manifest};
 use ahwa_lora::data::glue::{GlueGen, GlueTask};
 use ahwa_lora::model::checkpoint;
 use ahwa_lora::serve::registry::SharedRegistry;
-use ahwa_lora::serve::{submit_wave, Pending, ServeError, Server, ServerBuilder};
+use ahwa_lora::serve::{submit_wave, Pending, SchedConfig, ServeError, Server, ServerBuilder};
 use ahwa_lora::util::rng::Pcg64;
 
 fn ready() -> bool {
@@ -90,6 +90,41 @@ fn multi_worker_mixed_wave_zero_lost() {
     assert_eq!(agg.errors, 0);
     let report = server.metrics_report();
     assert!(report.contains("worker0") && report.contains("worker1"));
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn pipeline_scheduler_serves_wave_and_reports_model() {
+    if !ready() {
+        return;
+    }
+    // same wave as the fixed batcher, but batch fills come from the
+    // AIMC/PMCA cost model; every ticket must still resolve and the
+    // pool must report modeled batch latency next to the measured one
+    let tasks = [GlueTask::Sst2, GlueTask::Qnli];
+    let v = Manifest::load(default_artifacts_dir())
+        .unwrap()
+        .variant("tiny")
+        .unwrap()
+        .clone();
+    let (server, vocab, seq) = setup(&tasks, |b| {
+        b.workers(2)
+            .scheduler(SchedConfig::for_layer(v.d_model, v.d_model, v.rank))
+    })
+    .unwrap();
+    let client = server.client();
+    let jobs = jobs_for(&tasks, vocab, seq, 24, 7);
+    let responses = submit_wave(&client, &jobs).unwrap();
+    assert_eq!(responses.len(), 24, "zero lost responses under the scheduler");
+    for (r, (task, _)) in responses.iter().zip(&jobs) {
+        assert_eq!(&r.task, task);
+        assert!(r.logits.iter().all(|x| x.is_finite()));
+    }
+    let agg = server.metrics();
+    assert_eq!(agg.served, 24);
+    assert_eq!(agg.errors, 0);
+    assert!(agg.modeled_p50_ms > 0.0, "modeled latency recorded: {agg:?}");
+    assert!(server.metrics_report().contains("model_p50"));
     server.shutdown().unwrap();
 }
 

@@ -1,0 +1,73 @@
+//! Property tests for the statistical PCM device model, via the
+//! in-tree `util::proptest` mini-framework (hermetic: no artifacts).
+//!
+//! Pinned invariants:
+//! * drift is a pure decay for t > 0 — every per-device factor lies in
+//!   (0, 1],
+//! * sampled drift exponents never escape `nu_clip`, whatever the
+//!   conductance state,
+//! * `noise_scale = 0` makes programming and read noise *exactly* the
+//!   identity (the "digital baseline" contract every experiment's
+//!   clean column relies on).
+
+use ahwa_lora::pcm::{drift, programming, read_noise, PcmModel};
+use ahwa_lora::util::proptest::check;
+use ahwa_lora::util::rng::Pcg64;
+
+#[test]
+fn drift_factors_lie_in_unit_interval_for_positive_time() {
+    check("drift-factor-in-(0,1]", 64, |g| {
+        let model = PcmModel::default();
+        let len = g.usize_in(1, 64);
+        let g_prog = g.vec_f32(len, 0.01, model.g_max);
+        let mut rng = Pcg64::new(g.seed ^ 0xd21f7);
+        let nu = drift::sample_nu(&model, &g_prog, &mut rng);
+        let t = g.f64_in(1e-3, 3.2e8); // sub-ms .. ten years
+        let mut out = vec![0f32; len];
+        drift::apply_drift(&model, &g_prog, &nu, t, &mut out);
+        for (o, gp) in out.iter().zip(&g_prog) {
+            let factor = o / gp;
+            assert!(
+                factor > 0.0 && factor <= 1.0,
+                "drift factor {factor} escaped (0, 1] at t={t}s (g={gp})"
+            );
+        }
+    });
+}
+
+#[test]
+fn sampled_drift_exponents_respect_nu_clip() {
+    check("sample-nu-within-clip", 64, |g| {
+        let model = PcmModel::default();
+        let len = g.usize_in(1, 256);
+        // include zero states and physical overshoot above g_max
+        let g_prog = g.vec_f32(len, 0.0, 1.2 * model.g_max);
+        let mut rng = Pcg64::new(g.seed ^ 0x5eed5);
+        let nu = drift::sample_nu(&model, &g_prog, &mut rng);
+        assert_eq!(nu.len(), len);
+        for (v, gp) in nu.iter().zip(&g_prog) {
+            assert!(
+                (model.nu_clip.0..=model.nu_clip.1).contains(v),
+                "nu {v} outside clip {:?} for g={gp}",
+                model.nu_clip
+            );
+        }
+    });
+}
+
+#[test]
+fn zero_noise_scale_makes_programming_and_read_noise_identity() {
+    check("ideal-model-identity", 64, |g| {
+        let model = PcmModel::ideal();
+        assert_eq!(model.noise_scale, 0.0);
+        let len = g.usize_in(1, 128);
+        let mut buf = g.vec_f32(len, 0.0, model.g_max);
+        let orig = buf.clone();
+        let mut rng = Pcg64::new(g.seed);
+        programming::apply_programming_noise(&model, &mut buf, &mut rng);
+        assert_eq!(buf, orig, "programming noise must be exactly identity");
+        let t = g.f64_in(0.0, 3.2e8);
+        read_noise::apply_read_noise(&model, &mut buf, t, &mut rng);
+        assert_eq!(buf, orig, "read noise must be exactly identity");
+    });
+}

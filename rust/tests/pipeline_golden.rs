@@ -1,0 +1,162 @@
+//! Golden regression pins for the Fig. 4 AIMC ⇄ PMCA pipeline model,
+//! plus the scheduler ↔ balance-sweep consistency contract.
+//!
+//! Fully hermetic (pure cost model, no artifacts/PJRT). The pinned
+//! numbers are the model's output at the seed of this test; any
+//! scheduler or cycle-model refactor that silently drifts the Fig. 4c
+//! series fails here instead of in a regenerated figure.
+
+use std::time::Duration;
+
+use ahwa_lora::pipeline::balance::{best, best_point, sweep};
+use ahwa_lora::pipeline::schedule::{pipeline_latency, INTEGRATION_TIMES_NS, TOKEN_PARALLELISM};
+use ahwa_lora::pmca::cluster::SnitchCluster;
+use ahwa_lora::pmca::kernels::LoraWorkload;
+use ahwa_lora::pmca::redmule::RedMulE;
+use ahwa_lora::serve::{BatchScheduler, SchedConfig};
+
+const SEQ: usize = 320; // the paper's sequence length
+const RANK: usize = 8;
+
+fn env() -> (SnitchCluster, RedMulE) {
+    (SnitchCluster::default(), RedMulE::default())
+}
+
+/// The paper's full (layer, T_int, t) grid:
+/// `(m, n, t_int_ns, t, pmca_ns, steady_ns)`.
+#[rustfmt::skip]
+const GOLDEN_GRID: [(usize, usize, f64, usize, f64, f64); 30] = [
+    (128, 128, 128.0,   8,  1300.0,  52256.0),
+    (128, 128, 128.0,  16,  2299.0,  46492.0),
+    (128, 128, 128.0,  32,  4297.0,  43994.0),
+    (128, 128, 128.0,  64,  8293.0,  43513.0),
+    (128, 128, 128.0, 128, 16286.0,  53248.0),
+    (128, 128, 256.0,   8,  1300.0,  82176.0),
+    (128, 128, 256.0,  16,  2299.0,  82432.0),
+    (128, 128, 256.0,  32,  4297.0,  82944.0),
+    (128, 128, 256.0,  64,  8293.0,  83968.0),
+    (128, 128, 256.0, 128, 16286.0, 102400.0),
+    (128, 128, 512.0,   8,  1300.0, 164096.0),
+    (128, 128, 512.0,  16,  2299.0, 164352.0),
+    (128, 128, 512.0,  32,  4297.0, 164864.0),
+    (128, 128, 512.0,  64,  8293.0, 165888.0),
+    (128, 128, 512.0, 128, 16286.0, 200704.0),
+    (512, 128, 128.0,   8,  2692.0, 107936.0),
+    (512, 128, 128.0,  16,  5083.0, 102172.0),
+    (512, 128, 128.0,  32,  9865.0,  99674.0),
+    (512, 128, 128.0,  64, 19429.0,  99193.0),
+    (512, 128, 128.0, 128, 38558.0, 119770.0),
+    (512, 128, 256.0,   8,  2692.0, 107936.0),
+    (512, 128, 256.0,  16,  5083.0, 102172.0),
+    (512, 128, 256.0,  32,  9865.0,  99674.0),
+    (512, 128, 256.0,  64, 19429.0,  99193.0),
+    (512, 128, 256.0, 128, 38558.0, 119770.0),
+    (512, 128, 512.0,   8,  2692.0, 164096.0),
+    (512, 128, 512.0,  16,  5083.0, 164352.0),
+    (512, 128, 512.0,  32,  9865.0, 164864.0),
+    (512, 128, 512.0,  64, 19429.0, 165888.0),
+    (512, 128, 512.0, 128, 38558.0, 200704.0),
+];
+
+/// Fig. 4c balance points: `(m, n, t_int_ns, best_t, overhead)`.
+#[rustfmt::skip]
+const GOLDEN_BEST: [(usize, usize, f64, usize, f64); 6] = [
+    (128, 128, 128.0, 32, 0.0740722656),
+    (128, 128, 256.0,  8, 0.0031250000),
+    (128, 128, 512.0,  8, 0.0015625000),
+    (512, 128, 128.0, 32, 1.4334472656),
+    (512, 128, 256.0, 16, 0.2472167969),
+    (512, 128, 512.0,  8, 0.0015625000),
+];
+
+#[test]
+fn golden_grid_covers_the_papers_parameter_space() {
+    // the pinned grid must stay in sync with the published constants
+    let mut i = 0;
+    for (m, n) in [(128usize, 128usize), (512, 128)] {
+        for t_int in INTEGRATION_TIMES_NS {
+            for t in TOKEN_PARALLELISM {
+                let row = GOLDEN_GRID[i];
+                assert_eq!((row.0, row.1, row.3), (m, n, t), "grid order at {i}");
+                assert_eq!(row.2, t_int, "grid t_int at {i}");
+                i += 1;
+            }
+        }
+    }
+    assert_eq!(i, GOLDEN_GRID.len());
+}
+
+#[test]
+fn pipeline_latency_grid_is_pinned() {
+    let (c, e) = env();
+    for (m, n, t_int, t, pmca_ns, steady_ns) in GOLDEN_GRID {
+        let w = LoraWorkload::new(m, n, RANK, t);
+        let p = pipeline_latency(&w, t_int, SEQ, &c, &e);
+        assert!(
+            (p.pmca_ns - pmca_ns).abs() < 0.5,
+            "{m}x{n}@{t_int} t={t}: pmca_ns {} != pinned {pmca_ns}",
+            p.pmca_ns
+        );
+        assert!(
+            (p.steady_ns - steady_ns).abs() < 0.5,
+            "{m}x{n}@{t_int} t={t}: steady_ns {} != pinned {steady_ns}",
+            p.steady_ns
+        );
+        // overhead is an identity of the pinned values — double-entry
+        let expect_overhead = steady_ns / (SEQ as f64 * t_int) - 1.0;
+        assert!(
+            (p.overhead() - expect_overhead).abs() < 1e-9,
+            "{m}x{n}@{t_int} t={t}: overhead {}",
+            p.overhead()
+        );
+    }
+}
+
+#[test]
+fn fig4c_balance_points_are_pinned() {
+    let (c, e) = env();
+    for (m, n, t_int, best_t, overhead) in GOLDEN_BEST {
+        let b = best_point(m, n, RANK, t_int, SEQ, &c, &e);
+        assert_eq!(b.t, best_t, "{m}x{n}@{t_int}: balance point moved");
+        assert!(
+            (b.overhead() - overhead).abs() < 1e-6,
+            "{m}x{n}@{t_int}: overhead {} != pinned {overhead}",
+            b.overhead()
+        );
+        assert!(b.fits_tcdm, "{m}x{n}@{t_int}: best point must fit the TCDM");
+    }
+}
+
+/// Acceptance contract: the serving scheduler commits to exactly the
+/// token parallelism `pipeline::balance::sweep` + `best` would pick, for
+/// every Fig. 4 configuration, regardless of its own batching knobs.
+#[test]
+fn sched_matches_balance_sweep_for_every_fig4_config() {
+    let (c, e) = env();
+    for (m, n) in [(128usize, 128usize), (512, 128)] {
+        for t_int in INTEGRATION_TIMES_NS {
+            let reference = best(&sweep(m, n, RANK, t_int, SEQ, &c, &e));
+            for max_batch in [1usize, 4, 8, 32] {
+                let s = BatchScheduler::new(
+                    SchedConfig::for_layer(m, n, RANK).t_int(t_int).seq(SEQ),
+                    max_batch,
+                    Duration::from_millis(5),
+                );
+                assert_eq!(
+                    s.t_opt(),
+                    reference.t,
+                    "{m}x{n}@{t_int} max_batch={max_batch}: scheduler diverged from sweep"
+                );
+                assert!(
+                    (s.balance_point().overhead() - reference.overhead()).abs() < 1e-12,
+                    "{m}x{n}@{t_int}: overhead diverged"
+                );
+                // a single-request batch is exactly the Fig. 4 pipeline
+                // run over one sequence at the committed parallelism
+                let w = LoraWorkload::new(m, n, RANK, reference.t);
+                let one = pipeline_latency(&w, t_int, SEQ, &c, &e).steady_ns;
+                assert!((s.modeled_batch_ns(1) - one).abs() < 1e-9);
+            }
+        }
+    }
+}
