@@ -1,12 +1,14 @@
 #!/usr/bin/env bash
 # Lint + test gate for the public API: run before every PR.
 #
-#   ./ci.sh            # fmt --check, clippy -D warnings, tests
-#   ./ci.sh --fix      # apply rustfmt instead of checking
+#   ./ci.sh                   # every stage, in order
+#   ./ci.sh --stage <name>    # one stage: fmt | clippy | test | test-release | doc
+#                             # (CI fans these out as separate jobs)
+#   ./ci.sh --fix             # apply rustfmt instead of checking
 #
 # PJRT-backed integration tests self-skip when `artifacts/` has not
-# been built; everything else (unit tests, channel-level serving tests)
-# runs hermetically.
+# been built; everything else (unit tests, channel-level serving tests,
+# the virtual-clock drift-refresh tests) runs hermetically.
 set -euo pipefail
 
 cd "$(dirname "$0")"
@@ -21,16 +23,87 @@ else
     exit 1
 fi
 
-if [[ "${1:-}" == "--fix" ]]; then
-    cargo fmt --all
-else
-    cargo fmt --all -- --check
-fi
+# named group output: foldable groups on GitHub Actions, plain headers
+# everywhere else, so failures are attributable at a glance
+group() {
+    if [[ -n "${GITHUB_ACTIONS:-}" ]]; then
+        echo "::group::$1"
+    else
+        echo "== $1 =="
+    fi
+}
+endgroup() {
+    if [[ -n "${GITHUB_ACTIONS:-}" ]]; then
+        echo "::endgroup::"
+    fi
+}
 
-cargo clippy --all-targets -- -D warnings
-cargo test -q
+stage_fmt() {
+    group fmt
+    cargo fmt --all -- --check
+    endgroup
+}
+
+stage_clippy() {
+    group clippy
+    cargo clippy --all-targets -- -D warnings
+    endgroup
+}
+
+stage_test() {
+    group test
+    cargo test -q
+    endgroup
+}
+
 # the pipeline-latency / scheduler model tests also run in release:
 # debug_assert guards are compiled out and the hot numeric paths take
 # their optimised shapes there, which is what production serves
-cargo test --release -q
-RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+stage_test_release() {
+    group test-release
+    cargo test --release -q
+    endgroup
+}
+
+stage_doc() {
+    group doc
+    RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+    endgroup
+}
+
+run_stage() {
+    case "$1" in
+        fmt)          stage_fmt ;;
+        clippy)       stage_clippy ;;
+        test)         stage_test ;;
+        test-release) stage_test_release ;;
+        doc)          stage_doc ;;
+        *)
+            echo "ci.sh: unknown stage '$1' (fmt|clippy|test|test-release|doc)" >&2
+            exit 2
+            ;;
+    esac
+}
+
+case "${1:-}" in
+    --fix)
+        # apply rustfmt, then still run the rest of the gate (the
+        # pre-stage script behaved this way too)
+        cargo fmt --all
+        for s in clippy test test-release doc; do
+            run_stage "$s"
+        done
+        ;;
+    --stage)
+        run_stage "${2:?usage: ci.sh --stage <fmt|clippy|test|test-release|doc>}"
+        ;;
+    "")
+        for s in fmt clippy test test-release doc; do
+            run_stage "$s"
+        done
+        ;;
+    *)
+        echo "ci.sh: unknown flag '$1' (try --stage <name> or --fix)" >&2
+        exit 2
+        ;;
+esac

@@ -1,23 +1,37 @@
 //! Dynamic adaptation example (Fig. 3a's scenario, served live).
 //!
-//! The field-deployed ADC degrades from 8-bit to 6-bit; the analog
-//! weights cannot be reprogrammed, but retraining ONLY the LoRA weights
-//! off-chip and hot-swapping them onto the DPUs recovers most of the
-//! lost accuracy. This example plays that out through the serving API:
-//! traffic keeps flowing while the refreshed adapter is redeployed —
-//! in-flight batches finish on their old `Arc` snapshot, later batches
-//! pick up the new version, and the base model is never touched.
+//! A field-deployed part degrades in two ways: the ADC drops from 8-bit
+//! to 6-bit, and the PCM conductances drift as
+//! `g(t) = g_prog·((t+t₀)/t₀)^(−ν)`. The analog weights cannot be
+//! reprogrammed — but retraining ONLY the LoRA weights off-chip and
+//! hot-swapping them onto the DPUs recovers the lost accuracy. This
+//! example plays that out through `serve::refresh` with the *sampled*
+//! decay model: the served meta-weights are programmed onto the
+//! simulated PCM substrate, predicted decay is measured by Monte-Carlo
+//! reads through the full device model (drift → read noise → GDC), and
+//! the refresh worker re-fits + hot-swaps when the tolerance is
+//! crossed. Traffic keeps flowing while it happens — in-flight batches
+//! finish on their old `Arc` snapshot, later batches pick up the new
+//! version, and the base model is never touched.
 //!
 //! ```bash
 //! cargo run --release --example dynamic_adaptation -- --requests 32
 //! cargo run --release --example dynamic_adaptation -- --full   # full Fig. 3a experiment
 //! ```
 
+use std::sync::Arc;
+use std::time::Duration;
+
 use ahwa_lora::data::glue::{GlueGen, GlueTask};
+use ahwa_lora::eval::drift_eval::AnalogDeployment;
 use ahwa_lora::experiments;
 use ahwa_lora::experiments::common::{infer_hw, pretrained_encoder, Ctx};
+use ahwa_lora::model::params::ParamStore;
+use ahwa_lora::pcm::PcmModel;
 use ahwa_lora::serve::registry::SharedRegistry;
-use ahwa_lora::serve::{submit_wave, SchedConfig, Server};
+use ahwa_lora::serve::{
+    submit_wave, DecayModel, FnRefitter, Refit, RefreshConfig, SchedConfig, Server,
+};
 use ahwa_lora::util::cli::Args;
 use ahwa_lora::util::rng::Pcg64;
 
@@ -37,8 +51,54 @@ fn main() -> anyhow::Result<()> {
     let (meta, _) = pretrained_encoder(&ctx, &variant, args.usize("pretrain-steps", 400))?;
 
     let registry = SharedRegistry::new();
-    let v1 = registry.deploy(task.adapter_key(), ctx.init_train(&format!("{variant}/step_cls_lora"))?);
+    let adapter0 = ctx.init_train(&format!("{variant}/step_cls_lora"))?;
+    let v1 = registry.deploy(task.adapter_key(), adapter0);
     println!("deployed adapter '{}' v{v1}", task.adapter_key());
+
+    // Program the served meta-weights onto the simulated PCM substrate:
+    // the decay the refresh policy watches is now MEASURED through the
+    // device model, not a closed form.
+    let mut prog_rng = Pcg64::new(11);
+    let deployment = Arc::new(AnalogDeployment::program(
+        meta.clone(),
+        PcmModel::default(),
+        3.0,
+        &mut prog_rng,
+    ));
+    let decay = DecayModel::sampled(deployment.clone(), 1, 17);
+    let floor = decay.predicted_decay(0.0);
+    // the sampled model has a programming-noise floor at age 0 — the
+    // tolerance must sit above it or the policy would re-trigger forever
+    let tol = (1.25 * floor).max(floor + 0.01);
+    println!(
+        "substrate: {} PCM devices; decay floor {floor:.4} -> tolerance {tol:.4}",
+        deployment.n_devices()
+    );
+    for (label, secs) in [("1h", 3600.0), ("1d", 86_400.0), ("1m", 2_592_000.0)] {
+        println!("  predicted decay at {label}: {:.4}", decay.predicted_decay(secs));
+    }
+    let age_star = decay.trigger_age(tol);
+    println!("policy schedules a refresh after ~{:.1} days of drift", age_star / 86_400.0);
+
+    // The refitter re-initialises the LoRA weights (standing in for an
+    // off-chip retrain against `deployment.meta_at(age)` — the runner
+    // hands exactly that drifted store to the refitter).
+    let refreshed = ctx.init_train(&format!("{variant}/step_cls_lora"))?;
+    let refitter = FnRefitter(
+        move |_task: &str,
+              _current: &ParamStore,
+              _drifted: &ParamStore,
+              budget: usize|
+              -> anyhow::Result<Refit> {
+            Ok(Refit { params: refreshed.clone(), steps: budget })
+        },
+    );
+    let refresh = RefreshConfig::new(decay, Arc::new(refitter))
+        .tolerance(tol)
+        // accelerated drift: each wall second ages the substrate ~1 year
+        .time_scale(args.f64("time-scale", 3e7))
+        .step_budget(4)
+        .check_every(Duration::from_secs(3600)); // driven via refresh_tick_now
 
     // 6-bit ADC: the degraded quantizer the deployed part is stuck with.
     // Batching stays pipeline-aware — the cost model is a property of
@@ -47,6 +107,7 @@ fn main() -> anyhow::Result<()> {
         .manifest(ctx.engine.manifest.clone())
         .hw(infer_hw(8, 6, 0.0, 0.0))
         .scheduler(SchedConfig::for_layer(v.d_model, v.d_model, v.rank))
+        .refresh(refresh)
         .build(meta, registry.clone())?;
     let client = server.client();
 
@@ -65,13 +126,23 @@ fn main() -> anyhow::Result<()> {
         before[0].adapter_version
     );
 
-    // Off-chip LoRA refresh (here: a re-initialised adapter standing in
-    // for the retrained one) hot-swapped WHILE traffic flows.
-    let refreshed = ctx.init_train(&format!("{variant}/step_cls_lora"))?;
-    let v2 = registry.deploy(task.adapter_key(), refreshed);
+    // By now the accelerated clock has drifted the substrate past the
+    // measured tolerance; one policy evaluation runs the whole cycle
+    // (trigger -> refit against the drifted meta -> hot-swap) while the
+    // client keeps submitting.
+    for e in server.refresh_tick_now() {
+        println!(
+            "refreshed '{}' at drift age {:.1} days: decay {:.4} -> {:.4} (swapped to v{})",
+            e.task,
+            e.drift_age_secs / 86_400.0,
+            e.pre_decay,
+            e.post_decay,
+            e.version
+        );
+    }
     let after = submit_wave(&client, &jobs)?;
     println!(
-        "post-adaptation wave: {} responses on adapter v{} (deployed v{v2}, base untouched)",
+        "post-adaptation wave: {} responses on adapter v{} (base model untouched)",
         after.len(),
         after[0].adapter_version
     );

@@ -8,12 +8,17 @@
 //! cargo run --release --example multi_task_serving -- --requests 96 --workers 2
 //! ```
 
-use std::time::Instant;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use ahwa_lora::data::glue::{GlueGen, GlueTask};
 use ahwa_lora::experiments::common::{pretrained_encoder, Ctx};
+use ahwa_lora::model::params::ParamStore;
+use ahwa_lora::pcm::PcmModel;
 use ahwa_lora::serve::registry::SharedRegistry;
-use ahwa_lora::serve::{submit_wave, SchedConfig, Server};
+use ahwa_lora::serve::{
+    submit_wave, DecayModel, FnRefitter, Refit, RefreshConfig, SchedConfig, Server,
+};
 use ahwa_lora::util::cli::Args;
 use ahwa_lora::util::rng::Pcg64;
 
@@ -47,11 +52,37 @@ fn main() -> anyhow::Result<()> {
     // Pipeline-aware batching: workers size batches from the Fig. 4
     // AIMC/PMCA balancing model of this variant's projection layer.
     let t_int = args.usize("t-int", 256) as f64;
+
+    // Drift-aware refresh: the policy watches each task's deployment age
+    // on the pool clock (accelerated: every wall second models
+    // `--time-scale` seconds of conductance drift) and, past the decay
+    // tolerance, re-fits + hot-swaps the adapter. The example's refitter
+    // re-initialises the adapter — a stand-in for the bounded Trainer
+    // refit the `serve-demo` CLI wires up (`--refresh-scale`).
+    let fresh = ctx.init_train(&format!("{variant}/step_cls_lora"))?;
+    let refitter = FnRefitter(
+        move |_task: &str,
+              _current: &ParamStore,
+              _meta: &ParamStore,
+              budget: usize|
+              -> anyhow::Result<Refit> {
+            Ok(Refit { params: fresh.clone(), steps: budget })
+        },
+    );
+    let refresh = RefreshConfig::new(DecayModel::analytic(PcmModel::default()), Arc::new(refitter))
+        .tolerance(0.05)
+        .time_scale(args.f64("time-scale", 2e6))
+        .step_budget(4)
+        // effectively manual: the example forces evaluations with
+        // `refresh_tick_now` so the output is deterministic
+        .check_every(Duration::from_secs(3600));
+
     let server = Server::builder(&variant)
         .manifest(ctx.engine.manifest.clone())
         .workers(workers)
         .queue_depth(args.usize("queue-depth", 128))
         .scheduler(SchedConfig::for_layer(v.d_model, v.d_model, v.rank).t_int(t_int))
+        .refresh(refresh)
         .build(meta, registry.clone())?;
     let client = server.client();
     for t in tasks {
@@ -89,13 +120,22 @@ fn main() -> anyhow::Result<()> {
     );
     println!("{}", server.metrics_report());
 
-    // On-chip task switching: re-deploy one adapter mid-flight and serve
-    // again — the base model is never touched (the paper's key claim).
-    let fresh = ctx.init_train(&format!("{variant}/step_cls_lora"))?;
-    let new_version = registry.deploy("SST-2", fresh);
-    println!("\nhot-swapped SST-2 adapter to v{new_version} (base model untouched)");
+    // By now the accelerated pool clock has aged every deployment past
+    // the modeled decay threshold (at x2e6, one wall second is ~23 drift
+    // days). Force a policy evaluation and watch the refresh cycle:
+    // trigger → bounded refit → versioned hot-swap, base model untouched
+    // and traffic never paused.
+    let events = server.refresh_tick_now();
+    println!();
+    for e in &events {
+        println!(
+            "refreshed '{}' at drift age {:.0}s: decay {:.4} -> {:.4} ({} steps, swapped to v{})",
+            e.task, e.drift_age_secs, e.pre_decay, e.post_decay, e.steps, e.version
+        );
+    }
     let again = submit_wave(&client, &jobs[..tasks.len().min(jobs.len())])?;
-    println!("post-swap responses report adapter v{}", again[0].adapter_version);
+    println!("post-refresh responses report adapter v{}", again[0].adapter_version);
+    println!("{}", server.metrics());
 
     server.shutdown()?;
     Ok(())

@@ -65,6 +65,43 @@ impl AnalogDeployment {
         }
         out
     }
+
+    /// Relative L2 deviation of the substrate-read weights from the
+    /// clean meta targets at drift age `t_seconds`, averaged over
+    /// Monte-Carlo `trials`:
+    /// `√(Σ‖w(t) − w₀‖² / Σ‖w₀‖²)` over every programmed tensor.
+    ///
+    /// With `compensate` this is the *post-GDC* deviation — the quantity
+    /// the serving refresh policy (`serve::refresh::DecayModel::Sampled`)
+    /// tracks against a per-task tolerance. Note the t = 0 value is the
+    /// programming-noise floor, not zero; tolerances for sampled decay
+    /// must sit above it.
+    pub fn relative_deviation(
+        &self,
+        t_seconds: f64,
+        trials: usize,
+        compensate: bool,
+        seed: u64,
+    ) -> f64 {
+        let trials = trials.max(1);
+        let mut acc = 0.0;
+        for trial in 0..trials {
+            let mut rng = Pcg64::with_stream(seed, 0x5eed ^ ((trial as u64) << 8));
+            let mut num = 0.0f64;
+            let mut den = 0.0f64;
+            for (name, pt) in &self.programmed {
+                let w = read_tensor(&self.model, pt, t_seconds, compensate, &mut rng);
+                let w0 = &self.meta.get(name).expect("programmed tensor in meta").data;
+                for (a, b) in w.iter().zip(w0.iter()) {
+                    let d = (a - b) as f64;
+                    num += d * d;
+                    den += (*b as f64) * (*b as f64);
+                }
+            }
+            acc += (num / den.max(f64::EPSILON)).sqrt();
+        }
+        acc / trials as f64
+    }
 }
 
 /// Inference-time hardware vector: PCM perturbations come from the rust
@@ -252,6 +289,39 @@ impl QaEvalSet {
 /// Shared helper: load a fwd graph and the engine in one call.
 pub fn load_fwd<'e>(engine: &'e Engine, key: &str) -> Result<std::rc::Rc<LoadedGraph>> {
     engine.load(key)
+}
+
+#[cfg(test)]
+mod deviation_tests {
+    use super::*;
+    use crate::model::params::Tensor;
+    use crate::pcm::PcmModel;
+
+    fn toy_deployment() -> AnalogDeployment {
+        let mut rng = Pcg64::new(21);
+        let mut data = vec![0f32; 32 * 16];
+        rng.fill_normal(&mut data, 0.0, 0.05);
+        // `wq` is a mappable leaf name, so it lands on the substrate
+        let meta = ParamStore::from_tensors(vec![Tensor {
+            name: "layers.0.wq".to_string(),
+            shape: vec![32, 16],
+            data,
+        }]);
+        AnalogDeployment::program(meta, PcmModel::default(), 3.0, &mut Pcg64::new(22))
+    }
+
+    #[test]
+    fn relative_deviation_grows_with_drift_age() {
+        let dep = toy_deployment();
+        assert_eq!(dep.programmed.len(), 1, "wq must be programmed");
+        let floor = dep.relative_deviation(0.0, 3, true, 5);
+        assert!(floor > 0.0, "programming noise gives a nonzero floor");
+        let year = dep.relative_deviation(31_536_000.0, 3, true, 5);
+        assert!(
+            year > floor,
+            "post-GDC deviation must grow with drift: {year} vs floor {floor}"
+        );
+    }
 }
 
 #[cfg(test)]

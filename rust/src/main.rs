@@ -6,6 +6,7 @@
 //! ahwa-lora latency [--rank R]          # Fig. 4 pipeline study
 //! ahwa-lora serve-demo [--requests N] [--workers W] [--queue-depth D]
 //!                      [--t-int NS] [--no-sched]
+//!                      [--refresh-scale S] [--refresh-tol T] [--refresh-steps K]
 //! ahwa-lora list                        # artifacts + variants
 //! ```
 
@@ -70,10 +71,22 @@ fn list() -> Result<()> {
 /// Live multi-task serving demonstration (Table III's deployment):
 /// deploy GLUE adapters, fire a mixed request wave through the sharded
 /// engine pool, report per-worker routing / batching / hot-swap metrics.
+/// With `--refresh-scale S` (drift seconds per wall second, e.g. 5e4)
+/// the drift-aware refresh worker re-fits and hot-swaps adapters live
+/// while the wave is served.
 fn serve_demo(args: &Args) -> Result<()> {
+    use std::collections::BTreeMap;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    use ahwa_lora::config::run::TrainConfig;
     use ahwa_lora::data::glue::{GlueGen, GlueTask};
+    use ahwa_lora::pcm::PcmModel;
     use ahwa_lora::serve::registry::SharedRegistry;
-    use ahwa_lora::serve::{submit_wave, SchedConfig, Server};
+    use ahwa_lora::serve::{
+        submit_wave, DecayModel, RefreshConfig, SchedConfig, Server, TrainerRefitter,
+    };
+    use ahwa_lora::train::{OwnedArg, OwnedBatch};
     use ahwa_lora::util::rng::Pcg64;
 
     let n_requests = args.usize("requests", 64);
@@ -81,6 +94,8 @@ fn serve_demo(args: &Args) -> Result<()> {
     let queue_depth = args.usize("queue-depth", 128);
     let t_int = args.usize("t-int", 256) as f64;
     let no_sched = args.bool("no-sched");
+    let refresh_scale = args.f64("refresh-scale", 0.0);
+    let refresh_tol = args.f64("refresh-tol", 0.05);
     let variant = args.str("variant", "mobilebert_proxy");
 
     let ctx = ahwa_lora::experiments::common::Ctx::new()?;
@@ -127,6 +142,36 @@ fn serve_demo(args: &Args) -> Result<()> {
         );
         builder = builder.scheduler(sched);
     }
+    if refresh_scale > 0.0 {
+        // drift-aware refresh: re-fit each task's LoRA against the
+        // drifted meta-weights with a bounded Trainer budget and
+        // hot-swap it, live under traffic
+        let mut gens = BTreeMap::new();
+        for t in tasks {
+            gens.insert(t.adapter_key().to_string(), GlueGen::new(t, v.vocab, v.seq));
+        }
+        let train_batch = v.train_batch;
+        let batches = Arc::new(move |task: &str, _step: usize, rng: &mut Pcg64| {
+            let gen = gens.get(task).expect("refresh batch for undeployed task");
+            let b = gen.batch(train_batch, rng);
+            OwnedBatch(vec![OwnedArg::I32(b.tokens), OwnedArg::I32(b.labels)])
+        });
+        let refitter = TrainerRefitter::new(
+            ctx.engine.manifest.clone(),
+            &format!("{variant}/step_cls_lora"),
+            TrainConfig::default(),
+            batches,
+        );
+        let cfg = RefreshConfig::new(DecayModel::analytic(PcmModel::default()), Arc::new(refitter))
+            .tolerance(refresh_tol)
+            .time_scale(refresh_scale)
+            .step_budget(args.usize("refresh-steps", 8))
+            .check_every(Duration::from_millis(25));
+        println!(
+            "drift-aware refresh: ON (drift x{refresh_scale:.0}, tolerance {refresh_tol:.3})"
+        );
+        builder = builder.refresh(cfg);
+    }
     let server = builder.build(meta, registry)?;
     let client = server.client();
     let mut rng = Pcg64::new(42);
@@ -147,6 +192,18 @@ fn serve_demo(args: &Args) -> Result<()> {
         responses.len() as f64 / wall.as_secs_f64(),
         server.workers(),
     );
+    // one final policy evaluation so short runs still show the cycle
+    server.refresh_tick_now();
+    let events = server.refresh_events();
+    if !events.is_empty() {
+        println!("refresh events:");
+        for e in &events {
+            println!(
+                "  {} @ drift age {:.0}s: decay {:.4} -> {:.4} ({} steps, swapped to v{})",
+                e.task, e.drift_age_secs, e.pre_decay, e.post_decay, e.steps, e.version
+            );
+        }
+    }
     println!("{}", server.metrics_report());
     server.shutdown()?;
     Ok(())

@@ -58,6 +58,24 @@ impl AdapterRegistry {
         version
     }
 
+    /// Compare-and-swap deploy: install `params` only if the live
+    /// version is still `expected` (`expected == 0` means "task not
+    /// deployed yet"). Returns the new version, or `None` when a
+    /// concurrent deploy won the race — the caller's refit was computed
+    /// against a stale adapter and must not clobber the newer one.
+    pub fn deploy_if_version(
+        &mut self,
+        task: &str,
+        params: ParamStore,
+        expected: u64,
+    ) -> Option<u64> {
+        let live = self.sets.get(task).map(|(i, _)| i.version).unwrap_or(0);
+        if live != expected {
+            return None;
+        }
+        Some(self.deploy(task, params))
+    }
+
     pub fn get(&self, task: &str) -> Result<&Arc<ParamStore>> {
         self.sets
             .get(task)
@@ -121,6 +139,18 @@ mod tests {
         let mut r = AdapterRegistry::new();
         r.deploy("sst2", adapter(16));
         assert_eq!(r.deploy("sst2", adapter(16)), 2);
+        assert_eq!(r.info("sst2").unwrap().version, 2);
+    }
+
+    #[test]
+    fn deploy_if_version_is_a_cas() {
+        let mut r = AdapterRegistry::new();
+        // expected 0 = "not deployed yet"
+        assert_eq!(r.deploy_if_version("sst2", adapter(16), 0), Some(1));
+        assert_eq!(r.deploy_if_version("sst2", adapter(16), 0), None);
+        // matching expectation wins, stale expectation loses
+        assert_eq!(r.deploy_if_version("sst2", adapter(16), 1), Some(2));
+        assert_eq!(r.deploy_if_version("sst2", adapter(16), 1), None);
         assert_eq!(r.info("sst2").unwrap().version, 2);
     }
 

@@ -8,7 +8,7 @@
 //! conductance scale (the stochastic spread remains, which is what the
 //! LoRA adapters then compensate).
 
-use super::{PcmModel, ProgrammedTensor};
+use super::{drift, PcmModel, ProgrammedTensor};
 
 /// Reference read: Σ(g⁺ + g⁻) at programming time (t = 0, i.e. t₀).
 pub fn gdc_reference(tensor_gp: &[f32], tensor_gm: &[f32]) -> f64 {
@@ -22,6 +22,52 @@ pub fn gdc_factor(_model: &PcmModel, tensor: &ProgrammedTensor, gp_now: &[f32], 
         return 1.0;
     }
     (tensor.gdc_reference / s_now) as f32
+}
+
+// ---------------------------------------------------------------------------
+// Residual decay after compensation
+// ---------------------------------------------------------------------------
+
+/// Device-to-device dispersion of the drift factor at a representative
+/// relative conductance `g_rel` (0‥1): the effective σ of the per-device
+/// drift exponents, scaled by the model's global noise knob.
+pub fn drift_dispersion(model: &PcmModel, g_rel: f32) -> f64 {
+    (model.noise_scale * drift::nu_std(model, g_rel * model.g_max)) as f64
+}
+
+/// Predicted *post-GDC* accuracy-relevant weight decay at drift age
+/// `t_seconds`, as a fraction in [0, 1).
+///
+/// GDC exactly restores the mean conductance scale, so what erodes a
+/// deployed adapter's accuracy is the device-to-device *spread* of the
+/// drift factor `exp(−ν·ln((t+t₀)/t₀))`. For ν ~ N(μ_ν, σ_ν) the
+/// relative residual grows like `σ_ν·ln((t+t₀)/t₀)`; this model maps it
+/// into a bounded fraction via `1 − exp(−σ_ν·ln r)` — zero at t = 0,
+/// strictly monotone in t, saturating at 1. The serving refresh policy
+/// (`serve::refresh`) compares it against a per-task tolerance.
+pub fn residual_decay(model: &PcmModel, g_rel: f32, t_seconds: f64) -> f64 {
+    if t_seconds <= 0.0 {
+        return 0.0;
+    }
+    let s = drift_dispersion(model, g_rel);
+    let log_ratio = ((t_seconds + model.t0) / model.t0).ln();
+    1.0 - (-s * log_ratio).exp()
+}
+
+/// Inverse of [`residual_decay`]: the drift age (seconds) at which the
+/// predicted decay first reaches `decay`. Returns 0 for a non-positive
+/// target and `f64::INFINITY` when the model never decays that far
+/// (ideal substrate, or `decay ≥ 1`).
+pub fn residual_decay_inverse(model: &PcmModel, g_rel: f32, decay: f64) -> f64 {
+    if decay <= 0.0 {
+        return 0.0;
+    }
+    let s = drift_dispersion(model, g_rel);
+    if s <= 0.0 || decay >= 1.0 {
+        return f64::INFINITY;
+    }
+    let log_ratio = -(1.0 - decay).ln() / s;
+    model.t0 * (log_ratio.exp() - 1.0)
 }
 
 #[cfg(test)]
@@ -52,6 +98,39 @@ mod tests {
         let gm: Vec<f32> = t.g_minus.iter().map(|v| v * 0.8).collect();
         let a = gdc_factor(&model, &t, &gp, &gm);
         assert!((a - 1.25).abs() < 1e-3, "alpha={a}");
+    }
+
+    #[test]
+    fn residual_decay_is_zero_at_programming_and_monotone() {
+        let m = PcmModel::default();
+        assert_eq!(residual_decay(&m, 0.5, 0.0), 0.0);
+        let mut last = 0.0;
+        for secs in [60.0, 3600.0, 86_400.0, 2_592_000.0, 315_360_000.0] {
+            let d = residual_decay(&m, 0.5, secs);
+            assert!(d > last, "decay must grow with drift age: {d} vs {last}");
+            assert!(d < 1.0);
+            last = d;
+        }
+    }
+
+    #[test]
+    fn residual_decay_inverse_round_trips() {
+        let m = PcmModel::default();
+        for tol in [0.01, 0.05, 0.2, 0.6] {
+            let t = residual_decay_inverse(&m, 0.5, tol);
+            assert!(t.is_finite() && t > 0.0);
+            let d = residual_decay(&m, 0.5, t);
+            assert!((d - tol).abs() < 1e-9, "decay({t}) = {d}, want {tol}");
+        }
+        assert_eq!(residual_decay_inverse(&m, 0.5, 0.0), 0.0);
+        assert_eq!(residual_decay_inverse(&m, 0.5, 1.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn ideal_substrate_never_decays() {
+        let m = PcmModel::ideal();
+        assert_eq!(residual_decay(&m, 0.5, 315_360_000.0), 0.0);
+        assert_eq!(residual_decay_inverse(&m, 0.5, 0.05), f64::INFINITY);
     }
 
     #[test]

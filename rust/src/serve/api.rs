@@ -30,7 +30,7 @@
 
 use std::fmt;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, TryRecvError};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -38,6 +38,7 @@ use crate::model::params::ParamStore;
 use crate::util::stats;
 
 use super::pool::{self, Job, WorkRequest, WorkerHandle};
+use super::refresh::{spawn_refresh_worker, RefreshConfig, RefreshEvent, RefreshRunner};
 use super::registry::SharedRegistry;
 use super::sched::{Clock, RealClock, SchedConfig};
 
@@ -179,6 +180,13 @@ pub struct Metrics {
     pub rejected: AtomicU64,
     /// PJRT compile time paid by this worker at startup.
     pub compile_ms: AtomicU64,
+    /// Drift-aware adapter refreshes completed ([`super::refresh`]).
+    pub refreshes: AtomicU64,
+    /// Optimizer steps spent across all refits.
+    pub refresh_steps: AtomicU64,
+    /// Failed refit attempts (kept separate from `errors`, which counts
+    /// failed *requests*).
+    pub refresh_errors: AtomicU64,
     latencies_us: Mutex<Vec<f64>>,
     batch_sizes: Mutex<Vec<f64>>,
     /// Scheduler-modeled batch latency samples (µs), recorded alongside
@@ -216,6 +224,9 @@ impl Metrics {
             errors: self.errors.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
             compile_ms: self.compile_ms.load(Ordering::Relaxed),
+            refreshes: self.refreshes.load(Ordering::Relaxed),
+            refresh_steps: self.refresh_steps.load(Ordering::Relaxed),
+            refresh_errors: self.refresh_errors.load(Ordering::Relaxed),
             batch_mean: stats::mean(&bs),
             lat_p50_ms: stats::percentile(&lat, 50.0) / 1e3,
             lat_p95_ms: stats::percentile(&lat, 95.0) / 1e3,
@@ -242,6 +253,13 @@ pub struct MetricsSnapshot {
     pub errors: u64,
     pub rejected: u64,
     pub compile_ms: u64,
+    /// Drift-aware adapter refreshes completed (0 when refresh is off).
+    pub refreshes: u64,
+    /// Optimizer steps spent across all refits.
+    pub refresh_steps: u64,
+    /// Failed refit attempts (distinct from `errors`: those count
+    /// failed requests).
+    pub refresh_errors: u64,
     pub batch_mean: f64,
     pub lat_p50_ms: f64,
     pub lat_p95_ms: f64,
@@ -272,6 +290,13 @@ impl fmt::Display for MetricsSnapshot {
         if self.modeled_p50_ms > 0.0 {
             write!(f, " model_p50={:.3}ms", self.modeled_p50_ms)?;
         }
+        if self.refreshes > 0 || self.refresh_errors > 0 {
+            write!(
+                f,
+                " refreshes={} refit_steps={} refit_errors={}",
+                self.refreshes, self.refresh_steps, self.refresh_errors
+            )?;
+        }
         Ok(())
     }
 }
@@ -293,6 +318,9 @@ pub fn aggregate<'a>(workers: impl IntoIterator<Item = &'a Metrics>) -> MetricsS
         out.errors += m.errors.load(Ordering::Relaxed);
         out.rejected += m.rejected.load(Ordering::Relaxed);
         out.compile_ms += m.compile_ms.load(Ordering::Relaxed);
+        out.refreshes += m.refreshes.load(Ordering::Relaxed);
+        out.refresh_steps += m.refresh_steps.load(Ordering::Relaxed);
+        out.refresh_errors += m.refresh_errors.load(Ordering::Relaxed);
         lat.extend_from_slice(&m.latencies_us.lock().unwrap());
         bs.extend_from_slice(&m.batch_sizes.lock().unwrap());
         modeled.extend_from_slice(&m.modeled_us.lock().unwrap());
@@ -321,6 +349,7 @@ pub struct ServerBuilder {
     hw: [f32; 5],
     fail_every: u64,
     sched: Option<SchedConfig>,
+    refresh: Option<RefreshConfig>,
     clock: Arc<dyn Clock>,
 }
 
@@ -336,6 +365,7 @@ impl fmt::Debug for ServerBuilder {
             .field("hw", &self.hw)
             .field("fail_every", &self.fail_every)
             .field("sched", &self.sched)
+            .field("refresh", &self.refresh)
             .finish_non_exhaustive()
     }
 }
@@ -354,6 +384,7 @@ impl ServerBuilder {
             hw: [0.0, 0.0, 127.0, 127.0, 0.0],
             fail_every: 0,
             sched: None,
+            refresh: None,
             clock: Arc::new(RealClock),
         }
     }
@@ -413,6 +444,17 @@ impl ServerBuilder {
     /// graph's sequence length.
     pub fn scheduler(mut self, cfg: SchedConfig) -> Self {
         self.sched = Some(cfg);
+        self
+    }
+
+    /// Drift-aware adapter refresh ([`super::refresh`]): a background
+    /// worker tracks each deployed task's drift age on the pool clock,
+    /// predicts accuracy decay from the PCM drift model, and when a
+    /// task crosses its tolerance re-fits its LoRA against the drifted
+    /// meta-weights (bounded step budget) and hot-swaps it through the
+    /// registry — versioned, monotone, torn-read-free.
+    pub fn refresh(mut self, cfg: RefreshConfig) -> Self {
+        self.refresh = Some(cfg);
         self
     }
 
@@ -507,11 +549,43 @@ impl ServerBuilder {
             registry: registry.clone(),
             seq,
         };
+
+        // drift-aware refresh: everything deployed now starts its drift
+        // clock now; later deploys reset it through the version race
+        // guard (`SharedRegistry::deploy_if_version`)
+        let refresh = match self.refresh {
+            Some(rcfg) => {
+                // a tolerance at or below the decay model's age-0 floor
+                // would refit on every tick, forever
+                rcfg.validate().map_err(|detail| ServeError::Init { detail })?;
+                let check_every = rcfg.check_every;
+                let metrics = Arc::new(Metrics::default());
+                let mut runner =
+                    RefreshRunner::new(rcfg, registry.clone(), meta.clone(), metrics.clone());
+                runner.track_deployed(self.clock.now());
+                let runner = Arc::new(Mutex::new(runner));
+                let (stop, join) =
+                    spawn_refresh_worker(runner.clone(), self.clock.clone(), check_every)
+                        .map_err(|e| ServeError::Init {
+                            detail: format!("spawning refresh worker: {e}"),
+                        })?;
+                Some(RefreshHandle {
+                    runner,
+                    metrics,
+                    stop,
+                    join: Some(join),
+                })
+            }
+            None => None,
+        };
+
         Ok(Server {
             client,
             registry,
             worker_metrics,
             joins,
+            clock: self.clock,
+            refresh,
         })
     }
 }
@@ -628,6 +702,15 @@ fn fnv1a(s: &str) -> u64 {
 // Server
 // ---------------------------------------------------------------------------
 
+/// The drift-refresh worker attached to a pool: its runner (policy +
+/// event log), counters, and stop/join plumbing.
+struct RefreshHandle {
+    runner: Arc<Mutex<RefreshRunner>>,
+    metrics: Arc<Metrics>,
+    stop: Sender<()>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
 /// Handle to a running pool: hands out clients, reports metrics, and
 /// owns graceful shutdown (drain everything, join every worker).
 pub struct Server {
@@ -635,6 +718,8 @@ pub struct Server {
     registry: SharedRegistry,
     worker_metrics: Vec<Arc<Metrics>>,
     joins: Vec<std::thread::JoinHandle<ServeResult<()>>>,
+    clock: Arc<dyn Clock>,
+    refresh: Option<RefreshHandle>,
 }
 
 impl Server {
@@ -659,9 +744,14 @@ impl Server {
         &self.worker_metrics
     }
 
-    /// Pool-level aggregate.
+    /// Pool-level aggregate (includes the refresh worker's counters).
     pub fn metrics(&self) -> MetricsSnapshot {
-        aggregate(self.worker_metrics.iter().map(|m| m.as_ref()))
+        aggregate(
+            self.worker_metrics
+                .iter()
+                .chain(self.refresh.as_ref().map(|r| &r.metrics))
+                .map(|m| m.as_ref()),
+        )
     }
 
     /// Multi-line report: one line per worker plus the aggregate.
@@ -671,14 +761,38 @@ impl Server {
             out.push_str(&m.snapshot(&format!("worker{w}")).to_string());
             out.push('\n');
         }
+        if let Some(r) = &self.refresh {
+            out.push_str(&r.metrics.snapshot("refresh").to_string());
+            out.push('\n');
+        }
         out.push_str(&self.metrics().to_string());
         out
     }
 
-    /// Graceful shutdown: stop admission, drain every queue (all pending
-    /// tickets resolve), join all workers. Returns the first worker
-    /// error, if any.
+    /// Force an immediate refresh-policy evaluation on the pool clock
+    /// (the background worker does this every `check_every`). Returns
+    /// the refreshes performed; empty when refresh is not configured.
+    pub fn refresh_tick_now(&self) -> Vec<RefreshEvent> {
+        match &self.refresh {
+            Some(r) => r.runner.lock().unwrap().tick(self.clock.now()),
+            None => Vec::new(),
+        }
+    }
+
+    /// Refresh activity so far (trigger age, pre/post predicted decay,
+    /// steps spent, swap version per event). Empty when refresh is off.
+    pub fn refresh_events(&self) -> Vec<RefreshEvent> {
+        self.refresh
+            .as_ref()
+            .map(|r| r.runner.lock().unwrap().events().to_vec())
+            .unwrap_or_default()
+    }
+
+    /// Graceful shutdown: stop the refresh worker, stop admission, drain
+    /// every queue (all pending tickets resolve), join all workers.
+    /// Returns the first worker error, if any.
     pub fn shutdown(mut self) -> ServeResult<()> {
+        self.stop_refresh();
         self.begin_shutdown();
         let mut first_err = None;
         for j in self.joins.drain(..) {
@@ -706,12 +820,22 @@ impl Server {
             let _ = h.tx.send(Job::Shutdown);
         }
     }
+
+    fn stop_refresh(&mut self) {
+        if let Some(r) = self.refresh.as_mut() {
+            let _ = r.stop.send(());
+            if let Some(j) = r.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
         // if `shutdown` was not called, still stop the workers so
         // lingering Client clones cannot keep threads alive forever.
+        self.stop_refresh();
         if !self.joins.is_empty() {
             self.begin_shutdown();
             for j in self.joins.drain(..) {
@@ -931,6 +1055,23 @@ mod tests {
         let plain = Metrics::default();
         plain.record(1, Duration::from_millis(1));
         assert!(!plain.snapshot("w").to_string().contains("model_p50"));
+    }
+
+    #[test]
+    fn refresh_counters_flow_into_snapshots() {
+        let m = Metrics::default();
+        m.refreshes.fetch_add(2, Ordering::Relaxed);
+        m.refresh_steps.fetch_add(32, Ordering::Relaxed);
+        let s = m.snapshot("refresh");
+        assert_eq!(s.refreshes, 2);
+        assert_eq!(s.refresh_steps, 32);
+        assert!(s.to_string().contains("refreshes=2 refit_steps=32"));
+        let agg = aggregate([&m, &Metrics::default()]);
+        assert_eq!(agg.refreshes, 2);
+        assert_eq!(agg.refresh_steps, 32);
+        // pools without refresh activity stay silent
+        let quiet = Metrics::default().snapshot("w").to_string();
+        assert!(!quiet.contains("refreshes"));
     }
 
     #[test]

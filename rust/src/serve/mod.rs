@@ -15,6 +15,35 @@
 //!   hash, bounded admission with `Overloaded` try-again backpressure.
 //! * [`api::Metrics`] — per-worker counters plus a pool aggregate.
 //!
+//! # Adapter lifecycle
+//!
+//! A long-lived pool runs every adapter through one loop — deployment
+//! onto the (drifting) analog substrate, service, modeled decay, and a
+//! digital-side refresh that never touches the arrays:
+//!
+//! ```text
+//!              SharedRegistry::deploy (version v, Arc snapshot)
+//!                   │
+//!      ┌────────────▼────────────┐
+//!      │          SERVE          │ workers read Arc<ParamStore>
+//!      │  (batches pin task+v)   │ snapshots; in-flight batches
+//!      └────────────┬────────────┘ always finish on their snapshot
+//!                   │ time passes on the pool Clock
+//!      ┌────────────▼────────────┐
+//!      │          DRIFT          │ g(t) = g_prog·((t+t₀)/t₀)^(−ν)
+//!      │ RefreshPolicy predicts  │ post-GDC residual decay vs the
+//!      │ decay from drift age    │ per-task tolerance
+//!      └────────────┬────────────┘
+//!                   │ decay ≥ tolerance
+//!      ┌────────────▼────────────┐
+//!      │         REFRESH         │ Refitter re-fits LoRA against the
+//!      │  (bounded step budget)  │ drifted meta-weights (Trainer)
+//!      └────────────┬────────────┘
+//!                   │ deploy_if_version(v) — CAS: a concurrent manual
+//!                   ▼              deploy wins, the stale refit is dropped
+//!              HOT-SWAP (version v+1, O(pointer)) ──► back to SERVE
+//! ```
+//!
 //! Supporting pieces:
 //!
 //! * [`registry`] — thread-safe adapter registry handing out
@@ -27,6 +56,10 @@
 //!   modeled-optimal batch fill per task, and every timestamp flows
 //!   through a [`sched::Clock`] (real or virtual) so timing behaviour
 //!   is testable without sleeps,
+//! * [`refresh`]  — drift-aware adapter refresh: per-task drift-age
+//!   tracking on the pool clock, decay prediction (closed-form or
+//!   Monte-Carlo through the device model), bounded LoRA refits, and
+//!   versioned hot-swaps, all testable on the virtual clock,
 //! * [`router`] / [`server`] — deprecated shims over [`api`]. The old
 //!   call shapes (`Server::start`, `server.router`, raw `Msg` channels,
 //!   `Router::submit` returning a bare receiver) are gone; the shims
@@ -35,6 +68,7 @@
 pub mod api;
 pub mod batcher;
 mod pool;
+pub mod refresh;
 pub mod registry;
 pub mod router;
 pub mod sched;
@@ -43,5 +77,9 @@ pub mod server;
 pub use api::{
     aggregate, submit_wave, submit_wave_results, Client, Metrics, MetricsSnapshot, Pending,
     Response, ServeError, ServeResult, Server, ServerBuilder,
+};
+pub use refresh::{
+    DecayModel, FnRefitter, Refit, Refitter, RefreshConfig, RefreshEvent, RefreshPolicy,
+    RefreshRunner, TrainerRefitter,
 };
 pub use sched::{BatchScheduler, Clock, RealClock, SchedConfig, VirtualClock};

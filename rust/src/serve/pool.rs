@@ -128,7 +128,9 @@ fn worker_loop(
     let mut sched = cfg
         .sched
         .map(|s| BatchScheduler::new(s, cfg.max_batch, cfg.max_wait));
-    let mut last_task: Option<String> = None;
+    // (task, version) of the adapter loaded on the DPUs: a drift-refresh
+    // hot-swap of the SAME task is an adapter swap too
+    let mut last_adapter: Option<(String, u64)> = None;
     let mut batch_idx: u64 = 0;
     let mut open = true;
     let mut drain_deadline = cfg.clock.now(); // set when `open` flips
@@ -195,7 +197,7 @@ fn worker_loop(
             let modeled = sched.as_ref().map(|s| s.modeled_batch(reqs.len()));
             serve_batch(
                 &cfg, &graph, &meta, &registry, &metrics, &inflight, batch_idx,
-                &mut last_task, task, reqs, modeled,
+                &mut last_adapter, task, reqs, modeled,
             );
             if !open {
                 // progress resets the grace window: slow batches must
@@ -227,7 +229,7 @@ fn serve_batch(
     metrics: &Metrics,
     inflight: &AtomicUsize,
     batch_idx: u64,
-    last_task: &mut Option<String>,
+    last_adapter: &mut Option<(String, u64)>,
     task: String,
     reqs: Vec<WorkRequest>,
     modeled: Option<Duration>,
@@ -240,9 +242,12 @@ fn serve_batch(
         });
         return;
     };
-    if last_task.as_deref() != Some(task.as_str()) {
+    // a task switch OR a new version of the same task (redeploy /
+    // drift refresh) costs a DPU adapter swap
+    let loaded = (task.clone(), version);
+    if last_adapter.as_ref() != Some(&loaded) {
         metrics.adapter_swaps.fetch_add(1, Ordering::Relaxed);
-        *last_task = Some(task.clone());
+        *last_adapter = Some(loaded);
     }
     if cfg.fail_every > 0 && batch_idx % cfg.fail_every == 0 {
         metrics.errors.fetch_add(n as u64, Ordering::Relaxed);

@@ -1,0 +1,1055 @@
+//! Drift-aware adapter refresh: keep a long-lived serving pool accurate
+//! as the analog substrate drifts under it.
+//!
+//! The paper's deployment premise is that the analog meta-weights stay
+//! fixed while small LoRA adapters absorb hardware *and* task
+//! adaptation. But PCM conductances relax over time —
+//! `g(t) = g_prog·((t+t₀)/t₀)^(−ν)` ([`crate::pcm::drift`]) — so an
+//! adapter fitted at deployment time slowly loses accuracy against the
+//! drifted substrate. Global drift compensation restores the *mean*
+//! conductance scale; what remains is the device-to-device dispersion,
+//! and the paper's answer to it is digital-side re-adaptation: re-fit
+//! the task's LoRA against the drifted weights and hot-swap it, never
+//! touching the arrays.
+//!
+//! This module automates that loop for the serving pool:
+//!
+//! * [`DecayModel`] predicts accuracy-relevant decay at a drift age —
+//!   either closed-form from the PCM statistics
+//!   ([`crate::pcm::compensation::residual_decay`]) or by Monte-Carlo
+//!   reads through a programmed
+//!   [`AnalogDeployment`](crate::eval::drift_eval::AnalogDeployment)
+//!   (drift → read noise → GDC, the full device model).
+//! * [`RefreshPolicy`] tracks each task's deployment age on the pool's
+//!   [`Clock`] (virtual in tests — the whole trigger path is testable
+//!   with zero real sleeps) and reports which tasks have crossed their
+//!   per-task tolerance, plus the *modeled* instant a task will cross it
+//!   ([`RefreshPolicy::trigger_at`]).
+//! * [`Refitter`] re-fits one adapter against the drifted meta-weights.
+//!   [`TrainerRefitter`] drives [`Trainer`] with a bounded step budget;
+//!   [`FnRefitter`] wraps a closure for tests and cheap demos.
+//! * [`RefreshRunner`] executes the cycle: predict → refit → hot-swap
+//!   through [`SharedRegistry::deploy_if_version`] (versioned, monotone,
+//!   torn-read-free: in-flight batches finish on the `Arc` snapshot they
+//!   grabbed, and a refit that lost a race against a concurrent manual
+//!   redeploy is discarded instead of clobbering the newer adapter).
+//!
+//! Production wiring: [`ServerBuilder::refresh`] spawns a background
+//! worker that calls [`RefreshRunner::tick`] every
+//! [`RefreshConfig::check_every`]; [`Server::refresh_tick_now`] forces
+//! an evaluation. Refresh activity lands in the pool's
+//! [`Metrics`]/`MetricsSnapshot` (`refreshes`, `refresh_steps`,
+//! `refresh_errors`) and in the per-event [`RefreshEvent`] log.
+//!
+//! [`ServerBuilder::refresh`]: super::api::ServerBuilder::refresh
+//! [`Server::refresh_tick_now`]: super::api::Server::refresh_tick_now
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::config::manifest::Manifest;
+use crate::config::run::TrainConfig;
+use crate::eval::drift_eval::AnalogDeployment;
+use crate::model::params::ParamStore;
+use crate::pcm::{compensation, PcmModel};
+use crate::train::{OwnedBatch, Trainer};
+use crate::util::rng::Pcg64;
+
+use super::api::Metrics;
+use super::registry::SharedRegistry;
+use super::sched::Clock;
+
+// ---------------------------------------------------------------------------
+// Decay prediction
+// ---------------------------------------------------------------------------
+
+/// Longest drift age the sampled trigger search considers (10 years —
+/// the far end of the paper's drift grid).
+const MAX_TRIGGER_AGE_SECS: f64 = 315_360_000.0;
+
+/// Crossing instants further out than this (~31M years of pool clock)
+/// are treated as "never" — `Duration::from_secs_f64` would panic on
+/// the astronomical ages a near-1 tolerance produces.
+const MAX_DUE_SECS: f64 = 1e15;
+
+/// Predicts accuracy-relevant decay as a function of drift age.
+#[derive(Clone)]
+pub enum DecayModel {
+    /// Closed-form post-GDC residual model from the PCM drift
+    /// statistics, evaluated at a representative relative conductance
+    /// (see [`compensation::residual_decay`]). Zero at age 0; exactly
+    /// invertible, so modeled trigger times are exact.
+    Analytic {
+        model: PcmModel,
+        /// Representative relative conductance (0‥1) for the dispersion.
+        g_rel: f32,
+    },
+    /// Monte-Carlo relative weight deviation read through a programmed
+    /// deployment (drift → read noise → GDC). Carries a
+    /// programming-noise floor at age 0 — tolerances must sit above
+    /// [`DecayModel::predicted_decay`]`(0.0)` or the policy re-triggers
+    /// forever.
+    Sampled {
+        deployment: Arc<AnalogDeployment>,
+        trials: usize,
+        seed: u64,
+    },
+}
+
+impl DecayModel {
+    /// Analytic model at the mid-range conductance (`g_rel` = 0.5).
+    pub fn analytic(model: PcmModel) -> DecayModel {
+        DecayModel::Analytic { model, g_rel: 0.5 }
+    }
+
+    pub fn sampled(deployment: Arc<AnalogDeployment>, trials: usize, seed: u64) -> DecayModel {
+        DecayModel::Sampled {
+            deployment,
+            trials: trials.max(1),
+            seed,
+        }
+    }
+
+    /// Predicted decay fraction at drift age `age_seconds`.
+    pub fn predicted_decay(&self, age_seconds: f64) -> f64 {
+        match self {
+            DecayModel::Analytic { model, g_rel } => {
+                compensation::residual_decay(model, *g_rel, age_seconds)
+            }
+            DecayModel::Sampled {
+                deployment,
+                trials,
+                seed,
+            } => deployment.relative_deviation(age_seconds, *trials, true, *seed),
+        }
+    }
+
+    /// Modeled drift age (seconds) at which decay first crosses
+    /// `tolerance`; `f64::INFINITY` if it never does. Closed-form for
+    /// the analytic model; bisection on the (statistically monotone)
+    /// sampled curve otherwise.
+    pub fn trigger_age(&self, tolerance: f64) -> f64 {
+        match self {
+            DecayModel::Analytic { model, g_rel } => {
+                compensation::residual_decay_inverse(model, *g_rel, tolerance)
+            }
+            DecayModel::Sampled { .. } => {
+                if self.predicted_decay(MAX_TRIGGER_AGE_SECS) < tolerance {
+                    return f64::INFINITY;
+                }
+                let (mut lo, mut hi) = (0.0f64, MAX_TRIGGER_AGE_SECS);
+                for _ in 0..32 {
+                    let mid = 0.5 * (lo + hi);
+                    if self.predicted_decay(mid) < tolerance {
+                        lo = mid;
+                    } else {
+                        hi = mid;
+                    }
+                }
+                0.5 * (lo + hi)
+            }
+        }
+    }
+}
+
+impl fmt::Debug for DecayModel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DecayModel::Analytic { g_rel, .. } => {
+                f.debug_struct("Analytic").field("g_rel", g_rel).finish_non_exhaustive()
+            }
+            DecayModel::Sampled { trials, seed, .. } => f
+                .debug_struct("Sampled")
+                .field("trials", trials)
+                .field("seed", seed)
+                .finish_non_exhaustive(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Refitters
+// ---------------------------------------------------------------------------
+
+/// Outcome of one adapter re-fit.
+#[derive(Clone, Debug)]
+pub struct Refit {
+    /// The refreshed adapter (LoRA + head) to hot-swap in.
+    pub params: ParamStore,
+    /// Optimizer steps actually spent.
+    pub steps: usize,
+}
+
+/// Re-fits one task's adapter against the drifted meta-weights.
+pub trait Refitter: Send + Sync {
+    /// `current` is the live adapter snapshot the refresh is replacing;
+    /// `drifted_meta` the substrate as the drift model reads it today;
+    /// `step_budget` the hard cap on optimizer steps.
+    fn refit(
+        &self,
+        task: &str,
+        current: &ParamStore,
+        drifted_meta: &ParamStore,
+        step_budget: usize,
+    ) -> Result<Refit>;
+}
+
+/// Closure refitter for tests, benches, and cheap demos.
+pub struct FnRefitter<F>(pub F);
+
+impl<F> Refitter for FnRefitter<F>
+where
+    F: Fn(&str, &ParamStore, &ParamStore, usize) -> Result<Refit> + Send + Sync,
+{
+    fn refit(
+        &self,
+        task: &str,
+        current: &ParamStore,
+        drifted_meta: &ParamStore,
+        step_budget: usize,
+    ) -> Result<Refit> {
+        (self.0)(task, current, drifted_meta, step_budget)
+    }
+}
+
+/// Production refitter: continue training the task's LoRA against the
+/// drifted meta-weights with [`Trainer`], capped at the step budget.
+///
+/// PJRT handles are not `Send`, so the engine is built fresh inside the
+/// refresh worker's call — refreshes happen on the drift timescale
+/// (hours to months), so the bring-up cost amortises to nothing.
+pub struct TrainerRefitter {
+    manifest: Manifest,
+    step_graph: String,
+    cfg: TrainConfig,
+    /// Produces one training batch for `(task, step)`.
+    #[allow(clippy::type_complexity)]
+    batches: Arc<dyn Fn(&str, usize, &mut Pcg64) -> OwnedBatch + Send + Sync>,
+}
+
+impl TrainerRefitter {
+    #[allow(clippy::type_complexity)]
+    pub fn new(
+        manifest: Manifest,
+        step_graph: &str,
+        cfg: TrainConfig,
+        batches: Arc<dyn Fn(&str, usize, &mut Pcg64) -> OwnedBatch + Send + Sync>,
+    ) -> TrainerRefitter {
+        TrainerRefitter {
+            manifest,
+            step_graph: step_graph.to_string(),
+            cfg,
+            batches,
+        }
+    }
+}
+
+impl Refitter for TrainerRefitter {
+    fn refit(
+        &self,
+        task: &str,
+        current: &ParamStore,
+        drifted_meta: &ParamStore,
+        step_budget: usize,
+    ) -> Result<Refit> {
+        let engine = crate::runtime::Engine::new(self.manifest.clone())?;
+        let mut trainer = Trainer::new(
+            &engine,
+            &self.step_graph,
+            drifted_meta.clone(),
+            current.clone(),
+            self.cfg.clone(),
+        )?;
+        let task_name = task.to_string();
+        let batches = self.batches.clone();
+        trainer.run_steps(step_budget, move |step, rng| batches(&task_name, step, rng))?;
+        Ok(Refit {
+            params: trainer.train.clone(),
+            steps: trainer.step_idx,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Configuration
+// ---------------------------------------------------------------------------
+
+/// Refresh policy knobs, passed to `ServerBuilder::refresh`.
+#[derive(Clone)]
+pub struct RefreshConfig {
+    /// Default predicted-decay tolerance (fraction; refresh fires when
+    /// the prediction crosses it).
+    pub tolerance: f64,
+    /// Per-task tolerance overrides.
+    per_task: BTreeMap<String, f64>,
+    /// Background evaluation cadence (wall clock; decisions themselves
+    /// read the pool clock).
+    pub check_every: Duration,
+    /// Modeled drift seconds per clock second (1.0 = real time; demos
+    /// and benches accelerate).
+    pub time_scale: f64,
+    /// Hard cap on optimizer steps per refit.
+    pub step_budget: usize,
+    pub decay: DecayModel,
+    pub refitter: Arc<dyn Refitter>,
+}
+
+impl RefreshConfig {
+    pub fn new(decay: DecayModel, refitter: Arc<dyn Refitter>) -> RefreshConfig {
+        RefreshConfig {
+            tolerance: 0.05,
+            per_task: BTreeMap::new(),
+            check_every: Duration::from_secs(1),
+            time_scale: 1.0,
+            step_budget: 50,
+            decay,
+            refitter,
+        }
+    }
+
+    pub fn tolerance(mut self, tol: f64) -> Self {
+        self.tolerance = tol;
+        self
+    }
+
+    /// Override the tolerance for one task.
+    pub fn task_tolerance(mut self, task: &str, tol: f64) -> Self {
+        self.per_task.insert(task.to_string(), tol);
+        self
+    }
+
+    pub fn check_every(mut self, d: Duration) -> Self {
+        self.check_every = d;
+        self
+    }
+
+    pub fn time_scale(mut self, scale: f64) -> Self {
+        self.time_scale = scale.max(f64::MIN_POSITIVE);
+        self
+    }
+
+    pub fn step_budget(mut self, steps: usize) -> Self {
+        self.step_budget = steps.max(1);
+        self
+    }
+
+    pub fn tolerance_for(&self, task: &str) -> f64 {
+        self.per_task.get(task).copied().unwrap_or(self.tolerance)
+    }
+
+    /// Reject tolerances at or below the decay model's age-0 floor.
+    ///
+    /// A [`DecayModel::Sampled`] floor is the programming noise, which
+    /// never decays away — a tolerance under it would make every tick
+    /// refit (with [`TrainerRefitter`]: a fresh engine build plus
+    /// training steps every `check_every`, forever). The builder calls
+    /// this before spawning the refresh worker.
+    pub fn validate(&self) -> std::result::Result<(), String> {
+        let floor = self.decay.predicted_decay(0.0);
+        let mut tolerances: Vec<(&str, f64)> = vec![("default", self.tolerance)];
+        tolerances.extend(self.per_task.iter().map(|(t, tol)| (t.as_str(), *tol)));
+        for (task, tol) in tolerances {
+            if tol <= floor {
+                return Err(format!(
+                    "refresh tolerance {tol} for '{task}' is at or below the decay \
+                     model's age-0 floor {floor}: every tick would refit forever"
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+// manual Debug: the refitter is an opaque trait object
+impl fmt::Debug for RefreshConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("RefreshConfig")
+            .field("tolerance", &self.tolerance)
+            .field("per_task", &self.per_task)
+            .field("check_every", &self.check_every)
+            .field("time_scale", &self.time_scale)
+            .field("step_budget", &self.step_budget)
+            .field("decay", &self.decay)
+            .finish_non_exhaustive()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Policy
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+struct TrackedTask {
+    deployed_at: Instant,
+    version: u64,
+    /// Modeled tolerance-crossing instant, cached at track time so the
+    /// per-tick due check is O(1) — for a Sampled model an on-demand
+    /// prediction would be a full Monte-Carlo read of every programmed
+    /// tensor, every tick. `None` = never decays past tolerance.
+    due_at: Option<Instant>,
+}
+
+/// Tracks per-task deployment age on the pool clock and decides when
+/// each task's predicted decay has crossed its tolerance.
+pub struct RefreshPolicy {
+    cfg: RefreshConfig,
+    tracked: BTreeMap<String, TrackedTask>,
+}
+
+impl RefreshPolicy {
+    pub fn new(cfg: RefreshConfig) -> RefreshPolicy {
+        RefreshPolicy {
+            cfg,
+            tracked: BTreeMap::new(),
+        }
+    }
+
+    pub fn config(&self) -> &RefreshConfig {
+        &self.cfg
+    }
+
+    /// Start (or restart) the drift clock for `task` at `now` —
+    /// deployment onto the substrate at registry `version`. The modeled
+    /// tolerance-crossing instant is computed here, once per
+    /// deployment (for a Sampled model this is the expensive part).
+    pub fn track(&mut self, task: &str, now: Instant, version: u64) {
+        let age = self.cfg.decay.trigger_age(self.cfg.tolerance_for(task));
+        let scaled = age / self.cfg.time_scale;
+        let due_at = (scaled.is_finite() && scaled < MAX_DUE_SECS)
+            .then(|| now + Duration::from_secs_f64(scaled));
+        self.tracked.insert(
+            task.to_string(),
+            TrackedTask {
+                deployed_at: now,
+                version,
+                due_at,
+            },
+        );
+    }
+
+    pub fn forget(&mut self, task: &str) {
+        self.tracked.remove(task);
+    }
+
+    pub fn tasks(&self) -> Vec<String> {
+        self.tracked.keys().cloned().collect()
+    }
+
+    /// Registry version this policy last saw for `task`.
+    pub fn tracked_version(&self, task: &str) -> Option<u64> {
+        self.tracked.get(task).map(|t| t.version)
+    }
+
+    /// Modeled drift age of `task` at `now`, in (scaled) seconds.
+    pub fn drift_age_secs(&self, task: &str, now: Instant) -> Option<f64> {
+        self.tracked.get(task).map(|t| {
+            now.saturating_duration_since(t.deployed_at).as_secs_f64() * self.cfg.time_scale
+        })
+    }
+
+    /// Predicted decay of `task` at `now`.
+    pub fn predicted_decay(&self, task: &str, now: Instant) -> Option<f64> {
+        self.drift_age_secs(task, now)
+            .map(|age| self.cfg.decay.predicted_decay(age))
+    }
+
+    /// Modeled drift age (scaled seconds) at which `task` crosses its
+    /// tolerance; `None` when untracked or when the model never decays
+    /// that far.
+    pub fn trigger_age_secs(&self, task: &str) -> Option<f64> {
+        if !self.tracked.contains_key(task) {
+            return None;
+        }
+        let age = self.cfg.decay.trigger_age(self.cfg.tolerance_for(task));
+        age.is_finite().then_some(age)
+    }
+
+    /// Modeled pool-clock instant at which `task` crosses its tolerance.
+    pub fn trigger_at(&self, task: &str) -> Option<Instant> {
+        self.tracked.get(task)?.due_at
+    }
+
+    /// Tasks whose modeled decay has crossed tolerance at `now` — an
+    /// O(tasks) comparison against the cached crossing instants, no
+    /// decay evaluation on the tick path.
+    pub fn due(&self, now: Instant) -> Vec<String> {
+        self.tracked
+            .iter()
+            .filter(|(_, t)| t.due_at.map(|d| now >= d).unwrap_or(false))
+            .map(|(task, _)| task.clone())
+            .collect()
+    }
+
+    fn on_refreshed(&mut self, task: &str, now: Instant, version: u64) {
+        self.track(task, now, version);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Runner
+// ---------------------------------------------------------------------------
+
+/// One completed refresh cycle, as recorded in the event log.
+#[derive(Clone, Debug)]
+pub struct RefreshEvent {
+    pub task: String,
+    /// Modeled drift age (seconds) at trigger time.
+    pub drift_age_secs: f64,
+    /// Predicted decay right before the refresh.
+    pub pre_decay: f64,
+    /// Predicted decay immediately after the hot-swap (fresh age).
+    pub post_decay: f64,
+    /// Optimizer steps the refit spent.
+    pub steps: usize,
+    /// Registry version the hot-swap installed.
+    pub version: u64,
+    /// Pool-clock instant the refresh ran at.
+    pub at: Instant,
+}
+
+/// Executes the predict → refit → hot-swap cycle over a registry.
+pub struct RefreshRunner {
+    policy: RefreshPolicy,
+    registry: SharedRegistry,
+    /// Clean meta store the pool serves with. The sampled decay model
+    /// reads the drifted substrate directly; the analytic model
+    /// synthesizes drifted weights from this store
+    /// ([`analytic_drifted_meta`]).
+    meta: Arc<ParamStore>,
+    metrics: Arc<Metrics>,
+    events: Vec<RefreshEvent>,
+    rng: Pcg64,
+}
+
+impl RefreshRunner {
+    pub fn new(
+        cfg: RefreshConfig,
+        registry: SharedRegistry,
+        meta: Arc<ParamStore>,
+        metrics: Arc<Metrics>,
+    ) -> RefreshRunner {
+        RefreshRunner {
+            policy: RefreshPolicy::new(cfg),
+            registry,
+            meta,
+            metrics,
+            events: Vec::new(),
+            rng: Pcg64::with_stream(0x5e_f7e5, 0xd71f7),
+        }
+    }
+
+    /// Track every task currently deployed in the registry as "deployed
+    /// at `now`" (the builder calls this at pool start).
+    pub fn track_deployed(&mut self, now: Instant) {
+        for task in self.registry.tasks() {
+            if let Some(v) = self.registry.version(&task) {
+                self.policy.track(&task, now, v);
+            }
+        }
+    }
+
+    pub fn policy(&self) -> &RefreshPolicy {
+        &self.policy
+    }
+
+    pub fn policy_mut(&mut self) -> &mut RefreshPolicy {
+        &mut self.policy
+    }
+
+    pub fn events(&self) -> &[RefreshEvent] {
+        &self.events
+    }
+
+    /// Reconcile the policy with the live registry: start tracking
+    /// tasks deployed after the pool came up, re-anchor tasks whose
+    /// version changed through a manual deploy, and forget undeployed
+    /// ones. Anchoring is conservative — at `now`, so a task's drift
+    /// age is only ever under-estimated, by at most one check interval.
+    fn reconcile(&mut self, now: Instant) {
+        for task in self.registry.tasks() {
+            let live = self.registry.version(&task);
+            if let Some(v) = live {
+                if self.policy.tracked_version(&task) != Some(v) {
+                    self.policy.track(&task, now, v);
+                }
+            }
+        }
+        for task in self.policy.tasks() {
+            if !self.registry.contains(&task) {
+                self.policy.forget(&task);
+            }
+        }
+    }
+
+    /// Evaluate the policy at `now` and run every due refresh to
+    /// completion. Reconciles with the registry first, so live-deployed
+    /// tasks join the drift watch and manual redeploys reset their
+    /// task's drift clock within one check interval. Returns the
+    /// refreshes performed this tick. Errors from a refit are counted
+    /// in `Metrics::refresh_errors` (separate from the pool's
+    /// per-request `errors`) and retried on the next tick; a refresh
+    /// that lost a version race against a concurrent manual deploy is
+    /// dropped (the manual deploy already reset that task's drift
+    /// clock to the newer adapter).
+    pub fn tick(&mut self, now: Instant) -> Vec<RefreshEvent> {
+        self.reconcile(now);
+        let mut out = Vec::new();
+        for task in self.policy.due(now) {
+            match self.refresh_one(&task, now) {
+                Ok(Some(ev)) => out.push(ev),
+                Ok(None) => {}
+                Err(e) => {
+                    self.metrics.refresh_errors.fetch_add(1, Ordering::Relaxed);
+                    eprintln!("[refresh] task '{task}': {e:#}");
+                }
+            }
+        }
+        out
+    }
+
+    fn refresh_one(&mut self, task: &str, now: Instant) -> Result<Option<RefreshEvent>> {
+        let Some((current, seen_version)) = self.registry.snapshot(task) else {
+            // undeployed mid-flight: stop watching it
+            self.policy.forget(task);
+            return Ok(None);
+        };
+        // a manual redeploy since the last tick reset the task's real
+        // drift exposure: re-anchor the drift clock on it (conservatively
+        // at `now` — age can only be under-estimated) and skip the refit
+        if self.policy.tracked_version(task) != Some(seen_version) {
+            self.policy.track(task, now, seen_version);
+            return Ok(None);
+        }
+        let age = self.policy.drift_age_secs(task, now).unwrap_or(0.0);
+        let pre = self.policy.cfg.decay.predicted_decay(age);
+
+        // the substrate the refit trains against: the drifted meta-weights
+        let drifted = match &self.policy.cfg.decay {
+            DecayModel::Sampled { deployment, .. } => deployment.meta_at(age, true, &mut self.rng),
+            DecayModel::Analytic { model, g_rel } => {
+                analytic_drifted_meta(&self.meta, model, *g_rel, age, &mut self.rng)
+            }
+        };
+        let refit = self
+            .policy
+            .cfg
+            .refitter
+            .refit(task, &current, &drifted, self.policy.cfg.step_budget)?;
+
+        let Some(version) = self
+            .registry
+            .deploy_if_version(task, refit.params, seen_version)
+        else {
+            // a manual deploy won the race mid-refit: adopt its version
+            // and restart the drift clock from it
+            if let Some(v) = self.registry.version(task) {
+                self.policy.track(task, now, v);
+            }
+            return Ok(None);
+        };
+        self.policy.on_refreshed(task, now, version);
+        let post = self.policy.predicted_decay(task, now).unwrap_or(0.0);
+        let ev = RefreshEvent {
+            task: task.to_string(),
+            drift_age_secs: age,
+            pre_decay: pre,
+            post_decay: post,
+            steps: refit.steps,
+            version,
+            at: now,
+        };
+        self.metrics.refreshes.fetch_add(1, Ordering::Relaxed);
+        self.metrics
+            .refresh_steps
+            .fetch_add(refit.steps as u64, Ordering::Relaxed);
+        self.events.push(ev.clone());
+        Ok(Some(ev))
+    }
+}
+
+/// Synthesize post-GDC drifted meta-weights under the analytic model:
+/// every mappable weight is scaled by `exp(−(ν_i−μ_ν)·ln((t+t₀)/t₀))`
+/// with `ν_i − μ_ν ~ N(0, σ_ν)` — the device-to-device dispersion GDC
+/// cannot remove, which is exactly the error the refit must absorb.
+/// (The sampled model reads the real programmed substrate instead.)
+fn analytic_drifted_meta(
+    meta: &ParamStore,
+    model: &PcmModel,
+    g_rel: f32,
+    age_secs: f64,
+    rng: &mut Pcg64,
+) -> ParamStore {
+    let mut out = meta.clone();
+    if age_secs <= 0.0 || model.noise_scale == 0.0 {
+        return out;
+    }
+    let log_ratio = ((age_secs + model.t0) / model.t0).ln() as f32;
+    let sigma = compensation::drift_dispersion(model, g_rel) as f32;
+    for t in out.tensors.iter_mut() {
+        if crate::aimc::tile::is_mappable(&t.name) {
+            for w in t.data.iter_mut() {
+                *w *= (-sigma * rng.normal_f32() * log_ratio).exp();
+            }
+        }
+    }
+    out
+}
+
+/// Spawn the background refresh worker: evaluates `runner` every
+/// `check_every` until `stop` fires. The wait is wall-clock (so
+/// shutdown is prompt even under a [`VirtualClock`]); the policy
+/// decisions read the pool `clock`.
+///
+/// [`VirtualClock`]: super::sched::VirtualClock
+pub(crate) fn spawn_refresh_worker(
+    runner: Arc<std::sync::Mutex<RefreshRunner>>,
+    clock: Arc<dyn Clock>,
+    check_every: Duration,
+) -> std::io::Result<(
+    std::sync::mpsc::Sender<()>,
+    std::thread::JoinHandle<()>,
+)> {
+    use std::sync::mpsc::{channel, RecvTimeoutError};
+    let (stop_tx, stop_rx) = channel::<()>();
+    let join = std::thread::Builder::new()
+        .name("ahwa-refresh".to_string())
+        .spawn(move || loop {
+            match stop_rx.recv_timeout(check_every) {
+                Ok(()) | Err(RecvTimeoutError::Disconnected) => break,
+                Err(RecvTimeoutError::Timeout) => {
+                    runner.lock().unwrap().tick(clock.now());
+                }
+            }
+        })?;
+    Ok((stop_tx, join))
+}
+
+// ---------------------------------------------------------------------------
+// Tests (hermetic — no PJRT, no sleeps: everything on the virtual clock)
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::Tensor;
+    use crate::serve::sched::VirtualClock;
+
+    fn adapter(tag: f32) -> ParamStore {
+        ParamStore::from_tensors(vec![Tensor {
+            name: "lora.a".to_string(),
+            shape: vec![1],
+            data: vec![tag],
+        }])
+    }
+
+    fn noop_refitter() -> Arc<dyn Refitter> {
+        Arc::new(FnRefitter(
+            |_: &str, _: &ParamStore, _: &ParamStore, budget: usize| -> Result<Refit> {
+                Ok(Refit {
+                    params: adapter(99.0),
+                    steps: budget,
+                })
+            },
+        ))
+    }
+
+    fn analytic_cfg() -> RefreshConfig {
+        RefreshConfig::new(DecayModel::analytic(PcmModel::default()), noop_refitter())
+            .tolerance(0.05)
+            .step_budget(16)
+    }
+
+    #[test]
+    fn config_builder_and_per_task_tolerance() {
+        let cfg = analytic_cfg()
+            .task_tolerance("fragile", 0.01)
+            .time_scale(100.0)
+            .check_every(Duration::from_millis(10));
+        assert_eq!(cfg.tolerance_for("fragile"), 0.01);
+        assert_eq!(cfg.tolerance_for("anything-else"), 0.05);
+        assert_eq!(cfg.time_scale, 100.0);
+        assert!(format!("{cfg:?}").contains("tolerance"));
+    }
+
+    #[test]
+    fn policy_predicts_trigger_time_exactly() {
+        let clock = VirtualClock::new();
+        let mut p = RefreshPolicy::new(analytic_cfg());
+        let t0 = clock.now();
+        p.track("t", t0, 1);
+
+        let age_star = p.trigger_age_secs("t").unwrap();
+        assert!(age_star > 0.0 && age_star.is_finite());
+        // closed-form round trip: decay at the trigger age is the tolerance
+        let model = PcmModel::default();
+        assert!(
+            (compensation::residual_decay(&model, 0.5, age_star) - 0.05).abs() < 1e-9
+        );
+        assert_eq!(p.trigger_at("t").unwrap(), t0 + Duration::from_secs_f64(age_star));
+
+        // just before: not due; just after: due
+        clock.advance(Duration::from_secs_f64(age_star * 0.99));
+        assert!(p.due(clock.now()).is_empty());
+        clock.advance(Duration::from_secs_f64(age_star * 0.02));
+        assert_eq!(p.due(clock.now()), vec!["t".to_string()]);
+        assert!(p.predicted_decay("t", clock.now()).unwrap() >= 0.05);
+    }
+
+    #[test]
+    fn time_scale_compresses_the_trigger() {
+        let clock = VirtualClock::new();
+        let mut p = RefreshPolicy::new(analytic_cfg().time_scale(1000.0));
+        p.track("t", clock.now(), 1);
+        let age_star = p.trigger_age_secs("t").unwrap();
+        // the same modeled age arrives 1000x sooner on the clock
+        clock.advance(Duration::from_secs_f64(age_star / 1000.0 * 1.01));
+        assert_eq!(p.due(clock.now()), vec!["t".to_string()]);
+    }
+
+    #[test]
+    fn runner_refreshes_once_and_resets_the_drift_clock() {
+        let clock = VirtualClock::new();
+        let registry = SharedRegistry::new();
+        registry.deploy("t", adapter(1.0));
+        let metrics = Arc::new(Metrics::default());
+        let mut runner = RefreshRunner::new(
+            analytic_cfg(),
+            registry.clone(),
+            Arc::new(ParamStore::default()),
+            metrics.clone(),
+        );
+        runner.track_deployed(clock.now());
+        let age_star = runner.policy().trigger_age_secs("t").unwrap();
+
+        clock.advance(Duration::from_secs_f64(age_star * 0.9));
+        assert!(runner.tick(clock.now()).is_empty(), "below tolerance: no refresh");
+        assert_eq!(registry.version("t"), Some(1));
+
+        clock.advance(Duration::from_secs_f64(age_star * 0.2));
+        let evs = runner.tick(clock.now());
+        assert_eq!(evs.len(), 1);
+        let ev = &evs[0];
+        assert_eq!(ev.task, "t");
+        assert_eq!(ev.version, 2);
+        assert!(ev.pre_decay >= 0.05);
+        assert!(ev.post_decay < 0.05, "fresh deployment is below tolerance");
+        assert_eq!(ev.steps, 16);
+        assert!((ev.drift_age_secs - age_star * 1.1).abs() < age_star * 0.01);
+        assert_eq!(registry.version("t"), Some(2));
+        assert_eq!(registry.get("t").unwrap().tensors[0].data[0], 99.0);
+
+        // age reset: an immediate second tick does nothing
+        assert!(runner.tick(clock.now()).is_empty());
+        assert_eq!(registry.version("t"), Some(2), "version bumps exactly once");
+        assert_eq!(metrics.refreshes.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.refresh_steps.load(Ordering::Relaxed), 16);
+        assert_eq!(runner.events().len(), 1);
+    }
+
+    #[test]
+    fn refresh_loses_version_race_gracefully() {
+        let clock = VirtualClock::new();
+        let registry = SharedRegistry::new();
+        registry.deploy("t", adapter(1.0));
+        // refitter that simulates a concurrent manual redeploy mid-refit
+        let racing = {
+            let registry = registry.clone();
+            Arc::new(FnRefitter(
+                move |_: &str, _: &ParamStore, _: &ParamStore, budget: usize| -> Result<Refit> {
+                    registry.deploy("t", adapter(7.0));
+                    Ok(Refit {
+                        params: adapter(99.0),
+                        steps: budget,
+                    })
+                },
+            )) as Arc<dyn Refitter>
+        };
+        let cfg = RefreshConfig::new(DecayModel::analytic(PcmModel::default()), racing)
+            .tolerance(0.05);
+        let metrics = Arc::new(Metrics::default());
+        let mut runner = RefreshRunner::new(
+            cfg,
+            registry.clone(),
+            Arc::new(ParamStore::default()),
+            metrics.clone(),
+        );
+        runner.track_deployed(clock.now());
+        let age_star = runner.policy().trigger_age_secs("t").unwrap();
+        clock.advance(Duration::from_secs_f64(age_star * 1.1));
+
+        let evs = runner.tick(clock.now());
+        assert!(evs.is_empty(), "the lost race must not produce an event");
+        // the manual deploy's adapter survives; the stale refit is dropped
+        assert_eq!(registry.version("t"), Some(2));
+        assert_eq!(registry.get("t").unwrap().tensors[0].data[0], 7.0);
+        assert_eq!(metrics.refreshes.load(Ordering::Relaxed), 0);
+        // and the policy re-anchored on the winner's version
+        assert_eq!(runner.policy().tracked_version("t"), Some(2));
+        assert!(runner.tick(clock.now()).is_empty(), "drift clock restarted");
+    }
+
+    #[test]
+    fn undeployed_tasks_are_forgotten() {
+        let clock = VirtualClock::new();
+        let registry = SharedRegistry::new();
+        registry.deploy("t", adapter(1.0));
+        let metrics = Arc::new(Metrics::default());
+        let mut runner = RefreshRunner::new(
+            analytic_cfg(),
+            registry.clone(),
+            Arc::new(ParamStore::default()),
+            metrics,
+        );
+        runner.track_deployed(clock.now());
+        // simulate an undeploy by pointing the runner at a fresh registry
+        runner.registry = SharedRegistry::new();
+        let age_star = runner.policy().trigger_age_secs("t").unwrap();
+        clock.advance(Duration::from_secs_f64(age_star * 1.1));
+        assert!(runner.tick(clock.now()).is_empty());
+        assert!(runner.policy().tasks().is_empty(), "vanished task dropped");
+    }
+
+    #[test]
+    fn failed_refits_count_errors_and_retry() {
+        let clock = VirtualClock::new();
+        let registry = SharedRegistry::new();
+        registry.deploy("t", adapter(1.0));
+        let failing = Arc::new(FnRefitter(
+            |_: &str, _: &ParamStore, _: &ParamStore, _: usize| -> Result<Refit> {
+                anyhow::bail!("engine unavailable")
+            },
+        )) as Arc<dyn Refitter>;
+        let cfg =
+            RefreshConfig::new(DecayModel::analytic(PcmModel::default()), failing).tolerance(0.05);
+        let metrics = Arc::new(Metrics::default());
+        let mut runner = RefreshRunner::new(
+            cfg,
+            registry.clone(),
+            Arc::new(ParamStore::default()),
+            metrics.clone(),
+        );
+        runner.track_deployed(clock.now());
+        let age_star = runner.policy().trigger_age_secs("t").unwrap();
+        clock.advance(Duration::from_secs_f64(age_star * 1.1));
+        assert!(runner.tick(clock.now()).is_empty());
+        assert_eq!(metrics.refresh_errors.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.errors.load(Ordering::Relaxed), 0, "request errors untouched");
+        assert_eq!(registry.version("t"), Some(1), "no swap on failure");
+        // still due: the next tick retries
+        assert!(runner.tick(clock.now()).is_empty());
+        assert_eq!(metrics.refresh_errors.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn manual_redeploy_between_ticks_resets_the_drift_clock() {
+        let clock = VirtualClock::new();
+        let registry = SharedRegistry::new();
+        registry.deploy("t", adapter(1.0));
+        let metrics = Arc::new(Metrics::default());
+        let mut runner = RefreshRunner::new(
+            analytic_cfg(),
+            registry.clone(),
+            Arc::new(ParamStore::default()),
+            metrics.clone(),
+        );
+        runner.track_deployed(clock.now());
+        let age_star = runner.policy().trigger_age_secs("t").unwrap();
+
+        // an operator hot-swaps a fresh adapter BETWEEN ticks...
+        clock.advance(Duration::from_secs_f64(age_star * 0.5));
+        registry.deploy("t", adapter(5.0));
+
+        // ...and the very next (not-yet-due) tick re-anchors on it, so
+        // the new adapter's drift age never runs on the stale clock
+        clock.advance(Duration::from_secs_f64(age_star * 0.1));
+        assert!(runner.tick(clock.now()).is_empty());
+        assert_eq!(runner.policy().tracked_version("t"), Some(2));
+
+        // at the ORIGINAL anchor's crossing time nothing is due anymore
+        clock.advance(Duration::from_secs_f64(age_star * 0.5));
+        assert!(runner.tick(clock.now()).is_empty(), "stale age must not refit");
+        assert_eq!(registry.version("t"), Some(2), "operator's adapter survives");
+        assert_eq!(registry.get("t").unwrap().tensors[0].data[0], 5.0);
+        assert_eq!(metrics.refreshes.load(Ordering::Relaxed), 0);
+
+        // from the re-anchored clock the cycle works normally again
+        clock.advance(Duration::from_secs_f64(age_star * 1.1));
+        let evs = runner.tick(clock.now());
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].version, 3);
+    }
+
+    #[test]
+    fn live_deployed_tasks_join_the_drift_watch() {
+        let clock = VirtualClock::new();
+        let registry = SharedRegistry::new();
+        let metrics = Arc::new(Metrics::default());
+        let mut runner = RefreshRunner::new(
+            analytic_cfg(),
+            registry.clone(),
+            Arc::new(ParamStore::default()),
+            metrics,
+        );
+        runner.track_deployed(clock.now());
+        assert!(runner.policy().tasks().is_empty());
+
+        // deployed AFTER the pool came up: the next tick starts its clock
+        registry.deploy("late", adapter(1.0));
+        assert!(runner.tick(clock.now()).is_empty());
+        assert_eq!(runner.policy().tracked_version("late"), Some(1));
+
+        let age_star = runner.policy().trigger_age_secs("late").unwrap();
+        clock.advance(Duration::from_secs_f64(age_star * 1.01));
+        let evs = runner.tick(clock.now());
+        assert_eq!(evs.len(), 1, "live-deployed tasks refresh like any other");
+        assert_eq!(evs[0].version, 2);
+    }
+
+    #[test]
+    fn config_validation_rejects_tolerances_at_or_below_the_floor() {
+        assert!(analytic_cfg().validate().is_ok());
+        // the analytic floor is 0: a zero tolerance would always be due
+        assert!(analytic_cfg().tolerance(0.0).validate().is_err());
+        assert!(analytic_cfg().task_tolerance("t", 0.0).validate().is_err());
+    }
+
+    #[test]
+    fn analytic_drifted_meta_perturbs_only_mappable_tensors() {
+        let mut rng = Pcg64::new(31);
+        let mut data = vec![0f32; 64];
+        rng.fill_normal(&mut data, 0.0, 0.1);
+        let meta = ParamStore::from_tensors(vec![
+            Tensor {
+                name: "layers.0.wq".to_string(), // mappable
+                shape: vec![8, 8],
+                data: data.clone(),
+            },
+            Tensor {
+                name: "layers.0.ln_scale".to_string(), // digital
+                shape: vec![8, 8],
+                data: data.clone(),
+            },
+        ]);
+        let model = PcmModel::default();
+        // age 0: identity
+        let at0 = analytic_drifted_meta(&meta, &model, 0.5, 0.0, &mut Pcg64::new(32));
+        assert_eq!(at0.tensors[0].data, meta.tensors[0].data);
+        // a year of drift: mappable weights move, digital ones do not
+        let year = analytic_drifted_meta(&meta, &model, 0.5, 31_536_000.0, &mut Pcg64::new(33));
+        let wq = year.get("layers.0.wq").unwrap();
+        let ln = year.get("layers.0.ln_scale").unwrap();
+        assert!(
+            wq.data.iter().zip(&data).any(|(a, b)| (a - b).abs() > 1e-6),
+            "mappable tensor must drift"
+        );
+        assert_eq!(ln.data, data, "digital tensors never touch the substrate");
+        // the ideal substrate never drifts anything
+        let ideal = analytic_drifted_meta(&meta, &PcmModel::ideal(), 0.5, 31_536_000.0, &mut rng);
+        assert_eq!(ideal.tensors[0].data, meta.tensors[0].data);
+    }
+}

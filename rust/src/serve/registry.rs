@@ -29,6 +29,20 @@ impl SharedRegistry {
         self.0.write().unwrap().deploy(task, params)
     }
 
+    /// Compare-and-swap deploy: install only if the live version is
+    /// still `expected` (0 = not deployed). Returns the new monotone
+    /// version, or `None` when a concurrent deploy won — used by the
+    /// drift-refresh worker so a refit computed against a stale adapter
+    /// never clobbers a newer manual deployment.
+    pub fn deploy_if_version(
+        &self,
+        task: &str,
+        params: ParamStore,
+        expected: u64,
+    ) -> Option<u64> {
+        self.0.write().unwrap().deploy_if_version(task, params, expected)
+    }
+
     /// O(pointer) snapshot of the current adapter set. One read path:
     /// this is [`SharedRegistry::snapshot`] minus the version.
     pub fn get(&self, task: &str) -> Result<Arc<ParamStore>> {
@@ -91,6 +105,16 @@ mod tests {
         reg.deploy("t", p());
         assert_eq!(reg.version("t"), Some(2));
         assert_eq!(reg.version("missing"), None);
+    }
+
+    #[test]
+    fn cas_deploy_refuses_stale_expectations() {
+        let reg = SharedRegistry::new();
+        let p = || ParamStore::from_tensors(vec![Tensor::zeros("a", &[2])]);
+        assert_eq!(reg.deploy_if_version("t", p(), 0), Some(1));
+        reg.deploy("t", p()); // concurrent manual redeploy -> v2
+        assert_eq!(reg.deploy_if_version("t", p(), 1), None, "stale CAS must lose");
+        assert_eq!(reg.deploy_if_version("t", p(), 2), Some(3));
     }
 
     #[test]

@@ -6,7 +6,9 @@
 //! and applies bounded admission ([`super::api::ServeError::Overloaded`])
 //! instead of growing an unbounded queue.
 
-#![allow(deprecated)]
+// NOTE: no module-wide `allow(deprecated)` here — the shim itself only
+// *defines* deprecated items, so callers get their `#[deprecated]`
+// warnings while this module stays clean under `-D warnings`.
 
 pub use super::api::{Client, Pending};
 

@@ -34,7 +34,10 @@
 //!
 //! All timing flows through the [`Clock`] trait so the scheduler, the
 //! [`super::batcher::Batcher`], and the worker loop are testable on a
-//! [`VirtualClock`] with no wall-clock sleeps.
+//! [`VirtualClock`] with no wall-clock sleeps. The drift-refresh policy
+//! ([`super::refresh`]) reuses the same clock for its deployment-age
+//! tracking, so trigger→refit→swap cycles are virtual-clock-testable
+//! end to end.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;

@@ -12,7 +12,10 @@
 //!   worker leaked the whole batch and left `submit_wave` blocked on
 //!   `rx.recv()` forever).
 
-#![allow(deprecated)]
+// NOTE: no module-wide `allow(deprecated)` — only the two items that
+// must *reference* the deprecated `ServeConfig` carry a targeted
+// `#[allow(deprecated)]`, so the shim compiles clean under
+// `-D warnings` while every external use still warns.
 
 use std::time::Duration;
 
@@ -35,6 +38,7 @@ pub struct ServeConfig {
     pub hw: [f32; 5],
 }
 
+#[allow(deprecated)] // shim impl of the deprecated config type itself
 impl ServeConfig {
     pub fn new(variant: &str) -> ServeConfig {
         ServeConfig {
@@ -56,6 +60,7 @@ impl ServeConfig {
 
 /// Deprecated: single-worker pool via the old entry point.
 #[deprecated(since = "0.2.0", note = "use serve::api::ServerBuilder::build")]
+#[allow(deprecated)] // the signature must keep naming the deprecated ServeConfig
 pub fn start(
     cfg: ServeConfig,
     meta: ParamStore,

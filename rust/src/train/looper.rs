@@ -43,6 +43,9 @@ pub struct Trainer {
     pub step_idx: usize,
     pub losses: Vec<f32>,
     rng: Pcg64,
+    /// Batch-sampling stream — owned by the trainer so consecutive
+    /// `run_steps` calls continue it instead of replaying it.
+    batch_rng: Pcg64,
 }
 
 impl Trainer {
@@ -64,6 +67,7 @@ impl Trainer {
         let m = ParamStore::zeros_like_role(&graph.spec, Role::M);
         let v = ParamStore::zeros_like_role(&graph.spec, Role::V);
         let rng = Pcg64::with_stream(cfg.seed, 0x7a41);
+        let batch_rng = Pcg64::with_stream(cfg.seed, 0xba7c);
         Ok(Trainer {
             graph,
             meta,
@@ -74,6 +78,7 @@ impl Trainer {
             step_idx: 0,
             losses: Vec::new(),
             rng,
+            batch_rng,
         })
     }
 
@@ -104,22 +109,36 @@ impl Trainer {
 
     /// Run the configured number of steps, pulling batches from
     /// `next_batch(step, rng)`. Returns the loss curve.
-    pub fn run<F>(&mut self, mut next_batch: F) -> Result<Vec<f32>>
+    pub fn run<F>(&mut self, next_batch: F) -> Result<Vec<f32>>
     where
         F: FnMut(usize, &mut Pcg64) -> OwnedBatch,
     {
-        let mut batch_rng = Pcg64::with_stream(self.cfg.seed, 0xba7c);
-        let steps = self.cfg.steps;
+        self.run_steps(self.cfg.steps, next_batch)
+    }
+
+    /// Run exactly `steps` further optimizer steps (bounded-budget
+    /// training: adapter refits in `serve::refresh` cap their work this
+    /// way regardless of what `cfg.steps` says). The batch stream and
+    /// step counter live on the trainer, so consecutive calls compose:
+    /// a second `run_steps` continues with fresh batches at the next
+    /// global step instead of replaying the first call's. Returns the
+    /// full loss curve accumulated so far.
+    pub fn run_steps<F>(&mut self, steps: usize, mut next_batch: F) -> Result<Vec<f32>>
+    where
+        F: FnMut(usize, &mut Pcg64) -> OwnedBatch,
+    {
+        let total = self.step_idx + steps;
         let t0 = std::time::Instant::now();
         for s in 0..steps {
-            let batch = next_batch(s, &mut batch_rng);
+            let step = self.step_idx;
+            let batch = next_batch(step, &mut self.batch_rng);
             let loss = self.step(&batch.args())?;
             if !loss.is_finite() {
                 // collapse detection: the LR/noise ablations rely on this
-                eprintln!("[train] step {s}: loss diverged ({loss}); stopping");
+                eprintln!("[train] step {step}: loss diverged ({loss}); stopping");
                 break;
             }
-            if self.cfg.log_every > 0 && (s + 1) % self.cfg.log_every == 0 {
+            if self.cfg.log_every > 0 && (step + 1) % self.cfg.log_every == 0 {
                 let avg: f32 =
                     self.losses[self.losses.len().saturating_sub(self.cfg.log_every)..]
                         .iter()
@@ -127,8 +146,8 @@ impl Trainer {
                         / self.cfg.log_every.min(self.losses.len()) as f32;
                 eprintln!(
                     "[train] step {}/{} loss {:.4} ({:.0} ms/step)",
-                    s + 1,
-                    steps,
+                    step + 1,
+                    total,
                     avg,
                     t0.elapsed().as_millis() as f64 / (s + 1) as f64
                 );

@@ -1,15 +1,23 @@
 //! Serving-stack integration: client → sharded engine pool (PJRT) →
 //! typed responses, with backpressure, injected batch failures, adapter
-//! hot-swaps mid-stream, and graceful drain. Needs artifacts.
+//! hot-swaps mid-stream, and graceful drain. The PJRT-backed tests need
+//! artifacts and self-skip without them; the drift-refresh and registry
+//! race tests are hermetic (virtual clock, zero real sleeps).
 
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
 
 use ahwa_lora::config::manifest::{default_artifacts_dir, Manifest};
 use ahwa_lora::data::glue::{GlueGen, GlueTask};
 use ahwa_lora::model::checkpoint;
+use ahwa_lora::model::params::{ParamStore, Tensor};
+use ahwa_lora::pcm::PcmModel;
 use ahwa_lora::serve::registry::SharedRegistry;
-use ahwa_lora::serve::{submit_wave, Pending, SchedConfig, ServeError, Server, ServerBuilder};
+use ahwa_lora::serve::{
+    submit_wave, Clock, DecayModel, FnRefitter, Metrics, Pending, Refit, RefreshConfig,
+    RefreshRunner, SchedConfig, ServeError, Server, ServerBuilder, VirtualClock,
+};
 use ahwa_lora::util::rng::Pcg64;
 
 fn ready() -> bool {
@@ -311,6 +319,215 @@ fn typed_rejections_and_live_task_deploys() {
     let r = client.submit("QNLI", &tokens).unwrap().wait().unwrap();
     assert_eq!(r.task, "QNLI");
     server.shutdown().unwrap();
+}
+
+/// Adapter whose single value encodes a deployment tag, so readers can
+/// verify an (adapter, version) pairing was never torn.
+fn tagged_adapter(tag: f32) -> ParamStore {
+    ParamStore::from_tensors(vec![Tensor {
+        name: "lora.a".to_string(),
+        shape: vec![1],
+        data: vec![tag],
+    }])
+}
+
+/// Hermetic e2e drift-refresh cycle on the virtual clock (zero real
+/// sleeps): drive a deployment past its drift threshold and assert the
+/// refresh triggers at the modeled time, the registry version bumps
+/// exactly once, no reader ever observes a torn or stale-beyond-
+/// tolerance adapter, and predicted decay after the swap is back below
+/// threshold.
+#[test]
+fn drift_refresh_triggers_at_modeled_time_and_hot_swaps_once() {
+    let clock = VirtualClock::new();
+    let registry = SharedRegistry::new();
+    assert_eq!(registry.deploy("SST-2", tagged_adapter(1.0)), 1);
+
+    let tol = 0.05;
+    let refit_calls = Arc::new(AtomicU64::new(0));
+    let refitter = {
+        let refit_calls = refit_calls.clone();
+        FnRefitter(
+            move |task: &str,
+                  current: &ParamStore,
+                  _meta: &ParamStore,
+                  budget: usize|
+                  -> anyhow::Result<Refit> {
+                refit_calls.fetch_add(1, Ordering::Relaxed);
+                assert_eq!(task, "SST-2");
+                assert_eq!(current.tensors[0].data[0], 1.0, "refit sees the live adapter");
+                Ok(Refit { params: tagged_adapter(2.0), steps: budget.min(7) })
+            },
+        )
+    };
+    let cfg = RefreshConfig::new(
+        DecayModel::analytic(PcmModel::default()),
+        Arc::new(refitter),
+    )
+    .tolerance(tol)
+    .step_budget(16);
+
+    let metrics = Arc::new(Metrics::default());
+    let mut runner = RefreshRunner::new(
+        cfg,
+        registry.clone(),
+        Arc::new(ParamStore::default()),
+        metrics.clone(),
+    );
+    runner.track_deployed(clock.now());
+
+    // the policy's modeled trigger: closed-form inverse of the decay model
+    let age_star = runner.policy().trigger_age_secs("SST-2").unwrap();
+    assert!(age_star > 0.0 && age_star.is_finite());
+
+    // concurrent reader playing the request path: every snapshot must be
+    // a consistent (adapter, version) pair, versions monotone
+    let stop = Arc::new(AtomicBool::new(false));
+    let reader = {
+        let (registry, stop) = (registry.clone(), stop.clone());
+        std::thread::spawn(move || {
+            let mut last = 0u64;
+            let mut saw = 0u64;
+            loop {
+                let stopping = stop.load(Ordering::Acquire);
+                let (adapter, version) = registry.snapshot("SST-2").expect("deployed");
+                assert!(version >= last, "version went backwards: {version} < {last}");
+                last = version;
+                let tag = adapter.tensors[0].data[0];
+                match version {
+                    1 => assert_eq!(tag, 1.0, "torn read: v1 paired with tag {tag}"),
+                    2 => assert_eq!(tag, 2.0, "torn read: v2 paired with tag {tag}"),
+                    v => panic!("unexpected version {v}"),
+                }
+                saw += 1;
+                if stopping {
+                    // one guaranteed post-stop snapshot: the swap done
+                    // before `stop` was set must be visible by now
+                    return (last, saw);
+                }
+                std::thread::yield_now();
+            }
+        })
+    };
+
+    // 1% before the modeled trigger: nothing is due
+    clock.advance(Duration::from_secs_f64(age_star * 0.99));
+    assert!(runner.tick(clock.now()).is_empty(), "must not refresh early");
+    assert_eq!(registry.version("SST-2"), Some(1));
+    assert!(runner.policy().predicted_decay("SST-2", clock.now()).unwrap() < tol);
+
+    // 1% past it: exactly one refresh at the modeled time
+    clock.advance(Duration::from_secs_f64(age_star * 0.02));
+    let events = runner.tick(clock.now());
+    assert_eq!(events.len(), 1, "refresh fires at the modeled trigger time");
+    let ev = &events[0];
+    assert_eq!(ev.task, "SST-2");
+    assert_eq!(ev.version, 2, "hot-swap installed version 2");
+    assert!(
+        (ev.drift_age_secs - age_star * 1.01).abs() < age_star * 1e-6,
+        "triggered at the modeled drift age: {} vs {age_star}",
+        ev.drift_age_secs
+    );
+    assert!(ev.pre_decay >= tol, "decay had crossed tolerance: {}", ev.pre_decay);
+    assert!(ev.post_decay < tol, "decay after swap is below threshold: {}", ev.post_decay);
+    assert_eq!(ev.steps, 7, "bounded refit budget is reported");
+
+    // the swap is immediately visible and never beyond tolerance again
+    assert_eq!(registry.version("SST-2"), Some(2));
+    assert_eq!(registry.get("SST-2").unwrap().tensors[0].data[0], 2.0);
+    assert!(runner.policy().predicted_decay("SST-2", clock.now()).unwrap() < tol);
+
+    // exactly once: the drift clock restarted, nothing further is due
+    assert!(runner.tick(clock.now()).is_empty());
+    assert_eq!(registry.version("SST-2"), Some(2), "version bumped exactly once");
+    assert_eq!(refit_calls.load(Ordering::Relaxed), 1);
+    assert_eq!(metrics.refreshes.load(Ordering::Relaxed), 1);
+    assert_eq!(metrics.refresh_steps.load(Ordering::Relaxed), 7);
+
+    stop.store(true, Ordering::Release);
+    let (last, saw) = reader.join().unwrap();
+    assert_eq!(last, 2, "the reader observed the hot-swap");
+    assert!(saw > 0, "the reader actually raced the swap");
+}
+
+/// Hermetic stress test pinning `SharedRegistry` version monotonicity
+/// under concurrent `deploy` + `snapshot` races.
+#[test]
+fn registry_versions_monotone_under_concurrent_deploy_and_snapshot() {
+    // Phase 1 — pairing: one writer deploys adapters whose payload
+    // encodes the version they will get; readers must never see a torn
+    // (adapter, version) pair.
+    let reg = SharedRegistry::new();
+    reg.deploy("t", tagged_adapter(1.0));
+    let done = Arc::new(AtomicBool::new(false));
+    let writer = {
+        let (reg, done) = (reg.clone(), done.clone());
+        std::thread::spawn(move || {
+            for i in 2..=500u64 {
+                let v = reg.deploy("t", tagged_adapter(i as f32));
+                assert_eq!(v, i, "single writer sees sequential versions");
+            }
+            done.store(true, Ordering::Release);
+        })
+    };
+    let readers: Vec<_> = (0..3)
+        .map(|_| {
+            let (reg, done) = (reg.clone(), done.clone());
+            std::thread::spawn(move || {
+                let mut last = 0u64;
+                while !done.load(Ordering::Acquire) {
+                    let (adapter, version) = reg.snapshot("t").expect("deployed");
+                    assert!(version >= last, "monotone: {version} < {last}");
+                    assert_eq!(
+                        adapter.tensors[0].data[0], version as f32,
+                        "torn read: payload does not match version"
+                    );
+                    last = version;
+                    std::thread::yield_now();
+                }
+            })
+        })
+        .collect();
+    writer.join().unwrap();
+    for r in readers {
+        r.join().unwrap();
+    }
+    assert_eq!(reg.version("t"), Some(500));
+
+    // Phase 2 — multi-writer: N writers hammer the same task; every
+    // version must be handed out exactly once and snapshots stay
+    // monotone per reader.
+    let reg = SharedRegistry::new();
+    let stop = Arc::new(AtomicBool::new(false));
+    let reader = {
+        let (reg, stop) = (reg.clone(), stop.clone());
+        std::thread::spawn(move || {
+            let mut last = 0u64;
+            while !stop.load(Ordering::Acquire) {
+                if let Some((_, version)) = reg.snapshot("t") {
+                    assert!(version >= last, "monotone under multi-writer races");
+                    last = version;
+                }
+                std::thread::yield_now();
+            }
+        })
+    };
+    let writers: Vec<_> = (0..4)
+        .map(|w| {
+            let reg = reg.clone();
+            std::thread::spawn(move || {
+                for i in 0..200 {
+                    reg.deploy("t", tagged_adapter((w * 1000 + i) as f32));
+                }
+            })
+        })
+        .collect();
+    for w in writers {
+        w.join().unwrap();
+    }
+    stop.store(true, Ordering::Release);
+    reader.join().unwrap();
+    assert_eq!(reg.version("t"), Some(800), "4 writers x 200 deploys, no version lost");
 }
 
 #[test]
