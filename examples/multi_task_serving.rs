@@ -17,7 +17,8 @@ use ahwa_lora::model::params::ParamStore;
 use ahwa_lora::pcm::PcmModel;
 use ahwa_lora::serve::registry::SharedRegistry;
 use ahwa_lora::serve::{
-    submit_wave, DecayModel, FnRefitter, Refit, RefreshConfig, SchedConfig, Server,
+    submit_wave, DecayModel, FnRefitter, Refit, RefreshConfig, RefreshCoupling, SchedConfig,
+    Server,
 };
 use ahwa_lora::util::cli::Args;
 use ahwa_lora::util::rng::Pcg64;
@@ -77,11 +78,21 @@ fn main() -> anyhow::Result<()> {
         // `refresh_tick_now` so the output is deterministic
         .check_every(Duration::from_secs(3600));
 
+    // Refresh coupling: the workers' schedulers read the refresh
+    // lifecycle (modeled trigger times, refits in flight) and shrink
+    // fills / tighten deadlines ahead of a hot-swap, so the swap lands
+    // between batches and the first post-swap batch serves the
+    // refreshed adapter — `stale_reqs` / `swap_gap` in the metrics
+    // report how well that works.
     let server = Server::builder(&variant)
         .manifest(ctx.engine.manifest.clone())
         .workers(workers)
         .queue_depth(args.usize("queue-depth", 128))
-        .scheduler(SchedConfig::for_layer(v.d_model, v.d_model, v.rank).t_int(t_int))
+        .scheduler(
+            SchedConfig::for_layer(v.d_model, v.d_model, v.rank)
+                .t_int(t_int)
+                .coupling(RefreshCoupling::default()),
+        )
         .refresh(refresh)
         .build(meta, registry.clone())?;
     let client = server.client();
@@ -135,7 +146,13 @@ fn main() -> anyhow::Result<()> {
     }
     let again = submit_wave(&client, &jobs[..tasks.len().min(jobs.len())])?;
     println!("post-refresh responses report adapter v{}", again[0].adapter_version);
-    println!("{}", server.metrics());
+    let agg = server.metrics();
+    println!(
+        "refresh-aware scheduling: {} stale request(s); worst swap->serve gap {:.1} µs",
+        agg.stale_batch_requests,
+        agg.swap_gap_ns as f64 / 1e3
+    );
+    println!("{agg}");
 
     server.shutdown()?;
     Ok(())

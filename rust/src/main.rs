@@ -84,7 +84,8 @@ fn serve_demo(args: &Args) -> Result<()> {
     use ahwa_lora::pcm::PcmModel;
     use ahwa_lora::serve::registry::SharedRegistry;
     use ahwa_lora::serve::{
-        submit_wave, DecayModel, RefreshConfig, SchedConfig, Server, TrainerRefitter,
+        submit_wave, DecayModel, RefreshConfig, RefreshCoupling, SchedConfig, Server,
+        TrainerRefitter,
     };
     use ahwa_lora::train::{OwnedArg, OwnedBatch};
     use ahwa_lora::util::rng::Pcg64;
@@ -135,11 +136,17 @@ fn serve_demo(args: &Args) -> Result<()> {
     } else {
         // batch fills come from the Fig. 4 AIMC/PMCA balancing model of
         // the variant's own projection layer
-        let sched = SchedConfig::for_layer(v.d_model, v.d_model, v.rank).t_int(t_int);
+        let mut sched = SchedConfig::for_layer(v.d_model, v.d_model, v.rank).t_int(t_int);
         println!(
             "pipeline-aware scheduling: {}x{} rank {} @ t_int={t_int:.0}ns (--no-sched to disable)",
             v.d_model, v.d_model, v.rank
         );
+        if refresh_scale > 0.0 {
+            // refresh-aware: shrink fills / tighten deadlines ahead of a
+            // modeled drift trigger so hot-swaps land between batches
+            sched = sched.coupling(RefreshCoupling::default());
+            println!("refresh coupling: ON (swaps land between batches; watch stale_reqs/swap_gap)");
+        }
         builder = builder.scheduler(sched);
     }
     if refresh_scale > 0.0 {
@@ -203,6 +210,12 @@ fn serve_demo(args: &Args) -> Result<()> {
                 e.task, e.drift_age_secs, e.pre_decay, e.post_decay, e.steps, e.version
             );
         }
+        let agg = server.metrics();
+        println!(
+            "refresh-aware scheduling: {} stale request(s), worst swap->serve gap {:.1} µs",
+            agg.stale_batch_requests,
+            agg.swap_gap_ns as f64 / 1e3
+        );
     }
     println!("{}", server.metrics_report());
     server.shutdown()?;

@@ -187,6 +187,14 @@ pub struct Metrics {
     /// Failed refit attempts (kept separate from `errors`, which counts
     /// failed *requests*).
     pub refresh_errors: AtomicU64,
+    /// Requests served at a stale adapter version — past the task's
+    /// modeled refresh trigger, or after a newer version already landed
+    /// in the registry. Refresh-aware scheduling
+    /// ([`super::sched::RefreshCoupling`]) exists to drive this to 0.
+    pub stale_batch_requests: AtomicU64,
+    /// Worst observed gap (ns) between a refresh hot-swap landing in
+    /// the registry and the first batch serving the refreshed version.
+    pub swap_gap_ns: AtomicU64,
     latencies_us: Mutex<Vec<f64>>,
     batch_sizes: Mutex<Vec<f64>>,
     /// Scheduler-modeled batch latency samples (µs), recorded alongside
@@ -227,6 +235,8 @@ impl Metrics {
             refreshes: self.refreshes.load(Ordering::Relaxed),
             refresh_steps: self.refresh_steps.load(Ordering::Relaxed),
             refresh_errors: self.refresh_errors.load(Ordering::Relaxed),
+            stale_batch_requests: self.stale_batch_requests.load(Ordering::Relaxed),
+            swap_gap_ns: self.swap_gap_ns.load(Ordering::Relaxed),
             batch_mean: stats::mean(&bs),
             lat_p50_ms: stats::percentile(&lat, 50.0) / 1e3,
             lat_p95_ms: stats::percentile(&lat, 95.0) / 1e3,
@@ -260,6 +270,12 @@ pub struct MetricsSnapshot {
     /// Failed refit attempts (distinct from `errors`: those count
     /// failed requests).
     pub refresh_errors: u64,
+    /// Requests served at a stale adapter version (0 when refresh is
+    /// off or the coupled scheduler kept every batch fresh).
+    pub stale_batch_requests: u64,
+    /// Worst observed registry-swap → first-serve gap, ns (0 until a
+    /// refreshed version has served a batch).
+    pub swap_gap_ns: u64,
     pub batch_mean: f64,
     pub lat_p50_ms: f64,
     pub lat_p95_ms: f64,
@@ -297,6 +313,14 @@ impl fmt::Display for MetricsSnapshot {
                 self.refreshes, self.refresh_steps, self.refresh_errors
             )?;
         }
+        if self.stale_batch_requests > 0 || self.swap_gap_ns > 0 {
+            write!(
+                f,
+                " stale_reqs={} swap_gap={:.1}µs",
+                self.stale_batch_requests,
+                self.swap_gap_ns as f64 / 1e3
+            )?;
+        }
         Ok(())
     }
 }
@@ -321,6 +345,9 @@ pub fn aggregate<'a>(workers: impl IntoIterator<Item = &'a Metrics>) -> MetricsS
         out.refreshes += m.refreshes.load(Ordering::Relaxed);
         out.refresh_steps += m.refresh_steps.load(Ordering::Relaxed);
         out.refresh_errors += m.refresh_errors.load(Ordering::Relaxed);
+        out.stale_batch_requests += m.stale_batch_requests.load(Ordering::Relaxed);
+        // the gap is a worst-case, not a flow: max, not sum
+        out.swap_gap_ns = out.swap_gap_ns.max(m.swap_gap_ns.load(Ordering::Relaxed));
         lat.extend_from_slice(&m.latencies_us.lock().unwrap());
         bs.extend_from_slice(&m.batch_sizes.lock().unwrap());
         modeled.extend_from_slice(&m.modeled_us.lock().unwrap());
@@ -441,7 +468,13 @@ impl ServerBuilder {
     /// Enable pipeline-aware batch scheduling: workers pick batch fills
     /// from the AIMC/PMCA cost model ([`super::sched`]) instead of the
     /// fixed size/deadline policy. A `seq_len` of 0 inherits the serving
-    /// graph's sequence length.
+    /// graph's sequence length. With a
+    /// [`SchedConfig::coupling`](super::sched::SchedConfig::coupling)
+    /// policy AND [`Self::refresh`] configured, the schedulers become
+    /// refresh-aware: fills shrink and deadlines tighten ahead of a
+    /// modeled drift trigger so hot-swaps land between batches (the
+    /// `stale_batch_requests` / `swap_gap_ns` metrics report how well
+    /// that works).
     pub fn scheduler(mut self, cfg: SchedConfig) -> Self {
         self.sched = Some(cfg);
         self
@@ -511,6 +544,28 @@ impl ServerBuilder {
 
         // the read-only base model is shared, not copied, across workers
         let meta = Arc::new(meta);
+
+        // drift-aware refresh: the runner (and its shared lifecycle
+        // handle) is built BEFORE the workers so each worker's
+        // scheduler can couple to it; everything deployed now starts
+        // its drift clock now, later deploys reset it through the
+        // version race guard (`SharedRegistry::deploy_if_version`)
+        let refresh_state = match self.refresh {
+            Some(rcfg) => {
+                // a tolerance at or below the decay model's age-0 floor
+                // would refit on every tick, forever
+                rcfg.validate().map_err(|detail| ServeError::Init { detail })?;
+                let check_every = rcfg.check_every;
+                let metrics = Arc::new(Metrics::default());
+                let mut runner =
+                    RefreshRunner::new(rcfg, registry.clone(), meta.clone(), metrics.clone());
+                runner.track_deployed(self.clock.now());
+                Some((runner, metrics, check_every))
+            }
+            None => None,
+        };
+        let lifecycle = refresh_state.as_ref().map(|(r, _, _)| r.policy().handle());
+
         let accepting = Arc::new(AtomicBool::new(true));
         let mut shards = Vec::with_capacity(self.workers);
         let mut worker_metrics = Vec::with_capacity(self.workers);
@@ -525,6 +580,7 @@ impl ServerBuilder {
                 hw: self.hw,
                 fail_every: self.fail_every,
                 sched,
+                refresh: lifecycle.clone(),
                 clock: self.clock.clone(),
             };
             let (handle, join) = pool::spawn_worker(
@@ -550,26 +606,15 @@ impl ServerBuilder {
             seq,
         };
 
-        // drift-aware refresh: everything deployed now starts its drift
-        // clock now; later deploys reset it through the version race
-        // guard (`SharedRegistry::deploy_if_version`)
-        let refresh = match self.refresh {
-            Some(rcfg) => {
-                // a tolerance at or below the decay model's age-0 floor
-                // would refit on every tick, forever
-                rcfg.validate().map_err(|detail| ServeError::Init { detail })?;
-                let check_every = rcfg.check_every;
-                let metrics = Arc::new(Metrics::default());
-                let mut runner =
-                    RefreshRunner::new(rcfg, registry.clone(), meta.clone(), metrics.clone());
-                runner.track_deployed(self.clock.now());
+        let refresh = match refresh_state {
+            Some((runner, metrics, check_every)) => {
                 let runner = Arc::new(Mutex::new(runner));
                 let (stop, join) =
                     spawn_refresh_worker(runner.clone(), self.clock.clone(), check_every)
                         .map_err(|e| ServeError::Init {
                             detail: format!("spawning refresh worker: {e}"),
                         })?;
-                Some(RefreshHandle {
+                Some(RefreshState {
                     runner,
                     metrics,
                     stop,
@@ -703,8 +748,10 @@ fn fnv1a(s: &str) -> u64 {
 // ---------------------------------------------------------------------------
 
 /// The drift-refresh worker attached to a pool: its runner (policy +
-/// event log), counters, and stop/join plumbing.
-struct RefreshHandle {
+/// event log), counters, and stop/join plumbing. (The *shared* per-task
+/// lifecycle view the schedulers read is
+/// [`super::refresh::RefreshHandle`], handed to workers at build time.)
+struct RefreshState {
     runner: Arc<Mutex<RefreshRunner>>,
     metrics: Arc<Metrics>,
     stop: Sender<()>,
@@ -719,7 +766,7 @@ pub struct Server {
     worker_metrics: Vec<Arc<Metrics>>,
     joins: Vec<std::thread::JoinHandle<ServeResult<()>>>,
     clock: Arc<dyn Clock>,
-    refresh: Option<RefreshHandle>,
+    refresh: Option<RefreshState>,
 }
 
 impl Server {
@@ -1072,6 +1119,25 @@ mod tests {
         // pools without refresh activity stay silent
         let quiet = Metrics::default().snapshot("w").to_string();
         assert!(!quiet.contains("refreshes"));
+    }
+
+    #[test]
+    fn stale_and_swap_gap_counters_flow_into_snapshots() {
+        let m = Metrics::default();
+        m.stale_batch_requests.fetch_add(3, Ordering::Relaxed);
+        m.swap_gap_ns.fetch_max(2_500, Ordering::Relaxed);
+        let s = m.snapshot("w");
+        assert_eq!(s.stale_batch_requests, 3);
+        assert_eq!(s.swap_gap_ns, 2_500);
+        assert!(s.to_string().contains("stale_reqs=3"));
+        let n = Metrics::default();
+        n.swap_gap_ns.fetch_max(9_000, Ordering::Relaxed);
+        let agg = aggregate([&m, &n]);
+        assert_eq!(agg.stale_batch_requests, 3, "stale requests sum across workers");
+        assert_eq!(agg.swap_gap_ns, 9_000, "swap gap aggregates as the worst case");
+        // pools that never served stale stay silent
+        let quiet = Metrics::default().snapshot("w").to_string();
+        assert!(!quiet.contains("stale_reqs"));
     }
 
     #[test]

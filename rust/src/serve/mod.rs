@@ -19,17 +19,21 @@
 //!
 //! A long-lived pool runs every adapter through one loop — deployment
 //! onto the (drifting) analog substrate, service, modeled decay, and a
-//! digital-side refresh that never touches the arrays:
+//! digital-side refresh that never touches the arrays. The scheduler is
+//! *coupled* to that loop: it reads the refresh lifecycle through a
+//! shared [`refresh::RefreshHandle`] and shapes batches so hot-swaps
+//! land between batches instead of under them:
 //!
 //! ```text
 //!              SharedRegistry::deploy (version v, Arc snapshot)
 //!                   │
-//!      ┌────────────▼────────────┐
-//!      │          SERVE          │ workers read Arc<ParamStore>
-//!      │  (batches pin task+v)   │ snapshots; in-flight batches
-//!      └────────────┬────────────┘ always finish on their snapshot
-//!                   │ time passes on the pool Clock
-//!      ┌────────────▼────────────┐
+//!      ┌────────────▼────────────┐   drift pressure (trigger_at,
+//!      │          SERVE          │◄──refit-in-flight) read via
+//!      │  (batches pin task+v)   │   RefreshHandle: fills shrink,
+//!      └────────────┬────────────┘   deadlines tighten ahead of the
+//!                   │ time passes    swap; fills extend just after it
+//!                   │ on the pool Clock          ▲
+//!      ┌────────────▼────────────┐               │
 //!      │          DRIFT          │ g(t) = g_prog·((t+t₀)/t₀)^(−ν)
 //!      │ RefreshPolicy predicts  │ post-GDC residual decay vs the
 //!      │ decay from drift age    │ per-task tolerance
@@ -37,11 +41,14 @@
 //!                   │ decay ≥ tolerance
 //!      ┌────────────▼────────────┐
 //!      │         REFRESH         │ Refitter re-fits LoRA against the
-//!      │  (bounded step budget)  │ drifted meta-weights (Trainer)
-//!      └────────────┬────────────┘
+//!      │  (bounded step budget)  │ drifted meta-weights (Trainer);
+//!      └────────────┬────────────┘ coupled workers drain small batches
+//!                   │              while the refit runs
 //!                   │ deploy_if_version(v) — CAS: a concurrent manual
 //!                   ▼              deploy wins, the stale refit is dropped
 //!              HOT-SWAP (version v+1, O(pointer)) ──► back to SERVE
+//!                   (first post-swap batch serves v+1 immediately;
+//!                    Metrics::swap_gap_ns records the handoff gap)
 //! ```
 //!
 //! Supporting pieces:
@@ -53,33 +60,57 @@
 //!   (batches never mix tasks: a task switch costs an adapter swap),
 //! * [`sched`]    — pipeline-aware batch scheduling: the Fig. 4
 //!   AIMC ⇄ PMCA balancing model picks the token parallelism and the
-//!   modeled-optimal batch fill per task, and every timestamp flows
-//!   through a [`sched::Clock`] (real or virtual) so timing behaviour
-//!   is testable without sleeps,
+//!   modeled-optimal batch fill per task, with an optional
+//!   refresh-coupling policy ([`sched::RefreshCoupling`]) that shapes
+//!   fills and deadlines around drift refreshes,
 //! * [`refresh`]  — drift-aware adapter refresh: per-task drift-age
 //!   tracking on the pool clock, decay prediction (closed-form or
 //!   Monte-Carlo through the device model), bounded LoRA refits, and
-//!   versioned hot-swaps, all testable on the virtual clock,
-//! * [`router`] / [`server`] — deprecated shims over [`api`]. The old
-//!   call shapes (`Server::start`, `server.router`, raw `Msg` channels,
-//!   `Router::submit` returning a bare receiver) are gone; the shims
-//!   only point migrating code at the replacements.
+//!   versioned hot-swaps, publishing per-task phase through the shared
+//!   [`refresh::RefreshHandle`].
+//!
+//! (The deprecated `serve::router` / `serve::server` shims from the
+//! pre-builder API are gone; [`api`] is the only serving surface.)
+//!
+//! # Testing on the virtual clock
+//!
+//! Every timestamp in the pool — enqueue stamps, scheduler deadlines,
+//! drift ages, refresh triggers — flows through one [`sched::Clock`].
+//! Swap in a [`sched::VirtualClock`] and the whole
+//! deploy → serve → drift → refresh → hot-swap cycle becomes a
+//! deterministic, sleep-free state machine the test advances manually:
+//!
+//! ```text
+//! let clock = Arc::new(VirtualClock::new());
+//! let mut batcher = Batcher::with_clock(8, max_wait, clock.clone());
+//! let mut sched   = BatchScheduler::new(cfg, 8, max_wait)
+//!                       .with_refresh(runner.policy().handle());
+//! clock.advance(dt);            // time moves ONLY here
+//! runner.tick(clock.now());     // refresh check, exactly when you say
+//! match sched.pick(&batcher, clock.now()) { ... }
+//! ```
+//!
+//! Because scheduler and refresh share the clock, assertions like
+//! "zero requests served at a stale version" or "no batch spans a
+//! version bump" are exact, not probabilistic. The conformance suite
+//! for the coupling lives in `tests/refresh_sched_e2e.rs`; the
+//! scheduler-policy property tests in `tests/sched_properties.rs`.
 
 pub mod api;
 pub mod batcher;
 mod pool;
 pub mod refresh;
 pub mod registry;
-pub mod router;
 pub mod sched;
-pub mod server;
 
 pub use api::{
     aggregate, submit_wave, submit_wave_results, Client, Metrics, MetricsSnapshot, Pending,
     Response, ServeError, ServeResult, Server, ServerBuilder,
 };
 pub use refresh::{
-    DecayModel, FnRefitter, Refit, Refitter, RefreshConfig, RefreshEvent, RefreshPolicy,
-    RefreshRunner, TrainerRefitter,
+    DecayModel, FnRefitter, Refit, Refitter, RefreshConfig, RefreshEvent, RefreshHandle,
+    RefreshPolicy, RefreshRunner, RefreshView, TrainerRefitter,
 };
-pub use sched::{BatchScheduler, Clock, RealClock, SchedConfig, VirtualClock};
+pub use sched::{
+    BatchScheduler, Clock, Decision, RealClock, RefreshCoupling, SchedConfig, VirtualClock,
+};

@@ -7,10 +7,11 @@
 //! result**, on every path — success, adapter miss, batch failure,
 //! injected fault, engine-init failure, and shutdown drain.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::config::manifest::Manifest;
 use crate::eval::drift_eval::{cls_logits, fwd_batch_shape};
@@ -18,6 +19,7 @@ use crate::model::params::ParamStore;
 
 use super::api::{Metrics, Response, ServeError, ServeResult};
 use super::batcher::Batcher;
+use super::refresh::RefreshHandle;
 use super::registry::SharedRegistry;
 use super::sched::{BatchScheduler, Clock, Decision, SchedConfig};
 
@@ -59,6 +61,10 @@ pub(crate) struct WorkerConfig {
     /// Pipeline-aware scheduling: when set, batch fills come from the
     /// AIMC/PMCA cost model instead of the fixed size/deadline policy.
     pub sched: Option<SchedConfig>,
+    /// Shared refresh-lifecycle view (present when the pool runs a
+    /// drift-refresh worker): powers the scheduler's refresh coupling
+    /// and the worker's stale-batch / swap-gap accounting.
+    pub refresh: Option<RefreshHandle>,
     /// Time source for enqueue stamps, deadlines, and latency metrics
     /// (virtual in deterministic tests).
     pub clock: Arc<dyn Clock>,
@@ -125,25 +131,41 @@ fn worker_loop(
 
     let mut batcher: Batcher<WorkRequest> =
         Batcher::with_clock(cfg.max_batch, cfg.max_wait, cfg.clock.clone());
-    let mut sched = cfg
-        .sched
-        .map(|s| BatchScheduler::new(s, cfg.max_batch, cfg.max_wait));
+    let mut sched = cfg.sched.map(|s| {
+        let s = BatchScheduler::new(s, cfg.max_batch, cfg.max_wait);
+        match cfg.refresh.clone() {
+            // refresh coupling: the scheduler reads trigger times and
+            // refit-in-flight flags from the same handle the refresh
+            // runner writes, on the same pool clock
+            Some(h) => s.with_refresh(h),
+            None => s,
+        }
+    });
     // (task, version) of the adapter loaded on the DPUs: a drift-refresh
     // hot-swap of the SAME task is an adapter swap too
     let mut last_adapter: Option<(String, u64)> = None;
+    // per-task version whose swap→serve gap was already recorded, so a
+    // later RELOAD of the same refreshed adapter (after serving another
+    // task) cannot re-record a bogus, ever-growing "gap"
+    let mut gap_recorded: BTreeMap<String, u64> = BTreeMap::new();
     let mut batch_idx: u64 = 0;
     let mut open = true;
     let mut drain_deadline = cfg.clock.now(); // set when `open` flips
+    // the scheduler's own wake instant (coupled deadlines tighten, and
+    // held tasks wake at deadline+hold, so the batcher's plain earliest
+    // deadline is no longer always the right sleep bound)
+    let mut sched_wake: Option<Instant> = None;
 
     loop {
         if open {
             // block until work/shutdown arrives or, if batches are
-            // queued, exactly until the earliest deadline — no fixed
-            // polling tick (the scheduler can only flip a queue to
-            // "ready" on an arrival or at its head's deadline, so the
-            // batcher's earliest deadline is the exact wake time for
-            // both policies)
-            let msg = match batcher.next_deadline() {
+            // queued, exactly until the next actionable instant — no
+            // fixed polling tick. For the fixed batcher that is its
+            // earliest deadline; for the scheduler it is whatever
+            // `pick` last said to wake at (tightened deadline or hold
+            // bound).
+            let wake = sched_wake.or_else(|| batcher.next_deadline());
+            let msg = match wake {
                 Some(d) => match rx.recv_timeout(d.saturating_duration_since(cfg.clock.now())) {
                     Ok(job) => Some(job),
                     Err(RecvTimeoutError::Timeout) => None,
@@ -177,6 +199,7 @@ fn worker_loop(
 
         // serve EVERY ready batch before sleeping again — a full batch
         // must never wait on another task's deadline
+        sched_wake = None;
         loop {
             let now = cfg.clock.now();
             let ready = if !open {
@@ -184,10 +207,14 @@ fn worker_loop(
                 batcher.pop_ready(now + cfg.max_wait + Duration::from_millis(1))
             } else if let Some(s) = sched.as_ref() {
                 match s.pick(&batcher, now) {
-                    Decision::Close { task, fill } => {
+                    Decision::Close { task, fill } | Decision::Drain { task, fill } => {
                         batcher.pop_task(&task, fill).map(|items| (task, items))
                     }
-                    Decision::Wait { .. } | Decision::Idle => None,
+                    Decision::Hold { until, .. } | Decision::Wait { until } => {
+                        sched_wake = Some(until);
+                        None
+                    }
+                    Decision::Idle => None,
                 }
             } else {
                 batcher.pop_ready(now)
@@ -197,7 +224,7 @@ fn worker_loop(
             let modeled = sched.as_ref().map(|s| s.modeled_batch(reqs.len()));
             serve_batch(
                 &cfg, &graph, &meta, &registry, &metrics, &inflight, batch_idx,
-                &mut last_adapter, task, reqs, modeled,
+                &mut last_adapter, &mut gap_recorded, task, reqs, modeled,
             );
             if !open {
                 // progress resets the grace window: slow batches must
@@ -230,6 +257,7 @@ fn serve_batch(
     inflight: &AtomicUsize,
     batch_idx: u64,
     last_adapter: &mut Option<(String, u64)>,
+    gap_recorded: &mut BTreeMap<String, u64>,
     task: String,
     reqs: Vec<WorkRequest>,
     modeled: Option<Duration>,
@@ -242,11 +270,36 @@ fn serve_batch(
         });
         return;
     };
+    if let Some(h) = cfg.refresh.as_ref() {
+        // requests knowingly served at a drift-degraded (or already
+        // replaced) adapter version — the number refresh-aware
+        // scheduling exists to drive to zero
+        if h.is_stale(&task, version, cfg.clock.now()) {
+            metrics
+                .stale_batch_requests
+                .fetch_add(n as u64, Ordering::Relaxed);
+        }
+    }
     // a task switch OR a new version of the same task (redeploy /
     // drift refresh) costs a DPU adapter swap
     let loaded = (task.clone(), version);
     if last_adapter.as_ref() != Some(&loaded) {
         metrics.adapter_swaps.fetch_add(1, Ordering::Relaxed);
+        // FIRST batch at a refresh-installed version: record how long
+        // the refreshed adapter sat in the registry before serving.
+        // Once per (task, version) — a later reload of the same version
+        // after serving other tasks is an adapter swap, not a swap gap.
+        if let Some(h) = cfg.refresh.as_ref() {
+            if let Some((at, v)) = h.last_swap(&task) {
+                if v == version && gap_recorded.get(&task) != Some(&version) {
+                    let gap = cfg.clock.now().saturating_duration_since(at);
+                    metrics
+                        .swap_gap_ns
+                        .fetch_max(gap.as_nanos() as u64, Ordering::Relaxed);
+                    gap_recorded.insert(task.clone(), version);
+                }
+            }
+        }
         *last_adapter = Some(loaded);
     }
     if cfg.fail_every > 0 && batch_idx % cfg.fail_every == 0 {

@@ -24,7 +24,12 @@
 //!   [`Clock`] (virtual in tests — the whole trigger path is testable
 //!   with zero real sleeps) and reports which tasks have crossed their
 //!   per-task tolerance, plus the *modeled* instant a task will cross it
-//!   ([`RefreshPolicy::trigger_at`]).
+//!   ([`RefreshPolicy::trigger_at`]). Its per-task state lives behind a
+//!   cloneable [`RefreshHandle`] rather than runner-private storage, so
+//!   the pool's batch schedulers ([`super::sched::BatchScheduler`]) read
+//!   the same trigger times / refit-in-flight flags the runner writes
+//!   and can shrink fills ahead of a hot-swap (refresh-aware
+//!   scheduling — see [`super::sched`]'s coupling docs).
 //! * [`Refitter`] re-fits one adapter against the drifted meta-weights.
 //!   [`TrainerRefitter`] drives [`Trainer`] with a bounded step budget;
 //!   [`FnRefitter`] wraps a closure for tests and cheap demos.
@@ -47,7 +52,7 @@
 use std::collections::BTreeMap;
 use std::fmt;
 use std::sync::atomic::Ordering;
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -392,25 +397,148 @@ struct TrackedTask {
     /// prediction would be a full Monte-Carlo read of every programmed
     /// tensor, every tick. `None` = never decays past tolerance.
     due_at: Option<Instant>,
+    /// A refit for this task is currently in flight.
+    refitting: bool,
+    /// When (and to which version) the last *refresh-driven* hot-swap
+    /// landed; the scheduler's post-swap fill extension keys off this.
+    swapped_at: Option<(Instant, u64)>,
+}
+
+/// Cloneable, thread-safe view of the per-task refresh lifecycle.
+///
+/// The [`RefreshRunner`] (via its [`RefreshPolicy`]) is the writer; the
+/// pool's batch schedulers and workers are readers. This is what makes
+/// the scheduler refresh-aware: instead of runner-private state, the
+/// modeled `trigger_at`, the refit-in-flight flag, and the last swap
+/// instant are published here, on the same pool [`Clock`] both
+/// subsystems run on — so the coupling is deterministically testable on
+/// a [`VirtualClock`](super::sched::VirtualClock) end to end.
+#[derive(Clone, Default)]
+pub struct RefreshHandle {
+    tracked: Arc<RwLock<BTreeMap<String, TrackedTask>>>,
+}
+
+impl RefreshHandle {
+    pub fn new() -> RefreshHandle {
+        RefreshHandle::default()
+    }
+
+    fn read(&self) -> std::sync::RwLockReadGuard<'_, BTreeMap<String, TrackedTask>> {
+        self.tracked.read().unwrap()
+    }
+
+    fn write(&self) -> std::sync::RwLockWriteGuard<'_, BTreeMap<String, TrackedTask>> {
+        self.tracked.write().unwrap()
+    }
+
+    /// Tasks currently on the drift watch.
+    pub fn tasks(&self) -> Vec<String> {
+        self.read().keys().cloned().collect()
+    }
+
+    /// Registry version the refresh policy last saw for `task`.
+    pub fn tracked_version(&self, task: &str) -> Option<u64> {
+        self.read().get(task).map(|t| t.version)
+    }
+
+    /// Modeled pool-clock instant at which `task` crosses its
+    /// tolerance (`None` when untracked or never crossing).
+    pub fn trigger_at(&self, task: &str) -> Option<Instant> {
+        self.read().get(task)?.due_at
+    }
+
+    /// `true` while a refit for `task` is in flight.
+    pub fn refit_in_flight(&self, task: &str) -> bool {
+        self.read().get(task).map(|t| t.refitting).unwrap_or(false)
+    }
+
+    /// Instant and installed version of the last refresh-driven
+    /// hot-swap for `task`.
+    pub fn last_swap(&self, task: &str) -> Option<(Instant, u64)> {
+        self.read().get(task)?.swapped_at
+    }
+
+    /// One consistent read of a task's whole refresh state — a single
+    /// lock acquisition, so a scheduling decision can never pair a
+    /// refit flag from one instant with a trigger from another (and
+    /// the worker's per-pick cost stays at one read per task).
+    pub fn view(&self, task: &str) -> Option<RefreshView> {
+        self.read().get(task).map(|t| RefreshView {
+            version: t.version,
+            trigger_at: t.due_at,
+            refit_in_flight: t.refitting,
+            last_swap: t.swapped_at,
+        })
+    }
+
+    /// Would a batch serving `task` at adapter `version` be stale at
+    /// `now`? True when a newer version is already tracked (the swap
+    /// landed but this batch grabbed the older snapshot), or when the
+    /// tracked version's modeled decay has crossed tolerance (the swap
+    /// is overdue). Used by the pool's `stale_batch_requests` metric.
+    pub fn is_stale(&self, task: &str, version: u64, now: Instant) -> bool {
+        match self.read().get(task) {
+            Some(t) if version < t.version => true,
+            Some(t) if version == t.version => {
+                t.due_at.map(|d| now >= d).unwrap_or(false)
+            }
+            _ => false,
+        }
+    }
+
+    pub(crate) fn begin_refit(&self, task: &str) {
+        if let Some(t) = self.write().get_mut(task) {
+            t.refitting = true;
+        }
+    }
+
+    pub(crate) fn end_refit(&self, task: &str) {
+        if let Some(t) = self.write().get_mut(task) {
+            t.refitting = false;
+        }
+    }
+}
+
+/// Snapshot of one task's refresh lifecycle, read atomically from the
+/// [`RefreshHandle`] (see [`RefreshHandle::view`]).
+#[derive(Clone, Copy, Debug)]
+pub struct RefreshView {
+    /// Registry version the policy is watching.
+    pub version: u64,
+    /// Modeled tolerance-crossing instant (`None` = never crosses).
+    pub trigger_at: Option<Instant>,
+    /// A refit is currently in flight for this task.
+    pub refit_in_flight: bool,
+    /// Instant and version of the last refresh-driven hot-swap.
+    pub last_swap: Option<(Instant, u64)>,
 }
 
 /// Tracks per-task deployment age on the pool clock and decides when
-/// each task's predicted decay has crossed its tolerance.
+/// each task's predicted decay has crossed its tolerance. State lives
+/// in a [`RefreshHandle`] so the scheduler coupling reads the same
+/// instants the runner writes.
 pub struct RefreshPolicy {
     cfg: RefreshConfig,
-    tracked: BTreeMap<String, TrackedTask>,
+    tracked: RefreshHandle,
 }
 
 impl RefreshPolicy {
     pub fn new(cfg: RefreshConfig) -> RefreshPolicy {
         RefreshPolicy {
             cfg,
-            tracked: BTreeMap::new(),
+            tracked: RefreshHandle::new(),
         }
     }
 
     pub fn config(&self) -> &RefreshConfig {
         &self.cfg
+    }
+
+    /// The shared per-task lifecycle view ([`RefreshHandle`]) — clone
+    /// it into anything that needs to observe refresh phases (the
+    /// refresh-aware scheduler, the pool workers' stale accounting).
+    pub fn handle(&self) -> RefreshHandle {
+        self.tracked.clone()
     }
 
     /// Start (or restart) the drift clock for `task` at `now` —
@@ -422,32 +550,38 @@ impl RefreshPolicy {
         let scaled = age / self.cfg.time_scale;
         let due_at = (scaled.is_finite() && scaled < MAX_DUE_SECS)
             .then(|| now + Duration::from_secs_f64(scaled));
-        self.tracked.insert(
+        // a re-track is a fresh deployment: any in-flight refit flag is
+        // stale, but the last swap instant survives (the post-swap fill
+        // extension spans the re-anchor the swap itself performs)
+        let swapped_at = self.tracked.read().get(task).and_then(|t| t.swapped_at);
+        self.tracked.write().insert(
             task.to_string(),
             TrackedTask {
                 deployed_at: now,
                 version,
                 due_at,
+                refitting: false,
+                swapped_at,
             },
         );
     }
 
     pub fn forget(&mut self, task: &str) {
-        self.tracked.remove(task);
+        self.tracked.write().remove(task);
     }
 
     pub fn tasks(&self) -> Vec<String> {
-        self.tracked.keys().cloned().collect()
+        self.tracked.tasks()
     }
 
     /// Registry version this policy last saw for `task`.
     pub fn tracked_version(&self, task: &str) -> Option<u64> {
-        self.tracked.get(task).map(|t| t.version)
+        self.tracked.tracked_version(task)
     }
 
     /// Modeled drift age of `task` at `now`, in (scaled) seconds.
     pub fn drift_age_secs(&self, task: &str, now: Instant) -> Option<f64> {
-        self.tracked.get(task).map(|t| {
+        self.tracked.read().get(task).map(|t| {
             now.saturating_duration_since(t.deployed_at).as_secs_f64() * self.cfg.time_scale
         })
     }
@@ -462,7 +596,7 @@ impl RefreshPolicy {
     /// tolerance; `None` when untracked or when the model never decays
     /// that far.
     pub fn trigger_age_secs(&self, task: &str) -> Option<f64> {
-        if !self.tracked.contains_key(task) {
+        if !self.tracked.read().contains_key(task) {
             return None;
         }
         let age = self.cfg.decay.trigger_age(self.cfg.tolerance_for(task));
@@ -471,7 +605,7 @@ impl RefreshPolicy {
 
     /// Modeled pool-clock instant at which `task` crosses its tolerance.
     pub fn trigger_at(&self, task: &str) -> Option<Instant> {
-        self.tracked.get(task)?.due_at
+        self.tracked.trigger_at(task)
     }
 
     /// Tasks whose modeled decay has crossed tolerance at `now` — an
@@ -479,6 +613,7 @@ impl RefreshPolicy {
     /// decay evaluation on the tick path.
     pub fn due(&self, now: Instant) -> Vec<String> {
         self.tracked
+            .read()
             .iter()
             .filter(|(_, t)| t.due_at.map(|d| now >= d).unwrap_or(false))
             .map(|(task, _)| task.clone())
@@ -487,6 +622,9 @@ impl RefreshPolicy {
 
     fn on_refreshed(&mut self, task: &str, now: Instant, version: u64) {
         self.track(task, now, version);
+        if let Some(t) = self.tracked.write().get_mut(task) {
+            t.swapped_at = Some((now, version));
+        }
     }
 }
 
@@ -635,11 +773,17 @@ impl RefreshRunner {
                 analytic_drifted_meta(&self.meta, model, *g_rel, age, &mut self.rng)
             }
         };
+        // the in-flight flag is what saturates the scheduler's drift
+        // pressure for this task, so coupled workers drain small batches
+        // while the refit runs and the swap lands between batches
+        self.policy.tracked.begin_refit(task);
         let refit = self
             .policy
             .cfg
             .refitter
-            .refit(task, &current, &drifted, self.policy.cfg.step_budget)?;
+            .refit(task, &current, &drifted, self.policy.cfg.step_budget);
+        self.policy.tracked.end_refit(task);
+        let refit = refit?;
 
         let Some(version) = self
             .registry
@@ -940,9 +1084,77 @@ mod tests {
         assert_eq!(metrics.refresh_errors.load(Ordering::Relaxed), 1);
         assert_eq!(metrics.errors.load(Ordering::Relaxed), 0, "request errors untouched");
         assert_eq!(registry.version("t"), Some(1), "no swap on failure");
+        // the in-flight flag must not leak past a failed refit, or the
+        // coupled scheduler would hold the task's queue forever
+        assert!(!runner.policy().handle().refit_in_flight("t"));
         // still due: the next tick retries
         assert!(runner.tick(clock.now()).is_empty());
         assert_eq!(metrics.refresh_errors.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn handle_exposes_the_refresh_lifecycle_to_the_scheduler() {
+        use std::sync::atomic::AtomicBool;
+        use std::sync::Mutex;
+
+        let clock = VirtualClock::new();
+        let registry = SharedRegistry::new();
+        registry.deploy("t", adapter(1.0));
+        // the refitter itself checks that the in-flight flag is visible
+        // THROUGH the shared handle mid-refit (what a coupled scheduler
+        // on another thread would observe)
+        let slot: Arc<Mutex<Option<RefreshHandle>>> = Arc::new(Mutex::new(None));
+        let seen_in_flight = Arc::new(AtomicBool::new(false));
+        let refitter = {
+            let (slot, seen) = (slot.clone(), seen_in_flight.clone());
+            Arc::new(FnRefitter(
+                move |task: &str, _: &ParamStore, _: &ParamStore, budget: usize| -> Result<Refit> {
+                    let h = slot.lock().unwrap().clone().expect("handle published");
+                    seen.store(h.refit_in_flight(task), Ordering::Relaxed);
+                    Ok(Refit { params: adapter(2.0), steps: budget })
+                },
+            )) as Arc<dyn Refitter>
+        };
+        let cfg = RefreshConfig::new(DecayModel::analytic(PcmModel::default()), refitter)
+            .tolerance(0.05);
+        let metrics = Arc::new(Metrics::default());
+        let mut runner = RefreshRunner::new(
+            cfg,
+            registry.clone(),
+            Arc::new(ParamStore::default()),
+            metrics,
+        );
+        runner.track_deployed(clock.now());
+        let h = runner.policy().handle();
+        *slot.lock().unwrap() = Some(h.clone());
+
+        // watch phase: trigger published, nothing in flight, not stale
+        assert_eq!(h.tracked_version("t"), Some(1));
+        let trig = h.trigger_at("t").expect("analytic model always crosses");
+        assert!(!h.refit_in_flight("t"));
+        assert!(h.last_swap("t").is_none());
+        assert!(!h.is_stale("t", 1, clock.now()));
+        assert!(!h.is_stale("unknown", 1, clock.now()));
+
+        // past the trigger: the tracked version reads stale (overdue)
+        let age_star = runner.policy().trigger_age_secs("t").unwrap();
+        clock.advance(Duration::from_secs_f64(age_star * 1.01));
+        assert!(h.is_stale("t", 1, clock.now()));
+        assert_eq!(h.trigger_at("t"), Some(trig), "trigger stable until the swap");
+
+        // refresh: flag visible mid-refit, cleared after; swap recorded
+        let evs = runner.tick(clock.now());
+        assert_eq!(evs.len(), 1);
+        assert!(seen_in_flight.load(Ordering::Relaxed), "in-flight flag seen mid-refit");
+        assert!(!h.refit_in_flight("t"), "flag cleared after the swap");
+        let (swap_at, swap_v) = h.last_swap("t").expect("swap recorded");
+        assert_eq!(swap_v, 2);
+        assert_eq!(swap_at, clock.now());
+        assert_eq!(h.tracked_version("t"), Some(2));
+        assert!(h.trigger_at("t").unwrap() > clock.now(), "trigger re-anchored");
+        // the refreshed version is fresh; the replaced one reads stale
+        assert!(!h.is_stale("t", 2, clock.now()));
+        assert!(h.is_stale("t", 1, clock.now()));
     }
 
     #[test]

@@ -32,12 +32,44 @@
 //!   `util::bench` scenarios) can report model error alongside wall
 //!   time.
 //!
+//! # Refresh coupling
+//!
+//! The drift-refresh subsystem ([`super::refresh`]) hot-swaps a task's
+//! adapter when its modeled decay crosses tolerance. An uncoupled
+//! scheduler batches blindly through that swap: a large batch popped
+//! just before the version bump runs a whole extra service cycle at the
+//! stale, drift-degraded adapter. [`SchedConfig::coupling`]
+//! ([`RefreshCoupling`]) closes that gap by reading the refresh
+//! lifecycle through a shared [`RefreshHandle`]:
+//!
+//! * **Drift pressure** ([`BatchScheduler::drift_pressure`]) ramps 0→1
+//!   over the `window` before a task's modeled
+//!   [`trigger_at`](RefreshHandle::trigger_at) and saturates at 1 while
+//!   a refit is in flight or the trigger has passed.
+//! * Under pressure the target fill shrinks
+//!   ([`BatchScheduler::coupled_fill`], monotone non-increasing in
+//!   pressure, floored at `min_fill`) and deadlines tighten
+//!   ([`BatchScheduler::coupled_deadline`], never later than the
+//!   uncoupled deadline) — the queue drains in small batches so the
+//!   registry swap lands *between* batches ([`Decision::Drain`]).
+//! * A **span guard** refuses fills whose modeled service would cross
+//!   the trigger instant when a smaller fill (or a short wait) avoids
+//!   it — no batch spans a version bump.
+//! * A task overdue for its swap is **held** ([`Decision::Hold`]) for at
+//!   most `hold` past its (tightened) deadline, so the first post-swap
+//!   batch immediately serves the refreshed version; a stuck refresh
+//!   cannot starve the queue.
+//! * Right after a swap, fills are briefly *extended*
+//!   (`post_swap_factor` inside `post_swap_window`) to amortise the
+//!   recomputed [`crate::pipeline::balance`] point over bigger batches.
+//!
 //! All timing flows through the [`Clock`] trait so the scheduler, the
 //! [`super::batcher::Batcher`], and the worker loop are testable on a
 //! [`VirtualClock`] with no wall-clock sleeps. The drift-refresh policy
 //! ([`super::refresh`]) reuses the same clock for its deployment-age
-//! tracking, so trigger→refit→swap cycles are virtual-clock-testable
-//! end to end.
+//! tracking, so trigger→refit→swap cycles — and the scheduler coupling
+//! above — are virtual-clock-testable end to end
+//! (`tests/refresh_sched_e2e.rs` is the conformance suite).
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
@@ -50,6 +82,7 @@ use crate::pmca::kernels::LoraWorkload;
 use crate::pmca::redmule::RedMulE;
 
 use super::batcher::Batcher;
+use super::refresh::{RefreshHandle, RefreshView};
 
 // ---------------------------------------------------------------------------
 // Clock
@@ -136,6 +169,13 @@ pub struct SchedConfig {
     /// Tokens per request sequence. `0` means "inherit the serving
     /// graph's sequence length" (resolved by `ServerBuilder::build`).
     pub seq_len: usize,
+    /// Refresh-coupling policy (`None` = schedule blindly through
+    /// refreshes, the pre-coupling behaviour). Takes effect only when
+    /// the scheduler also holds a [`RefreshHandle`]
+    /// ([`BatchScheduler::with_refresh`]); `ServerBuilder::build` wires
+    /// that automatically when both `.scheduler(..)` and `.refresh(..)`
+    /// are configured.
+    pub coupling: Option<RefreshCoupling>,
 }
 
 impl SchedConfig {
@@ -149,6 +189,7 @@ impl SchedConfig {
             r: r.max(1),
             t_int_ns: 256.0,
             seq_len: 0,
+            coupling: None,
         }
     }
 
@@ -159,6 +200,81 @@ impl SchedConfig {
 
     pub fn seq(mut self, seq_len: usize) -> Self {
         self.seq_len = seq_len;
+        self
+    }
+
+    /// Enable refresh-aware scheduling (see the module docs).
+    pub fn coupling(mut self, c: RefreshCoupling) -> Self {
+        self.coupling = Some(c);
+        self
+    }
+}
+
+/// How the scheduler reacts to the refresh lifecycle of
+/// [`super::refresh`] (see the module docs for the full contract).
+#[derive(Clone, Copy, Debug)]
+pub struct RefreshCoupling {
+    /// How long before a task's modeled `trigger_at` its drift pressure
+    /// starts ramping from 0 toward 1.
+    pub window: Duration,
+    /// Fill floor under full drift pressure (≥ 1).
+    pub min_fill: usize,
+    /// Deadline tightening at full pressure, in [0, 1]: the effective
+    /// wait budget is `max_wait · (1 − deadline_factor · pressure)` —
+    /// deadlines only ever move *earlier* under pressure.
+    pub deadline_factor: f64,
+    /// How long past the (tightened) deadline a task overdue for its
+    /// hot-swap may be held so the swap lands between batches, before
+    /// the scheduler gives up and serves the stale version anyway.
+    pub hold: Duration,
+    /// Window after a hot-swap during which target fills are extended.
+    pub post_swap_window: Duration,
+    /// Fill multiplier inside the post-swap window (≥ 1) — amortises
+    /// the freshly recomputed balance point over bigger batches.
+    pub post_swap_factor: f64,
+}
+
+impl Default for RefreshCoupling {
+    fn default() -> RefreshCoupling {
+        RefreshCoupling {
+            window: Duration::from_millis(250),
+            min_fill: 1,
+            deadline_factor: 0.5,
+            hold: Duration::from_millis(20),
+            post_swap_window: Duration::from_millis(250),
+            post_swap_factor: 2.0,
+        }
+    }
+}
+
+impl RefreshCoupling {
+    pub fn window(mut self, d: Duration) -> Self {
+        self.window = d;
+        self
+    }
+
+    pub fn min_fill(mut self, n: usize) -> Self {
+        self.min_fill = n.max(1);
+        self
+    }
+
+    pub fn deadline_factor(mut self, f: f64) -> Self {
+        self.deadline_factor = f.clamp(0.0, 1.0);
+        self
+    }
+
+    pub fn hold(mut self, d: Duration) -> Self {
+        self.hold = d;
+        self
+    }
+
+    pub fn post_swap_window(mut self, d: Duration) -> Self {
+        self.post_swap_window = d;
+        self
+    }
+
+    pub fn post_swap_factor(mut self, f: f64) -> Self {
+        self.post_swap_factor = f.max(1.0);
         self
     }
 }
@@ -204,11 +320,33 @@ impl ArrivalEstimator {
 pub enum Decision {
     /// Pop `fill` requests of `task` and serve them now.
     Close { task: String, fill: usize },
+    /// Refresh-coupled close: drift pressure shaped this fill (shrunk
+    /// target and/or span guard), draining the queue in small batches
+    /// so the pending hot-swap lands between batches. Served exactly
+    /// like [`Decision::Close`]; the variant exists so conformance
+    /// tests and metrics can tell coupled closes apart.
+    Drain { task: String, fill: usize },
+    /// `task` is overdue for its hot-swap (trigger passed or refit in
+    /// flight): closing now would serve the stale adapter version, so
+    /// the batch is deliberately deferred until `until` at the latest
+    /// (deadline + [`RefreshCoupling::hold`]) — long enough for the
+    /// swap to land between batches, bounded so a stuck refresh cannot
+    /// starve the queue.
+    Hold { task: String, until: Instant },
     /// Nothing is ready; sleep until `until` (earliest deadline) unless
     /// an arrival wakes the worker first.
     Wait { until: Instant },
     /// No queued work at all.
     Idle,
+}
+
+/// Per-task readiness verdict inside [`BatchScheduler::pick`].
+enum TaskState {
+    /// Pop `fill` now; `drained` = the fill was pressure-shaped.
+    Ready { fill: usize, drained: bool },
+    /// Not ready before `until`; `hold` = deferred for a pending swap
+    /// rather than waiting on fill/deadline.
+    Wake { until: Instant, hold: bool },
 }
 
 /// Cost-based batch scheduler (see the module docs for the contract).
@@ -222,6 +360,9 @@ pub struct BatchScheduler {
     /// a batch of `b` requests at `t_opt`.
     modeled_ns: Vec<f64>,
     arrivals: BTreeMap<String, ArrivalEstimator>,
+    /// Refresh-lifecycle view the coupling policy reads
+    /// ([`Self::with_refresh`]); `None` = pressure is always 0.
+    refresh: Option<RefreshHandle>,
 }
 
 impl BatchScheduler {
@@ -258,7 +399,16 @@ impl BatchScheduler {
             balance,
             modeled_ns,
             arrivals: BTreeMap::new(),
+            refresh: None,
         }
+    }
+
+    /// Attach the shared refresh-lifecycle view. Without it (or without
+    /// [`SchedConfig::coupling`]) drift pressure is always 0 and the
+    /// scheduler behaves exactly like the uncoupled baseline.
+    pub fn with_refresh(mut self, handle: RefreshHandle) -> BatchScheduler {
+        self.refresh = Some(handle);
+        self
     }
 
     pub fn config(&self) -> &SchedConfig {
@@ -311,29 +461,189 @@ impl BatchScheduler {
         self.arrivals.entry(task.to_string()).or_default().observe(now);
     }
 
-    /// Decide the next action over the batcher's queues. A task is
-    /// ready when it reached its modeled-optimal fill or its oldest
-    /// request hit the deadline; among ready tasks the oldest head
-    /// wins (no starvation), matching the fixed batcher's fairness.
-    pub fn pick<T>(&self, batcher: &Batcher<T>, now: Instant) -> Decision {
-        let mut close: Option<(String, usize, Instant)> = None;
-        let mut wake: Option<Instant> = None;
-        for (task, len, head) in batcher.heads() {
-            let deadline = head + self.max_wait;
-            let target = self.target_fill(self.interarrival_ns(task));
-            if len >= target || now >= deadline {
-                let older = close.as_ref().map(|(_, _, h)| head < *h).unwrap_or(true);
-                if older {
-                    close = Some((task.to_string(), len.min(self.max_batch), head));
+    /// One consistent snapshot of `task`'s refresh state (`None` when
+    /// no handle is attached or the task is untracked) — a single lock
+    /// read backing a whole scheduling decision.
+    fn view(&self, task: &str) -> Option<RefreshView> {
+        self.refresh.as_ref().and_then(|h| h.view(task))
+    }
+
+    /// Drift pressure for `task` at `now`, in [0, 1]. 0 without a
+    /// coupling policy or refresh handle; 1 while a refit is in flight
+    /// or past the modeled trigger; ramps linearly over
+    /// [`RefreshCoupling::window`] before the trigger.
+    pub fn drift_pressure(&self, task: &str, now: Instant) -> f64 {
+        self.pressure_from(self.view(task).as_ref(), now)
+    }
+
+    fn pressure_from(&self, view: Option<&RefreshView>, now: Instant) -> f64 {
+        let (Some(c), Some(v)) = (self.cfg.coupling, view) else {
+            return 0.0;
+        };
+        if v.refit_in_flight {
+            return 1.0;
+        }
+        let Some(trigger) = v.trigger_at else {
+            return 0.0;
+        };
+        if now >= trigger {
+            return 1.0;
+        }
+        let left = trigger.saturating_duration_since(now);
+        if c.window.is_zero() || left >= c.window {
+            0.0
+        } else {
+            1.0 - left.as_secs_f64() / c.window.as_secs_f64()
+        }
+    }
+
+    /// Shrink a target fill by drift pressure: monotone non-increasing
+    /// in `pressure`, floored at [`RefreshCoupling::min_fill`], never
+    /// above the unshrunk target (and hence never above `max_batch`).
+    pub fn coupled_fill(&self, target: usize, pressure: f64) -> usize {
+        let target = target.clamp(1, self.max_batch);
+        let Some(c) = self.cfg.coupling else {
+            return target;
+        };
+        let p = pressure.clamp(0.0, 1.0);
+        let shrunk = ((target as f64) * (1.0 - p)).ceil() as usize;
+        shrunk.clamp(c.min_fill.clamp(1, target), target)
+    }
+
+    /// Effective deadline for a head enqueued at `head` under
+    /// `pressure`: tightens toward the head as pressure rises, and is
+    /// never later than the uncoupled `head + max_wait`.
+    pub fn coupled_deadline(&self, head: Instant, pressure: f64) -> Instant {
+        let Some(c) = self.cfg.coupling else {
+            return head + self.max_wait;
+        };
+        let p = pressure.clamp(0.0, 1.0);
+        let keep = (1.0 - c.deadline_factor.clamp(0.0, 1.0) * p).max(0.0);
+        head + self.max_wait.mul_f64(keep)
+    }
+
+    /// Fill multiplier from the post-swap amortisation window (1.0
+    /// outside it).
+    fn boost_from(&self, view: Option<&RefreshView>, now: Instant) -> f64 {
+        let (Some(c), Some(v)) = (self.cfg.coupling, view) else {
+            return 1.0;
+        };
+        match v.last_swap {
+            Some((at, _)) if now.saturating_duration_since(at) < c.post_swap_window => {
+                c.post_swap_factor.max(1.0)
+            }
+            _ => 1.0,
+        }
+    }
+
+    /// The effective target fill for `task` at `now`: the modeled
+    /// throughput-sustaining fill, extended inside the post-swap
+    /// window, then shrunk by drift pressure. Never exceeds
+    /// `max_batch`.
+    pub fn target_fill_for(&self, task: &str, now: Instant) -> usize {
+        let view = self.view(task);
+        let v = view.as_ref();
+        self.shaped_target(task, v, now, self.pressure_from(v, now))
+    }
+
+    fn shaped_target(
+        &self,
+        task: &str,
+        view: Option<&RefreshView>,
+        now: Instant,
+        pressure: f64,
+    ) -> usize {
+        let base = self.target_fill(self.interarrival_ns(task));
+        let boosted = ((base as f64) * self.boost_from(view, now)).round() as usize;
+        self.coupled_fill(boosted.clamp(1, self.max_batch), pressure)
+    }
+
+    /// Per-task readiness under the coupling policy (see module docs).
+    /// The whole decision derives from ONE [`RefreshView`] snapshot, so
+    /// a concurrent runner update can never make the hold gate and the
+    /// fill computation disagree about the task's state.
+    fn assess(&self, task: &str, len: usize, head: Instant, now: Instant) -> TaskState {
+        let view = self.view(task);
+        let v = view.as_ref();
+        let pressure = self.pressure_from(v, now);
+        let deadline = self.coupled_deadline(head, pressure);
+        // overdue for the swap (or mid-refit): hold the queue briefly so
+        // the refreshed adapter serves the next batch; liveness bounded
+        // by `hold` past the already-tightened deadline
+        if pressure >= 1.0 {
+            if let Some(c) = self.cfg.coupling {
+                let hold_until = deadline + c.hold;
+                if now < hold_until {
+                    return TaskState::Wake { until: hold_until, hold: true };
                 }
-            } else {
-                wake = Some(wake.map_or(deadline, |w: Instant| w.min(deadline)));
+            }
+        }
+        let target = self.shaped_target(task, v, now, pressure);
+        if len < target && now < deadline {
+            return TaskState::Wake { until: deadline, hold: false };
+        }
+        // ready: under pressure close at the shrunk target (drain in
+        // small batches); otherwise serve everything queued, as before
+        let mut fill = if pressure > 0.0 {
+            len.min(target)
+        } else {
+            len.min(self.max_batch)
+        };
+        // span guard: never let a batch's modeled service cross the
+        // version bump when a smaller fill (or a short wait) avoids it
+        if pressure > 0.0 {
+            if let Some(trigger) = v.and_then(|view| view.trigger_at) {
+                if now < trigger {
+                    let crosses = |f: usize| now + self.modeled_batch(f) > trigger;
+                    while fill > 1 && crosses(fill) {
+                        fill -= 1;
+                    }
+                    if crosses(fill) && now < deadline {
+                        return TaskState::Wake {
+                            until: deadline.min(trigger),
+                            hold: true,
+                        };
+                    }
+                }
+            }
+        }
+        TaskState::Ready {
+            fill: fill.max(1),
+            drained: pressure > 0.0,
+        }
+    }
+
+    /// Decide the next action over the batcher's queues. A task is
+    /// ready when it reached its (pressure-shaped) target fill or its
+    /// oldest request hit the (pressure-tightened) deadline; among
+    /// ready tasks the oldest head wins (no starvation), matching the
+    /// fixed batcher's fairness. Tasks deferred for a pending hot-swap
+    /// surface as [`Decision::Hold`] when nothing else is ready.
+    pub fn pick<T>(&self, batcher: &Batcher<T>, now: Instant) -> Decision {
+        let mut close: Option<(String, usize, Instant, bool)> = None;
+        let mut wake: Option<(Instant, Option<String>)> = None;
+        for (task, len, head) in batcher.heads() {
+            match self.assess(task, len, head, now) {
+                TaskState::Ready { fill, drained } => {
+                    let older = close.as_ref().map(|(_, _, h, _)| head < *h).unwrap_or(true);
+                    if older {
+                        close = Some((task.to_string(), fill, head, drained));
+                    }
+                }
+                TaskState::Wake { until, hold } => {
+                    let sooner = wake.as_ref().map(|(w, _)| until < *w).unwrap_or(true);
+                    if sooner {
+                        wake = Some((until, hold.then(|| task.to_string())));
+                    }
+                }
             }
         }
         match close {
-            Some((task, fill, _)) => Decision::Close { task, fill },
+            Some((task, fill, _, true)) => Decision::Drain { task, fill },
+            Some((task, fill, _, false)) => Decision::Close { task, fill },
             None => match wake {
-                Some(until) => Decision::Wait { until },
+                Some((until, Some(task))) => Decision::Hold { task, until },
+                Some((until, None)) => Decision::Wait { until },
                 None => Decision::Idle,
             },
         }
@@ -494,5 +804,244 @@ mod tests {
         let t0 = c.now();
         c.sleep(Duration::from_secs(3));
         assert_eq!(c.now() - t0, Duration::from_secs(3));
+    }
+
+    // -- refresh coupling ---------------------------------------------------
+
+    use crate::model::params::ParamStore;
+    use crate::pcm::PcmModel;
+    use crate::serve::refresh::{
+        DecayModel, FnRefitter, Refit, Refitter, RefreshConfig, RefreshPolicy,
+    };
+
+    fn noop_refitter() -> Arc<dyn Refitter> {
+        Arc::new(FnRefitter(
+            |_: &str, _: &ParamStore, _: &ParamStore, budget: usize| -> anyhow::Result<Refit> {
+                Ok(Refit { params: ParamStore::default(), steps: budget })
+            },
+        ))
+    }
+
+    /// A policy tracking task "t" (v1) since `clock.now()`, plus its
+    /// shared handle — the scheduler-facing refresh state.
+    fn tracked_policy(clock: &VirtualClock, time_scale: f64) -> (RefreshPolicy, RefreshHandle) {
+        let cfg = RefreshConfig::new(DecayModel::analytic(PcmModel::default()), noop_refitter())
+            .tolerance(0.05)
+            .time_scale(time_scale);
+        let mut p = RefreshPolicy::new(cfg);
+        p.track("t", clock.now(), 1);
+        let h = p.handle();
+        (p, h)
+    }
+
+    #[test]
+    fn drift_pressure_ramps_inside_the_window_and_saturates() {
+        let clock = VirtualClock::new();
+        let t0 = clock.now();
+        let (_p, h) = tracked_policy(&clock, 1.0);
+        let trigger = h.trigger_at("t").expect("analytic model crosses");
+        let lead = trigger - t0;
+        let window = lead / 10;
+
+        let coupled = BatchScheduler::new(
+            SchedConfig::for_layer(128, 128, 8)
+                .seq(320)
+                .coupling(RefreshCoupling::default().window(window)),
+            8,
+            Duration::from_millis(5),
+        )
+        .with_refresh(h.clone());
+
+        // far out: zero pressure; window edge: still zero
+        assert_eq!(coupled.drift_pressure("t", t0), 0.0);
+        assert_eq!(coupled.drift_pressure("t", trigger - window), 0.0);
+        // mid-window: linear ramp
+        let mid = coupled.drift_pressure("t", trigger - window / 2);
+        assert!((mid - 0.5).abs() < 1e-3, "mid-window pressure {mid}");
+        // at/past the trigger: saturated
+        assert_eq!(coupled.drift_pressure("t", trigger), 1.0);
+        assert_eq!(coupled.drift_pressure("t", trigger + window), 1.0);
+        // a refit in flight saturates regardless of distance
+        h.begin_refit("t");
+        assert_eq!(coupled.drift_pressure("t", t0), 1.0);
+        h.end_refit("t");
+        assert_eq!(coupled.drift_pressure("t", t0), 0.0);
+        // untracked tasks never feel pressure
+        assert_eq!(coupled.drift_pressure("other", trigger), 0.0);
+
+        // no coupling config => no pressure, even with the handle
+        let uncoupled = BatchScheduler::new(
+            SchedConfig::for_layer(128, 128, 8).seq(320),
+            8,
+            Duration::from_millis(5),
+        )
+        .with_refresh(h);
+        assert_eq!(uncoupled.drift_pressure("t", trigger + window), 0.0);
+    }
+
+    #[test]
+    fn coupled_fill_shrinks_monotonically_to_the_floor() {
+        let clock = VirtualClock::new();
+        let (_p, h) = tracked_policy(&clock, 1.0);
+        let s = BatchScheduler::new(
+            SchedConfig::for_layer(128, 128, 8)
+                .seq(320)
+                .coupling(RefreshCoupling::default().min_fill(2)),
+            8,
+            Duration::from_millis(5),
+        )
+        .with_refresh(h);
+        assert_eq!(s.coupled_fill(8, 0.0), 8);
+        assert_eq!(s.coupled_fill(8, 0.5), 4);
+        assert_eq!(s.coupled_fill(8, 1.0), 2, "floored at min_fill");
+        let mut last = usize::MAX;
+        for i in 0..=20 {
+            let f = s.coupled_fill(8, i as f64 / 20.0);
+            assert!(f <= last, "fill must be monotone non-increasing");
+            assert!((2..=8).contains(&f));
+            last = f;
+        }
+        // the uncoupled scheduler passes targets through untouched
+        let plain = sched(8);
+        assert_eq!(plain.coupled_fill(5, 1.0), 5);
+    }
+
+    #[test]
+    fn coupled_deadline_only_ever_tightens() {
+        let clock = VirtualClock::new();
+        let (_p, h) = tracked_policy(&clock, 1.0);
+        let max_wait = Duration::from_millis(10);
+        let s = BatchScheduler::new(
+            SchedConfig::for_layer(128, 128, 8)
+                .seq(320)
+                .coupling(RefreshCoupling::default().deadline_factor(0.5)),
+            8,
+            max_wait,
+        )
+        .with_refresh(h);
+        let head = clock.now();
+        let base = head + max_wait;
+        assert_eq!(s.coupled_deadline(head, 0.0), base);
+        assert_eq!(s.coupled_deadline(head, 1.0), head + max_wait / 2);
+        let mut last = base + Duration::from_secs(1);
+        for i in 0..=20 {
+            let d = s.coupled_deadline(head, i as f64 / 20.0);
+            assert!(d <= base, "a coupled deadline may never move later");
+            assert!(d <= last, "deadline monotone non-increasing in pressure");
+            last = d;
+        }
+    }
+
+    #[test]
+    fn overdue_task_is_held_then_released_at_the_hold_bound() {
+        let clock = Arc::new(VirtualClock::new());
+        // compress the modeled trigger to ~1ms of pool clock
+        let age = DecayModel::analytic(PcmModel::default()).trigger_age(0.05);
+        let (_p, h) = tracked_policy(&clock, age / 1e-3);
+        let max_wait = Duration::from_millis(5);
+        let hold = Duration::from_millis(3);
+        let mut s = BatchScheduler::new(
+            SchedConfig::for_layer(128, 128, 8)
+                .seq(320)
+                .coupling(RefreshCoupling::default().hold(hold).deadline_factor(0.0)),
+            8,
+            max_wait,
+        )
+        .with_refresh(h.clone());
+        let mut b: Batcher<u32> =
+            Batcher::with_clock(8, max_wait, clock.clone() as Arc<dyn Clock>);
+
+        // move past the trigger, then enqueue
+        let trigger = h.trigger_at("t").unwrap();
+        clock.advance(trigger - clock.now() + Duration::from_micros(10));
+        let head = clock.now();
+        s.observe_arrival("t", head);
+        b.push("t", 1);
+
+        // overdue: the queue is held for the swap, not closed
+        match s.pick(&b, clock.now()) {
+            Decision::Hold { task, until } => {
+                assert_eq!(task, "t");
+                assert_eq!(until, head + max_wait + hold, "hold is deadline + hold budget");
+            }
+            other => panic!("expected Hold, got {other:?}"),
+        }
+        // ...even at the plain deadline
+        clock.advance(max_wait);
+        assert!(matches!(s.pick(&b, clock.now()), Decision::Hold { .. }));
+        // past the hold bound: liveness wins, the stale batch drains
+        clock.advance(hold);
+        match s.pick(&b, clock.now()) {
+            Decision::Drain { task, fill } => {
+                assert_eq!(task, "t");
+                assert_eq!(fill, 1);
+            }
+            other => panic!("expected Drain after the hold bound, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn pressure_shrinks_fills_and_a_swap_restores_then_boosts_them() {
+        use crate::serve::api::Metrics;
+        use crate::serve::refresh::RefreshRunner;
+        use crate::serve::registry::SharedRegistry;
+
+        let clock = Arc::new(VirtualClock::new());
+        let registry = SharedRegistry::new();
+        registry.deploy(
+            "t",
+            ParamStore::from_tensors(vec![crate::model::params::Tensor::zeros("a", &[1])]),
+        );
+        let age = DecayModel::analytic(PcmModel::default()).trigger_age(0.05);
+        let cfg = RefreshConfig::new(DecayModel::analytic(PcmModel::default()), noop_refitter())
+            .tolerance(0.05)
+            .time_scale(age / 10.0); // trigger at ~10s of pool clock
+        let mut runner = RefreshRunner::new(
+            cfg,
+            registry.clone(),
+            Arc::new(ParamStore::default()),
+            Arc::new(Metrics::default()),
+        );
+        runner.track_deployed(clock.now());
+        let h = runner.policy().handle();
+
+        let window = Duration::from_secs(4);
+        let post_swap = Duration::from_secs(2);
+        let mut s = BatchScheduler::new(
+            SchedConfig::for_layer(128, 128, 8).seq(320).coupling(
+                RefreshCoupling::default()
+                    .window(window)
+                    .post_swap_window(post_swap)
+                    .post_swap_factor(2.0),
+            ),
+            8,
+            Duration::from_millis(5),
+        )
+        .with_refresh(h.clone());
+
+        // teach a cadence whose modeled-optimal fill is exactly 4
+        let per = |b: usize| s.modeled_batch_ns(b) / b as f64;
+        let ia = Duration::from_nanos(((per(3) + per(4)) / 2.0).round() as u64);
+        s.observe_arrival("t", clock.now());
+        clock.advance(ia);
+        s.observe_arrival("t", clock.now());
+        assert_eq!(s.target_fill_for("t", clock.now()), 4, "baseline fill");
+
+        let trigger = h.trigger_at("t").unwrap();
+        // half-way into the window the target has shrunk
+        let half = trigger - window / 2;
+        assert!(s.target_fill_for("t", half) < 4, "pressure shrinks the fill");
+        assert_eq!(s.target_fill_for("t", trigger), 1, "saturated pressure hits the floor");
+
+        // run the refresh: swap lands, trigger re-anchors, pressure drops
+        clock.advance(trigger - clock.now() + Duration::from_millis(1));
+        let evs = runner.tick(clock.now());
+        assert_eq!(evs.len(), 1);
+        let now = clock.now();
+        assert_eq!(s.drift_pressure("t", now), 0.0, "fresh deployment: no pressure");
+        // inside the post-swap window fills are extended (4 -> 8)...
+        assert_eq!(s.target_fill_for("t", now), 8, "post-swap amortisation boost");
+        // ...and revert once it closes
+        assert_eq!(s.target_fill_for("t", now + post_swap), 4);
     }
 }

@@ -4,6 +4,8 @@
 //! inputs drawn through the [`Gen`] handle; on failure it reports the
 //! case seed so the exact input is reproducible with `replay`.
 
+use std::time::Duration;
+
 use super::rng::Pcg64;
 
 pub struct Gen {
@@ -35,6 +37,13 @@ impl Gen {
 
     pub fn bool(&mut self) -> bool {
         self.rng.next_u64() & 1 == 1
+    }
+
+    /// Uniform [`Duration`] in `[lo, hi]` at nanosecond granularity
+    /// (for scheduler/refresh timing properties).
+    pub fn duration_in(&mut self, lo: Duration, hi: Duration) -> Duration {
+        debug_assert!(lo <= hi, "duration_in: empty range {lo:?}..={hi:?}");
+        Duration::from_nanos(self.usize_in(lo.as_nanos() as usize, hi.as_nanos() as usize) as u64)
     }
 
     pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
@@ -117,6 +126,19 @@ mod tests {
             assert_eq!(g.usize_in(7, 7), 7, "degenerate range is exact");
             let w = g.usize_in(usize::MAX, usize::MAX);
             assert_eq!(w, usize::MAX);
+        });
+    }
+
+    #[test]
+    fn duration_in_stays_in_range() {
+        check("duration-in-range", 16, |g| {
+            let d = g.duration_in(Duration::from_nanos(5), Duration::from_millis(2));
+            assert!(d >= Duration::from_nanos(5) && d <= Duration::from_millis(2));
+            assert_eq!(
+                g.duration_in(Duration::from_micros(7), Duration::from_micros(7)),
+                Duration::from_micros(7),
+                "degenerate range is exact"
+            );
         });
     }
 

@@ -1,0 +1,238 @@
+//! Shared virtual-clock harness for the refresh ↔ scheduler coupling:
+//! the SAME deploy → serve → drift → refresh → hot-swap scenario backs
+//! both the conformance suite (`tests/refresh_sched_e2e.rs`) and the
+//! stale-request bench (`benches/serving_refresh_sched.rs`), so the
+//! coupling contract is single-sourced and cannot silently diverge
+//! between the two.
+//!
+//! The simulated worker mirrors the pool's worker loop: arrivals feed
+//! the rate estimator and the batcher, the refresh runner ticks on a
+//! deterministic cadence (every arrival), and each popped batch
+//! "executes" for its modeled pipeline latency. Arrivals are paced so
+//! the modeled-optimal fill is `MAX_BATCH`, and the run is positioned
+//! so the modeled drift trigger lands mid-stream.
+
+// Consumed by two separate crates (a test and a bench) that each use a
+// different subset of the harness surface.
+#![allow(dead_code)]
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use ahwa_lora::model::params::{ParamStore, Tensor};
+use ahwa_lora::pcm::PcmModel;
+use ahwa_lora::serve::batcher::Batcher;
+use ahwa_lora::serve::registry::SharedRegistry;
+use ahwa_lora::serve::{
+    BatchScheduler, Clock, DecayModel, Decision, FnRefitter, Metrics, Refit, RefreshConfig,
+    RefreshCoupling, RefreshRunner, SchedConfig, VirtualClock,
+};
+
+pub const MAX_BATCH: usize = 8;
+
+/// Stream length the conformance tests use (the bench runs longer).
+pub const N_REQUESTS_DEFAULT: usize = 512;
+
+/// Single-tensor adapter whose payload tags the deployment.
+pub fn adapter(tag: f32) -> ParamStore {
+    ParamStore::from_tensors(vec![Tensor {
+        name: "lora.a".to_string(),
+        shape: vec![1],
+        data: vec![tag],
+    }])
+}
+
+/// One simulated served batch: pop instant, modeled completion, fill,
+/// and the adapter version its registry snapshot pinned.
+pub struct SimBatch {
+    pub popped_at: Instant,
+    pub done_at: Instant,
+    pub fill: usize,
+    pub version: u64,
+}
+
+pub struct SimRun {
+    pub batches: Vec<SimBatch>,
+    /// Per-request modeled latency (enqueue → modeled completion), ns.
+    pub lat_ns: Vec<f64>,
+    /// Modeled tolerance-crossing instant of the initial deployment.
+    pub trigger_at: Instant,
+    /// When the refresh hot-swap actually landed in the registry.
+    pub swap_at: Instant,
+    pub swap_version: u64,
+    /// Pressure-shaped (`Decision::Drain`) closes observed.
+    pub drains: usize,
+    /// `Decision::Hold` deferrals observed.
+    pub holds: usize,
+}
+
+impl SimRun {
+    pub fn served(&self) -> usize {
+        self.batches.iter().map(|b| b.fill).sum()
+    }
+
+    /// Requests that completed after the modeled trigger while still on
+    /// the pre-refresh adapter version — the stale-service count the
+    /// coupling must drive to zero.
+    pub fn stale_after_trigger(&self) -> usize {
+        self.batches
+            .iter()
+            .filter(|b| b.version < self.swap_version && b.done_at > self.trigger_at)
+            .map(|b| b.fill)
+            .sum()
+    }
+
+    /// Batches whose modeled service interval contains the swap.
+    pub fn spanning_batches(&self) -> usize {
+        self.batches
+            .iter()
+            .filter(|b| b.popped_at < self.swap_at && b.done_at > self.swap_at)
+            .count()
+    }
+
+    /// First batch popped at or after the swap instant.
+    pub fn first_post_swap(&self) -> Option<&SimBatch> {
+        self.batches.iter().find(|b| b.popped_at >= self.swap_at)
+    }
+
+    /// Registry-swap → first-serve gap (zero when nothing served after
+    /// the swap).
+    pub fn swap_gap(&self) -> Duration {
+        self.first_post_swap()
+            .map(|b| b.popped_at.saturating_duration_since(self.swap_at))
+            .unwrap_or_default()
+    }
+}
+
+/// Drive the full cycle on the virtual clock. `coupled` switches the
+/// scheduler's refresh coupling on; the refresh runner itself runs
+/// identically in both modes.
+pub fn simulate(coupled: bool, n_requests: usize) -> SimRun {
+    let clock = Arc::new(VirtualClock::new());
+    let registry = SharedRegistry::new();
+    registry.deploy("task", adapter(1.0));
+
+    let rcfg = RefreshConfig::new(
+        DecayModel::analytic(PcmModel::default()),
+        Arc::new(FnRefitter(
+            |_: &str, _: &ParamStore, _: &ParamStore, budget: usize| -> anyhow::Result<Refit> {
+                Ok(Refit {
+                    params: adapter(2.0),
+                    steps: budget,
+                })
+            },
+        )),
+    )
+    .tolerance(0.05);
+    let mut runner = RefreshRunner::new(
+        rcfg,
+        registry.clone(),
+        Arc::new(ParamStore::default()),
+        Arc::new(Metrics::default()),
+    );
+    runner.track_deployed(clock.now());
+    let handle = runner.policy().handle();
+    let trigger_secs = runner.policy().trigger_age_secs("task").expect("finite trigger");
+
+    let max_wait = Duration::from_millis(5);
+    // derive pacing from an uncoupled probe of the same hardware model
+    let probe = BatchScheduler::new(
+        SchedConfig::for_layer(128, 128, 8).seq(320),
+        MAX_BATCH,
+        max_wait,
+    );
+    let per = |b: usize| probe.modeled_batch_ns(b) / b as f64;
+    // arrivals twice as fast as a full batch's per-request service
+    // time: no fill sustains the rate, so the modeled-optimal fill is
+    // MAX_BATCH and the queue never goes idle mid-run
+    let ia = Duration::from_nanos((per(MAX_BATCH) / 2.0).round() as u64);
+
+    let mut scfg = SchedConfig::for_layer(128, 128, 8).seq(320);
+    if coupled {
+        scfg = scfg.coupling(
+            RefreshCoupling::default()
+                .window(ia * 64)
+                .hold(max_wait)
+                .post_swap_window(ia * 64),
+        );
+    }
+    let mut sched = BatchScheduler::new(scfg, MAX_BATCH, max_wait).with_refresh(handle.clone());
+
+    // position the run so the trigger lands mid-stream
+    let half_span = ia * (n_requests as u32 / 2);
+    clock.advance(Duration::from_secs_f64(trigger_secs) - half_span);
+    let trigger_at = handle.trigger_at("task").expect("modeled trigger");
+
+    let mut batcher: Batcher<Instant> =
+        Batcher::with_clock(MAX_BATCH, max_wait, clock.clone() as Arc<dyn Clock>);
+    let mut run = SimRun {
+        batches: Vec::new(),
+        lat_ns: Vec::with_capacity(n_requests),
+        trigger_at,
+        swap_at: trigger_at,
+        swap_version: 1,
+        drains: 0,
+        holds: 0,
+    };
+
+    // the simulated worker's pop loop: serve every ready batch, record
+    // its modeled service span and pinned adapter version
+    let drain = |sched: &BatchScheduler, batcher: &mut Batcher<Instant>, run: &mut SimRun| {
+        loop {
+            let now = clock.now();
+            let (task, fill, drained) = match sched.pick(batcher, now) {
+                Decision::Close { task, fill } => (task, fill, false),
+                Decision::Drain { task, fill } => (task, fill, true),
+                Decision::Hold { .. } => {
+                    run.holds += 1;
+                    break;
+                }
+                Decision::Wait { .. } | Decision::Idle => break,
+            };
+            if drained {
+                run.drains += 1;
+            }
+            let reqs = batcher.pop_task(&task, fill).expect("ready batch");
+            assert_eq!(reqs.len(), fill, "pop honours the decided fill");
+            let (_, version) = registry.snapshot(&task).expect("deployed");
+            let done_at = now + sched.modeled_batch(fill);
+            for enqueued in &reqs {
+                run.lat_ns
+                    .push(done_at.saturating_duration_since(*enqueued).as_nanos() as f64);
+            }
+            run.batches.push(SimBatch {
+                popped_at: now,
+                done_at,
+                fill,
+                version,
+            });
+        }
+    };
+
+    for _ in 0..n_requests {
+        clock.advance(ia);
+        let now = clock.now();
+        // the background refresh worker's check cadence: every arrival
+        for ev in runner.tick(now) {
+            run.swap_at = ev.at;
+            run.swap_version = ev.version;
+        }
+        sched.observe_arrival("task", now);
+        batcher.push("task", now);
+        drain(&sched, &mut batcher, &mut run);
+    }
+    // flush the tail past any deadline/hold, refresh still ticking
+    let mut rounds = 0;
+    while batcher.pending() > 0 {
+        clock.advance(max_wait);
+        for ev in runner.tick(clock.now()) {
+            run.swap_at = ev.at;
+            run.swap_version = ev.version;
+        }
+        drain(&sched, &mut batcher, &mut run);
+        rounds += 1;
+        assert!(rounds < 64, "tail must drain");
+    }
+    assert_eq!(run.lat_ns.len(), n_requests, "every request served");
+    run
+}

@@ -1,0 +1,264 @@
+//! Concurrency stress tests for the refresh ↔ scheduler ↔ registry
+//! triangle, on the REAL clock: reader/client threads race a storm of
+//! forced refresh evaluations and the suite asserts the bookkeeping
+//! invariants hold exactly — adapter-swap count == version bumps
+//! observed, no ticket lost, `refresh_errors == 0`, and no torn
+//! (adapter, version) pair is ever visible.
+//!
+//! These tests run only in the `--release` lane (`ci.sh --stage
+//! test-release`); the debug lane skips them so `cargo test -q` stays
+//! fast. The pool test additionally needs built artifacts and
+//! self-skips without them, like the other PJRT-backed suites.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use ahwa_lora::config::manifest::{default_artifacts_dir, Manifest};
+use ahwa_lora::data::glue::{GlueGen, GlueTask};
+use ahwa_lora::model::checkpoint;
+use ahwa_lora::model::params::{ParamStore, Tensor};
+use ahwa_lora::pcm::PcmModel;
+use ahwa_lora::serve::registry::SharedRegistry;
+use ahwa_lora::serve::{
+    DecayModel, FnRefitter, Metrics, Refit, RefreshConfig, RefreshCoupling, RefreshRunner,
+    SchedConfig, Server,
+};
+use ahwa_lora::util::rng::Pcg64;
+
+/// Skip in debug builds: these tests spin real threads against the
+/// real clock and belong in the release lane only.
+fn release_only() -> bool {
+    if cfg!(debug_assertions) {
+        eprintln!("skipping stress test: debug build (the --release CI lane runs it)");
+        return false;
+    }
+    true
+}
+
+fn adapter(tag: f32) -> ParamStore {
+    ParamStore::from_tensors(vec![Tensor {
+        name: "lora.a".to_string(),
+        shape: vec![1],
+        data: vec![tag],
+    }])
+}
+
+/// Hermetic storm: concurrent `tick` callers (the `refresh_tick_now`
+/// path is exactly a locked tick on the pool clock) race snapshot
+/// readers while refreshes fire every ~2ms of real time.
+#[test]
+fn refresh_tick_storm_keeps_registry_and_metrics_consistent() {
+    if !release_only() {
+        return;
+    }
+    let registry = SharedRegistry::new();
+    registry.deploy("task", adapter(1.0));
+
+    // the refitted adapter's payload encodes the version the CAS will
+    // assign (current + 1): readers can detect torn pairs exactly
+    let refitter = Arc::new(FnRefitter(
+        |_: &str, current: &ParamStore, _: &ParamStore, budget: usize| -> anyhow::Result<Refit> {
+            Ok(Refit {
+                params: adapter(current.tensors[0].data[0] + 1.0),
+                steps: budget,
+            })
+        },
+    ));
+    let age = DecayModel::analytic(PcmModel::default()).trigger_age(0.05);
+    let rcfg = RefreshConfig::new(DecayModel::analytic(PcmModel::default()), refitter)
+        .tolerance(0.05)
+        .time_scale(age / 2e-3); // a refresh becomes due every ~2ms
+    let metrics = Arc::new(Metrics::default());
+    let mut runner = RefreshRunner::new(
+        rcfg,
+        registry.clone(),
+        Arc::new(ParamStore::default()),
+        metrics.clone(),
+    );
+    runner.track_deployed(Instant::now());
+    let runner = Arc::new(Mutex::new(runner));
+
+    let stop = Arc::new(AtomicBool::new(false));
+    std::thread::scope(|scope| {
+        // the tick storm: 4 threads forcing evaluations concurrently
+        let mut storms = Vec::new();
+        for _ in 0..4 {
+            let (runner, stop) = (runner.clone(), stop.clone());
+            storms.push(scope.spawn(move || {
+                while !stop.load(Ordering::Acquire) {
+                    runner.lock().unwrap().tick(Instant::now());
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+            }));
+        }
+        // readers playing the request path: never a torn pair, never a
+        // version regression
+        let mut readers = Vec::new();
+        for _ in 0..3 {
+            let (registry, stop) = (registry.clone(), stop.clone());
+            readers.push(scope.spawn(move || {
+                let mut last = 0u64;
+                let mut reads = 0u64;
+                while !stop.load(Ordering::Acquire) {
+                    let (params, version) = registry.snapshot("task").expect("deployed");
+                    assert!(version >= last, "version regressed: {version} < {last}");
+                    assert_eq!(
+                        params.tensors[0].data[0], version as f32,
+                        "torn (adapter, version) pair"
+                    );
+                    last = version;
+                    reads += 1;
+                    std::thread::yield_now();
+                }
+                reads
+            }));
+        }
+        std::thread::sleep(Duration::from_millis(150));
+        stop.store(true, Ordering::Release);
+        for s in storms {
+            s.join().unwrap();
+        }
+        for r in readers {
+            let reads = r.join().unwrap();
+            assert!(reads > 0, "reader actually raced the storm");
+        }
+    });
+
+    let runner = runner.lock().unwrap();
+    let refreshes = metrics.refreshes.load(Ordering::Relaxed);
+    assert!(refreshes >= 10, "the storm drove many refresh cycles: {refreshes}");
+    assert_eq!(metrics.refresh_errors.load(Ordering::Relaxed), 0);
+    // every version bump is a refresh, none lost, none double-counted
+    assert_eq!(
+        registry.version("task").unwrap(),
+        1 + refreshes,
+        "version bumps observed == adapter refreshes performed"
+    );
+    assert_eq!(runner.events().len() as u64, refreshes);
+    // the event log records each swap's version exactly once, in order
+    for (i, ev) in runner.events().iter().enumerate() {
+        assert_eq!(ev.version, i as u64 + 2);
+    }
+}
+
+/// Full-pool storm (needs artifacts): N client threads submit through
+/// the coupled scheduler while one thread hammers `refresh_tick_now`;
+/// every ticket must resolve Ok, the refresh loop must stay error-free,
+/// and the pool's adapter-swap count must equal the distinct adapter
+/// versions the clients observed.
+#[test]
+fn pool_survives_client_threads_and_refresh_tick_storm() {
+    if !release_only() {
+        return;
+    }
+    if !default_artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let manifest = Manifest::load(default_artifacts_dir()).unwrap();
+    let v = manifest.variant("tiny").unwrap().clone();
+    let meta = checkpoint::load(manifest.init_path("tiny.meta")).unwrap();
+    let adapter = checkpoint::load(manifest.init_path("tiny.step_cls_lora.train")).unwrap();
+    let registry = SharedRegistry::new();
+    registry.deploy("SST-2", adapter.clone());
+
+    let age = DecayModel::analytic(PcmModel::default()).trigger_age(0.05);
+    let refit_params = adapter.clone();
+    let rcfg = RefreshConfig::new(
+        DecayModel::analytic(PcmModel::default()),
+        Arc::new(FnRefitter(
+            move |_: &str, _: &ParamStore, _: &ParamStore, budget: usize| -> anyhow::Result<Refit> {
+                Ok(Refit {
+                    params: refit_params.clone(),
+                    steps: budget,
+                })
+            },
+        )),
+    )
+    .tolerance(0.05)
+    .time_scale(age / 0.02) // a refresh becomes due every ~20ms
+    .check_every(Duration::from_millis(5));
+
+    let server = Server::builder("tiny")
+        .manifest(manifest)
+        .workers(1)
+        .queue_depth(64)
+        .max_batch(4)
+        .max_wait(Duration::from_millis(2))
+        .scheduler(
+            SchedConfig::for_layer(v.d_model, v.d_model, v.rank)
+                .coupling(RefreshCoupling::default()),
+        )
+        .refresh(rcfg)
+        .build(meta, registry)
+        .unwrap();
+    let client = server.client();
+
+    const THREADS: usize = 4;
+    const PER_THREAD: usize = 40;
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut observed: Vec<u64> = Vec::new();
+    std::thread::scope(|scope| {
+        let storm = {
+            let (server_ref, stop) = (&server, stop.clone());
+            scope.spawn(move || {
+                while !stop.load(Ordering::Acquire) {
+                    server_ref.refresh_tick_now();
+                    std::thread::sleep(Duration::from_micros(500));
+                }
+            })
+        };
+        let clients: Vec<_> = (0..THREADS)
+            .map(|t| {
+                let client = client.clone();
+                let gen = GlueGen::new(GlueTask::Sst2, v.vocab, v.seq);
+                scope.spawn(move || {
+                    let mut rng = Pcg64::new(100 + t as u64);
+                    let mut versions = Vec::with_capacity(PER_THREAD);
+                    for _ in 0..PER_THREAD {
+                        let (tokens, _, _) = gen.example(&mut rng);
+                        let r = client
+                            .submit_with_retry("SST-2", &tokens, Duration::from_secs(30))
+                            .expect("admitted")
+                            .wait()
+                            .expect("every ticket resolves Ok under the storm");
+                        assert!(r.logits.iter().all(|x| x.is_finite()));
+                        versions.push(r.adapter_version);
+                    }
+                    versions
+                })
+            })
+            .collect();
+        for c in clients {
+            observed.extend(c.join().unwrap());
+        }
+        stop.store(true, Ordering::Release);
+        storm.join().unwrap();
+    });
+
+    // no ticket lost: every submitted request produced a response
+    assert_eq!(observed.len(), THREADS * PER_THREAD);
+    let agg = server.metrics();
+    assert_eq!(agg.refresh_errors, 0, "refresh loop stayed error-free");
+    assert_eq!(agg.errors, 0, "no request failed");
+    assert_eq!(agg.served, (THREADS * PER_THREAD) as u64);
+    // adapter-swap accounting: with one worker and one task the served
+    // version sequence is monotone, so the worker's swap count must
+    // equal the number of distinct versions the clients observed
+    let mut distinct: Vec<u64> = observed.clone();
+    distinct.sort_unstable();
+    distinct.dedup();
+    assert_eq!(
+        agg.adapter_swaps,
+        distinct.len() as u64,
+        "adapter-swap count == version bumps observed by clients"
+    );
+    assert_eq!(
+        server.refresh_events().len() as u64,
+        agg.refreshes,
+        "event log and refresh counter agree"
+    );
+    assert!(agg.refreshes >= 1, "the storm drove at least one refresh");
+    server.shutdown().unwrap();
+}

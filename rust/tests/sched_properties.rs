@@ -1,0 +1,187 @@
+//! Property tests for the refresh-coupled batch scheduler, in the
+//! `pcm_properties.rs` style (in-tree `util::proptest`, hermetic, no
+//! artifacts, no sleeps).
+//!
+//! Pinned invariants, for arbitrary arrival rates, fills, window/hold
+//! geometries, and drift pressures:
+//! * the chosen fill is monotone non-increasing in drift pressure and
+//!   never escapes `[1, max_batch]`,
+//! * effective deadlines are monotone non-increasing in pressure and —
+//!   in particular while a refit is in flight (pressure saturated at
+//!   1) — never move later than the uncoupled `head + max_wait`,
+//! * a refit observed mid-flight through the shared `RefreshHandle`
+//!   saturates drift pressure at exactly 1.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use ahwa_lora::model::params::{ParamStore, Tensor};
+use ahwa_lora::pcm::PcmModel;
+use ahwa_lora::serve::registry::SharedRegistry;
+use ahwa_lora::serve::{
+    BatchScheduler, DecayModel, FnRefitter, Metrics, Refit, RefreshConfig, RefreshCoupling,
+    RefreshRunner, SchedConfig, VirtualClock,
+};
+use ahwa_lora::util::proptest::check;
+
+fn sched_with(coupling: RefreshCoupling, max_batch: usize, max_wait: Duration) -> BatchScheduler {
+    BatchScheduler::new(
+        SchedConfig::for_layer(128, 128, 8).seq(320).coupling(coupling),
+        max_batch,
+        max_wait,
+    )
+}
+
+#[test]
+fn coupled_fill_is_monotone_in_pressure_and_never_escapes_bounds() {
+    check("coupled-fill-monotone", 48, |g| {
+        let max_batch = g.usize_in(1, 16);
+        let coupling = RefreshCoupling::default()
+            .min_fill(g.usize_in(1, 16))
+            .deadline_factor(g.f64_in(0.0, 1.0))
+            .window(g.duration_in(Duration::from_micros(1), Duration::from_millis(500)));
+        let s = sched_with(coupling, max_batch, Duration::from_millis(5));
+
+        // targets both inside and beyond max_batch must clamp
+        let target = g.usize_in(1, 2 * max_batch);
+        let mut last = usize::MAX;
+        for i in 0..=16 {
+            let fill = s.coupled_fill(target, i as f64 / 16.0);
+            assert!(
+                (1..=max_batch).contains(&fill),
+                "fill {fill} escaped [1, {max_batch}]"
+            );
+            assert!(
+                fill <= last,
+                "fill must be monotone non-increasing in drift pressure"
+            );
+            last = fill;
+        }
+
+        // arbitrary arrival rates (including unknown/+inf and bursty/0):
+        // the pressure-shaped target obeys the same bounds
+        let ia = if g.bool() { g.f64_in(0.0, 1e9) } else { f64::INFINITY };
+        let p = g.f64_in(0.0, 1.0);
+        let shaped = s.coupled_fill(s.target_fill(ia), p);
+        assert!((1..=max_batch).contains(&shaped));
+    });
+}
+
+#[test]
+fn coupled_deadlines_are_monotone_and_never_later_than_uncoupled() {
+    check("coupled-deadline-never-later", 48, |g| {
+        let max_wait = g.duration_in(Duration::from_micros(10), Duration::from_millis(50));
+        let coupling = RefreshCoupling::default()
+            .deadline_factor(g.f64_in(0.0, 1.0))
+            .hold(g.duration_in(Duration::ZERO, Duration::from_millis(10)));
+        let s = sched_with(coupling, g.usize_in(1, 16), max_wait);
+
+        let clock = VirtualClock::new();
+        clock.advance(g.duration_in(Duration::ZERO, Duration::from_secs(60)));
+        let head = clock.now();
+        let base = head + max_wait;
+        let mut last = base + Duration::from_secs(1);
+        for i in 0..=16 {
+            let d = s.coupled_deadline(head, i as f64 / 16.0);
+            assert!(
+                d <= base,
+                "a coupled deadline may never move later than head + max_wait"
+            );
+            assert!(d >= head, "a deadline can tighten at most to the head");
+            assert!(d <= last, "deadline monotone non-increasing in pressure");
+            last = d;
+        }
+        // saturated pressure is exactly the refit-in-flight case
+        assert!(s.coupled_deadline(head, 1.0) <= base);
+    });
+}
+
+#[test]
+fn refit_in_flight_saturates_pressure_and_keeps_deadlines_early() {
+    check("refit-in-flight-pressure", 24, |g| {
+        let clock = Arc::new(VirtualClock::new());
+        let registry = SharedRegistry::new();
+        registry.deploy(
+            "t",
+            ParamStore::from_tensors(vec![Tensor::zeros("a", &[1])]),
+        );
+
+        let max_wait = g.duration_in(Duration::from_micros(50), Duration::from_millis(20));
+        let max_batch = g.usize_in(1, 12);
+        // window strictly inside the (compressed, ~1ms) trigger lead so
+        // the post-swap re-anchored trigger sits outside it again
+        let coupling = RefreshCoupling::default()
+            .deadline_factor(g.f64_in(0.0, 1.0))
+            .min_fill(g.usize_in(1, 12))
+            .window(g.duration_in(Duration::from_micros(1), Duration::from_micros(500)));
+
+        // heads at random ages behind "now" to probe deadlines with
+        let head_ages: Vec<Duration> = (0..4)
+            .map(|_| g.duration_in(Duration::ZERO, max_wait * 3))
+            .collect();
+
+        // compress the modeled trigger to ~1ms of pool clock
+        let age = DecayModel::analytic(PcmModel::default()).trigger_age(0.05);
+        let slot: Arc<Mutex<Option<Arc<BatchScheduler>>>> = Arc::new(Mutex::new(None));
+        let fired = Arc::new(AtomicBool::new(false));
+        let refitter = {
+            let (slot, fired, clock, head_ages) =
+                (slot.clone(), fired.clone(), clock.clone(), head_ages.clone());
+            let (max_wait_c, max_batch_c) = (max_wait, max_batch);
+            Arc::new(FnRefitter(
+                move |task: &str,
+                      _: &ParamStore,
+                      _: &ParamStore,
+                      budget: usize|
+                      -> anyhow::Result<Refit> {
+                    // observed MID-REFIT, through the shared handle:
+                    let s = slot.lock().unwrap().clone().expect("scheduler published");
+                    let now = clock.now();
+                    assert_eq!(
+                        s.drift_pressure(task, now),
+                        1.0,
+                        "a refit in flight saturates drift pressure"
+                    );
+                    for &age in &head_ages {
+                        let head = now - age;
+                        assert!(
+                            s.coupled_deadline(head, s.drift_pressure(task, now))
+                                <= head + max_wait_c,
+                            "deadlines never move later while a refit is in flight"
+                        );
+                    }
+                    let fill = s.coupled_fill(max_batch_c, s.drift_pressure(task, now));
+                    assert!((1..=max_batch_c).contains(&fill));
+                    fired.store(true, Ordering::Relaxed);
+                    Ok(Refit {
+                        params: ParamStore::from_tensors(vec![Tensor::zeros("a", &[1])]),
+                        steps: budget,
+                    })
+                },
+            ))
+        };
+        let rcfg = RefreshConfig::new(DecayModel::analytic(PcmModel::default()), refitter)
+            .tolerance(0.05)
+            .time_scale(age / 1e-3);
+        let mut runner = RefreshRunner::new(
+            rcfg,
+            registry.clone(),
+            Arc::new(ParamStore::default()),
+            Arc::new(Metrics::default()),
+        );
+        runner.track_deployed(clock.now());
+        let s = Arc::new(
+            sched_with(coupling, max_batch, max_wait).with_refresh(runner.policy().handle()),
+        );
+        *slot.lock().unwrap() = Some(s.clone());
+
+        // past the trigger: the tick runs the (asserting) refit inline
+        clock.advance(Duration::from_millis(1) + Duration::from_micros(10));
+        let events = runner.tick(clock.now());
+        assert_eq!(events.len(), 1, "the refit ran");
+        assert!(fired.load(Ordering::Relaxed), "mid-refit assertions executed");
+        // after the swap the pressure relaxes back to zero
+        assert_eq!(s.drift_pressure("t", clock.now()), 0.0);
+    });
+}
