@@ -83,8 +83,14 @@ fn main() -> anyhow::Result<()> {
     // fills / tighten deadlines ahead of a hot-swap, so the swap lands
     // between batches and the first post-swap batch serves the
     // refreshed adapter — `stale_reqs` / `swap_gap` in the metrics
-    // report how well that works.
-    let server = Server::builder(&variant)
+    // report how well that works. With scheduler + refresh both set the
+    // builder also wires the pool-level coordinator (serve::coord):
+    // tasks sharing a drift tolerance get staggered triggers so their
+    // shards never all stall at once, and the coupling window/hold
+    // adapt to observed swap gaps and measured refit budgets
+    // (`holds_peak` / `stagger_shift` report that). `--no-coord`
+    // reverts to independent per-worker coupling.
+    let mut builder = Server::builder(&variant)
         .manifest(ctx.engine.manifest.clone())
         .workers(workers)
         .queue_depth(args.usize("queue-depth", 128))
@@ -93,8 +99,12 @@ fn main() -> anyhow::Result<()> {
                 .t_int(t_int)
                 .coupling(RefreshCoupling::default()),
         )
-        .refresh(refresh)
-        .build(meta, registry.clone())?;
+        .refresh(refresh);
+    if args.bool("no-coord") {
+        println!("pool refresh coordination: OFF (--no-coord)");
+        builder = builder.no_coordination();
+    }
+    let server = builder.build(meta, registry.clone())?;
     let client = server.client();
     for t in tasks {
         println!(

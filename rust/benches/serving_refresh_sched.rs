@@ -1,28 +1,43 @@
 //! Stale-version request count with and without refresh-coupled
-//! scheduling — hermetic (no artifacts), zero real sleeps: the whole
+//! scheduling, plus coordinated-vs-uncoordinated multi-worker refresh
+//! — hermetic (no artifacts), zero real sleeps: the whole
 //! deploy → serve → drift → refresh → hot-swap cycle runs on the
-//! virtual clock, through the SAME harness the conformance suite uses
-//! (`tests/common/refresh_sim.rs`), just with a longer stream.
+//! virtual clock, through the SAME `SimPool` harness the conformance
+//! suites use (`tests/common/refresh_sim.rs`), just with longer
+//! streams.
 //!
-//! The scenario is the regression the coupling exists to fix: a
-//! sustained request stream crosses a modeled drift trigger mid-run.
-//! Uncoupled, the scheduler batches blindly through the hot-swap and a
-//! tail of requests is served at the stale, drift-degraded adapter
-//! version; coupled, fills shrink and deadlines tighten ahead of the
-//! trigger so the swap lands between batches. Reported per mode: stale
-//! requests (the headline delta), batches spanning the swap, the
-//! registry-swap → first-serve gap, coupling activity (Drain/Hold
-//! decisions), and modeled per-request latency p50/p95 (what the
-//! coupling costs).
+//! Scenario 1 (single worker) is the regression the coupling exists to
+//! fix: a sustained request stream crosses a modeled drift trigger
+//! mid-run. Uncoupled, the scheduler batches blindly through the
+//! hot-swap and a tail of requests is served at the stale,
+//! drift-degraded adapter version; coupled, fills shrink and deadlines
+//! tighten ahead of the trigger so the swap lands between batches.
+//!
+//! Scenario 2 (4 workers × 4 tasks sharing one tolerance) is the
+//! correlated-stall failure the pool coordinator exists to fix: with
+//! every worker coupling to the one refresh runner independently, all
+//! shards enter their hold windows at once (`concurrent_holds_peak` ==
+//! worker count) and the serialized refits stretch tail latency; the
+//! coordinator staggers the triggers (peak == `max_concurrent_holds`)
+//! and adapts window/hold from observed swap gaps and measured refit
+//! budgets. Reported per mode: hold-concurrency peak, worst stagger
+//! shift, and the modeled per-request p50/p99 latency delta.
 
 #[path = "../tests/common/refresh_sim.rs"]
 mod refresh_sim;
 
+use std::sync::atomic::Ordering;
+
 use ahwa_lora::util::bench::Bencher;
 use ahwa_lora::util::stats;
-use refresh_sim::{simulate, SimRun};
+use refresh_sim::{simulate, CoordGeom, SimPool, SimRun};
 
 const N_REQUESTS: usize = 4000;
+
+/// 4-worker scenario (same scale-free geometry as
+/// tests/coord_conformance.rs, longer stream).
+const POOL_TASKS: [&str; 4] = ["t0", "t1", "t2", "t3"];
+const POOL_ROUNDS: usize = 3000;
 
 fn report(label: &str, run: &SimRun) {
     let p = |q: f64| stats::percentile(&run.lat_ns, q) / 1e3;
@@ -40,8 +55,25 @@ fn report(label: &str, run: &SimRun) {
     );
 }
 
+fn report_pool(label: &str, pool: &SimPool) {
+    let p = |q: f64| stats::percentile(&pool.lat_ns, q) / 1e3;
+    println!(
+        "{label}: holds_peak={} (observed {}), stagger_shift {:.1} µs, \
+         {} swap(s), {} hold decision(s), modeled latency p50 {:.2} µs p99 {:.2} µs",
+        pool.metrics.concurrent_holds_peak.load(Ordering::Relaxed),
+        pool.max_holding,
+        pool.metrics.stagger_shift_ns.load(Ordering::Relaxed) as f64 / 1e3,
+        pool.swaps.len(),
+        pool.holds,
+        p(50.0),
+        p(99.0),
+    );
+}
+
 fn main() {
     let mut b = Bencher::with_budget(0.5);
+
+    // -- scenario 1: single worker, coupling ON vs OFF -----------------
     let coupled = b.once("sched/refresh wave, coupling ON", || simulate(true, N_REQUESTS));
     let uncoupled = b.once("sched/refresh wave, coupling OFF", || {
         simulate(false, N_REQUESTS)
@@ -68,5 +100,42 @@ fn main() {
     assert!(
         uncoupled.stale_after_trigger() > 0,
         "the baseline regression must be visible"
+    );
+
+    // -- scenario 2: 4 workers × 4 tasks, coordinator ON vs OFF --------
+    let geom = CoordGeom::derive();
+    let coordinated = b.once("pool refresh, coordinator ON", || {
+        let mut p = geom.pool(4, &POOL_TASKS, true, 1);
+        p.run_rounds(POOL_ROUNDS, geom.ia);
+        p.flush(geom.ia);
+        p
+    });
+    let correlated = b.once("pool refresh, coordinator OFF", || {
+        let mut p = geom.pool(4, &POOL_TASKS, false, 1);
+        p.run_rounds(POOL_ROUNDS, geom.ia);
+        p.flush(geom.ia);
+        p
+    });
+
+    report_pool("coordinator OFF", &correlated);
+    report_pool("coordinator ON ", &coordinated);
+    let p99 = |p: &SimPool| stats::percentile(&p.lat_ns, 99.0) / 1e3;
+    println!(
+        "concurrent-holds peak: {} -> {}; modeled p99 latency: {:.2} µs -> {:.2} µs \
+         ({:+.2} µs delta from de-correlating the stalls)",
+        correlated.max_holding,
+        coordinated.max_holding,
+        p99(&correlated),
+        p99(&coordinated),
+        p99(&coordinated) - p99(&correlated),
+    );
+    assert_eq!(
+        correlated.max_holding,
+        POOL_TASKS.len(),
+        "the uncoordinated pool must exhibit the correlated stall"
+    );
+    assert!(
+        coordinated.max_holding <= 1,
+        "the coordinator must bound hold concurrency at max_concurrent_holds"
     );
 }

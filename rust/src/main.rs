@@ -5,7 +5,7 @@
 //! ahwa-lora train [--variant V] [--steps N] [--noise X] …
 //! ahwa-lora latency [--rank R]          # Fig. 4 pipeline study
 //! ahwa-lora serve-demo [--requests N] [--workers W] [--queue-depth D]
-//!                      [--t-int NS] [--no-sched]
+//!                      [--t-int NS] [--no-sched] [--no-coord]
 //!                      [--refresh-scale S] [--refresh-tol T] [--refresh-steps K]
 //! ahwa-lora list                        # artifacts + variants
 //! ```
@@ -95,6 +95,7 @@ fn serve_demo(args: &Args) -> Result<()> {
     let queue_depth = args.usize("queue-depth", 128);
     let t_int = args.usize("t-int", 256) as f64;
     let no_sched = args.bool("no-sched");
+    let no_coord = args.bool("no-coord");
     let refresh_scale = args.f64("refresh-scale", 0.0);
     let refresh_tol = args.f64("refresh-tol", 0.05);
     let variant = args.str("variant", "mobilebert_proxy");
@@ -148,6 +149,18 @@ fn serve_demo(args: &Args) -> Result<()> {
             println!("refresh coupling: ON (swaps land between batches; watch stale_reqs/swap_gap)");
         }
         builder = builder.scheduler(sched);
+    }
+    if no_coord {
+        // uncoordinated: every worker couples to the refresh runner
+        // independently (tasks sharing a tolerance stall all shards at
+        // once — watch holds_peak)
+        builder = builder.no_coordination();
+        println!("pool refresh coordination: OFF (--no-coord)");
+    } else if refresh_scale > 0.0 && !no_sched {
+        println!(
+            "pool refresh coordination: ON (staggered triggers + adaptive window/hold; \
+             watch holds_peak/stagger_shift)"
+        );
     }
     if refresh_scale > 0.0 {
         // drift-aware refresh: re-fit each task's LoRA against the

@@ -37,6 +37,7 @@ use std::time::{Duration, Instant};
 use crate::model::params::ParamStore;
 use crate::util::stats;
 
+use super::coord::{CoordConfig, RefreshCoordinator};
 use super::pool::{self, Job, WorkRequest, WorkerHandle};
 use super::refresh::{spawn_refresh_worker, RefreshConfig, RefreshEvent, RefreshRunner};
 use super::registry::SharedRegistry;
@@ -195,6 +196,16 @@ pub struct Metrics {
     /// Worst observed gap (ns) between a refresh hot-swap landing in
     /// the registry and the first batch serving the refreshed version.
     pub swap_gap_ns: AtomicU64,
+    /// Most shards observed deferring a batch for a pending hot-swap at
+    /// once (`Decision::Hold`). The pool coordinator's trigger stagger
+    /// ([`super::coord`]) exists to bound this at
+    /// `CoordConfig::max_concurrent_holds`; uncoordinated pools whose
+    /// tasks share a tolerance peak at the full worker count — the
+    /// correlated-stall failure.
+    pub concurrent_holds_peak: AtomicU64,
+    /// Worst trigger re-phase (ns) the coordinator applied when
+    /// staggering (0 = never staggered / coordination off).
+    pub stagger_shift_ns: AtomicU64,
     latencies_us: Mutex<Vec<f64>>,
     batch_sizes: Mutex<Vec<f64>>,
     /// Scheduler-modeled batch latency samples (µs), recorded alongside
@@ -237,6 +248,8 @@ impl Metrics {
             refresh_errors: self.refresh_errors.load(Ordering::Relaxed),
             stale_batch_requests: self.stale_batch_requests.load(Ordering::Relaxed),
             swap_gap_ns: self.swap_gap_ns.load(Ordering::Relaxed),
+            concurrent_holds_peak: self.concurrent_holds_peak.load(Ordering::Relaxed),
+            stagger_shift_ns: self.stagger_shift_ns.load(Ordering::Relaxed),
             batch_mean: stats::mean(&bs),
             lat_p50_ms: stats::percentile(&lat, 50.0) / 1e3,
             lat_p95_ms: stats::percentile(&lat, 95.0) / 1e3,
@@ -276,6 +289,12 @@ pub struct MetricsSnapshot {
     /// Worst observed registry-swap → first-serve gap, ns (0 until a
     /// refreshed version has served a batch).
     pub swap_gap_ns: u64,
+    /// Most shards simultaneously holding for a pending swap (0 when
+    /// nothing was ever held; the coordinator bounds it at
+    /// `max_concurrent_holds`).
+    pub concurrent_holds_peak: u64,
+    /// Worst coordinator trigger re-phase, ns (0 = no staggering).
+    pub stagger_shift_ns: u64,
     pub batch_mean: f64,
     pub lat_p50_ms: f64,
     pub lat_p95_ms: f64,
@@ -321,6 +340,14 @@ impl fmt::Display for MetricsSnapshot {
                 self.swap_gap_ns as f64 / 1e3
             )?;
         }
+        if self.concurrent_holds_peak > 0 || self.stagger_shift_ns > 0 {
+            write!(
+                f,
+                " holds_peak={} stagger_shift={:.1}µs",
+                self.concurrent_holds_peak,
+                self.stagger_shift_ns as f64 / 1e3
+            )?;
+        }
         Ok(())
     }
 }
@@ -346,8 +373,16 @@ pub fn aggregate<'a>(workers: impl IntoIterator<Item = &'a Metrics>) -> MetricsS
         out.refresh_steps += m.refresh_steps.load(Ordering::Relaxed);
         out.refresh_errors += m.refresh_errors.load(Ordering::Relaxed);
         out.stale_batch_requests += m.stale_batch_requests.load(Ordering::Relaxed);
-        // the gap is a worst-case, not a flow: max, not sum
+        // the gap is a worst-case, not a flow: max, not sum — and so are
+        // the hold peak (each worker records the pool-wide count it saw)
+        // and the stagger shift
         out.swap_gap_ns = out.swap_gap_ns.max(m.swap_gap_ns.load(Ordering::Relaxed));
+        out.concurrent_holds_peak = out
+            .concurrent_holds_peak
+            .max(m.concurrent_holds_peak.load(Ordering::Relaxed));
+        out.stagger_shift_ns = out
+            .stagger_shift_ns
+            .max(m.stagger_shift_ns.load(Ordering::Relaxed));
         lat.extend_from_slice(&m.latencies_us.lock().unwrap());
         bs.extend_from_slice(&m.batch_sizes.lock().unwrap());
         modeled.extend_from_slice(&m.modeled_us.lock().unwrap());
@@ -377,6 +412,8 @@ pub struct ServerBuilder {
     fail_every: u64,
     sched: Option<SchedConfig>,
     refresh: Option<RefreshConfig>,
+    coord: Option<CoordConfig>,
+    no_coord: bool,
     clock: Arc<dyn Clock>,
 }
 
@@ -393,6 +430,8 @@ impl fmt::Debug for ServerBuilder {
             .field("fail_every", &self.fail_every)
             .field("sched", &self.sched)
             .field("refresh", &self.refresh)
+            .field("coord", &self.coord)
+            .field("no_coord", &self.no_coord)
             .finish_non_exhaustive()
     }
 }
@@ -412,6 +451,8 @@ impl ServerBuilder {
             fail_every: 0,
             sched: None,
             refresh: None,
+            coord: None,
+            no_coord: false,
             clock: Arc::new(RealClock),
         }
     }
@@ -491,6 +532,28 @@ impl ServerBuilder {
         self
     }
 
+    /// Customise pool-level refresh coordination ([`super::coord`]):
+    /// trigger staggering across tasks/shards and adaptive coupling
+    /// window/hold bounds. A coordinator with the default
+    /// [`CoordConfig`] is wired automatically whenever both
+    /// [`Self::scheduler`] and [`Self::refresh`] are configured; this
+    /// overrides its knobs.
+    pub fn coordination(mut self, cfg: CoordConfig) -> Self {
+        self.coord = Some(cfg);
+        self.no_coord = false;
+        self
+    }
+
+    /// Opt out of pool-level refresh coordination (each worker couples
+    /// to the refresh runner independently, the pre-coordinator
+    /// behaviour). The serve-demo CLI and the serving examples expose
+    /// this as `--no-coord`.
+    pub fn no_coordination(mut self) -> Self {
+        self.no_coord = true;
+        self.coord = None;
+        self
+    }
+
     /// Time source for enqueue stamps, deadline math, and latency
     /// metrics. Production keeps [`RealClock`]. Note the workers'
     /// *channel waits* are wall-clock either way — deterministic-clock
@@ -558,8 +621,23 @@ impl ServerBuilder {
                 let check_every = rcfg.check_every;
                 let metrics = Arc::new(Metrics::default());
                 let mut runner =
-                    RefreshRunner::new(rcfg, registry.clone(), meta.clone(), metrics.clone());
+                    RefreshRunner::new(rcfg, registry.clone(), meta.clone(), metrics.clone())
+                        // the pool clock brackets refits (adaptive hold)
+                        // and anchors swaps at their landing instant
+                        .with_clock(self.clock.clone());
                 runner.track_deployed(self.clock.now());
+                // pool-level coordination: staggered triggers + adaptive
+                // window/hold, wired automatically when the pool also
+                // schedules (the coupling is what consumes the staggered
+                // state); `.no_coordination()` opts out
+                if !self.no_coord && (sched.is_some() || self.coord.is_some()) {
+                    let coordinator = Arc::new(RefreshCoordinator::new(
+                        self.coord.unwrap_or_default(),
+                        runner.policy().handle(),
+                        metrics.clone(),
+                    ));
+                    runner.set_coordinator(coordinator);
+                }
                 Some((runner, metrics, check_every))
             }
             None => None,
@@ -1138,6 +1216,25 @@ mod tests {
         // pools that never served stale stay silent
         let quiet = Metrics::default().snapshot("w").to_string();
         assert!(!quiet.contains("stale_reqs"));
+    }
+
+    #[test]
+    fn hold_peak_and_stagger_counters_flow_into_snapshots() {
+        let m = Metrics::default();
+        m.concurrent_holds_peak.fetch_max(3, Ordering::Relaxed);
+        m.stagger_shift_ns.fetch_max(4_200, Ordering::Relaxed);
+        let s = m.snapshot("w");
+        assert_eq!(s.concurrent_holds_peak, 3);
+        assert_eq!(s.stagger_shift_ns, 4_200);
+        assert!(s.to_string().contains("holds_peak=3"));
+        let n = Metrics::default();
+        n.concurrent_holds_peak.fetch_max(5, Ordering::Relaxed);
+        let agg = aggregate([&m, &n]);
+        assert_eq!(agg.concurrent_holds_peak, 5, "peak aggregates as the worst case");
+        assert_eq!(agg.stagger_shift_ns, 4_200);
+        // uncoordinated pools stay silent
+        let quiet = Metrics::default().snapshot("w").to_string();
+        assert!(!quiet.contains("holds_peak"));
     }
 
     #[test]

@@ -1,0 +1,630 @@
+//! Pool-level refresh coordination: staggered triggers and adaptive
+//! coupling bounds.
+//!
+//! Per-worker refresh coupling ([`super::sched::RefreshCoupling`]) keeps
+//! *one* shard's hot-swaps landing between batches, but every worker
+//! couples to the single [`RefreshRunner`](super::refresh::RefreshRunner)
+//! independently. Tasks that share a drift tolerance were deployed at
+//! the same instant, so their modeled triggers coincide — and every
+//! shard enters its hold window at once: a correlated stall across the
+//! whole pool exactly when it should be absorbing traffic. The fixed
+//! `window`/`hold` durations have the dual problem: a Trainer refit
+//! takes seconds, a closure refit microseconds, and one constant fits
+//! neither.
+//!
+//! [`RefreshCoordinator`] owns the global view and fixes both:
+//!
+//! * **Staggering** ([`stagger_assign`]): per-task triggers are
+//!   re-phased *earlier* (never later — freshness is never sacrificed)
+//!   within a configurable slack, so at most `max_concurrent_holds`
+//!   shards ([`CoordConfig`]) can sit in a hold window at any
+//!   instant. Assignment is a pure, deterministic
+//!   function of the (trigger, task) set: permutation-invariant in task
+//!   order and total-order-preserving on trigger times (property-tested
+//!   in `tests/coord_conformance.rs`).
+//! * **Adaptive window**: each task's coupling window is derived from
+//!   the EWMA of its observed registry-swap → first-serve gaps
+//!   ([`RefreshHandle::observe_swap_gap`]), replacing the fixed
+//!   `window` of [`RefreshCoupling`](super::sched::RefreshCoupling).
+//! * **Adaptive hold**: the hold bound is derived from the refitter's
+//!   measured step budget ([`Refitter::observed_budget`] plus the
+//!   runner's pool-clock bracket), so pools hold exactly as long as a
+//!   swap realistically needs.
+//!
+//! Decisions flow back through the shared
+//! [`RefreshHandle`](super::refresh::RefreshHandle) —
+//! `staggered_at` / `adaptive window` / `adaptive hold` per task — so
+//! the existing scheduler logic (`coupled_fill`, `coupled_deadline`,
+//! the span guard) consumes staggered, adaptive state with **no
+//! worker-side API change**. `ServerBuilder::build` wires a coordinator
+//! automatically when both `.scheduler(..)` and `.refresh(..)` are
+//! configured (`.no_coordination()` opts out); its activity lands in
+//! [`Metrics::concurrent_holds_peak`] and [`Metrics::stagger_shift_ns`].
+//!
+//! [`Refitter::observed_budget`]: super::refresh::Refitter::observed_budget
+//! [`RefreshHandle::observe_swap_gap`]: super::refresh::RefreshHandle::observe_swap_gap
+//! [`Metrics::concurrent_holds_peak`]: super::api::Metrics::concurrent_holds_peak
+//! [`Metrics::stagger_shift_ns`]: super::api::Metrics::stagger_shift_ns
+
+use std::collections::BTreeMap;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::api::Metrics;
+use super::refresh::{CoordDecision, RefreshHandle};
+
+// ---------------------------------------------------------------------------
+// Configuration
+// ---------------------------------------------------------------------------
+
+/// Pool-coordination knobs, passed to `ServerBuilder::coordination`
+/// (the builder applies `CoordConfig::default()` automatically when
+/// both a scheduler and a refresh policy are configured).
+#[derive(Clone, Copy, Debug)]
+pub struct CoordConfig {
+    /// Hard cap on shards simultaneously inside a hold window: the
+    /// stagger re-phases triggers until no instant exceeds it.
+    pub max_concurrent_holds: usize,
+    /// How far before its modeled tolerance crossing a trigger may be
+    /// re-phased. Staggering only ever moves triggers *earlier*, so the
+    /// slack bounds extra refresh work, never staleness.
+    pub slack: Duration,
+    /// Multiplier on the observed swap-gap EWMA when deriving a task's
+    /// adaptive coupling window.
+    pub window_gain: f64,
+    /// Clamp range for the adaptive window (keeps a collapsed or
+    /// exploded EWMA from producing a degenerate coupling).
+    pub min_window: Duration,
+    pub max_window: Duration,
+    /// Multiplier on the measured refit budget when deriving a task's
+    /// adaptive hold bound (margin over the raw refit duration so the
+    /// swap's registry write also fits).
+    pub hold_gain: f64,
+    /// Clamp range for the adaptive hold.
+    pub min_hold: Duration,
+    pub max_hold: Duration,
+    /// Hold-interval length assumed for tasks with no measured refit
+    /// budget yet (first cycle): used in the stagger spacing fallback.
+    pub fallback_hold: Duration,
+    /// Ramp-window length assumed for tasks with no observed swap gap
+    /// yet — and the permanent FLOOR of the stagger spacing: a shard
+    /// can start deferring (span guard) up to one ramp window — or one
+    /// modeled batch, whichever is larger; the scheduler floors the
+    /// consumed window there — before its trigger, so the spacing
+    /// covers `max(windows, fallback_window) + hold`, not just the
+    /// hold. Keep this at or above the deployment's modeled max-batch
+    /// latency.
+    pub fallback_window: Duration,
+}
+
+impl Default for CoordConfig {
+    fn default() -> CoordConfig {
+        CoordConfig {
+            max_concurrent_holds: 1,
+            slack: Duration::from_millis(500),
+            window_gain: 1.0,
+            min_window: Duration::from_micros(100),
+            max_window: Duration::from_secs(10),
+            hold_gain: 1.25,
+            min_hold: Duration::from_micros(100),
+            max_hold: Duration::from_secs(120),
+            fallback_hold: Duration::from_millis(20),
+            // the fixed RefreshCoupling default window
+            fallback_window: Duration::from_millis(250),
+        }
+    }
+}
+
+impl CoordConfig {
+    pub fn max_concurrent_holds(mut self, n: usize) -> Self {
+        self.max_concurrent_holds = n.max(1);
+        self
+    }
+
+    pub fn slack(mut self, d: Duration) -> Self {
+        self.slack = d;
+        self
+    }
+
+    pub fn window_gain(mut self, g: f64) -> Self {
+        self.window_gain = g.max(f64::MIN_POSITIVE);
+        self
+    }
+
+    pub fn window_bounds(mut self, min: Duration, max: Duration) -> Self {
+        self.min_window = min.max(Duration::from_nanos(1));
+        self.max_window = max.max(self.min_window);
+        self
+    }
+
+    pub fn hold_gain(mut self, g: f64) -> Self {
+        self.hold_gain = g.max(f64::MIN_POSITIVE);
+        self
+    }
+
+    pub fn hold_bounds(mut self, min: Duration, max: Duration) -> Self {
+        self.min_hold = min.max(Duration::from_nanos(1));
+        self.max_hold = max.max(self.min_hold);
+        self
+    }
+
+    pub fn fallback_hold(mut self, d: Duration) -> Self {
+        self.fallback_hold = d.max(Duration::from_nanos(1));
+        self
+    }
+
+    pub fn fallback_window(mut self, d: Duration) -> Self {
+        self.fallback_window = d.max(Duration::from_nanos(1));
+        self
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stagger assignment (pure)
+// ---------------------------------------------------------------------------
+
+/// One task's input to [`stagger_assign`].
+#[derive(Clone, Debug)]
+pub struct StaggerEntry {
+    pub task: String,
+    /// Modeled tolerance-crossing instant.
+    pub trigger: Instant,
+    /// How long the task's shard is expected to sit in a hold window
+    /// once the trigger passes (the adaptive hold bound).
+    pub span: Duration,
+}
+
+/// Re-phase triggers so at most `k` hold intervals
+/// `[staggered, staggered + span)` overlap at any instant, moving each
+/// trigger at most `slack` earlier (never later).
+///
+/// Deterministic and permutation-invariant: entries are processed in
+/// `(trigger, task)` order regardless of input order. Total-order
+/// preserving: if `trigger_a ≤ trigger_b` (ties broken by task name)
+/// then `staggered_a ≤ staggered_b`. Best-effort at the slack boundary:
+/// an assignment that would need more than `slack` of shift is clamped,
+/// trading the concurrency bound for freshness (never the other way).
+pub fn stagger_assign(
+    entries: &[StaggerEntry],
+    k: usize,
+    slack: Duration,
+) -> Vec<(String, Instant)> {
+    stagger_assign_with_fixed(entries, &[], k, slack)
+}
+
+/// [`stagger_assign`] with additional immovable `(start, span)` hold
+/// intervals (tasks already overdue or mid-refit whose stall is in
+/// progress): assignable triggers are placed around them too.
+pub fn stagger_assign_with_fixed(
+    entries: &[StaggerEntry],
+    fixed: &[(Instant, Duration)],
+    k: usize,
+    slack: Duration,
+) -> Vec<(String, Instant)> {
+    let k = k.max(1);
+    let mut sorted: Vec<&StaggerEntry> = entries.iter().collect();
+    sorted.sort_by(|a, b| a.trigger.cmp(&b.trigger).then_with(|| a.task.cmp(&b.task)));
+
+    // process latest-first: the latest trigger keeps its phase, earlier
+    // ones shift left past already-placed hold intervals as needed
+    let mut placed: Vec<(Instant, Duration)> = fixed.to_vec();
+    let mut out: Vec<(String, Instant)> = Vec::with_capacity(sorted.len());
+    let mut next_assigned: Option<Instant> = None;
+    for e in sorted.iter().rev() {
+        let floor = slack_floor(e.trigger, slack);
+        // order preservation: never later than the task after us
+        let mut cand = match next_assigned {
+            Some(n) => e.trigger.min(n),
+            None => e.trigger,
+        };
+        loop {
+            // placed intervals overlapping [cand, cand + span)
+            let mut overlapping: Vec<Instant> = placed
+                .iter()
+                .filter(|(s, sp)| *s < cand + e.span && cand < *s + *sp)
+                .map(|(s, _)| *s)
+                .collect();
+            if overlapping.len() < k {
+                break;
+            }
+            // slide left until the earliest-starting conflicting hold no
+            // longer overlaps; re-check (we may now conflict further left)
+            overlapping.sort();
+            let earliest = overlapping[0];
+            let Some(shifted) = earliest.checked_sub(e.span) else {
+                break;
+            };
+            if shifted < floor {
+                cand = floor;
+                break;
+            }
+            cand = shifted;
+        }
+        cand = cand.max(floor);
+        // order preservation even in the saturated-floor regime (where
+        // per-trigger floors are no longer monotone): never later than
+        // the task after us. A no-op whenever the slack subtraction was
+        // representable, since there floor ≤ next_assigned always.
+        if let Some(n) = next_assigned {
+            cand = cand.min(n);
+        }
+        placed.push((cand, e.span));
+        next_assigned = Some(cand);
+        out.push((e.task.clone(), cand));
+    }
+    out.reverse();
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator
+// ---------------------------------------------------------------------------
+
+/// Pool-level view of the refresh lifecycle (see the module docs). The
+/// refresh runner rebalances it at the top of every tick; workers and
+/// the runner feed observations through the shared [`RefreshHandle`].
+pub struct RefreshCoordinator {
+    cfg: CoordConfig,
+    handle: RefreshHandle,
+    metrics: Arc<Metrics>,
+}
+
+impl RefreshCoordinator {
+    pub fn new(cfg: CoordConfig, handle: RefreshHandle, metrics: Arc<Metrics>) -> RefreshCoordinator {
+        RefreshCoordinator {
+            cfg,
+            handle,
+            metrics,
+        }
+    }
+
+    pub fn config(&self) -> &CoordConfig {
+        &self.cfg
+    }
+
+    /// The shared lifecycle handle the coordinator writes through.
+    pub fn handle(&self) -> RefreshHandle {
+        self.handle.clone()
+    }
+
+    /// Adaptive coupling window currently assigned to `task`.
+    pub fn adaptive_window(&self, task: &str) -> Option<Duration> {
+        self.handle.adaptive_window(task)
+    }
+
+    /// Adaptive hold bound currently assigned to `task`.
+    pub fn adaptive_hold(&self, task: &str) -> Option<Duration> {
+        self.handle.adaptive_hold(task)
+    }
+
+    /// Staggered trigger currently assigned to `task`.
+    pub fn staggered_at(&self, task: &str) -> Option<Instant> {
+        self.handle.staggered_at(task)
+    }
+
+    /// Recompute adaptive bounds and the trigger stagger from the
+    /// current tracked-task set, and publish the decisions through the
+    /// handle under one write. Pure in its inputs — calling it twice at
+    /// the same instant with the same state is a no-op — so the runner
+    /// can invoke it every tick.
+    pub fn rebalance(&self, now: Instant) {
+        let entries = self.handle.coord_entries();
+        // 1) adaptive bounds from the learned EWMAs
+        let mut decisions: Vec<(String, CoordDecision)> = Vec::with_capacity(entries.len());
+        let mut bounds: Vec<(Option<Duration>, Option<Duration>)> =
+            Vec::with_capacity(entries.len());
+        for e in &entries {
+            let window = e.gap_ewma_ns.map(|ns| {
+                clamp_dur(
+                    mul_dur(Duration::from_nanos(ns.max(0.0).round() as u64), self.cfg.window_gain),
+                    self.cfg.min_window,
+                    self.cfg.max_window,
+                )
+            });
+            let hold = e.refit_ewma_ns.map(|ns| {
+                clamp_dur(
+                    mul_dur(Duration::from_nanos(ns.max(0.0).round() as u64), self.cfg.hold_gain),
+                    self.cfg.min_hold,
+                    self.cfg.max_hold,
+                )
+            });
+            decisions.push((
+                e.task.clone(),
+                CoordDecision {
+                    staggered_at: e.staggered_at,
+                    window,
+                    hold,
+                },
+            ));
+            bounds.push((window, hold));
+        }
+        // a shard can defer from one ramp window before its trigger
+        // (span guard) until the hold bound expires after it. The
+        // stagger intervals are anchored AT the trigger, so to keep the
+        // concurrency bound sound under heterogeneous per-task windows
+        // every span covers the WIDEST window in the pool (a task's
+        // stall can reach that far into its predecessor's interval),
+        // plus the task's own hold. `fallback_window` stays in the max
+        // even once every task has a learned window: the scheduler
+        // floors its deferral reach at the modeled batch latency —
+        // which the coordinator cannot observe — so the configured
+        // fallback doubles as the spacing floor that covers it.
+        let max_window = bounds
+            .iter()
+            .map(|&(w, _)| w.unwrap_or(self.cfg.fallback_window))
+            .max()
+            .unwrap_or(self.cfg.fallback_window)
+            .max(self.cfg.fallback_window);
+        let mut stagger_in: Vec<StaggerEntry> = Vec::new();
+        let mut fixed: Vec<(Instant, Duration)> = Vec::new();
+        for (e, &(_, hold)) in entries.iter().zip(bounds.iter()) {
+            let span = max_window + hold.unwrap_or(self.cfg.fallback_hold);
+            let effective = e.staggered_at.or(e.due_at);
+            match effective {
+                // only future triggers of tasks not mid-refit are
+                // re-phased; an overdue or refitting task's stall is in
+                // progress — keep it as an immovable obstacle instead
+                Some(at) if !e.refitting && at > now => {
+                    // staggering always restarts from the MODELED
+                    // trigger (pure in the tracked state, so repeated
+                    // rebalances are idempotent)
+                    stagger_in.push(StaggerEntry {
+                        task: e.task.clone(),
+                        trigger: e.due_at.unwrap_or(at),
+                        span,
+                    });
+                }
+                Some(at) => {
+                    let start = at.checked_sub(span).unwrap_or(at);
+                    fixed.push((start, span + span));
+                }
+                None => {}
+            }
+        }
+        // 2) stagger the future triggers around the in-progress stalls
+        let assigned: BTreeMap<String, Instant> = stagger_assign_with_fixed(
+            &stagger_in,
+            &fixed,
+            self.cfg.max_concurrent_holds,
+            self.cfg.slack,
+        )
+        .into_iter()
+        .collect();
+        // `decisions` was built in `entries` order: pair them back up
+        // without quadratic searches
+        let mut worst_shift = Duration::ZERO;
+        for (e, d) in entries.iter().zip(decisions.iter_mut()) {
+            let Some(&staggered) = assigned.get(&e.task) else {
+                continue;
+            };
+            let modeled = e.due_at.unwrap_or(staggered);
+            let shift = modeled.saturating_duration_since(staggered);
+            worst_shift = worst_shift.max(shift);
+            // publish only real re-phases; an unshifted task keeps
+            // reading its modeled trigger
+            d.1.staggered_at = (shift > Duration::ZERO).then_some(staggered);
+        }
+        // skip the write lock entirely when nothing changed (the steady
+        // state of every tick between refreshes): workers' view() reads
+        // on the scheduling hot path never contend with a no-op publish
+        let changed = entries.iter().zip(decisions.iter()).any(|(e, (_, d))| {
+            d.staggered_at != e.staggered_at
+                || d.window != e.adaptive_window
+                || d.hold != e.adaptive_hold
+        });
+        if changed {
+            self.handle.apply_coord(&decisions);
+        }
+        if worst_shift > Duration::ZERO {
+            self.metrics
+                .stagger_shift_ns
+                .fetch_max(worst_shift.as_nanos() as u64, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Earliest admissible stagger instant for `trigger` under `slack`.
+/// `Instant` cannot represent times before its platform anchor (boot,
+/// on Linux), so `trigger - slack` can underflow for generous slacks
+/// on a recently-booted host — falling back to `trigger` there would
+/// silently DISABLE staggering (the floor would forbid any earlier
+/// re-phase). Instead, halve the slack until the subtraction is
+/// representable: the floor saturates at (near) the clock's earliest
+/// instant, preserving as much re-phase room as the platform allows.
+fn slack_floor(trigger: Instant, slack: Duration) -> Instant {
+    if let Some(at) = trigger.checked_sub(slack) {
+        return at;
+    }
+    let mut d = slack;
+    while !d.is_zero() {
+        d /= 2;
+        if let Some(at) = trigger.checked_sub(d) {
+            return at;
+        }
+    }
+    trigger
+}
+
+/// Saturating duration scale: a degenerate gain (or an exploded EWMA)
+/// must clamp, never panic the refresh worker mid-rebalance. The cap
+/// (~31M years) is far beyond any clamp bound a config can hold.
+fn mul_dur(d: Duration, f: f64) -> Duration {
+    const MAX_SECS: f64 = 1e15;
+    let secs = d.as_secs_f64() * f;
+    if secs.is_nan() || secs <= 0.0 {
+        return Duration::ZERO;
+    }
+    Duration::from_secs_f64(secs.min(MAX_SECS))
+}
+
+fn clamp_dur(d: Duration, lo: Duration, hi: Duration) -> Duration {
+    d.clamp(lo, hi)
+}
+
+// ---------------------------------------------------------------------------
+// Tests (hermetic; the cross-worker conformance suite lives in
+// tests/coord_conformance.rs)
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entries(base: Instant, offsets_ms: &[u64], span_ms: u64) -> Vec<StaggerEntry> {
+        offsets_ms
+            .iter()
+            .enumerate()
+            .map(|(i, off)| StaggerEntry {
+                task: format!("t{i}"),
+                trigger: base + Duration::from_millis(*off),
+                span: Duration::from_millis(span_ms),
+            })
+            .collect()
+    }
+
+    fn max_overlap(assigned: &[(String, Instant)], span: Duration) -> usize {
+        let mut best = 0;
+        for (_, s) in assigned {
+            let at = *s; // overlap count at each interval start
+            let n = assigned
+                .iter()
+                .filter(|(_, o)| *o <= at && at < *o + span)
+                .count();
+            best = best.max(n);
+        }
+        best
+    }
+
+    #[test]
+    fn colliding_triggers_spread_to_the_concurrency_bound() {
+        let base = Instant::now() + Duration::from_secs(60);
+        let es = entries(base, &[100, 100, 100, 100], 10);
+        let out = stagger_assign(&es, 1, Duration::from_secs(1));
+        assert_eq!(out.len(), 4);
+        assert_eq!(max_overlap(&out, Duration::from_millis(10)), 1);
+        for (task, at) in &out {
+            let e = es.iter().find(|e| e.task == *task).unwrap();
+            assert!(*at <= e.trigger, "stagger never moves a trigger later");
+            assert!(
+                e.trigger - *at <= Duration::from_secs(1),
+                "shift stays within slack"
+            );
+        }
+        // with k=2, pairs may coincide but never triples
+        let out2 = stagger_assign(&es, 2, Duration::from_secs(1));
+        assert!(max_overlap(&out2, Duration::from_millis(10)) <= 2);
+    }
+
+    #[test]
+    fn slack_clamps_best_effort() {
+        let base = Instant::now() + Duration::from_secs(60);
+        let es = entries(base, &[0, 0, 0, 0], 100);
+        // only 50ms of slack for 100ms spans: full separation impossible,
+        // but nothing moves later and nothing escapes the slack
+        let out = stagger_assign(&es, 1, Duration::from_millis(50));
+        for (task, at) in &out {
+            let e = es.iter().find(|e| e.task == *task).unwrap();
+            assert!(*at <= e.trigger && e.trigger - *at <= Duration::from_millis(50));
+        }
+    }
+
+    #[test]
+    fn already_spread_triggers_are_untouched() {
+        let base = Instant::now() + Duration::from_secs(60);
+        let es = entries(base, &[0, 500, 1000, 1500], 10);
+        let out = stagger_assign(&es, 1, Duration::from_secs(1));
+        for (task, at) in &out {
+            let e = es.iter().find(|e| e.task == *task).unwrap();
+            assert_eq!(*at, e.trigger, "no conflict, no shift");
+        }
+    }
+
+    #[test]
+    fn rebalance_publishes_adaptive_bounds_and_stagger_through_the_handle() {
+        use crate::pcm::PcmModel;
+        use crate::serve::refresh::{DecayModel, FnRefitter, Refit, RefreshConfig, RefreshPolicy};
+        use crate::serve::sched::{Clock, VirtualClock};
+
+        let clock = VirtualClock::new();
+        let rcfg = RefreshConfig::new(
+            DecayModel::analytic(PcmModel::default()),
+            Arc::new(FnRefitter(
+                |_: &str,
+                 _: &crate::model::params::ParamStore,
+                 _: &crate::model::params::ParamStore,
+                 budget: usize|
+                 -> anyhow::Result<Refit> {
+                    Ok(Refit {
+                        params: crate::model::params::ParamStore::default(),
+                        steps: budget,
+                    })
+                },
+            )),
+        )
+        .tolerance(0.05);
+        let mut policy = RefreshPolicy::new(rcfg);
+        let now = clock.now();
+        for t in ["a", "b", "c"] {
+            policy.track(t, now, 1);
+        }
+        let h = policy.handle();
+        let metrics = Arc::new(Metrics::default());
+        let coord = RefreshCoordinator::new(
+            CoordConfig::default()
+                .max_concurrent_holds(1)
+                .slack(Duration::from_secs(1_000_000))
+                .fallback_hold(Duration::from_millis(50)),
+            h.clone(),
+            metrics.clone(),
+        );
+
+        // same tolerance => identical triggers; rebalance must spread them
+        let trig = h.trigger_at("a").unwrap();
+        assert_eq!(h.trigger_at("b"), Some(trig));
+        coord.rebalance(now);
+        let mut staggered: Vec<Instant> = ["a", "b", "c"]
+            .iter()
+            .map(|t| h.staggered_at(t).unwrap_or_else(|| h.trigger_at(t).unwrap()))
+            .collect();
+        staggered.sort();
+        assert!(staggered.windows(2).all(|w| w[1] - w[0] >= Duration::from_millis(50)));
+        assert!(staggered.iter().all(|s| *s <= trig));
+        assert!(metrics.stagger_shift_ns.load(Ordering::Relaxed) >= 50_000_000);
+
+        // learned EWMAs become clamped adaptive bounds on the next pass
+        h.observe_swap_gap("a", Duration::from_millis(3));
+        h.observe_refit_duration("a", Duration::from_millis(7));
+        coord.rebalance(now);
+        assert_eq!(coord.adaptive_window("a"), Some(Duration::from_millis(3)));
+        assert_eq!(
+            coord.adaptive_hold("a"),
+            Some(Duration::from_secs_f64(0.007 * 1.25)),
+        );
+        assert_eq!(coord.adaptive_window("b"), None, "no observations, no override");
+
+        // rebalancing twice at the same instant is a no-op
+        let before: Vec<_> = ["a", "b", "c"].iter().map(|t| h.staggered_at(t)).collect();
+        coord.rebalance(now);
+        let after: Vec<_> = ["a", "b", "c"].iter().map(|t| h.staggered_at(t)).collect();
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn config_setters_clamp_to_valid_ranges() {
+        let c = CoordConfig::default()
+            .max_concurrent_holds(0)
+            .window_gain(-1.0)
+            .hold_gain(0.0)
+            .window_bounds(Duration::ZERO, Duration::ZERO)
+            .hold_bounds(Duration::from_secs(5), Duration::from_secs(1))
+            .fallback_hold(Duration::ZERO)
+            .fallback_window(Duration::ZERO);
+        assert_eq!(c.max_concurrent_holds, 1);
+        assert!(c.window_gain > 0.0 && c.hold_gain > 0.0);
+        assert!(c.min_window > Duration::ZERO && c.max_window >= c.min_window);
+        assert!(c.min_hold > Duration::ZERO && c.max_hold >= c.min_hold);
+        assert!(c.fallback_hold > Duration::ZERO);
+        assert!(c.fallback_window > Duration::ZERO);
+    }
+}

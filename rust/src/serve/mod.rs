@@ -33,22 +33,31 @@
 //!      └────────────┬────────────┘   deadlines tighten ahead of the
 //!                   │ time passes    swap; fills extend just after it
 //!                   │ on the pool Clock          ▲
-//!      ┌────────────▼────────────┐               │
-//!      │          DRIFT          │ g(t) = g_prog·((t+t₀)/t₀)^(−ν)
-//!      │ RefreshPolicy predicts  │ post-GDC residual decay vs the
-//!      │ decay from drift age    │ per-task tolerance
-//!      └────────────┬────────────┘
-//!                   │ decay ≥ tolerance
-//!      ┌────────────▼────────────┐
-//!      │         REFRESH         │ Refitter re-fits LoRA against the
-//!      │  (bounded step budget)  │ drifted meta-weights (Trainer);
-//!      └────────────┬────────────┘ coupled workers drain small batches
+//!      ┌────────────▼────────────┐               │ staggered trigger +
+//!      │          DRIFT          │               │ adaptive window/hold
+//!      │ RefreshPolicy predicts  │  ┌────────────┴────────────┐
+//!      │ decay from drift age    │  │       COORDINATE        │
+//!      └────────────┬────────────┘  │ RefreshCoordinator      │
+//!                   │ decay ≥ tol   │ re-phases trigger_at    │
+//!                   │ (staggered:   │ (≤ max_concurrent_holds │
+//!                   │  the coord-   │ shards hold at once);   │
+//!                   │  inator may   │ window ← EWMA(swap_gap) │
+//!                   │  pull the     │ hold ← measured refit   │
+//!                   │  trigger      │ budget (observed_budget)│
+//!                   │  EARLIER)     └────────────▲────────────┘
+//!      ┌────────────▼────────────┐               │ swap-gap + refit
+//!      │         REFRESH         │───────────────┘ timings feed back
+//!      │  (bounded step budget)  │ Refitter re-fits LoRA against the
+//!      └────────────┬────────────┘ drifted meta-weights (Trainer);
+//!                   │              coupled workers drain small batches
 //!                   │              while the refit runs
 //!                   │ deploy_if_version(v) — CAS: a concurrent manual
 //!                   ▼              deploy wins, the stale refit is dropped
 //!              HOT-SWAP (version v+1, O(pointer)) ──► back to SERVE
 //!                   (first post-swap batch serves v+1 immediately;
-//!                    Metrics::swap_gap_ns records the handoff gap)
+//!                    Metrics::swap_gap_ns records the handoff gap,
+//!                    Metrics::concurrent_holds_peak how many shards
+//!                    ever stalled together)
 //! ```
 //!
 //! Supporting pieces:
@@ -67,7 +76,13 @@
 //!   tracking on the pool clock, decay prediction (closed-form or
 //!   Monte-Carlo through the device model), bounded LoRA refits, and
 //!   versioned hot-swaps, publishing per-task phase through the shared
-//!   [`refresh::RefreshHandle`].
+//!   [`refresh::RefreshHandle`],
+//! * [`coord`]    — pool-level refresh coordination: staggers modeled
+//!   triggers across tasks/shards (bounding simultaneous hold windows
+//!   at `max_concurrent_holds`) and adapts each task's coupling window
+//!   (from observed swap gaps) and hold (from the refitter's measured
+//!   step budget), feeding decisions back through the same
+//!   [`refresh::RefreshHandle`] the schedulers already read.
 //!
 //! (The deprecated `serve::router` / `serve::server` shims from the
 //! pre-builder API are gone; [`api`] is the only serving surface.)
@@ -93,11 +108,14 @@
 //! Because scheduler and refresh share the clock, assertions like
 //! "zero requests served at a stale version" or "no batch spans a
 //! version bump" are exact, not probabilistic. The conformance suite
-//! for the coupling lives in `tests/refresh_sched_e2e.rs`; the
+//! for the coupling lives in `tests/refresh_sched_e2e.rs`, the
+//! cross-worker coordination suite in `tests/coord_conformance.rs`
+//! (both on the shared `tests/common/refresh_sim.rs` harness); the
 //! scheduler-policy property tests in `tests/sched_properties.rs`.
 
 pub mod api;
 pub mod batcher;
+pub mod coord;
 mod pool;
 pub mod refresh;
 pub mod registry;
@@ -107,9 +125,10 @@ pub use api::{
     aggregate, submit_wave, submit_wave_results, Client, Metrics, MetricsSnapshot, Pending,
     Response, ServeError, ServeResult, Server, ServerBuilder,
 };
+pub use coord::{stagger_assign, CoordConfig, RefreshCoordinator, StaggerEntry};
 pub use refresh::{
-    DecayModel, FnRefitter, Refit, Refitter, RefreshConfig, RefreshEvent, RefreshHandle,
-    RefreshPolicy, RefreshRunner, RefreshView, TrainerRefitter,
+    BudgetMeter, DecayModel, FnRefitter, Refit, Refitter, RefreshConfig, RefreshEvent,
+    RefreshHandle, RefreshPolicy, RefreshRunner, RefreshView, TrainerRefitter,
 };
 pub use sched::{
     BatchScheduler, Clock, Decision, RealClock, RefreshCoupling, SchedConfig, VirtualClock,

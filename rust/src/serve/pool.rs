@@ -155,6 +155,12 @@ fn worker_loop(
     // held tasks wake at deadline+hold, so the batcher's plain earliest
     // deadline is no longer always the right sleep bound)
     let mut sched_wake: Option<Instant> = None;
+    // the ONE task this shard is currently deferring for a pending
+    // hot-swap (pick surfaces at most one Hold at a time). Keeping it
+    // worker-local means the shared handle is only touched on actual
+    // hold transitions — never on the ordinary per-batch path — and
+    // the pool-wide holding count stays a count of stalled SHARDS.
+    let mut holding_task: Option<String> = None;
 
     loop {
         if open {
@@ -184,6 +190,14 @@ fn worker_loop(
                 Some(Job::Shutdown) => {
                     open = false;
                     drain_deadline = cfg.clock.now() + DRAIN_GRACE;
+                    // drain mode bypasses the scheduler's Close arm, so
+                    // release any hold now — a dead shard must not keep
+                    // inflating the pool-wide holding count
+                    if let Some(prev) = holding_task.take() {
+                        if let Some(h) = cfg.refresh.as_ref() {
+                            h.set_holding(&prev, false);
+                        }
+                    }
                 }
                 None => {}
             }
@@ -208,9 +222,36 @@ fn worker_loop(
             } else if let Some(s) = sched.as_ref() {
                 match s.pick(&batcher, now) {
                     Decision::Close { task, fill } | Decision::Drain { task, fill } => {
+                        if holding_task.as_deref() == Some(task.as_str()) {
+                            if let Some(h) = cfg.refresh.as_ref() {
+                                h.set_holding(&task, false);
+                            }
+                            holding_task = None;
+                        }
                         batcher.pop_task(&task, fill).map(|items| (task, items))
                     }
-                    Decision::Hold { until, .. } | Decision::Wait { until } => {
+                    Decision::Hold { task, until } => {
+                        // publish the deferral (on transitions only):
+                        // the pool coordinator's stagger exists to
+                        // bound how many shards sit here at once, and
+                        // `concurrent_holds_peak` reports whether it
+                        // succeeded
+                        if holding_task.as_deref() != Some(task.as_str()) {
+                            if let Some(h) = cfg.refresh.as_ref() {
+                                if let Some(prev) = holding_task.take() {
+                                    h.set_holding(&prev, false);
+                                }
+                                let holding = h.set_holding(&task, true) as u64;
+                                metrics
+                                    .concurrent_holds_peak
+                                    .fetch_max(holding, Ordering::Relaxed);
+                            }
+                            holding_task = Some(task);
+                        }
+                        sched_wake = Some(until);
+                        None
+                    }
+                    Decision::Wait { until } => {
                         sched_wake = Some(until);
                         None
                     }
@@ -296,6 +337,9 @@ fn serve_batch(
                     metrics
                         .swap_gap_ns
                         .fetch_max(gap.as_nanos() as u64, Ordering::Relaxed);
+                    // feed the coordinator's adaptive window: the EWMA
+                    // of these gaps replaces the fixed coupling window
+                    h.observe_swap_gap(&task, gap);
                     gap_recorded.insert(task.clone(), version);
                 }
             }

@@ -32,7 +32,7 @@
 //!   scheduling — see [`super::sched`]'s coupling docs).
 //! * [`Refitter`] re-fits one adapter against the drifted meta-weights.
 //!   [`TrainerRefitter`] drives [`Trainer`] with a bounded step budget;
-//!   [`FnRefitter`] wraps a closure for tests and cheap demos.
+//!   [`struct@FnRefitter`] wraps a closure for tests and cheap demos.
 //! * [`RefreshRunner`] executes the cycle: predict → refit → hot-swap
 //!   through [`SharedRegistry::deploy_if_version`] (versioned, monotone,
 //!   torn-read-free: in-flight batches finish on the `Arc` snapshot they
@@ -190,6 +190,34 @@ pub struct Refit {
     pub steps: usize,
 }
 
+/// Thread-safe EWMA of observed refit wall durations — the "measured
+/// step budget" channel [`Refitter::observed_budget`] publishes and the
+/// pool coordinator ([`super::coord`]) turns into an adaptive hold
+/// bound. Stored as nanoseconds; zero means "nothing observed yet".
+#[derive(Debug, Default)]
+pub struct BudgetMeter {
+    ewma_ns: std::sync::atomic::AtomicU64,
+}
+
+impl BudgetMeter {
+    pub fn record(&self, d: Duration) {
+        // a zero-length refit still counts as an observation (1 ns), so
+        // `observed()` can distinguish "instant" from "never measured"
+        let x = (d.as_nanos() as u64).max(1);
+        let prev = self.ewma_ns.load(Ordering::Relaxed);
+        let next = ewma_update((prev != 0).then_some(prev as f64), x as f64).round() as u64;
+        self.ewma_ns.store(next.max(1), Ordering::Relaxed);
+    }
+
+    /// Smoothed refit duration; `None` until the first observation.
+    pub fn observed(&self) -> Option<Duration> {
+        match self.ewma_ns.load(Ordering::Relaxed) {
+            0 => None,
+            ns => Some(Duration::from_nanos(ns)),
+        }
+    }
+}
+
 /// Re-fits one task's adapter against the drifted meta-weights.
 pub trait Refitter: Send + Sync {
     /// `current` is the live adapter snapshot the refresh is replacing;
@@ -202,10 +230,42 @@ pub trait Refitter: Send + Sync {
         drifted_meta: &ParamStore,
         step_budget: usize,
     ) -> Result<Refit>;
+
+    /// Measured wall time one refit realistically needs (smoothed over
+    /// past calls, across all tasks this refitter serves).
+    /// [`TrainerRefitter`] and [`struct@FnRefitter`] self-time every
+    /// successful `refit` call through a [`BudgetMeter`]. The refresh
+    /// runner prefers its own per-task pool-clock bracket and falls
+    /// back to this refitter-wide estimate only when it has no clock —
+    /// either way the pool coordinator derives the adaptive hold bound
+    /// from the result (Trainer refits take seconds, closure refits
+    /// microseconds — a fixed hold duration fits neither).
+    fn observed_budget(&self) -> Option<Duration> {
+        None
+    }
 }
 
-/// Closure refitter for tests, benches, and cheap demos.
-pub struct FnRefitter<F>(pub F);
+/// Closure refitter for tests, benches, and cheap demos. Construct with
+/// the function-call form `FnRefitter(closure)` (a constructor function
+/// keeps the historical tuple-struct syntax while the struct itself
+/// carries a self-timing [`BudgetMeter`]).
+pub struct FnRefitter<F> {
+    f: F,
+    meter: BudgetMeter,
+}
+
+/// Constructor matching the original `FnRefitter(closure)` tuple-struct
+/// syntax used throughout the tests, benches, and examples.
+#[allow(non_snake_case)]
+pub fn FnRefitter<F>(f: F) -> FnRefitter<F>
+where
+    F: Fn(&str, &ParamStore, &ParamStore, usize) -> Result<Refit> + Send + Sync,
+{
+    FnRefitter {
+        f,
+        meter: BudgetMeter::default(),
+    }
+}
 
 impl<F> Refitter for FnRefitter<F>
 where
@@ -218,7 +278,18 @@ where
         drifted_meta: &ParamStore,
         step_budget: usize,
     ) -> Result<Refit> {
-        (self.0)(task, current, drifted_meta, step_budget)
+        let t0 = Instant::now();
+        let out = (self.f)(task, current, drifted_meta, step_budget);
+        // failed refits don't teach the budget: a fast error must not
+        // drag the adaptive hold bound toward zero
+        if out.is_ok() {
+            self.meter.record(t0.elapsed());
+        }
+        out
+    }
+
+    fn observed_budget(&self) -> Option<Duration> {
+        self.meter.observed()
     }
 }
 
@@ -235,6 +306,9 @@ pub struct TrainerRefitter {
     /// Produces one training batch for `(task, step)`.
     #[allow(clippy::type_complexity)]
     batches: Arc<dyn Fn(&str, usize, &mut Pcg64) -> OwnedBatch + Send + Sync>,
+    /// Self-timed refit durations (engine bring-up + bounded training),
+    /// published through [`Refitter::observed_budget`].
+    meter: BudgetMeter,
 }
 
 impl TrainerRefitter {
@@ -250,6 +324,7 @@ impl TrainerRefitter {
             step_graph: step_graph.to_string(),
             cfg,
             batches,
+            meter: BudgetMeter::default(),
         }
     }
 }
@@ -262,6 +337,7 @@ impl Refitter for TrainerRefitter {
         drifted_meta: &ParamStore,
         step_budget: usize,
     ) -> Result<Refit> {
+        let t0 = Instant::now();
         let engine = crate::runtime::Engine::new(self.manifest.clone())?;
         let mut trainer = Trainer::new(
             &engine,
@@ -273,10 +349,15 @@ impl Refitter for TrainerRefitter {
         let task_name = task.to_string();
         let batches = self.batches.clone();
         trainer.run_steps(step_budget, move |step, rng| batches(&task_name, step, rng))?;
+        self.meter.record(t0.elapsed());
         Ok(Refit {
             params: trainer.train.clone(),
             steps: trainer.step_idx,
         })
+    }
+
+    fn observed_budget(&self) -> Option<Duration> {
+        self.meter.observed()
     }
 }
 
@@ -402,6 +483,28 @@ struct TrackedTask {
     /// When (and to which version) the last *refresh-driven* hot-swap
     /// landed; the scheduler's post-swap fill extension keys off this.
     swapped_at: Option<(Instant, u64)>,
+    /// Coordinator-assigned re-phased trigger ([`super::coord`]): always
+    /// at or before `due_at`, so staggering never sacrifices freshness.
+    /// Cleared on every re-track — a stagger computed for one deployment
+    /// must never carry over to the next (the drift clock re-anchors).
+    staggered_at: Option<Instant>,
+    /// Coordinator-derived coupling window for this task (EWMA of the
+    /// observed swap gap); `None` = use the fixed `RefreshCoupling`
+    /// window. Survives re-tracks: it is a learned task property.
+    adaptive_window: Option<Duration>,
+    /// Coordinator-derived hold bound (from the refitter's measured
+    /// step budget); `None` = fixed `RefreshCoupling` hold.
+    adaptive_hold: Option<Duration>,
+    /// EWMA of observed registry-swap → first-serve gaps (ns), fed by
+    /// the pool workers through [`RefreshHandle::observe_swap_gap`].
+    gap_ewma_ns: Option<f64>,
+    /// EWMA of measured refit durations (ns), fed by the refresh runner
+    /// (its per-task pool-clock bracket; the refitter's self-timed
+    /// [`Refitter::observed_budget`] stands in on clockless runners).
+    refit_ewma_ns: Option<f64>,
+    /// The task's shard is currently deferring it for a pending swap
+    /// (the scheduler returned `Decision::Hold`).
+    holding: bool,
 }
 
 /// Cloneable, thread-safe view of the per-task refresh lifecycle.
@@ -468,6 +571,9 @@ impl RefreshHandle {
             trigger_at: t.due_at,
             refit_in_flight: t.refitting,
             last_swap: t.swapped_at,
+            staggered_at: t.staggered_at,
+            window: t.adaptive_window,
+            hold: t.adaptive_hold,
         })
     }
 
@@ -497,6 +603,146 @@ impl RefreshHandle {
             t.refitting = false;
         }
     }
+
+    // -- coordinator surface (see `super::coord`) ------------------------
+
+    /// Coordinator-staggered trigger for `task` (`None` = not re-phased;
+    /// the modeled [`Self::trigger_at`] applies unchanged).
+    pub fn staggered_at(&self, task: &str) -> Option<Instant> {
+        self.read().get(task)?.staggered_at
+    }
+
+    /// Coordinator-adapted coupling window for `task`, when one has
+    /// been derived from observed swap gaps.
+    pub fn adaptive_window(&self, task: &str) -> Option<Duration> {
+        self.read().get(task)?.adaptive_window
+    }
+
+    /// Coordinator-adapted hold bound for `task`, when one has been
+    /// derived from the refitter's measured step budget.
+    pub fn adaptive_hold(&self, task: &str) -> Option<Duration> {
+        self.read().get(task)?.adaptive_hold
+    }
+
+    /// Feed one observed registry-swap → first-serve gap into the
+    /// task's EWMA (the pool workers call this right where they record
+    /// `Metrics::swap_gap_ns`). The coordinator turns the EWMA into the
+    /// task's adaptive coupling window on its next rebalance.
+    pub fn observe_swap_gap(&self, task: &str, gap: Duration) {
+        if let Some(t) = self.write().get_mut(task) {
+            t.gap_ewma_ns = Some(ewma_update(t.gap_ewma_ns, gap.as_nanos() as f64));
+        }
+    }
+
+    /// Smoothed observed swap gap for `task` (`None` until the first
+    /// observation).
+    pub fn swap_gap_ewma(&self, task: &str) -> Option<Duration> {
+        self.read()
+            .get(task)?
+            .gap_ewma_ns
+            .map(|ns| Duration::from_nanos(ns.max(0.0).round() as u64))
+    }
+
+    /// Feed one measured refit duration into the task's EWMA (the
+    /// refresh runner calls this with its per-task pool-clock bracket,
+    /// or with [`Refitter::observed_budget`] when it has no clock). The
+    /// coordinator turns the EWMA into the task's adaptive hold bound.
+    pub fn observe_refit_duration(&self, task: &str, dur: Duration) {
+        if let Some(t) = self.write().get_mut(task) {
+            t.refit_ewma_ns = Some(ewma_update(t.refit_ewma_ns, dur.as_nanos() as f64));
+        }
+    }
+
+    /// Smoothed measured refit duration for `task`.
+    pub fn refit_duration_ewma(&self, task: &str) -> Option<Duration> {
+        self.read()
+            .get(task)?
+            .refit_ewma_ns
+            .map(|ns| Duration::from_nanos(ns.max(0.0).round() as u64))
+    }
+
+    /// Mark `task` as held / released by its shard's scheduler and
+    /// return the number of held tasks pool-wide. Callers (the worker
+    /// loop, the test harness) flag at most ONE task per shard at a
+    /// time and call only on transitions, so the returned count is a
+    /// count of stalled *shards* — what the workers feed into
+    /// `Metrics::concurrent_holds_peak`, the quantity the
+    /// coordinator's stagger exists to bound.
+    pub fn set_holding(&self, task: &str, holding: bool) -> usize {
+        let mut map = self.write();
+        if let Some(t) = map.get_mut(task) {
+            t.holding = holding;
+        }
+        map.values().filter(|t| t.holding).count()
+    }
+
+    /// Tasks currently deferred (`Decision::Hold`) across the pool —
+    /// one per stalled shard under the callers' one-flag-per-shard
+    /// discipline (see [`Self::set_holding`]).
+    pub fn holding_count(&self) -> usize {
+        self.read().values().filter(|t| t.holding).count()
+    }
+
+    /// One consistent snapshot of everything the coordinator needs to
+    /// rebalance: `(task, modeled due_at, refitting, gap EWMA, refit
+    /// EWMA)` per tracked task, under a single lock read.
+    pub(crate) fn coord_entries(&self) -> Vec<CoordEntry> {
+        self.read()
+            .iter()
+            .map(|(task, t)| CoordEntry {
+                task: task.clone(),
+                due_at: t.due_at,
+                staggered_at: t.staggered_at,
+                adaptive_window: t.adaptive_window,
+                adaptive_hold: t.adaptive_hold,
+                refitting: t.refitting,
+                gap_ewma_ns: t.gap_ewma_ns,
+                refit_ewma_ns: t.refit_ewma_ns,
+            })
+            .collect()
+    }
+
+    /// Apply one rebalance's decisions under a single write lock, so a
+    /// scheduler can never observe task A re-phased but task B not.
+    pub(crate) fn apply_coord(&self, decisions: &[(String, CoordDecision)]) {
+        let mut map = self.write();
+        for (task, d) in decisions {
+            if let Some(t) = map.get_mut(task) {
+                t.staggered_at = d.staggered_at;
+                t.adaptive_window = d.window;
+                t.adaptive_hold = d.hold;
+            }
+        }
+    }
+}
+
+// EWMA step for every observed-duration series in this module (swap
+// gaps, refit durations, BudgetMeter) — the one smoothing shared with
+// the scheduler's arrival estimator (util::stats::EWMA_ALPHA).
+use crate::util::stats::ewma as ewma_update;
+
+/// Coordinator-facing row of [`RefreshHandle::coord_entries`].
+#[derive(Clone, Debug)]
+pub(crate) struct CoordEntry {
+    pub task: String,
+    pub due_at: Option<Instant>,
+    pub staggered_at: Option<Instant>,
+    /// Currently PUBLISHED adaptive bounds (for rebalance change
+    /// detection — an unchanged decision set skips the write lock).
+    pub adaptive_window: Option<Duration>,
+    pub adaptive_hold: Option<Duration>,
+    pub refitting: bool,
+    pub gap_ewma_ns: Option<f64>,
+    pub refit_ewma_ns: Option<f64>,
+}
+
+/// One task's rebalance outcome, written back through
+/// [`RefreshHandle::apply_coord`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub(crate) struct CoordDecision {
+    pub staggered_at: Option<Instant>,
+    pub window: Option<Duration>,
+    pub hold: Option<Duration>,
 }
 
 /// Snapshot of one task's refresh lifecycle, read atomically from the
@@ -511,6 +757,24 @@ pub struct RefreshView {
     pub refit_in_flight: bool,
     /// Instant and version of the last refresh-driven hot-swap.
     pub last_swap: Option<(Instant, u64)>,
+    /// Coordinator-staggered trigger, always ≤ `trigger_at` (see
+    /// [`super::coord`]); `None` when the pool runs uncoordinated.
+    pub staggered_at: Option<Instant>,
+    /// Coordinator-adapted coupling window (overrides the fixed
+    /// [`RefreshCoupling::window`](super::sched::RefreshCoupling)).
+    pub window: Option<Duration>,
+    /// Coordinator-adapted hold bound (overrides the fixed
+    /// [`RefreshCoupling::hold`](super::sched::RefreshCoupling)).
+    pub hold: Option<Duration>,
+}
+
+impl RefreshView {
+    /// The trigger the scheduler (and the refresh runner's due check)
+    /// should act on: the staggered instant when the coordinator
+    /// re-phased this task, the modeled one otherwise.
+    pub fn effective_trigger(&self) -> Option<Instant> {
+        self.staggered_at.or(self.trigger_at)
+    }
 }
 
 /// Tracks per-task deployment age on the pool clock and decides when
@@ -550,18 +814,34 @@ impl RefreshPolicy {
         let scaled = age / self.cfg.time_scale;
         let due_at = (scaled.is_finite() && scaled < MAX_DUE_SECS)
             .then(|| now + Duration::from_secs_f64(scaled));
-        // a re-track is a fresh deployment: any in-flight refit flag is
-        // stale, but the last swap instant survives (the post-swap fill
-        // extension spans the re-anchor the swap itself performs)
-        let swapped_at = self.tracked.read().get(task).and_then(|t| t.swapped_at);
-        self.tracked.write().insert(
+        // a re-track is a fresh deployment: any in-flight refit flag —
+        // and any coordinator stagger computed for the PREVIOUS
+        // deployment's trigger — is stale (a surviving stagger would
+        // run the new adapter's drift clock against the old anchor).
+        // The last swap instant survives (the post-swap fill extension
+        // spans the re-anchor the swap itself performs), and so do the
+        // learned swap-gap / refit-duration EWMAs, the adaptive
+        // window/hold derived from them, and the shard's holding flag:
+        // those are task/shard properties, not deployment properties.
+        // ONE write lock for the whole read-modify-insert, so a worker
+        // racing in through set_holding / observe_* can never have its
+        // update resurrected from a stale pre-read snapshot.
+        let mut map = self.tracked.write();
+        let prev = map.get(task).cloned();
+        map.insert(
             task.to_string(),
             TrackedTask {
                 deployed_at: now,
                 version,
                 due_at,
                 refitting: false,
-                swapped_at,
+                swapped_at: prev.as_ref().and_then(|t| t.swapped_at),
+                staggered_at: None,
+                adaptive_window: prev.as_ref().and_then(|t| t.adaptive_window),
+                adaptive_hold: prev.as_ref().and_then(|t| t.adaptive_hold),
+                gap_ewma_ns: prev.as_ref().and_then(|t| t.gap_ewma_ns),
+                refit_ewma_ns: prev.as_ref().and_then(|t| t.refit_ewma_ns),
+                holding: prev.map(|t| t.holding).unwrap_or(false),
             },
         );
     }
@@ -608,14 +888,21 @@ impl RefreshPolicy {
         self.tracked.trigger_at(task)
     }
 
-    /// Tasks whose modeled decay has crossed tolerance at `now` — an
-    /// O(tasks) comparison against the cached crossing instants, no
-    /// decay evaluation on the tick path.
+    /// Tasks whose *effective* trigger has passed at `now` — the
+    /// coordinator-staggered instant when one is assigned (so staggered
+    /// refreshes actually fire early), the modeled crossing otherwise.
+    /// Still an O(tasks) comparison against cached instants: no decay
+    /// evaluation on the tick path.
     pub fn due(&self, now: Instant) -> Vec<String> {
         self.tracked
             .read()
             .iter()
-            .filter(|(_, t)| t.due_at.map(|d| now >= d).unwrap_or(false))
+            .filter(|(_, t)| {
+                t.staggered_at
+                    .or(t.due_at)
+                    .map(|d| now >= d)
+                    .unwrap_or(false)
+            })
             .map(|(task, _)| task.clone())
             .collect()
     }
@@ -662,6 +949,16 @@ pub struct RefreshRunner {
     metrics: Arc<Metrics>,
     events: Vec<RefreshEvent>,
     rng: Pcg64,
+    /// Pool clock for bracketing refits (`None` = report zero-length
+    /// brackets and anchor swaps at the tick instant, the historical
+    /// behaviour). `ServerBuilder::build` always attaches the pool
+    /// clock; virtual-clock tests whose refitters advance the clock
+    /// attach it explicitly so the bracket measures the advance.
+    clock: Option<Arc<dyn Clock>>,
+    /// Pool-level refresh coordinator ([`super::coord`]): rebalanced at
+    /// the top of every tick so staggered triggers and adaptive
+    /// window/hold bounds track the live task set.
+    coordinator: Option<Arc<super::coord::RefreshCoordinator>>,
 }
 
 impl RefreshRunner {
@@ -678,7 +975,28 @@ impl RefreshRunner {
             metrics,
             events: Vec::new(),
             rng: Pcg64::with_stream(0x5e_f7e5, 0xd71f7),
+            clock: None,
+            coordinator: None,
         }
+    }
+
+    /// Attach the pool clock so refits are bracketed on it (feeds the
+    /// adaptive hold) and swaps anchor at their true landing instant
+    /// even when a refit consumes (virtual) time.
+    pub fn with_clock(mut self, clock: Arc<dyn Clock>) -> RefreshRunner {
+        self.clock = Some(clock);
+        self
+    }
+
+    /// Attach the pool-level coordinator; every tick rebalances it
+    /// before evaluating due tasks.
+    pub fn set_coordinator(&mut self, coordinator: Arc<super::coord::RefreshCoordinator>) {
+        self.coordinator = Some(coordinator);
+    }
+
+    /// The attached coordinator, if any.
+    pub fn coordinator(&self) -> Option<&Arc<super::coord::RefreshCoordinator>> {
+        self.coordinator.as_ref()
     }
 
     /// Track every task currently deployed in the registry as "deployed
@@ -736,6 +1054,12 @@ impl RefreshRunner {
     /// clock to the newer adapter).
     pub fn tick(&mut self, now: Instant) -> Vec<RefreshEvent> {
         self.reconcile(now);
+        // rebalance AFTER reconciling: newly tracked / re-anchored tasks
+        // get their stagger and adaptive bounds before the due check
+        // below reads them
+        if let Some(c) = &self.coordinator {
+            c.rebalance(now);
+        }
         let mut out = Vec::new();
         for task in self.policy.due(now) {
             match self.refresh_one(&task, now) {
@@ -777,13 +1101,43 @@ impl RefreshRunner {
         // pressure for this task, so coupled workers drain small batches
         // while the refit runs and the swap lands between batches
         self.policy.tracked.begin_refit(task);
+        let bracket_start = self.clock.as_ref().map(|c| c.now());
         let refit = self
             .policy
             .cfg
             .refitter
             .refit(task, &current, &drifted, self.policy.cfg.step_budget);
+        // the swap lands AFTER the refit: when the pool clock advanced
+        // under the refit (real pools always; virtual tests when the
+        // refitter models a step budget), anchor on the landing instant
+        let landed = self
+            .clock
+            .as_ref()
+            .map(|c| c.now())
+            .unwrap_or(now)
+            .max(now);
         self.policy.tracked.end_refit(task);
         let refit = refit?;
+        // feed the adaptive hold — only from SUCCESSFUL refits (a
+        // fast-failing refit would drag the learned hold toward zero,
+        // then under-hold the first real refit after recovery). The
+        // pool-clock bracket is measured PER TASK; the refitter's
+        // self-timed [`Refitter::observed_budget`] is one meter across
+        // all tasks, so it only stands in when no clock is attached and
+        // the bracket cannot be measured — otherwise one heavy task's
+        // budget would inflate every other task's hold bound.
+        let budget = match bracket_start {
+            Some(t0) => landed.saturating_duration_since(t0),
+            None => self
+                .policy
+                .cfg
+                .refitter
+                .observed_budget()
+                .unwrap_or(Duration::ZERO),
+        };
+        if budget > Duration::ZERO {
+            self.policy.tracked.observe_refit_duration(task, budget);
+        }
 
         let Some(version) = self
             .registry
@@ -792,12 +1146,12 @@ impl RefreshRunner {
             // a manual deploy won the race mid-refit: adopt its version
             // and restart the drift clock from it
             if let Some(v) = self.registry.version(task) {
-                self.policy.track(task, now, v);
+                self.policy.track(task, landed, v);
             }
             return Ok(None);
         };
-        self.policy.on_refreshed(task, now, version);
-        let post = self.policy.predicted_decay(task, now).unwrap_or(0.0);
+        self.policy.on_refreshed(task, landed, version);
+        let post = self.policy.predicted_decay(task, landed).unwrap_or(0.0);
         let ev = RefreshEvent {
             task: task.to_string(),
             drift_age_secs: age,
@@ -805,7 +1159,7 @@ impl RefreshRunner {
             post_decay: post,
             steps: refit.steps,
             version,
-            at: now,
+            at: landed,
         };
         self.metrics.refreshes.fetch_add(1, Ordering::Relaxed);
         self.metrics

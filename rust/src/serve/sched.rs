@@ -248,8 +248,13 @@ impl Default for RefreshCoupling {
 }
 
 impl RefreshCoupling {
+    /// Smallest admissible window/hold: every setter clamps here, so no
+    /// builder input (nor a coordinator-adapted value routed through
+    /// [`super::coord`]) can construct a zero-width coupling phase.
+    pub const MIN_PHASE: Duration = Duration::from_nanos(1);
+
     pub fn window(mut self, d: Duration) -> Self {
-        self.window = d;
+        self.window = d.max(Self::MIN_PHASE);
         self
     }
 
@@ -264,7 +269,7 @@ impl RefreshCoupling {
     }
 
     pub fn hold(mut self, d: Duration) -> Self {
-        self.hold = d;
+        self.hold = d.max(Self::MIN_PHASE);
         self
     }
 
@@ -291,15 +296,11 @@ struct ArrivalEstimator {
 }
 
 impl ArrivalEstimator {
-    const ALPHA: f64 = 0.25;
-
     fn observe(&mut self, now: Instant) {
         if let Some(last) = self.last {
             let dt = now.saturating_duration_since(last).as_nanos() as f64;
-            self.ewma_ns = Some(match self.ewma_ns {
-                Some(e) => (1.0 - Self::ALPHA) * e + Self::ALPHA * dt,
-                None => dt,
-            });
+            // the shared serving-side smoothing (util::stats::EWMA_ALPHA)
+            self.ewma_ns = Some(crate::util::stats::ewma(self.ewma_ns, dt));
         }
         self.last = Some(now);
     }
@@ -483,17 +484,30 @@ impl BatchScheduler {
         if v.refit_in_flight {
             return 1.0;
         }
-        let Some(trigger) = v.trigger_at else {
+        // the pool coordinator may have re-phased this task's trigger
+        // (staggered, always earlier) and adapted the ramp window from
+        // its observed swap gaps; fall back to the modeled trigger and
+        // the fixed coupling window when it hasn't (see `super::coord`)
+        let Some(trigger) = v.effective_trigger() else {
             return 0.0;
         };
         if now >= trigger {
             return 1.0;
         }
+        let window = match v.window {
+            // adaptive window: the published value tracks the observed
+            // swap gap, which under saturated arrivals can be shorter
+            // than one full batch's modeled service — floor it locally
+            // so pressure (and with it the span guard) always engages
+            // before a max-fill batch could span the trigger
+            Some(w) => w.max(self.modeled_batch(self.max_batch)),
+            None => c.window,
+        };
         let left = trigger.saturating_duration_since(now);
-        if c.window.is_zero() || left >= c.window {
+        if window.is_zero() || left >= window {
             0.0
         } else {
-            1.0 - left.as_secs_f64() / c.window.as_secs_f64()
+            1.0 - left.as_secs_f64() / window.as_secs_f64()
         }
     }
 
@@ -569,10 +583,13 @@ impl BatchScheduler {
         let deadline = self.coupled_deadline(head, pressure);
         // overdue for the swap (or mid-refit): hold the queue briefly so
         // the refreshed adapter serves the next batch; liveness bounded
-        // by `hold` past the already-tightened deadline
+        // by the hold budget past the already-tightened deadline — the
+        // coordinator's adaptive hold (derived from the refitter's
+        // measured step budget) when assigned, the fixed one otherwise
         if pressure >= 1.0 {
             if let Some(c) = self.cfg.coupling {
-                let hold_until = deadline + c.hold;
+                let hold = v.and_then(|view| view.hold).unwrap_or(c.hold);
+                let hold_until = deadline + hold;
                 if now < hold_until {
                     return TaskState::Wake { until: hold_until, hold: true };
                 }
@@ -591,8 +608,10 @@ impl BatchScheduler {
         };
         // span guard: never let a batch's modeled service cross the
         // version bump when a smaller fill (or a short wait) avoids it
+        // (the staggered trigger, when assigned, IS the version bump:
+        // the refresh runner fires on it)
         if pressure > 0.0 {
-            if let Some(trigger) = v.and_then(|view| view.trigger_at) {
+            if let Some(trigger) = v.and_then(|view| view.effective_trigger()) {
                 if now < trigger {
                     let crosses = |f: usize| now + self.modeled_batch(f) > trigger;
                     while fill > 1 && crosses(fill) {
@@ -977,6 +996,71 @@ mod tests {
                 assert_eq!(fill, 1);
             }
             other => panic!("expected Drain after the hold bound, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn coordinator_overrides_shape_pressure_window_and_hold() {
+        use crate::serve::refresh::CoordDecision;
+
+        let clock = Arc::new(VirtualClock::new());
+        let t0 = clock.now();
+        let (_p, h) = tracked_policy(&clock, 1.0);
+        let trigger = h.trigger_at("t").expect("analytic model crosses");
+        let lead = trigger - t0;
+        let window = lead / 10;
+        let staggered = trigger - lead / 4;
+        let max_wait = Duration::from_millis(5);
+        let s = BatchScheduler::new(
+            SchedConfig::for_layer(128, 128, 8).seq(320).coupling(
+                RefreshCoupling::default()
+                    .window(window)
+                    .hold(Duration::from_millis(20))
+                    .deadline_factor(0.0),
+            ),
+            8,
+            max_wait,
+        )
+        .with_refresh(h.clone());
+
+        // before the override: pressure keys to the MODELED trigger
+        assert_eq!(s.drift_pressure("t", staggered), 0.0);
+
+        // the coordinator re-phases the trigger and adapts window/hold
+        h.apply_coord(&[(
+            "t".to_string(),
+            CoordDecision {
+                staggered_at: Some(staggered),
+                window: Some(window / 2),
+                hold: Some(Duration::from_millis(3)),
+            },
+        )]);
+
+        // pressure now saturates at the STAGGERED instant (the modeled
+        // trigger is still far in the future)...
+        assert_eq!(s.drift_pressure("t", staggered), 1.0);
+        // ...ramps over the ADAPTIVE window...
+        let mid = s.drift_pressure("t", staggered - window / 4);
+        assert!((mid - 0.5).abs() < 1e-3, "adaptive-window midpoint: {mid}");
+        assert_eq!(s.drift_pressure("t", staggered - window), 0.0);
+
+        // ...and an overdue queue is held for the ADAPTIVE hold bound,
+        // not the fixed one
+        clock.advance(staggered - clock.now() + Duration::from_micros(10));
+        let head = clock.now();
+        let mut b: Batcher<u32> =
+            Batcher::with_clock(8, max_wait, clock.clone() as Arc<dyn Clock>);
+        b.push("t", 1);
+        match s.pick(&b, clock.now()) {
+            Decision::Hold { task, until } => {
+                assert_eq!(task, "t");
+                assert_eq!(
+                    until,
+                    head + max_wait + Duration::from_millis(3),
+                    "hold bound comes from the coordinator, not the fixed coupling"
+                );
+            }
+            other => panic!("expected Hold at the staggered trigger, got {other:?}"),
         }
     }
 

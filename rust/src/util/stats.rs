@@ -7,6 +7,21 @@ pub fn mean(xs: &[f64]) -> f64 {
     xs.iter().sum::<f64>() / xs.len() as f64
 }
 
+/// Smoothing factor shared by the serving-side online estimators
+/// (arrival rate in `serve::sched`, swap-gap / refit-budget series in
+/// `serve::refresh`) — one constant, so the coupling's claim that the
+/// estimators smooth identically cannot silently drift.
+pub const EWMA_ALPHA: f64 = 0.25;
+
+/// One [`EWMA_ALPHA`] step over an optional running value (the first
+/// observation seeds the series).
+pub fn ewma(prev: Option<f64>, x: f64) -> f64 {
+    match prev {
+        Some(e) => (1.0 - EWMA_ALPHA) * e + EWMA_ALPHA * x,
+        None => x,
+    }
+}
+
 pub fn variance(xs: &[f64]) -> f64 {
     if xs.len() < 2 {
         return 0.0;

@@ -1,21 +1,29 @@
-//! Shared virtual-clock harness for the refresh ↔ scheduler coupling:
-//! the SAME deploy → serve → drift → refresh → hot-swap scenario backs
-//! both the conformance suite (`tests/refresh_sched_e2e.rs`) and the
-//! stale-request bench (`benches/serving_refresh_sched.rs`), so the
-//! coupling contract is single-sourced and cannot silently diverge
-//! between the two.
+//! Shared virtual-clock harness for the refresh ↔ scheduler ↔
+//! coordinator stack: the SAME deploy → serve → drift → refresh →
+//! hot-swap machinery backs the single-worker coupling conformance
+//! suite (`tests/refresh_sched_e2e.rs`), the cross-worker coordination
+//! suite (`tests/coord_conformance.rs`), the stale-request bench
+//! (`benches/serving_refresh_sched.rs`), and the runner spin-up of the
+//! stress suite (`tests/refresh_stress.rs`) — so the coupling and
+//! coordination contracts are single-sourced and cannot silently
+//! diverge between suites.
 //!
-//! The simulated worker mirrors the pool's worker loop: arrivals feed
-//! the rate estimator and the batcher, the refresh runner ticks on a
-//! deterministic cadence (every arrival), and each popped batch
-//! "executes" for its modeled pipeline latency. Arrivals are paced so
-//! the modeled-optimal fill is `MAX_BATCH`, and the run is positioned
-//! so the modeled drift trigger lands mid-stream.
+//! [`SimPool`] mirrors the real pool's worker loop, N workers wide, on
+//! ONE shared `VirtualClock`: arrivals feed each worker's rate
+//! estimator and batcher, the refresh runner ticks on a deterministic
+//! cadence, refits consume a configurable amount of *virtual* time (the
+//! modeled step budget), and each popped batch "executes" for its
+//! modeled pipeline latency. Tasks are assigned to workers round-robin,
+//! so a "≥ 4 workers, 4 tasks, one shared tolerance" scenario is
+//! exactly the correlated-stall geometry the pool coordinator
+//! ([`ahwa_lora::serve::coord`]) exists to fix.
 
-// Consumed by two separate crates (a test and a bench) that each use a
-// different subset of the harness surface.
+// Consumed by several separate crates (tests and a bench) that each use
+// a different subset of the harness surface.
 #![allow(dead_code)]
 
+use std::collections::BTreeMap;
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -24,13 +32,15 @@ use ahwa_lora::pcm::PcmModel;
 use ahwa_lora::serve::batcher::Batcher;
 use ahwa_lora::serve::registry::SharedRegistry;
 use ahwa_lora::serve::{
-    BatchScheduler, Clock, DecayModel, Decision, FnRefitter, Metrics, Refit, RefreshConfig,
-    RefreshCoupling, RefreshRunner, SchedConfig, VirtualClock,
+    BatchScheduler, Clock, CoordConfig, DecayModel, Decision, FnRefitter, Metrics, Refit,
+    Refitter, RefreshConfig, RefreshCoordinator, RefreshCoupling, RefreshHandle, RefreshRunner,
+    SchedConfig, VirtualClock,
 };
 
 pub const MAX_BATCH: usize = 8;
 
-/// Stream length the conformance tests use (the bench runs longer).
+/// Stream length the single-worker conformance tests use (the bench
+/// runs longer).
 pub const N_REQUESTS_DEFAULT: usize = 512;
 
 /// Single-tensor adapter whose payload tags the deployment.
@@ -42,14 +52,567 @@ pub fn adapter(tag: f32) -> ParamStore {
     }])
 }
 
-/// One simulated served batch: pop instant, modeled completion, fill,
-/// and the adapter version its registry snapshot pinned.
+/// Analytic-decay refresh runner over `registry` — the spin-up shared
+/// by every suite (the stress tests drive it on the real clock). The
+/// caller still `track_deployed`s at its own epoch.
+pub fn analytic_runner(
+    registry: &SharedRegistry,
+    refitter: Arc<dyn Refitter>,
+    tolerance: f64,
+    time_scale: f64,
+    metrics: Arc<Metrics>,
+) -> RefreshRunner {
+    let cfg = RefreshConfig::new(DecayModel::analytic(PcmModel::default()), refitter)
+        .tolerance(tolerance)
+        .time_scale(time_scale);
+    RefreshRunner::new(
+        cfg,
+        registry.clone(),
+        Arc::new(ParamStore::default()),
+        metrics,
+    )
+}
+
+/// One simulated served batch: worker, pop instant, modeled completion,
+/// fill, and the adapter version its registry snapshot pinned.
 pub struct SimBatch {
+    pub worker: usize,
+    pub task: String,
     pub popped_at: Instant,
     pub done_at: Instant,
     pub fill: usize,
     pub version: u64,
 }
+
+/// One refresh hot-swap as the pool observed it.
+pub struct SwapRecord {
+    pub task: String,
+    /// When the swap landed in the registry (post-refit).
+    pub at: Instant,
+    pub version: u64,
+    /// The MODELED tolerance crossing of the deployment this swap
+    /// replaced (pre-stagger): staggering must keep `at` near or before
+    /// it — never sacrifice freshness for spread.
+    pub modeled_due: Instant,
+    /// First batch served at the new version (`None` until observed).
+    pub first_serve_at: Option<Instant>,
+}
+
+impl SwapRecord {
+    pub fn gap(&self) -> Option<Duration> {
+        self.first_serve_at
+            .map(|t| t.saturating_duration_since(self.at))
+    }
+}
+
+struct SimWorker {
+    sched: BatchScheduler,
+    batcher: Batcher<Instant>,
+    tasks: Vec<String>,
+    /// The one task this shard is currently deferring for a pending
+    /// hot-swap (mirrors the real worker loop: holds publish to the
+    /// shared handle on transitions only, so the pool-wide count is a
+    /// count of stalled shards).
+    holding: Option<String>,
+}
+
+pub struct SimPoolBuilder {
+    workers: usize,
+    tasks: Vec<String>,
+    max_batch: usize,
+    max_wait: Duration,
+    tolerance: f64,
+    /// Pool-clock duration the modeled trigger is compressed to.
+    trigger_in: Duration,
+    coupling: Option<RefreshCoupling>,
+    coord: Option<CoordConfig>,
+    /// Virtual time one refit consumes (the modeled step budget).
+    refit_advance: Duration,
+    sched_cfg: SchedConfig,
+}
+
+impl SimPoolBuilder {
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = n.max(1);
+        self
+    }
+
+    pub fn tasks(mut self, names: &[&str]) -> Self {
+        self.tasks = names.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    pub fn max_batch(mut self, n: usize) -> Self {
+        self.max_batch = n.max(1);
+        self
+    }
+
+    pub fn max_wait(mut self, d: Duration) -> Self {
+        self.max_wait = d;
+        self
+    }
+
+    pub fn tolerance(mut self, tol: f64) -> Self {
+        self.tolerance = tol;
+        self
+    }
+
+    /// Compress the modeled drift trigger to `d` of pool clock (sets
+    /// the refresh `time_scale` accordingly).
+    pub fn trigger_in(mut self, d: Duration) -> Self {
+        self.trigger_in = d;
+        self
+    }
+
+    pub fn coupling(mut self, c: RefreshCoupling) -> Self {
+        self.coupling = Some(c);
+        self
+    }
+
+    /// Attach a pool coordinator (staggered triggers + adaptive
+    /// window/hold). Without it each worker couples independently — the
+    /// pre-coordinator baseline.
+    pub fn coordinate(mut self, cfg: CoordConfig) -> Self {
+        self.coord = Some(cfg);
+        self
+    }
+
+    pub fn refit_advance(mut self, d: Duration) -> Self {
+        self.refit_advance = d;
+        self
+    }
+
+    pub fn build(self) -> SimPool {
+        let clock = Arc::new(VirtualClock::new());
+        let registry = SharedRegistry::new();
+        for t in &self.tasks {
+            registry.deploy(t, adapter(1.0));
+        }
+        let metrics = Arc::new(Metrics::default());
+
+        // refitter: bumps the adapter tag (so torn pairs are detectable)
+        // and consumes `refit_advance` of virtual time — the measured
+        // step budget the adaptive hold derives from
+        let refitter: Arc<dyn Refitter> = {
+            let (clock, advance) = (clock.clone(), self.refit_advance);
+            Arc::new(FnRefitter(
+                move |_: &str,
+                      current: &ParamStore,
+                      _: &ParamStore,
+                      budget: usize|
+                      -> anyhow::Result<Refit> {
+                    clock.advance(advance);
+                    Ok(Refit {
+                        params: adapter(current.tensors[0].data[0] + 1.0),
+                        steps: budget,
+                    })
+                },
+            ))
+        };
+
+        let age = DecayModel::analytic(PcmModel::default()).trigger_age(self.tolerance);
+        let time_scale = age / self.trigger_in.as_secs_f64().max(1e-12);
+        let mut runner = analytic_runner(
+            &registry,
+            refitter,
+            self.tolerance,
+            time_scale,
+            metrics.clone(),
+        )
+        .with_clock(clock.clone() as Arc<dyn Clock>);
+        runner.track_deployed(clock.now());
+        let handle = runner.policy().handle();
+        let coordinator = self.coord.map(|cfg| {
+            let c = Arc::new(RefreshCoordinator::new(cfg, handle.clone(), metrics.clone()));
+            runner.set_coordinator(c.clone());
+            c
+        });
+
+        // one scheduler + batcher per worker, tasks assigned round-robin
+        let mut workers = Vec::with_capacity(self.workers);
+        let mut task_worker = BTreeMap::new();
+        for _ in 0..self.workers {
+            let mut scfg = self.sched_cfg;
+            if let Some(c) = self.coupling {
+                scfg = scfg.coupling(c);
+            }
+            workers.push(SimWorker {
+                sched: BatchScheduler::new(scfg, self.max_batch, self.max_wait)
+                    .with_refresh(handle.clone()),
+                batcher: Batcher::with_clock(
+                    self.max_batch,
+                    self.max_wait,
+                    clock.clone() as Arc<dyn Clock>,
+                ),
+                tasks: Vec::new(),
+                holding: None,
+            });
+        }
+        for (i, t) in self.tasks.iter().enumerate() {
+            let w = i % workers.len();
+            workers[w].tasks.push(t.clone());
+            task_worker.insert(t.clone(), w);
+        }
+        let modeled_due: BTreeMap<String, Instant> = self
+            .tasks
+            .iter()
+            .filter_map(|t| handle.trigger_at(t).map(|at| (t.clone(), at)))
+            .collect();
+
+        SimPool {
+            clock,
+            registry,
+            runner,
+            coordinator,
+            handle,
+            metrics,
+            workers,
+            task_worker,
+            modeled_due,
+            batches: Vec::new(),
+            swaps: Vec::new(),
+            drains: 0,
+            holds: 0,
+            max_holding: 0,
+            lat_ns: Vec::new(),
+        }
+    }
+}
+
+/// N simulated workers + refresh runner (+ optional coordinator) on one
+/// shared `VirtualClock`. See the module docs.
+pub struct SimPool {
+    pub clock: Arc<VirtualClock>,
+    pub registry: SharedRegistry,
+    pub runner: RefreshRunner,
+    pub coordinator: Option<Arc<RefreshCoordinator>>,
+    pub handle: RefreshHandle,
+    pub metrics: Arc<Metrics>,
+    workers: Vec<SimWorker>,
+    task_worker: BTreeMap<String, usize>,
+    /// Modeled (pre-stagger) tolerance crossing of each task's CURRENT
+    /// deployment, refreshed after every runner tick.
+    modeled_due: BTreeMap<String, Instant>,
+    pub batches: Vec<SimBatch>,
+    pub swaps: Vec<SwapRecord>,
+    /// Pressure-shaped (`Decision::Drain`) closes observed.
+    pub drains: usize,
+    /// `Decision::Hold` deferrals observed.
+    pub holds: usize,
+    /// Most tasks simultaneously in a hold across the pool, observed at
+    /// every scheduling decision (holding state only changes at
+    /// decisions, so this is exact on the virtual clock).
+    pub max_holding: usize,
+    /// Per-request modeled latency (enqueue → modeled completion), ns.
+    pub lat_ns: Vec<f64>,
+}
+
+impl SimPool {
+    pub fn builder() -> SimPoolBuilder {
+        SimPoolBuilder {
+            workers: 1,
+            tasks: vec!["task".to_string()],
+            max_batch: MAX_BATCH,
+            max_wait: Duration::from_millis(5),
+            tolerance: 0.05,
+            trigger_in: Duration::from_millis(100),
+            coupling: None,
+            coord: None,
+            refit_advance: Duration::ZERO,
+            sched_cfg: SchedConfig::for_layer(128, 128, 8).seq(320),
+        }
+    }
+
+    pub fn now(&self) -> Instant {
+        self.clock.now()
+    }
+
+    pub fn advance(&self, d: Duration) {
+        self.clock.advance(d);
+    }
+
+    /// Modeled batch latency of worker 0's cost model (all workers
+    /// share the hardware config, so this is the pool-wide pacing
+    /// reference).
+    pub fn modeled_batch_ns(&self, fill: usize) -> f64 {
+        self.workers[0].sched.modeled_batch_ns(fill)
+    }
+
+    /// Enqueue one request for `task` at the current instant on its
+    /// pinned worker (also feeds the worker's arrival-rate estimator).
+    pub fn push(&mut self, task: &str) {
+        let now = self.clock.now();
+        let w = *self.task_worker.get(task).expect("deployed task");
+        self.workers[w].sched.observe_arrival(task, now);
+        self.workers[w].batcher.push(task, now);
+    }
+
+    /// One refresh-runner evaluation at the current instant, recording
+    /// every hot-swap against the modeled due time it replaced.
+    pub fn tick(&mut self) {
+        for ev in self.runner.tick(self.clock.now()) {
+            let modeled_due = self.modeled_due.get(&ev.task).copied().unwrap_or(ev.at);
+            self.swaps.push(SwapRecord {
+                task: ev.task.clone(),
+                at: ev.at,
+                version: ev.version,
+                modeled_due,
+                first_serve_at: None,
+            });
+        }
+        // re-read the (re-anchored) modeled crossings for the next cycle
+        for (task, due) in self.modeled_due.iter_mut() {
+            if let Some(at) = self.handle.trigger_at(task) {
+                *due = at;
+            }
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.workers.iter().map(|w| w.batcher.pending()).sum()
+    }
+
+    /// Run every worker's pop loop until no worker can make progress,
+    /// recording batches, Drain/Hold activity, hold concurrency, and
+    /// first-serve instants for pending swaps.
+    pub fn drain(&mut self) {
+        let mut progressed = true;
+        while progressed {
+            progressed = false;
+            for w in 0..self.workers.len() {
+                let now = self.clock.now();
+                let decision = self.workers[w].sched.pick(&self.workers[w].batcher, now);
+                let (task, fill, drained) = match decision {
+                    Decision::Close { task, fill } => (task, fill, false),
+                    Decision::Drain { task, fill } => (task, fill, true),
+                    Decision::Hold { task, .. } => {
+                        self.holds += 1;
+                        // transition-only, one flagged task per shard —
+                        // exactly the real worker loop's discipline
+                        if self.workers[w].holding.as_deref() != Some(task.as_str()) {
+                            if let Some(prev) = self.workers[w].holding.take() {
+                                self.handle.set_holding(&prev, false);
+                            }
+                            let n = self.handle.set_holding(&task, true);
+                            self.max_holding = self.max_holding.max(n);
+                            self.metrics
+                                .concurrent_holds_peak
+                                .fetch_max(n as u64, Ordering::Relaxed);
+                            self.workers[w].holding = Some(task);
+                        }
+                        continue;
+                    }
+                    Decision::Wait { .. } | Decision::Idle => continue,
+                };
+                if drained {
+                    self.drains += 1;
+                }
+                if self.workers[w].holding.as_deref() == Some(task.as_str()) {
+                    self.handle.set_holding(&task, false);
+                    self.workers[w].holding = None;
+                }
+                let reqs = self.workers[w]
+                    .batcher
+                    .pop_task(&task, fill)
+                    .expect("ready batch");
+                assert_eq!(reqs.len(), fill, "pop honours the decided fill");
+                let (_, version) = self.registry.snapshot(&task).expect("deployed");
+                let done_at = now + self.workers[w].sched.modeled_batch(fill);
+                for enqueued in &reqs {
+                    self.lat_ns
+                        .push(done_at.saturating_duration_since(*enqueued).as_nanos() as f64);
+                }
+                // first batch at a refresh-installed version: record the
+                // swap → serve handoff and feed the coordinator's
+                // adaptive window, exactly like the real pool worker
+                if let Some(rec) = self.swaps.iter_mut().find(|r| {
+                    r.task == task && r.version == version && r.first_serve_at.is_none()
+                }) {
+                    rec.first_serve_at = Some(now);
+                    let gap = now.saturating_duration_since(rec.at);
+                    self.metrics
+                        .swap_gap_ns
+                        .fetch_max(gap.as_nanos() as u64, Ordering::Relaxed);
+                    self.handle.observe_swap_gap(&task, gap);
+                }
+                self.batches.push(SimBatch {
+                    worker: w,
+                    task,
+                    popped_at: now,
+                    done_at,
+                    fill,
+                    version,
+                });
+                progressed = true;
+            }
+        }
+    }
+
+    /// Drive `rounds` arrival rounds: each round advances the clock by
+    /// `ia`, enqueues one request per task, drains every worker, then
+    /// runs one refresh tick (the background worker's check cadence).
+    /// Draining BEFORE the tick means the first serve of a refreshed
+    /// version lands one round after its swap — a stable, non-zero
+    /// swap gap the adaptive window must learn.
+    pub fn run_rounds(&mut self, rounds: usize, ia: Duration) {
+        let tasks: Vec<String> = self.task_worker.keys().cloned().collect();
+        for _ in 0..rounds {
+            self.advance(ia);
+            for t in &tasks {
+                self.push(t);
+            }
+            self.drain();
+            self.tick();
+        }
+    }
+
+    /// Flush the tail past any deadline/hold in `step`-sized advances,
+    /// refresh still ticking on the same drain-then-tick cadence as
+    /// [`Self::run_rounds`] (so swap gaps observed during the flush
+    /// stay consistent with the in-stream ones).
+    pub fn flush(&mut self, step: Duration) {
+        let step = step.max(Duration::from_nanos(1));
+        let mut rounds = 0;
+        while self.pending() > 0 {
+            self.advance(step);
+            self.drain();
+            self.tick();
+            rounds += 1;
+            assert!(rounds < 8192, "tail must drain");
+        }
+    }
+
+    pub fn served(&self) -> usize {
+        self.batches.iter().map(|b| b.fill).sum()
+    }
+
+    /// Swap records of `task`, in order.
+    pub fn swaps_for(&self, task: &str) -> Vec<&SwapRecord> {
+        self.swaps.iter().filter(|r| r.task == task).collect()
+    }
+
+    /// Mean observed swap → first-serve gap for `task` (the "true" gap
+    /// the adaptive window must converge towards).
+    pub fn mean_gap(&self, task: &str) -> Option<Duration> {
+        let gaps: Vec<Duration> = self
+            .swaps_for(task)
+            .iter()
+            .filter_map(|r| r.gap())
+            .collect();
+        if gaps.is_empty() {
+            return None;
+        }
+        Some(gaps.iter().sum::<Duration>() / gaps.len() as u32)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared multi-worker geometry (coord_conformance + the bench)
+// ---------------------------------------------------------------------------
+
+/// Scale-free geometry for the multi-worker coordination scenarios:
+/// every duration is expressed in units of the modeled single-request
+/// batch latency (`ia` = 2× that), so arrivals are always slower than
+/// service — the modeled-optimal fill is 1, queues never back up, and
+/// the post-swap first serve lands exactly one arrival after each
+/// hot-swap on ANY hardware model. That stable one-arrival swap gap is
+/// what the coordinator's adaptive window must learn.
+///
+/// Used by `tests/coord_conformance.rs` and
+/// `benches/serving_refresh_sched.rs`, so suite and bench cannot
+/// diverge.
+#[derive(Clone, Copy, Debug)]
+pub struct CoordGeom {
+    /// Arrival cadence per task; also the refresh-runner check cadence.
+    pub ia: Duration,
+    /// Virtual time one refit consumes (the modeled step budget).
+    pub refit: Duration,
+    /// Pool-clock compression of the modeled drift trigger (the cycle
+    /// length).
+    pub trigger_in: Duration,
+    pub max_wait: Duration,
+    /// Coordinator re-phase budget.
+    pub slack: Duration,
+    /// The FIXED coupling window (what the uncoordinated baseline keeps
+    /// forever): 20 arrivals — provably > 2× the one-arrival true gap.
+    pub fixed_window: Duration,
+    /// The fixed hold bound (generous; the adaptive one replaces it).
+    pub fixed_hold: Duration,
+    /// First-cycle stagger spacing fallback.
+    pub fallback_hold: Duration,
+}
+
+impl CoordGeom {
+    pub fn derive() -> CoordGeom {
+        let probe = BatchScheduler::new(
+            SchedConfig::for_layer(128, 128, 8).seq(320),
+            MAX_BATCH,
+            Duration::from_millis(5),
+        );
+        let ia = Duration::from_nanos((probe.modeled_batch_ns(1) * 2.0).round() as u64)
+            .max(Duration::from_micros(1));
+        CoordGeom {
+            ia,
+            refit: ia * 10,
+            trigger_in: ia * 600,
+            max_wait: ia * 50,
+            slack: ia * 400,
+            fixed_window: ia * 20,
+            fixed_hold: ia * 200,
+            fallback_hold: ia * 50,
+        }
+    }
+
+    /// The fixed coupling both modes run with (the coordinator adapts
+    /// window/hold on top of it; the baseline keeps it as-is).
+    pub fn coupling(&self) -> RefreshCoupling {
+        RefreshCoupling::default()
+            .window(self.fixed_window)
+            .hold(self.fixed_hold)
+    }
+
+    /// Coordinator config at concurrency bound `k`.
+    pub fn coord(&self, k: usize) -> CoordConfig {
+        let min_window = Duration::from_nanos(((self.ia.as_nanos() / 4).max(1)) as u64);
+        CoordConfig::default()
+            .max_concurrent_holds(k)
+            .slack(self.slack)
+            .fallback_window(self.fixed_window)
+            .fallback_hold(self.fallback_hold)
+            .hold_gain(3.0)
+            .hold_bounds(self.ia, Duration::from_secs(3600))
+            .window_bounds(min_window, Duration::from_secs(3600))
+    }
+
+    /// A `workers`-wide pool over `tasks` sharing one tolerance, with
+    /// (`coordinated`) or without the pool coordinator at bound `k`.
+    pub fn pool(&self, workers: usize, tasks: &[&str], coordinated: bool, k: usize) -> SimPool {
+        let mut b = SimPool::builder()
+            .workers(workers)
+            .tasks(tasks)
+            .max_wait(self.max_wait)
+            .tolerance(0.05)
+            .trigger_in(self.trigger_in)
+            .refit_advance(self.refit)
+            .coupling(self.coupling());
+        if coordinated {
+            b = b.coordinate(self.coord(k));
+        }
+        b.build()
+    }
+
+    /// Freshness bound: a swap may land at most one check interval plus
+    /// `refits` serialized refit budgets after the modeled crossing,
+    /// with one extra arrival of cushion.
+    pub fn margin(&self, refits: u32) -> Duration {
+        self.ia + self.refit * refits + self.ia
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The single-worker coupled-vs-uncoupled scenario (refresh_sched_e2e +
+// the serving_refresh_sched bench), expressed on the SimPool harness.
+// ---------------------------------------------------------------------------
 
 pub struct SimRun {
     pub batches: Vec<SimBatch>,
@@ -104,36 +667,10 @@ impl SimRun {
     }
 }
 
-/// Drive the full cycle on the virtual clock. `coupled` switches the
-/// scheduler's refresh coupling on; the refresh runner itself runs
-/// identically in both modes.
+/// Drive the full single-worker cycle on the virtual clock. `coupled`
+/// switches the scheduler's refresh coupling on; the refresh runner
+/// itself runs identically in both modes.
 pub fn simulate(coupled: bool, n_requests: usize) -> SimRun {
-    let clock = Arc::new(VirtualClock::new());
-    let registry = SharedRegistry::new();
-    registry.deploy("task", adapter(1.0));
-
-    let rcfg = RefreshConfig::new(
-        DecayModel::analytic(PcmModel::default()),
-        Arc::new(FnRefitter(
-            |_: &str, _: &ParamStore, _: &ParamStore, budget: usize| -> anyhow::Result<Refit> {
-                Ok(Refit {
-                    params: adapter(2.0),
-                    steps: budget,
-                })
-            },
-        )),
-    )
-    .tolerance(0.05);
-    let mut runner = RefreshRunner::new(
-        rcfg,
-        registry.clone(),
-        Arc::new(ParamStore::default()),
-        Arc::new(Metrics::default()),
-    );
-    runner.track_deployed(clock.now());
-    let handle = runner.policy().handle();
-    let trigger_secs = runner.policy().trigger_age_secs("task").expect("finite trigger");
-
     let max_wait = Duration::from_millis(5);
     // derive pacing from an uncoupled probe of the same hardware model
     let probe = BatchScheduler::new(
@@ -147,92 +684,59 @@ pub fn simulate(coupled: bool, n_requests: usize) -> SimRun {
     // MAX_BATCH and the queue never goes idle mid-run
     let ia = Duration::from_nanos((per(MAX_BATCH) / 2.0).round() as u64);
 
-    let mut scfg = SchedConfig::for_layer(128, 128, 8).seq(320);
+    let mut b = SimPool::builder()
+        .workers(1)
+        .tasks(&["task"])
+        .max_batch(MAX_BATCH)
+        .max_wait(max_wait)
+        .tolerance(0.05);
     if coupled {
-        scfg = scfg.coupling(
+        b = b.coupling(
             RefreshCoupling::default()
                 .window(ia * 64)
                 .hold(max_wait)
                 .post_swap_window(ia * 64),
         );
     }
-    let mut sched = BatchScheduler::new(scfg, MAX_BATCH, max_wait).with_refresh(handle.clone());
-
-    // position the run so the trigger lands mid-stream
+    // keep the modeled timescale 1:1 (trigger compressed to itself) and
+    // fast-forward instead, so the trigger lands mid-stream — exactly
+    // the historical single-worker harness geometry
+    let age = DecayModel::analytic(PcmModel::default()).trigger_age(0.05);
+    let mut pool = b.trigger_in(Duration::from_secs_f64(age)).build();
     let half_span = ia * (n_requests as u32 / 2);
-    clock.advance(Duration::from_secs_f64(trigger_secs) - half_span);
-    let trigger_at = handle.trigger_at("task").expect("modeled trigger");
-
-    let mut batcher: Batcher<Instant> =
-        Batcher::with_clock(MAX_BATCH, max_wait, clock.clone() as Arc<dyn Clock>);
-    let mut run = SimRun {
-        batches: Vec::new(),
-        lat_ns: Vec::with_capacity(n_requests),
-        trigger_at,
-        swap_at: trigger_at,
-        swap_version: 1,
-        drains: 0,
-        holds: 0,
-    };
-
-    // the simulated worker's pop loop: serve every ready batch, record
-    // its modeled service span and pinned adapter version
-    let drain = |sched: &BatchScheduler, batcher: &mut Batcher<Instant>, run: &mut SimRun| {
-        loop {
-            let now = clock.now();
-            let (task, fill, drained) = match sched.pick(batcher, now) {
-                Decision::Close { task, fill } => (task, fill, false),
-                Decision::Drain { task, fill } => (task, fill, true),
-                Decision::Hold { .. } => {
-                    run.holds += 1;
-                    break;
-                }
-                Decision::Wait { .. } | Decision::Idle => break,
-            };
-            if drained {
-                run.drains += 1;
-            }
-            let reqs = batcher.pop_task(&task, fill).expect("ready batch");
-            assert_eq!(reqs.len(), fill, "pop honours the decided fill");
-            let (_, version) = registry.snapshot(&task).expect("deployed");
-            let done_at = now + sched.modeled_batch(fill);
-            for enqueued in &reqs {
-                run.lat_ns
-                    .push(done_at.saturating_duration_since(*enqueued).as_nanos() as f64);
-            }
-            run.batches.push(SimBatch {
-                popped_at: now,
-                done_at,
-                fill,
-                version,
-            });
-        }
-    };
+    pool.advance(Duration::from_secs_f64(age) - half_span);
+    let trigger_at = pool.handle.trigger_at("task").expect("modeled trigger");
 
     for _ in 0..n_requests {
-        clock.advance(ia);
-        let now = clock.now();
+        pool.advance(ia);
         // the background refresh worker's check cadence: every arrival
-        for ev in runner.tick(now) {
-            run.swap_at = ev.at;
-            run.swap_version = ev.version;
-        }
-        sched.observe_arrival("task", now);
-        batcher.push("task", now);
-        drain(&sched, &mut batcher, &mut run);
+        pool.tick();
+        pool.push("task");
+        pool.drain();
     }
     // flush the tail past any deadline/hold, refresh still ticking
     let mut rounds = 0;
-    while batcher.pending() > 0 {
-        clock.advance(max_wait);
-        for ev in runner.tick(clock.now()) {
-            run.swap_at = ev.at;
-            run.swap_version = ev.version;
-        }
-        drain(&sched, &mut batcher, &mut run);
+    while pool.pending() > 0 {
+        pool.advance(max_wait);
+        pool.tick();
+        pool.drain();
         rounds += 1;
         assert!(rounds < 64, "tail must drain");
     }
-    assert_eq!(run.lat_ns.len(), n_requests, "every request served");
-    run
+    assert_eq!(pool.lat_ns.len(), n_requests, "every request served");
+
+    let (swap_at, swap_version) = pool
+        .swaps
+        .first()
+        .map(|r| (r.at, r.version))
+        .unwrap_or((trigger_at, 1));
+    SimRun {
+        batches: std::mem::take(&mut pool.batches),
+        lat_ns: std::mem::take(&mut pool.lat_ns),
+        trigger_at,
+        swap_at,
+        swap_version,
+        drains: pool.drains,
+        holds: pool.holds,
+    }
 }

@@ -1,0 +1,301 @@
+//! Cross-worker conformance suite for pool-level refresh coordination
+//! (`serve::coord`), on the shared `tests/common/refresh_sim.rs`
+//! harness — ONE `VirtualClock` under a ≥4-worker pool with 4 tasks
+//! sharing a drift tolerance, zero real-time sleeps. The geometry is
+//! scale-free ([`refresh_sim::CoordGeom`]): every duration derives from
+//! the modeled single-request latency, so the pins hold on any
+//! hardware model.
+//!
+//! Pinned:
+//!
+//! * **Hold concurrency.** With a coordinator at
+//!   `max_concurrent_holds = 1`, no instant ever has more than one
+//!   shard deferring a batch for a pending hot-swap — while the
+//!   uncoordinated baseline (same tolerance, same pacing) provably
+//!   stalls ALL four shards at once (the correlated-stall failure the
+//!   coordinator exists to fix).
+//! * **Freshness.** Staggering only ever moves triggers *earlier*:
+//!   every task still swaps within its tolerance slack — at or before
+//!   `modeled_due + one check interval + one refit budget` — while the
+//!   baseline's serialized refits provably blow past that bound.
+//! * **Adaptive window.** After a few refresh cycles each task's
+//!   coordinator-assigned coupling window converges to within 2× of
+//!   the true observed swap → first-serve gap, while the fixed-window
+//!   baseline provably over-holds (its window exceeds twice the true
+//!   gap the same pacing produces) AND under-serves (serialized refits
+//!   inflate its swap gaps).
+//! * **Stagger assignment** (property tests, `Gen::duration_in`):
+//!   deterministic, permutation-invariant in task order, total-order
+//!   preserving on trigger times, never later than the modeled
+//!   trigger, never more than `slack` earlier.
+
+#[path = "common/refresh_sim.rs"]
+mod refresh_sim;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+use ahwa_lora::serve::{stagger_assign, Clock, StaggerEntry, VirtualClock};
+use ahwa_lora::util::proptest::check;
+use refresh_sim::{CoordGeom, SimPool};
+
+const TASKS: [&str; 4] = ["t0", "t1", "t2", "t3"];
+/// 3 trigger cycles (`trigger_in` = 600 arrivals).
+const ROUNDS: usize = 1800;
+
+fn run(pool: &mut SimPool, geom: &CoordGeom, rounds: usize) {
+    pool.run_rounds(rounds, geom.ia);
+    pool.flush(geom.ia);
+}
+
+#[test]
+fn coordinator_bounds_concurrent_holds_and_keeps_every_swap_fresh() {
+    let geom = CoordGeom::derive();
+    let mut pool = geom.pool(4, &TASKS, true, 1);
+    run(&mut pool, &geom, ROUNDS);
+
+    assert_eq!(pool.served(), ROUNDS * TASKS.len(), "every request served");
+    assert!(pool.holds > 0, "shards did defer for pending swaps");
+    assert!(
+        pool.swaps.len() >= 2 * TASKS.len(),
+        "≥2 refresh cycles per task actually ran ({} swaps)",
+        pool.swaps.len()
+    );
+
+    // pin 1: never more than max_concurrent_holds shards holding —
+    // observed at every scheduling decision on the shared clock
+    assert!(
+        pool.max_holding <= 1,
+        "at most one shard may hold at any instant, saw {}",
+        pool.max_holding
+    );
+    assert!(
+        pool.metrics.concurrent_holds_peak.load(Ordering::Relaxed) <= 1,
+        "the metric agrees with the observed peak"
+    );
+
+    // pin 2: staggering never sacrifices freshness — every swap lands
+    // within the slack window, at or before modeled_due + margin
+    let slack = pool.coordinator.as_ref().unwrap().config().slack;
+    for rec in &pool.swaps {
+        assert!(
+            rec.at <= rec.modeled_due + geom.margin(1),
+            "task {} swapped late: {:?} past its modeled crossing",
+            rec.task,
+            rec.at.saturating_duration_since(rec.modeled_due),
+        );
+        assert!(
+            rec.at + slack >= rec.modeled_due,
+            "task {} swapped more than the slack early",
+            rec.task,
+        );
+    }
+
+    // the stagger actually engaged (not a vacuous pass): triggers that
+    // coincided were re-phased
+    assert!(
+        pool.metrics.stagger_shift_ns.load(Ordering::Relaxed) > 0,
+        "colliding triggers must have been re-phased"
+    );
+
+    // pin 3: each task's adaptive window converged to within 2× of its
+    // true observed swap gap — which the fixed window provably cannot
+    // match: it exceeds twice that gap (over-holds)
+    for task in TASKS {
+        let gap = pool.mean_gap(task).expect("gaps observed");
+        assert!(gap > Duration::ZERO, "the swap -> serve handoff takes real time");
+        let window = pool
+            .handle
+            .adaptive_window(task)
+            .expect("adaptive window assigned after refreshes");
+        assert!(
+            window <= gap * 2 && window * 2 >= gap,
+            "task {task}: adaptive window {window:?} not within 2x of true gap {gap:?}"
+        );
+        assert!(
+            geom.fixed_window > gap * 2,
+            "the fixed window {:?} must provably over-hold against the true gap {gap:?}",
+            geom.fixed_window
+        );
+        // ...and the adaptive hold tracks the measured refit budget
+        let hold = pool
+            .handle
+            .adaptive_hold(task)
+            .expect("adaptive hold derived from the refit budget");
+        assert!(
+            hold >= geom.refit,
+            "task {task}: hold {hold:?} under the measured refit budget {:?}",
+            geom.refit
+        );
+    }
+}
+
+#[test]
+fn uncoordinated_baseline_exhibits_correlated_stalls_and_stale_holds() {
+    let geom = CoordGeom::derive();
+    let mut pool = geom.pool(4, &TASKS, false, 1);
+    run(&mut pool, &geom, ROUNDS);
+    assert_eq!(pool.served(), ROUNDS * TASKS.len(), "every request still served");
+
+    // the correlated-stall failure is REAL: all four shards sat in a
+    // hold window at the same instant at least once
+    assert_eq!(
+        pool.max_holding,
+        TASKS.len(),
+        "tasks sharing a tolerance must stall every shard at once"
+    );
+
+    // and the serialized refits blow the freshness bound the
+    // coordinated pool meets for every swap
+    let late = pool
+        .swaps
+        .iter()
+        .filter(|r| r.at > r.modeled_due + geom.margin(1))
+        .count();
+    assert!(
+        late > 0,
+        "back-to-back refits must push some swap past one check interval + one refit budget"
+    );
+
+    // the under-hold side of the fixed policy: serialized refits
+    // inflate the first-serialized task's swap gap far past the one
+    // arrival the coordinated pool sustains
+    let worst_gap = TASKS
+        .iter()
+        .filter_map(|t| pool.mean_gap(t))
+        .max()
+        .expect("gaps observed");
+    assert!(
+        worst_gap > geom.ia * 2,
+        "serialized refits must inflate some task's swap gap well past one arrival ({worst_gap:?})"
+    );
+    for task in TASKS {
+        assert_eq!(
+            pool.handle.adaptive_window(task),
+            None,
+            "no coordinator, no adaptive state"
+        );
+        assert_eq!(pool.handle.staggered_at(task), None);
+    }
+}
+
+#[test]
+fn stagger_assignment_is_deterministic_permutation_invariant_order_preserving() {
+    let clock = VirtualClock::new();
+    let base = clock.now() + Duration::from_secs(3600);
+
+    check("stagger-assign-props", 64, |g| {
+        let n = g.usize_in(1, 12);
+        let entries: Vec<StaggerEntry> = (0..n)
+            .map(|i| StaggerEntry {
+                task: format!("task{i}"),
+                trigger: base + g.duration_in(Duration::ZERO, Duration::from_millis(50)),
+                span: g.duration_in(Duration::from_micros(10), Duration::from_millis(5)),
+            })
+            .collect();
+        let k = g.usize_in(1, 4);
+        let slack = g.duration_in(Duration::from_millis(1), Duration::from_millis(200));
+
+        let a = stagger_assign(&entries, k, slack);
+        assert_eq!(a.len(), entries.len(), "every entry is assigned");
+
+        // deterministic: same input, same output
+        assert_eq!(a, stagger_assign(&entries, k, slack));
+
+        // permutation-invariant: a shuffled input yields the same
+        // task → instant mapping
+        let mut shuffled = entries.clone();
+        shuffled.reverse();
+        shuffled.rotate_left(g.usize_in(0, n - 1));
+        let to_map = |v: &[(String, Instant)]| -> BTreeMap<String, Instant> {
+            v.iter().cloned().collect()
+        };
+        let m = to_map(&a);
+        assert_eq!(m, to_map(&stagger_assign(&shuffled, k, slack)));
+
+        // never later than the modeled trigger, never more than slack
+        // earlier
+        for e in &entries {
+            let at = m[&e.task];
+            assert!(at <= e.trigger, "stagger may never delay a trigger");
+            assert!(
+                e.trigger - at <= slack,
+                "shift {:?} escaped the slack {:?}",
+                e.trigger - at,
+                slack
+            );
+        }
+
+        // total-order preserving on (trigger, task)
+        let mut sorted = entries.clone();
+        sorted.sort_by(|x, y| x.trigger.cmp(&y.trigger).then_with(|| x.task.cmp(&y.task)));
+        for w in sorted.windows(2) {
+            assert!(
+                m[&w[0].task] <= m[&w[1].task],
+                "assignment must preserve the trigger total order"
+            );
+        }
+
+        // with generous slack the concurrency bound holds exactly: at
+        // every assigned start, at most k spans cover it
+        let roomy = stagger_assign(&entries, k, Duration::from_secs(10));
+        let rm = to_map(&roomy);
+        for (_, at) in &roomy {
+            let covering = entries
+                .iter()
+                .filter(|e| {
+                    let s = rm[&e.task];
+                    s <= *at && *at < s + e.span
+                })
+                .count();
+            assert!(covering <= k, "{covering} spans overlap at one instant (k={k})");
+        }
+    });
+}
+
+/// Multi-worker stress variant: 8 workers × 16 tasks sharing one
+/// tolerance at `max_concurrent_holds = 2`, a longer stream, same pins.
+/// Still zero real sleeps — but heavy, so it runs in the release lane
+/// only (`ci.sh --stage test-release`), like `refresh_stress.rs`.
+#[test]
+fn coord_stress_many_tasks_many_workers() {
+    if cfg!(debug_assertions) {
+        eprintln!("skipping coord stress: debug build (the --release CI lane runs it)");
+        return;
+    }
+    let mut geom = CoordGeom::derive();
+    // lighter refits, two cycles over a longer stream, and enough slack
+    // for 8 stagger slots of first-cycle (fallback) spacing
+    geom.refit = geom.ia * 5;
+    geom.trigger_in = geom.ia * 1200;
+    geom.slack = geom.ia * 800;
+    let tasks: Vec<String> = (0..16).map(|i| format!("task{i:02}")).collect();
+    let task_refs: Vec<&str> = tasks.iter().map(|s| s.as_str()).collect();
+    let mut pool = geom.pool(8, &task_refs, true, 2);
+    let rounds = 3000;
+    run(&mut pool, &geom, rounds);
+
+    assert_eq!(pool.served(), rounds * tasks.len(), "no request lost");
+    assert!(
+        pool.swaps.len() >= tasks.len(),
+        "at least one full refresh cycle ran ({} swaps)",
+        pool.swaps.len()
+    );
+    assert!(
+        pool.max_holding <= 2,
+        "hold concurrency bound (2) violated: {}",
+        pool.max_holding
+    );
+    // at k=2 the two tasks sharing a stagger slot refresh back to back
+    // within one tick, so the freshness bound covers a pair of refits
+    // (plus one tick interval and a cushion)
+    for rec in &pool.swaps {
+        assert!(
+            rec.at <= rec.modeled_due + geom.margin(3),
+            "task {} swapped late under stress: {:?} past its modeled crossing",
+            rec.task,
+            rec.at.saturating_duration_since(rec.modeled_due),
+        );
+    }
+}

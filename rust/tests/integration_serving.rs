@@ -15,8 +15,9 @@ use ahwa_lora::model::params::{ParamStore, Tensor};
 use ahwa_lora::pcm::PcmModel;
 use ahwa_lora::serve::registry::SharedRegistry;
 use ahwa_lora::serve::{
-    submit_wave, Clock, DecayModel, FnRefitter, Metrics, Pending, Refit, RefreshConfig,
-    RefreshRunner, SchedConfig, ServeError, Server, ServerBuilder, VirtualClock,
+    submit_wave, Clock, CoordConfig, DecayModel, FnRefitter, Metrics, Pending, Refit,
+    RefreshConfig, RefreshCoordinator, RefreshRunner, SchedConfig, ServeError, Server,
+    ServerBuilder, VirtualClock,
 };
 use ahwa_lora::util::rng::Pcg64;
 
@@ -448,6 +449,112 @@ fn drift_refresh_triggers_at_modeled_time_and_hot_swaps_once() {
     let (last, saw) = reader.join().unwrap();
     assert_eq!(last, 2, "the reader observed the hot-swap");
     assert!(saw > 0, "the reader actually raced the swap");
+}
+
+/// Regression (hermetic, virtual clock): a manual `deploy` racing a
+/// coordinator re-phase must keep the drift clock monotone. The
+/// runner-path re-anchor was already covered above
+/// (`manual redeploy between ticks`-style, in refresh.rs); this pins
+/// the NEW hazard the pool coordinator introduces — a stagger computed
+/// for the OLD deployment's trigger surviving onto the re-anchored
+/// drift clock would refit the operator's fresh adapter at the stale
+/// (earlier) instant.
+#[test]
+fn manual_deploy_racing_a_coordinator_rephase_keeps_the_drift_clock_monotone() {
+    let clock = Arc::new(VirtualClock::new());
+    let registry = SharedRegistry::new();
+    registry.deploy("t", tagged_adapter(1.0));
+    registry.deploy("u", tagged_adapter(1.0));
+
+    let bump = FnRefitter(
+        |_: &str, cur: &ParamStore, _: &ParamStore, budget: usize| -> anyhow::Result<Refit> {
+            Ok(Refit {
+                params: tagged_adapter(cur.tensors[0].data[0] + 1.0),
+                steps: budget,
+            })
+        },
+    );
+    let age = DecayModel::analytic(PcmModel::default()).trigger_age(0.05);
+    let cfg = RefreshConfig::new(DecayModel::analytic(PcmModel::default()), Arc::new(bump))
+        .tolerance(0.05)
+        .time_scale(age / 10.0); // both triggers land ~10s out
+    let metrics = Arc::new(Metrics::default());
+    let mut runner = RefreshRunner::new(
+        cfg,
+        registry.clone(),
+        Arc::new(ParamStore::default()),
+        metrics.clone(),
+    )
+    .with_clock(clock.clone() as Arc<dyn Clock>);
+    runner.track_deployed(clock.now());
+    let handle = runner.policy().handle();
+    runner.set_coordinator(Arc::new(RefreshCoordinator::new(
+        CoordConfig::default()
+            .max_concurrent_holds(1)
+            .slack(Duration::from_secs(5))
+            .fallback_window(Duration::from_millis(500))
+            .fallback_hold(Duration::from_millis(500)),
+        handle.clone(),
+        metrics,
+    )));
+
+    let modeled = handle.trigger_at("t").unwrap();
+    assert_eq!(handle.trigger_at("u"), Some(modeled), "shared tolerance, shared crossing");
+
+    // first tick: the coordinator re-phases the colliding triggers —
+    // "t" (earlier in the deterministic order) is pulled a span earlier
+    assert!(runner.tick(clock.now()).is_empty(), "nothing due yet");
+    let staggered = handle.staggered_at("t").expect("t was re-phased");
+    assert!(staggered < modeled, "stagger only ever moves earlier");
+    assert_eq!(handle.staggered_at("u"), None, "the latest trigger keeps its phase");
+
+    // an operator hot-swaps a fresh adapter BETWEEN ticks, racing the
+    // re-phase...
+    clock.advance(Duration::from_secs(2));
+    registry.deploy("t", tagged_adapter(7.0));
+    let deployed_at = clock.now();
+
+    // ...and the next tick re-anchors: version adopted, and the stagger
+    // computed for the OLD deployment does not survive onto the new
+    // drift clock
+    assert!(runner.tick(clock.now()).is_empty());
+    assert_eq!(runner.policy().tracked_version("t"), Some(2));
+    let new_modeled = handle.trigger_at("t").unwrap();
+    assert!(new_modeled > modeled, "re-anchor moves the crossing forward, never backward");
+    let effective = handle.staggered_at("t").unwrap_or(new_modeled);
+    assert!(
+        effective > deployed_at,
+        "monotone: the new deployment's trigger lies in its own future"
+    );
+
+    // at the OLD deployment's staggered and modeled instants nothing
+    // fires for 't' (the sibling 'u' refreshes on its own schedule)
+    clock.advance(staggered - clock.now() + Duration::from_millis(1));
+    assert!(
+        runner.tick(clock.now()).iter().all(|e| e.task != "t"),
+        "a stale stagger must not refit the fresh adapter"
+    );
+    clock.advance(modeled - clock.now() + Duration::from_millis(1));
+    assert!(
+        runner.tick(clock.now()).iter().all(|e| e.task != "t"),
+        "the stale modeled crossing must not refit either"
+    );
+    assert_eq!(registry.version("t"), Some(2), "operator's adapter survives untouched");
+    assert!(
+        runner.policy().tracked_version("u").unwrap() >= 2,
+        "the sibling task refreshed normally through the race"
+    );
+
+    // from the re-anchored clock 't' completes its cycle normally
+    let eff = handle
+        .staggered_at("t")
+        .unwrap_or_else(|| handle.trigger_at("t").unwrap());
+    clock.advance(eff - clock.now() + Duration::from_millis(1));
+    let evs = runner.tick(clock.now());
+    assert!(
+        evs.iter().any(|e| e.task == "t" && e.version == 3),
+        "re-anchored cycle completes: {evs:?}"
+    );
 }
 
 /// Hermetic stress test pinning `SharedRegistry` version monotonicity

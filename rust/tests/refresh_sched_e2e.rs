@@ -3,10 +3,10 @@
 //! Everything here runs on ONE `VirtualClock` shared by the batcher,
 //! the `BatchScheduler`, and the `RefreshRunner` — zero real sleeps, so
 //! every assertion is exact: the same request stream (the shared
-//! harness in `tests/common/refresh_sim.rs`, also driven by
-//! `benches/serving_refresh_sched.rs`) is replayed with the scheduler
-//! coupled and uncoupled to the refresh lifecycle, and the suite pins
-//! that
+//! `SimPool` harness in `tests/common/refresh_sim.rs`, also driven by
+//! `tests/coord_conformance.rs` and `benches/serving_refresh_sched.rs`)
+//! is replayed with the scheduler coupled and uncoupled to the refresh
+//! lifecycle, and the suite pins that
 //!
 //! * coupled: **zero** requests are served at the stale adapter version
 //!   once the modeled `trigger_at` (plus the — here instant — refit

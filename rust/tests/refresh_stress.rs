@@ -9,6 +9,13 @@
 //! test-release`); the debug lane skips them so `cargo test -q` stays
 //! fast. The pool test additionally needs built artifacts and
 //! self-skips without them, like the other PJRT-backed suites.
+//!
+//! The runner spin-up (analytic decay over a tagged single-tensor
+//! adapter) comes from the shared `tests/common/refresh_sim.rs`
+//! harness, same as the conformance suites.
+
+#[path = "common/refresh_sim.rs"]
+mod refresh_sim;
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
@@ -17,14 +24,14 @@ use std::time::{Duration, Instant};
 use ahwa_lora::config::manifest::{default_artifacts_dir, Manifest};
 use ahwa_lora::data::glue::{GlueGen, GlueTask};
 use ahwa_lora::model::checkpoint;
-use ahwa_lora::model::params::{ParamStore, Tensor};
+use ahwa_lora::model::params::ParamStore;
 use ahwa_lora::pcm::PcmModel;
 use ahwa_lora::serve::registry::SharedRegistry;
 use ahwa_lora::serve::{
-    DecayModel, FnRefitter, Metrics, Refit, RefreshConfig, RefreshCoupling, RefreshRunner,
-    SchedConfig, Server,
+    DecayModel, FnRefitter, Metrics, Refit, RefreshConfig, RefreshCoupling, SchedConfig, Server,
 };
 use ahwa_lora::util::rng::Pcg64;
+use refresh_sim::{adapter, analytic_runner};
 
 /// Skip in debug builds: these tests spin real threads against the
 /// real clock and belong in the release lane only.
@@ -34,14 +41,6 @@ fn release_only() -> bool {
         return false;
     }
     true
-}
-
-fn adapter(tag: f32) -> ParamStore {
-    ParamStore::from_tensors(vec![Tensor {
-        name: "lora.a".to_string(),
-        shape: vec![1],
-        data: vec![tag],
-    }])
 }
 
 /// Hermetic storm: concurrent `tick` callers (the `refresh_tick_now`
@@ -66,16 +65,9 @@ fn refresh_tick_storm_keeps_registry_and_metrics_consistent() {
         },
     ));
     let age = DecayModel::analytic(PcmModel::default()).trigger_age(0.05);
-    let rcfg = RefreshConfig::new(DecayModel::analytic(PcmModel::default()), refitter)
-        .tolerance(0.05)
-        .time_scale(age / 2e-3); // a refresh becomes due every ~2ms
     let metrics = Arc::new(Metrics::default());
-    let mut runner = RefreshRunner::new(
-        rcfg,
-        registry.clone(),
-        Arc::new(ParamStore::default()),
-        metrics.clone(),
-    );
+    // a refresh becomes due every ~2ms of real clock
+    let mut runner = analytic_runner(&registry, refitter, 0.05, age / 2e-3, metrics.clone());
     runner.track_deployed(Instant::now());
     let runner = Arc::new(Mutex::new(runner));
 

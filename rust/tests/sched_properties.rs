@@ -10,7 +10,13 @@
 //!   in particular while a refit is in flight (pressure saturated at
 //!   1) — never move later than the uncoupled `head + max_wait`,
 //! * a refit observed mid-flight through the shared `RefreshHandle`
-//!   saturates drift pressure at exactly 1.
+//!   saturates drift pressure at exactly 1,
+//! * `RefreshCoupling` can never be constructed invalid: the defaults
+//!   satisfy the invariants (window > 0, hold > 0, min_fill ≥ 1,
+//!   deadline_factor ∈ [0, 1], post_swap_factor ≥ 1) and every
+//!   builder setter clamps arbitrary inputs back inside them — which
+//!   is what lets the pool coordinator feed *adaptive* window/hold
+//!   values through without ever producing a degenerate coupling.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
@@ -31,6 +37,82 @@ fn sched_with(coupling: RefreshCoupling, max_batch: usize, max_wait: Duration) -
         max_batch,
         max_wait,
     )
+}
+
+/// The coupling invariants adaptive (coordinator-fed) values rely on.
+fn assert_coupling_valid(c: &RefreshCoupling) {
+    assert!(c.window > Duration::ZERO, "window must be positive");
+    assert!(c.hold > Duration::ZERO, "hold must be positive");
+    assert!(c.min_fill >= 1, "min_fill must admit at least one request");
+    assert!(
+        (0.0..=1.0).contains(&c.deadline_factor),
+        "deadline_factor escaped [0, 1]: {}",
+        c.deadline_factor
+    );
+    assert!(
+        c.post_swap_factor >= 1.0,
+        "the post-swap boost may never SHRINK fills: {}",
+        c.post_swap_factor
+    );
+}
+
+#[test]
+fn coupling_defaults_and_setter_round_trips_never_construct_invalid_state() {
+    assert_coupling_valid(&RefreshCoupling::default());
+
+    check("coupling-setter-round-trips", 64, |g| {
+        // arbitrary (including degenerate) inputs through every setter
+        let window = g.duration_in(Duration::ZERO, Duration::from_secs(2));
+        let hold = g.duration_in(Duration::ZERO, Duration::from_secs(2));
+        let post_window = g.duration_in(Duration::ZERO, Duration::from_secs(2));
+        let min_fill = g.usize_in(0, 64);
+        let deadline = g.f64_in(-2.0, 3.0);
+        let boost = g.f64_in(-2.0, 8.0);
+        let c = RefreshCoupling::default()
+            .window(window)
+            .hold(hold)
+            .post_swap_window(post_window)
+            .min_fill(min_fill)
+            .deadline_factor(deadline)
+            .post_swap_factor(boost);
+        assert_coupling_valid(&c);
+
+        // round trips: in-range inputs are stored verbatim...
+        if window > Duration::ZERO {
+            assert_eq!(c.window, window);
+        }
+        if hold > Duration::ZERO {
+            assert_eq!(c.hold, hold);
+        }
+        assert_eq!(c.post_swap_window, post_window);
+        if min_fill >= 1 {
+            assert_eq!(c.min_fill, min_fill);
+        }
+        if (0.0..=1.0).contains(&deadline) {
+            assert_eq!(c.deadline_factor, deadline);
+        }
+        if boost >= 1.0 {
+            assert_eq!(c.post_swap_factor, boost);
+        }
+        // ...and out-of-range ones clamp to the nearest valid value
+        assert_eq!(
+            RefreshCoupling::default().window(Duration::ZERO).window,
+            RefreshCoupling::MIN_PHASE
+        );
+        assert_eq!(
+            RefreshCoupling::default().hold(Duration::ZERO).hold,
+            RefreshCoupling::MIN_PHASE
+        );
+        assert_eq!(RefreshCoupling::default().min_fill(0).min_fill, 1);
+        assert_eq!(
+            RefreshCoupling::default().deadline_factor(7.0).deadline_factor,
+            1.0
+        );
+        assert_eq!(
+            RefreshCoupling::default().post_swap_factor(0.0).post_swap_factor,
+            1.0
+        );
+    });
 }
 
 #[test]
