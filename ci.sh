@@ -62,12 +62,14 @@ a failure here is in a HERMETIC suite (no engine, no wall clock):
   - unit tests                    cargo test -q --lib
   - scheduler/refresh e2e         cargo test -q --test refresh_sched_e2e
   - pool-coordination conformance cargo test -q --test coord_conformance
+  - decode conformance            cargo test -q --test decode_conformance
   - scheduler property tests      cargo test -q --test sched_properties
   - PCM property tests            cargo test -q --test pcm_properties
   - pipeline golden values        cargo test -q --test pipeline_golden
 Property-test failures print a replay seed; re-run the one suite above
 that failed rather than the whole stage. Concurrency stress tests (and
-the multi-worker coord stress variant in coord_conformance.rs) only
+the multi-worker coord stress variant in coord_conformance.rs, and the
+8-worker long-sequence decode storm in decode_conformance.rs) only
 run in the test-release stage and cannot be the cause here.
 EOF
         exit 1
@@ -78,11 +80,13 @@ EOF
 # the pipeline-latency / scheduler model tests also run in release:
 # debug_assert guards are compiled out and the hot numeric paths take
 # their optimised shapes there, which is what production serves. The
-# refresh/scheduler concurrency stress tests (tests/refresh_stress.rs)
-# and the multi-worker coordination stress variant
+# refresh/scheduler concurrency stress tests (tests/refresh_stress.rs),
+# the multi-worker coordination stress variant
 # (coord_conformance::coord_stress_many_tasks_many_workers — 8 workers
-# x 16 tasks on the virtual clock) gate themselves on
-# `cfg!(debug_assertions)` and therefore run ONLY in this stage,
+# x 16 tasks on the virtual clock), and the long-sequence decode storm
+# (decode_conformance::eight_worker_long_sequence_decode_stress — 8
+# continuous-batching lanes crossing a shared hot-swap) gate themselves
+# on `cfg!(debug_assertions)` and therefore run ONLY in this stage,
 # keeping the debug lane fast.
 stage_test_release() {
     group test-release

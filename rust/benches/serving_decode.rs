@@ -1,0 +1,99 @@
+//! Continuous-batching vs static run-to-completion decode over the SAME
+//! arrival trace — hermetic, zero real sleeps: both modes run on the
+//! `VirtualClock` through the shared `SimDecode` harness
+//! (`tests/common/refresh_sim.rs`), the same lane model the
+//! `decode_conformance` suite pins, just with a longer burst.
+//!
+//! Reported per mode: modeled step-batch occupancy, step count,
+//! time-to-first-token p50, inter-token p50/p99, and makespan — plus
+//! the continuous-vs-static occupancy and inter-token p99 deltas. The
+//! occupancy and makespan wins are asserted (they are the tentpole
+//! claim); the inter-token delta is reported only, since fuller
+//! step-batches trade per-step latency for throughput.
+
+#[path = "../tests/common/refresh_sim.rs"]
+mod refresh_sim;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use ahwa_lora::serve::registry::SharedRegistry;
+use ahwa_lora::serve::{Metrics, VirtualClock};
+use ahwa_lora::util::bench::Bencher;
+use ahwa_lora::util::stats;
+use refresh_sim::{adapter, decode_trace, drive_decode, SimDecode};
+
+const N_REQUESTS: usize = 160;
+/// Mixed generation lengths: the spread is what makes rows retire at
+/// different steps, which is exactly where continuous join wins.
+const GEN_LENS: [usize; 8] = [4, 19, 7, 15, 5, 17, 9, 12];
+const B: usize = 8;
+const S: usize = 64;
+
+fn run(continuous: bool) -> (SimDecode, Duration) {
+    let clock = Arc::new(VirtualClock::new());
+    let registry = SharedRegistry::new();
+    registry.deploy("task", adapter(1.0));
+    let start = clock.now();
+    let mut sim = SimDecode::new(clock, Arc::new(Metrics::default()), B, S, continuous);
+    let trace = decode_trace(N_REQUESTS, Duration::ZERO, &GEN_LENS);
+    drive_decode(&mut sim, &registry, None, None, "task", &trace);
+    let makespan = sim.makespan(start);
+    (sim, makespan)
+}
+
+fn report(label: &str, sim: &SimDecode, makespan: Duration) {
+    println!(
+        "{label}: occupancy {:.1}%, {} step(s), ttft p50 {:.2} µs, \
+         inter-token p50 {:.2} µs p99 {:.2} µs, makespan {:.2} µs",
+        sim.occupancy() * 100.0,
+        sim.steps.len(),
+        stats::percentile(&sim.ttft_ns, 50.0) / 1e3,
+        stats::percentile(&sim.itl_ns, 50.0) / 1e3,
+        stats::percentile(&sim.itl_ns, 99.0) / 1e3,
+        makespan.as_nanos() as f64 / 1e3,
+    );
+}
+
+fn main() {
+    let mut b = Bencher::with_budget(0.5);
+
+    let (cont, cont_span) = b.once("decode/continuous join", || run(true));
+    let (stat, stat_span) = b.once("decode/static batching", || run(false));
+
+    // both modes complete the identical workload, token for token
+    assert_eq!(cont.finished.len(), N_REQUESTS);
+    assert_eq!(stat.finished.len(), N_REQUESTS);
+    for g in &cont.finished {
+        let twin = stat
+            .finished
+            .iter()
+            .find(|h| h.id == g.id)
+            .expect("same request set");
+        assert_eq!(g.tokens, twin.tokens, "request {} diverged", g.id);
+    }
+
+    report("static batching ", &stat, stat_span);
+    report("continuous join ", &cont, cont_span);
+    let itl_p99 = |s: &SimDecode| stats::percentile(&s.itl_ns, 99.0) / 1e3;
+    println!(
+        "continuous-vs-static: occupancy {:+.1} pp, inter-token p99 {:+.2} µs, \
+         makespan {:+.2} µs ({} fewer step(s) for the same {} tokens)",
+        (cont.occupancy() - stat.occupancy()) * 100.0,
+        itl_p99(&cont) - itl_p99(&stat),
+        (cont_span.as_nanos() as f64 - stat_span.as_nanos() as f64) / 1e3,
+        stat.steps.len() as i64 - cont.steps.len() as i64,
+        cont.finished.iter().map(|g| g.tokens.len()).sum::<usize>(),
+    );
+
+    assert!(
+        cont.occupancy() > stat.occupancy(),
+        "continuous join must beat static occupancy ({:.3} vs {:.3})",
+        cont.occupancy(),
+        stat.occupancy()
+    );
+    assert!(
+        cont_span < stat_span,
+        "same tokens in fuller steps must shorten the makespan"
+    );
+}

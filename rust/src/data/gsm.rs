@@ -150,4 +150,73 @@ mod tests {
             assert!(p.answer() < 100);
         }
     }
+
+    /// The decode conformance suite replays these prompts: identical
+    /// seeds must reproduce the problem stream bit-for-bit.
+    #[test]
+    fn problems_and_batches_are_seed_deterministic() {
+        let task = GsmTask::new(32);
+        let ps1: Vec<_> = {
+            let mut rng = Pcg64::new(21);
+            (0..16).map(|_| task.problem(&mut rng)).collect()
+        };
+        let ps2: Vec<_> = {
+            let mut rng = Pcg64::new(21);
+            (0..16).map(|_| task.problem(&mut rng)).collect()
+        };
+        for (p, q) in ps1.iter().zip(&ps2) {
+            assert_eq!((p.a, p.b), (q.a, q.b));
+            assert_eq!(p.prompt, q.prompt);
+        }
+        let (t1, m1) = task.sft_batch(4, &mut Pcg64::new(22));
+        let (t2, m2) = task.sft_batch(4, &mut Pcg64::new(22));
+        assert_eq!(t1, t2);
+        assert_eq!(m1, m2);
+        let (t3, _) = task.sft_batch(4, &mut Pcg64::new(23));
+        assert_ne!(t1, t3, "different seeds must produce different batches");
+    }
+
+    /// Prompt shape invariant: `[BOS] a-digits + b-digits = [SEP]`, with
+    /// the operands recoverable by the tokenizer round-trip.
+    #[test]
+    fn prompt_encodes_both_operands() {
+        let task = GsmTask::new(64);
+        let mut rng = Pcg64::new(31);
+        for _ in 0..50 {
+            let p = task.problem(&mut rng);
+            assert_eq!(p.prompt[0], BOS);
+            let (a, a_len) = decode_number(&p.prompt, 1).unwrap();
+            assert_eq!(a, p.a);
+            let plus_at = 1 + a_len;
+            assert_eq!(p.prompt[plus_at], PLUS);
+            let (b, b_len) = decode_number(&p.prompt, plus_at + 1).unwrap();
+            assert_eq!(b, p.b);
+            let equals_at = plus_at + 1 + b_len;
+            assert_eq!(p.prompt[equals_at], EQUALS);
+            assert_eq!(p.prompt[equals_at + 1], SEP);
+            assert_eq!(p.prompt.len(), equals_at + 2);
+        }
+    }
+
+    /// End-of-solution placement: `ESOL` closes every ideal completion
+    /// exactly once (it is the decode loop's stop token), and the whole
+    /// prompt+completion fits the RL sequence budget.
+    #[test]
+    fn ideal_completion_ends_with_esol_and_fits_seq() {
+        let task = GsmTask::new(32);
+        let mut rng = Pcg64::new(41);
+        for _ in 0..50 {
+            let p = task.problem(&mut rng);
+            let c = p.ideal_completion();
+            assert_eq!(*c.last().unwrap(), ESOL);
+            assert_eq!(c.iter().filter(|&&t| t == ESOL).count(), 1);
+            assert!(
+                p.prompt.len() + c.len() <= task.seq,
+                "prompt+completion ({} + {}) must fit seq {}",
+                p.prompt.len(),
+                c.len(),
+                task.seq
+            );
+        }
+    }
 }

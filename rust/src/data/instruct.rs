@@ -177,4 +177,84 @@ mod tests {
             }
         }
     }
+
+    /// The decode conformance suite replays generator output across
+    /// processes: identical seeds must reproduce examples and batches
+    /// bit-for-bit, and distinct streams must actually diverge.
+    #[test]
+    fn examples_and_batches_are_seed_deterministic() {
+        let task = InstructTask::new(128, 32);
+        for kind in ALL_INSTRUCTIONS {
+            let a = task.example(kind, &mut Pcg64::with_stream(7, 3));
+            let b = task.example(kind, &mut Pcg64::with_stream(7, 3));
+            assert_eq!(a.tokens, b.tokens);
+            assert_eq!(a.mask, b.mask);
+            assert_eq!(a.response, b.response);
+        }
+        let (t1, m1) = task.batch(6, &mut Pcg64::new(11));
+        let (t2, m2) = task.batch(6, &mut Pcg64::new(11));
+        assert_eq!(t1, t2);
+        assert_eq!(m1, m2);
+        let (t3, _) = task.batch(6, &mut Pcg64::new(12));
+        assert_ne!(t1, t3, "different seeds must produce different batches");
+    }
+
+    /// EOS placement: exactly one EOS per example, directly after the
+    /// response, supervised (masked), with only padding behind it.
+    #[test]
+    fn eos_terminates_every_response() {
+        let task = InstructTask::new(128, 32);
+        let mut rng = Pcg64::new(5);
+        for kind in ALL_INSTRUCTIONS {
+            for _ in 0..20 {
+                let ex = task.example(kind, &mut rng);
+                let eos_at = ex.response_start + ex.response.len();
+                assert_eq!(ex.tokens[eos_at], EOS);
+                assert_eq!(ex.mask[eos_at], 1.0, "EOS is a supervised position");
+                assert_eq!(
+                    ex.tokens.iter().filter(|&&t| t == EOS).count(),
+                    1,
+                    "exactly one EOS per example"
+                );
+                assert!(
+                    ex.tokens[eos_at + 1..].iter().all(|&t| t == 0),
+                    "nothing but padding after EOS"
+                );
+                assert!(
+                    ex.mask[eos_at + 1..].iter().all(|&m| m == 0.0),
+                    "padding is never supervised"
+                );
+            }
+        }
+    }
+
+    /// Prompt/target shape invariants of batched output: row-major
+    /// `[b, seq]`, every row `[BOS] <type> src… [SEP] resp… EOS`, source
+    /// tokens drawn from the small source alphabet.
+    #[test]
+    fn batch_rows_keep_the_prompt_shape() {
+        let (vocab, seq, b) = (128usize, 32usize, 8usize);
+        let task = InstructTask::new(vocab, seq);
+        let (tokens, mask) = task.batch(b, &mut Pcg64::new(9));
+        assert_eq!(tokens.len(), b * seq);
+        assert_eq!(mask.len(), b * seq);
+        let (lo, hi) = source_alphabet(vocab);
+        let type_tokens: Vec<i32> = ALL_INSTRUCTIONS.iter().map(|k| k.type_token()).collect();
+        for row in 0..b {
+            let t = &tokens[row * seq..(row + 1) * seq];
+            let m = &mask[row * seq..(row + 1) * seq];
+            assert_eq!(t[0], BOS);
+            assert!(type_tokens.contains(&t[1]), "row {row}: bad type token {}", t[1]);
+            assert_eq!(t[2 + task.src_len], SEP);
+            for (i, &s) in t[2..2 + task.src_len].iter().enumerate() {
+                assert!((lo..hi).contains(&s), "row {row} src[{i}] = {s} outside alphabet");
+            }
+            // prompt positions are never supervised
+            assert!(m[..2 + task.src_len + 1].iter().all(|&x| x == 0.0));
+            // response + EOS are: src_len transformed tokens, then EOS
+            let resp_start = 2 + task.src_len + 1;
+            assert_eq!(t[resp_start + task.src_len], EOS);
+            assert!(m[resp_start..=resp_start + task.src_len].iter().all(|&x| x == 1.0));
+        }
+    }
 }

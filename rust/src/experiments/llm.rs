@@ -12,7 +12,7 @@ use anyhow::Result;
 use crate::aimc::tile::is_mappable;
 use crate::config::run::TrainConfig;
 use crate::data::instruct::{Instruction, InstructTask, ALL_INSTRUCTIONS};
-use crate::data::tokenizer::{EOS, ESOL, PAD, SEP};
+use crate::data::tokenizer::{EOS, ESOL, SEP};
 use crate::eval::drift_eval::{fwd_batch_shape, lm_logits, AnalogDeployment};
 use crate::model::params::ParamStore;
 use crate::pcm::PcmModel;
@@ -62,6 +62,11 @@ fn zero_lora(ctx: &Ctx, variant: &str) -> Result<ParamStore> {
 // ---------------------------------------------------------------------------
 
 /// Greedy-decode many prompts at once through the fixed-batch fwd graph.
+///
+/// Thin wrapper over [`crate::serve::decode::greedy_chunks`]: offline
+/// eval and live serving share ONE step engine (same PAD layout, same
+/// argmax tie-break, same stop rules), so the conformance suite's
+/// bit-identity pin covers the numbers behind Tables IV/V/IX/X too.
 pub fn batched_greedy(
     graph: &LoadedGraph,
     meta: &ParamStore,
@@ -72,43 +77,9 @@ pub fn batched_greedy(
 ) -> Result<Vec<Vec<i32>>> {
     let (b, s) = fwd_batch_shape(graph);
     let vocab = graph.spec.outputs[0].shape[2];
-    let mut out = Vec::with_capacity(prompts.len());
-    let mut done = 0;
-    while done < prompts.len() {
-        let take = (prompts.len() - done).min(b);
-        let mut buf = vec![PAD; b * s];
-        let mut len = vec![0usize; take];
-        for (row, p) in prompts[done..done + take].iter().enumerate() {
-            let l = p.len().min(s - 1);
-            buf[row * s..row * s + l].copy_from_slice(&p[..l]);
-            len[row] = l;
-        }
-        let mut alive = vec![true; take];
-        for _ in 0..max_new {
-            if !alive.iter().any(|&a| a) {
-                break;
-            }
-            let logits = lm_logits(graph, meta, train, &buf, [0.0; 5], seed)?;
-            for row in 0..take {
-                if !alive[row] {
-                    continue;
-                }
-                let off = (row * s + len[row] - 1) * vocab;
-                let tok = crate::eval::metrics::argmax(&logits[off..off + vocab]) as i32;
-                buf[row * s + len[row]] = tok;
-                len[row] += 1;
-                if tok == ESOL || tok == EOS || len[row] >= s {
-                    alive[row] = false;
-                }
-            }
-        }
-        for row in 0..take {
-            let p = prompts[done + row].len().min(s - 1);
-            out.push(buf[row * s + p..row * s + len[row]].to_vec());
-        }
-        done += take;
-    }
-    Ok(out)
+    crate::serve::decode::greedy_chunks(b, s, vocab, prompts, max_new, &[ESOL, EOS], |buf| {
+        lm_logits(graph, meta, train, buf, [0.0; 5], seed)
+    })
 }
 
 /// Zero-shot suite accuracy: greedy exact-match of the expected

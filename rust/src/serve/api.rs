@@ -38,7 +38,8 @@ use crate::model::params::ParamStore;
 use crate::util::stats;
 
 use super::coord::{CoordConfig, RefreshCoordinator};
-use super::pool::{self, Job, WorkRequest, WorkerHandle};
+use super::decode::{GenConfig, Generation, TokenEvent};
+use super::pool::{self, GenRequest, Job, WorkRequest, WorkerHandle};
 use super::refresh::{spawn_refresh_worker, RefreshConfig, RefreshEvent, RefreshRunner};
 use super::registry::SharedRegistry;
 use super::sched::{Clock, RealClock, SchedConfig};
@@ -54,8 +55,16 @@ pub enum ServeError {
     BadShape { got: usize, want: usize },
     /// No adapter deployed under this task name at submit time.
     UnknownTask { task: String, known: Vec<String> },
+    /// Generation prompt is empty or leaves no room in the context
+    /// window (decode needs ≥ 1 free position for the first new token).
+    BadPrompt { got: usize, max: usize },
     /// The target worker's in-flight budget is exhausted — try again.
     Overloaded { worker: usize, depth: usize },
+    /// An in-flight generation was shed MID-STREAM (shutdown drain
+    /// expired, adapter vanished, or the decode step failed) after
+    /// `streamed` tokens already reached the client. Deliberately
+    /// non-retryable: replaying it would restart from token 0.
+    Shed { task: String, streamed: usize },
     /// Adapter disappeared between admission and execution.
     AdapterMissing { task: String },
     /// The forward batch failed in the engine (or by injected fault).
@@ -74,6 +83,14 @@ pub enum ServeError {
 
 impl ServeError {
     /// `true` for transient backpressure a client should retry.
+    ///
+    /// Exactly [`ServeError::Overloaded`] — a PRE-ADMISSION bounce: no
+    /// work started, retrying is free. Every decode-path error is
+    /// deliberately excluded: [`ServeError::Shed`] (and `Batch`/`Lost`
+    /// arriving on a [`GenTicket`]) means tokens may already have been
+    /// streamed, and a retry would silently replay the generation from
+    /// token 0. Streaming re-issue is the caller's decision, never the
+    /// retry helpers'.
     pub fn is_retryable(&self) -> bool {
         matches!(self, ServeError::Overloaded { .. })
     }
@@ -88,8 +105,17 @@ impl fmt::Display for ServeError {
             ServeError::UnknownTask { task, known } => {
                 write!(f, "unknown task '{task}' (deployed: {known:?})")
             }
+            ServeError::BadPrompt { got, max } => {
+                write!(f, "prompt has {got} tokens, generation needs 1..={max}")
+            }
             ServeError::Overloaded { worker, depth } => {
                 write!(f, "worker {worker} at queue depth {depth}, try again")
+            }
+            ServeError::Shed { task, streamed } => {
+                write!(
+                    f,
+                    "generation for task '{task}' shed mid-stream after {streamed} tokens"
+                )
             }
             ServeError::AdapterMissing { task } => {
                 write!(f, "no adapter deployed for task '{task}'")
@@ -153,6 +179,103 @@ impl Pending {
     }
 }
 
+/// Streaming ticket for one admitted generation
+/// ([`Client::generate`]). Events arrive per token as the worker's
+/// step-batch advances; the stream ALWAYS terminates — with a
+/// [`TokenEvent`] whose `done` flag is set, or with exactly one typed
+/// [`ServeError`] ([`ServeError::Shed`] for a mid-stream shed, which is
+/// never auto-retried).
+#[derive(Debug)]
+pub struct GenTicket {
+    pub id: u64,
+    pub worker: usize,
+    pub task: String,
+    rx: Receiver<ServeResult<TokenEvent>>,
+    done: bool,
+    streamed: usize,
+}
+
+impl GenTicket {
+    /// Non-blocking poll for the next per-token event. `None` while
+    /// the next token is still decoding — and forever after the
+    /// terminal event has been delivered.
+    pub fn try_next(&mut self) -> Option<ServeResult<TokenEvent>> {
+        if self.done {
+            return None;
+        }
+        match self.rx.try_recv() {
+            Ok(ev) => Some(self.absorb(ev)),
+            Err(TryRecvError::Empty) => None,
+            Err(TryRecvError::Disconnected) => {
+                self.done = true;
+                Some(Err(ServeError::Lost))
+            }
+        }
+    }
+
+    /// Block for the next per-token event; `None` once the stream has
+    /// delivered its terminal event.
+    pub fn next_event(&mut self) -> Option<ServeResult<TokenEvent>> {
+        if self.done {
+            return None;
+        }
+        match self.rx.recv() {
+            Ok(ev) => Some(self.absorb(ev)),
+            Err(_) => {
+                self.done = true;
+                Some(Err(ServeError::Lost))
+            }
+        }
+    }
+
+    /// Drain the stream and assemble the whole [`Generation`]. On error
+    /// the partial tokens are dropped — check
+    /// [`Self::tokens_streamed`] before deciding whether a re-issue is
+    /// safe ([`ServeError::Shed`] reports the worker-side count too).
+    pub fn wait_all(mut self) -> ServeResult<Generation> {
+        let mut tokens = Vec::new();
+        let (mut first_v, mut last_v) = (0u64, 0u64);
+        while let Some(ev) = self.next_event() {
+            let ev = ev?;
+            if tokens.is_empty() {
+                first_v = ev.adapter_version;
+            }
+            last_v = ev.adapter_version;
+            tokens.push(ev.token);
+            if ev.done {
+                return Ok(Generation {
+                    id: self.id,
+                    task: self.task,
+                    worker: self.worker,
+                    tokens,
+                    first_version: first_v,
+                    last_version: last_v,
+                });
+            }
+        }
+        Err(ServeError::Lost)
+    }
+
+    /// Tokens received so far (a mid-stream error leaves this at the
+    /// count the client actually saw).
+    pub fn tokens_streamed(&self) -> usize {
+        self.streamed
+    }
+
+    fn absorb(&mut self, ev: ServeResult<TokenEvent>) -> ServeResult<TokenEvent> {
+        match &ev {
+            Ok(t) => {
+                self.streamed += 1;
+                if t.done {
+                    self.done = true;
+                }
+            }
+            Err(_) => self.done = true,
+        }
+        ev
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Metrics
 // ---------------------------------------------------------------------------
@@ -206,11 +329,30 @@ pub struct Metrics {
     /// Worst trigger re-phase (ns) the coordinator applied when
     /// staggering (0 = never staggered / coordination off).
     pub stagger_shift_ns: AtomicU64,
+    /// Generations completed through the continuous-batching decode
+    /// path ([`super::decode`]).
+    pub generations: AtomicU64,
+    /// Decode steps executed (one fixed-shape forward per step).
+    pub decode_steps: AtomicU64,
+    /// Tokens emitted across all generations.
+    pub decode_tokens: AtomicU64,
+    /// Refresh hot-swaps that landed BETWEEN steps of in-flight
+    /// sequences — a sequence started on version v and finished on
+    /// v+1 without draining. The step-boundary gate
+    /// ([`super::decode::step_gate`]) is what makes these safe.
+    pub mid_seq_swaps: AtomicU64,
     latencies_us: Mutex<Vec<f64>>,
     batch_sizes: Mutex<Vec<f64>>,
     /// Scheduler-modeled batch latency samples (µs), recorded alongside
     /// the measured ones when pipeline-aware scheduling is active.
     modeled_us: Mutex<Vec<f64>>,
+    /// Time-to-first-token samples (ns), one per generation.
+    ttft_ns: Mutex<Vec<f64>>,
+    /// Inter-token gap samples (ns) within generations.
+    intertoken_ns: Mutex<Vec<f64>>,
+    /// Per-step occupancy samples: live sequences / step-batch
+    /// capacity, in 0..=1.
+    step_fill: Mutex<Vec<f64>>,
 }
 
 impl Metrics {
@@ -231,10 +373,41 @@ impl Metrics {
         }
     }
 
+    /// Record one decode step: `fill` live sequences stepped in a
+    /// capacity-`cap` step-batch, emitting `tokens` tokens; `modeled`
+    /// is the scheduler's table-lookup latency for this step-batch size
+    /// when pipeline scheduling is active. (`pub` because the
+    /// virtual-clock decode sim in `tests/common` records through the
+    /// same surface the pool worker does.)
+    pub fn record_decode_step(&self, fill: usize, cap: usize, tokens: usize, modeled: Option<Duration>) {
+        let s = self.decode_steps.fetch_add(1, Ordering::Relaxed) as usize;
+        self.decode_tokens.fetch_add(tokens as u64, Ordering::Relaxed);
+        push_sample(&mut self.step_fill.lock().unwrap(), s, fill as f64 / cap.max(1) as f64);
+        if let Some(m) = modeled {
+            push_sample(&mut self.modeled_us.lock().unwrap(), s, m.as_nanos() as f64 / 1e3);
+        }
+    }
+
+    /// Time-to-first-token for one generation (worker enqueue → first
+    /// token out).
+    pub fn record_ttft(&self, d: Duration) {
+        let i = self.decode_tokens.load(Ordering::Relaxed) as usize;
+        push_sample(&mut self.ttft_ns.lock().unwrap(), i, d.as_nanos() as f64);
+    }
+
+    /// Gap between consecutive tokens of one generation.
+    pub fn record_intertoken(&self, d: Duration) {
+        let i = self.decode_tokens.load(Ordering::Relaxed) as usize;
+        push_sample(&mut self.intertoken_ns.lock().unwrap(), i, d.as_nanos() as f64);
+    }
+
     pub fn snapshot(&self, label: &str) -> MetricsSnapshot {
         let lat = self.latencies_us.lock().unwrap();
         let bs = self.batch_sizes.lock().unwrap();
         let modeled = self.modeled_us.lock().unwrap();
+        let ttft = self.ttft_ns.lock().unwrap();
+        let itl = self.intertoken_ns.lock().unwrap();
+        let fill = self.step_fill.lock().unwrap();
         MetricsSnapshot {
             label: label.to_string(),
             served: self.served.load(Ordering::Relaxed),
@@ -250,10 +423,17 @@ impl Metrics {
             swap_gap_ns: self.swap_gap_ns.load(Ordering::Relaxed),
             concurrent_holds_peak: self.concurrent_holds_peak.load(Ordering::Relaxed),
             stagger_shift_ns: self.stagger_shift_ns.load(Ordering::Relaxed),
+            generations: self.generations.load(Ordering::Relaxed),
+            decode_steps: self.decode_steps.load(Ordering::Relaxed),
+            decode_tokens: self.decode_tokens.load(Ordering::Relaxed),
+            mid_seq_swaps: self.mid_seq_swaps.load(Ordering::Relaxed),
             batch_mean: stats::mean(&bs),
             lat_p50_ms: stats::percentile(&lat, 50.0) / 1e3,
             lat_p95_ms: stats::percentile(&lat, 95.0) / 1e3,
             modeled_p50_ms: stats::percentile(&modeled, 50.0) / 1e3,
+            ttft_p50_ms: stats::percentile(&ttft, 50.0) / 1e6,
+            intertoken_p50_ms: stats::percentile(&itl, 50.0) / 1e6,
+            step_occupancy_mean: stats::mean(&fill),
         }
     }
 
@@ -295,6 +475,15 @@ pub struct MetricsSnapshot {
     pub concurrent_holds_peak: u64,
     /// Worst coordinator trigger re-phase, ns (0 = no staggering).
     pub stagger_shift_ns: u64,
+    /// Generations completed on the decode path (0 = no generative
+    /// traffic).
+    pub generations: u64,
+    /// Decode steps executed across all generations.
+    pub decode_steps: u64,
+    /// Tokens emitted across all generations.
+    pub decode_tokens: u64,
+    /// Hot-swaps that landed mid-sequence, between decode steps.
+    pub mid_seq_swaps: u64,
     pub batch_mean: f64,
     pub lat_p50_ms: f64,
     pub lat_p95_ms: f64,
@@ -302,6 +491,13 @@ pub struct MetricsSnapshot {
     /// scheduler is off). The model predicts on-target AIMC/PMCA time,
     /// so on the simulation host it is a shape reference, not a match.
     pub modeled_p50_ms: f64,
+    /// p50 time-to-first-token across generations (0 = no decode).
+    pub ttft_p50_ms: f64,
+    /// p50 gap between consecutive tokens within generations.
+    pub intertoken_p50_ms: f64,
+    /// Mean step-batch occupancy (live sequences / capacity, 0..=1) —
+    /// the number continuous join exists to keep high.
+    pub step_occupancy_mean: f64,
 }
 
 impl fmt::Display for MetricsSnapshot {
@@ -348,6 +544,21 @@ impl fmt::Display for MetricsSnapshot {
                 self.stagger_shift_ns as f64 / 1e3
             )?;
         }
+        if self.decode_steps > 0 {
+            write!(
+                f,
+                " gens={} steps={} tokens={} occ={:.0}% ttft_p50={:.2}ms itl_p50={:.2}ms",
+                self.generations,
+                self.decode_steps,
+                self.decode_tokens,
+                self.step_occupancy_mean * 100.0,
+                self.ttft_p50_ms,
+                self.intertoken_p50_ms,
+            )?;
+            if self.mid_seq_swaps > 0 {
+                write!(f, " mid_seq_swaps={}", self.mid_seq_swaps)?;
+            }
+        }
         Ok(())
     }
 }
@@ -362,6 +573,9 @@ pub fn aggregate<'a>(workers: impl IntoIterator<Item = &'a Metrics>) -> MetricsS
     let mut lat = Vec::new();
     let mut bs = Vec::new();
     let mut modeled = Vec::new();
+    let mut ttft = Vec::new();
+    let mut itl = Vec::new();
+    let mut fill = Vec::new();
     for m in workers {
         out.served += m.served.load(Ordering::Relaxed);
         out.batches += m.batches.load(Ordering::Relaxed);
@@ -373,6 +587,10 @@ pub fn aggregate<'a>(workers: impl IntoIterator<Item = &'a Metrics>) -> MetricsS
         out.refresh_steps += m.refresh_steps.load(Ordering::Relaxed);
         out.refresh_errors += m.refresh_errors.load(Ordering::Relaxed);
         out.stale_batch_requests += m.stale_batch_requests.load(Ordering::Relaxed);
+        out.generations += m.generations.load(Ordering::Relaxed);
+        out.decode_steps += m.decode_steps.load(Ordering::Relaxed);
+        out.decode_tokens += m.decode_tokens.load(Ordering::Relaxed);
+        out.mid_seq_swaps += m.mid_seq_swaps.load(Ordering::Relaxed);
         // the gap is a worst-case, not a flow: max, not sum — and so are
         // the hold peak (each worker records the pool-wide count it saw)
         // and the stagger shift
@@ -386,11 +604,17 @@ pub fn aggregate<'a>(workers: impl IntoIterator<Item = &'a Metrics>) -> MetricsS
         lat.extend_from_slice(&m.latencies_us.lock().unwrap());
         bs.extend_from_slice(&m.batch_sizes.lock().unwrap());
         modeled.extend_from_slice(&m.modeled_us.lock().unwrap());
+        ttft.extend_from_slice(&m.ttft_ns.lock().unwrap());
+        itl.extend_from_slice(&m.intertoken_ns.lock().unwrap());
+        fill.extend_from_slice(&m.step_fill.lock().unwrap());
     }
     out.batch_mean = stats::mean(&bs);
     out.lat_p50_ms = stats::percentile(&lat, 50.0) / 1e3;
     out.lat_p95_ms = stats::percentile(&lat, 95.0) / 1e3;
     out.modeled_p50_ms = stats::percentile(&modeled, 50.0) / 1e3;
+    out.ttft_p50_ms = stats::percentile(&ttft, 50.0) / 1e6;
+    out.intertoken_p50_ms = stats::percentile(&itl, 50.0) / 1e6;
+    out.step_occupancy_mean = stats::mean(&fill);
     out
 }
 
@@ -794,6 +1018,13 @@ impl Client {
 
     /// Submit with bounded retry on [`ServeError::Overloaded`] — the
     /// cooperative client side of the try-again protocol.
+    ///
+    /// The retry loop covers ADMISSION only: once a ticket exists, an
+    /// error arriving on it is terminal and is never replayed by this
+    /// helper (for one-shot requests a replay would merely duplicate
+    /// work; for streaming tickets it would restart a partially
+    /// streamed generation from token 0 — see
+    /// [`Self::generate_with_retry`]).
     pub fn submit_with_retry(
         &self,
         task: &str,
@@ -803,6 +1034,92 @@ impl Client {
         let t0 = Instant::now();
         loop {
             match self.submit(task, tokens) {
+                Err(e) if e.is_retryable() && t0.elapsed() < deadline => {
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+                other => return other,
+            }
+        }
+    }
+
+    /// Start a generation: the prompt joins the task's worker
+    /// step-batch at the next step boundary and tokens stream back on
+    /// the returned [`GenTicket`] as the batch advances. Requires a
+    /// generative serving graph (`.graph("{variant}/fwd_lm")`); on a
+    /// classify graph the worker answers with [`ServeError::Batch`].
+    pub fn generate(&self, task: &str, prompt: &[i32], cfg: GenConfig) -> ServeResult<GenTicket> {
+        // decode appends into the context window: admission checks the
+        // engine's truncation bound (≥ 1 free slot), not the exact-seq
+        // rule one-shot submits use
+        if prompt.is_empty() || prompt.len() > self.seq - 1 {
+            return Err(ServeError::BadPrompt {
+                got: prompt.len(),
+                max: self.seq - 1,
+            });
+        }
+        if !self.registry.contains(task) {
+            return Err(ServeError::UnknownTask {
+                task: task.to_string(),
+                known: self.registry.tasks(),
+            });
+        }
+        if !self.accepting.load(Ordering::Acquire) {
+            return Err(ServeError::ShuttingDown);
+        }
+        let w = self.shard_for(task);
+        let h = &self.shards[w];
+        // a generation holds its in-flight slot from admission to its
+        // terminal event, like any other request
+        let prev = h.inflight.fetch_add(1, Ordering::AcqRel);
+        if prev >= h.queue_depth {
+            h.inflight.fetch_sub(1, Ordering::AcqRel);
+            h.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(ServeError::Overloaded {
+                worker: w,
+                depth: h.queue_depth,
+            });
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (resp_tx, resp_rx) = channel();
+        let req = GenRequest {
+            id,
+            task: task.to_string(),
+            prompt: prompt.to_vec(),
+            cfg,
+            resp: resp_tx,
+        };
+        if h.tx.send(Job::Gen(req)).is_err() {
+            h.inflight.fetch_sub(1, Ordering::AcqRel);
+            return Err(ServeError::ShuttingDown);
+        }
+        Ok(GenTicket {
+            id,
+            worker: w,
+            task: task.to_string(),
+            rx: resp_rx,
+            done: false,
+            streamed: 0,
+        })
+    }
+
+    /// [`Self::generate`] with bounded retry through PRE-ADMISSION
+    /// backpressure ([`ServeError::Overloaded`]) only — safe because an
+    /// admission bounce means no token was ever produced. Once a
+    /// [`GenTicket`] exists, errors arriving on it
+    /// ([`ServeError::Shed`], `Batch`, `Lost`) are terminal: a
+    /// partially-streamed generation is NEVER silently replayed from
+    /// token 0; deciding whether a re-issue is safe (idempotent
+    /// consumer, no tokens surfaced yet) belongs to the caller.
+    pub fn generate_with_retry(
+        &self,
+        task: &str,
+        prompt: &[i32],
+        cfg: GenConfig,
+        deadline: Duration,
+    ) -> ServeResult<GenTicket> {
+        let t0 = Instant::now();
+        loop {
+            match self.generate(task, prompt, cfg.clone()) {
                 Err(e) if e.is_retryable() && t0.elapsed() < deadline => {
                     std::thread::sleep(Duration::from_micros(200));
                 }
@@ -1243,5 +1560,146 @@ mod tests {
         assert!(e.to_string().contains("worker 3"));
         assert!(e.is_retryable());
         assert!(!ServeError::ShuttingDown.is_retryable());
+    }
+
+    fn event(id: u64, token: i32, index: usize, done: bool, version: u64) -> TokenEvent {
+        TokenEvent {
+            id,
+            task: "t".into(),
+            worker: 0,
+            token,
+            index,
+            done,
+            adapter_version: version,
+            step_fill: 1,
+        }
+    }
+
+    #[test]
+    fn generate_validates_prompt_task_and_shutdown() {
+        let (c, _rxs) = mock_client(1, 8, 4, registry_with(&["t"]));
+        assert_eq!(
+            c.generate("t", &[], GenConfig::default()).unwrap_err(),
+            ServeError::BadPrompt { got: 0, max: 3 }
+        );
+        // decode needs ≥ 1 free slot: a full-seq prompt is rejected
+        assert_eq!(
+            c.generate("t", &[1, 2, 3, 4], GenConfig::default()).unwrap_err(),
+            ServeError::BadPrompt { got: 4, max: 3 }
+        );
+        assert!(matches!(
+            c.generate("nope", &[1], GenConfig::default()).unwrap_err(),
+            ServeError::UnknownTask { .. }
+        ));
+        c.accepting.store(false, Ordering::Release);
+        assert_eq!(
+            c.generate("t", &[1], GenConfig::default()).unwrap_err(),
+            ServeError::ShuttingDown
+        );
+    }
+
+    #[test]
+    fn generate_admission_is_bounded_like_submit() {
+        let (c, _rxs) = mock_client(1, 1, 4, registry_with(&["t"]));
+        let _g1 = c.generate("t", &[1], GenConfig::default()).unwrap();
+        assert_eq!(
+            c.generate("t", &[1], GenConfig::default()).unwrap_err(),
+            ServeError::Overloaded { worker: 0, depth: 1 }
+        );
+        assert_eq!(c.shards[0].metrics.rejected.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn gen_ticket_streams_to_the_terminal_event_then_goes_quiet() {
+        let (c, rxs) = mock_client(1, 8, 8, registry_with(&["t"]));
+        let mut ticket = c.generate("t", &[1, 2], GenConfig::new(2)).unwrap();
+        assert!(ticket.try_next().is_none(), "nothing decoded yet");
+        let Job::Gen(g) = rxs[0].recv().unwrap() else {
+            panic!("expected a generation")
+        };
+        assert_eq!(g.prompt, vec![1, 2]);
+        g.resp.send(Ok(event(g.id, 7, 0, false, 1))).unwrap();
+        g.resp.send(Ok(event(g.id, 9, 1, true, 2))).unwrap();
+        let first = ticket.try_next().unwrap().unwrap();
+        assert_eq!((first.token, first.done), (7, false));
+        assert_eq!(ticket.tokens_streamed(), 1);
+        let last = ticket.next_event().unwrap().unwrap();
+        assert!(last.done);
+        // after the terminal event the stream is silent forever
+        assert!(ticket.try_next().is_none());
+        assert!(ticket.next_event().is_none());
+        assert_eq!(ticket.tokens_streamed(), 2);
+    }
+
+    #[test]
+    fn wait_all_assembles_the_generation_with_version_span() {
+        let (c, rxs) = mock_client(1, 8, 8, registry_with(&["t"]));
+        let ticket = c.generate("t", &[1], GenConfig::new(3)).unwrap();
+        let Job::Gen(g) = rxs[0].recv().unwrap() else {
+            panic!("expected a generation")
+        };
+        g.resp.send(Ok(event(g.id, 5, 0, false, 3))).unwrap();
+        g.resp.send(Ok(event(g.id, 6, 1, false, 4))).unwrap();
+        g.resp.send(Ok(event(g.id, 2, 2, true, 4))).unwrap();
+        let gen = ticket.wait_all().unwrap();
+        assert_eq!(gen.tokens, vec![5, 6, 2]);
+        // the sequence crossed a drain-free hot-swap: v3 → v4
+        assert_eq!((gen.first_version, gen.last_version), (3, 4));
+    }
+
+    #[test]
+    fn gen_ticket_resolves_lost_if_worker_dies_mid_stream() {
+        let (c, rxs) = mock_client(1, 8, 8, registry_with(&["t"]));
+        let mut ticket = c.generate("t", &[1], GenConfig::default()).unwrap();
+        let Job::Gen(g) = rxs[0].recv().unwrap() else {
+            panic!("expected a generation")
+        };
+        g.resp.send(Ok(event(g.id, 5, 0, false, 1))).unwrap();
+        drop(g); // worker vanishes without a terminal event
+        drop(rxs);
+        assert_eq!(ticket.next_event().unwrap().unwrap().token, 5);
+        assert_eq!(ticket.next_event().unwrap().unwrap_err(), ServeError::Lost);
+        assert!(ticket.next_event().is_none(), "Lost is terminal, delivered once");
+        assert_eq!(ticket.tokens_streamed(), 1, "partial progress stays visible");
+    }
+
+    #[test]
+    fn shed_is_terminal_and_never_retryable() {
+        let shed = ServeError::Shed { task: "t".into(), streamed: 3 };
+        assert!(!shed.is_retryable(), "a mid-stream shed must not be auto-replayed");
+        assert!(shed.to_string().contains("after 3 tokens"));
+        assert!(!ServeError::BadPrompt { got: 0, max: 7 }.is_retryable());
+    }
+
+    #[test]
+    fn decode_counters_flow_into_snapshots() {
+        let m = Metrics::default();
+        // 2 steps: full batch, then half after a retirement
+        m.record_decode_step(4, 4, 4, Some(Duration::from_micros(50)));
+        m.record_decode_step(2, 4, 2, None);
+        m.generations.fetch_add(2, Ordering::Relaxed);
+        m.mid_seq_swaps.fetch_add(1, Ordering::Relaxed);
+        m.record_ttft(Duration::from_millis(2));
+        m.record_intertoken(Duration::from_millis(1));
+        let s = m.snapshot("w");
+        assert_eq!(s.decode_steps, 2);
+        assert_eq!(s.decode_tokens, 6);
+        assert_eq!(s.generations, 2);
+        assert_eq!(s.mid_seq_swaps, 1);
+        assert!((s.step_occupancy_mean - 0.75).abs() < 1e-9, "{}", s.step_occupancy_mean);
+        assert!((s.ttft_p50_ms - 2.0).abs() < 1e-9);
+        assert!((s.intertoken_p50_ms - 1.0).abs() < 1e-9);
+        let text = s.to_string();
+        assert!(text.contains("gens=2"));
+        assert!(text.contains("mid_seq_swaps=1"));
+        let n = Metrics::default();
+        n.record_decode_step(4, 4, 4, None);
+        let agg = aggregate([&m, &n]);
+        assert_eq!(agg.decode_steps, 3);
+        assert_eq!(agg.decode_tokens, 10);
+        assert!((agg.step_occupancy_mean - (0.75 + 0.5 + 1.0) / 3.0).abs() < 1e-9);
+        // pools with no generative traffic stay silent
+        let quiet = Metrics::default().snapshot("w").to_string();
+        assert!(!quiet.contains("gens="));
     }
 }

@@ -1,0 +1,635 @@
+//! Continuous-batching decode: the step engine behind generative
+//! serving AND offline greedy evaluation.
+//!
+//! Autoregressive requests occupy a worker for many steps, so the
+//! one-shot batch rules stop applying: the step-batch is re-formed at
+//! every step boundary instead of once per batch. [`StepEngine`] owns
+//! that loop's state — a fixed `[b, s]` token buffer matching the
+//! compiled forward graph (the zero/PAD fill rule of
+//! [`crate::runtime::pack::PaddedChunks`], kept in ONE place now that
+//! `experiments::llm`'s hand-rolled copy is gone) plus per-row sequence
+//! bookkeeping:
+//!
+//! * **join** — new requests are admitted into free rows at step
+//!   boundaries ([`StepEngine::admit`]), never mid-step;
+//! * **retire** — a row that emits a stop token, reaches its `max_new`
+//!   budget, or fills the context window finishes immediately
+//!   ([`StepEngine::apply_logits`]) and its freed slot is available to
+//!   the very next joiner — retirement never blocks admission;
+//! * **re-balance** — the step-batch size changes every step, and with
+//!   it the Fig. 4 AIMC ⇄ PMCA balance. The per-step latency model is a
+//!   lookup into the scheduler's committed sweep
+//!   ([`super::sched::BatchScheduler::modeled_batch`]), not a re-sweep.
+//!
+//! # Step-boundary refresh safety
+//!
+//! A generation can outlive an adapter version: the worker re-snapshots
+//! the registry and consults the shared [`super::refresh::RefreshHandle`]
+//! at EVERY step boundary ([`step_gate`]). A due hot-swap therefore
+//! lands *between steps* of in-flight sequences — no drain, a sequence
+//! may start on version v and finish on v+1 (`Metrics::mid_seq_swaps`
+//! counts those), and zero steps run against a stale-past-trigger
+//! snapshot: the gate defers the step (bounded hold, same liveness rule
+//! as [`super::sched::Decision::Hold`]) until the swap lands or the
+//! hold budget runs out.
+//!
+//! # One decode path
+//!
+//! [`greedy_chunks`] drives the same engine in static chunks for the
+//! offline tables (`experiments::llm::batched_greedy` delegates here),
+//! so eval and live serving cannot drift apart: identical truncation,
+//! padding, argmax, and retirement rules.
+
+use std::time::{Duration, Instant};
+
+use crate::data::tokenizer::{EOS, ESOL, PAD};
+
+use super::refresh::RefreshView;
+
+// ---------------------------------------------------------------------------
+// Generation config and streamed events
+// ---------------------------------------------------------------------------
+
+/// Per-request generation settings for [`super::api::Client::generate`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct GenConfig {
+    /// Token budget: the row retires after emitting this many tokens
+    /// (always ≥ 1; the context window may retire it earlier).
+    pub max_new: usize,
+    /// Tokens that terminate the sequence the step they are emitted.
+    pub stop_tokens: Vec<i32>,
+}
+
+impl Default for GenConfig {
+    fn default() -> GenConfig {
+        GenConfig {
+            max_new: 16,
+            stop_tokens: vec![ESOL, EOS],
+        }
+    }
+}
+
+impl GenConfig {
+    pub fn new(max_new: usize) -> GenConfig {
+        GenConfig {
+            max_new: max_new.max(1),
+            ..GenConfig::default()
+        }
+    }
+
+    pub fn stops(mut self, toks: &[i32]) -> Self {
+        self.stop_tokens = toks.to_vec();
+        self
+    }
+}
+
+/// One streamed token from an in-flight generation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TokenEvent {
+    pub id: u64,
+    pub task: String,
+    /// Worker whose step-batch produced this token.
+    pub worker: usize,
+    pub token: i32,
+    /// 0-based position within the generation.
+    pub index: usize,
+    /// Terminal marker: this is the generation's last event.
+    pub done: bool,
+    /// Adapter version the producing step ran at — changes mid-stream
+    /// exactly when a refresh hot-swap landed between steps.
+    pub adapter_version: u64,
+    /// Live sequences in the step-batch at that step.
+    pub step_fill: usize,
+}
+
+/// A completed generation, assembled by
+/// [`super::api::GenTicket::wait_all`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Generation {
+    pub id: u64,
+    pub task: String,
+    pub worker: usize,
+    pub tokens: Vec<i32>,
+    /// Adapter versions of the first and last step; they differ exactly
+    /// when the sequence crossed a drain-free mid-sequence hot-swap.
+    pub first_version: u64,
+    pub last_version: u64,
+}
+
+// ---------------------------------------------------------------------------
+// The step engine
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+struct SeqState {
+    id: u64,
+    prompt_len: usize,
+    /// Valid tokens in the row (prompt + emitted).
+    len: usize,
+    emitted: usize,
+    max_new: usize,
+    stops: Vec<i32>,
+    alive: bool,
+}
+
+/// One row's outcome from a decode step.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StepEmit {
+    pub row: usize,
+    pub id: u64,
+    pub token: i32,
+    /// 0-based index of this token within the row's generation.
+    pub index: usize,
+    /// The row retired this step (stop token, `max_new` spent, or the
+    /// sequence filled the graph's context window).
+    pub finished: bool,
+}
+
+/// Fixed-shape `[b, s]` continuous-batching state for one task.
+///
+/// Rows hold growing sequences in the exact buffer layout the compiled
+/// forward graph expects; unused rows and tails stay `PAD`. The caller
+/// owns the loop: `admit` joiners, run the forward on [`inputs`],
+/// [`apply_logits`], deliver/`harvest`, repeat.
+///
+/// [`inputs`]: StepEngine::inputs
+/// [`apply_logits`]: StepEngine::apply_logits
+/// [`harvest`]: StepEngine::harvest
+pub struct StepEngine {
+    b: usize,
+    s: usize,
+    vocab: usize,
+    buf: Vec<i32>,
+    rows: Vec<Option<SeqState>>,
+}
+
+impl StepEngine {
+    pub fn new(b: usize, s: usize, vocab: usize) -> StepEngine {
+        assert!(b >= 1 && s >= 2 && vocab >= 1, "degenerate decode shape");
+        StepEngine {
+            b,
+            s,
+            vocab,
+            buf: vec![PAD; b * s],
+            rows: (0..b).map(|_| None).collect(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.b
+    }
+
+    pub fn seq(&self) -> usize {
+        self.s
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    /// Rows still decoding (retired-but-unharvested rows do not count).
+    pub fn live(&self) -> usize {
+        self.rows.iter().flatten().filter(|r| r.alive).count()
+    }
+
+    /// Rows holding a sequence, live or awaiting harvest.
+    pub fn occupied(&self) -> usize {
+        self.rows.iter().flatten().count()
+    }
+
+    pub fn has_room(&self) -> bool {
+        self.rows.iter().any(|r| r.is_none())
+    }
+
+    /// Tokens emitted so far by the sequence in `row` (0 if the row is
+    /// free).
+    pub fn emitted(&self, row: usize) -> usize {
+        self.rows[row].as_ref().map_or(0, |r| r.emitted)
+    }
+
+    /// Join a sequence at this step boundary: claim a free row, lay the
+    /// prompt down (truncated to `s - 1` so the first new token always
+    /// fits), PAD the tail. Returns the row, or `None` when the
+    /// step-batch is full. Empty prompts and `max_new == 0` admit as
+    /// already-retired rows (they harvest an empty completion).
+    pub fn admit(&mut self, id: u64, prompt: &[i32], max_new: usize, stops: &[i32]) -> Option<usize> {
+        let row = self.rows.iter().position(|r| r.is_none())?;
+        let l = prompt.len().min(self.s - 1);
+        self.buf[row * self.s..(row + 1) * self.s].fill(PAD);
+        self.buf[row * self.s..row * self.s + l].copy_from_slice(&prompt[..l]);
+        self.rows[row] = Some(SeqState {
+            id,
+            prompt_len: l,
+            len: l,
+            emitted: 0,
+            max_new,
+            stops: stops.to_vec(),
+            alive: l > 0 && max_new > 0,
+        });
+        Some(row)
+    }
+
+    /// The full `[b, s]` token buffer for the forward pass.
+    pub fn inputs(&self) -> &[i32] {
+        &self.buf
+    }
+
+    /// Advance every live row by one token from the step's `[b, s,
+    /// vocab]` logits: greedy argmax at the row's last valid position,
+    /// append, and retire rows that hit a stop token, their `max_new`
+    /// budget, or the context window.
+    pub fn apply_logits(&mut self, logits: &[f32]) -> Vec<StepEmit> {
+        debug_assert_eq!(logits.len(), self.b * self.s * self.vocab);
+        let mut out = Vec::new();
+        for row in 0..self.b {
+            let Some(st) = self.rows[row].as_mut() else {
+                continue;
+            };
+            if !st.alive {
+                continue;
+            }
+            let off = (row * self.s + st.len - 1) * self.vocab;
+            let tok = crate::eval::metrics::argmax(&logits[off..off + self.vocab]) as i32;
+            self.buf[row * self.s + st.len] = tok;
+            st.len += 1;
+            st.emitted += 1;
+            let finished = st.stops.contains(&tok) || st.len >= self.s || st.emitted >= st.max_new;
+            if finished {
+                st.alive = false;
+            }
+            out.push(StepEmit {
+                row,
+                id: st.id,
+                token: tok,
+                index: st.emitted - 1,
+                finished,
+            });
+        }
+        out
+    }
+
+    /// Copy out a row's completion (emitted tokens only) and free the
+    /// row for the next joiner. `None` if the row is free.
+    pub fn harvest(&mut self, row: usize) -> Option<Vec<i32>> {
+        let st = self.rows[row].take()?;
+        let out = self.buf[row * self.s + st.prompt_len..row * self.s + st.len].to_vec();
+        self.buf[row * self.s..(row + 1) * self.s].fill(PAD);
+        Some(out)
+    }
+
+    /// Free a row without copying its completion (serving streams the
+    /// tokens as they are produced, so nothing is left to collect).
+    pub fn release(&mut self, row: usize) {
+        if self.rows[row].take().is_some() {
+            self.buf[row * self.s..(row + 1) * self.s].fill(PAD);
+        }
+    }
+
+    /// Free every row and restore the all-PAD buffer.
+    pub fn reset(&mut self) {
+        self.buf.fill(PAD);
+        self.rows.iter_mut().for_each(|r| *r = None);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Step-boundary refresh gate
+// ---------------------------------------------------------------------------
+
+/// Verdict of the step-boundary refresh consultation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepGate {
+    /// Run the step on the snapshot at hand.
+    Go,
+    /// The task's effective trigger has passed but the hot-swap has not
+    /// landed: defer the step so the swap lands BETWEEN steps. Re-check
+    /// no later than `until` — past it, liveness wins over freshness
+    /// (the same bounded-hold rule as [`super::sched::Decision::Hold`]).
+    Hold { until: Instant },
+}
+
+/// Decide whether the next decode step may run against the fresh
+/// registry snapshot `(task, version)` taken at this step boundary.
+///
+/// `held_since` is the caller's per-task hold anchor; the gate manages
+/// it (set on the first deferred step, cleared on every `Go`). With the
+/// refresh runner ticking on the same clock, a due swap lands while the
+/// caller waits and the next boundary's snapshot serves the new version
+/// — zero steps ever execute against a stale-past-trigger snapshot.
+pub fn step_gate(
+    view: Option<RefreshView>,
+    version: u64,
+    now: Instant,
+    fallback_hold: Duration,
+    held_since: &mut Option<Instant>,
+) -> StepGate {
+    let Some(v) = view else {
+        *held_since = None;
+        return StepGate::Go;
+    };
+    let due = v.effective_trigger().map_or(false, |t| now >= t);
+    // a snapshot NEWER than the watched version means a swap (or a
+    // manual deploy racing the policy) already landed: fresh, go
+    if !due || version > v.version {
+        *held_since = None;
+        return StepGate::Go;
+    }
+    let hold = v.hold.unwrap_or(fallback_hold);
+    let since = *held_since.get_or_insert(now);
+    let until = since + hold;
+    if now >= until {
+        // the refit overran its hold budget: serve (knowingly stale —
+        // the worker's stale-step accounting records it) rather than
+        // starve the in-flight sequences
+        *held_since = None;
+        StepGate::Go
+    } else {
+        StepGate::Hold { until }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Offline greedy decoding (static chunks on the same engine)
+// ---------------------------------------------------------------------------
+
+/// Greedy-decode `prompts` in static chunks of up to `b` rows through
+/// `step_fn` (one fixed-shape `[b, s]` forward per step, returning
+/// `[b, s, vocab]` logits). This is the offline entry onto the shared
+/// engine: `experiments::llm::batched_greedy` wraps it with the real
+/// `lm_logits` forward, tests wrap it with synthetic logits. Each chunk
+/// is admitted whole and run to completion — no continuous join — which
+/// reproduces the legacy fixed-batch evaluation loop token for token.
+pub fn greedy_chunks<F>(
+    b: usize,
+    s: usize,
+    vocab: usize,
+    prompts: &[Vec<i32>],
+    max_new: usize,
+    stops: &[i32],
+    mut step_fn: F,
+) -> anyhow::Result<Vec<Vec<i32>>>
+where
+    F: FnMut(&[i32]) -> anyhow::Result<Vec<f32>>,
+{
+    let mut engine = StepEngine::new(b, s, vocab);
+    let mut out = Vec::with_capacity(prompts.len());
+    for chunk in prompts.chunks(b) {
+        engine.reset();
+        for (i, p) in chunk.iter().enumerate() {
+            engine.admit(i as u64, p, max_new, stops);
+        }
+        while engine.live() > 0 {
+            let logits = step_fn(engine.inputs())?;
+            engine.apply_logits(&logits);
+        }
+        for row in 0..chunk.len() {
+            out.push(engine.harvest(row).expect("admitted row"));
+        }
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Tests
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const B: usize = 2;
+    const S: usize = 8;
+    const V: usize = 8; // covers PAD(0)…EOS(5) plus two content tokens
+
+    /// Deterministic synthetic logits: position `p` of a row continues
+    /// with `(tok_at_p * 5 + p + 1) % V`, so trajectories depend on the
+    /// buffer content exactly like a real model's would.
+    fn fake_logits(buf: &[i32]) -> Vec<f32> {
+        let mut logits = vec![0.0f32; B * S * V];
+        for row in 0..B {
+            for p in 0..S {
+                let t = ((buf[row * S + p] as usize * 5 + p + 1) % V) as usize;
+                logits[(row * S + p) * V + t] = 1.0;
+            }
+        }
+        logits
+    }
+
+    #[test]
+    fn admit_lays_out_prompt_and_pads_tail() {
+        let mut e = StepEngine::new(B, S, V);
+        let row = e.admit(7, &[6, 7, 6], 4, &[EOS]).unwrap();
+        assert_eq!(row, 0);
+        assert_eq!(&e.inputs()[..S], &[6, 7, 6, PAD, PAD, PAD, PAD, PAD]);
+        assert_eq!(&e.inputs()[S..], &[PAD; S]);
+        assert_eq!((e.live(), e.occupied()), (1, 1));
+        assert!(e.has_room());
+        // over-long prompts truncate to s-1 so the first token fits
+        let long: Vec<i32> = (0..20).collect();
+        let row = e.admit(8, &long, 4, &[EOS]).unwrap();
+        assert_eq!(row, 1);
+        assert_eq!(&e.inputs()[S..2 * S - 1], &long[..S - 1]);
+        assert_eq!(e.inputs()[2 * S - 1], PAD);
+        assert!(!e.has_room());
+        assert!(e.admit(9, &[1], 4, &[EOS]).is_none());
+    }
+
+    #[test]
+    fn apply_logits_appends_argmax_and_retires_on_stop_budget_and_window() {
+        let mut e = StepEngine::new(B, S, V);
+        // row continues 6 → (6*5+2+1)%8 = 1; stop set {1} retires it
+        e.admit(1, &[7, 6], 9, &[1]).unwrap();
+        let emits = e.apply_logits(&fake_logits(e.inputs()));
+        assert_eq!(
+            emits,
+            vec![StepEmit { row: 0, id: 1, token: 1, index: 0, finished: true }]
+        );
+        assert_eq!((e.live(), e.occupied()), (0, 1));
+        assert_eq!(e.harvest(0), Some(vec![1]));
+        assert_eq!(e.occupied(), 0);
+
+        // max_new budget retires after exactly that many tokens
+        e.admit(2, &[7, 6], 2, &[]).unwrap();
+        let a = e.apply_logits(&fake_logits(e.inputs()));
+        assert!(!a[0].finished);
+        let b = e.apply_logits(&fake_logits(e.inputs()));
+        assert!(b[0].finished && b[0].index == 1);
+        assert_eq!(e.harvest(0).unwrap().len(), 2);
+
+        // the context window retires a row whose prompt nearly fills it
+        let near: Vec<i32> = vec![6; S - 1];
+        e.admit(3, &near, 99, &[]).unwrap();
+        let c = e.apply_logits(&fake_logits(e.inputs()));
+        assert!(c[0].finished, "len reached s");
+        assert_eq!(e.emitted(0), 1);
+    }
+
+    #[test]
+    fn degenerate_admissions_retire_instantly() {
+        let mut e = StepEngine::new(B, S, V);
+        e.admit(1, &[], 4, &[EOS]).unwrap();
+        e.admit(2, &[6, 7], 0, &[EOS]).unwrap();
+        assert_eq!(e.live(), 0, "nothing to decode");
+        assert_eq!(e.harvest(0), Some(vec![]));
+        assert_eq!(e.harvest(1), Some(vec![]));
+    }
+
+    #[test]
+    fn retired_rows_free_immediately_for_joiners() {
+        let mut e = StepEngine::new(B, S, V);
+        e.admit(1, &[7, 6], 1, &[]).unwrap();
+        e.admit(2, &[6, 6], 9, &[]).unwrap();
+        assert!(!e.has_room());
+        let emits = e.apply_logits(&fake_logits(e.inputs()));
+        assert!(emits[0].finished && !emits[1].finished);
+        e.release(emits[0].row);
+        // the freed row is PAD-clean and admits the next joiner at the
+        // SAME boundary — retirement never blocks the queue
+        assert_eq!(&e.inputs()[..S], &[PAD; S]);
+        assert_eq!(e.admit(3, &[7], 9, &[]), Some(0));
+        assert_eq!(e.live(), 2);
+    }
+
+    /// The legacy `experiments::llm::batched_greedy` loop, verbatim,
+    /// pinning bit-identity of the shared-engine refactor (Tables
+    /// 4/5/9/10 decode through exactly this algorithm).
+    fn reference_greedy<F>(
+        b: usize,
+        s: usize,
+        vocab: usize,
+        prompts: &[Vec<i32>],
+        max_new: usize,
+        mut step_fn: F,
+    ) -> Vec<Vec<i32>>
+    where
+        F: FnMut(&[i32]) -> Vec<f32>,
+    {
+        let mut out = Vec::with_capacity(prompts.len());
+        let mut done = 0;
+        while done < prompts.len() {
+            let take = (prompts.len() - done).min(b);
+            let mut buf = vec![PAD; b * s];
+            let mut len = vec![0usize; take];
+            for (row, p) in prompts[done..done + take].iter().enumerate() {
+                let l = p.len().min(s - 1);
+                buf[row * s..row * s + l].copy_from_slice(&p[..l]);
+                len[row] = l;
+            }
+            let mut alive = vec![true; take];
+            for _ in 0..max_new {
+                if !alive.iter().any(|&a| a) {
+                    break;
+                }
+                let logits = step_fn(&buf);
+                for row in 0..take {
+                    if !alive[row] {
+                        continue;
+                    }
+                    let off = (row * s + len[row] - 1) * vocab;
+                    let tok = crate::eval::metrics::argmax(&logits[off..off + vocab]) as i32;
+                    buf[row * s + len[row]] = tok;
+                    len[row] += 1;
+                    if tok == ESOL || tok == EOS || len[row] >= s {
+                        alive[row] = false;
+                    }
+                }
+            }
+            for row in 0..take {
+                let p = prompts[done + row].len().min(s - 1);
+                out.push(buf[row * s + p..row * s + len[row]].to_vec());
+            }
+            done += take;
+        }
+        out
+    }
+
+    #[test]
+    fn greedy_chunks_is_bit_identical_to_the_legacy_loop() {
+        // odd prompt count forces a ragged final chunk; mixed lengths
+        // exercise truncation and early stops
+        let prompts: Vec<Vec<i32>> = vec![
+            vec![6, 7],
+            vec![7],
+            vec![6, 6, 7, 6, 7, 6, 7, 6, 7],
+            vec![7, 7, 6],
+            vec![6],
+        ];
+        for max_new in [1, 3, 7, 16] {
+            let got = greedy_chunks(B, S, V, &prompts, max_new, &[ESOL, EOS], |buf| {
+                Ok(fake_logits(buf))
+            })
+            .unwrap();
+            let want = reference_greedy(B, S, V, &prompts, max_new, fake_logits);
+            assert_eq!(got, want, "max_new={max_new}");
+        }
+    }
+
+    fn view(version: u64, trigger_in: Option<Duration>, now: Instant) -> RefreshView {
+        RefreshView {
+            version,
+            trigger_at: trigger_in.map(|d| now + d),
+            refit_in_flight: false,
+            last_swap: None,
+            staggered_at: None,
+            window: None,
+            hold: None,
+        }
+    }
+
+    #[test]
+    fn step_gate_goes_when_fresh_and_holds_past_trigger() {
+        let now = Instant::now();
+        let hold = Duration::from_millis(5);
+        let mut since = None;
+        // no lifecycle / trigger far away: go
+        assert_eq!(step_gate(None, 1, now, hold, &mut since), StepGate::Go);
+        let fresh = view(1, Some(Duration::from_secs(1)), now);
+        assert_eq!(step_gate(Some(fresh), 1, now, hold, &mut since), StepGate::Go);
+        assert!(since.is_none());
+        // trigger passed, swap not landed: hold until the budget bound
+        let due = view(1, Some(Duration::ZERO), now);
+        assert_eq!(
+            step_gate(Some(due), 1, now, hold, &mut since),
+            StepGate::Hold { until: now + hold }
+        );
+        assert_eq!(since, Some(now));
+        // swap lands (snapshot version advances): go, anchor cleared
+        let swapped = view(1, Some(Duration::ZERO), now);
+        assert_eq!(step_gate(Some(swapped), 2, now, hold, &mut since), StepGate::Go);
+        assert!(since.is_none());
+    }
+
+    #[test]
+    fn step_gate_hold_budget_bounds_the_deferral() {
+        let now = Instant::now();
+        let hold = Duration::from_millis(5);
+        let mut since = None;
+        let due = view(3, Some(Duration::ZERO), now);
+        assert!(matches!(
+            step_gate(Some(due), 3, now, hold, &mut since),
+            StepGate::Hold { .. }
+        ));
+        // the anchor holds across re-checks; past it, liveness wins
+        let later = now + hold;
+        let still_due = view(3, Some(Duration::ZERO), now);
+        assert_eq!(step_gate(Some(still_due), 3, later, hold, &mut since), StepGate::Go);
+        assert!(since.is_none(), "expired hold resets its anchor");
+        // a coordinator-adapted hold overrides the fallback
+        let mut s2 = None;
+        let mut adapted = view(3, Some(Duration::ZERO), now);
+        adapted.hold = Some(Duration::from_millis(1));
+        assert_eq!(
+            step_gate(Some(adapted), 3, now, hold, &mut s2),
+            StepGate::Hold { until: now + Duration::from_millis(1) }
+        );
+    }
+
+    #[test]
+    fn gen_config_clamps_and_builds() {
+        let cfg = GenConfig::new(0);
+        assert_eq!(cfg.max_new, 1);
+        assert_eq!(cfg.stop_tokens, vec![ESOL, EOS]);
+        let cfg = GenConfig::new(4).stops(&[EOS]);
+        assert_eq!((cfg.max_new, cfg.stop_tokens.as_slice()), (4, &[EOS][..]));
+    }
+}

@@ -9,7 +9,9 @@
 //!   batching knobs; `build` spawns the pool.
 //! * [`api::Client`] — cloneable submit handle; `submit` returns a typed
 //!   [`api::Pending`] ticket that ALWAYS resolves (success or a
-//!   per-request [`api::ServeError`] — no hung receivers).
+//!   per-request [`api::ServeError`] — no hung receivers), and
+//!   `generate` returns a streaming [`api::GenTicket`] over per-token
+//!   events from the continuous-batching decode loop.
 //! * an engine pool — N worker threads, each owning its own PJRT engine
 //!   (the handles are not `Send`), tasks pinned to workers by stable
 //!   hash, bounded admission with `Overloaded` try-again backpressure.
@@ -58,7 +60,40 @@
 //!                    Metrics::swap_gap_ns records the handoff gap,
 //!                    Metrics::concurrent_holds_peak how many shards
 //!                    ever stalled together)
+//!
+//!       ┌──────────────────────── DECODE ────────────────────────┐
+//!       │  step-batch (continuous batching, one lane per task)   │
+//!       │                                                        │
+//!       │  join ──► [ row0: tok tok tok ▸            ]           │
+//!       │           [ row1: tok ▸                    ]◄── join   │
+//!       │           [ row2: tok tok EOS ] ─► retire, row frees   │
+//!       │                 │step│step│step│                       │
+//!       │                 ▼    ▼    ▼    ▼  every boundary:      │
+//!       │   fresh registry snapshot + RefreshHandle consult      │
+//!       │   (due swap? → step_gate Holds ≤ hold budget, the      │
+//!       │    swap lands BETWEEN steps: a sequence starts on v    │
+//!       │    and finishes on v+1 — no drain, zero stale steps;   │
+//!       │    Metrics::mid_seq_swaps counts the crossings)        │
+//!       │   re-balance: modeled fill cost = table lookup into    │
+//!       │   the scheduler's committed sweep (no re-sweep)        │
+//!       └────────────────────────────────────────────────────────┘
 //! ```
+//!
+//! # Streaming tickets
+//!
+//! Generative requests enter through [`api::Client::generate`], which
+//! admits against the same bounded budget as `submit` and returns an
+//! [`api::GenTicket`]. The ticket is an iterator-shaped receiver over
+//! [`decode::TokenEvent`]s: `try_next()` polls without blocking,
+//! `next_event()` blocks for one token, `wait_all()` collects the full
+//! [`decode::Generation`] (tokens plus the first/last adapter versions
+//! it was served at — unequal versions mean the sequence crossed a
+//! drain-free hot-swap). Exactly one terminal arrives on every path:
+//! the `done` token event, or a typed [`api::ServeError`]. Mid-stream
+//! failures surface as `ServeError::Shed { streamed, .. }` and are
+//! deliberately NOT retryable — a partially-streamed generation is
+//! never silently replayed from token 0 (see
+//! [`api::Client::generate_with_retry`]).
 //!
 //! Supporting pieces:
 //!
@@ -82,7 +117,13 @@
 //!   at `max_concurrent_holds`) and adapts each task's coupling window
 //!   (from observed swap gaps) and hold (from the refitter's measured
 //!   step budget), feeding decisions back through the same
-//!   [`refresh::RefreshHandle`] the schedulers already read.
+//!   [`refresh::RefreshHandle`] the schedulers already read,
+//! * [`decode`]   — the continuous-batching step engine: fixed-shape
+//!   step-batches where sequences join at step boundaries and retire at
+//!   EOS, plus the step-boundary refresh gate ([`decode::step_gate`]).
+//!   Offline eval ([`crate::experiments::llm::batched_greedy`]) and
+//!   live serving decode through this one engine, so the PAD layout,
+//!   argmax tie-break, and stop rules cannot diverge.
 //!
 //! (The deprecated `serve::router` / `serve::server` shims from the
 //! pre-builder API are gone; [`api`] is the only serving surface.)
@@ -109,21 +150,26 @@
 //! "zero requests served at a stale version" or "no batch spans a
 //! version bump" are exact, not probabilistic. The conformance suite
 //! for the coupling lives in `tests/refresh_sched_e2e.rs`, the
-//! cross-worker coordination suite in `tests/coord_conformance.rs`
-//! (both on the shared `tests/common/refresh_sim.rs` harness); the
+//! cross-worker coordination suite in `tests/coord_conformance.rs`, and
+//! the continuous-batching decode suite in `tests/decode_conformance.rs`
+//! (all on the shared `tests/common/refresh_sim.rs` harness); the
 //! scheduler-policy property tests in `tests/sched_properties.rs`.
 
 pub mod api;
 pub mod batcher;
 pub mod coord;
+pub mod decode;
 mod pool;
 pub mod refresh;
 pub mod registry;
 pub mod sched;
 
 pub use api::{
-    aggregate, submit_wave, submit_wave_results, Client, Metrics, MetricsSnapshot, Pending,
-    Response, ServeError, ServeResult, Server, ServerBuilder,
+    aggregate, submit_wave, submit_wave_results, Client, GenTicket, Metrics, MetricsSnapshot,
+    Pending, Response, ServeError, ServeResult, Server, ServerBuilder,
+};
+pub use decode::{
+    greedy_chunks, step_gate, GenConfig, Generation, StepEmit, StepEngine, StepGate, TokenEvent,
 };
 pub use coord::{stagger_assign, CoordConfig, RefreshCoordinator, StaggerEntry};
 pub use refresh::{

@@ -7,18 +7,19 @@
 //! result**, on every path — success, adapter miss, batch failure,
 //! injected fault, engine-init failure, and shutdown drain.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::config::manifest::Manifest;
-use crate::eval::drift_eval::{cls_logits, fwd_batch_shape};
+use crate::eval::drift_eval::{cls_logits, fwd_batch_shape, lm_logits};
 use crate::model::params::ParamStore;
 
 use super::api::{Metrics, Response, ServeError, ServeResult};
 use super::batcher::Batcher;
+use super::decode::{step_gate, GenConfig, StepEngine, StepGate, TokenEvent};
 use super::refresh::RefreshHandle;
 use super::registry::SharedRegistry;
 use super::sched::{BatchScheduler, Clock, Decision, SchedConfig};
@@ -31,8 +32,20 @@ pub(crate) struct WorkRequest {
     pub resp: Sender<ServeResult<Response>>,
 }
 
+/// One admitted generation travelling to a worker; tokens stream back
+/// on `resp` as the step-batch advances, ending with exactly one
+/// terminal event (`done` token or error).
+pub(crate) struct GenRequest {
+    pub id: u64,
+    pub task: String,
+    pub prompt: Vec<i32>,
+    pub cfg: GenConfig,
+    pub resp: Sender<ServeResult<TokenEvent>>,
+}
+
 pub(crate) enum Job {
     Req(WorkRequest),
+    Gen(GenRequest),
     Shutdown,
 }
 
@@ -73,6 +86,60 @@ pub(crate) struct WorkerConfig {
 /// After a shutdown signal, how long to wait for admitted-but-not-yet-
 /// enqueued racers before giving up (they would resolve as `Lost`).
 const DRAIN_GRACE: Duration = Duration::from_millis(500);
+
+/// Fallback step-boundary hold budget when no coordinator-adapted hold
+/// is published (mirrors `RefreshCoupling::hold`'s default).
+const DECODE_HOLD: Duration = Duration::from_millis(20);
+
+/// Client-side state for one in-flight generation occupying an engine
+/// row.
+struct GenSeq {
+    resp: Sender<ServeResult<TokenEvent>>,
+    /// Pool-clock instant the worker accepted the generation (TTFT
+    /// anchor).
+    enqueued_at: Instant,
+    last_token_at: Option<Instant>,
+}
+
+/// Continuous-batching decode state for ONE task: the step engine, the
+/// per-row client channels, and the joiners waiting for a free row.
+/// Batches never mix tasks, and neither do step-batches — each task
+/// decodes through its own lane on the shared worker.
+struct DecodeLane {
+    engine: StepEngine,
+    seqs: Vec<Option<GenSeq>>,
+    /// Joiners waiting for a free row, with their worker-accept stamp.
+    queue: VecDeque<(GenRequest, Instant)>,
+    /// Step-boundary hold anchor (managed by `decode::step_gate`).
+    held_since: Option<Instant>,
+    /// Adapter version the previous step ran at — a change while
+    /// sequences are live is a drain-free mid-sequence hot-swap.
+    last_version: Option<u64>,
+}
+
+impl DecodeLane {
+    fn new(b: usize, s: usize, vocab: usize) -> DecodeLane {
+        DecodeLane {
+            engine: StepEngine::new(b, s, vocab),
+            seqs: (0..b).map(|_| None).collect(),
+            queue: VecDeque::new(),
+            held_since: None,
+            last_version: None,
+        }
+    }
+
+    fn busy(&self) -> bool {
+        self.engine.occupied() > 0 || !self.queue.is_empty()
+    }
+}
+
+enum LaneOutcome {
+    /// The lane executed a step (or shed work) — state advanced.
+    Progressed,
+    /// A due hot-swap has not landed: step deferred until `until`.
+    Held { until: Instant },
+    Idle,
+}
 
 pub(crate) fn spawn_worker(
     cfg: WorkerConfig,
@@ -128,6 +195,14 @@ fn worker_loop(
         .compile_ms
         .store(engine.total_compile_ms() as u64, Ordering::Relaxed);
     debug_assert_eq!(fwd_batch_shape(&graph).1, cfg.seq);
+    // generative serving needs [batch, seq, vocab] logits; classify
+    // graphs keep `vocab` empty and bounce `Job::Gen` with a typed error
+    let vocab = graph
+        .spec
+        .outputs
+        .first()
+        .filter(|o| o.shape.len() == 3)
+        .map(|o| o.shape[2]);
 
     let mut batcher: Batcher<WorkRequest> =
         Batcher::with_clock(cfg.max_batch, cfg.max_wait, cfg.clock.clone());
@@ -161,52 +236,68 @@ fn worker_loop(
     // hold transitions — never on the ordinary per-batch path — and
     // the pool-wide holding count stays a count of stalled SHARDS.
     let mut holding_task: Option<String> = None;
+    // continuous-batching decode state, one lane per task with live or
+    // queued generations (lanes drop as soon as they empty)
+    let mut lanes: BTreeMap<String, DecodeLane> = BTreeMap::new();
 
     loop {
+        let mut incoming: Vec<Job> = Vec::new();
         if open {
-            // block until work/shutdown arrives or, if batches are
-            // queued, exactly until the next actionable instant — no
-            // fixed polling tick. For the fixed batcher that is its
-            // earliest deadline; for the scheduler it is whatever
-            // `pick` last said to wake at (tightened deadline or hold
-            // bound).
-            let wake = sched_wake.or_else(|| batcher.next_deadline());
-            let msg = match wake {
-                Some(d) => match rx.recv_timeout(d.saturating_duration_since(cfg.clock.now())) {
-                    Ok(job) => Some(job),
-                    Err(RecvTimeoutError::Timeout) => None,
-                    Err(RecvTimeoutError::Disconnected) => Some(Job::Shutdown),
-                },
-                None => Some(rx.recv().unwrap_or(Job::Shutdown)),
-            };
-            match msg {
-                Some(Job::Req(r)) => {
+            if lanes.values().any(|l| l.busy()) {
+                // live generations: never block on the channel — drain
+                // whatever raced in so it joins at THIS step boundary
+                while let Ok(job) = rx.try_recv() {
+                    incoming.push(job);
+                }
+            } else {
+                // block until work/shutdown arrives or, if batches are
+                // queued, exactly until the next actionable instant — no
+                // fixed polling tick. For the fixed batcher that is its
+                // earliest deadline; for the scheduler it is whatever
+                // `pick` last said to wake at (tightened deadline or hold
+                // bound).
+                let wake = sched_wake.or_else(|| batcher.next_deadline());
+                let msg = match wake {
+                    Some(d) => match rx.recv_timeout(d.saturating_duration_since(cfg.clock.now())) {
+                        Ok(job) => Some(job),
+                        Err(RecvTimeoutError::Timeout) => None,
+                        Err(RecvTimeoutError::Disconnected) => Some(Job::Shutdown),
+                    },
+                    None => Some(rx.recv().unwrap_or(Job::Shutdown)),
+                };
+                if let Some(job) = msg {
+                    incoming.push(job);
+                }
+            }
+        } else {
+            // drain mode: soak up racing submits without blocking
+            while let Ok(job) = rx.try_recv() {
+                incoming.push(job);
+            }
+        }
+        for job in incoming {
+            match job {
+                Job::Req(r) => {
                     let task = r.task.clone();
                     if let Some(s) = sched.as_mut() {
                         s.observe_arrival(&task, cfg.clock.now());
                     }
                     batcher.push(&task, r);
                 }
-                Some(Job::Shutdown) => {
-                    open = false;
-                    drain_deadline = cfg.clock.now() + DRAIN_GRACE;
-                    // drain mode bypasses the scheduler's Close arm, so
-                    // release any hold now — a dead shard must not keep
-                    // inflating the pool-wide holding count
-                    if let Some(prev) = holding_task.take() {
-                        if let Some(h) = cfg.refresh.as_ref() {
-                            h.set_holding(&prev, false);
+                Job::Gen(g) => accept_gen(&cfg, &graph, vocab, &metrics, &inflight, &mut lanes, g),
+                Job::Shutdown => {
+                    if open {
+                        open = false;
+                        drain_deadline = cfg.clock.now() + DRAIN_GRACE;
+                        // drain mode bypasses the scheduler's Close arm, so
+                        // release any hold now — a dead shard must not keep
+                        // inflating the pool-wide holding count
+                        if let Some(prev) = holding_task.take() {
+                            if let Some(h) = cfg.refresh.as_ref() {
+                                h.set_holding(&prev, false);
+                            }
                         }
                     }
-                }
-                None => {}
-            }
-        } else {
-            // drain mode: soak up racing submits without blocking
-            while let Ok(job) = rx.try_recv() {
-                if let Job::Req(r) = job {
-                    let task = r.task.clone();
-                    batcher.push(&task, r);
                 }
             }
         }
@@ -274,16 +365,305 @@ fn worker_loop(
             }
         }
 
-        if !open && batcher.pending() == 0 {
-            // an admission bumps `inflight` BEFORE its send reaches the
-            // channel; wait those racers out so no ticket is lost.
-            if inflight.load(Ordering::Acquire) == 0 || cfg.clock.now() >= drain_deadline {
-                break;
+        // decode lanes: ONE step per pass, so channel arrivals drained
+        // above join at every step boundary and a due hot-swap gets a
+        // fresh registry snapshot between any two steps of a sequence
+        let mut decode_hold_wake: Option<Instant> = None;
+        let mut decode_progress = false;
+        for (task, lane) in lanes.iter_mut() {
+            let outcome = step_lane(
+                &cfg,
+                &graph,
+                &meta,
+                &registry,
+                &metrics,
+                &inflight,
+                sched.as_ref(),
+                &mut batch_idx,
+                &mut last_adapter,
+                &mut gap_recorded,
+                task,
+                lane,
+            );
+            match outcome {
+                LaneOutcome::Progressed => decode_progress = true,
+                LaneOutcome::Held { until } => {
+                    decode_hold_wake = Some(decode_hold_wake.map_or(until, |w| w.min(until)));
+                }
+                LaneOutcome::Idle => {}
             }
-            cfg.clock.sleep(Duration::from_micros(100));
+        }
+        lanes.retain(|_, l| l.busy());
+        if decode_progress && !open {
+            // progress resets the grace window, same as batch serving
+            drain_deadline = cfg.clock.now() + DRAIN_GRACE;
+        }
+        if !decode_progress {
+            if let Some(until) = decode_hold_wake {
+                // every busy lane is deferring for a pending hot-swap:
+                // nap briefly so the refresh worker can land it, never
+                // past the earliest hold bound
+                let nap = until
+                    .saturating_duration_since(cfg.clock.now())
+                    .min(Duration::from_micros(100));
+                if nap > Duration::ZERO {
+                    cfg.clock.sleep(nap);
+                }
+            }
+        }
+
+        if !open {
+            if lanes.values().any(|l| l.busy()) && cfg.clock.now() >= drain_deadline {
+                // the grace window is spent: shed every in-flight
+                // generation mid-stream, explicitly and non-retryably
+                for (task, lane) in lanes.iter_mut() {
+                    let t = task.clone();
+                    shed_lane(lane, &inflight, &metrics, |streamed| ServeError::Shed {
+                        task: t.clone(),
+                        streamed,
+                    });
+                }
+                lanes.retain(|_, l| l.busy());
+            }
+            if batcher.pending() == 0 && !lanes.values().any(|l| l.busy()) {
+                // an admission bumps `inflight` BEFORE its send reaches
+                // the channel; wait those racers out so no ticket is
+                // lost.
+                if inflight.load(Ordering::Acquire) == 0 || cfg.clock.now() >= drain_deadline {
+                    break;
+                }
+                cfg.clock.sleep(Duration::from_micros(100));
+            }
         }
     }
     Ok(())
+}
+
+/// Accept one generation onto its task's decode lane (creating the lane
+/// on first use), or bounce it with a typed error when this worker's
+/// graph cannot generate.
+fn accept_gen(
+    cfg: &WorkerConfig,
+    graph: &crate::runtime::LoadedGraph,
+    vocab: Option<usize>,
+    metrics: &Metrics,
+    inflight: &AtomicUsize,
+    lanes: &mut BTreeMap<String, DecodeLane>,
+    mut g: GenRequest,
+) {
+    let (b, s) = fwd_batch_shape(graph);
+    let Some(vocab) = vocab else {
+        metrics.errors.fetch_add(1, Ordering::Relaxed);
+        let _ = g.resp.send(Err(ServeError::Batch {
+            task: g.task.clone(),
+            detail: format!(
+                "graph '{}' is not generative (want [batch, seq, vocab] logits)",
+                cfg.graph_key
+            ),
+        }));
+        inflight.fetch_sub(1, Ordering::AcqRel);
+        return;
+    };
+    // `Client::generate` validates prompts up front; guard the raw
+    // channel path too, since a zero-token generation has no token to
+    // carry its terminal event
+    if g.prompt.is_empty() {
+        metrics.errors.fetch_add(1, Ordering::Relaxed);
+        let _ = g.resp.send(Err(ServeError::BadPrompt { got: 0, max: s - 1 }));
+        inflight.fetch_sub(1, Ordering::AcqRel);
+        return;
+    }
+    g.cfg.max_new = g.cfg.max_new.max(1);
+    let at = cfg.clock.now();
+    lanes
+        .entry(g.task.clone())
+        .or_insert_with(|| DecodeLane::new(b, s, vocab))
+        .queue
+        .push_back((g, at));
+}
+
+/// Advance one task's decode lane by at most ONE step: join queued
+/// generations at the boundary, consult the refresh lifecycle, take a
+/// FRESH adapter snapshot, run one fixed-shape forward, stream the
+/// emitted tokens, and retire finished rows immediately.
+#[allow(clippy::too_many_arguments)]
+fn step_lane(
+    cfg: &WorkerConfig,
+    graph: &crate::runtime::LoadedGraph,
+    meta: &ParamStore,
+    registry: &SharedRegistry,
+    metrics: &Metrics,
+    inflight: &AtomicUsize,
+    sched: Option<&BatchScheduler>,
+    batch_idx: &mut u64,
+    last_adapter: &mut Option<(String, u64)>,
+    gap_recorded: &mut BTreeMap<String, u64>,
+    task: &str,
+    lane: &mut DecodeLane,
+) -> LaneOutcome {
+    // rows live BEFORE this boundary's joins: only those can observe a
+    // version change mid-sequence
+    let carried = lane.engine.live() > 0;
+    // join at the step boundary: rows freed by retirement go straight
+    // to waiting joiners
+    while lane.engine.has_room() {
+        let Some((g, at)) = lane.queue.pop_front() else {
+            break;
+        };
+        let row = lane
+            .engine
+            .admit(g.id, &g.prompt, g.cfg.max_new, &g.cfg.stop_tokens)
+            .expect("has_room guaranteed a free row");
+        lane.seqs[row] = Some(GenSeq {
+            resp: g.resp,
+            enqueued_at: at,
+            last_token_at: None,
+        });
+    }
+    let fill = lane.engine.live();
+    if fill == 0 {
+        return LaneOutcome::Idle;
+    }
+
+    let now = cfg.clock.now();
+    // a FRESH snapshot at every boundary is the whole mechanism: a swap
+    // that landed since the previous step is picked up immediately, no
+    // drain — in-flight sequences finish on the new version
+    let Some((adapter, version)) = registry.snapshot(task) else {
+        shed_lane(lane, inflight, metrics, |_| ServeError::AdapterMissing {
+            task: task.to_string(),
+        });
+        return LaneOutcome::Progressed;
+    };
+    if let Some(h) = cfg.refresh.as_ref() {
+        match step_gate(h.view(task), version, now, DECODE_HOLD, &mut lane.held_since) {
+            StepGate::Hold { until } => return LaneOutcome::Held { until },
+            StepGate::Go => {}
+        }
+        // past the hold budget the step runs anyway (liveness over
+        // freshness) — but it is counted as knowingly stale
+        if h.is_stale(task, version, now) {
+            metrics
+                .stale_batch_requests
+                .fetch_add(fill as u64, Ordering::Relaxed);
+        }
+    }
+    if carried && lane.last_version.map_or(false, |v| v != version) {
+        // the drain-free mid-sequence hot-swap: sequences that started
+        // on the previous version finish on this one
+        metrics.mid_seq_swaps.fetch_add(1, Ordering::Relaxed);
+    }
+    lane.last_version = Some(version);
+    note_adapter_load(cfg, metrics, last_adapter, gap_recorded, task, version);
+
+    // per-step re-balance: the modeled cost of THIS step-batch size is
+    // a lookup into the scheduler's committed sweep, not a re-sweep
+    let modeled = sched.map(|s| s.modeled_batch(fill));
+    *batch_idx += 1;
+    let seed = batch_idx
+        .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+        .wrapping_add(cfg.worker as u64);
+    let logits = match lm_logits(graph, meta, &adapter, lane.engine.inputs(), cfg.hw, seed) {
+        Ok(l) => l,
+        Err(e) => {
+            let detail = format!("{e:#}");
+            shed_lane(lane, inflight, metrics, |_| ServeError::Batch {
+                task: task.to_string(),
+                detail: detail.clone(),
+            });
+            return LaneOutcome::Progressed;
+        }
+    };
+    let emits = lane.engine.apply_logits(&logits);
+    let after = cfg.clock.now();
+    metrics.record_decode_step(fill, lane.engine.capacity(), emits.len(), modeled);
+    for e in emits {
+        let seq = lane.seqs[e.row].as_mut().expect("live row has a client");
+        if e.index == 0 {
+            metrics.record_ttft(after.saturating_duration_since(seq.enqueued_at));
+        } else if let Some(prev) = seq.last_token_at {
+            metrics.record_intertoken(after.saturating_duration_since(prev));
+        }
+        seq.last_token_at = Some(after);
+        // a dropped ticket just discards events; the row still decodes
+        // to completion so the slot accounting stays exact
+        let _ = seq.resp.send(Ok(TokenEvent {
+            id: e.id,
+            task: task.to_string(),
+            worker: cfg.worker,
+            token: e.token,
+            index: e.index,
+            done: e.finished,
+            adapter_version: version,
+            step_fill: fill,
+        }));
+        if e.finished {
+            lane.seqs[e.row] = None;
+            lane.engine.release(e.row);
+            inflight.fetch_sub(1, Ordering::AcqRel);
+            metrics.generations.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    LaneOutcome::Progressed
+}
+
+/// Terminate every generation on a lane — live rows and queued joiners
+/// alike — with the error `err` builds from the streamed-token count.
+fn shed_lane(
+    lane: &mut DecodeLane,
+    inflight: &AtomicUsize,
+    metrics: &Metrics,
+    mut err: impl FnMut(usize) -> ServeError,
+) {
+    for row in 0..lane.engine.capacity() {
+        if let Some(seq) = lane.seqs[row].take() {
+            let streamed = lane.engine.emitted(row);
+            let _ = seq.resp.send(Err(err(streamed)));
+            lane.engine.release(row);
+            inflight.fetch_sub(1, Ordering::AcqRel);
+            metrics.errors.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    for (g, _) in lane.queue.drain(..) {
+        let _ = g.resp.send(Err(err(0)));
+        inflight.fetch_sub(1, Ordering::AcqRel);
+        metrics.errors.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Adapter-swap and swap-gap accounting shared by the batch and decode
+/// paths: a task switch OR a new version of the same task (redeploy /
+/// drift refresh) costs a DPU adapter swap, and the FIRST serve at a
+/// refresh-installed version records the registry-swap → first-serve
+/// gap exactly once per (task, version).
+fn note_adapter_load(
+    cfg: &WorkerConfig,
+    metrics: &Metrics,
+    last_adapter: &mut Option<(String, u64)>,
+    gap_recorded: &mut BTreeMap<String, u64>,
+    task: &str,
+    version: u64,
+) {
+    let loaded = (task.to_string(), version);
+    if last_adapter.as_ref() == Some(&loaded) {
+        return;
+    }
+    metrics.adapter_swaps.fetch_add(1, Ordering::Relaxed);
+    if let Some(h) = cfg.refresh.as_ref() {
+        if let Some((at, v)) = h.last_swap(task) {
+            if v == version && gap_recorded.get(task) != Some(&version) {
+                let gap = cfg.clock.now().saturating_duration_since(at);
+                metrics
+                    .swap_gap_ns
+                    .fetch_max(gap.as_nanos() as u64, Ordering::Relaxed);
+                // feed the coordinator's adaptive window: the EWMA of
+                // these gaps replaces the fixed coupling window
+                h.observe_swap_gap(task, gap);
+                gap_recorded.insert(task.to_string(), version);
+            }
+        }
+    }
+    *last_adapter = Some(loaded);
 }
 
 /// Execute one task-pure batch and deliver a terminal result to every
@@ -321,31 +701,7 @@ fn serve_batch(
                 .fetch_add(n as u64, Ordering::Relaxed);
         }
     }
-    // a task switch OR a new version of the same task (redeploy /
-    // drift refresh) costs a DPU adapter swap
-    let loaded = (task.clone(), version);
-    if last_adapter.as_ref() != Some(&loaded) {
-        metrics.adapter_swaps.fetch_add(1, Ordering::Relaxed);
-        // FIRST batch at a refresh-installed version: record how long
-        // the refreshed adapter sat in the registry before serving.
-        // Once per (task, version) — a later reload of the same version
-        // after serving other tasks is an adapter swap, not a swap gap.
-        if let Some(h) = cfg.refresh.as_ref() {
-            if let Some((at, v)) = h.last_swap(&task) {
-                if v == version && gap_recorded.get(&task) != Some(&version) {
-                    let gap = cfg.clock.now().saturating_duration_since(at);
-                    metrics
-                        .swap_gap_ns
-                        .fetch_max(gap.as_nanos() as u64, Ordering::Relaxed);
-                    // feed the coordinator's adaptive window: the EWMA
-                    // of these gaps replaces the fixed coupling window
-                    h.observe_swap_gap(&task, gap);
-                    gap_recorded.insert(task.clone(), version);
-                }
-            }
-        }
-        *last_adapter = Some(loaded);
-    }
+    note_adapter_load(cfg, metrics, last_adapter, gap_recorded, &task, version);
     if cfg.fail_every > 0 && batch_idx % cfg.fail_every == 0 {
         metrics.errors.fetch_add(n as u64, Ordering::Relaxed);
         respond_all(reqs, inflight, |_| {
@@ -431,20 +787,28 @@ fn fail_all(
         detail,
     };
     eprintln!("[serve] worker {} init failed: {err}", cfg.worker);
-    let mut reject = |r: WorkRequest| {
+    let reject = |r: WorkRequest| {
         let _ = r.resp.send(Err(err.clone()));
+        inflight.fetch_sub(1, Ordering::AcqRel);
+        metrics.errors.fetch_add(1, Ordering::Relaxed);
+    };
+    let reject_gen = |g: GenRequest| {
+        let _ = g.resp.send(Err(err.clone()));
         inflight.fetch_sub(1, Ordering::AcqRel);
         metrics.errors.fetch_add(1, Ordering::Relaxed);
     };
     loop {
         match rx.recv() {
             Ok(Job::Req(r)) => reject(r),
+            Ok(Job::Gen(g)) => reject_gen(g),
             Ok(Job::Shutdown) | Err(_) => break,
         }
     }
     while let Ok(job) = rx.try_recv() {
-        if let Job::Req(r) = job {
-            reject(r);
+        match job {
+            Job::Req(r) => reject(r),
+            Job::Gen(g) => reject_gen(g),
+            Job::Shutdown => {}
         }
     }
     Err(err)

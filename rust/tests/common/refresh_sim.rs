@@ -22,7 +22,7 @@
 // a different subset of the harness surface.
 #![allow(dead_code)]
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -32,9 +32,9 @@ use ahwa_lora::pcm::PcmModel;
 use ahwa_lora::serve::batcher::Batcher;
 use ahwa_lora::serve::registry::SharedRegistry;
 use ahwa_lora::serve::{
-    BatchScheduler, Clock, CoordConfig, DecayModel, Decision, FnRefitter, Metrics, Refit,
-    Refitter, RefreshConfig, RefreshCoordinator, RefreshCoupling, RefreshHandle, RefreshRunner,
-    SchedConfig, VirtualClock,
+    step_gate, BatchScheduler, Clock, CoordConfig, DecayModel, Decision, FnRefitter, Metrics,
+    Refit, Refitter, RefreshConfig, RefreshCoordinator, RefreshCoupling, RefreshHandle,
+    RefreshRunner, SchedConfig, StepEngine, StepGate, VirtualClock,
 };
 
 pub const MAX_BATCH: usize = 8;
@@ -738,5 +738,426 @@ pub fn simulate(coupled: bool, n_requests: usize) -> SimRun {
         swap_version,
         drains: pool.drains,
         holds: pool.holds,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Continuous-batching decode sim (decode_conformance + serving_decode)
+// ---------------------------------------------------------------------------
+
+/// Stop token the decode sim's synthetic model emits to end a sequence
+/// (kept clear of PAD so the engine's PAD hygiene stays observable).
+pub const DECODE_STOP: i32 = 1;
+
+/// Filler content token for synthetic prompts and generated bodies.
+pub const DECODE_CONTENT: i32 = 3;
+
+/// Vocabulary of the synthetic decode model.
+pub const DECODE_VOCAB: usize = 8;
+
+/// One request of a decode arrival trace: offset from the drive start,
+/// prompt, and the number of content tokens before the stop token.
+#[derive(Clone, Debug)]
+pub struct DecodeArrival {
+    pub at: Duration,
+    pub prompt: Vec<i32>,
+    pub gen_len: usize,
+}
+
+/// Deterministic arrival trace: request `i` arrives at `i * gap` with a
+/// short varied prompt and a generation length cycling over `gen_lens`
+/// — the SAME trace feeds the continuous and the static run, so the
+/// occupancy comparison is apples-to-apples.
+pub fn decode_trace(n: usize, gap: Duration, gen_lens: &[usize]) -> Vec<DecodeArrival> {
+    assert!(!gen_lens.is_empty());
+    (0..n)
+        .map(|i| DecodeArrival {
+            at: gap * i as u32,
+            prompt: vec![DECODE_CONTENT; 2 + i % 3],
+            gen_len: gen_lens[i % gen_lens.len()],
+        })
+        .collect()
+}
+
+/// One decode step as the sim ran it.
+pub struct DecodeStepRecord {
+    /// Step-boundary instant (before the step's modeled latency).
+    pub at: Instant,
+    /// Live sequences stepped.
+    pub fill: usize,
+    /// Adapter version the step's fresh snapshot pinned.
+    pub version: u64,
+}
+
+/// One completed generation with its timing and version span.
+pub struct SimGeneration {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    /// Adapter versions of the first and last step; unequal exactly when
+    /// the sequence crossed a drain-free mid-sequence hot-swap.
+    pub first_version: u64,
+    pub last_version: u64,
+    pub enqueued_at: Instant,
+    pub first_token_at: Instant,
+    pub done_at: Instant,
+}
+
+struct DecodeSeq {
+    id: u64,
+    prompt_len: usize,
+    gen_len: usize,
+    enqueued_at: Instant,
+    tokens: Vec<i32>,
+    first_version: Option<u64>,
+    first_token_at: Option<Instant>,
+    last_token_at: Option<Instant>,
+}
+
+/// Verdict of one [`SimDecode::step`] call.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecodeOutcome {
+    /// One step-batch ran (modeled latency consumed on the clock).
+    Progressed,
+    /// The step-boundary refresh gate deferred the step.
+    Held(Instant),
+    /// Nothing queued, nothing in flight.
+    Idle,
+}
+
+/// One worker's continuous-batching decode lane, mirrored on the
+/// virtual clock: the SAME join / fresh-snapshot / [`step_gate`] /
+/// step / retire discipline as `serve::pool`'s decode pass, with the
+/// forward replaced by a synthetic model (every live row continues with
+/// [`DECODE_CONTENT`] until its target length, then [`DECODE_STOP`])
+/// and the step latency by the scheduler's committed-sweep lookup —
+/// the same [`BatchScheduler::modeled_batch`] table the real worker's
+/// re-balance consults.
+///
+/// `continuous: false` degrades the lane to the static baseline: join
+/// only when the engine is empty, i.e. classic run-the-batch-to-
+/// completion decoding over the identical arrival trace.
+pub struct SimDecode {
+    pub clock: Arc<VirtualClock>,
+    pub metrics: Arc<Metrics>,
+    pub engine: StepEngine,
+    sched: BatchScheduler,
+    continuous: bool,
+    /// Hold budget the step gate falls back to when the coordinator has
+    /// not adapted one.
+    pub fallback_hold: Duration,
+    queue: VecDeque<(u64, Vec<i32>, usize, Instant)>,
+    rows: Vec<Option<DecodeSeq>>,
+    next_id: u64,
+    held_since: Option<Instant>,
+    last_version: Option<u64>,
+    pub steps: Vec<DecodeStepRecord>,
+    pub finished: Vec<SimGeneration>,
+    /// Steps that ran against a stale-past-trigger snapshot (hold
+    /// budget exhausted) — the count the conformance suite pins at 0.
+    pub stale_steps: usize,
+    /// Version changes observed under carried-over live sequences.
+    pub mid_seq_swaps: u64,
+    /// Per-token inter-token gaps (ns), all sequences pooled.
+    pub itl_ns: Vec<f64>,
+    /// Per-sequence time-to-first-token (ns).
+    pub ttft_ns: Vec<f64>,
+}
+
+impl SimDecode {
+    pub fn new(
+        clock: Arc<VirtualClock>,
+        metrics: Arc<Metrics>,
+        b: usize,
+        s: usize,
+        continuous: bool,
+    ) -> SimDecode {
+        SimDecode {
+            clock,
+            metrics,
+            engine: StepEngine::new(b, s, DECODE_VOCAB),
+            sched: BatchScheduler::new(
+                SchedConfig::for_layer(128, 128, 8).seq(320),
+                b,
+                Duration::from_millis(5),
+            ),
+            continuous,
+            fallback_hold: Duration::from_millis(5),
+            queue: VecDeque::new(),
+            rows: (0..b).map(|_| None).collect(),
+            next_id: 0,
+            held_since: None,
+            last_version: None,
+            steps: Vec::new(),
+            finished: Vec::new(),
+            stale_steps: 0,
+            mid_seq_swaps: 0,
+            itl_ns: Vec::new(),
+            ttft_ns: Vec::new(),
+        }
+    }
+
+    /// Modeled latency of one step at `fill` — a lookup into the
+    /// scheduler's committed sweep, exactly the worker's re-balance.
+    pub fn step_time(&self, fill: usize) -> Duration {
+        self.sched.modeled_batch(fill)
+    }
+
+    pub fn busy(&self) -> bool {
+        self.engine.occupied() > 0 || !self.queue.is_empty()
+    }
+
+    pub fn enqueue(&mut self, prompt: Vec<i32>, gen_len: usize) -> u64 {
+        // the real path bounces empty prompts at admission
+        // (Client::generate / accept_gen); the sim requires the same
+        assert!(!prompt.is_empty(), "sim prompts must be non-empty");
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push_back((id, prompt, gen_len, self.clock.now()));
+        id
+    }
+
+    /// One step boundary: admit joiners (continuous) or a whole batch
+    /// (static, engine empty only), take a FRESH registry snapshot,
+    /// consult the refresh gate, then run one step whose modeled
+    /// latency advances the shared clock.
+    pub fn step(
+        &mut self,
+        registry: &SharedRegistry,
+        handle: Option<&RefreshHandle>,
+        task: &str,
+    ) -> DecodeOutcome {
+        let carried = self.engine.live() > 0;
+        if self.continuous || self.engine.occupied() == 0 {
+            while self.engine.has_room() {
+                let Some((id, prompt, gen_len, at)) = self.queue.pop_front() else {
+                    break;
+                };
+                // budget = content tokens + the stop token
+                let row = self
+                    .engine
+                    .admit(id, &prompt, gen_len + 1, &[DECODE_STOP])
+                    .expect("has_room guaranteed a free row");
+                self.rows[row] = Some(DecodeSeq {
+                    id,
+                    prompt_len: prompt.len().min(self.engine.seq() - 1),
+                    gen_len,
+                    enqueued_at: at,
+                    tokens: Vec::new(),
+                    first_version: None,
+                    first_token_at: None,
+                    last_token_at: None,
+                });
+            }
+        }
+        let fill = self.engine.live();
+        if fill == 0 {
+            return DecodeOutcome::Idle;
+        }
+        let now = self.clock.now();
+        let (_, version) = registry.snapshot(task).expect("deployed task");
+        if let Some(h) = handle {
+            match step_gate(
+                h.view(task),
+                version,
+                now,
+                self.fallback_hold,
+                &mut self.held_since,
+            ) {
+                StepGate::Hold { until } => return DecodeOutcome::Held(until),
+                StepGate::Go => {}
+            }
+            if h.is_stale(task, version, now) {
+                self.stale_steps += 1;
+            }
+        }
+        if carried && self.last_version.map_or(false, |v| v != version) {
+            self.mid_seq_swaps += 1;
+            self.metrics.mid_seq_swaps.fetch_add(1, Ordering::Relaxed);
+        }
+        self.last_version = Some(version);
+
+        // synthetic model: each live row's argmax is the next content
+        // token, or the stop token once its target length is reached
+        let (b, s, vocab) = (
+            self.engine.capacity(),
+            self.engine.seq(),
+            self.engine.vocab(),
+        );
+        let mut logits = vec![0f32; b * s * vocab];
+        for (row, seq) in self.rows.iter().enumerate() {
+            let Some(seq) = seq.as_ref() else { continue };
+            let len = seq.prompt_len + seq.tokens.len();
+            let tok = if seq.tokens.len() >= seq.gen_len {
+                DECODE_STOP
+            } else {
+                DECODE_CONTENT
+            };
+            logits[(row * s + len - 1) * vocab + tok as usize] = 1.0;
+        }
+
+        let modeled = self.step_time(fill);
+        self.clock.advance(modeled);
+        let after = self.clock.now();
+        let emits = self.engine.apply_logits(&logits);
+        self.metrics
+            .record_decode_step(fill, b, emits.len(), Some(modeled));
+        self.steps.push(DecodeStepRecord { at: now, fill, version });
+        for e in emits {
+            let seq = self.rows[e.row].as_mut().expect("stepped row is tracked");
+            if e.index == 0 {
+                let d = after.saturating_duration_since(seq.enqueued_at);
+                self.ttft_ns.push(d.as_nanos() as f64);
+                self.metrics.record_ttft(d);
+                seq.first_token_at = Some(after);
+                seq.first_version = Some(version);
+            } else if let Some(prev) = seq.last_token_at {
+                let d = after.saturating_duration_since(prev);
+                self.itl_ns.push(d.as_nanos() as f64);
+                self.metrics.record_intertoken(d);
+            }
+            seq.last_token_at = Some(after);
+            seq.tokens.push(e.token);
+            if e.finished {
+                let seq = self.rows[e.row].take().expect("finished row is tracked");
+                self.engine.release(e.row);
+                self.metrics.generations.fetch_add(1, Ordering::Relaxed);
+                self.finished.push(SimGeneration {
+                    id: seq.id,
+                    tokens: seq.tokens,
+                    first_version: seq.first_version.unwrap_or(version),
+                    last_version: version,
+                    enqueued_at: seq.enqueued_at,
+                    first_token_at: seq.first_token_at.unwrap_or(after),
+                    done_at: after,
+                });
+            }
+        }
+        DecodeOutcome::Progressed
+    }
+
+    /// Mean step-batch occupancy: live rows per step over capacity.
+    pub fn occupancy(&self) -> f64 {
+        if self.steps.is_empty() {
+            return 0.0;
+        }
+        self.steps.iter().map(|st| st.fill as f64).sum::<f64>()
+            / (self.steps.len() * self.engine.capacity()) as f64
+    }
+
+    /// Modeled makespan: drive start → last retirement.
+    pub fn makespan(&self, start: Instant) -> Duration {
+        self.finished
+            .iter()
+            .map(|g| g.done_at.saturating_duration_since(start))
+            .max()
+            .unwrap_or_default()
+    }
+}
+
+/// Registry + analytic refresh runner spin-up for the decode scenarios
+/// (the decode analogue of [`SimPoolBuilder::build`]'s refresh side):
+/// every task deploys `adapter(1.0)` at version 1, the modeled drift
+/// trigger is compressed to `trigger_in` of pool clock, and each refit
+/// bumps the tag and consumes `refit_advance` of virtual time.
+pub struct SimRefresh {
+    pub clock: Arc<VirtualClock>,
+    pub registry: SharedRegistry,
+    pub runner: RefreshRunner,
+    pub handle: RefreshHandle,
+    pub metrics: Arc<Metrics>,
+}
+
+pub fn decode_refresh(
+    tasks: &[&str],
+    trigger_in: Duration,
+    refit_advance: Duration,
+    coord: Option<CoordConfig>,
+) -> SimRefresh {
+    let clock = Arc::new(VirtualClock::new());
+    let registry = SharedRegistry::new();
+    for t in tasks {
+        registry.deploy(t, adapter(1.0));
+    }
+    let metrics = Arc::new(Metrics::default());
+    let refitter: Arc<dyn Refitter> = {
+        let (clock, advance) = (clock.clone(), refit_advance);
+        Arc::new(FnRefitter(
+            move |_: &str,
+                  current: &ParamStore,
+                  _: &ParamStore,
+                  budget: usize|
+                  -> anyhow::Result<Refit> {
+                clock.advance(advance);
+                Ok(Refit {
+                    params: adapter(current.tensors[0].data[0] + 1.0),
+                    steps: budget,
+                })
+            },
+        ))
+    };
+    let tolerance = 0.05;
+    let age = DecayModel::analytic(PcmModel::default()).trigger_age(tolerance);
+    let time_scale = age / trigger_in.as_secs_f64().max(1e-12);
+    let mut runner = analytic_runner(&registry, refitter, tolerance, time_scale, metrics.clone())
+        .with_clock(clock.clone() as Arc<dyn Clock>);
+    runner.track_deployed(clock.now());
+    let handle = runner.policy().handle();
+    if let Some(cfg) = coord {
+        let c = Arc::new(RefreshCoordinator::new(cfg, handle.clone(), metrics.clone()));
+        runner.set_coordinator(c);
+    }
+    SimRefresh {
+        clock,
+        registry,
+        runner,
+        handle,
+        metrics,
+    }
+}
+
+/// Drive one lane over an arrival trace to completion: arrivals join
+/// the queue as their offsets pass, the refresh runner (when attached)
+/// ticks at every step boundary — the pool's check cadence, so a due
+/// hot-swap lands BETWEEN steps — and held lanes nap in small bounded
+/// advances exactly like the worker loop. Idle gaps fast-forward to
+/// the next arrival.
+pub fn drive_decode(
+    sim: &mut SimDecode,
+    registry: &SharedRegistry,
+    handle: Option<&RefreshHandle>,
+    mut runner: Option<&mut RefreshRunner>,
+    task: &str,
+    arrivals: &[DecodeArrival],
+) {
+    let t0 = sim.clock.now();
+    let mut next = 0;
+    let mut guard = 0usize;
+    loop {
+        while next < arrivals.len() && t0 + arrivals[next].at <= sim.clock.now() {
+            sim.enqueue(arrivals[next].prompt.clone(), arrivals[next].gen_len);
+            next += 1;
+        }
+        if let Some(r) = runner.as_deref_mut() {
+            r.tick(sim.clock.now());
+        }
+        match sim.step(registry, handle, task) {
+            DecodeOutcome::Progressed => {}
+            DecodeOutcome::Held(until) => {
+                let nap = until
+                    .saturating_duration_since(sim.clock.now())
+                    .min(sim.step_time(1))
+                    .max(Duration::from_nanos(1));
+                sim.clock.advance(nap);
+            }
+            DecodeOutcome::Idle => {
+                let Some(a) = arrivals.get(next) else { break };
+                let nap = (t0 + a.at)
+                    .saturating_duration_since(sim.clock.now())
+                    .max(Duration::from_nanos(1));
+                sim.clock.advance(nap);
+            }
+        }
+        guard += 1;
+        assert!(guard < 4_000_000, "decode trace must terminate");
     }
 }

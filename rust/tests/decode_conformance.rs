@@ -1,0 +1,454 @@
+//! Conformance suite for the continuous-batching decode subsystem
+//! (`serve::decode` + the pool worker's decode pass), on the shared
+//! `SimPool`/`SimDecode` harness — every scenario runs on the
+//! `VirtualClock`, zero real sleeps:
+//!
+//! * continuous join strictly beats static run-to-completion batching
+//!   on modeled step-batch occupancy over the SAME arrival trace (and
+//!   produces bit-identical completions);
+//! * a due refresh hot-swap lands BETWEEN steps of in-flight sequences
+//!   — a sequence starts on version v and finishes on v+1, with zero
+//!   steps served against a stale-past-trigger snapshot and the
+//!   crossing counted in `mid_seq_swaps`;
+//! * the step gate defers the boundary (bounded hold) when the swap has
+//!   not landed yet, and releases the moment it does;
+//! * retiring a row at its stop token never blocks joiners: the freed
+//!   slot is refilled at the very next step boundary;
+//! * decode composes with `serve::coord` staggering — two lanes sharing
+//!   one drift tolerance cross their (staggered) swaps mid-sequence
+//!   with zero stale steps;
+//! * release lane only: an 8-worker long-sequence decode storm over the
+//!   same invariants.
+
+#[path = "common/refresh_sim.rs"]
+mod refresh_sim;
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use ahwa_lora::serve::registry::SharedRegistry;
+use ahwa_lora::serve::{CoordConfig, Metrics, VirtualClock};
+use refresh_sim::{
+    adapter, decode_refresh, decode_trace, drive_decode, DecodeArrival, DecodeOutcome, SimDecode,
+    DECODE_CONTENT, DECODE_STOP,
+};
+
+/// Skip in debug builds: the storm belongs in the release CI lane (same
+/// gate as `tests/refresh_stress.rs`).
+fn release_only() -> bool {
+    if cfg!(debug_assertions) {
+        eprintln!("skipping stress test: debug build (the --release CI lane runs it)");
+        return false;
+    }
+    true
+}
+
+/// Registry + clock + metrics for refresh-free decode scenarios.
+fn decode_only(task: &str) -> (Arc<VirtualClock>, SharedRegistry, Arc<Metrics>) {
+    let clock = Arc::new(VirtualClock::new());
+    let registry = SharedRegistry::new();
+    registry.deploy(task, adapter(1.0));
+    (clock, registry, Arc::new(Metrics::default()))
+}
+
+/// The expected completion of a `gen_len` request under the synthetic
+/// model: `gen_len` content tokens, then the stop token.
+fn expected_tokens(gen_len: usize) -> Vec<i32> {
+    let mut t = vec![DECODE_CONTENT; gen_len];
+    t.push(DECODE_STOP);
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Continuous vs static occupancy
+// ---------------------------------------------------------------------------
+
+#[test]
+fn continuous_join_beats_static_batching_on_modeled_occupancy() {
+    // one burst of 24 requests with mixed generation lengths: the
+    // static baseline must run each 4-row batch to its LONGEST member
+    // while retired rows sit idle; continuous refills them immediately
+    let lens = [2usize, 9, 4, 7, 3, 8, 5, 6];
+    let trace = decode_trace(24, Duration::ZERO, &lens);
+
+    let run = |continuous: bool| {
+        let (clock, registry, metrics) = decode_only("task");
+        let start = clock.now();
+        let mut sim = SimDecode::new(clock, metrics, 4, 32, continuous);
+        drive_decode(&mut sim, &registry, None, None, "task", &trace);
+        (sim, start)
+    };
+    let (cont, cont_start) = run(true);
+    let (stat, stat_start) = run(false);
+
+    // identical work completed, token for token
+    for sim in [&cont, &stat] {
+        assert_eq!(sim.finished.len(), trace.len());
+        for g in &sim.finished {
+            assert_eq!(
+                g.tokens,
+                expected_tokens(trace[g.id as usize].gen_len),
+                "generation {} must decode its full budget then stop",
+                g.id
+            );
+        }
+    }
+
+    // the tentpole claim: strictly higher modeled step-batch occupancy
+    // on the same arrival trace
+    assert!(
+        cont.occupancy() > stat.occupancy(),
+        "continuous occupancy {:.3} must beat static {:.3}",
+        cont.occupancy(),
+        stat.occupancy()
+    );
+    // same tokens in fewer, fuller steps → a strictly shorter makespan
+    assert!(
+        cont.steps.len() < stat.steps.len(),
+        "continuous steps {} vs static {}",
+        cont.steps.len(),
+        stat.steps.len()
+    );
+    assert!(
+        cont.makespan(cont_start) < stat.makespan(stat_start),
+        "continuous makespan {:?} must undercut static {:?}",
+        cont.makespan(cont_start),
+        stat.makespan(stat_start)
+    );
+    // the occupancy samples flowed through the same Metrics surface the
+    // real pool worker reports on
+    let snap = cont.metrics.snapshot();
+    assert_eq!(snap.decode_steps as usize, cont.steps.len());
+    assert_eq!(snap.generations as usize, trace.len());
+    assert!(snap.step_occupancy_mean > stat.metrics.snapshot().step_occupancy_mean);
+}
+
+// ---------------------------------------------------------------------------
+// Step-boundary refresh safety
+// ---------------------------------------------------------------------------
+
+#[test]
+fn hot_swap_lands_between_steps_with_zero_stale_service() {
+    // two long sequences in flight when the modeled drift trigger
+    // passes: the swap must land at a step boundary, no drain. The
+    // geometry derives from the modeled step time, so the trigger lands
+    // mid-generation on any hardware model.
+    let probe_clock = Arc::new(VirtualClock::new());
+    let probe = SimDecode::new(probe_clock, Arc::new(Metrics::default()), 2, 64, true);
+    let st = probe.step_time(2);
+    let mut sr = decode_refresh(&["task"], st * 30, st * 3, None);
+
+    let mut sim = SimDecode::new(sr.clock.clone(), sr.metrics.clone(), 2, 64, true);
+    let trigger_at = sr.handle.trigger_at("task").expect("modeled trigger");
+    let trace = vec![
+        DecodeArrival { at: Duration::ZERO, prompt: vec![DECODE_CONTENT; 2], gen_len: 40 },
+        DecodeArrival { at: Duration::ZERO, prompt: vec![DECODE_CONTENT; 3], gen_len: 40 },
+    ];
+    drive_decode(
+        &mut sim,
+        &sr.registry,
+        Some(&sr.handle),
+        Some(&mut sr.runner),
+        "task",
+        &trace,
+    );
+
+    // both sequences ran to completion across the swap — drain-free
+    assert_eq!(sim.finished.len(), 2);
+    for g in &sim.finished {
+        assert_eq!(g.tokens, expected_tokens(40), "no sequence was restarted");
+        assert_eq!(
+            (g.first_version, g.last_version),
+            (1, 2),
+            "generation {} must start on v1 and finish on v2",
+            g.id
+        );
+    }
+    // the crossing is counted exactly once, on the shared Metrics
+    assert_eq!(sim.mid_seq_swaps, 1);
+    assert_eq!(sr.metrics.mid_seq_swaps.load(Ordering::Relaxed), 1);
+    // zero steps served against a stale-past-trigger snapshot
+    assert_eq!(sim.stale_steps, 0);
+    assert_eq!(
+        sim.steps
+            .iter()
+            .filter(|s| s.at >= trigger_at && s.version < 2)
+            .count(),
+        0,
+        "no post-trigger step may run at the pre-swap version"
+    );
+    // the swap really did land mid-stream: steps at both versions
+    assert!(sim.steps.iter().any(|s| s.version == 1));
+    assert!(sim.steps.iter().any(|s| s.version == 2));
+}
+
+#[test]
+fn step_gate_holds_the_boundary_until_the_swap_lands() {
+    let probe_clock = Arc::new(VirtualClock::new());
+    let probe = SimDecode::new(probe_clock, Arc::new(Metrics::default()), 2, 64, true);
+    let st = probe.step_time(2);
+    let mut sr = decode_refresh(&["task"], st * 10, st, None);
+    let trigger_at = sr.handle.trigger_at("task").expect("modeled trigger");
+
+    let mut sim = SimDecode::new(sr.clock.clone(), sr.metrics.clone(), 2, 64, true);
+    sim.enqueue(vec![DECODE_CONTENT; 2], 40);
+    sim.enqueue(vec![DECODE_CONTENT; 2], 40);
+
+    // step WITHOUT ticking the runner until the trigger passes: the
+    // gate must defer the boundary instead of serving stale
+    let mut held = None;
+    for _ in 0..64 {
+        match sim.step(&sr.registry, Some(&sr.handle), "task") {
+            DecodeOutcome::Progressed => {}
+            DecodeOutcome::Held(until) => {
+                held = Some(until);
+                break;
+            }
+            DecodeOutcome::Idle => panic!("sequences still in flight"),
+        }
+    }
+    let until = held.expect("the gate must hold once the trigger passes");
+    let now = sr.clock.now();
+    assert!(now >= trigger_at, "the hold begins only past the trigger");
+    assert!(until > now, "the hold is a bounded, future re-check");
+    assert_eq!(sim.stale_steps, 0, "the held step never executed");
+
+    // the runner finally ticks: the swap lands BETWEEN steps and the
+    // very next boundary serves the new version
+    let events = sr.runner.tick(sr.clock.now());
+    assert!(!events.is_empty(), "the due refresh must fire");
+    assert_eq!(sim.step(&sr.registry, Some(&sr.handle), "task"), DecodeOutcome::Progressed);
+    assert_eq!(sim.steps.last().unwrap().version, 2);
+    assert_eq!(sim.mid_seq_swaps, 1);
+
+    // run out the tail: still zero stale service end to end
+    drive_decode(
+        &mut sim,
+        &sr.registry,
+        Some(&sr.handle),
+        Some(&mut sr.runner),
+        "task",
+        &[],
+    );
+    assert_eq!(sim.finished.len(), 2);
+    assert_eq!(sim.stale_steps, 0);
+}
+
+// ---------------------------------------------------------------------------
+// Retirement never blocks joiners
+// ---------------------------------------------------------------------------
+
+#[test]
+fn retire_at_stop_token_never_blocks_joiners() {
+    let (clock, registry, metrics) = decode_only("task");
+    let mut sim = SimDecode::new(clock, metrics, 2, 32, true);
+    let st = sim.step_time(2);
+    // both rows busy when the third request arrives; the short row
+    // retires first and must hand its slot over at that very boundary
+    let trace = vec![
+        DecodeArrival { at: Duration::ZERO, prompt: vec![DECODE_CONTENT; 2], gen_len: 2 },
+        DecodeArrival { at: Duration::ZERO, prompt: vec![DECODE_CONTENT; 2], gen_len: 8 },
+        DecodeArrival { at: st / 2, prompt: vec![DECODE_CONTENT; 2], gen_len: 4 },
+    ];
+    drive_decode(&mut sim, &registry, None, None, "task", &trace);
+
+    assert_eq!(sim.finished.len(), 3);
+    let by_id = |id: u64| sim.finished.iter().find(|g| g.id == id).unwrap();
+    let (short, long, joiner) = (by_id(0), by_id(1), by_id(2));
+    assert_eq!(short.tokens, expected_tokens(2));
+    assert_eq!(joiner.tokens, expected_tokens(4));
+
+    // the joiner's first token came from the boundary immediately after
+    // the retirement — one step later, not after the batch drained
+    assert!(
+        joiner.first_token_at <= short.done_at + st,
+        "joiner waited past the freed slot: first token at {:?}, slot freed {:?}",
+        joiner.first_token_at,
+        short.done_at
+    );
+    assert!(
+        joiner.done_at < long.done_at,
+        "the joiner must finish while the long row still decodes"
+    );
+    // while the joiner decoded, the step-batch stayed full: retirement
+    // created no idle-row gap
+    assert!(
+        sim.steps
+            .iter()
+            .filter(|s| s.at >= short.done_at && s.at < joiner.done_at)
+            .all(|s| s.fill == 2),
+        "no under-filled step between the retirement and the joiner's finish"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Composition with pool-level refresh coordination
+// ---------------------------------------------------------------------------
+
+#[test]
+fn decode_composes_with_coordinated_staggering() {
+    let probe_clock = Arc::new(VirtualClock::new());
+    let probe = SimDecode::new(probe_clock, Arc::new(Metrics::default()), 2, 96, true);
+    let st = probe.step_time(2);
+    // two tasks share one tolerance → identical modeled triggers: the
+    // correlated-stall geometry the coordinator exists to fix
+    let coord = CoordConfig::default()
+        .max_concurrent_holds(1)
+        .slack(st * 10)
+        .fallback_window(st * 5)
+        .fallback_hold(st * 20);
+    let mut sr = decode_refresh(&["a", "b"], st * 40, st * 3, Some(coord));
+
+    let mut lane_a = SimDecode::new(sr.clock.clone(), sr.metrics.clone(), 2, 96, true);
+    let mut lane_b = SimDecode::new(sr.clock.clone(), sr.metrics.clone(), 2, 96, true);
+    for lane in [&mut lane_a, &mut lane_b] {
+        lane.enqueue(vec![DECODE_CONTENT; 2], 30);
+        lane.enqueue(vec![DECODE_CONTENT; 3], 30);
+    }
+
+    // interleave the two lanes on the one shared clock, runner ticking
+    // at every boundary — the same discipline as drive_decode
+    let mut swap_at: Vec<(String, Instant)> = Vec::new();
+    let mut guard = 0;
+    loop {
+        for ev in sr.runner.tick(sr.clock.now()) {
+            swap_at.push((ev.task.clone(), ev.at));
+        }
+        let ra = lane_a.step(&sr.registry, Some(&sr.handle), "a");
+        let rb = lane_b.step(&sr.registry, Some(&sr.handle), "b");
+        if ra == DecodeOutcome::Idle && rb == DecodeOutcome::Idle {
+            break;
+        }
+        if ra != DecodeOutcome::Progressed && rb != DecodeOutcome::Progressed {
+            sr.clock.advance(st.max(Duration::from_nanos(1)));
+        }
+        guard += 1;
+        assert!(guard < 100_000, "lanes must drain");
+    }
+
+    // both swaps landed, at staggered (distinct) instants
+    let at = |task: &str| {
+        swap_at
+            .iter()
+            .find(|(t, _)| t == task)
+            .map(|(_, a)| *a)
+            .expect("swap landed")
+    };
+    assert_ne!(at("a"), at("b"), "the coordinator must de-correlate the swaps");
+    assert!(
+        sr.metrics.stagger_shift_ns.load(Ordering::Relaxed) > 0,
+        "a stagger re-phase must have been applied"
+    );
+
+    // and decode stayed refresh-safe on BOTH lanes through it
+    for (name, lane) in [("a", &lane_a), ("b", &lane_b)] {
+        assert_eq!(lane.finished.len(), 2, "lane {name}");
+        assert_eq!(lane.stale_steps, 0, "lane {name} served stale steps");
+        assert!(lane.mid_seq_swaps >= 1, "lane {name} never crossed its swap");
+        for g in &lane.finished {
+            assert_eq!(g.tokens, expected_tokens(30));
+            assert_eq!(g.first_version, 1, "lane {name}");
+            assert!(
+                g.last_version > g.first_version,
+                "lane {name}: generation {} must finish on a newer version",
+                g.id
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Release-lane storm
+// ---------------------------------------------------------------------------
+
+/// 8 decode lanes × long sequences × one shared drift tolerance: the
+/// decode invariants (zero stale steps, drain-free crossings, full
+/// completion) must hold at pool scale. Virtual clock throughout — the
+/// gate exists because the step count, not wall time, is what makes
+/// this slow in debug builds.
+#[test]
+fn eight_worker_long_sequence_decode_stress() {
+    if !release_only() {
+        return;
+    }
+    const WORKERS: usize = 8;
+    let tasks = ["t0", "t1", "t2", "t3", "t4", "t5", "t6", "t7"];
+
+    let probe_clock = Arc::new(VirtualClock::new());
+    let probe = SimDecode::new(probe_clock, Arc::new(Metrics::default()), 4, 128, true);
+    let st = probe.step_time(4);
+    let mut sr = decode_refresh(&tasks, st * 800, st * 5, None);
+
+    let mut lanes: Vec<SimDecode> = (0..WORKERS)
+        .map(|_| SimDecode::new(sr.clock.clone(), sr.metrics.clone(), 4, 128, true))
+        .collect();
+    let traces: Vec<Vec<DecodeArrival>> = (0..WORKERS)
+        .map(|w| decode_trace(16, st * (2 + w as u32 % 3), &[24, 56, 32, 48, 40]))
+        .collect();
+
+    let t0 = sr.clock.now();
+    let mut next = vec![0usize; WORKERS];
+    let mut guard = 0usize;
+    loop {
+        sr.runner.tick(sr.clock.now());
+        let mut any_progress = false;
+        let mut all_idle = true;
+        for w in 0..WORKERS {
+            while next[w] < traces[w].len() && t0 + traces[w][next[w]].at <= sr.clock.now() {
+                let a = &traces[w][next[w]];
+                lanes[w].enqueue(a.prompt.clone(), a.gen_len);
+                next[w] += 1;
+            }
+            match lanes[w].step(&sr.registry, Some(&sr.handle), tasks[w]) {
+                DecodeOutcome::Progressed => {
+                    any_progress = true;
+                    all_idle = false;
+                }
+                DecodeOutcome::Held(_) => all_idle = false,
+                DecodeOutcome::Idle => {}
+            }
+        }
+        let arrivals_left = next.iter().zip(&traces).any(|(&n, t)| n < t.len());
+        if all_idle && !arrivals_left && lanes.iter().all(|l| !l.busy()) {
+            break;
+        }
+        if !any_progress {
+            sr.clock.advance(st.max(Duration::from_nanos(1)));
+        }
+        guard += 1;
+        assert!(guard < 2_000_000, "the storm must drain");
+    }
+
+    let mut crossings = 0;
+    for (w, lane) in lanes.iter().enumerate() {
+        assert_eq!(lane.finished.len(), 16, "lane {w} completed every request");
+        assert_eq!(lane.stale_steps, 0, "lane {w} served stale steps");
+        assert!(
+            lane.occupancy() > 0.6,
+            "lane {w} occupancy collapsed: {:.3}",
+            lane.occupancy()
+        );
+        for g in &lane.finished {
+            assert_eq!(
+                g.tokens,
+                expected_tokens(traces[w][g.id as usize].gen_len),
+                "lane {w} generation {}",
+                g.id
+            );
+        }
+        crossings += lane.mid_seq_swaps;
+    }
+    assert!(
+        crossings >= WORKERS as u64,
+        "every lane must cross its hot-swap mid-sequence (saw {crossings})"
+    );
+    assert_eq!(
+        sr.metrics.generations.load(Ordering::Relaxed),
+        (WORKERS * 16) as u64
+    );
+    assert_eq!(
+        sr.metrics.mid_seq_swaps.load(Ordering::Relaxed),
+        crossings
+    );
+}
