@@ -63,14 +63,16 @@ a failure here is in a HERMETIC suite (no engine, no wall clock):
   - scheduler/refresh e2e         cargo test -q --test refresh_sched_e2e
   - pool-coordination conformance cargo test -q --test coord_conformance
   - decode conformance            cargo test -q --test decode_conformance
+  - adapter-cache conformance     cargo test -q --test cache_conformance
   - scheduler property tests      cargo test -q --test sched_properties
   - PCM property tests            cargo test -q --test pcm_properties
   - pipeline golden values        cargo test -q --test pipeline_golden
 Property-test failures print a replay seed; re-run the one suite above
 that failed rather than the whole stage. Concurrency stress tests (and
-the multi-worker coord stress variant in coord_conformance.rs, and the
-8-worker long-sequence decode storm in decode_conformance.rs) only
-run in the test-release stage and cannot be the cause here.
+the multi-worker coord stress variant in coord_conformance.rs, the
+8-worker long-sequence decode storm in decode_conformance.rs, and the
+adapter-cache eviction storm in cache_conformance.rs) only run in the
+test-release stage and cannot be the cause here.
 EOF
         exit 1
     fi
@@ -83,10 +85,14 @@ EOF
 # refresh/scheduler concurrency stress tests (tests/refresh_stress.rs),
 # the multi-worker coordination stress variant
 # (coord_conformance::coord_stress_many_tasks_many_workers — 8 workers
-# x 16 tasks on the virtual clock), and the long-sequence decode storm
+# x 16 tasks on the virtual clock), the long-sequence decode storm
 # (decode_conformance::eight_worker_long_sequence_decode_stress — 8
-# continuous-batching lanes crossing a shared hot-swap) gate themselves
-# on `cfg!(debug_assertions)` and therefore run ONLY in this stage,
+# continuous-batching lanes crossing a shared hot-swap), and the
+# adapter-cache eviction storm
+# (cache_conformance::eviction_storm_holds_every_invariant — 128 tasks
+# over 8 resident slots, 64k zipf requests, residency and accounting
+# invariants asserted after every event) gate themselves on
+# `cfg!(debug_assertions)` and therefore run ONLY in this stage,
 # keeping the debug lane fast.
 stage_test_release() {
     group test-release

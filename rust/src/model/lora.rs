@@ -31,6 +31,11 @@ pub struct AdapterInfo {
 #[derive(Default)]
 pub struct AdapterRegistry {
     sets: BTreeMap<String, (AdapterInfo, Arc<ParamStore>)>,
+    /// Version counters of evicted tasks. An eviction (adapter paged off
+    /// the DPUs by the capacity tier) is NOT a forget: the task keeps its
+    /// place in the version sequence so a later deploy stays monotone and
+    /// a restore of the same bytes comes back at the same version.
+    retired: BTreeMap<String, u64>,
 }
 
 impl AdapterRegistry {
@@ -43,7 +48,17 @@ impl AdapterRegistry {
     /// weights" operation — O(adapter), never O(base model).
     pub fn deploy(&mut self, task: &str, params: ParamStore) -> u64 {
         let n_params = params.numel();
-        let version = self.sets.get(task).map(|(i, _)| i.version + 1).unwrap_or(1);
+        // Continue the version sequence across evictions: a redeploy of
+        // an evicted task must not reuse version numbers that in-flight
+        // snapshots or the refresh tracker may still hold.
+        let prior = self
+            .sets
+            .get(task)
+            .map(|(i, _)| i.version)
+            .or_else(|| self.retired.get(task).copied())
+            .unwrap_or(0);
+        let version = prior + 1;
+        self.retired.remove(task);
         self.sets.insert(
             task.to_string(),
             (
@@ -63,17 +78,67 @@ impl AdapterRegistry {
     /// deployed yet"). Returns the new version, or `None` when a
     /// concurrent deploy won the race — the caller's refit was computed
     /// against a stale adapter and must not clobber the newer one.
+    /// An evicted task always loses the CAS: the refit was computed for
+    /// an adapter that is no longer resident, and landing it would
+    /// resurrect the task behind the capacity tier's back. Re-load goes
+    /// through [`AdapterRegistry::restore`] instead.
     pub fn deploy_if_version(
         &mut self,
         task: &str,
         params: ParamStore,
         expected: u64,
     ) -> Option<u64> {
+        if !self.sets.contains_key(task) && self.retired.contains_key(task) {
+            return None;
+        }
         let live = self.sets.get(task).map(|(i, _)| i.version).unwrap_or(0);
         if live != expected {
             return None;
         }
         Some(self.deploy(task, params))
+    }
+
+    /// Page an adapter out (capacity eviction). The entry is removed —
+    /// readers miss from now on — but the version counter is retained so
+    /// the task's version sequence survives the residency gap. Returns
+    /// the evicted adapter + its version (the bytes the cache keeps in
+    /// host memory for a later [`AdapterRegistry::restore`]).
+    pub fn evict(&mut self, task: &str) -> Option<(Arc<ParamStore>, u64)> {
+        let (info, params) = self.sets.remove(task)?;
+        self.retired.insert(task.to_string(), info.version);
+        Some((params, info.version))
+    }
+
+    /// Re-install a previously evicted adapter at its ORIGINAL version:
+    /// same bytes, same version — a reload is not a new deployment, and
+    /// keeping the version stable is what lets the drift-refresh tracker
+    /// recognise the adapter and preserve its drift anchor. Refuses
+    /// (`false`) when the task is live again (a concurrent deploy won)
+    /// or when `version` is not the version that was evicted (the cached
+    /// bytes are stale).
+    pub fn restore(&mut self, task: &str, params: Arc<ParamStore>, version: u64) -> bool {
+        if self.sets.contains_key(task) || self.retired.get(task) != Some(&version) {
+            return false;
+        }
+        self.retired.remove(task);
+        let n_params = params.numel();
+        self.sets.insert(
+            task.to_string(),
+            (
+                AdapterInfo {
+                    task: task.to_string(),
+                    n_params,
+                    version,
+                },
+                params,
+            ),
+        );
+        true
+    }
+
+    /// Task was deployed at some point and is currently paged out.
+    pub fn is_evicted(&self, task: &str) -> bool {
+        !self.sets.contains_key(task) && self.retired.contains_key(task)
     }
 
     pub fn get(&self, task: &str) -> Result<&Arc<ParamStore>> {
@@ -169,6 +234,62 @@ mod tests {
         assert_eq!(v2, 2);
         assert_eq!(a.numel(), 16 * 8);
         assert!(r.snapshot("missing").is_none());
+    }
+
+    #[test]
+    fn evict_retains_version_sequence() {
+        let mut r = AdapterRegistry::new();
+        r.deploy("sst2", adapter(16));
+        r.deploy("sst2", adapter(16)); // v2
+        let (params, v) = r.evict("sst2").unwrap();
+        assert_eq!(v, 2);
+        assert_eq!(params.numel(), 16 * 8);
+        assert!(!r.contains("sst2"));
+        assert!(r.is_evicted("sst2"));
+        assert!(r.snapshot("sst2").is_none());
+        // a fresh deploy continues the sequence, never restarts at 1
+        assert_eq!(r.deploy("sst2", adapter(16)), 3);
+        assert!(!r.is_evicted("sst2"));
+        assert!(r.evict("missing").is_none());
+    }
+
+    #[test]
+    fn restore_reinstalls_at_original_version() {
+        let mut r = AdapterRegistry::new();
+        r.deploy("sst2", adapter(16));
+        let (params, v) = r.evict("sst2").unwrap();
+        assert!(r.restore("sst2", params.clone(), v));
+        assert_eq!(r.info("sst2").unwrap().version, 1, "reload is not a redeploy");
+        // double-restore refuses (already live)
+        assert!(!r.restore("sst2", params, v));
+    }
+
+    #[test]
+    fn restore_loses_to_concurrent_deploy_and_stale_bytes() {
+        let mut r = AdapterRegistry::new();
+        r.deploy("sst2", adapter(16));
+        let (params, v) = r.evict("sst2").unwrap();
+        // concurrent manual deploy wins the race; restore must refuse
+        assert_eq!(r.deploy("sst2", adapter(16)), 2);
+        assert!(!r.restore("sst2", params.clone(), v));
+        assert_eq!(r.info("sst2").unwrap().version, 2);
+        // stale-version bytes refuse even when the task is evicted
+        let (p2, v2) = r.evict("sst2").unwrap();
+        assert!(!r.restore("sst2", params, v));
+        assert!(r.restore("sst2", p2, v2));
+    }
+
+    #[test]
+    fn cas_never_resurrects_an_evicted_task() {
+        let mut r = AdapterRegistry::new();
+        r.deploy("sst2", adapter(16));
+        r.evict("sst2").unwrap();
+        // the refresh worker's CAS must lose for every expectation:
+        // 0 ("not deployed") would bypass the capacity tier, and the
+        // evicted version would land a refit nobody can serve.
+        assert_eq!(r.deploy_if_version("sst2", adapter(16), 0), None);
+        assert_eq!(r.deploy_if_version("sst2", adapter(16), 1), None);
+        assert!(r.is_evicted("sst2"));
     }
 
     #[test]

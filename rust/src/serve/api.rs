@@ -37,6 +37,7 @@ use std::time::{Duration, Instant};
 use crate::model::params::ParamStore;
 use crate::util::stats;
 
+use super::cache::{AdapterCache, CacheConfig, CacheLookup};
 use super::coord::{CoordConfig, RefreshCoordinator};
 use super::decode::{GenConfig, Generation, TokenEvent};
 use super::pool::{self, GenRequest, Job, WorkRequest, WorkerHandle};
@@ -60,6 +61,12 @@ pub enum ServeError {
     BadPrompt { got: usize, max: usize },
     /// The target worker's in-flight budget is exhausted — try again.
     Overloaded { worker: usize, depth: usize },
+    /// The task is known but its adapter is paged out of the bounded
+    /// capacity tier ([`super::cache`]). `loading: true` means a page-in
+    /// is already on the upload channel (retry after roughly the cache's
+    /// load latency); `false` means the load queue itself was full and
+    /// the request was shed before a load could even be queued.
+    AdapterCold { task: String, loading: bool },
     /// An in-flight generation was shed MID-STREAM (shutdown drain
     /// expired, adapter vanished, or the decode step failed) after
     /// `streamed` tokens already reached the client. Deliberately
@@ -84,15 +91,22 @@ pub enum ServeError {
 impl ServeError {
     /// `true` for transient backpressure a client should retry.
     ///
-    /// Exactly [`ServeError::Overloaded`] — a PRE-ADMISSION bounce: no
-    /// work started, retrying is free. Every decode-path error is
-    /// deliberately excluded: [`ServeError::Shed`] (and `Batch`/`Lost`
-    /// arriving on a [`GenTicket`]) means tokens may already have been
-    /// streamed, and a retry would silently replay the generation from
-    /// token 0. Streaming re-issue is the caller's decision, never the
-    /// retry helpers'.
+    /// Exactly [`ServeError::Overloaded`] and [`ServeError::AdapterCold`]
+    /// — both PRE-ADMISSION bounces: no work started, retrying is free.
+    /// `Overloaded` means a worker's queue is full; `AdapterCold` means
+    /// the adapter is being paged back into the capacity tier (when
+    /// `loading`, a retry after the cache's load latency will usually
+    /// hit). Every decode-path error is deliberately excluded:
+    /// [`ServeError::Shed`] (and `Batch`/`Lost` arriving on a
+    /// [`GenTicket`]) means tokens may already have been streamed, and a
+    /// retry would silently replay the generation from token 0.
+    /// Streaming re-issue is the caller's decision, never the retry
+    /// helpers'.
     pub fn is_retryable(&self) -> bool {
-        matches!(self, ServeError::Overloaded { .. })
+        matches!(
+            self,
+            ServeError::Overloaded { .. } | ServeError::AdapterCold { .. }
+        )
     }
 }
 
@@ -110,6 +124,13 @@ impl fmt::Display for ServeError {
             }
             ServeError::Overloaded { worker, depth } => {
                 write!(f, "worker {worker} at queue depth {depth}, try again")
+            }
+            ServeError::AdapterCold { task, loading } => {
+                if *loading {
+                    write!(f, "adapter for task '{task}' is paged out, load in flight")
+                } else {
+                    write!(f, "adapter for task '{task}' is paged out, load queue full")
+                }
             }
             ServeError::Shed { task, streamed } => {
                 write!(
@@ -341,6 +362,20 @@ pub struct Metrics {
     /// v+1 without draining. The step-boundary gate
     /// ([`super::decode::step_gate`]) is what makes these safe.
     pub mid_seq_swaps: AtomicU64,
+    /// Requests whose adapter was resident in the capacity tier
+    /// ([`super::cache`]) at lookup time.
+    pub cache_hits: AtomicU64,
+    /// Requests that found their adapter paged out (whether the load
+    /// was then queued, already in flight, or shed).
+    pub cache_misses: AtomicU64,
+    /// Adapters paged out of the capacity tier (LRU evictions).
+    pub cache_evictions: AtomicU64,
+    /// Prefetched adapters that a demand request subsequently hit —
+    /// the predictive tier's success count.
+    pub cache_prefetch_hits: AtomicU64,
+    /// Cold requests shed because the adapter load queue was full
+    /// (typed [`ServeError::AdapterCold`] with `loading: false`).
+    pub cache_shed: AtomicU64,
     latencies_us: Mutex<Vec<f64>>,
     batch_sizes: Mutex<Vec<f64>>,
     /// Scheduler-modeled batch latency samples (µs), recorded alongside
@@ -348,11 +383,24 @@ pub struct Metrics {
     modeled_us: Mutex<Vec<f64>>,
     /// Time-to-first-token samples (ns), one per generation.
     ttft_ns: Mutex<Vec<f64>>,
+    /// Ring cursor for `ttft_ns`. Each ring owns its cursor: indexing a
+    /// ring by an unrelated counter (the old scheme used
+    /// `decode_tokens`) makes concurrent generations — which read the
+    /// same counter value — stomp one slot while the rest of the ring
+    /// goes stale.
+    ttft_cursor: AtomicU64,
     /// Inter-token gap samples (ns) within generations.
     intertoken_ns: Mutex<Vec<f64>>,
+    /// Ring cursor for `intertoken_ns` (see `ttft_cursor`).
+    intertoken_cursor: AtomicU64,
     /// Per-step occupancy samples: live sequences / step-batch
     /// capacity, in 0..=1.
     step_fill: Mutex<Vec<f64>>,
+    /// Cold-start wait samples (ns): first demand miss → adapter
+    /// resident again ([`super::cache`]'s queue-to-page-in latency).
+    cold_start_ns: Mutex<Vec<f64>>,
+    /// Ring cursor for `cold_start_ns`.
+    cold_start_cursor: AtomicU64,
 }
 
 impl Metrics {
@@ -366,7 +414,10 @@ impl Metrics {
     pub(crate) fn record_modeled(&self, n: usize, latency: Duration, modeled: Option<Duration>) {
         self.served.fetch_add(n as u64, Ordering::Relaxed);
         let b = self.batches.fetch_add(1, Ordering::Relaxed) as usize;
-        push_sample(&mut self.latencies_us.lock().unwrap(), b, latency.as_micros() as f64);
+        // ns-resolution µs, like the modeled sample below: as_micros()
+        // truncates, which flattens every sub-µs virtual-clock latency
+        // (and the fractional part of every real one) to 0
+        push_sample(&mut self.latencies_us.lock().unwrap(), b, latency.as_nanos() as f64 / 1e3);
         push_sample(&mut self.batch_sizes.lock().unwrap(), b, n as f64);
         if let Some(m) = modeled {
             push_sample(&mut self.modeled_us.lock().unwrap(), b, m.as_nanos() as f64 / 1e3);
@@ -389,16 +440,28 @@ impl Metrics {
     }
 
     /// Time-to-first-token for one generation (worker enqueue → first
-    /// token out).
+    /// token out). The ring advances by its own cursor: concurrent
+    /// generations each claim a distinct slot (fetch_add), where
+    /// indexing by `decode_tokens` made simultaneous recorders stomp
+    /// the slot the shared counter happened to point at.
     pub fn record_ttft(&self, d: Duration) {
-        let i = self.decode_tokens.load(Ordering::Relaxed) as usize;
+        let i = self.ttft_cursor.fetch_add(1, Ordering::Relaxed) as usize;
         push_sample(&mut self.ttft_ns.lock().unwrap(), i, d.as_nanos() as f64);
     }
 
-    /// Gap between consecutive tokens of one generation.
+    /// Gap between consecutive tokens of one generation (own ring
+    /// cursor — see [`Metrics::record_ttft`]).
     pub fn record_intertoken(&self, d: Duration) {
-        let i = self.decode_tokens.load(Ordering::Relaxed) as usize;
+        let i = self.intertoken_cursor.fetch_add(1, Ordering::Relaxed) as usize;
         push_sample(&mut self.intertoken_ns.lock().unwrap(), i, d.as_nanos() as f64);
+    }
+
+    /// Cold-start wait for one paged-out adapter: first demand miss →
+    /// resident again ([`super::cache`] records this when the load
+    /// lands).
+    pub fn record_cold_start(&self, d: Duration) {
+        let i = self.cold_start_cursor.fetch_add(1, Ordering::Relaxed) as usize;
+        push_sample(&mut self.cold_start_ns.lock().unwrap(), i, d.as_nanos() as f64);
     }
 
     pub fn snapshot(&self, label: &str) -> MetricsSnapshot {
@@ -408,6 +471,7 @@ impl Metrics {
         let ttft = self.ttft_ns.lock().unwrap();
         let itl = self.intertoken_ns.lock().unwrap();
         let fill = self.step_fill.lock().unwrap();
+        let cold = self.cold_start_ns.lock().unwrap();
         MetricsSnapshot {
             label: label.to_string(),
             served: self.served.load(Ordering::Relaxed),
@@ -427,6 +491,12 @@ impl Metrics {
             decode_steps: self.decode_steps.load(Ordering::Relaxed),
             decode_tokens: self.decode_tokens.load(Ordering::Relaxed),
             mid_seq_swaps: self.mid_seq_swaps.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            cache_evictions: self.cache_evictions.load(Ordering::Relaxed),
+            cache_prefetch_hits: self.cache_prefetch_hits.load(Ordering::Relaxed),
+            cache_shed: self.cache_shed.load(Ordering::Relaxed),
+            cold_start_p99_ms: stats::percentile(&cold, 99.0) / 1e6,
             batch_mean: stats::mean(&bs),
             lat_p50_ms: stats::percentile(&lat, 50.0) / 1e3,
             lat_p95_ms: stats::percentile(&lat, 95.0) / 1e3,
@@ -484,6 +554,20 @@ pub struct MetricsSnapshot {
     pub decode_tokens: u64,
     /// Hot-swaps that landed mid-sequence, between decode steps.
     pub mid_seq_swaps: u64,
+    /// Capacity-tier lookups that found the adapter resident (0 when
+    /// no cache is configured).
+    pub cache_hits: u64,
+    /// Lookups that found the adapter paged out.
+    pub cache_misses: u64,
+    /// LRU evictions performed by the capacity tier.
+    pub cache_evictions: u64,
+    /// Prefetched adapters later hit by demand traffic.
+    pub cache_prefetch_hits: u64,
+    /// Cold requests shed with a full load queue.
+    pub cache_shed: u64,
+    /// p99 cold-start wait, ms: first demand miss → resident again (0
+    /// when nothing ever went cold).
+    pub cold_start_p99_ms: f64,
     pub batch_mean: f64,
     pub lat_p50_ms: f64,
     pub lat_p95_ms: f64,
@@ -498,6 +582,19 @@ pub struct MetricsSnapshot {
     /// Mean step-batch occupancy (live sequences / capacity, 0..=1) —
     /// the number continuous join exists to keep high.
     pub step_occupancy_mean: f64,
+}
+
+impl MetricsSnapshot {
+    /// Capacity-tier hit fraction in 0..=1, or 0.0 when no lookups
+    /// happened (guarded: never divides by zero).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
 }
 
 impl fmt::Display for MetricsSnapshot {
@@ -559,6 +656,17 @@ impl fmt::Display for MetricsSnapshot {
                 write!(f, " mid_seq_swaps={}", self.mid_seq_swaps)?;
             }
         }
+        if self.cache_hits + self.cache_misses > 0 {
+            write!(
+                f,
+                " cache_hit_rate={:.0}% evictions={} prefetch_hits={} cold_shed={} cold_p99={:.2}ms",
+                self.cache_hit_rate() * 100.0,
+                self.cache_evictions,
+                self.cache_prefetch_hits,
+                self.cache_shed,
+                self.cold_start_p99_ms,
+            )?;
+        }
         Ok(())
     }
 }
@@ -576,6 +684,7 @@ pub fn aggregate<'a>(workers: impl IntoIterator<Item = &'a Metrics>) -> MetricsS
     let mut ttft = Vec::new();
     let mut itl = Vec::new();
     let mut fill = Vec::new();
+    let mut cold = Vec::new();
     for m in workers {
         out.served += m.served.load(Ordering::Relaxed);
         out.batches += m.batches.load(Ordering::Relaxed);
@@ -591,6 +700,11 @@ pub fn aggregate<'a>(workers: impl IntoIterator<Item = &'a Metrics>) -> MetricsS
         out.decode_steps += m.decode_steps.load(Ordering::Relaxed);
         out.decode_tokens += m.decode_tokens.load(Ordering::Relaxed);
         out.mid_seq_swaps += m.mid_seq_swaps.load(Ordering::Relaxed);
+        out.cache_hits += m.cache_hits.load(Ordering::Relaxed);
+        out.cache_misses += m.cache_misses.load(Ordering::Relaxed);
+        out.cache_evictions += m.cache_evictions.load(Ordering::Relaxed);
+        out.cache_prefetch_hits += m.cache_prefetch_hits.load(Ordering::Relaxed);
+        out.cache_shed += m.cache_shed.load(Ordering::Relaxed);
         // the gap is a worst-case, not a flow: max, not sum — and so are
         // the hold peak (each worker records the pool-wide count it saw)
         // and the stagger shift
@@ -607,6 +721,7 @@ pub fn aggregate<'a>(workers: impl IntoIterator<Item = &'a Metrics>) -> MetricsS
         ttft.extend_from_slice(&m.ttft_ns.lock().unwrap());
         itl.extend_from_slice(&m.intertoken_ns.lock().unwrap());
         fill.extend_from_slice(&m.step_fill.lock().unwrap());
+        cold.extend_from_slice(&m.cold_start_ns.lock().unwrap());
     }
     out.batch_mean = stats::mean(&bs);
     out.lat_p50_ms = stats::percentile(&lat, 50.0) / 1e3;
@@ -615,6 +730,7 @@ pub fn aggregate<'a>(workers: impl IntoIterator<Item = &'a Metrics>) -> MetricsS
     out.ttft_p50_ms = stats::percentile(&ttft, 50.0) / 1e6;
     out.intertoken_p50_ms = stats::percentile(&itl, 50.0) / 1e6;
     out.step_occupancy_mean = stats::mean(&fill);
+    out.cold_start_p99_ms = stats::percentile(&cold, 99.0) / 1e6;
     out
 }
 
@@ -638,6 +754,7 @@ pub struct ServerBuilder {
     refresh: Option<RefreshConfig>,
     coord: Option<CoordConfig>,
     no_coord: bool,
+    cache: Option<CacheConfig>,
     clock: Arc<dyn Clock>,
 }
 
@@ -656,6 +773,7 @@ impl fmt::Debug for ServerBuilder {
             .field("refresh", &self.refresh)
             .field("coord", &self.coord)
             .field("no_coord", &self.no_coord)
+            .field("cache", &self.cache)
             .finish_non_exhaustive()
     }
 }
@@ -677,6 +795,7 @@ impl ServerBuilder {
             refresh: None,
             coord: None,
             no_coord: false,
+            cache: None,
             clock: Arc::new(RealClock),
         }
     }
@@ -778,6 +897,21 @@ impl ServerBuilder {
         self
     }
 
+    /// Bounded adapter residency ([`super::cache`]): at most
+    /// `capacity` adapters stay resident (registry entry = resident on
+    /// the DPUs); the LRU unpinned one is paged out to a host-side
+    /// backing store when a cold task's load lands, and cold requests
+    /// get the typed, retryable [`ServeError::AdapterCold`] while the
+    /// page-in is in flight (or the load queue is full). With a
+    /// scheduler configured, workers also prefetch adapters whose
+    /// predicted next arrival (per-task EWMAs) is imminent. The
+    /// snapshot reports hit rate, evictions, prefetch hits, and
+    /// cold-start p99.
+    pub fn adapter_cache(mut self, cfg: CacheConfig) -> Self {
+        self.cache = Some(cfg);
+        self
+    }
+
     /// Time source for enqueue stamps, deadline math, and latency
     /// metrics. Production keeps [`RealClock`]. Note the workers'
     /// *channel waits* are wall-clock either way — deterministic-clock
@@ -868,6 +1002,25 @@ impl ServerBuilder {
         };
         let lifecycle = refresh_state.as_ref().map(|(r, _, _)| r.policy().handle());
 
+        // bounded adapter residency: built AFTER refresh (evictions
+        // must be able to suppress refits via the lifecycle handle) and
+        // BEFORE the workers (each worker polls loads + prefetches).
+        // Creation adopts everything already deployed, evicting down to
+        // capacity immediately.
+        let cache = match self.cache {
+            Some(ccfg) => {
+                ccfg.validate().map_err(|detail| ServeError::Init { detail })?;
+                let metrics = Arc::new(Metrics::default());
+                let cache =
+                    AdapterCache::new(ccfg, registry.clone(), self.clock.clone(), metrics);
+                if let Some(h) = &lifecycle {
+                    cache.set_refresh(h.clone());
+                }
+                Some(cache)
+            }
+            None => None,
+        };
+
         let accepting = Arc::new(AtomicBool::new(true));
         let mut shards = Vec::with_capacity(self.workers);
         let mut worker_metrics = Vec::with_capacity(self.workers);
@@ -883,6 +1036,7 @@ impl ServerBuilder {
                 fail_every: self.fail_every,
                 sched,
                 refresh: lifecycle.clone(),
+                cache: cache.clone(),
                 clock: self.clock.clone(),
             };
             let (handle, join) = pool::spawn_worker(
@@ -905,6 +1059,7 @@ impl ServerBuilder {
             next_id: Arc::new(AtomicU64::new(1)),
             accepting,
             registry: registry.clone(),
+            cache: cache.clone(),
             seq,
         };
 
@@ -933,6 +1088,7 @@ impl ServerBuilder {
             joins,
             clock: self.clock,
             refresh,
+            cache,
         })
     }
 }
@@ -949,6 +1105,11 @@ pub struct Client {
     next_id: Arc<AtomicU64>,
     accepting: Arc<AtomicBool>,
     registry: SharedRegistry,
+    /// Capacity tier, when the builder configured one: turns a registry
+    /// miss on a KNOWN task into the typed, retryable
+    /// [`ServeError::AdapterCold`] (and queues the page-in) instead of
+    /// [`ServeError::UnknownTask`].
+    cache: Option<Arc<AdapterCache>>,
     /// Sequence length the serving graph expects.
     pub seq: usize,
 }
@@ -956,6 +1117,37 @@ pub struct Client {
 impl Client {
     pub fn workers(&self) -> usize {
         self.shards.len()
+    }
+
+    /// Classify a registry miss at admission. With a capacity tier the
+    /// task may merely be paged out: the lookup queues the page-in and
+    /// the caller sheds with the typed cold error — retryable, because
+    /// no work started. Returns `None` when the lookup found the
+    /// adapter resident after all (a deploy or load raced admission):
+    /// the caller proceeds.
+    fn classify_miss(&self, task: &str) -> Option<ServeError> {
+        if let Some(cache) = &self.cache {
+            match cache.lookup(task, cache.now(), 1) {
+                CacheLookup::Hit => return None,
+                CacheLookup::Loading { .. } | CacheLookup::Queued { .. } => {
+                    return Some(ServeError::AdapterCold {
+                        task: task.to_string(),
+                        loading: true,
+                    })
+                }
+                CacheLookup::Shed => {
+                    return Some(ServeError::AdapterCold {
+                        task: task.to_string(),
+                        loading: false,
+                    })
+                }
+                CacheLookup::Unknown => {}
+            }
+        }
+        Some(ServeError::UnknownTask {
+            task: task.to_string(),
+            known: self.registry.tasks(),
+        })
     }
 
     /// Stable task → worker pinning (FNV-1a). Keeping one task on one
@@ -977,10 +1169,9 @@ impl Client {
         // server started are immediately routable (the old Router froze
         // its task list at startup).
         if !self.registry.contains(task) {
-            return Err(ServeError::UnknownTask {
-                task: task.to_string(),
-                known: self.registry.tasks(),
-            });
+            if let Some(e) = self.classify_miss(task) {
+                return Err(e);
+            }
         }
         if !self.accepting.load(Ordering::Acquire) {
             return Err(ServeError::ShuttingDown);
@@ -1016,7 +1207,9 @@ impl Client {
         })
     }
 
-    /// Submit with bounded retry on [`ServeError::Overloaded`] — the
+    /// Submit with bounded retry through the retryable pre-admission
+    /// bounces ([`ServeError::Overloaded`], and with a capacity tier
+    /// [`ServeError::AdapterCold`] while the page-in lands) — the
     /// cooperative client side of the try-again protocol.
     ///
     /// The retry loop covers ADMISSION only: once a ticket exists, an
@@ -1058,10 +1251,9 @@ impl Client {
             });
         }
         if !self.registry.contains(task) {
-            return Err(ServeError::UnknownTask {
-                task: task.to_string(),
-                known: self.registry.tasks(),
-            });
+            if let Some(e) = self.classify_miss(task) {
+                return Err(e);
+            }
         }
         if !self.accepting.load(Ordering::Acquire) {
             return Err(ServeError::ShuttingDown);
@@ -1162,6 +1354,7 @@ pub struct Server {
     joins: Vec<std::thread::JoinHandle<ServeResult<()>>>,
     clock: Arc<dyn Clock>,
     refresh: Option<RefreshState>,
+    cache: Option<Arc<AdapterCache>>,
 }
 
 impl Server {
@@ -1186,12 +1379,19 @@ impl Server {
         &self.worker_metrics
     }
 
-    /// Pool-level aggregate (includes the refresh worker's counters).
+    /// The capacity tier, when one was configured.
+    pub fn cache(&self) -> Option<&Arc<AdapterCache>> {
+        self.cache.as_ref()
+    }
+
+    /// Pool-level aggregate (includes the refresh worker's and the
+    /// capacity tier's counters).
     pub fn metrics(&self) -> MetricsSnapshot {
         aggregate(
             self.worker_metrics
                 .iter()
                 .chain(self.refresh.as_ref().map(|r| &r.metrics))
+                .chain(self.cache.as_ref().map(|c| c.metrics()))
                 .map(|m| m.as_ref()),
         )
     }
@@ -1205,6 +1405,10 @@ impl Server {
         }
         if let Some(r) = &self.refresh {
             out.push_str(&r.metrics.snapshot("refresh").to_string());
+            out.push('\n');
+        }
+        if let Some(c) = &self.cache {
+            out.push_str(&c.metrics().snapshot("cache").to_string());
             out.push('\n');
         }
         out.push_str(&self.metrics().to_string());
@@ -1362,6 +1566,7 @@ mod tests {
             next_id: Arc::new(AtomicU64::new(1)),
             accepting: Arc::new(AtomicBool::new(true)),
             registry,
+            cache: None,
             seq,
         };
         (client, rxs)
@@ -1701,5 +1906,176 @@ mod tests {
         // pools with no generative traffic stay silent
         let quiet = Metrics::default().snapshot("w").to_string();
         assert!(!quiet.contains("gens="));
+    }
+
+    #[test]
+    fn sub_microsecond_latencies_survive_the_ring() {
+        // regression: record_modeled used as_micros(), which truncates
+        // every sub-µs virtual-clock latency to 0 — aggregating a batch
+        // of 250ns samples reported p50 = 0
+        let m = Metrics::default();
+        for _ in 0..8 {
+            m.record(1, Duration::from_nanos(250));
+        }
+        let s = m.snapshot("w");
+        assert!(
+            (s.lat_p50_ms - 0.00025).abs() < 1e-12,
+            "250ns must survive as 0.25µs, got {}ms",
+            s.lat_p50_ms
+        );
+        let agg = aggregate([&m]);
+        assert!((agg.lat_p50_ms - 0.00025).abs() < 1e-12);
+        assert!((agg.lat_p95_ms - 0.00025).abs() < 1e-12);
+    }
+
+    #[test]
+    fn concurrent_ttft_recorders_claim_distinct_ring_slots() {
+        // regression: record_ttft/record_intertoken indexed their rings
+        // by decode_tokens — past wrap-around, concurrent generations
+        // (which all read the same counter value) stomp one slot while
+        // the rest of the ring goes stale. Each ring now owns a
+        // fetch_add cursor, so N recorders claim N distinct slots.
+        let m = Metrics::default();
+        let fill_ns = 1e6; // 1ms
+        for _ in 0..METRIC_SAMPLE_CAP {
+            m.record_ttft(Duration::from_nanos(fill_ns as u64));
+        }
+        // decode_tokens never moved: the old scheme would aim every
+        // post-wrap sample at slot 0
+        assert_eq!(m.decode_tokens.load(Ordering::Relaxed), 0);
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let m = &m;
+                s.spawn(move || {
+                    for i in 0..256u64 {
+                        m.record_ttft(Duration::from_millis(10 + t * 256 + i));
+                    }
+                });
+            }
+        });
+        let ring = m.ttft_ns.lock().unwrap();
+        assert_eq!(ring.len(), METRIC_SAMPLE_CAP, "ring stays bounded");
+        let replaced = ring.iter().filter(|&&x| x != fill_ns).count();
+        assert_eq!(
+            replaced, 1024,
+            "4×256 concurrent recordings must land in 1024 distinct slots"
+        );
+    }
+
+    #[test]
+    fn intertoken_ring_has_its_own_cursor() {
+        let m = Metrics::default();
+        for _ in 0..METRIC_SAMPLE_CAP {
+            m.record_intertoken(Duration::from_millis(1));
+        }
+        for i in 0..4 {
+            m.record_intertoken(Duration::from_millis(20 + i));
+        }
+        let ring = m.intertoken_ns.lock().unwrap();
+        let replaced = ring.iter().filter(|&&x| x >= 2e7).count();
+        assert_eq!(replaced, 4, "post-wrap samples claim consecutive slots");
+    }
+
+    #[test]
+    fn aggregate_of_empty_rings_is_all_zeros_not_nan() {
+        let s = aggregate([&Metrics::default(), &Metrics::default()]);
+        for v in [
+            s.batch_mean,
+            s.lat_p50_ms,
+            s.lat_p95_ms,
+            s.modeled_p50_ms,
+            s.ttft_p50_ms,
+            s.intertoken_p50_ms,
+            s.step_occupancy_mean,
+            s.cold_start_p99_ms,
+        ] {
+            assert_eq!(v, 0.0, "empty rings must aggregate to 0, not NaN");
+        }
+        assert_eq!(s.cache_hit_rate(), 0.0, "hit rate guards the 0/0 case");
+        // and a snapshot of an untouched Metrics likewise
+        let quiet = Metrics::default().snapshot("w");
+        assert_eq!(quiet.lat_p50_ms, 0.0);
+        assert!(!quiet.to_string().contains("cache_hit_rate"));
+    }
+
+    #[test]
+    fn rings_past_wrap_around_stay_bounded_and_aggregate_sanely() {
+        let m = Metrics::default();
+        // 2× capacity: the counter keeps the truth, the ring stays CAP
+        for i in 0..(2 * METRIC_SAMPLE_CAP) {
+            m.record(1, Duration::from_micros(1 + (i % 7) as u64));
+        }
+        assert_eq!(m.batches.load(Ordering::Relaxed) as usize, 2 * METRIC_SAMPLE_CAP);
+        assert_eq!(m.latencies_us.lock().unwrap().len(), METRIC_SAMPLE_CAP);
+        let s = m.snapshot("w");
+        assert_eq!(s.batches as usize, 2 * METRIC_SAMPLE_CAP);
+        assert!(s.lat_p50_ms > 0.0 && s.lat_p50_ms < 0.008, "{}", s.lat_p50_ms);
+        let agg = aggregate([&m]);
+        assert!((agg.lat_p50_ms - s.lat_p50_ms).abs() < 1e-12);
+        assert!((agg.batch_mean - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cache_counters_flow_into_snapshots() {
+        let m = Metrics::default();
+        m.cache_hits.fetch_add(9, Ordering::Relaxed);
+        m.cache_misses.fetch_add(1, Ordering::Relaxed);
+        m.cache_evictions.fetch_add(2, Ordering::Relaxed);
+        m.cache_prefetch_hits.fetch_add(3, Ordering::Relaxed);
+        m.record_cold_start(Duration::from_millis(4));
+        let s = m.snapshot("cache");
+        assert!((s.cache_hit_rate() - 0.9).abs() < 1e-9);
+        assert!((s.cold_start_p99_ms - 4.0).abs() < 1e-9);
+        let text = s.to_string();
+        assert!(text.contains("cache_hit_rate=90%"));
+        assert!(text.contains("prefetch_hits=3"));
+        let agg = aggregate([&m, &Metrics::default()]);
+        assert_eq!(agg.cache_hits, 9);
+        assert_eq!(agg.cache_evictions, 2);
+        assert!((agg.cold_start_p99_ms - 4.0).abs() < 1e-9);
+        // pools without a cache stay silent
+        assert!(!Metrics::default().snapshot("w").to_string().contains("cache_hit_rate"));
+    }
+
+    #[test]
+    fn cold_tasks_shed_typed_and_retryable_not_unknown() {
+        use crate::serve::sched::VirtualClock;
+        let reg = registry_with(&["a", "b"]);
+        let clock = Arc::new(VirtualClock::new());
+        let cache = AdapterCache::new(
+            CacheConfig::new(1).load_latency(Duration::from_millis(1)),
+            reg.clone(),
+            clock.clone(),
+            Arc::new(Metrics::default()),
+        );
+        cache.poll(cache.now()); // adopt a,b → capacity 1 keeps only b
+        assert!(reg.is_evicted("a"));
+        let (c, _rxs) = mock_client(1, 8, 2, reg.clone());
+        let c = Client {
+            cache: Some(cache.clone()),
+            ..c
+        };
+        // paged-out ≠ unknown: typed cold error, retryable, load queued
+        let err = c.submit("a", &[0, 0]).unwrap_err();
+        assert_eq!(
+            err,
+            ServeError::AdapterCold { task: "a".into(), loading: true }
+        );
+        assert!(err.is_retryable(), "cold is a pre-admission bounce");
+        assert!(err.to_string().contains("paged out"));
+        // genuinely unknown tasks still report UnknownTask
+        assert!(matches!(
+            c.submit("zzz", &[0, 0]).unwrap_err(),
+            ServeError::UnknownTask { .. }
+        ));
+        // generate() takes the same cold path
+        assert!(matches!(
+            c.generate("a", &[1], GenConfig::default()).unwrap_err(),
+            ServeError::AdapterCold { .. }
+        ));
+        // once the page-in lands the task is admittable again
+        clock.advance(Duration::from_millis(2));
+        cache.poll(clock.now());
+        assert!(c.submit("a", &[0, 0]).is_ok());
     }
 }

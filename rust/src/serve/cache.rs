@@ -1,0 +1,737 @@
+//! Bounded adapter residency — the capacity tier over
+//! [`SharedRegistry`].
+//!
+//! The paper's Table III scenario multiplexes MANY tasks over one
+//! programmed analog base by hot-swapping 1.6M-param digital LoRA sets
+//! on the DPUs. "Millions of users" implies far more tasks than
+//! DPU-side adapter memory, so residency must be a config knob, not a
+//! memory ceiling: this module keeps at most `capacity` adapters
+//! resident (registry entry = resident on the DPUs), pages the
+//! least-recently-used unpinned one out when a load completes, and
+//! keeps every evicted adapter's bytes in a host-side backing store so
+//! a reload is a bounded-latency page-in, never a refit.
+//!
+//! ```text
+//!                     lookup(task)
+//!   resident ──hit──────────────► LRU stamp, serve
+//!      ▲                             │ capacity exceeded
+//!      │ poll(): load due,           ▼
+//!      │ evict LRU unpinned      evicted ──► registry entry removed,
+//!      │                             │       version RETAINED,
+//!   loading ◄──miss: queue load──────┘       bytes kept host-side
+//!      ▲        (bounded queue; full ⇒ typed AdapterCold shed)
+//!      │
+//!   prefetch(): predicted next arrival within horizon
+//!              (per-task EWMAs from serve::sched)
+//! ```
+//!
+//! Interaction contracts:
+//!
+//! * **Registry is the source of residency truth.** Eviction removes
+//!   the registry entry ([`SharedRegistry::evict`] — version counter
+//!   retained); reload restores the same bytes at the SAME version
+//!   ([`SharedRegistry::restore`]), because a page-in is not a new
+//!   deployment. Manual deploys (and refresh CAS swaps) reach the
+//!   cache through the registry's deploy hook, so externally deployed
+//!   tasks are admitted — and the capacity bound enforced — without
+//!   polling.
+//! * **Refresh skips evicted tasks but keeps their drift anchor**
+//!   ([`RefreshHandle::set_evicted`]): the substrate drifts whether or
+//!   not the digital adapter is resident, so an evicted task must not
+//!   accumulate stale *debt* it cannot act on, and must not come back
+//!   with a fresh-looking drift clock it does not deserve. Restoring
+//!   at the retained version is what lets the refresh reconciler
+//!   recognise the adapter and leave `deployed_at` untouched.
+//! * **Loads are serialized** through one modeled DPU upload channel
+//!   (`load_latency` each, FIFO): a burst of cold tasks queues, and
+//!   past `load_queue` in-flight loads the request is shed with the
+//!   typed [`ServeError::AdapterCold`](super::api::ServeError) — never
+//!   silently dropped.
+//!
+//! Lock order: `state` may be held across registry calls (the registry
+//! never re-enters the cache while locked — the deploy hook fires
+//! after the registry lock is released, and touches only the leaf
+//! `pending`/`backing` locks, never `state`).
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex, Weak};
+use std::time::{Duration, Instant};
+
+use crate::model::params::ParamStore;
+
+use super::api::Metrics;
+use super::refresh::RefreshHandle;
+use super::registry::SharedRegistry;
+use super::sched::{ArrivalRate, Clock};
+
+// ---------------------------------------------------------------------------
+// Config
+// ---------------------------------------------------------------------------
+
+/// Knobs for the adapter capacity tier (builder-style setters, wired
+/// through `ServerBuilder::adapter_cache`).
+#[derive(Clone, Debug)]
+pub struct CacheConfig {
+    capacity: usize,
+    pinned: BTreeSet<String>,
+    load_queue: usize,
+    load_latency: Duration,
+    prefetch: bool,
+    prefetch_horizon: Option<Duration>,
+}
+
+impl Default for CacheConfig {
+    fn default() -> CacheConfig {
+        CacheConfig {
+            capacity: 64,
+            pinned: BTreeSet::new(),
+            load_queue: 16,
+            // modeled DPU upload of one 1.6M-param adapter set
+            load_latency: Duration::from_micros(500),
+            prefetch: true,
+            prefetch_horizon: None,
+        }
+    }
+}
+
+impl CacheConfig {
+    pub fn new(capacity: usize) -> CacheConfig {
+        CacheConfig::default().capacity(capacity)
+    }
+
+    /// Maximum resident adapters (the DPU adapter-memory budget).
+    pub fn capacity(mut self, n: usize) -> Self {
+        self.capacity = n.max(1);
+        self
+    }
+
+    /// Pin `task`: always resident once loaded, never chosen for
+    /// eviction. Pins count against `capacity`.
+    pub fn pin(mut self, task: &str) -> Self {
+        self.pinned.insert(task.to_string());
+        self
+    }
+
+    /// Bound on in-flight + queued adapter loads; beyond it cold
+    /// requests are shed with the typed error.
+    pub fn load_queue(mut self, n: usize) -> Self {
+        self.load_queue = n.max(1);
+        self
+    }
+
+    /// Modeled DPU upload time per adapter (loads serialize on one
+    /// upload channel).
+    pub fn load_latency(mut self, d: Duration) -> Self {
+        self.load_latency = d;
+        self
+    }
+
+    /// Enable/disable predictive prefetch from the scheduler's
+    /// arrival-rate EWMAs.
+    pub fn prefetch(mut self, on: bool) -> Self {
+        self.prefetch = on;
+        self
+    }
+
+    /// How far ahead a predicted arrival may be for prefetch to start
+    /// the load (default: 4× `load_latency` — enough lead time for the
+    /// upload to finish before the request lands).
+    pub fn prefetch_horizon(mut self, d: Duration) -> Self {
+        self.prefetch_horizon = Some(d);
+        self
+    }
+
+    pub fn is_pinned(&self, task: &str) -> bool {
+        self.pinned.contains(task)
+    }
+
+    fn horizon(&self) -> Duration {
+        self.prefetch_horizon.unwrap_or(self.load_latency * 4)
+    }
+
+    /// Reject configs whose pins fill (or overflow) the capacity: with
+    /// no evictable slot left, no cold task could ever be paged in.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.pinned.len() >= self.capacity {
+            return Err(format!(
+                "adapter cache capacity {} must exceed the {} pinned task(s): \
+                 pins are unevictable, and a full-pin cache could never page \
+                 a cold adapter in",
+                self.capacity,
+                self.pinned.len()
+            ));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cache
+// ---------------------------------------------------------------------------
+
+/// Outcome of one residency lookup (see [`AdapterCache::lookup`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheLookup {
+    /// Resident: serve now (LRU stamp bumped).
+    Hit,
+    /// A load is already in flight; retry after `ready_at`.
+    Loading { ready_at: Instant },
+    /// Miss; a load was queued on the upload channel just now.
+    Queued { ready_at: Instant },
+    /// Miss and the load queue is full — shed with the typed error.
+    Shed,
+    /// Never deployed: not the cache's task (callers report
+    /// `UnknownTask`, not `AdapterCold`).
+    Unknown,
+}
+
+struct Resident {
+    last_used: u64,
+    /// Residency was created by the prefetcher and no demand request
+    /// has touched it yet — the first demand hit counts as a prefetch
+    /// hit (the number the predictive tier is judged on).
+    prefetched: bool,
+}
+
+struct Load {
+    ready_at: Instant,
+    /// First demand-miss instant: the cold-start clock. `None` for
+    /// prefetch-initiated loads until a demand request arrives
+    /// mid-load; pure prefetch loads record no cold-start sample.
+    requested: Option<Instant>,
+}
+
+#[derive(Default)]
+struct CacheState {
+    resident: BTreeMap<String, Resident>,
+    loading: BTreeMap<String, Load>,
+    /// Runtime pin set (seeded from the config; `pin`/`unpin` mutate).
+    pins: BTreeSet<String>,
+    /// Monotone LRU stamp — virtual-clock traces touch many tasks at
+    /// the same instant, so recency is sequenced, not timed.
+    seq: u64,
+    /// End of the last queued upload: loads serialize FIFO on one
+    /// modeled DPU upload channel.
+    last_ready: Option<Instant>,
+}
+
+/// The bounded adapter capacity tier. One per pool, shared by the
+/// client (admission), every worker (miss path + prefetch), and the
+/// registry's deploy hook.
+pub struct AdapterCache {
+    cfg: CacheConfig,
+    registry: SharedRegistry,
+    clock: Arc<dyn Clock>,
+    metrics: Arc<Metrics>,
+    refresh: Mutex<Option<RefreshHandle>>,
+    state: Mutex<CacheState>,
+    /// Deploys observed by the registry hook, drained into `state` on
+    /// the next cache call. The hook must not take `state` (it runs
+    /// re-entrantly under cache-initiated registry calls), so these two
+    /// are leaf locks.
+    pending: Mutex<Vec<String>>,
+    /// Host-side copy of every task's latest adapter bytes + version —
+    /// what an eviction keeps and a reload restores. Kept fresh by the
+    /// deploy hook (manual deploys AND refresh CAS swaps land here).
+    backing: Mutex<BTreeMap<String, (Arc<ParamStore>, u64)>>,
+}
+
+impl AdapterCache {
+    /// Build the tier over `registry` and register its deploy hook.
+    /// Everything already deployed is adopted immediately (evicting
+    /// down to `capacity`, LRU = task order for the initial set).
+    pub fn new(
+        cfg: CacheConfig,
+        registry: SharedRegistry,
+        clock: Arc<dyn Clock>,
+        metrics: Arc<Metrics>,
+    ) -> Arc<AdapterCache> {
+        let cache = Arc::new(AdapterCache {
+            state: Mutex::new(CacheState {
+                pins: cfg.pinned.clone(),
+                ..CacheState::default()
+            }),
+            cfg,
+            registry: registry.clone(),
+            clock,
+            metrics,
+            refresh: Mutex::new(None),
+            pending: Mutex::new(Vec::new()),
+            backing: Mutex::new(BTreeMap::new()),
+        });
+        let weak: Weak<AdapterCache> = Arc::downgrade(&cache);
+        registry.set_deploy_hook(Arc::new(move |task, params, version| {
+            if let Some(c) = weak.upgrade() {
+                c.backing
+                    .lock()
+                    .unwrap()
+                    .insert(task.to_string(), (params.clone(), version));
+                c.pending.lock().unwrap().push(task.to_string());
+            }
+        }));
+        cache.adopt_deployed();
+        cache
+    }
+
+    /// Attach the refresh lifecycle handle: evictions suppress refits
+    /// ([`RefreshHandle::set_evicted`]), reloads re-enable them with
+    /// the drift anchor intact.
+    pub fn set_refresh(&self, handle: RefreshHandle) {
+        *self.refresh.lock().unwrap() = Some(handle);
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cfg.capacity
+    }
+
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    /// Pool-clock now, for callers without their own clock handle.
+    pub fn now(&self) -> Instant {
+        self.clock.now()
+    }
+
+    pub fn is_resident(&self, task: &str) -> bool {
+        self.state.lock().unwrap().resident.contains_key(task)
+    }
+
+    pub fn resident_count(&self) -> usize {
+        self.state.lock().unwrap().resident.len()
+    }
+
+    pub fn resident_tasks(&self) -> Vec<String> {
+        self.state.lock().unwrap().resident.keys().cloned().collect()
+    }
+
+    pub fn loading_count(&self) -> usize {
+        self.state.lock().unwrap().loading.len()
+    }
+
+    /// Task has been deployed at some point (resident or evicted): a
+    /// miss on a known task is a cold start, not an unknown task.
+    pub fn knows(&self, task: &str) -> bool {
+        self.backing.lock().unwrap().contains_key(task)
+    }
+
+    /// Pin `task` at runtime (unevictable once resident).
+    pub fn pin(&self, task: &str) {
+        self.state.lock().unwrap().pins.insert(task.to_string());
+    }
+
+    pub fn unpin(&self, task: &str) {
+        self.state.lock().unwrap().pins.remove(task);
+    }
+
+    pub fn is_pinned(&self, task: &str) -> bool {
+        self.state.lock().unwrap().pins.contains(task)
+    }
+
+    /// One residency lookup for `task` at `now`, representing `weight`
+    /// requests (hit/miss/shed counters move by `weight`; the pool
+    /// calls with the batch fill, admission with 1). `weight == 0` is a
+    /// warmth-only touch: the LRU stamp bumps, nothing is counted, and
+    /// a missing task still queues a load (uncounted) so decode lanes
+    /// keep their task paged in without inflating per-request rates.
+    pub fn lookup(&self, task: &str, now: Instant, weight: usize) -> CacheLookup {
+        self.drain_pending();
+        let mut st = self.state.lock().unwrap();
+        if st.resident.contains_key(task) {
+            st.seq += 1;
+            let seq = st.seq;
+            let r = st.resident.get_mut(task).expect("checked resident");
+            r.last_used = seq;
+            if weight > 0 {
+                if r.prefetched {
+                    r.prefetched = false;
+                    self.metrics.cache_prefetch_hits.fetch_add(1, Ordering::Relaxed);
+                }
+                self.metrics.cache_hits.fetch_add(weight as u64, Ordering::Relaxed);
+            }
+            return CacheLookup::Hit;
+        }
+        if let Some(load) = st.loading.get_mut(task) {
+            if weight > 0 {
+                self.metrics.cache_misses.fetch_add(weight as u64, Ordering::Relaxed);
+                // first demand against a prefetch-initiated load starts
+                // the cold-start clock: the requester waits from HERE
+                if load.requested.is_none() {
+                    load.requested = Some(now);
+                }
+            }
+            return CacheLookup::Loading { ready_at: load.ready_at };
+        }
+        if !self.knows(task) {
+            return CacheLookup::Unknown;
+        }
+        if weight > 0 {
+            self.metrics.cache_misses.fetch_add(weight as u64, Ordering::Relaxed);
+        }
+        if st.loading.len() >= self.cfg.load_queue {
+            if weight > 0 {
+                self.metrics.cache_shed.fetch_add(weight as u64, Ordering::Relaxed);
+            }
+            return CacheLookup::Shed;
+        }
+        let ready_at = Self::start_load(&mut st, &self.cfg, task, now, (weight > 0).then_some(now));
+        CacheLookup::Queued { ready_at }
+    }
+
+    /// Complete every load due at `now`: evict the LRU unpinned
+    /// resident if the cache is full, page the adapter back in at its
+    /// retained version, re-enable refresh for it, and record the
+    /// cold-start latency for demand-initiated loads. Returns the tasks
+    /// that became resident. The worker loop calls this once per pass.
+    pub fn poll(&self, now: Instant) -> Vec<String> {
+        self.drain_pending();
+        let mut landed = Vec::new();
+        let mut st = self.state.lock().unwrap();
+        let due: Vec<String> = st
+            .loading
+            .iter()
+            .filter(|(_, l)| l.ready_at <= now)
+            .map(|(t, _)| t.clone())
+            .collect();
+        for task in due {
+            let backed = self.backing.lock().unwrap().get(&task).cloned();
+            let Some((params, version)) = backed else {
+                st.loading.remove(&task);
+                continue;
+            };
+            if self.registry.contains(&task) {
+                // a concurrent manual deploy raced the load in: the
+                // hook's pending entry admits it — drop the load
+                st.loading.remove(&task);
+                continue;
+            }
+            if !self.make_room(&mut st) {
+                // every resident is pinned: leave the load queued
+                break;
+            }
+            let load = st.loading.remove(&task).expect("due load present");
+            if self.registry.restore(&task, params, version) {
+                st.seq += 1;
+                let seq = st.seq;
+                st.resident.insert(
+                    task.clone(),
+                    Resident {
+                        last_used: seq,
+                        prefetched: load.requested.is_none(),
+                    },
+                );
+                if let Some(h) = self.refresh.lock().unwrap().as_ref() {
+                    // same version ⇒ the reconciler keeps deployed_at:
+                    // the adapter resumes with its FULL drift age
+                    h.set_evicted(&task, false);
+                }
+                if let Some(t0) = load.requested {
+                    self.metrics
+                        .record_cold_start(now.saturating_duration_since(t0));
+                }
+                landed.push(task);
+            }
+        }
+        landed
+    }
+
+    /// Predictive paging: queue loads for known, non-resident tasks
+    /// whose predicted next arrival (from the scheduler's per-task
+    /// EWMAs, [`super::sched::BatchScheduler::arrival_rates`]) falls
+    /// within the horizon of `now` — so the upload finishes before the
+    /// request lands. Predictions far in the PAST are skipped too: a
+    /// task that stopped arriving would otherwise be re-paged forever.
+    /// Returns the number of loads started.
+    pub fn prefetch(&self, now: Instant, rates: &[(String, ArrivalRate)]) -> usize {
+        if !self.cfg.prefetch {
+            return 0;
+        }
+        self.drain_pending();
+        let horizon = self.cfg.horizon();
+        let mut started = 0;
+        let mut st = self.state.lock().unwrap();
+        for (task, rate) in rates {
+            if st.resident.contains_key(task) || st.loading.contains_key(task) {
+                continue;
+            }
+            if st.loading.len() >= self.cfg.load_queue {
+                break;
+            }
+            if !self.knows(task) {
+                continue;
+            }
+            let predicted = rate.predicted_next();
+            let imminent = predicted <= now + horizon && predicted + horizon >= now;
+            if imminent {
+                Self::start_load(&mut st, &self.cfg, task, now, None);
+                started += 1;
+            }
+        }
+        started
+    }
+
+    /// Drain the deploy-hook queue: externally deployed tasks become
+    /// resident (they ARE in the registry) and the capacity bound is
+    /// enforced by evicting LRU unpinned residents.
+    fn drain_pending(&self) {
+        let pend: Vec<String> = {
+            let mut p = self.pending.lock().unwrap();
+            if p.is_empty() {
+                return;
+            }
+            std::mem::take(&mut *p)
+        };
+        let mut st = self.state.lock().unwrap();
+        for task in pend {
+            // a deploy supersedes any in-flight load of older bytes
+            st.loading.remove(&task);
+            st.seq += 1;
+            let seq = st.seq;
+            st.resident.insert(
+                task.clone(),
+                Resident {
+                    last_used: seq,
+                    prefetched: false,
+                },
+            );
+            if let Some(h) = self.refresh.lock().unwrap().as_ref() {
+                h.set_evicted(&task, false);
+            }
+            self.enforce_capacity(&mut st);
+        }
+    }
+
+    fn adopt_deployed(&self) {
+        let mut backing = BTreeMap::new();
+        let mut pend = Vec::new();
+        for task in self.registry.tasks() {
+            if let Some((params, v)) = self.registry.snapshot(&task) {
+                backing.insert(task.clone(), (params, v));
+                pend.push(task);
+            }
+        }
+        self.backing.lock().unwrap().extend(backing);
+        self.pending.lock().unwrap().extend(pend);
+        self.drain_pending();
+    }
+
+    fn enforce_capacity(&self, st: &mut CacheState) {
+        while st.resident.len() > self.cfg.capacity {
+            if !self.evict_lru(st) {
+                break;
+            }
+        }
+    }
+
+    /// Room for one incoming adapter: spare capacity, or one LRU
+    /// unpinned eviction. `false` when every resident is pinned.
+    fn make_room(&self, st: &mut CacheState) -> bool {
+        if st.resident.len() < self.cfg.capacity {
+            return true;
+        }
+        self.evict_lru(st)
+    }
+
+    fn evict_lru(&self, st: &mut CacheState) -> bool {
+        let victim = st
+            .resident
+            .iter()
+            .filter(|(task, _)| !st.pins.contains(*task))
+            .min_by_key(|(task, r)| (r.last_used, task.to_string()))
+            .map(|(task, _)| task.clone());
+        let Some(task) = victim else {
+            return false;
+        };
+        st.resident.remove(&task);
+        // the registry evict retains the version counter; the backing
+        // store (kept fresh by the deploy hook) already has the bytes
+        self.registry.evict(&task);
+        self.metrics.cache_evictions.fetch_add(1, Ordering::Relaxed);
+        if let Some(h) = self.refresh.lock().unwrap().as_ref() {
+            h.set_evicted(&task, true);
+        }
+        true
+    }
+
+    fn start_load(
+        st: &mut CacheState,
+        cfg: &CacheConfig,
+        task: &str,
+        now: Instant,
+        requested: Option<Instant>,
+    ) -> Instant {
+        // loads serialize FIFO on one modeled DPU upload channel
+        let begin = match st.last_ready {
+            Some(r) if r > now => r,
+            _ => now,
+        };
+        let ready_at = begin + cfg.load_latency;
+        st.last_ready = Some(ready_at);
+        st.loading.insert(task.to_string(), Load { ready_at, requested });
+        ready_at
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tests (virtual clock; the cross-subsystem suite is
+// tests/cache_conformance.rs)
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::Tensor;
+    use crate::serve::sched::VirtualClock;
+
+    fn adapter(n: usize) -> ParamStore {
+        ParamStore::from_tensors(vec![Tensor::zeros("lora.layers.0.wq_a", &[n, 8])])
+    }
+
+    fn rig(cfg: CacheConfig) -> (Arc<AdapterCache>, SharedRegistry, Arc<VirtualClock>) {
+        let registry = SharedRegistry::new();
+        let clock = Arc::new(VirtualClock::new());
+        let cache = AdapterCache::new(
+            cfg,
+            registry.clone(),
+            clock.clone() as Arc<dyn Clock>,
+            Arc::new(Metrics::default()),
+        );
+        (cache, registry, clock)
+    }
+
+    #[test]
+    fn deploys_admit_and_capacity_bounds_residency() {
+        let (cache, registry, _clock) = rig(CacheConfig::new(2));
+        for t in ["a", "b", "c", "d"] {
+            registry.deploy(t, adapter(4));
+        }
+        // the hook queues admissions; any cache call drains them
+        assert_eq!(cache.resident_count(), 0);
+        cache.poll(cache.now());
+        assert_eq!(cache.resident_count(), 2, "capacity bounds residency");
+        assert_eq!(registry.tasks().len(), 2, "registry mirrors residency");
+        // LRU on admission order: a and b were paged out for c and d
+        assert!(cache.is_resident("c") && cache.is_resident("d"));
+        assert!(registry.is_evicted("a") && registry.is_evicted("b"));
+        assert_eq!(cache.metrics().cache_evictions.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn miss_queues_load_and_poll_pages_back_in_at_same_version() {
+        let (cache, registry, clock) = rig(CacheConfig::new(1).load_latency(Duration::from_millis(1)));
+        registry.deploy("a", adapter(4));
+        registry.deploy("a", adapter(4)); // v2
+        registry.deploy("b", adapter(4)); // evicts a
+        cache.poll(cache.now());
+        assert!(registry.is_evicted("a"));
+
+        let now = clock.now();
+        let got = cache.lookup("a", now, 1);
+        let CacheLookup::Queued { ready_at } = got else {
+            panic!("expected Queued, got {got:?}");
+        };
+        assert_eq!(ready_at, now + Duration::from_millis(1));
+        // not due yet
+        assert!(cache.poll(now).is_empty());
+        clock.advance(Duration::from_millis(1));
+        let landed = cache.poll(clock.now());
+        assert_eq!(landed, vec!["a".to_string()]);
+        assert_eq!(registry.version("a"), Some(2), "reload keeps the version");
+        assert!(registry.is_evicted("b"), "LRU victim paged out for the reload");
+        assert_eq!(cache.lookup("a", clock.now(), 1), CacheLookup::Hit);
+    }
+
+    #[test]
+    fn bounded_load_queue_sheds_with_typed_outcome() {
+        let (cache, registry, clock) = rig(CacheConfig::new(1).load_queue(1));
+        for t in ["a", "b", "c"] {
+            registry.deploy(t, adapter(4));
+        }
+        cache.poll(cache.now());
+        let now = clock.now();
+        assert!(matches!(cache.lookup("a", now, 1), CacheLookup::Queued { .. }));
+        assert_eq!(cache.lookup("b", now, 1), CacheLookup::Shed, "queue full");
+        assert_eq!(cache.metrics().cache_shed.load(Ordering::Relaxed), 1);
+        assert_eq!(cache.lookup("zzz", now, 1), CacheLookup::Unknown);
+    }
+
+    #[test]
+    fn pinned_tasks_are_never_evicted() {
+        let (cache, registry, _clock) = rig(CacheConfig::new(2).pin("hot"));
+        registry.deploy("hot", adapter(4));
+        for t in ["b", "c", "d"] {
+            registry.deploy(t, adapter(4));
+        }
+        cache.poll(cache.now());
+        assert!(cache.is_resident("hot"), "pin survives an admission storm");
+        assert_eq!(cache.resident_count(), 2);
+    }
+
+    #[test]
+    fn prefetch_pages_in_before_the_predicted_arrival() {
+        let (cache, registry, clock) =
+            rig(CacheConfig::new(1).load_latency(Duration::from_millis(1)));
+        registry.deploy("a", adapter(4));
+        registry.deploy("b", adapter(4)); // evicts a
+        cache.poll(cache.now());
+        assert!(!cache.is_resident("a"));
+
+        let now = clock.now();
+        let rate = ArrivalRate {
+            interarrival: Duration::from_millis(3),
+            last: now,
+        };
+        // predicted next at now+3ms, horizon 4ms ⇒ load starts now
+        assert_eq!(cache.prefetch(now, &[("a".to_string(), rate)]), 1);
+        clock.advance(Duration::from_millis(1));
+        assert_eq!(cache.poll(clock.now()), vec!["a".to_string()]);
+        // the demand arrival is a hit — and a prefetch hit
+        assert_eq!(cache.lookup("a", clock.now(), 1), CacheLookup::Hit);
+        assert_eq!(cache.metrics().cache_prefetch_hits.load(Ordering::Relaxed), 1);
+        assert_eq!(cache.metrics().cache_hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn stale_predictions_do_not_thrash_the_cache() {
+        let (cache, registry, clock) =
+            rig(CacheConfig::new(1).load_latency(Duration::from_millis(1)));
+        registry.deploy("dead", adapter(4));
+        registry.deploy("live", adapter(4));
+        cache.poll(cache.now());
+        let t0 = clock.now();
+        clock.advance(Duration::from_secs(60));
+        // "dead" last arrived a minute ago: predicted_next is ancient —
+        // prefetch must NOT keep re-paging it in
+        let rate = ArrivalRate {
+            interarrival: Duration::from_millis(1),
+            last: t0,
+        };
+        assert_eq!(cache.prefetch(clock.now(), &[("dead".to_string(), rate)]), 0);
+    }
+
+    #[test]
+    fn cold_start_latency_is_recorded_for_demand_loads_only() {
+        let (cache, registry, clock) =
+            rig(CacheConfig::new(1).load_latency(Duration::from_millis(2)));
+        registry.deploy("a", adapter(4));
+        registry.deploy("b", adapter(4));
+        cache.poll(cache.now());
+        let now = clock.now();
+        assert!(matches!(cache.lookup("a", now, 1), CacheLookup::Queued { .. }));
+        clock.advance(Duration::from_millis(2));
+        cache.poll(clock.now());
+        let snap = cache.metrics().snapshot("cache");
+        assert!(
+            (snap.cold_start_p99_ms - 2.0).abs() < 1e-6,
+            "demand load records its queue-to-resident wait, got {}",
+            snap.cold_start_p99_ms
+        );
+    }
+
+    #[test]
+    fn validate_rejects_full_pin_configs() {
+        assert!(CacheConfig::new(1).pin("a").validate().is_err());
+        assert!(CacheConfig::new(2).pin("a").validate().is_ok());
+    }
+}

@@ -309,7 +309,18 @@ impl RefreshCoordinator {
     /// the same instant with the same state is a no-op — so the runner
     /// can invoke it every tick.
     pub fn rebalance(&self, now: Instant) {
-        let entries = self.handle.coord_entries();
+        // evicted tasks (paged out by the capacity tier) are invisible
+        // to coordination: they can neither refit nor hold a shard, so
+        // giving one a stagger slot — or counting it as an obstacle —
+        // would spend the pool's slack on a task nothing can serve. The
+        // reload re-admits them here unchanged (same version, same
+        // trigger), so their stagger is recomputed from the live set.
+        let entries: Vec<_> = self
+            .handle
+            .coord_entries()
+            .into_iter()
+            .filter(|e| !e.evicted)
+            .collect();
         // 1) adaptive bounds from the learned EWMAs
         let mut decisions: Vec<(String, CoordDecision)> = Vec::with_capacity(entries.len());
         let mut bounds: Vec<(Option<Duration>, Option<Duration>)> =

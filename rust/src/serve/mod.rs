@@ -61,6 +61,33 @@
 //!                    Metrics::concurrent_holds_peak how many shards
 //!                    ever stalled together)
 //!
+//!       ┌───────────────────────── CACHE ────────────────────────┐
+//!       │  bounded adapter residency (capacity = DPU memory)     │
+//!       │                                                        │
+//!       │  miss ──► load (serialized upload channel; queue full  │
+//!       │   │       ⇒ typed AdapterCold shed) ──► resident       │
+//!       │   │                                       │ LRU,       │
+//!       │   │            restore at SAME version    │ unpinned   │
+//!       │   │            (drift anchor preserved)   ▼            │
+//!       │   └◄──────────────────────────────── evicted           │
+//!       │        bytes kept host-side; version counter retained  │
+//!       │                                                        │
+//!       │  ──► REFRESH: eviction sets the tracked task's evicted │
+//!       │      flag — due()/is_stale skip it (no refit of a      │
+//!       │      paged-out adapter, no stale debt it cannot act    │
+//!       │      on) and the coordinator stops staggering it;      │
+//!       │      reload at the retained version re-anchors NOTHING │
+//!       │      — deployed_at survives, so the adapter comes back │
+//!       │      with its FULL drift age and refits immediately    │
+//!       │      if it is due (the substrate drifted while the     │
+//!       │      digital adapter was paged out)                    │
+//!       │  ──► SCHEDULE: the prefetcher reads per-task arrival   │
+//!       │      EWMAs (BatchScheduler::arrival_rates) and starts  │
+//!       │      page-ins for tasks whose predicted next arrival   │
+//!       │      is within the horizon — cold-start p99 is the     │
+//!       │      number it exists to cut                           │
+//!       └────────────────────────────────────────────────────────┘
+//!
 //!       ┌──────────────────────── DECODE ────────────────────────┐
 //!       │  step-batch (continuous batching, one lane per task)   │
 //!       │                                                        │
@@ -99,7 +126,15 @@
 //!
 //! * [`registry`] — thread-safe adapter registry handing out
 //!   `Arc<ParamStore>` snapshots (hot-swap is O(pointer) on the request
-//!   path),
+//!   path); with a capacity tier attached, a registry entry means
+//!   "resident on the DPUs",
+//! * [`cache`]    — bounded adapter residency over the registry: LRU
+//!   eviction with pinned hot tasks, a serialized modeled load channel
+//!   with a bounded queue (beyond it, cold requests shed with the
+//!   retryable [`api::ServeError::AdapterCold`] — see its
+//!   retryability docs), predictive prefetch from the scheduler's
+//!   arrival EWMAs, and refresh integration (evicted tasks are never
+//!   refit, and page back in with their full drift age),
 //! * [`batcher`]  — per-task dynamic batching with a max-wait deadline
 //!   (batches never mix tasks: a task switch costs an adapter swap),
 //! * [`sched`]    — pipeline-aware batch scheduling: the Fig. 4
@@ -153,10 +188,12 @@
 //! cross-worker coordination suite in `tests/coord_conformance.rs`, and
 //! the continuous-batching decode suite in `tests/decode_conformance.rs`
 //! (all on the shared `tests/common/refresh_sim.rs` harness); the
-//! scheduler-policy property tests in `tests/sched_properties.rs`.
+//! scheduler-policy property tests in `tests/sched_properties.rs`; the
+//! capacity-tier conformance suite in `tests/cache_conformance.rs`.
 
 pub mod api;
 pub mod batcher;
+pub mod cache;
 pub mod coord;
 pub mod decode;
 mod pool;
@@ -168,6 +205,7 @@ pub use api::{
     aggregate, submit_wave, submit_wave_results, Client, GenTicket, Metrics, MetricsSnapshot,
     Pending, Response, ServeError, ServeResult, Server, ServerBuilder,
 };
+pub use cache::{AdapterCache, CacheConfig, CacheLookup};
 pub use decode::{
     greedy_chunks, step_gate, GenConfig, Generation, StepEmit, StepEngine, StepGate, TokenEvent,
 };
@@ -177,5 +215,6 @@ pub use refresh::{
     RefreshHandle, RefreshPolicy, RefreshRunner, RefreshView, TrainerRefitter,
 };
 pub use sched::{
-    BatchScheduler, Clock, Decision, RealClock, RefreshCoupling, SchedConfig, VirtualClock,
+    ArrivalRate, BatchScheduler, Clock, Decision, RealClock, RefreshCoupling, SchedConfig,
+    VirtualClock,
 };

@@ -19,6 +19,7 @@ use crate::model::params::ParamStore;
 
 use super::api::{Metrics, Response, ServeError, ServeResult};
 use super::batcher::Batcher;
+use super::cache::{AdapterCache, CacheLookup};
 use super::decode::{step_gate, GenConfig, StepEngine, StepGate, TokenEvent};
 use super::refresh::RefreshHandle;
 use super::registry::SharedRegistry;
@@ -78,6 +79,11 @@ pub(crate) struct WorkerConfig {
     /// drift-refresh worker): powers the scheduler's refresh coupling
     /// and the worker's stale-batch / swap-gap accounting.
     pub refresh: Option<RefreshHandle>,
+    /// Bounded adapter residency ([`super::cache`]): the worker lands
+    /// due page-ins and prefetches each pass, classifies snapshot
+    /// misses as cold (typed, retryable) instead of missing, and keeps
+    /// its live decode lanes' adapters warm.
+    pub cache: Option<Arc<AdapterCache>>,
     /// Time source for enqueue stamps, deadlines, and latency metrics
     /// (virtual in deterministic tests).
     pub clock: Arc<dyn Clock>,
@@ -299,6 +305,17 @@ fn worker_loop(
                         }
                     }
                 }
+            }
+        }
+
+        // capacity-tier upkeep, once per pass: land every due page-in
+        // (so this pass's registry snapshots hit) and start prefetch
+        // loads for tasks whose predicted next arrival — per-task EWMAs
+        // from the scheduler — is within the horizon
+        if let Some(cache) = cfg.cache.as_ref() {
+            cache.poll(cfg.clock.now());
+            if let Some(s) = sched.as_ref() {
+                cache.prefetch(cfg.clock.now(), &s.arrival_rates());
             }
         }
 
@@ -530,11 +547,19 @@ fn step_lane(
     // that landed since the previous step is picked up immediately, no
     // drain — in-flight sequences finish on the new version
     let Some((adapter, version)) = registry.snapshot(task) else {
-        shed_lane(lane, inflight, metrics, |_| ServeError::AdapterMissing {
-            task: task.to_string(),
-        });
+        // an evicted decode task sheds its lane mid-stream with the
+        // typed cold error (the page-in is queued); `Shed` semantics —
+        // never auto-replayed — still apply because ticket errors are
+        // terminal regardless of retryability
+        let err = cold_or_missing(cfg, task, fill);
+        shed_lane(lane, inflight, metrics, |_| err.clone());
         return LaneOutcome::Progressed;
     };
+    if let Some(cache) = cfg.cache.as_ref() {
+        // warmth-only touch (weight 0): a live decode lane keeps its
+        // adapter paged in without counting a hit per step
+        cache.lookup(task, now, 0);
+    }
     if let Some(h) = cfg.refresh.as_ref() {
         match step_gate(h.view(task), version, now, DECODE_HOLD, &mut lane.held_since) {
             StepGate::Hold { until } => return LaneOutcome::Held { until },
@@ -666,6 +691,36 @@ fn note_adapter_load(
     *last_adapter = Some(loaded);
 }
 
+/// Classify a registry-snapshot miss mid-pipeline. With a capacity
+/// tier the usual cause is an eviction racing admission: the lookup
+/// queues the page-in (counting `weight` misses) and the answer is the
+/// retryable [`ServeError::AdapterCold`]. Without a tier — or for a
+/// task the tier never saw — the adapter genuinely vanished.
+fn cold_or_missing(cfg: &WorkerConfig, task: &str, weight: usize) -> ServeError {
+    if let Some(cache) = cfg.cache.as_ref() {
+        match cache.lookup(task, cfg.clock.now(), weight) {
+            // the page-in landed between the snapshot and this lookup:
+            // still answer cold-retryable — the retry will hit
+            CacheLookup::Hit | CacheLookup::Loading { .. } | CacheLookup::Queued { .. } => {
+                return ServeError::AdapterCold {
+                    task: task.to_string(),
+                    loading: true,
+                };
+            }
+            CacheLookup::Shed => {
+                return ServeError::AdapterCold {
+                    task: task.to_string(),
+                    loading: false,
+                };
+            }
+            CacheLookup::Unknown => {}
+        }
+    }
+    ServeError::AdapterMissing {
+        task: task.to_string(),
+    }
+}
+
 /// Execute one task-pure batch and deliver a terminal result to every
 /// request in it.
 #[allow(clippy::too_many_arguments)]
@@ -686,11 +741,14 @@ fn serve_batch(
     let n = reqs.len();
     let Some((adapter, version)) = registry.snapshot(&task) else {
         metrics.errors.fetch_add(n as u64, Ordering::Relaxed);
-        respond_all(reqs, inflight, |_| {
-            Err(ServeError::AdapterMissing { task: task.clone() })
-        });
+        let err = cold_or_missing(cfg, &task, n);
+        respond_all(reqs, inflight, |_| Err(err.clone()));
         return;
     };
+    if let Some(cache) = cfg.cache.as_ref() {
+        // LRU warmth + hit accounting for the whole served batch
+        cache.lookup(&task, cfg.clock.now(), n);
+    }
     if let Some(h) = cfg.refresh.as_ref() {
         // requests knowingly served at a drift-degraded (or already
         // replaced) adapter version — the number refresh-aware

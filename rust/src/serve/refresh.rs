@@ -505,6 +505,16 @@ struct TrackedTask {
     /// The task's shard is currently deferring it for a pending swap
     /// (the scheduler returned `Decision::Hold`).
     holding: bool,
+    /// The adapter is paged out by the capacity tier (`serve::cache`).
+    /// The task stays tracked — `deployed_at` keeps anchoring its drift
+    /// age, because the SUBSTRATE keeps drifting while the digital
+    /// adapter sits in host memory — but it is skipped by the due check
+    /// (nothing resident to refit), excluded from staleness accounting
+    /// (debt it cannot act on), and ignored by the coordinator's
+    /// stagger. A reload at the same version clears the flag and leaves
+    /// the anchor untouched: the adapter comes back owing its full
+    /// accumulated drift age, not a fresh-looking clock.
+    evicted: bool,
 }
 
 /// Cloneable, thread-safe view of the per-task refresh lifecycle.
@@ -584,12 +594,36 @@ impl RefreshHandle {
     /// is overdue). Used by the pool's `stale_batch_requests` metric.
     pub fn is_stale(&self, task: &str, version: u64, now: Instant) -> bool {
         match self.read().get(task) {
+            // an evicted task cannot act on staleness (nothing resident
+            // to refit): it accumulates drift age, never stale *debt*
+            Some(t) if t.evicted => false,
             Some(t) if version < t.version => true,
             Some(t) if version == t.version => {
                 t.due_at.map(|d| now >= d).unwrap_or(false)
             }
             _ => false,
         }
+    }
+
+    /// Flag `task` as paged out by / back into the capacity tier
+    /// (`serve::cache`). Eviction clears any coordinator stagger (the
+    /// slot should go to a task that can actually use it) but keeps the
+    /// drift anchor: a reload at the same version resumes the watch
+    /// with the full accumulated drift age. No-op for untracked tasks —
+    /// a task evicted before it was ever tracked simply joins the watch
+    /// (conservatively fresh) when it is reloaded.
+    pub fn set_evicted(&self, task: &str, evicted: bool) {
+        if let Some(t) = self.write().get_mut(task) {
+            t.evicted = evicted;
+            if evicted {
+                t.staggered_at = None;
+            }
+        }
+    }
+
+    /// `true` while the capacity tier has `task` paged out.
+    pub fn is_evicted(&self, task: &str) -> bool {
+        self.read().get(task).map(|t| t.evicted).unwrap_or(false)
     }
 
     pub(crate) fn begin_refit(&self, task: &str) {
@@ -698,6 +732,7 @@ impl RefreshHandle {
                 refitting: t.refitting,
                 gap_ewma_ns: t.gap_ewma_ns,
                 refit_ewma_ns: t.refit_ewma_ns,
+                evicted: t.evicted,
             })
             .collect()
     }
@@ -734,6 +769,9 @@ pub(crate) struct CoordEntry {
     pub refitting: bool,
     pub gap_ewma_ns: Option<f64>,
     pub refit_ewma_ns: Option<f64>,
+    /// Paged out by the capacity tier: the coordinator must not spend a
+    /// stagger slot (or count a hold span) on a task nothing can refit.
+    pub evicted: bool,
 }
 
 /// One task's rebalance outcome, written back through
@@ -842,6 +880,8 @@ impl RefreshPolicy {
                 gap_ewma_ns: prev.as_ref().and_then(|t| t.gap_ewma_ns),
                 refit_ewma_ns: prev.as_ref().and_then(|t| t.refit_ewma_ns),
                 holding: prev.map(|t| t.holding).unwrap_or(false),
+                // a (re-)track is a deployment: the adapter is resident
+                evicted: false,
             },
         );
     }
@@ -897,6 +937,10 @@ impl RefreshPolicy {
         self.tracked
             .read()
             .iter()
+            // an evicted task is never due: there is nothing resident to
+            // refit, and refitting the host-side copy would waste the
+            // step budget on bytes that may never page back in
+            .filter(|(_, t)| !t.evicted)
             .filter(|(_, t)| {
                 t.staggered_at
                     .or(t.due_at)
@@ -1036,7 +1080,11 @@ impl RefreshRunner {
             }
         }
         for task in self.policy.tasks() {
-            if !self.registry.contains(&task) {
+            // an EVICTED task is absent from the registry but must stay
+            // tracked: its drift anchor is the only record of how long
+            // the substrate has drifted under it, and forgetting it
+            // would hand the adapter a fresh-looking clock on reload
+            if !self.registry.contains(&task) && !self.policy.tracked.is_evicted(&task) {
                 self.policy.forget(&task);
             }
         }
@@ -1076,6 +1124,12 @@ impl RefreshRunner {
 
     fn refresh_one(&mut self, task: &str, now: Instant) -> Result<Option<RefreshEvent>> {
         let Some((current, seen_version)) = self.registry.snapshot(task) else {
+            // evicted between the due check and here: keep the watch
+            // (and its drift anchor) — the capacity tier will page the
+            // adapter back in at the same version
+            if self.policy.tracked.is_evicted(task) {
+                return Ok(None);
+            }
             // undeployed mid-flight: stop watching it
             self.policy.forget(task);
             return Ok(None);

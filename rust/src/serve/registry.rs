@@ -6,6 +6,14 @@
 //! must never cost a copy of the adapter, let alone the base model).
 //! A redeploy installs a fresh `Arc` + bumped version; batches already
 //! in flight finish on the snapshot they grabbed.
+//!
+//! Residency: with a `serve::cache` capacity tier attached, an entry in
+//! the registry means "resident on the DPUs" — eviction removes the
+//! entry (readers miss) while the underlying [`AdapterRegistry`] retains
+//! the task's version counter, and [`SharedRegistry::restore`] pages the
+//! same bytes back in at the same version. A deploy hook lets the cache
+//! observe every successful deployment (manual or refresh CAS) without
+//! polling, so its host-side backing copies never go stale.
 
 use std::sync::{Arc, RwLock};
 
@@ -14,33 +22,96 @@ use anyhow::{anyhow, Result};
 use crate::model::lora::AdapterRegistry;
 use crate::model::params::ParamStore;
 
+/// Observer invoked after every successful deploy (task, params, new
+/// version). Called OUTSIDE the registry lock: the hook may re-enter the
+/// registry (e.g. to evict over-capacity tasks) without deadlocking.
+pub type DeployHook = Arc<dyn Fn(&str, &Arc<ParamStore>, u64) + Send + Sync>;
+
+#[derive(Default)]
+struct Inner {
+    adapters: RwLock<AdapterRegistry>,
+    hook: RwLock<Option<DeployHook>>,
+}
+
 #[derive(Clone, Default)]
-pub struct SharedRegistry(Arc<RwLock<AdapterRegistry>>);
+pub struct SharedRegistry(Arc<Inner>);
 
 impl SharedRegistry {
     pub fn new() -> SharedRegistry {
-        SharedRegistry(Arc::new(RwLock::new(AdapterRegistry::new())))
+        SharedRegistry::default()
+    }
+
+    fn notify(&self, task: &str, version: u64) {
+        let hook = self.0.hook.read().unwrap().clone();
+        if let Some(hook) = hook {
+            if let Some((params, v)) = self.snapshot(task) {
+                // Only report the deployment we made; if a concurrent
+                // deploy already replaced it the hook fires again for
+                // that one with the newer version.
+                if v == version {
+                    hook(task, &params, version);
+                }
+            }
+        }
+    }
+
+    /// Register the single deploy observer (the adapter cache). Replaces
+    /// any previous hook.
+    pub fn set_deploy_hook(&self, hook: DeployHook) {
+        *self.0.hook.write().unwrap() = Some(hook);
     }
 
     /// Hot-swap deployment: O(adapter size) once, never touches the base
     /// model (the paper's on-chip task-switching claim). Returns the new
     /// monotone version.
     pub fn deploy(&self, task: &str, params: ParamStore) -> u64 {
-        self.0.write().unwrap().deploy(task, params)
+        let version = self.0.adapters.write().unwrap().deploy(task, params);
+        self.notify(task, version);
+        version
     }
 
     /// Compare-and-swap deploy: install only if the live version is
     /// still `expected` (0 = not deployed). Returns the new monotone
     /// version, or `None` when a concurrent deploy won — used by the
     /// drift-refresh worker so a refit computed against a stale adapter
-    /// never clobbers a newer manual deployment.
+    /// never clobbers a newer manual deployment. An EVICTED task always
+    /// loses (see [`AdapterRegistry::deploy_if_version`]): refresh must
+    /// never resurrect an adapter behind the capacity tier's back.
     pub fn deploy_if_version(
         &self,
         task: &str,
         params: ParamStore,
         expected: u64,
     ) -> Option<u64> {
-        self.0.write().unwrap().deploy_if_version(task, params, expected)
+        let version = self
+            .0
+            .adapters
+            .write()
+            .unwrap()
+            .deploy_if_version(task, params, expected)?;
+        self.notify(task, version);
+        Some(version)
+    }
+
+    /// Page an adapter out (capacity eviction): the entry disappears for
+    /// readers, the version counter is retained. Returns the evicted
+    /// bytes + version for the cache's host-side backing store.
+    pub fn evict(&self, task: &str) -> Option<(Arc<ParamStore>, u64)> {
+        self.0.adapters.write().unwrap().evict(task)
+    }
+
+    /// Page a previously evicted adapter back in at its ORIGINAL version
+    /// (a reload is not a redeploy — the drift tracker relies on the
+    /// stable version to keep the task's drift anchor). Returns `false`
+    /// when a concurrent deploy won or the bytes are stale; does not
+    /// fire the deploy hook (the cache initiates restores itself).
+    pub fn restore(&self, task: &str, params: Arc<ParamStore>, version: u64) -> bool {
+        self.0.adapters.write().unwrap().restore(task, params, version)
+    }
+
+    /// Task was deployed at some point and is currently paged out.
+    pub fn is_evicted(&self, task: &str) -> bool {
+        self.0.adapters.read().unwrap().is_evicted(task)
     }
 
     /// O(pointer) snapshot of the current adapter set. One read path:
@@ -54,23 +125,23 @@ impl SharedRegistry {
     /// Adapter + version under ONE lock acquisition, so a concurrent
     /// redeploy can never pair an old adapter with a new version number.
     pub fn snapshot(&self, task: &str) -> Option<(Arc<ParamStore>, u64)> {
-        self.0.read().unwrap().snapshot(task)
+        self.0.adapters.read().unwrap().snapshot(task)
     }
 
     pub fn contains(&self, task: &str) -> bool {
-        self.0.read().unwrap().contains(task)
+        self.0.adapters.read().unwrap().contains(task)
     }
 
     pub fn version(&self, task: &str) -> Option<u64> {
-        self.0.read().unwrap().info(task).map(|i| i.version)
+        self.0.adapters.read().unwrap().info(task).map(|i| i.version)
     }
 
     pub fn tasks(&self) -> Vec<String> {
-        self.0.read().unwrap().tasks()
+        self.0.adapters.read().unwrap().tasks()
     }
 
     pub fn total_params(&self) -> usize {
-        self.0.read().unwrap().total_params()
+        self.0.adapters.read().unwrap().total_params()
     }
 }
 
@@ -115,6 +186,44 @@ mod tests {
         reg.deploy("t", p()); // concurrent manual redeploy -> v2
         assert_eq!(reg.deploy_if_version("t", p(), 1), None, "stale CAS must lose");
         assert_eq!(reg.deploy_if_version("t", p(), 2), Some(3));
+    }
+
+    #[test]
+    fn deploy_hook_observes_manual_and_cas_deploys_but_not_restores() {
+        use std::sync::Mutex;
+        let reg = SharedRegistry::new();
+        let p = || ParamStore::from_tensors(vec![Tensor::zeros("a", &[2])]);
+        let seen: Arc<Mutex<Vec<(String, u64)>>> = Arc::new(Mutex::new(Vec::new()));
+        let log = seen.clone();
+        reg.set_deploy_hook(Arc::new(move |task, _params, version| {
+            log.lock().unwrap().push((task.to_string(), version));
+        }));
+        reg.deploy("t", p());
+        assert_eq!(reg.deploy_if_version("t", p(), 1), Some(2));
+        assert_eq!(reg.deploy_if_version("t", p(), 1), None, "failed CAS is silent");
+        let (bytes, v) = reg.evict("t").unwrap();
+        assert!(reg.restore("t", bytes, v), "restore is cache-initiated: no hook");
+        assert_eq!(
+            seen.lock().unwrap().clone(),
+            vec![("t".to_string(), 1), ("t".to_string(), 2)]
+        );
+    }
+
+    #[test]
+    fn evict_restore_roundtrip_preserves_snapshot_identity() {
+        let reg = SharedRegistry::new();
+        reg.deploy("t", ParamStore::from_tensors(vec![Tensor::zeros("a", &[8])]));
+        let (before, v) = reg.snapshot("t").unwrap();
+        let (evicted, ev) = reg.evict("t").unwrap();
+        assert!(Arc::ptr_eq(&before, &evicted));
+        assert_eq!(v, ev);
+        assert!(reg.is_evicted("t"));
+        assert!(reg.snapshot("t").is_none(), "readers miss while paged out");
+        assert!(reg.restore("t", evicted, ev));
+        let (after, v2) = reg.snapshot("t").unwrap();
+        assert!(Arc::ptr_eq(&before, &after), "same bytes page back in");
+        assert_eq!(v2, v, "reload keeps the version — not a new deployment");
+        assert!(!reg.is_evicted("t"));
     }
 
     #[test]

@@ -306,9 +306,31 @@ impl ArrivalEstimator {
     }
 
     /// Estimated inter-arrival time in ns; +inf until two arrivals have
-    /// been seen (an unknown rate must not hold requests back).
+    /// been seen (the EWMA seeds from the FIRST observed gap). Callers
+    /// that need a usable number before that must apply their own
+    /// cold-start rule — see [`BatchScheduler::interarrival_ns`].
     fn interarrival_ns(&self) -> f64 {
         self.ewma_ns.unwrap_or(f64::INFINITY)
+    }
+}
+
+/// One task's arrival statistics, exported for predictive consumers
+/// (the `serve::cache` prefetcher). Only produced once the EWMA has a
+/// measured gap, so `predicted_next` is never built from the cold-start
+/// clamp.
+#[derive(Clone, Copy, Debug)]
+pub struct ArrivalRate {
+    /// Smoothed inter-arrival time (the EWMA the scheduler batches on).
+    pub interarrival: Duration,
+    /// Instant of the most recent observed arrival.
+    pub last: Instant,
+}
+
+impl ArrivalRate {
+    /// Predicted instant of the task's next request: one smoothed
+    /// inter-arrival after the last observed one.
+    pub fn predicted_next(&self) -> Instant {
+        self.last + self.interarrival
     }
 }
 
@@ -449,12 +471,49 @@ impl BatchScheduler {
         self.modeled_ns.len()
     }
 
-    /// Current inter-arrival estimate for a task (ns; +inf if unknown).
+    /// Current inter-arrival estimate for a task (ns).
+    ///
+    /// Cold-start rule: until a task has TWO observed arrivals there is
+    /// no gap to estimate and the raw EWMA reports +inf — which would
+    /// make every first fill decision degenerate (an infinitely patient
+    /// rate always yields the minimal fill). The scheduler therefore
+    /// clamps the UNKNOWN estimate to the batching deadline `max_wait`:
+    /// the most patient assumption the worker could act on anyway,
+    /// since no request is held past the deadline regardless of the
+    /// estimate. Known rates — including ones genuinely slower than the
+    /// deadline — pass through unclamped, and the second arrival seeds
+    /// the true EWMA from the first observed gap.
     pub fn interarrival_ns(&self, task: &str) -> f64 {
-        self.arrivals
+        let raw = self
+            .arrivals
             .get(task)
             .map(|a| a.interarrival_ns())
-            .unwrap_or(f64::INFINITY)
+            .unwrap_or(f64::INFINITY);
+        if raw.is_finite() {
+            raw
+        } else {
+            self.max_wait.as_nanos() as f64
+        }
+    }
+
+    /// Arrival statistics for every task with a MEASURED rate (≥ 2
+    /// observed arrivals), for the adapter-cache prefetcher: tasks
+    /// still under the cold-start clamp are omitted rather than
+    /// reported at a fabricated rate.
+    pub fn arrival_rates(&self) -> Vec<(String, ArrivalRate)> {
+        self.arrivals
+            .iter()
+            .filter_map(|(task, a)| {
+                let (last, ewma) = (a.last?, a.ewma_ns?);
+                Some((
+                    task.clone(),
+                    ArrivalRate {
+                        interarrival: Duration::from_nanos(ewma.max(0.0).round() as u64),
+                        last,
+                    },
+                ))
+            })
+            .collect()
     }
 
     /// Feed one observed arrival into the task's rate estimator.

@@ -1,0 +1,283 @@
+//! Conformance suite for the bounded adapter capacity tier
+//! (`serve::cache`), on the shared `tests/common/refresh_sim.rs`
+//! harness — ONE `VirtualClock` under a demand trace with many more
+//! tasks than DPU adapter memory, zero real-time sleeps. The
+//! [`refresh_sim::CacheSim`] drive asserts residency invariants after
+//! EVERY event, so "at every instant" pins are exact, not sampled.
+//!
+//! Pinned:
+//!
+//! * **Capacity bound.** Under a 64-task zipf trace with capacity 8,
+//!   the number of resident adapters never exceeds 8 at any instant —
+//!   and the bound is actually reached (the tier runs full, it does
+//!   not hide behind under-use).
+//! * **Pin stability.** A pinned task, once resident, is never chosen
+//!   for eviction — through an admission storm and a full demand trace.
+//! * **Typed cold shed.** When the bounded load queue fills, cold
+//!   requests shed with the typed, retryable
+//!   [`ServeError::AdapterCold`] — every trace request is accounted as
+//!   served or shed, never silently dropped.
+//! * **Refresh integration.** An evicted task is never refit (no refit
+//!   of a paged-out adapter), and a reload restores the SAME version so
+//!   the drift anchor survives: the modeled trigger instant is
+//!   unchanged across evict → reload, and a task whose substrate
+//!   drifted past tolerance while paged out refits immediately after
+//!   the reload.
+//! * **Prefetch wins.** On a periodic trace the arrival-EWMA
+//!   prefetcher strictly improves cold-start p99 (and hit rate) over
+//!   the same cache with prefetch disabled — the number the predictive
+//!   tier exists to cut.
+//!
+//! The release-only eviction-storm variant (128 tasks, 64k requests)
+//! re-checks the capacity and accounting invariants under sustained
+//! churn; `./ci.sh test-release` runs it.
+
+#[path = "common/refresh_sim.rs"]
+mod refresh_sim;
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use ahwa_lora::model::params::ParamStore;
+use ahwa_lora::pcm::PcmModel;
+use ahwa_lora::serve::registry::SharedRegistry;
+use ahwa_lora::serve::{
+    AdapterCache, CacheConfig, CacheLookup, Clock, DecayModel, FnRefitter, Metrics, Refit,
+    Refitter, ServeError, VirtualClock,
+};
+use refresh_sim::{adapter, analytic_runner, cache_sim, periodic_trace, zipf_trace};
+
+#[test]
+fn residency_never_exceeds_capacity_at_any_instant_under_a_64_task_trace() {
+    let mut sim = cache_sim(
+        64,
+        CacheConfig::new(8)
+            .load_latency(Duration::from_micros(200))
+            .prefetch(false),
+    );
+    let trace = zipf_trace(4096, 64, 7);
+    // the drive asserts resident <= capacity after EVERY poll/lookup
+    sim.drive(&trace, Duration::from_micros(250));
+
+    assert_eq!(sim.max_resident, 8, "the tier runs full, never over");
+    assert_eq!(sim.served + sim.shed, 4096, "every request accounted");
+    assert!(
+        sim.metrics.cache_evictions.load(Ordering::Relaxed) > 0,
+        "a 64-task trace over 8 slots must churn"
+    );
+    assert!(
+        sim.hit_rate() > 0.2,
+        "the zipf head stays near-resident, got hit rate {}",
+        sim.hit_rate()
+    );
+}
+
+#[test]
+fn pinned_tasks_survive_a_full_demand_trace() {
+    let mut sim = cache_sim(
+        16,
+        CacheConfig::new(4)
+            .pin("task00")
+            .pin("task01")
+            .load_latency(Duration::from_micros(100)),
+    );
+    assert!(sim.cache.is_resident("task00") && sim.cache.is_resident("task01"));
+    // the drive asserts pin residency after every event
+    sim.drive(&periodic_trace(512, 16), Duration::from_micros(200));
+    assert!(
+        sim.cache.is_resident("task00") && sim.cache.is_resident("task01"),
+        "pins outlive the churn"
+    );
+    assert!(sim.metrics.cache_evictions.load(Ordering::Relaxed) > 0);
+}
+
+#[test]
+fn cold_requests_past_the_load_queue_shed_typed_never_silently() {
+    // loads are 10 arrivals long and at most 2 may be in flight: the
+    // 12-task round-robin overruns the channel constantly
+    let mut sim = cache_sim(
+        12,
+        CacheConfig::new(2)
+            .load_queue(2)
+            .load_latency(Duration::from_millis(1))
+            .prefetch(false),
+    );
+    sim.drive(&periodic_trace(240, 12), Duration::from_micros(100));
+
+    assert!(sim.shed > 0, "the bounded queue did fill");
+    assert_eq!(sim.served + sim.shed, 240, "shed is accounted, not dropped");
+    assert_eq!(
+        sim.metrics.cache_shed.load(Ordering::Relaxed),
+        sim.shed as u64,
+        "every shed moved the typed counter"
+    );
+
+    // the typed error the serving surface maps a Shed to: retryable
+    // (capacity pressure is transient), and distinct from UnknownTask
+    let shed = ServeError::AdapterCold {
+        task: "task03".to_string(),
+        loading: false,
+    };
+    assert!(shed.is_retryable());
+    assert!(shed.to_string().contains("load queue full"));
+    let loading = ServeError::AdapterCold {
+        task: "task03".to_string(),
+        loading: true,
+    };
+    assert!(loading.is_retryable());
+    assert!(loading.to_string().contains("paged out"));
+}
+
+#[test]
+fn refresh_never_refits_evicted_and_reload_keeps_the_drift_anchor() {
+    let clock = Arc::new(VirtualClock::new());
+    let registry = SharedRegistry::new();
+    let metrics = Arc::new(Metrics::default());
+
+    let tolerance = 0.05;
+    let trigger_in = Duration::from_millis(100);
+    let age = DecayModel::analytic(PcmModel::default()).trigger_age(tolerance);
+    let time_scale = age / trigger_in.as_secs_f64();
+    let refitter: Arc<dyn Refitter> = Arc::new(FnRefitter(
+        |_: &str, current: &ParamStore, _: &ParamStore, budget: usize| -> anyhow::Result<Refit> {
+            Ok(Refit {
+                params: adapter(current.tensors[0].data[0] + 1.0),
+                steps: budget,
+            })
+        },
+    ));
+    let mut runner = analytic_runner(&registry, refitter, tolerance, time_scale, metrics.clone())
+        .with_clock(clock.clone() as Arc<dyn Clock>);
+
+    let cache = AdapterCache::new(
+        CacheConfig::new(2)
+            .load_latency(Duration::from_millis(1))
+            .prefetch(false),
+        registry.clone(),
+        clock.clone() as Arc<dyn Clock>,
+        metrics.clone(),
+    );
+    for t in ["a", "b", "c"] {
+        registry.deploy(t, adapter(1.0));
+    }
+    runner.track_deployed(clock.now());
+    let handle = runner.policy().handle();
+    cache.set_refresh(handle.clone());
+    let anchor = handle.trigger_at("a").expect("tracked task has a trigger");
+
+    // capacity 2 over 3 tasks: draining the admission queue pages "a"
+    // (the LRU of the initial set) out, with the refresh handle attached
+    cache.poll(clock.now());
+    assert!(!cache.is_resident("a") && registry.is_evicted("a"));
+    assert!(handle.is_evicted("a"), "eviction reached the lifecycle");
+
+    // past the modeled trigger: b and c refit, the paged-out "a" does
+    // NOT (no refit of an adapter that is not on the DPUs) — and it
+    // accumulates no stale debt it cannot act on
+    clock.advance(trigger_in + Duration::from_millis(1));
+    let events = runner.tick(clock.now());
+    assert_eq!(events.len(), 2, "both resident tasks refit");
+    assert!(
+        events.iter().all(|e| e.task != "a"),
+        "evicted task was refit"
+    );
+    assert!(
+        !handle.is_stale("a", 1, clock.now()),
+        "evicted tasks carry no stale debt"
+    );
+
+    // demand reload: same bytes, SAME version — so the reconciler
+    // recognises the deployment and the drift anchor survives
+    let now = clock.now();
+    assert!(matches!(cache.lookup("a", now, 1), CacheLookup::Queued { .. }));
+    clock.advance(Duration::from_millis(1));
+    let landed = cache.poll(clock.now());
+    assert!(landed.contains(&"a".to_string()));
+    assert_eq!(registry.version("a"), Some(1), "reload is not a deploy");
+    assert!(!handle.is_evicted("a"));
+    assert_eq!(
+        handle.trigger_at("a"),
+        Some(anchor),
+        "evict → reload must not re-anchor the drift clock"
+    );
+
+    // the substrate drifted the whole time the adapter was paged out:
+    // back past its unchanged trigger, it refits on the next check
+    let events = runner.tick(clock.now());
+    assert_eq!(events.len(), 1, "exactly the reloaded task is due");
+    assert_eq!(events[0].task, "a");
+    assert_eq!(registry.version("a"), Some(2), "immediate catch-up refit");
+}
+
+#[test]
+fn prefetch_strictly_improves_cold_start_p99_over_lru_only() {
+    // 16 tasks on a strict 16 ms period over 8 slots: plain LRU evicts
+    // every adapter ~8 ms before its next use, so steady state is a
+    // 100% demand-miss thrash — while the EWMA predictor sees every
+    // arrival coming 2 ms out, far longer than the 200 µs upload
+    let base = || {
+        CacheConfig::new(8)
+            .load_latency(Duration::from_micros(200))
+            .prefetch_horizon(Duration::from_millis(2))
+    };
+    let trace = periodic_trace(8192, 16);
+    let ia = Duration::from_millis(1);
+
+    let mut off = cache_sim(16, base().prefetch(false));
+    off.drive(&trace, ia);
+    let mut on = cache_sim(16, base().prefetch(true));
+    on.drive(&trace, ia);
+
+    assert!(
+        off.cold_p99_ms() > 0.0,
+        "the baseline does thrash (cold p99 {})",
+        off.cold_p99_ms()
+    );
+    assert!(
+        on.cold_p99_ms() < off.cold_p99_ms(),
+        "prefetch must strictly improve cold-start p99: on {} vs off {}",
+        on.cold_p99_ms(),
+        off.cold_p99_ms()
+    );
+    assert!(
+        on.hit_rate() > off.hit_rate() + 0.5,
+        "predicted page-ins convert the thrash to hits: on {} vs off {}",
+        on.hit_rate(),
+        off.hit_rate()
+    );
+    assert!(
+        on.metrics.cache_prefetch_hits.load(Ordering::Relaxed) > 0,
+        "hits attribute to the prefetcher"
+    );
+    assert_eq!(on.served + on.shed, trace.len());
+    assert_eq!(off.served + off.shed, trace.len());
+}
+
+/// Release-only eviction storm: 128 tasks over 8 slots, 64k zipf
+/// requests — the capacity and accounting invariants under sustained
+/// churn (the per-event invariant asserts run 128k+ times). Debug
+/// builds skip it; `./ci.sh test-release` runs it.
+#[test]
+fn eviction_storm_holds_every_invariant() {
+    if cfg!(debug_assertions) {
+        return;
+    }
+    let mut sim = cache_sim(
+        128,
+        CacheConfig::new(8)
+            .load_latency(Duration::from_micros(100))
+            .prefetch(false),
+    );
+    let n = 65_536;
+    let trace = zipf_trace(n, 128, 11);
+    sim.drive(&trace, Duration::from_micros(150));
+
+    assert_eq!(sim.max_resident, 8);
+    assert_eq!(sim.served + sim.shed, n);
+    assert!(
+        sim.metrics.cache_evictions.load(Ordering::Relaxed) > 1_000,
+        "a storm, not a trickle: {} evictions",
+        sim.metrics.cache_evictions.load(Ordering::Relaxed)
+    );
+}

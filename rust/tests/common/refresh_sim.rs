@@ -3,10 +3,12 @@
 //! hot-swap machinery backs the single-worker coupling conformance
 //! suite (`tests/refresh_sched_e2e.rs`), the cross-worker coordination
 //! suite (`tests/coord_conformance.rs`), the stale-request bench
-//! (`benches/serving_refresh_sched.rs`), and the runner spin-up of the
-//! stress suite (`tests/refresh_stress.rs`) — so the coupling and
-//! coordination contracts are single-sourced and cannot silently
-//! diverge between suites.
+//! (`benches/serving_refresh_sched.rs`), the runner spin-up of the
+//! stress suite (`tests/refresh_stress.rs`), and the capacity-tier
+//! suite and bench (`tests/cache_conformance.rs`,
+//! `benches/serving_cache.rs`) — so the coupling, coordination, and
+//! residency contracts are single-sourced and cannot silently diverge
+//! between suites.
 //!
 //! [`SimPool`] mirrors the real pool's worker loop, N workers wide, on
 //! ONE shared `VirtualClock`: arrivals feed each worker's rate
@@ -32,10 +34,12 @@ use ahwa_lora::pcm::PcmModel;
 use ahwa_lora::serve::batcher::Batcher;
 use ahwa_lora::serve::registry::SharedRegistry;
 use ahwa_lora::serve::{
-    step_gate, BatchScheduler, Clock, CoordConfig, DecayModel, Decision, FnRefitter, Metrics,
-    Refit, Refitter, RefreshConfig, RefreshCoordinator, RefreshCoupling, RefreshHandle,
-    RefreshRunner, SchedConfig, StepEngine, StepGate, VirtualClock,
+    step_gate, AdapterCache, BatchScheduler, CacheConfig, CacheLookup, Clock, CoordConfig,
+    DecayModel, Decision, FnRefitter, Metrics, Refit, Refitter, RefreshConfig, RefreshCoordinator,
+    RefreshCoupling, RefreshHandle, RefreshRunner, SchedConfig, StepEngine, StepGate, VirtualClock,
 };
+use ahwa_lora::util::rng::Pcg64;
+use ahwa_lora::util::stats;
 
 pub const MAX_BATCH: usize = 8;
 
@@ -1159,5 +1163,196 @@ pub fn drive_decode(
         }
         guard += 1;
         assert!(guard < 4_000_000, "decode trace must terminate");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bounded adapter-cache sim (cache_conformance + serving_cache)
+// ---------------------------------------------------------------------------
+
+/// Deterministic zipf-ish demand trace over `n_tasks` task indices:
+/// task rank `r` is drawn with weight `1/(r+1)`, so a hot head stays
+/// near-resident while a long tail of cold tasks forces churn — the
+/// many-more-tasks-than-DPU-memory regime the capacity tier exists
+/// for. PCG-seeded, so suite and bench replay the identical trace.
+pub fn zipf_trace(n_requests: usize, n_tasks: usize, seed: u64) -> Vec<usize> {
+    assert!(n_tasks > 0);
+    let weights: Vec<f64> = (0..n_tasks).map(|r| 1.0 / (r + 1) as f64).collect();
+    let total: f64 = weights.iter().sum();
+    let mut rng = Pcg64::new(seed);
+    (0..n_requests)
+        .map(|_| {
+            let x = (rng.next_u64() >> 11) as f64 / (1u64 << 53) as f64 * total;
+            let mut acc = 0.0;
+            for (i, w) in weights.iter().enumerate() {
+                acc += w;
+                if x < acc {
+                    return i;
+                }
+            }
+            n_tasks - 1
+        })
+        .collect()
+}
+
+/// Strictly periodic round-robin trace: request `i` targets task
+/// `i % n_tasks`, so every task arrives on a fixed period — the
+/// pattern the arrival-EWMA prefetcher predicts perfectly, and the
+/// worst case for plain LRU when `n_tasks` exceeds capacity (every
+/// demand arrival finds its adapter just evicted).
+pub fn periodic_trace(n_requests: usize, n_tasks: usize) -> Vec<usize> {
+    (0..n_requests).map(|i| i % n_tasks).collect()
+}
+
+/// One worker's demand stream against the capacity tier on the virtual
+/// clock: each drive step advances the clock by one inter-arrival,
+/// completes due loads ([`AdapterCache::poll`]), runs the predictive
+/// prefetcher off the scheduler's arrival EWMAs (a no-op when the
+/// config disables it), then issues one demand lookup — exactly the
+/// worker-loop order in `serve::pool`. Residency invariants (capacity
+/// bound, pin stability) are asserted after EVERY event, so "at every
+/// instant" claims are exact on the virtual clock, not sampled.
+pub struct CacheSim {
+    pub clock: Arc<VirtualClock>,
+    pub registry: SharedRegistry,
+    pub cache: Arc<AdapterCache>,
+    pub metrics: Arc<Metrics>,
+    sched: BatchScheduler,
+    pub tasks: Vec<String>,
+    /// Most adapters simultaneously resident, observed at every event.
+    pub max_resident: usize,
+    /// Pinned tasks seen resident at least once — they must stay
+    /// resident forever after (checked at every event).
+    landed_pins: Vec<String>,
+    /// Per-SERVED-request cold penalty, ns (0 = immediate hit; a cold
+    /// request waits out its load's `ready_at`).
+    pub cold_ns: Vec<f64>,
+    pub served: usize,
+    /// Requests shed by the bounded load queue (typed `Shed` outcome;
+    /// every one is accounted — `served + shed == trace length`).
+    pub shed: usize,
+}
+
+/// `n_tasks` deployed tasks over the capacity tier `cfg` describes, on
+/// a fresh shared [`VirtualClock`]. Task `i` is named `task{i:02}`.
+pub fn cache_sim(n_tasks: usize, cfg: CacheConfig) -> CacheSim {
+    let clock = Arc::new(VirtualClock::new());
+    let registry = SharedRegistry::new();
+    let metrics = Arc::new(Metrics::default());
+    let cache = AdapterCache::new(
+        cfg,
+        registry.clone(),
+        clock.clone() as Arc<dyn Clock>,
+        metrics.clone(),
+    );
+    let tasks: Vec<String> = (0..n_tasks).map(|i| format!("task{i:02}")).collect();
+    for t in &tasks {
+        registry.deploy(t, adapter(1.0));
+    }
+    // drain the admission queue (and evict down to capacity) before the
+    // trace starts, so warmup state is deterministic
+    cache.poll(clock.now());
+    CacheSim {
+        clock,
+        registry,
+        cache,
+        metrics,
+        sched: BatchScheduler::new(
+            SchedConfig::for_layer(128, 128, 8).seq(320),
+            MAX_BATCH,
+            Duration::from_millis(5),
+        ),
+        tasks,
+        max_resident: 0,
+        landed_pins: Vec::new(),
+        cold_ns: Vec::new(),
+        served: 0,
+        shed: 0,
+    }
+}
+
+impl CacheSim {
+    /// Residency invariants, asserted after every event: the capacity
+    /// bound holds at this instant, and no pinned task that ever became
+    /// resident has been evicted.
+    fn check_invariants(&mut self) {
+        let n = self.cache.resident_count();
+        assert!(
+            n <= self.cache.capacity(),
+            "resident {} exceeds capacity {}",
+            n,
+            self.cache.capacity()
+        );
+        self.max_resident = self.max_resident.max(n);
+        for t in &self.tasks {
+            if self.cache.is_pinned(t) && self.cache.is_resident(t) {
+                if !self.landed_pins.contains(t) {
+                    self.landed_pins.push(t.clone());
+                }
+            }
+        }
+        for t in &self.landed_pins {
+            assert!(
+                self.cache.is_resident(t),
+                "pinned task {t} was evicted after becoming resident"
+            );
+        }
+    }
+
+    /// Drive the demand trace, one request per `ia` of virtual time.
+    /// Cold requests are modeled as waiting out their load (`ready_at`
+    /// − now, the penalty log the suite and bench aggregate); shed
+    /// requests are counted, never silently dropped.
+    pub fn drive(&mut self, trace: &[usize], ia: Duration) {
+        for &idx in trace {
+            self.clock.advance(ia);
+            let now = self.clock.now();
+            self.cache.poll(now);
+            self.check_invariants();
+            self.cache.prefetch(now, &self.sched.arrival_rates());
+            let task = self.tasks[idx].clone();
+            self.sched.observe_arrival(&task, now);
+            match self.cache.lookup(&task, now, 1) {
+                CacheLookup::Hit => {
+                    self.served += 1;
+                    self.cold_ns.push(0.0);
+                }
+                CacheLookup::Loading { ready_at } | CacheLookup::Queued { ready_at } => {
+                    self.served += 1;
+                    self.cold_ns
+                        .push(ready_at.saturating_duration_since(now).as_nanos() as f64);
+                }
+                CacheLookup::Shed => self.shed += 1,
+                CacheLookup::Unknown => panic!("trace task {task} was deployed"),
+            }
+            self.check_invariants();
+        }
+        // land the tail: loads still in flight complete
+        let mut rounds = 0;
+        while self.cache.loading_count() > 0 {
+            self.clock.advance(ia.max(Duration::from_nanos(1)));
+            self.cache.poll(self.clock.now());
+            self.check_invariants();
+            rounds += 1;
+            assert!(rounds < 8192, "in-flight loads must land");
+        }
+    }
+
+    /// Fraction of served requests that hit a resident adapter.
+    pub fn hit_rate(&self) -> f64 {
+        if self.cold_ns.is_empty() {
+            return 0.0;
+        }
+        self.cold_ns.iter().filter(|&&x| x == 0.0).count() as f64 / self.cold_ns.len() as f64
+    }
+
+    /// p99 of the per-request cold penalty, ms — the number the
+    /// predictive prefetcher is judged on.
+    pub fn cold_p99_ms(&self) -> f64 {
+        stats::percentile(&self.cold_ns, 99.0) / 1e6
+    }
+
+    pub fn mean_cold_ms(&self) -> f64 {
+        stats::mean(&self.cold_ns) / 1e6
     }
 }

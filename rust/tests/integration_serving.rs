@@ -637,6 +637,119 @@ fn registry_versions_monotone_under_concurrent_deploy_and_snapshot() {
     assert_eq!(reg.version("t"), Some(800), "4 writers x 200 deploys, no version lost");
 }
 
+/// Hermetic pin of every evict / restore / CAS-deploy interleaving the
+/// capacity tier and the refresh worker can produce against one
+/// registry entry (single-threaded, each ordering spelled out).
+#[test]
+fn eviction_interleaved_with_cas_deploy_never_resurrects_paged_out_adapters() {
+    let reg = SharedRegistry::new();
+    reg.deploy("t", tagged_adapter(1.0));
+
+    // evict, then the refresh CAS computed against the evicted version:
+    // the refit must NOT land behind the capacity tier's back
+    let (bytes, v) = reg.evict("t").expect("deployed task evicts");
+    assert_eq!(v, 1);
+    assert!(reg.is_evicted("t") && !reg.contains("t"));
+    assert_eq!(reg.deploy_if_version("t", tagged_adapter(2.0), 1), None);
+    assert!(!reg.contains("t"), "a losing CAS must not resurrect the entry");
+
+    // restore at the SAME version, then the CAS applies monotone
+    assert!(reg.restore("t", bytes, v));
+    assert_eq!(reg.version("t"), Some(1), "a reload is not a redeploy");
+    assert_eq!(reg.deploy_if_version("t", tagged_adapter(2.0), 1), Some(2));
+
+    // evict → manual deploy → the stale restore must lose: the operator
+    // deployed newer bytes while the page-in was in flight
+    let (bytes, v) = reg.evict("t").expect("evicts at v2");
+    assert_eq!(v, 2);
+    assert_eq!(
+        reg.deploy("t", tagged_adapter(3.0)),
+        3,
+        "deploy resumes the retained counter monotone across the eviction"
+    );
+    assert!(
+        !reg.restore("t", bytes, v),
+        "restoring pre-eviction bytes over a newer deploy must fail"
+    );
+    assert_eq!(reg.version("t"), Some(3));
+    assert_eq!(reg.get("t").unwrap().tensors[0].data[0], 3.0);
+}
+
+/// Hermetic stress: a pager thread cycling evict → restore races a
+/// refresh-style snapshot → CAS thread. Pinned: versions stay monotone
+/// with intact (payload, version) pairing for every reader, a CAS never
+/// lands while the entry is paged out, and the final version equals
+/// 1 + the CAS wins (no version lost or double-issued).
+#[test]
+fn cas_deploys_racing_evict_restore_stay_monotone_and_never_land_evicted() {
+    let reg = SharedRegistry::new();
+    reg.deploy("t", tagged_adapter(1.0));
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let pager = {
+        let (reg, stop) = (reg.clone(), stop.clone());
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Acquire) {
+                if let Some((bytes, v)) = reg.evict("t") {
+                    std::thread::yield_now();
+                    assert!(
+                        reg.restore("t", bytes, v),
+                        "nothing can outbid a restore here: CAS loses while evicted"
+                    );
+                }
+                std::thread::yield_now();
+            }
+        })
+    };
+    let reader = {
+        let (reg, stop) = (reg.clone(), stop.clone());
+        std::thread::spawn(move || {
+            let mut last = 0u64;
+            while !stop.load(Ordering::Acquire) {
+                if let Some((adapter, version)) = reg.snapshot("t") {
+                    assert!(version >= last, "monotone across evict/restore churn");
+                    assert_eq!(
+                        adapter.tensors[0].data[0], version as f32,
+                        "torn (payload, version) pair under paging races"
+                    );
+                    last = version;
+                }
+                std::thread::yield_now();
+            }
+        })
+    };
+    // refresh-style writer: snapshot, then CAS against the seen version
+    // with a payload tagged for the version the win would produce
+    let mut wins = 0u64;
+    for _ in 0..2_000 {
+        if let Some((_, v)) = reg.snapshot("t") {
+            match reg.deploy_if_version("t", tagged_adapter((v + 1) as f32), v) {
+                Some(nv) => {
+                    assert_eq!(nv, v + 1, "CAS win bumps exactly once");
+                    wins += 1;
+                }
+                None => {
+                    // lost to an eviction between snapshot and CAS —
+                    // the entry must not have materialised from it
+                    if reg.is_evicted("t") {
+                        assert!(!reg.contains("t"));
+                    }
+                }
+            }
+        }
+        std::thread::yield_now();
+    }
+    stop.store(true, Ordering::Release);
+    pager.join().unwrap();
+    reader.join().unwrap();
+    assert_eq!(
+        reg.version("t"),
+        Some(1 + wins),
+        "every CAS win accounted, none lost to the paging churn"
+    );
+    assert!(reg.contains("t"), "the pager leaves the entry restored");
+}
+
 #[test]
 fn builder_rejects_unknown_variant_and_graph() {
     if !ready() {

@@ -16,7 +16,12 @@
 //!   deadline_factor ∈ [0, 1], post_swap_factor ≥ 1) and every
 //!   builder setter clamps arbitrary inputs back inside them — which
 //!   is what lets the pool coordinator feed *adaptive* window/hold
-//!   values through without ever producing a degenerate coupling.
+//!   values through without ever producing a degenerate coupling,
+//! * the arrival estimator's cold-start rule: with fewer than two
+//!   observed arrivals `interarrival_ns` clamps the unknown (+inf)
+//!   estimate to `max_wait` — an actionable fill, never degenerate
+//!   patience — while measured EWMAs pass through unclamped and only
+//!   measured tasks are exported to the cache prefetcher.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
@@ -265,5 +270,53 @@ fn refit_in_flight_saturates_pressure_and_keeps_deadlines_early() {
         assert!(fired.load(Ordering::Relaxed), "mid-refit assertions executed");
         // after the swap the pressure relaxes back to zero
         assert_eq!(s.drift_pressure("t", clock.now()), 0.0);
+    });
+}
+
+#[test]
+fn cold_start_estimates_clamp_to_max_wait_and_measured_rates_pass_through() {
+    check("cold-start-clamp", 64, |g| {
+        let max_wait = g.duration_in(Duration::from_micros(10), Duration::from_millis(50));
+        let mut s = sched_with(RefreshCoupling::default(), g.usize_in(1, 16), max_wait);
+        let clamp = max_wait.as_nanos() as f64;
+
+        // never-seen task: the raw EWMA is +inf — the scheduler must
+        // report the deadline clamp, not a degenerate infinite patience
+        assert_eq!(s.interarrival_ns("never"), clamp);
+
+        let clock = VirtualClock::new();
+        clock.advance(g.duration_in(Duration::ZERO, Duration::from_secs(60)));
+
+        // ONE observed arrival measures no gap: still the clamp, and
+        // the prefetch export omits the task rather than fabricating a
+        // rate from the clamp
+        s.observe_arrival("t", clock.now());
+        assert_eq!(s.interarrival_ns("t"), clamp);
+        assert!(
+            s.arrival_rates().iter().all(|(task, _)| task != "t"),
+            "no ArrivalRate before the EWMA has a measured gap"
+        );
+        let fill = s.target_fill(s.interarrival_ns("t"));
+        assert!(fill >= 1, "the clamped estimate yields an actionable fill");
+
+        // the SECOND arrival seeds the EWMA from the first observed gap:
+        // the measured rate passes through unclamped — including rates
+        // genuinely slower than the deadline
+        let gap = g.duration_in(Duration::from_micros(1), max_wait * 4);
+        clock.advance(gap);
+        s.observe_arrival("t", clock.now());
+        let est = s.interarrival_ns("t");
+        assert!(est.is_finite());
+        assert!(
+            (est - gap.as_nanos() as f64).abs() <= 1.0,
+            "EWMA seeds from the first gap: est {est} vs gap {:?}",
+            gap
+        );
+        let rates = s.arrival_rates();
+        let (_, rate) = rates
+            .iter()
+            .find(|(task, _)| task == "t")
+            .expect("measured task is exported to the prefetcher");
+        assert_eq!(rate.predicted_next(), rate.last + rate.interarrival);
     });
 }
