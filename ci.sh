@@ -2,8 +2,8 @@
 # Lint + test gate for the public API: run before every PR.
 #
 #   ./ci.sh                   # every stage, in order
-#   ./ci.sh --stage <name>    # one stage: fmt | clippy | test | test-release | doc
-#                             # (CI fans these out as separate jobs)
+#   ./ci.sh --stage <name>    # one stage: fmt | clippy | test | test-release |
+#                             # features | doc (CI fans these out as jobs)
 #   ./ci.sh --fix             # apply rustfmt instead of checking
 #
 # PJRT-backed integration tests self-skip when `artifacts/` has not
@@ -64,6 +64,7 @@ a failure here is in a HERMETIC suite (no engine, no wall clock):
   - pool-coordination conformance cargo test -q --test coord_conformance
   - decode conformance            cargo test -q --test decode_conformance
   - adapter-cache conformance     cargo test -q --test cache_conformance
+  - backend-HAL conformance       cargo test -q --test hal_conformance
   - scheduler property tests      cargo test -q --test sched_properties
   - PCM property tests            cargo test -q --test pcm_properties
   - pipeline golden values        cargo test -q --test pipeline_golden
@@ -100,6 +101,22 @@ stage_test_release() {
     endgroup
 }
 
+# feature matrix for the serve-API surface: the lean build
+# (--no-default-features) drops the digital-reference backend and must
+# keep compiling AND keep its hermetic tests green — downstream users
+# who disable default features get the PCM+PJRT-only HAL; all-features
+# is the forward guard for any future additive feature. The default
+# feature set is already covered by every other stage.
+stage_features() {
+    group "features: lean (--no-default-features)"
+    cargo build --no-default-features
+    cargo test -q --no-default-features
+    endgroup
+    group "features: all (--all-features)"
+    cargo build --all-features
+    endgroup
+}
+
 stage_doc() {
     group doc
     RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
@@ -112,9 +129,10 @@ run_stage() {
         clippy)       stage_clippy ;;
         test)         stage_test ;;
         test-release) stage_test_release ;;
+        features)     stage_features ;;
         doc)          stage_doc ;;
         *)
-            echo "ci.sh: unknown stage '$1' (fmt|clippy|test|test-release|doc)" >&2
+            echo "ci.sh: unknown stage '$1' (fmt|clippy|test|test-release|features|doc)" >&2
             exit 2
             ;;
     esac
@@ -125,15 +143,15 @@ case "${1:-}" in
         # apply rustfmt, then still run the rest of the gate (the
         # pre-stage script behaved this way too)
         cargo fmt --all
-        for s in clippy test test-release doc; do
+        for s in clippy test test-release features doc; do
             run_stage "$s"
         done
         ;;
     --stage)
-        run_stage "${2:?usage: ci.sh --stage <fmt|clippy|test|test-release|doc>}"
+        run_stage "${2:?usage: ci.sh --stage <fmt|clippy|test|test-release|features|doc>}"
         ;;
     "")
-        for s in fmt clippy test test-release doc; do
+        for s in fmt clippy test test-release features doc; do
             run_stage "$s"
         done
         ;;

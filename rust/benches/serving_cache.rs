@@ -92,4 +92,7 @@ fn main() {
         zon.hit_rate() + 0.05 >= zoff.hit_rate(),
         "prefetch must never materially hurt the zipf mix"
     );
+    if let Err(e) = b.write_json("serving_cache") {
+        eprintln!("could not write BENCH_serving_cache.json: {e}");
+    }
 }

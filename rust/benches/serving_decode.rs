@@ -96,4 +96,7 @@ fn main() {
         cont_span < stat_span,
         "same tokens in fuller steps must shorten the makespan"
     );
+    if let Err(e) = b.write_json("serving_decode") {
+        eprintln!("could not write BENCH_serving_decode.json: {e}");
+    }
 }

@@ -92,5 +92,8 @@ fn main() -> anyhow::Result<()> {
     );
     println!("{}", server.metrics_report());
     server.shutdown()?;
+    if let Err(e) = b.write_json("serving_sched") {
+        eprintln!("could not write BENCH_serving_sched.json: {e}");
+    }
     Ok(())
 }

@@ -80,12 +80,59 @@ pub fn best(points: &[BalancePoint]) -> BalancePoint {
         .expect("non-empty sweep")
 }
 
+/// Sweep, commit to the winning balance point, and tabulate the modeled
+/// steady-state latency of serving `b · seq_len` tokens at that point
+/// for every fill `b` in `1..=max_batch`.
+///
+/// This is the ONE cost table both serving-side consumers share:
+/// [`crate::serve::sched::BatchScheduler`] reads it on the batch-close
+/// hot path and [`crate::serve::hal::CostModel`] reads it for
+/// task→backend placement, so a backend's routing cost and its
+/// scheduler's close decisions can never disagree about the hardware
+/// model.
+pub fn latency_table(
+    m: usize,
+    n: usize,
+    r: usize,
+    t_int_ns: f64,
+    seq_len: usize,
+    max_batch: usize,
+    cluster: &SnitchCluster,
+    engine: &RedMulE,
+) -> (BalancePoint, Vec<f64>) {
+    let seq_len = seq_len.max(1);
+    let max_batch = max_batch.max(1);
+    let balance = best(&sweep(m, n, r, t_int_ns, seq_len, cluster, engine));
+    let w = LoraWorkload::new(m, n, r, balance.t);
+    let table = (1..=max_batch)
+        .map(|b| pipeline_latency(&w, t_int_ns, b * seq_len, cluster, engine).steady_ns)
+        .collect();
+    (balance, table)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn env() -> (SnitchCluster, RedMulE) {
         (SnitchCluster::default(), RedMulE::default())
+    }
+
+    #[test]
+    fn latency_table_matches_manual_sweep() {
+        let (c, e) = env();
+        let (b, table) = latency_table(128, 128, 8, 256.0, 320, 8, &c, &e);
+        assert_eq!(b.t, best(&sweep(128, 128, 8, 256.0, 320, &c, &e)).t);
+        assert_eq!(table.len(), 8);
+        let w = LoraWorkload::new(128, 128, 8, b.t);
+        for (i, &ns) in table.iter().enumerate() {
+            let want = pipeline_latency(&w, 256.0, (i + 1) * 320, &c, &e).steady_ns;
+            assert_eq!(ns, want, "fill {}", i + 1);
+        }
+        // latency grows with fill
+        for i in 1..table.len() {
+            assert!(table[i] > table[i - 1]);
+        }
     }
 
     /// The calibration anchor for the whole PMCA model: reproduce the

@@ -28,6 +28,7 @@
 //!   tasks are pinned to workers by a stable hash — per-worker batchers
 //!   keep the "batches never mix tasks" rule and minimise adapter swaps.
 
+use std::collections::BTreeMap;
 use std::fmt;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
@@ -40,6 +41,7 @@ use crate::util::stats;
 use super::cache::{AdapterCache, CacheConfig, CacheLookup};
 use super::coord::{CoordConfig, RefreshCoordinator};
 use super::decode::{GenConfig, Generation, TokenEvent};
+use super::hal::{drift_free, Backend, BackendProfile, PcmPjrt, Router};
 use super::pool::{self, GenRequest, Job, WorkRequest, WorkerHandle};
 use super::refresh::{spawn_refresh_worker, RefreshConfig, RefreshEvent, RefreshRunner};
 use super::registry::SharedRegistry;
@@ -88,25 +90,61 @@ pub enum ServeError {
     Lost,
 }
 
+/// Coarse classification of a [`ServeError`] — the ONE source of truth
+/// for how a client should react. Before this existed, `AdapterCold`,
+/// `Shed{streamed}`, and `Overloaded` each grew their own ad-hoc retry
+/// rule; now every variant maps to exactly one class
+/// ([`ServeError::class`]), and the full table is pinned by a unit test
+/// so a new variant cannot ship unclassified.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorClass {
+    /// Transient PRE-ADMISSION backpressure: no work started, retrying
+    /// is free ([`Client::submit_with_retry`] keys off this class).
+    Retryable,
+    /// This request cannot succeed as issued (bad shape/prompt/task) or
+    /// its work was irrecoverably lost mid-flight (`Shed`, `Batch`) —
+    /// a blind retry would be wrong, but the server is healthy.
+    NonRetryable,
+    /// The server or worker itself is unusable (init failure, shutdown,
+    /// a hard-killed worker): stop sending traffic here.
+    Fatal,
+}
+
 impl ServeError {
-    /// `true` for transient backpressure a client should retry.
-    ///
-    /// Exactly [`ServeError::Overloaded`] and [`ServeError::AdapterCold`]
-    /// — both PRE-ADMISSION bounces: no work started, retrying is free.
-    /// `Overloaded` means a worker's queue is full; `AdapterCold` means
-    /// the adapter is being paged back into the capacity tier (when
-    /// `loading`, a retry after the cache's load latency will usually
-    /// hit). Every decode-path error is deliberately excluded:
-    /// [`ServeError::Shed`] (and `Batch`/`Lost` arriving on a
-    /// [`GenTicket`]) means tokens may already have been streamed, and a
-    /// retry would silently replay the generation from token 0.
-    /// Streaming re-issue is the caller's decision, never the retry
-    /// helpers'.
+    /// Classify this error (see [`ErrorClass`]). Exhaustive by
+    /// construction — adding a `ServeError` variant forces a decision
+    /// here.
+    pub fn class(&self) -> ErrorClass {
+        match self {
+            // pre-admission bounces: no work started, retrying is free.
+            // `Overloaded` = worker queue full; `AdapterCold` = page-in
+            // in flight (retry after roughly the cache's load latency).
+            ServeError::Overloaded { .. } | ServeError::AdapterCold { .. } => {
+                ErrorClass::Retryable
+            }
+            // the request itself is malformed or names nothing servable
+            ServeError::BadShape { .. }
+            | ServeError::UnknownTask { .. }
+            | ServeError::BadPrompt { .. }
+            | ServeError::AdapterMissing { .. } => ErrorClass::NonRetryable,
+            // mid-flight losses: tokens/work may already have reached
+            // the client ([`ServeError::Shed`] counts them), so a blind
+            // replay would silently restart from token 0 — streaming
+            // re-issue is the caller's decision, never the retry
+            // helpers'
+            ServeError::Shed { .. } | ServeError::Batch { .. } => ErrorClass::NonRetryable,
+            // the serving process itself is in trouble
+            ServeError::WorkerInit { .. }
+            | ServeError::Init { .. }
+            | ServeError::ShuttingDown
+            | ServeError::Lost => ErrorClass::Fatal,
+        }
+    }
+
+    /// `true` exactly when [`ServeError::class`] is
+    /// [`ErrorClass::Retryable`].
     pub fn is_retryable(&self) -> bool {
-        matches!(
-            self,
-            ServeError::Overloaded { .. } | ServeError::AdapterCold { .. }
-        )
+        self.class() == ErrorClass::Retryable
     }
 }
 
@@ -735,6 +773,89 @@ pub fn aggregate<'a>(workers: impl IntoIterator<Item = &'a Metrics>) -> MetricsS
 }
 
 // ---------------------------------------------------------------------------
+// Build-time errors
+// ---------------------------------------------------------------------------
+
+/// Every way [`ServerBuilder::build`] can refuse to stand a pool up, as
+/// data. Before this existed every build failure collapsed into
+/// `ServeError::Init { detail }` and callers string-matched; now each
+/// misconfiguration is a variant, and the cross-config implications the
+/// builder enforces are spelled out where they are checked:
+///
+/// * **coupling requires refresh** — a
+///   [`SchedConfig::coupling`](super::sched::SchedConfig::coupling)
+///   policy reacts to refresh lifecycle state; without
+///   [`ServerBuilder::refresh`] there is no runner to couple to and the
+///   policy would be silently inert.
+/// * **coordination requires coupling** — the pool-level coordinator
+///   ([`ServerBuilder::coordination`]) staggers triggers and adapts
+///   window/hold FOR the coupled schedulers; without a coupled
+///   scheduler and a refresh runner its outputs have no consumer.
+/// * **each backend needs a worker** — heterogeneous routing partitions
+///   the worker pool across backends; an empty span would make a
+///   backend unroutable.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum BuildError {
+    /// Manifest load failed or the variant is unknown.
+    Manifest { detail: String },
+    /// The serving graph is missing or has no `[batch, seq]` data input.
+    Graph { graph: String, detail: String },
+    /// [`RefreshConfig::validate`] rejected the refresh knobs.
+    Refresh { detail: String },
+    /// `CacheConfig::validate` rejected the capacity-tier knobs.
+    Cache { detail: String },
+    /// A scheduler coupling policy was configured without
+    /// [`ServerBuilder::refresh`].
+    CouplingWithoutRefresh,
+    /// [`ServerBuilder::coordination`] without a coupled scheduler and
+    /// a refresh runner for it to coordinate.
+    CoordinationWithoutCoupling,
+    /// Backend registration is inconsistent (duplicate names, more
+    /// backends than workers, or a pin to an unregistered backend).
+    Backends { detail: String },
+    /// Spawning a worker or the refresh worker failed (OS thread error).
+    Spawn { what: String, detail: String },
+}
+
+impl fmt::Display for BuildError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BuildError::Manifest { detail } => write!(f, "manifest: {detail}"),
+            BuildError::Graph { graph, detail } => {
+                write!(f, "serving graph '{graph}': {detail}")
+            }
+            BuildError::Refresh { detail } => write!(f, "refresh config: {detail}"),
+            BuildError::Cache { detail } => write!(f, "adapter cache config: {detail}"),
+            BuildError::CouplingWithoutRefresh => write!(
+                f,
+                "scheduler coupling configured without .refresh(..): \
+                 there is no refresh runner to couple to"
+            ),
+            BuildError::CoordinationWithoutCoupling => write!(
+                f,
+                "(.coordination(..)) requires a scheduler with a coupling \
+                 policy AND .refresh(..): the coordinator staggers triggers \
+                 for coupled schedulers"
+            ),
+            BuildError::Backends { detail } => write!(f, "backends: {detail}"),
+            BuildError::Spawn { what, detail } => write!(f, "spawning {what}: {detail}"),
+        }
+    }
+}
+
+impl std::error::Error for BuildError {}
+
+/// Build failures remain representable as [`ServeError`] for callers
+/// that funnel every serving-layer error into one type.
+impl From<BuildError> for ServeError {
+    fn from(e: BuildError) -> ServeError {
+        ServeError::Init {
+            detail: e.to_string(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Builder
 // ---------------------------------------------------------------------------
 
@@ -755,11 +876,14 @@ pub struct ServerBuilder {
     coord: Option<CoordConfig>,
     no_coord: bool,
     cache: Option<CacheConfig>,
+    backends: Vec<Arc<dyn Backend>>,
+    pins: BTreeMap<String, usize>,
     clock: Arc<dyn Clock>,
 }
 
 impl fmt::Debug for ServerBuilder {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let backends: Vec<&str> = self.backends.iter().map(|b| b.name()).collect();
         f.debug_struct("ServerBuilder")
             .field("variant", &self.variant)
             .field("graph", &self.graph)
@@ -774,6 +898,8 @@ impl fmt::Debug for ServerBuilder {
             .field("coord", &self.coord)
             .field("no_coord", &self.no_coord)
             .field("cache", &self.cache)
+            .field("backends", &backends)
+            .field("pins", &self.pins)
             .finish_non_exhaustive()
     }
 }
@@ -796,6 +922,8 @@ impl ServerBuilder {
             coord: None,
             no_coord: false,
             cache: None,
+            backends: Vec::new(),
+            pins: BTreeMap::new(),
             clock: Arc::new(RealClock),
         }
     }
@@ -912,6 +1040,35 @@ impl ServerBuilder {
         self
     }
 
+    /// Register a hardware backend ([`super::hal::Backend`]). Repeat to
+    /// build a heterogeneous pool: workers are partitioned into one
+    /// contiguous span per backend (registration order; each backend
+    /// needs at least one worker) and tasks are routed to the backend
+    /// whose modeled service + tolerance-maintenance cost is lowest
+    /// ([`super::hal::Router`]), sticky on first use. With zero or one
+    /// registration the pool keeps the single-substrate fast path: no
+    /// router, tasks hash across ALL workers, bit-identical to the
+    /// pre-HAL pool (the implicit default backend is
+    /// [`super::hal::PcmPjrt`]).
+    ///
+    /// On a heterogeneous pool, [`Self::refresh`] and
+    /// [`Self::adapter_cache`] consume per-backend physics through the
+    /// trait: each routed task's drift model comes from its OWN backend
+    /// (drift-free backends never trigger a refit) and its page-in cost
+    /// is that backend's [`Backend::deploy_latency`].
+    pub fn backend(mut self, backend: Arc<dyn Backend>) -> Self {
+        self.backends.push(backend);
+        self
+    }
+
+    /// Pin `task` to the backend at registration index `idx`,
+    /// overriding the cost-model routing decision (validated against
+    /// the registered backends at [`Self::build`]).
+    pub fn pin_task(mut self, task: &str, idx: usize) -> Self {
+        self.pins.insert(task.to_string(), idx);
+        self
+    }
+
     /// Time source for enqueue stamps, deadline math, and latency
     /// metrics. Production keeps [`RealClock`]. Note the workers'
     /// *channel waits* are wall-clock either way — deterministic-clock
@@ -923,11 +1080,62 @@ impl ServerBuilder {
         self
     }
 
-    /// Load the manifest ONCE, validate variant + graph, and spawn the
-    /// worker pool (each worker re-uses the parsed manifest for its
-    /// engine — no duplicate manifest loads).
-    pub fn build(self, meta: ParamStore, registry: SharedRegistry) -> ServeResult<Server> {
-        let init = |e: anyhow::Error| ServeError::Init { detail: format!("{e:#}") };
+    /// Load the manifest ONCE, validate variant + graph + cross-config
+    /// implications (see [`BuildError`]), and spawn the worker pool
+    /// (each worker re-uses the parsed manifest for its engine — no
+    /// duplicate manifest loads).
+    pub fn build(
+        self,
+        meta: ParamStore,
+        registry: SharedRegistry,
+    ) -> std::result::Result<Server, BuildError> {
+        // cross-config implications first: they are pure configuration
+        // mistakes and should fail before any I/O happens
+        if matches!(&self.sched, Some(s) if s.coupling.is_some()) && self.refresh.is_none() {
+            return Err(BuildError::CouplingWithoutRefresh);
+        }
+        if self.coord.is_some()
+            && (self.refresh.is_none() || !matches!(&self.sched, Some(s) if s.coupling.is_some()))
+        {
+            return Err(BuildError::CoordinationWithoutCoupling);
+        }
+
+        // hardware backends: zero registrations = the implicit PCM+PJRT
+        // default, the substrate every pre-HAL pool ran on
+        let backends: Vec<Arc<dyn Backend>> = if self.backends.is_empty() {
+            vec![Arc::new(PcmPjrt::default())]
+        } else {
+            self.backends.clone()
+        };
+        let n_backends = backends.len();
+        if n_backends > self.workers {
+            return Err(BuildError::Backends {
+                detail: format!(
+                    "{n_backends} backends but only {} workers \
+                     (each backend needs at least one worker)",
+                    self.workers
+                ),
+            });
+        }
+        for (i, b) in backends.iter().enumerate() {
+            if backends[..i].iter().any(|o| o.name() == b.name()) {
+                return Err(BuildError::Backends {
+                    detail: format!("duplicate backend name '{}'", b.name()),
+                });
+            }
+        }
+        for (task, &idx) in &self.pins {
+            if idx >= n_backends {
+                return Err(BuildError::Backends {
+                    detail: format!(
+                        "task '{task}' pinned to backend {idx}, \
+                         but only {n_backends} registered"
+                    ),
+                });
+            }
+        }
+
+        let init = |e: anyhow::Error| BuildError::Manifest { detail: format!("{e:#}") };
         let manifest = match self.manifest {
             Some(m) => m,
             None => crate::config::manifest::Manifest::load(
@@ -945,13 +1153,17 @@ impl ServerBuilder {
         // re-segment differently
         let seq = manifest
             .graph(&graph_key)
-            .map_err(init)?
+            .map_err(|e| BuildError::Graph {
+                graph: graph_key.clone(),
+                detail: format!("{e:#}"),
+            })?
             .inputs_with_role(crate::config::manifest::Role::Data)
             .next()
             .filter(|io| io.shape.len() == 2)
             .map(|io| io.shape[1])
-            .ok_or_else(|| ServeError::Init {
-                detail: format!("graph '{graph_key}' has no [batch, seq] data input"),
+            .ok_or_else(|| BuildError::Graph {
+                graph: graph_key.clone(),
+                detail: "no [batch, seq] data input".to_string(),
             })?;
 
         // the scheduler models whole request sequences: resolve the
@@ -963,6 +1175,54 @@ impl ServerBuilder {
             s
         });
 
+        // one contiguous worker span per backend, registration order;
+        // the remainder pads the front spans so every span is non-empty
+        let base = self.workers / n_backends;
+        let rem = self.workers % n_backends;
+        let mut ranges = Vec::with_capacity(n_backends);
+        let mut start = 0;
+        for i in 0..n_backends {
+            let len = base + usize::from(i < rem);
+            ranges.push((start, start + len));
+            start += len;
+        }
+
+        // heterogeneous pools route through cost models; a
+        // single-backend pool has NO router and keeps the pre-HAL
+        // task→worker hash across all workers, bit for bit
+        let router = if n_backends > 1 {
+            let layer = sched.unwrap_or_else(|| {
+                let mut l = SchedConfig::for_layer(128, 128, 8);
+                l.seq_len = seq;
+                l
+            });
+            let profiles = backends
+                .iter()
+                .map(|b| BackendProfile::of(b.as_ref(), &layer, self.max_batch))
+                .collect();
+            let (tolerance, tolerances) = match &self.refresh {
+                Some(r) => (r.tolerance, r.task_tolerances().clone()),
+                None => (1.0, BTreeMap::new()),
+            };
+            let router = Arc::new(Router::new(
+                profiles,
+                ranges.clone(),
+                tolerance,
+                tolerances,
+                self.pins.clone(),
+                self.clock.clone(),
+            ));
+            // place everything already deployed NOW (cold tasks route on
+            // saturation cost) so refresh and cache can take per-task
+            // parameters from the owning backend below
+            for task in registry.tasks() {
+                router.backend_of(&task);
+            }
+            Some(router)
+        } else {
+            None
+        };
+
         // the read-only base model is shared, not copied, across workers
         let meta = Arc::new(meta);
 
@@ -972,10 +1232,19 @@ impl ServerBuilder {
         // its drift clock now, later deploys reset it through the
         // version race guard (`SharedRegistry::deploy_if_version`)
         let refresh_state = match self.refresh {
-            Some(rcfg) => {
+            Some(mut rcfg) => {
+                // heterogeneous pools: each routed task drifts — and
+                // refits — on ITS backend's physics; a backend with no
+                // drift model (digital reference) never triggers
+                if let Some(rt) = &router {
+                    for (task, b) in rt.assignments() {
+                        let decay = backends[b].drift_model().unwrap_or_else(drift_free);
+                        rcfg = rcfg.task_decay(&task, decay);
+                    }
+                }
                 // a tolerance at or below the decay model's age-0 floor
                 // would refit on every tick, forever
-                rcfg.validate().map_err(|detail| ServeError::Init { detail })?;
+                rcfg.validate().map_err(|detail| BuildError::Refresh { detail })?;
                 let check_every = rcfg.check_every;
                 let metrics = Arc::new(Metrics::default());
                 let mut runner =
@@ -1008,8 +1277,14 @@ impl ServerBuilder {
         // Creation adopts everything already deployed, evicting down to
         // capacity immediately.
         let cache = match self.cache {
-            Some(ccfg) => {
-                ccfg.validate().map_err(|detail| ServeError::Init { detail })?;
+            Some(mut ccfg) => {
+                // a page-in costs what the OWNING backend's deploy costs
+                if let Some(rt) = &router {
+                    for (task, b) in rt.assignments() {
+                        ccfg = ccfg.task_load_latency(&task, backends[b].deploy_latency());
+                    }
+                }
+                ccfg.validate().map_err(|detail| BuildError::Cache { detail })?;
                 let metrics = Arc::new(Metrics::default());
                 let cache =
                     AdapterCache::new(ccfg, registry.clone(), self.clock.clone(), metrics);
@@ -1026,6 +1301,11 @@ impl ServerBuilder {
         let mut worker_metrics = Vec::with_capacity(self.workers);
         let mut joins = Vec::with_capacity(self.workers);
         for w in 0..self.workers {
+            let owner = ranges
+                .iter()
+                .position(|&(s, e)| (s..e).contains(&w))
+                .expect("worker ranges cover the pool");
+            let backend = backends[owner].clone();
             let cfg = pool::WorkerConfig {
                 worker: w,
                 graph_key: graph_key.clone(),
@@ -1034,10 +1314,14 @@ impl ServerBuilder {
                 max_wait: self.max_wait,
                 hw: self.hw,
                 fail_every: self.fail_every,
-                sched,
+                // the backend re-shapes the scheduler's hardware model
+                // (e.g. the digital reference's integration-time
+                // slowdown); identity for PcmPjrt
+                sched: sched.map(|s| backend.adapt_sched(s)),
                 refresh: lifecycle.clone(),
                 cache: cache.clone(),
                 clock: self.clock.clone(),
+                backend,
             };
             let (handle, join) = pool::spawn_worker(
                 cfg,
@@ -1046,8 +1330,9 @@ impl ServerBuilder {
                 registry.clone(),
                 self.queue_depth,
             )
-            .map_err(|e| ServeError::Init {
-                detail: format!("spawning worker {w}: {e}"),
+            .map_err(|e| BuildError::Spawn {
+                what: format!("worker {w}"),
+                detail: e.to_string(),
             })?;
             worker_metrics.push(handle.metrics.clone());
             shards.push(handle);
@@ -1060,6 +1345,7 @@ impl ServerBuilder {
             accepting,
             registry: registry.clone(),
             cache: cache.clone(),
+            router,
             seq,
         };
 
@@ -1068,8 +1354,9 @@ impl ServerBuilder {
                 let runner = Arc::new(Mutex::new(runner));
                 let (stop, join) =
                     spawn_refresh_worker(runner.clone(), self.clock.clone(), check_every)
-                        .map_err(|e| ServeError::Init {
-                            detail: format!("spawning refresh worker: {e}"),
+                        .map_err(|e| BuildError::Spawn {
+                            what: "refresh worker".to_string(),
+                            detail: e.to_string(),
                         })?;
                 Some(RefreshState {
                     runner,
@@ -1110,6 +1397,10 @@ pub struct Client {
     /// [`ServeError::AdapterCold`] (and queues the page-in) instead of
     /// [`ServeError::UnknownTask`].
     cache: Option<Arc<AdapterCache>>,
+    /// Heterogeneous pools route task → backend → worker span through
+    /// the HAL cost models; `None` = single backend, hash across all
+    /// workers (the pre-HAL path, unchanged).
+    router: Option<Arc<Router>>,
     /// Sequence length the serving graph expects.
     pub seq: usize,
 }
@@ -1150,10 +1441,17 @@ impl Client {
         })
     }
 
-    /// Stable task → worker pinning (FNV-1a). Keeping one task on one
-    /// worker preserves per-task batching and minimises adapter swaps.
+    /// Stable task → worker pinning. Single-backend pools hash across
+    /// all workers (FNV-1a); heterogeneous pools first route the task
+    /// to its cost-minimising backend ([`super::hal::Router`], sticky
+    /// on first use), then hash across that backend's worker span.
+    /// Either way one task stays on one worker, which preserves
+    /// per-task batching and minimises adapter swaps.
     pub fn shard_for(&self, task: &str) -> usize {
-        (fnv1a(task) % self.shards.len() as u64) as usize
+        match &self.router {
+            Some(r) => r.worker_for(task),
+            None => (fnv1a(task) % self.shards.len() as u64) as usize,
+        }
     }
 
     /// Submit one request. Fails fast with a typed error; on success
@@ -1321,7 +1619,7 @@ impl Client {
     }
 }
 
-fn fnv1a(s: &str) -> u64 {
+pub(crate) fn fnv1a(s: &str) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     for b in s.as_bytes() {
         h ^= *b as u64;
@@ -1382,6 +1680,22 @@ impl Server {
     /// The capacity tier, when one was configured.
     pub fn cache(&self) -> Option<&Arc<AdapterCache>> {
         self.cache.as_ref()
+    }
+
+    /// The heterogeneous task→backend router, when more than one
+    /// backend was registered (`None` = single-substrate pool).
+    pub fn router(&self) -> Option<&Arc<Router>> {
+        self.client.router.as_ref()
+    }
+
+    /// Sticky task → backend-index assignments made so far; empty for a
+    /// single-backend pool (which routes by hash, not by cost model).
+    pub fn routing(&self) -> Vec<(String, usize)> {
+        self.client
+            .router
+            .as_ref()
+            .map(|r| r.assignments())
+            .unwrap_or_default()
     }
 
     /// Pool-level aggregate (includes the refresh worker's and the
@@ -1541,6 +1855,58 @@ mod tests {
         reg
     }
 
+    /// The FULL variant → class table, pinned. Adding a `ServeError`
+    /// variant without deciding its class fails `class()`'s exhaustive
+    /// match; changing a decision fails here.
+    #[test]
+    fn error_class_table_is_pinned() {
+        use ErrorClass::*;
+        let table: [(ServeError, ErrorClass); 12] = [
+            (ServeError::BadShape { got: 1, want: 2 }, NonRetryable),
+            (
+                ServeError::UnknownTask { task: "t".into(), known: vec![] },
+                NonRetryable,
+            ),
+            (ServeError::BadPrompt { got: 0, max: 3 }, NonRetryable),
+            (ServeError::Overloaded { worker: 0, depth: 1 }, Retryable),
+            (
+                ServeError::AdapterCold { task: "t".into(), loading: true },
+                Retryable,
+            ),
+            (
+                ServeError::AdapterCold { task: "t".into(), loading: false },
+                Retryable,
+            ),
+            (ServeError::Shed { task: "t".into(), streamed: 3 }, NonRetryable),
+            (ServeError::AdapterMissing { task: "t".into() }, NonRetryable),
+            (
+                ServeError::Batch { task: "t".into(), detail: "x".into() },
+                NonRetryable,
+            ),
+            (
+                ServeError::WorkerInit { worker: 0, detail: "x".into() },
+                Fatal,
+            ),
+            (ServeError::Init { detail: "x".into() }, Fatal),
+            (ServeError::ShuttingDown, Fatal),
+        ];
+        for (err, class) in table {
+            assert_eq!(err.class(), class, "{err:?}");
+            assert_eq!(err.is_retryable(), class == Retryable, "{err:?}");
+        }
+        assert_eq!(ServeError::Lost.class(), Fatal);
+    }
+
+    #[test]
+    fn build_errors_display_and_convert() {
+        let e = BuildError::CouplingWithoutRefresh;
+        assert!(e.to_string().contains("refresh"));
+        let as_serve: ServeError = e.into();
+        assert!(matches!(as_serve, ServeError::Init { .. }));
+        let e = BuildError::Backends { detail: "duplicate backend name 'x'".into() };
+        assert!(e.to_string().contains("duplicate"));
+    }
+
     /// Client over hand-built worker handles; returns the raw job
     /// receivers so tests can play the worker role.
     fn mock_client(
@@ -1567,6 +1933,7 @@ mod tests {
             accepting: Arc::new(AtomicBool::new(true)),
             registry,
             cache: None,
+            router: None,
             seq,
         };
         (client, rxs)

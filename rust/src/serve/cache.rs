@@ -77,6 +77,11 @@ pub struct CacheConfig {
     pinned: BTreeSet<String>,
     load_queue: usize,
     load_latency: Duration,
+    /// Per-task upload-latency overrides. Heterogeneous pools
+    /// ([`ServerBuilder::backend`](super::api::ServerBuilder::backend))
+    /// install each routed task's own backend deploy cost here, so a
+    /// page-in is charged what THAT substrate's programming takes.
+    per_task_load_latency: BTreeMap<String, Duration>,
     prefetch: bool,
     prefetch_horizon: Option<Duration>,
 }
@@ -89,6 +94,7 @@ impl Default for CacheConfig {
             load_queue: 16,
             // modeled DPU upload of one 1.6M-param adapter set
             load_latency: Duration::from_micros(500),
+            per_task_load_latency: BTreeMap::new(),
             prefetch: true,
             prefetch_horizon: None,
         }
@@ -125,6 +131,21 @@ impl CacheConfig {
     pub fn load_latency(mut self, d: Duration) -> Self {
         self.load_latency = d;
         self
+    }
+
+    /// Override the upload latency for one task (its backend's deploy
+    /// cost; see the `per_task_load_latency` field docs).
+    pub fn task_load_latency(mut self, task: &str, d: Duration) -> Self {
+        self.per_task_load_latency.insert(task.to_string(), d);
+        self
+    }
+
+    /// The upload latency charged for paging `task` in.
+    pub fn load_latency_for(&self, task: &str) -> Duration {
+        self.per_task_load_latency
+            .get(task)
+            .copied()
+            .unwrap_or(self.load_latency)
     }
 
     /// Enable/disable predictive prefetch from the scheduler's
@@ -566,7 +587,7 @@ impl AdapterCache {
             Some(r) if r > now => r,
             _ => now,
         };
-        let ready_at = begin + cfg.load_latency;
+        let ready_at = begin + cfg.load_latency_for(task);
         st.last_ready = Some(ready_at);
         st.loading.insert(task.to_string(), Load { ready_at, requested });
         ready_at

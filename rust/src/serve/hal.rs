@@ -1,0 +1,1175 @@
+//! Backend hardware-abstraction layer (HAL) behind the serving pool.
+//!
+//! The pool hard-wired one substrate: PCM tiles programmed with the
+//! meta-weights, a PJRT forward graph, the PCM drift statistics feeding
+//! [`super::refresh`], and the Fig. 4 pipeline-balance cost model
+//! feeding [`super::sched`]. [`Backend`] captures those four seams —
+//! **deploy**, **forward**, **drift model**, **cost model** — as one
+//! trait so a pool can mix substrates and place each task where its
+//! tolerance is cheapest to maintain.
+//!
+//! ```text
+//!             ┌───────────────── Backend ─────────────────┐
+//!             │ deploy      adapter → substrate (latency)  │
+//!             │ forward     batched execution (Forward)    │
+//!             │ drift_model DecayModel | None (drift-free) │
+//!             │ cost_model  CostModel  (balance table)     │
+//!             └────────────────────────────────────────────┘
+//!               ▲                                ▲
+//!     PcmPjrt (default: PCM drift +      DigitalRef (feature
+//!     PJRT graph, bit-identical to        "digital-ref": in-process,
+//!     the pre-HAL pool)                   drift-free, slowdown× cost)
+//! ```
+//!
+//! # Implementations
+//!
+//! * [`PcmPjrt`] — the existing path, verbatim: `runtime::Engine` +
+//!   PJRT forward, [`PcmModel`] drift. A single-backend pool built
+//!   through it is **bit-identical** to the pre-HAL pool (same engine
+//!   calls, same seeds, same scheduler table).
+//! * [`DigitalRef`] (feature `digital-ref`, on by default; disabled in
+//!   `--no-default-features` lean builds) — an in-process drift-free
+//!   digital reference. Its forward is a deterministic hash of
+//!   (tokens, adapter, seed), so it serves real traffic hermetically —
+//!   no artifacts, no XLA — which is what makes the HAL plumbing
+//!   testable end-to-end in CI. Its cost model is the same balance
+//!   table scaled by a configurable `slowdown` (digital MVMs instead
+//!   of analog tiles), and its maintenance cost is zero.
+//!
+//! # Routing
+//!
+//! A heterogeneous pool partitions its workers across backends and
+//! routes each task once, on first use ([`Router`]), by minimising
+//!
+//! ```text
+//! placement_cost = service + maintenance
+//!   service      = batch_ns(fill*) / fill*      (fill* = smallest
+//!                  sustainable fill at the task's arrival EWMA)
+//!   maintenance  = refit_ns · gap_secs / trigger_age(tolerance)
+//!                  (0 on a drift-free backend)
+//! ```
+//!
+//! i.e. the modeled per-request service latency plus the per-request
+//! share of keeping the task inside its drift tolerance on that
+//! substrate (refresh cadence × refit budget). Fast-drifting tight
+//! tolerances route to the cheap-refresh backend; relaxed tolerances
+//! stay on the fastest substrate. The service column reads the SAME
+//! [`crate::pipeline::balance::latency_table`] the per-backend
+//! [`super::sched::BatchScheduler`] batches on, so placement and
+//! batch-close decisions can never disagree about the hardware model.
+//!
+//! The pure decision functions ([`route_one`], [`route_tasks`]) are
+//! deterministic and side-effect free — `tests/hal_conformance.rs`
+//! property-tests them directly.
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+#[cfg(feature = "digital-ref")]
+use anyhow::anyhow;
+use anyhow::Result;
+
+#[cfg(feature = "digital-ref")]
+use crate::config::manifest::Role;
+use crate::config::manifest::Manifest;
+use crate::model::params::ParamStore;
+use crate::pcm::PcmModel;
+use crate::pipeline::balance::latency_table;
+use crate::pmca::cluster::SnitchCluster;
+use crate::pmca::redmule::RedMulE;
+
+use super::refresh::DecayModel;
+use super::sched::{Clock, SchedConfig};
+
+// ---------------------------------------------------------------------------
+// The Forward executor
+// ---------------------------------------------------------------------------
+
+/// A backend's batched forward executor.
+///
+/// Deliberately **not** `Send`: the PJRT implementation wraps a loaded
+/// executable whose handles must stay on the thread that created them,
+/// so the pool constructs one `Forward` per worker thread via
+/// [`Backend::forward`] (the `Backend` itself is `Send + Sync` and
+/// shared).
+pub trait Forward {
+    /// `[batch, seq]` shape of the forward graph.
+    fn batch_shape(&self) -> (usize, usize);
+
+    /// LM vocabulary size when the graph emits `[b, s, vocab]` logits
+    /// (decode lanes need it); `None` for classification graphs.
+    fn vocab(&self) -> Option<usize>;
+
+    /// Milliseconds spent compiling/bringing up this executor.
+    fn compile_ms(&self) -> u64;
+
+    /// Classification logit rows for `tokens` (one row of class logits
+    /// per `seq`-length request).
+    fn cls_logits(
+        &self,
+        meta: &ParamStore,
+        adapter: &ParamStore,
+        tokens: &[i32],
+        hw: [f32; 5],
+        seed: u64,
+    ) -> Result<Vec<Vec<f32>>>;
+
+    /// Full-sequence LM logits for an exact `[b, s]` token buffer.
+    fn lm_logits(
+        &self,
+        meta: &ParamStore,
+        adapter: &ParamStore,
+        tokens: &[i32],
+        hw: [f32; 5],
+        seed: u64,
+    ) -> Result<Vec<f32>>;
+}
+
+// ---------------------------------------------------------------------------
+// The Backend trait — the four seams
+// ---------------------------------------------------------------------------
+
+/// One serving substrate: how adapters are deployed onto it, how it
+/// executes a batch, how its weights drift, and what a batch costs.
+pub trait Backend: Send + Sync {
+    /// Stable identifier (unique within one pool).
+    fn name(&self) -> &str;
+
+    /// Drift model for adapters deployed on this substrate; `None`
+    /// means drift-free (never triggers a refresh). The pool threads
+    /// this into [`super::refresh::RefreshConfig`] per task.
+    fn drift_model(&self) -> Option<DecayModel>;
+
+    /// Modeled deploy latency: programming the adapter onto the
+    /// substrate (tile conductance programming for PCM, a memcpy for a
+    /// digital substrate). The pool threads this into
+    /// [`super::cache::CacheConfig`] as the per-task page-in latency.
+    fn deploy_latency(&self) -> Duration;
+
+    /// Modeled cost of one adapter refit on this substrate, ns. Feeds
+    /// the tolerance-maintenance column of the placement cost.
+    fn refit_ns(&self) -> f64;
+
+    /// Rewrite the layer/hardware model a scheduler on this backend
+    /// should batch against (identity for the reference substrate; a
+    /// slower substrate scales its integration time). The pool applies
+    /// this to each worker's [`SchedConfig`] before building its
+    /// [`super::sched::BatchScheduler`].
+    fn adapt_sched(&self, cfg: SchedConfig) -> SchedConfig {
+        cfg
+    }
+
+    /// Batch-latency table for placement decisions. The default reads
+    /// the shared [`latency_table`] through [`Self::adapt_sched`], so
+    /// it is — by construction — the same table this backend's
+    /// scheduler batches on.
+    fn cost_model(&self, layer: &SchedConfig, max_batch: usize) -> CostModel {
+        CostModel::from_layer(&self.adapt_sched(*layer), max_batch)
+    }
+
+    /// Bring up a per-worker forward executor for `graph_key`.
+    fn forward(&self, manifest: &Manifest, graph_key: &str) -> Result<Box<dyn Forward>>;
+}
+
+/// The drift model of a drift-free substrate: the ideal (noise-free)
+/// PCM model, whose decay is 0 at every age and whose trigger age is
+/// `+inf` for every tolerance — tracked tasks are simply never due.
+pub fn drift_free() -> DecayModel {
+    DecayModel::analytic(PcmModel::ideal())
+}
+
+// ---------------------------------------------------------------------------
+// Cost model
+// ---------------------------------------------------------------------------
+
+/// A backend's modeled batch-latency table: `batch_ns(b)` = modeled
+/// steady-state latency of serving a batch of `b` requests, `b` in
+/// `1..=max_batch`. Built from the shared
+/// [`crate::pipeline::balance::latency_table`].
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    modeled_ns: Vec<f64>,
+}
+
+impl CostModel {
+    /// Wrap an explicit table (`modeled_ns[b-1]` = latency of fill `b`).
+    pub fn from_table(modeled_ns: Vec<f64>) -> CostModel {
+        let modeled_ns = if modeled_ns.is_empty() {
+            vec![1.0]
+        } else {
+            modeled_ns
+        };
+        CostModel { modeled_ns }
+    }
+
+    /// Tabulate the pipeline-balance model for `layer` on the paper's
+    /// default Snitch cluster + RedMulE — the exact table
+    /// [`super::sched::BatchScheduler`] commits to for that layer.
+    pub fn from_layer(layer: &SchedConfig, max_batch: usize) -> CostModel {
+        let (_, table) = latency_table(
+            layer.m,
+            layer.n,
+            layer.r,
+            layer.t_int_ns,
+            layer.seq_len.max(1),
+            max_batch.max(1),
+            &SnitchCluster::default(),
+            &RedMulE::default(),
+        );
+        CostModel::from_table(table)
+    }
+
+    /// Largest fill the table models.
+    pub fn max_batch(&self) -> usize {
+        self.modeled_ns.len()
+    }
+
+    /// Modeled latency of a batch of `fill` requests, ns (clamped to
+    /// the tabulated range, like the scheduler's lookup).
+    pub fn batch_ns(&self, fill: usize) -> f64 {
+        self.modeled_ns[fill.clamp(1, self.modeled_ns.len()) - 1]
+    }
+
+    /// Smallest fill whose per-request service time keeps up with one
+    /// request every `interarrival_ns`; `None` if no tabulated fill
+    /// sustains that rate.
+    pub fn sustainable_fill(&self, interarrival_ns: f64) -> Option<usize> {
+        (1..=self.modeled_ns.len()).find(|&b| self.batch_ns(b) / b as f64 <= interarrival_ns)
+    }
+
+    /// Whether any tabulated fill sustains the arrival rate.
+    pub fn can_sustain(&self, interarrival_ns: f64) -> bool {
+        self.sustainable_fill(interarrival_ns).is_some()
+    }
+
+    /// Uniformly scaled copy (a substrate `factor`× slower per batch).
+    pub fn scaled(&self, factor: f64) -> CostModel {
+        let f = if factor.is_finite() && factor > 0.0 {
+            factor
+        } else {
+            1.0
+        };
+        CostModel {
+            modeled_ns: self.modeled_ns.iter().map(|ns| ns * f).collect(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Placement
+// ---------------------------------------------------------------------------
+
+/// The routing-relevant surface of one backend, snapshotted at pool
+/// build time so placement decisions need no trait calls.
+#[derive(Clone, Debug)]
+pub struct BackendProfile {
+    pub name: String,
+    pub cost: CostModel,
+    /// `None` = drift-free.
+    pub drift: Option<DecayModel>,
+    pub refit_ns: f64,
+}
+
+impl BackendProfile {
+    /// Snapshot `backend` for the (seq-resolved) layer model.
+    pub fn of(backend: &dyn Backend, layer: &SchedConfig, max_batch: usize) -> BackendProfile {
+        BackendProfile {
+            name: backend.name().to_string(),
+            cost: backend.cost_model(layer, max_batch),
+            drift: backend.drift_model(),
+            refit_ns: backend.refit_ns(),
+        }
+    }
+
+    /// Per-request cost of keeping a task inside `tolerance` on this
+    /// substrate: the refit budget amortised over the requests served
+    /// per refresh cycle (`trigger_age / gap`). Zero when the substrate
+    /// never drifts past the tolerance; `+inf` when the tolerance sits
+    /// at/below the model's floor (every batch would be stale).
+    pub fn maintenance_ns(&self, gap_ns: f64, tolerance: f64) -> f64 {
+        let Some(drift) = &self.drift else {
+            return 0.0;
+        };
+        let trigger = drift.trigger_age(tolerance.clamp(1e-6, 1.0));
+        if trigger.is_infinite() {
+            0.0
+        } else if trigger <= 0.0 {
+            f64::INFINITY
+        } else {
+            self.refit_ns * (gap_ns / 1e9) / trigger
+        }
+    }
+
+    /// Total modeled per-request cost of placing a task with arrival
+    /// EWMA `interarrival_ns` and drift `tolerance` here (see the
+    /// module docs for the formula). A cold task (`+inf` EWMA) is
+    /// costed at saturation — back-to-back single-request batches —
+    /// so placement is defined before the first arrival.
+    pub fn placement_cost(&self, interarrival_ns: f64, tolerance: f64) -> f64 {
+        let gap = if interarrival_ns.is_finite() && interarrival_ns > 0.0 {
+            interarrival_ns
+        } else {
+            self.cost.batch_ns(1)
+        };
+        let fill = self
+            .cost
+            .sustainable_fill(gap)
+            .unwrap_or_else(|| self.cost.max_batch());
+        let service = self.cost.batch_ns(fill) / fill as f64;
+        service + self.maintenance_ns(gap, tolerance)
+    }
+}
+
+/// The routing-relevant surface of one task.
+#[derive(Clone, Debug)]
+pub struct TaskProfile {
+    pub task: String,
+    /// Drift tolerance the refresh policy maintains for this task.
+    pub tolerance: f64,
+    /// Observed inter-arrival EWMA, ns (`+inf` until measured).
+    pub interarrival_ns: f64,
+    /// Operator override: always place on this backend index.
+    pub pinned: Option<usize>,
+}
+
+/// Pick the backend minimising [`BackendProfile::placement_cost`].
+/// Backends that can sustain the task's arrival rate are preferred
+/// over ones that cannot (if none can, all compete on cost alone);
+/// ties break toward the lower index. Pure and deterministic.
+pub fn route_one(backends: &[BackendProfile], interarrival_ns: f64, tolerance: f64) -> usize {
+    assert!(!backends.is_empty(), "route_one: no backends");
+    let sustaining: Vec<usize> = (0..backends.len())
+        .filter(|&i| backends[i].cost.can_sustain(interarrival_ns))
+        .collect();
+    let candidates: Vec<usize> = if sustaining.is_empty() {
+        (0..backends.len()).collect()
+    } else {
+        sustaining
+    };
+    let mut best = candidates[0];
+    let mut best_cost = backends[best].placement_cost(interarrival_ns, tolerance);
+    for &i in &candidates[1..] {
+        let cost = backends[i].placement_cost(interarrival_ns, tolerance);
+        if cost < best_cost {
+            best = i;
+            best_cost = cost;
+        }
+    }
+    best
+}
+
+/// Route every task ([`route_one`] per task; pins clamp to range).
+pub fn route_tasks(backends: &[BackendProfile], tasks: &[TaskProfile]) -> Vec<usize> {
+    tasks
+        .iter()
+        .map(|t| match t.pinned {
+            Some(p) => p.min(backends.len().saturating_sub(1)),
+            None => route_one(backends, t.interarrival_ns, t.tolerance),
+        })
+        .collect()
+}
+
+/// Total modeled per-request cost of an explicit `assignment`
+/// (`assignment[i]` = backend index of `tasks[i]`) — what
+/// `hal_conformance` compares routed vs naive placements on.
+pub fn assignment_cost(
+    backends: &[BackendProfile],
+    tasks: &[TaskProfile],
+    assignment: &[usize],
+) -> f64 {
+    tasks
+        .iter()
+        .zip(assignment)
+        .map(|(t, &b)| {
+            backends[b.min(backends.len() - 1)].placement_cost(t.interarrival_ns, t.tolerance)
+        })
+        .sum()
+}
+
+// ---------------------------------------------------------------------------
+// Router — runtime task→backend state for a heterogeneous pool
+// ---------------------------------------------------------------------------
+
+/// EWMA of one task's inter-arrival gap, kept pool-side (the
+/// per-worker scheduler estimators only see their own shard's slice).
+#[derive(Clone, Copy, Debug, Default)]
+struct RouterArrival {
+    last: Option<Instant>,
+    ewma_ns: Option<f64>,
+}
+
+#[derive(Default)]
+struct RouterState {
+    /// Sticky task→backend decisions (route-on-first-use).
+    table: BTreeMap<String, usize>,
+    arrivals: BTreeMap<String, RouterArrival>,
+}
+
+/// Task→backend routing for a pool with more than one backend.
+///
+/// A task is routed ONCE, on first use, with whatever arrival evidence
+/// exists at that instant (none → costed at saturation), and the
+/// decision sticks — the task's drift tracking and cache residency
+/// live on that backend's workers. [`Router::rebalance`] re-evaluates
+/// unpinned tasks against their measured EWMAs and returns the moves
+/// it applied, for operators that want periodic re-placement.
+///
+/// A single-backend pool has no `Router` at all: requests hash across
+/// all workers exactly as before the HAL existed.
+pub struct Router {
+    profiles: Vec<BackendProfile>,
+    /// `ranges[i]` = contiguous `[start, end)` worker span of backend `i`.
+    ranges: Vec<(usize, usize)>,
+    default_tolerance: f64,
+    tolerances: BTreeMap<String, f64>,
+    pins: BTreeMap<String, usize>,
+    clock: Arc<dyn Clock>,
+    state: Mutex<RouterState>,
+}
+
+impl Router {
+    pub fn new(
+        profiles: Vec<BackendProfile>,
+        ranges: Vec<(usize, usize)>,
+        default_tolerance: f64,
+        tolerances: BTreeMap<String, f64>,
+        pins: BTreeMap<String, usize>,
+        clock: Arc<dyn Clock>,
+    ) -> Router {
+        assert_eq!(profiles.len(), ranges.len(), "one worker range per backend");
+        assert!(!profiles.is_empty(), "router needs at least one backend");
+        assert!(
+            ranges.iter().all(|&(s, e)| e > s),
+            "every backend needs at least one worker"
+        );
+        Router {
+            profiles,
+            ranges,
+            default_tolerance,
+            tolerances,
+            pins,
+            clock,
+            state: Mutex::new(RouterState::default()),
+        }
+    }
+
+    pub fn profiles(&self) -> &[BackendProfile] {
+        &self.profiles
+    }
+
+    pub fn ranges(&self) -> &[(usize, usize)] {
+        &self.ranges
+    }
+
+    fn tolerance_of(&self, task: &str) -> f64 {
+        self.tolerances
+            .get(task)
+            .copied()
+            .unwrap_or(self.default_tolerance)
+    }
+
+    fn decide(&self, task: &str, interarrival_ns: f64) -> usize {
+        if let Some(&p) = self.pins.get(task) {
+            return p.min(self.profiles.len() - 1);
+        }
+        route_one(&self.profiles, interarrival_ns, self.tolerance_of(task))
+    }
+
+    /// Record an arrival of `task` (feeds the routing EWMA).
+    pub fn note_arrival(&self, task: &str, now: Instant) {
+        let mut st = self.state.lock().expect("router state");
+        let a = st.arrivals.entry(task.to_string()).or_default();
+        if let Some(last) = a.last {
+            let dt = now.saturating_duration_since(last).as_nanos() as f64;
+            a.ewma_ns = Some(crate::util::stats::ewma(a.ewma_ns, dt));
+        }
+        a.last = Some(now);
+    }
+
+    /// The backend `task` is (or becomes, on first use) placed on.
+    pub fn backend_of(&self, task: &str) -> usize {
+        let mut st = self.state.lock().expect("router state");
+        if let Some(&b) = st.table.get(task) {
+            return b;
+        }
+        let gap = st
+            .arrivals
+            .get(task)
+            .and_then(|a| a.ewma_ns)
+            .unwrap_or(f64::INFINITY);
+        drop(st);
+        let b = self.decide(task, gap);
+        let mut st = self.state.lock().expect("router state");
+        *st.table.entry(task.to_string()).or_insert(b)
+    }
+
+    /// Worker index for one request of `task`: note the arrival, then
+    /// hash the task across its backend's worker span (same FNV spread
+    /// a homogeneous pool uses across all workers).
+    pub fn worker_for(&self, task: &str) -> usize {
+        self.note_arrival(task, self.clock.now());
+        let (start, end) = self.ranges[self.backend_of(task)];
+        start + (super::api::fnv1a(task) % (end - start) as u64) as usize
+    }
+
+    /// Current sticky assignments, `(task, backend index)`.
+    pub fn assignments(&self) -> Vec<(String, usize)> {
+        let st = self.state.lock().expect("router state");
+        st.table.iter().map(|(t, &b)| (t.clone(), b)).collect()
+    }
+
+    /// Re-route every unpinned task against its measured EWMA; apply
+    /// and return the moves as `(task, from, to)`.
+    pub fn rebalance(&self) -> Vec<(String, usize, usize)> {
+        let mut st = self.state.lock().expect("router state");
+        let snapshot: Vec<(String, usize, f64)> = st
+            .table
+            .iter()
+            .map(|(t, &b)| {
+                let gap = st
+                    .arrivals
+                    .get(t)
+                    .and_then(|a| a.ewma_ns)
+                    .unwrap_or(f64::INFINITY);
+                (t.clone(), b, gap)
+            })
+            .collect();
+        let mut moves = Vec::new();
+        for (task, from, gap) in snapshot {
+            let to = self.decide(&task, gap);
+            if to != from {
+                st.table.insert(task.clone(), to);
+                moves.push((task, from, to));
+            }
+        }
+        moves
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PcmPjrt — the reference substrate (existing path, verbatim)
+// ---------------------------------------------------------------------------
+
+/// PCM tiles + PJRT forward: the pre-HAL pool's exact execution path.
+/// `forward` is `runtime::Engine::new` + `Engine::load`; logits flow
+/// through the same `eval::drift_eval` entry points with the same
+/// seeds, so a single-`PcmPjrt` pool is bit-identical to the pre-HAL
+/// pool.
+#[derive(Clone, Debug)]
+pub struct PcmPjrt {
+    model: PcmModel,
+    g_rel: f32,
+    deploy_latency: Duration,
+    refit_ns: f64,
+}
+
+impl Default for PcmPjrt {
+    fn default() -> Self {
+        PcmPjrt {
+            model: PcmModel::default(),
+            g_rel: 0.5,
+            // tile conductance programming dominates adapter page-in;
+            // matches the pre-HAL CacheConfig::load_latency default
+            deploy_latency: Duration::from_micros(500),
+            // one bounded-budget LoRA refit on the PMCA, modeled ns
+            refit_ns: 5.0e6,
+        }
+    }
+}
+
+impl PcmPjrt {
+    pub fn new() -> PcmPjrt {
+        PcmPjrt::default()
+    }
+
+    /// Override the drift statistics (e.g. a fast-drifting tile bank).
+    pub fn model(mut self, model: PcmModel) -> Self {
+        self.model = model;
+        self
+    }
+
+    /// Representative relative conductance for the decay dispersion.
+    pub fn g_rel(mut self, g_rel: f32) -> Self {
+        self.g_rel = g_rel.clamp(0.0, 1.0);
+        self
+    }
+
+    pub fn deploy_latency(mut self, d: Duration) -> Self {
+        self.deploy_latency = d;
+        self
+    }
+
+    pub fn refit_ns(mut self, ns: f64) -> Self {
+        self.refit_ns = ns.max(0.0);
+        self
+    }
+}
+
+struct PjrtForward {
+    graph: Rc<crate::runtime::LoadedGraph>,
+    compile_ms: u64,
+    // keeps the PJRT client alive for as long as the executable runs
+    _engine: crate::runtime::Engine,
+}
+
+impl Forward for PjrtForward {
+    fn batch_shape(&self) -> (usize, usize) {
+        crate::eval::drift_eval::fwd_batch_shape(&self.graph)
+    }
+
+    fn vocab(&self) -> Option<usize> {
+        self.graph
+            .spec
+            .outputs
+            .first()
+            .filter(|o| o.shape.len() == 3)
+            .map(|o| o.shape[2])
+    }
+
+    fn compile_ms(&self) -> u64 {
+        self.compile_ms
+    }
+
+    fn cls_logits(
+        &self,
+        meta: &ParamStore,
+        adapter: &ParamStore,
+        tokens: &[i32],
+        hw: [f32; 5],
+        seed: u64,
+    ) -> Result<Vec<Vec<f32>>> {
+        crate::eval::drift_eval::cls_logits(&self.graph, meta, adapter, tokens, hw, seed)
+    }
+
+    fn lm_logits(
+        &self,
+        meta: &ParamStore,
+        adapter: &ParamStore,
+        tokens: &[i32],
+        hw: [f32; 5],
+        seed: u64,
+    ) -> Result<Vec<f32>> {
+        crate::eval::drift_eval::lm_logits(&self.graph, meta, adapter, tokens, hw, seed)
+    }
+}
+
+impl Backend for PcmPjrt {
+    fn name(&self) -> &str {
+        "pcm-pjrt"
+    }
+
+    fn drift_model(&self) -> Option<DecayModel> {
+        Some(DecayModel::Analytic {
+            model: self.model.clone(),
+            g_rel: self.g_rel,
+        })
+    }
+
+    fn deploy_latency(&self) -> Duration {
+        self.deploy_latency
+    }
+
+    fn refit_ns(&self) -> f64 {
+        self.refit_ns
+    }
+
+    fn forward(&self, manifest: &Manifest, graph_key: &str) -> Result<Box<dyn Forward>> {
+        let engine = crate::runtime::Engine::new(manifest.clone())?;
+        let graph = engine.load(graph_key)?;
+        let compile_ms = engine.total_compile_ms() as u64;
+        Ok(Box::new(PjrtForward {
+            graph,
+            compile_ms,
+            _engine: engine,
+        }))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DigitalRef — in-process drift-free reference (feature "digital-ref")
+// ---------------------------------------------------------------------------
+
+/// Drift-free digital reference substrate: deterministic in-process
+/// logits (a hash of tokens + adapter + seed), zero maintenance cost,
+/// and the balance-model cost table scaled by `slowdown` (digital MVMs
+/// instead of analog tiles). Needs only graph *shapes* from the
+/// manifest — no compiled artifacts — so a `DigitalRef` pool serves
+/// hermetically in CI.
+#[cfg(feature = "digital-ref")]
+#[derive(Clone, Debug)]
+pub struct DigitalRef {
+    slowdown: f64,
+    deploy_latency: Duration,
+}
+
+#[cfg(feature = "digital-ref")]
+impl Default for DigitalRef {
+    fn default() -> Self {
+        DigitalRef {
+            // digital MVMs for the full layer instead of analog tiles
+            slowdown: 4.0,
+            // adapter deploy is a memcpy, not conductance programming
+            deploy_latency: Duration::from_micros(50),
+        }
+    }
+}
+
+#[cfg(feature = "digital-ref")]
+impl DigitalRef {
+    pub fn new() -> DigitalRef {
+        DigitalRef::default()
+    }
+
+    /// Per-batch latency multiplier vs the analog reference (> 0).
+    pub fn slowdown(mut self, factor: f64) -> Self {
+        if factor.is_finite() && factor > 0.0 {
+            self.slowdown = factor;
+        }
+        self
+    }
+
+    pub fn deploy_latency(mut self, d: Duration) -> Self {
+        self.deploy_latency = d;
+        self
+    }
+}
+
+#[cfg(feature = "digital-ref")]
+struct DigitalForward {
+    batch: usize,
+    seq: usize,
+    /// Output tensor shape of the graph (`[b, classes]` or
+    /// `[b, s, vocab]`) — logit buffers mirror its element count.
+    out: Vec<usize>,
+}
+
+#[cfg(feature = "digital-ref")]
+impl DigitalForward {
+    /// Stable fingerprint of an adapter's contents, so logits change
+    /// deterministically when a refit hot-swaps the adapter.
+    fn fingerprint(store: &ParamStore) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for t in &store.tensors {
+            for b in t.name.as_bytes() {
+                h = (h ^ *b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+            }
+            for v in &t.data {
+                h = (h ^ v.to_bits() as u64).wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        }
+        h
+    }
+
+    fn hw_bits(hw: [f32; 5]) -> u64 {
+        hw.iter()
+            .fold(0u64, |acc, v| splitmix(acc ^ v.to_bits() as u64))
+    }
+}
+
+/// SplitMix64 finalizer — the cheap stateless mix behind the digital
+/// reference's deterministic logits.
+#[cfg(feature = "digital-ref")]
+fn splitmix(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Map a hash to a logit in (-1, 1).
+#[cfg(feature = "digital-ref")]
+fn unit_logit(h: u64) -> f32 {
+    ((h >> 11) as f64 / (1u64 << 53) as f64 * 2.0 - 1.0) as f32
+}
+
+#[cfg(feature = "digital-ref")]
+impl Forward for DigitalForward {
+    fn batch_shape(&self) -> (usize, usize) {
+        (self.batch, self.seq)
+    }
+
+    fn vocab(&self) -> Option<usize> {
+        if self.out.len() == 3 {
+            Some(self.out[2])
+        } else {
+            None
+        }
+    }
+
+    fn compile_ms(&self) -> u64 {
+        0
+    }
+
+    fn cls_logits(
+        &self,
+        _meta: &ParamStore,
+        adapter: &ParamStore,
+        tokens: &[i32],
+        hw: [f32; 5],
+        seed: u64,
+    ) -> Result<Vec<Vec<f32>>> {
+        let s = self.seq.max(1);
+        let classes = self.out.get(1).copied().unwrap_or(1);
+        let base = splitmix(Self::fingerprint(adapter) ^ Self::hw_bits(hw) ^ seed);
+        let rows = tokens.len() / s;
+        let mut result = Vec::with_capacity(rows);
+        for r in 0..rows {
+            let mut h = base;
+            for &t in &tokens[r * s..(r + 1) * s] {
+                h = splitmix(h ^ t as u64);
+            }
+            result.push((0..classes).map(|c| unit_logit(splitmix(h ^ c as u64))).collect());
+        }
+        Ok(result)
+    }
+
+    fn lm_logits(
+        &self,
+        _meta: &ParamStore,
+        adapter: &ParamStore,
+        tokens: &[i32],
+        hw: [f32; 5],
+        seed: u64,
+    ) -> Result<Vec<f32>> {
+        let expect = self.batch * self.seq;
+        if tokens.len() != expect {
+            return Err(anyhow!(
+                "digital-ref lm forward: got {} tokens, graph is [{}, {}]",
+                tokens.len(),
+                self.batch,
+                self.seq
+            ));
+        }
+        let base = splitmix(Self::fingerprint(adapter) ^ Self::hw_bits(hw) ^ seed);
+        // fold each row's tokens once, then stream its logits
+        let per_row: usize = self.out.iter().product::<usize>() / self.batch.max(1);
+        let mut out = Vec::with_capacity(self.out.iter().product());
+        for r in 0..self.batch {
+            let mut h = base ^ (r as u64).wrapping_mul(0x517c);
+            for (i, &t) in tokens[r * self.seq..(r + 1) * self.seq].iter().enumerate() {
+                // position-sensitive fold: the logits after step k
+                // depend on every token up to k
+                h = splitmix(h ^ (t as u64).wrapping_add((i as u64) << 32));
+            }
+            for i in 0..per_row {
+                out.push(unit_logit(splitmix(h ^ i as u64)));
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(feature = "digital-ref")]
+impl Backend for DigitalRef {
+    fn name(&self) -> &str {
+        "digital-ref"
+    }
+
+    fn drift_model(&self) -> Option<DecayModel> {
+        None
+    }
+
+    fn deploy_latency(&self) -> Duration {
+        self.deploy_latency
+    }
+
+    fn refit_ns(&self) -> f64 {
+        0.0
+    }
+
+    /// A `slowdown`× slower substrate: scale the modeled integration
+    /// time, so this backend's scheduler batches (and its cost model
+    /// prices) against the slower hardware.
+    fn adapt_sched(&self, cfg: SchedConfig) -> SchedConfig {
+        let t = cfg.t_int_ns * self.slowdown;
+        cfg.t_int(t)
+    }
+
+    fn forward(&self, manifest: &Manifest, graph_key: &str) -> Result<Box<dyn Forward>> {
+        let spec = manifest
+            .graphs
+            .get(graph_key)
+            .ok_or_else(|| anyhow!("digital-ref: manifest has no graph '{graph_key}'"))?;
+        let io = spec
+            .inputs_with_role(Role::Data)
+            .next()
+            .ok_or_else(|| anyhow!("digital-ref: graph '{graph_key}' has no data input"))?;
+        if io.shape.len() < 2 {
+            return Err(anyhow!(
+                "digital-ref: graph '{graph_key}' data input is not [batch, seq]"
+            ));
+        }
+        let out = spec
+            .outputs
+            .first()
+            .ok_or_else(|| anyhow!("digital-ref: graph '{graph_key}' has no outputs"))?;
+        Ok(Box::new(DigitalForward {
+            batch: io.shape[0],
+            seq: io.shape[1],
+            out: out.shape.clone(),
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::sched::BatchScheduler;
+
+    fn layer() -> SchedConfig {
+        SchedConfig::for_layer(128, 128, 8).seq(320)
+    }
+
+    #[test]
+    fn cost_model_matches_scheduler_table() {
+        let cfg = layer();
+        let cm = CostModel::from_layer(&cfg, 8);
+        let sched = BatchScheduler::new(cfg, 8, Duration::from_millis(5));
+        for fill in 0..=10 {
+            assert_eq!(
+                cm.batch_ns(fill),
+                sched.modeled_batch_ns(fill),
+                "fill {fill}"
+            );
+        }
+    }
+
+    #[test]
+    fn sustainable_fill_is_smallest_keeping_up() {
+        let cm = CostModel::from_table(vec![100.0, 150.0, 240.0]);
+        // per-request: 100, 75, 80
+        assert_eq!(cm.sustainable_fill(100.0), Some(1));
+        assert_eq!(cm.sustainable_fill(80.0), Some(2));
+        assert_eq!(cm.sustainable_fill(75.0), Some(2));
+        assert_eq!(cm.sustainable_fill(74.0), None);
+        assert!(cm.can_sustain(f64::INFINITY));
+        assert!(!cm.can_sustain(1.0));
+        assert_eq!(cm.scaled(2.0).batch_ns(1), 200.0);
+    }
+
+    #[test]
+    fn drift_free_never_triggers() {
+        let d = drift_free();
+        assert_eq!(d.predicted_decay(1e9), 0.0);
+        assert!(d.trigger_age(0.01).is_infinite());
+    }
+
+    #[test]
+    fn maintenance_cost_shapes() {
+        let cm = CostModel::from_table(vec![1000.0]);
+        let drifty = BackendProfile {
+            name: "pcm".into(),
+            cost: cm.clone(),
+            drift: Some(DecayModel::analytic(PcmModel::default())),
+            refit_ns: 1e6,
+        };
+        let free = BackendProfile {
+            name: "digital".into(),
+            cost: cm,
+            drift: None,
+            refit_ns: 0.0,
+        };
+        assert_eq!(free.maintenance_ns(1e6, 0.01), 0.0);
+        // tighter tolerance → shorter trigger age → higher upkeep
+        let loose = drifty.maintenance_ns(1e6, 0.20);
+        let tight = drifty.maintenance_ns(1e6, 0.02);
+        assert!(tight > loose, "tight {tight} loose {loose}");
+        // a zero tolerance clamps to the tightest finite one — upkeep
+        // explodes but stays ordered
+        assert!(drifty.maintenance_ns(1e6, 0.0) >= tight);
+    }
+
+    #[test]
+    fn routing_prefers_sustaining_backend() {
+        let slow = BackendProfile {
+            name: "slow".into(),
+            cost: CostModel::from_table(vec![1000.0, 1800.0]),
+            drift: None,
+            refit_ns: 0.0,
+        };
+        let fast = BackendProfile {
+            name: "fast".into(),
+            cost: CostModel::from_table(vec![400.0, 700.0]),
+            drift: None,
+            refit_ns: 0.0,
+        };
+        let backends = [slow, fast];
+        // gap 500ns: only `fast` sustains (400 ≤ 500)
+        assert_eq!(route_one(&backends, 500.0, 0.1), 1);
+        // gap 2000ns: both sustain; fast is cheaper per request
+        assert_eq!(route_one(&backends, 2000.0, 0.1), 1);
+        // no backend sustains 10ns: cost decides (fast still cheaper)
+        assert_eq!(route_one(&backends, 10.0, 0.1), 1);
+    }
+
+    #[test]
+    fn tight_tolerance_routes_to_cheap_refresh_backend() {
+        let cfg = layer();
+        let pcm = BackendProfile::of(&PcmPjrt::default(), &cfg, 8);
+        #[cfg(feature = "digital-ref")]
+        {
+            let dig = BackendProfile::of(&DigitalRef::default(), &cfg, 8);
+            let backends = [pcm.clone(), dig];
+            // relaxed tolerance on slow traffic: analog service wins
+            let relaxed = route_one(&backends, 1e9, 0.5);
+            assert_eq!(relaxed, 0, "relaxed tolerance should stay on PCM");
+            // a tolerance at the drift floor makes PCM infinitely
+            // expensive to maintain → the drift-free backend wins
+            let tight = route_one(&backends, 1e9, 1e-6);
+            assert_eq!(tight, 1, "floor tolerance should move to digital");
+        }
+        let _ = pcm;
+    }
+
+    #[test]
+    fn pinned_tasks_are_respected() {
+        let b = BackendProfile {
+            name: "only".into(),
+            cost: CostModel::from_table(vec![100.0]),
+            drift: None,
+            refit_ns: 0.0,
+        };
+        let backends = [b.clone(), b];
+        let tasks = vec![
+            TaskProfile {
+                task: "a".into(),
+                tolerance: 0.1,
+                interarrival_ns: f64::INFINITY,
+                pinned: Some(1),
+            },
+            TaskProfile {
+                task: "b".into(),
+                tolerance: 0.1,
+                interarrival_ns: f64::INFINITY,
+                pinned: Some(99),
+            },
+        ];
+        assert_eq!(route_tasks(&backends, &tasks), vec![1, 1]);
+    }
+
+    #[test]
+    fn router_is_sticky_and_stays_in_range() {
+        use crate::serve::sched::VirtualClock;
+        let profile = |ns: f64| BackendProfile {
+            name: format!("b{ns}"),
+            cost: CostModel::from_table(vec![ns]),
+            drift: None,
+            refit_ns: 0.0,
+        };
+        let clock = Arc::new(VirtualClock::new());
+        let r = Router::new(
+            vec![profile(100.0), profile(900.0)],
+            vec![(0, 2), (2, 3)],
+            0.1,
+            BTreeMap::new(),
+            BTreeMap::from([("pinme".to_string(), 1usize)]),
+            clock,
+        );
+        let w = r.worker_for("hot");
+        assert!(w < 2, "cheap backend owns workers 0..2, got {w}");
+        assert_eq!(r.backend_of("hot"), 0);
+        // sticky: repeated lookups never move
+        for _ in 0..5 {
+            assert_eq!(r.worker_for("hot"), w);
+        }
+        assert_eq!(r.backend_of("pinme"), 1);
+        assert_eq!(r.worker_for("pinme"), 2);
+        let asg = r.assignments();
+        assert!(asg.contains(&("hot".to_string(), 0)));
+        assert!(asg.contains(&("pinme".to_string(), 1)));
+        // rebalance with no new evidence moves nothing
+        assert!(r.rebalance().is_empty());
+    }
+
+    #[cfg(feature = "digital-ref")]
+    mod digital {
+        use super::*;
+        use crate::config::manifest::{GraphSpec, IoSpec};
+        use crate::model::params::Tensor;
+
+        fn cls_spec() -> GraphSpec {
+            GraphSpec {
+                key: "base/fwd_cls".into(),
+                kind: "fwd_cls".into(),
+                variant: "base".into(),
+                file: String::new(),
+                inputs: vec![IoSpec {
+                    name: "data/tokens".into(),
+                    role: Role::Data,
+                    shape: vec![4, 16],
+                    dtype: "i32".into(),
+                }],
+                outputs: vec![IoSpec {
+                    name: "logits".into(),
+                    role: Role::Logits,
+                    shape: vec![4, 3],
+                    dtype: "f32".into(),
+                }],
+            }
+        }
+
+        fn manifest() -> Manifest {
+            Manifest {
+                root: std::path::PathBuf::from("unused"),
+                hw: crate::config::manifest::HwDefaults {
+                    weight_noise: 0.0,
+                    adc_noise: 0.0,
+                    clip_sigma: 127.0,
+                    dac_bits: 8,
+                    adc_bits: 8,
+                    g_max_us: 25.0,
+                    t0_seconds: 20.0,
+                },
+                grpo_group: 1,
+                variants: BTreeMap::new(),
+                graphs: BTreeMap::from([("base/fwd_cls".to_string(), cls_spec())]),
+            }
+        }
+
+        fn adapter(tag: f32) -> ParamStore {
+            let mut t = Tensor::zeros("train/a", &[2, 2]);
+            t.data[0] = tag;
+            ParamStore::from_tensors(vec![t])
+        }
+
+        #[test]
+        fn forward_is_deterministic_and_adapter_sensitive() {
+            let be = DigitalRef::default();
+            let fwd = be.forward(&manifest(), "base/fwd_cls").unwrap();
+            assert_eq!(fwd.batch_shape(), (4, 16));
+            assert_eq!(fwd.vocab(), None);
+            let meta = ParamStore::default();
+            let tokens: Vec<i32> = (0..32).collect(); // two rows
+            let hw = [0.0, 0.0, 127.0, 127.0, 0.0];
+            let a = fwd.cls_logits(&meta, &adapter(1.0), &tokens, hw, 7).unwrap();
+            let b = fwd.cls_logits(&meta, &adapter(1.0), &tokens, hw, 7).unwrap();
+            let c = fwd.cls_logits(&meta, &adapter(2.0), &tokens, hw, 7).unwrap();
+            assert_eq!(a.len(), 2);
+            assert_eq!(a[0].len(), 3);
+            assert!(a[0].iter().all(|v| v.is_finite() && v.abs() <= 1.0));
+            assert_eq!(a, b, "same inputs must reproduce");
+            assert_ne!(a, c, "a refit adapter must change the logits");
+        }
+
+        #[test]
+        fn adapt_sched_scales_integration_time() {
+            let be = DigitalRef::default().slowdown(3.0);
+            let cfg = be.adapt_sched(SchedConfig::for_layer(128, 128, 8));
+            assert_eq!(cfg.t_int_ns, 256.0 * 3.0);
+            // and the cost model prices the slower substrate
+            let base = CostModel::from_layer(&SchedConfig::for_layer(128, 128, 8).seq(320), 4);
+            let slow = be.cost_model(&SchedConfig::for_layer(128, 128, 8).seq(320), 4);
+            for f in 1..=4 {
+                assert!(slow.batch_ns(f) > base.batch_ns(f), "fill {f}");
+            }
+        }
+
+        #[test]
+        fn unknown_graph_is_an_error() {
+            let be = DigitalRef::default();
+            assert!(be.forward(&manifest(), "nope").is_err());
+        }
+    }
+}

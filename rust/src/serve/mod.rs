@@ -104,6 +104,24 @@
 //!       │   re-balance: modeled fill cost = table lookup into    │
 //!       │   the scheduler's committed sweep (no re-sweep)        │
 //!       └────────────────────────────────────────────────────────┘
+//!
+//!       ┌─────────────────────── BACKENDS ───────────────────────┐
+//!       │  hal::Backend — the substrate seam behind the pool     │
+//!       │                                                        │
+//!       │   deploy      forward        drift_model   cost_model  │
+//!       │   (page-in    (per-worker    (feeds the    (feeds the  │
+//!       │    latency)    executor)      REFRESH box)  scheduler  │
+//!       │                                             + routing) │
+//!       │                                                        │
+//!       │  ONE backend (default PcmPjrt): no router — tasks      │
+//!       │  hash across all workers, bit-identical pre-HAL path   │
+//!       │  N backends: contiguous worker span per backend;       │
+//!       │  hal::Router places each task on the backend with the  │
+//!       │  lowest modeled service + tolerance-maintenance cost   │
+//!       │  (sticky on first use; pin_task overrides); REFRESH    │
+//!       │  and CACHE then read that task's drift model and       │
+//!       │  deploy latency from ITS backend                       │
+//!       └────────────────────────────────────────────────────────┘
 //! ```
 //!
 //! # Streaming tickets
@@ -158,7 +176,13 @@
 //!   EOS, plus the step-boundary refresh gate ([`decode::step_gate`]).
 //!   Offline eval ([`crate::experiments::llm::batched_greedy`]) and
 //!   live serving decode through this one engine, so the PAD layout,
-//!   argmax tie-break, and stop rules cannot diverge.
+//!   argmax tie-break, and stop rules cannot diverge,
+//! * [`hal`]      — the hardware abstraction behind the pool: a
+//!   [`hal::Backend`] trait over deploy / forward / drift-model /
+//!   cost-model, the [`hal::PcmPjrt`] reference substrate (the exact
+//!   pre-HAL path), the feature-gated drift-free [`hal::DigitalRef`],
+//!   and the [`hal::Router`] that places tasks on heterogeneous pools
+//!   by modeled service + tolerance-maintenance cost.
 //!
 //! (The deprecated `serve::router` / `serve::server` shims from the
 //! pre-builder API are gone; [`api`] is the only serving surface.)
@@ -189,21 +213,29 @@
 //! the continuous-batching decode suite in `tests/decode_conformance.rs`
 //! (all on the shared `tests/common/refresh_sim.rs` harness); the
 //! scheduler-policy property tests in `tests/sched_properties.rs`; the
-//! capacity-tier conformance suite in `tests/cache_conformance.rs`.
+//! capacity-tier conformance suite in `tests/cache_conformance.rs`; the
+//! backend-HAL suite (mixed-pool routing, default-backend equivalence)
+//! in `tests/hal_conformance.rs`.
 
 pub mod api;
 pub mod batcher;
 pub mod cache;
 pub mod coord;
 pub mod decode;
+pub mod hal;
 mod pool;
 pub mod refresh;
 pub mod registry;
 pub mod sched;
 
 pub use api::{
-    aggregate, submit_wave, submit_wave_results, Client, GenTicket, Metrics, MetricsSnapshot,
-    Pending, Response, ServeError, ServeResult, Server, ServerBuilder,
+    aggregate, submit_wave, submit_wave_results, BuildError, Client, ErrorClass, GenTicket,
+    Metrics, MetricsSnapshot, Pending, Response, ServeError, ServeResult, Server, ServerBuilder,
+};
+#[cfg(feature = "digital-ref")]
+pub use hal::DigitalRef;
+pub use hal::{
+    drift_free, Backend, BackendProfile, CostModel, Forward, PcmPjrt, Router, TaskProfile,
 };
 pub use cache::{AdapterCache, CacheConfig, CacheLookup};
 pub use decode::{

@@ -1,11 +1,12 @@
 //! The sharded worker pool behind [`super::api`].
 //!
-//! Each worker thread owns its own PJRT engine (the handles are not
-//! `Send`), built from the ONE manifest the builder already parsed, and
-//! drains a per-worker dynamic batcher. The pool's contract with the
-//! API layer: **every admitted request receives exactly one terminal
-//! result**, on every path — success, adapter miss, batch failure,
-//! injected fault, engine-init failure, and shutdown drain.
+//! Each worker thread owns its own forward executor (PJRT handles are
+//! not `Send`), brought up through its backend's [`Backend::forward`]
+//! seam from the ONE manifest the builder already parsed, and drains a
+//! per-worker dynamic batcher. The pool's contract with the API layer:
+//! **every admitted request receives exactly one terminal result**, on
+//! every path — success, adapter miss, batch failure, injected fault,
+//! backend-init failure, and shutdown drain.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -14,13 +15,13 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::config::manifest::Manifest;
-use crate::eval::drift_eval::{cls_logits, fwd_batch_shape, lm_logits};
 use crate::model::params::ParamStore;
 
 use super::api::{Metrics, Response, ServeError, ServeResult};
 use super::batcher::Batcher;
 use super::cache::{AdapterCache, CacheLookup};
 use super::decode::{step_gate, GenConfig, StepEngine, StepGate, TokenEvent};
+use super::hal::{Backend, Forward};
 use super::refresh::RefreshHandle;
 use super::registry::SharedRegistry;
 use super::sched::{BatchScheduler, Clock, Decision, SchedConfig};
@@ -87,6 +88,11 @@ pub(crate) struct WorkerConfig {
     /// Time source for enqueue stamps, deadlines, and latency metrics
     /// (virtual in deterministic tests).
     pub clock: Arc<dyn Clock>,
+    /// The substrate this worker executes on ([`super::hal`]): its
+    /// forward executor is brought up on the worker thread, and its
+    /// drift/cost parameters were already threaded into this worker's
+    /// `sched`/refresh/cache configuration by the builder.
+    pub backend: Arc<dyn Backend>,
 }
 
 /// After a shutdown signal, how long to wait for admitted-but-not-yet-
@@ -179,36 +185,33 @@ fn worker_loop(
     inflight: Arc<AtomicUsize>,
     metrics: Arc<Metrics>,
 ) -> ServeResult<()> {
-    // PJRT handles are not Send: the engine is created HERE, from the
-    // manifest the builder parsed once for the whole pool.
-    let engine = match crate::runtime::Engine::new(manifest) {
-        Ok(e) => e,
-        Err(e) => return fail_all(&cfg, rx, &inflight, &metrics, format!("engine: {e:#}")),
-    };
-    let graph = match engine.load(&cfg.graph_key) {
-        Ok(g) => g,
+    // forward handles (PJRT executables) are not Send: the executor is
+    // brought up HERE, through the worker's backend, from the manifest
+    // the builder parsed once for the whole pool.
+    let fwd = match cfg.backend.forward(&manifest, &cfg.graph_key) {
+        Ok(f) => f,
         Err(e) => {
             return fail_all(
                 &cfg,
                 rx,
                 &inflight,
                 &metrics,
-                format!("graph '{}': {e:#}", cfg.graph_key),
+                format!(
+                    "backend '{}', graph '{}': {e:#}",
+                    cfg.backend.name(),
+                    cfg.graph_key
+                ),
             )
         }
     };
+    let fwd: &dyn Forward = fwd.as_ref();
     metrics
         .compile_ms
-        .store(engine.total_compile_ms() as u64, Ordering::Relaxed);
-    debug_assert_eq!(fwd_batch_shape(&graph).1, cfg.seq);
+        .store(fwd.compile_ms(), Ordering::Relaxed);
+    debug_assert_eq!(fwd.batch_shape().1, cfg.seq);
     // generative serving needs [batch, seq, vocab] logits; classify
     // graphs keep `vocab` empty and bounce `Job::Gen` with a typed error
-    let vocab = graph
-        .spec
-        .outputs
-        .first()
-        .filter(|o| o.shape.len() == 3)
-        .map(|o| o.shape[2]);
+    let vocab = fwd.vocab();
 
     let mut batcher: Batcher<WorkRequest> =
         Batcher::with_clock(cfg.max_batch, cfg.max_wait, cfg.clock.clone());
@@ -290,7 +293,7 @@ fn worker_loop(
                     }
                     batcher.push(&task, r);
                 }
-                Job::Gen(g) => accept_gen(&cfg, &graph, vocab, &metrics, &inflight, &mut lanes, g),
+                Job::Gen(g) => accept_gen(&cfg, fwd, vocab, &metrics, &inflight, &mut lanes, g),
                 Job::Shutdown => {
                     if open {
                         open = false;
@@ -372,7 +375,7 @@ fn worker_loop(
             batch_idx += 1;
             let modeled = sched.as_ref().map(|s| s.modeled_batch(reqs.len()));
             serve_batch(
-                &cfg, &graph, &meta, &registry, &metrics, &inflight, batch_idx,
+                &cfg, fwd, &meta, &registry, &metrics, &inflight, batch_idx,
                 &mut last_adapter, &mut gap_recorded, task, reqs, modeled,
             );
             if !open {
@@ -390,7 +393,7 @@ fn worker_loop(
         for (task, lane) in lanes.iter_mut() {
             let outcome = step_lane(
                 &cfg,
-                &graph,
+                fwd,
                 &meta,
                 &registry,
                 &metrics,
@@ -461,14 +464,14 @@ fn worker_loop(
 /// graph cannot generate.
 fn accept_gen(
     cfg: &WorkerConfig,
-    graph: &crate::runtime::LoadedGraph,
+    fwd: &dyn Forward,
     vocab: Option<usize>,
     metrics: &Metrics,
     inflight: &AtomicUsize,
     lanes: &mut BTreeMap<String, DecodeLane>,
     mut g: GenRequest,
 ) {
-    let (b, s) = fwd_batch_shape(graph);
+    let (b, s) = fwd.batch_shape();
     let Some(vocab) = vocab else {
         metrics.errors.fetch_add(1, Ordering::Relaxed);
         let _ = g.resp.send(Err(ServeError::Batch {
@@ -506,7 +509,7 @@ fn accept_gen(
 #[allow(clippy::too_many_arguments)]
 fn step_lane(
     cfg: &WorkerConfig,
-    graph: &crate::runtime::LoadedGraph,
+    fwd: &dyn Forward,
     meta: &ParamStore,
     registry: &SharedRegistry,
     metrics: &Metrics,
@@ -588,7 +591,7 @@ fn step_lane(
     let seed = batch_idx
         .wrapping_mul(0x9e37_79b9_7f4a_7c15)
         .wrapping_add(cfg.worker as u64);
-    let logits = match lm_logits(graph, meta, &adapter, lane.engine.inputs(), cfg.hw, seed) {
+    let logits = match fwd.lm_logits(meta, &adapter, lane.engine.inputs(), cfg.hw, seed) {
         Ok(l) => l,
         Err(e) => {
             let detail = format!("{e:#}");
@@ -726,7 +729,7 @@ fn cold_or_missing(cfg: &WorkerConfig, task: &str, weight: usize) -> ServeError 
 #[allow(clippy::too_many_arguments)]
 fn serve_batch(
     cfg: &WorkerConfig,
-    graph: &crate::runtime::LoadedGraph,
+    fwd: &dyn Forward,
     meta: &ParamStore,
     registry: &SharedRegistry,
     metrics: &Metrics,
@@ -779,7 +782,7 @@ fn serve_batch(
     let seed = batch_idx
         .wrapping_mul(0x9e37_79b9_7f4a_7c15)
         .wrapping_add(cfg.worker as u64);
-    match cls_logits(graph, meta, &adapter, &tokens, cfg.hw, seed) {
+    match fwd.cls_logits(meta, &adapter, &tokens, cfg.hw, seed) {
         Ok(rows) if rows.len() != n => {
             metrics.errors.fetch_add(n as u64, Ordering::Relaxed);
             let detail = format!("graph returned {} rows for {n} requests", rows.len());

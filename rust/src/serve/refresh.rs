@@ -382,6 +382,12 @@ pub struct RefreshConfig {
     /// Hard cap on optimizer steps per refit.
     pub step_budget: usize,
     pub decay: DecayModel,
+    /// Per-task decay-model overrides. Heterogeneous pools
+    /// ([`ServerBuilder::backend`](super::api::ServerBuilder::backend))
+    /// install each routed task's OWN backend physics here — a task on
+    /// a drift-free digital backend never triggers a refit while its
+    /// PCM-routed neighbours keep their drift clocks.
+    per_task_decay: BTreeMap<String, DecayModel>,
     pub refitter: Arc<dyn Refitter>,
 }
 
@@ -394,6 +400,7 @@ impl RefreshConfig {
             time_scale: 1.0,
             step_budget: 50,
             decay,
+            per_task_decay: BTreeMap::new(),
             refitter,
         }
     }
@@ -406,6 +413,13 @@ impl RefreshConfig {
     /// Override the tolerance for one task.
     pub fn task_tolerance(mut self, task: &str, tol: f64) -> Self {
         self.per_task.insert(task.to_string(), tol);
+        self
+    }
+
+    /// Override the decay model for one task (its substrate's physics;
+    /// see the `per_task_decay` field docs).
+    pub fn task_decay(mut self, task: &str, decay: DecayModel) -> Self {
+        self.per_task_decay.insert(task.to_string(), decay);
         self
     }
 
@@ -428,6 +442,18 @@ impl RefreshConfig {
         self.per_task.get(task).copied().unwrap_or(self.tolerance)
     }
 
+    /// The per-task tolerance override map (read by the HAL router,
+    /// which weighs tolerance-maintenance cost per backend).
+    pub fn task_tolerances(&self) -> &BTreeMap<String, f64> {
+        &self.per_task
+    }
+
+    /// The decay model governing `task`: its override when one is
+    /// installed, the pool default otherwise.
+    pub fn decay_for(&self, task: &str) -> &DecayModel {
+        self.per_task_decay.get(task).unwrap_or(&self.decay)
+    }
+
     /// Reject tolerances at or below the decay model's age-0 floor.
     ///
     /// A [`DecayModel::Sampled`] floor is the programming noise, which
@@ -436,16 +462,27 @@ impl RefreshConfig {
     /// training steps every `check_every`, forever). The builder calls
     /// this before spawning the refresh worker.
     pub fn validate(&self) -> std::result::Result<(), String> {
-        let floor = self.decay.predicted_decay(0.0);
-        let mut tolerances: Vec<(&str, f64)> = vec![("default", self.tolerance)];
-        tolerances.extend(self.per_task.iter().map(|(t, tol)| (t.as_str(), *tol)));
-        for (task, tol) in tolerances {
+        let check = |task: &str, tol: f64, decay: &DecayModel| {
+            let floor = decay.predicted_decay(0.0);
             if tol <= floor {
                 return Err(format!(
                     "refresh tolerance {tol} for '{task}' is at or below the decay \
                      model's age-0 floor {floor}: every tick would refit forever"
                 ));
             }
+            Ok(())
+        };
+        check("default", self.tolerance, &self.decay)?;
+        // every task with EITHER override is checked against its
+        // effective (tolerance, decay) pair
+        let tasks: std::collections::BTreeSet<&str> = self
+            .per_task
+            .keys()
+            .chain(self.per_task_decay.keys())
+            .map(String::as_str)
+            .collect();
+        for task in tasks {
+            check(task, self.tolerance_for(task), self.decay_for(task))?;
         }
         Ok(())
     }
@@ -461,6 +498,7 @@ impl fmt::Debug for RefreshConfig {
             .field("time_scale", &self.time_scale)
             .field("step_budget", &self.step_budget)
             .field("decay", &self.decay)
+            .field("per_task_decay", &self.per_task_decay)
             .finish_non_exhaustive()
     }
 }
@@ -848,7 +886,7 @@ impl RefreshPolicy {
     /// tolerance-crossing instant is computed here, once per
     /// deployment (for a Sampled model this is the expensive part).
     pub fn track(&mut self, task: &str, now: Instant, version: u64) {
-        let age = self.cfg.decay.trigger_age(self.cfg.tolerance_for(task));
+        let age = self.cfg.decay_for(task).trigger_age(self.cfg.tolerance_for(task));
         let scaled = age / self.cfg.time_scale;
         let due_at = (scaled.is_finite() && scaled < MAX_DUE_SECS)
             .then(|| now + Duration::from_secs_f64(scaled));
@@ -909,7 +947,7 @@ impl RefreshPolicy {
     /// Predicted decay of `task` at `now`.
     pub fn predicted_decay(&self, task: &str, now: Instant) -> Option<f64> {
         self.drift_age_secs(task, now)
-            .map(|age| self.cfg.decay.predicted_decay(age))
+            .map(|age| self.cfg.decay_for(task).predicted_decay(age))
     }
 
     /// Modeled drift age (scaled seconds) at which `task` crosses its
@@ -919,7 +957,7 @@ impl RefreshPolicy {
         if !self.tracked.read().contains_key(task) {
             return None;
         }
-        let age = self.cfg.decay.trigger_age(self.cfg.tolerance_for(task));
+        let age = self.cfg.decay_for(task).trigger_age(self.cfg.tolerance_for(task));
         age.is_finite().then_some(age)
     }
 
@@ -1142,10 +1180,12 @@ impl RefreshRunner {
             return Ok(None);
         }
         let age = self.policy.drift_age_secs(task, now).unwrap_or(0.0);
-        let pre = self.policy.cfg.decay.predicted_decay(age);
+        let pre = self.policy.cfg.decay_for(task).predicted_decay(age);
 
-        // the substrate the refit trains against: the drifted meta-weights
-        let drifted = match &self.policy.cfg.decay {
+        // the substrate the refit trains against: the drifted
+        // meta-weights, under the TASK's decay model (its backend's
+        // physics on a heterogeneous pool)
+        let drifted = match self.policy.cfg.decay_for(task) {
             DecayModel::Sampled { deployment, .. } => deployment.meta_at(age, true, &mut self.rng),
             DecayModel::Analytic { model, g_rel } => {
                 analytic_drifted_meta(&self.meta, model, *g_rel, age, &mut self.rng)

@@ -9,7 +9,8 @@
 //! delta for the *previous* hand-off. The paper's Fig. 4 analysis shows
 //! that end-to-end latency is minimised when the two stage latencies are
 //! balanced and the PMCA working set fits its 128 KiB TCDM — the exact
-//! objective [`crate::pipeline::balance::sweep`] + [`best`] encode.
+//! objective [`crate::pipeline::balance::sweep`] +
+//! [`crate::pipeline::balance::best`] encode.
 //!
 //! [`BatchScheduler`] lifts that offline model into the worker loop:
 //!
@@ -75,10 +76,8 @@ use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
-use crate::pipeline::balance::{best, sweep, BalancePoint};
-use crate::pipeline::schedule::pipeline_latency;
+use crate::pipeline::balance::{latency_table, BalancePoint};
 use crate::pmca::cluster::SnitchCluster;
-use crate::pmca::kernels::LoraWorkload;
 use crate::pmca::redmule::RedMulE;
 
 use super::batcher::Batcher;
@@ -409,12 +408,19 @@ impl BatchScheduler {
     ) -> BatchScheduler {
         let seq = cfg.seq_len.max(1);
         let max_batch = max_batch.max(1);
-        let points = sweep(cfg.m, cfg.n, cfg.r, cfg.t_int_ns, seq, cluster, engine);
-        let balance = best(&points);
-        let w = LoraWorkload::new(cfg.m, cfg.n, cfg.r, balance.t);
-        let modeled_ns = (1..=max_batch)
-            .map(|b| pipeline_latency(&w, cfg.t_int_ns, b * seq, cluster, engine).steady_ns)
-            .collect();
+        // the ONE shared hardware cost table — identical math feeds the
+        // HAL's per-backend routing CostModel (`serve::hal`), so close
+        // decisions and placement decisions can never disagree
+        let (balance, modeled_ns) = latency_table(
+            cfg.m,
+            cfg.n,
+            cfg.r,
+            cfg.t_int_ns,
+            seq,
+            max_batch,
+            cluster,
+            engine,
+        );
         BatchScheduler {
             cfg,
             max_batch,
@@ -731,6 +737,7 @@ impl BatchScheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::pipeline::balance::{best, sweep};
     use std::sync::Arc;
 
     fn sched(max_batch: usize) -> BatchScheduler {

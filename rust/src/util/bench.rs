@@ -2,11 +2,16 @@
 //!
 //! `cargo bench` targets use `harness = false` and drive this directly.
 //! Methodology follows criterion's core loop: warmup, then timed batches
-//! until a wall-clock budget is hit; reports mean / p50 / p95 over batch
-//! means plus throughput if an item count is supplied.
+//! until a wall-clock budget is hit; reports mean / p50 / p95 / p99 over
+//! batch means plus throughput if an item count is supplied. Results can
+//! be persisted machine-readably with [`Bencher::write_json`]
+//! (`BENCH_<name>.json`), so CI can diff serving-bench regressions
+//! without scraping stdout.
 
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
+use super::json::Value;
 use super::stats;
 
 #[derive(Debug, Clone)]
@@ -16,6 +21,7 @@ pub struct BenchResult {
     pub mean_ns: f64,
     pub p50_ns: f64,
     pub p95_ns: f64,
+    pub p99_ns: f64,
     pub throughput: Option<f64>, // items / second
     /// Cost-model prediction for one iteration (ns), when the scenario
     /// has one (e.g. the serving scheduler's modeled batch latency);
@@ -24,6 +30,25 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    /// One result as a JSON object (`scenario`, the latency percentiles,
+    /// and — when present — `throughput` / `modeled_ns`).
+    pub fn to_json(&self) -> Value {
+        let mut pairs = vec![
+            ("scenario", Value::str(self.name.clone())),
+            ("iters", Value::num(self.iters as f64)),
+            ("mean_ns", Value::num(self.mean_ns)),
+            ("p50_ns", Value::num(self.p50_ns)),
+            ("p95_ns", Value::num(self.p95_ns)),
+            ("p99_ns", Value::num(self.p99_ns)),
+        ];
+        if let Some(t) = self.throughput {
+            pairs.push(("throughput", Value::num(t)));
+        }
+        if let Some(m) = self.modeled_ns {
+            pairs.push(("modeled_ns", Value::num(m)));
+        }
+        Value::obj(pairs)
+    }
     pub fn report(&self) -> String {
         let t = match self.throughput {
             Some(t) if t >= 1e9 => format!("  {:8.2} Gitem/s", t / 1e9),
@@ -124,6 +149,7 @@ impl Bencher {
             mean_ns,
             p50_ns: stats::percentile(&batch_means, 50.0),
             p95_ns: stats::percentile(&batch_means, 95.0),
+            p99_ns: stats::percentile(&batch_means, 99.0),
             throughput: items.map(|n| n as f64 * 1e9 / mean_ns),
             modeled_ns: None,
         };
@@ -159,12 +185,33 @@ impl Bencher {
             mean_ns: ns,
             p50_ns: ns,
             p95_ns: ns,
+            p99_ns: ns,
             throughput: None,
             modeled_ns,
         };
         println!("{}", result.report());
         self.results.push(result);
         out
+    }
+
+    /// Persist every recorded result to `BENCH_<name>.json` in the
+    /// current directory (the serving benches call this so CI and
+    /// scripts can diff runs without scraping stdout). Returns the
+    /// path written.
+    pub fn write_json(&self, name: &str) -> std::io::Result<PathBuf> {
+        self.write_json_to(Path::new("."), name)
+    }
+
+    /// [`Self::write_json`] into an explicit directory.
+    pub fn write_json_to(&self, dir: &Path, name: &str) -> std::io::Result<PathBuf> {
+        let results: Vec<Value> = self.results.iter().map(BenchResult::to_json).collect();
+        let doc = Value::obj(vec![
+            ("bench", Value::str(name)),
+            ("results", Value::Arr(results)),
+        ]);
+        let path = dir.join(format!("BENCH_{name}.json"));
+        std::fs::write(&path, doc.to_string())?;
+        Ok(path)
     }
 }
 
@@ -208,6 +255,29 @@ mod tests {
         assert!(r.report().contains("model"));
         b.once("plain", || black_box(0));
         assert!(!b.results.last().unwrap().report().contains("model"));
+    }
+
+    #[test]
+    fn write_json_round_trips_scenarios() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(1),
+            budget: Duration::from_millis(1),
+            results: vec![],
+        };
+        b.once_modeled("wave", 1234.0, || black_box(0));
+        b.once("plain", || black_box(0));
+        let dir = std::env::temp_dir();
+        let name = format!("bench_selftest_{}", std::process::id());
+        let path = b.write_json_to(&dir, &name).unwrap();
+        let doc = Value::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("bench").unwrap().as_str().unwrap(), name);
+        let results = doc.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[0].get("scenario").unwrap().as_str().unwrap(), "wave");
+        assert_eq!(results[0].get("modeled_ns").unwrap().as_f64().unwrap(), 1234.0);
+        assert!(results[0].get("p99_ns").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(results[1].opt("modeled_ns").is_none());
+        std::fs::remove_file(path).ok();
     }
 
     #[test]

@@ -34,9 +34,10 @@ use ahwa_lora::pcm::PcmModel;
 use ahwa_lora::serve::batcher::Batcher;
 use ahwa_lora::serve::registry::SharedRegistry;
 use ahwa_lora::serve::{
-    step_gate, AdapterCache, BatchScheduler, CacheConfig, CacheLookup, Clock, CoordConfig,
-    DecayModel, Decision, FnRefitter, Metrics, Refit, Refitter, RefreshConfig, RefreshCoordinator,
-    RefreshCoupling, RefreshHandle, RefreshRunner, SchedConfig, StepEngine, StepGate, VirtualClock,
+    drift_free, step_gate, AdapterCache, Backend, BatchScheduler, CacheConfig, CacheLookup, Clock,
+    CoordConfig, DecayModel, Decision, FnRefitter, Metrics, Refit, Refitter, RefreshConfig,
+    RefreshCoordinator, RefreshCoupling, RefreshHandle, RefreshRunner, SchedConfig, StepEngine,
+    StepGate, VirtualClock,
 };
 use ahwa_lora::util::rng::Pcg64;
 use ahwa_lora::util::stats;
@@ -66,7 +67,27 @@ pub fn analytic_runner(
     time_scale: f64,
     metrics: Arc<Metrics>,
 ) -> RefreshRunner {
-    let cfg = RefreshConfig::new(DecayModel::analytic(PcmModel::default()), refitter)
+    runner_with_decay(
+        registry,
+        refitter,
+        DecayModel::analytic(PcmModel::default()),
+        tolerance,
+        time_scale,
+        metrics,
+    )
+}
+
+/// [`analytic_runner`] generalised over the decay model, so a SimPool
+/// can run on an arbitrary backend's drift physics (`serve::hal`).
+pub fn runner_with_decay(
+    registry: &SharedRegistry,
+    refitter: Arc<dyn Refitter>,
+    decay: DecayModel,
+    tolerance: f64,
+    time_scale: f64,
+    metrics: Arc<Metrics>,
+) -> RefreshRunner {
+    let cfg = RefreshConfig::new(decay, refitter)
         .tolerance(tolerance)
         .time_scale(time_scale);
     RefreshRunner::new(
@@ -133,6 +154,9 @@ pub struct SimPoolBuilder {
     /// Virtual time one refit consumes (the modeled step budget).
     refit_advance: Duration,
     sched_cfg: SchedConfig,
+    /// HAL backend whose drift model and scheduler adaptation the pool
+    /// runs on; `None` keeps the historical analytic-PCM default.
+    backend: Option<Arc<dyn Backend>>,
 }
 
 impl SimPoolBuilder {
@@ -186,6 +210,16 @@ impl SimPoolBuilder {
         self
     }
 
+    /// Run the pool on an explicit `serve::hal` backend: its drift
+    /// model drives the refresh policy and its `adapt_sched` shapes
+    /// every worker's scheduler config. With `PcmPjrt::default()` this
+    /// is behavior-identical to the builder default (pinned by the
+    /// `hal_conformance` suite).
+    pub fn backend(mut self, b: Arc<dyn Backend>) -> Self {
+        self.backend = Some(b);
+        self
+    }
+
     pub fn build(self) -> SimPool {
         let clock = Arc::new(VirtualClock::new());
         let registry = SharedRegistry::new();
@@ -214,11 +248,22 @@ impl SimPoolBuilder {
             ))
         };
 
-        let age = DecayModel::analytic(PcmModel::default()).trigger_age(self.tolerance);
-        let time_scale = age / self.trigger_in.as_secs_f64().max(1e-12);
-        let mut runner = analytic_runner(
+        let decay = match &self.backend {
+            Some(b) => b.drift_model().unwrap_or_else(drift_free),
+            None => DecayModel::analytic(PcmModel::default()),
+        };
+        let age = decay.trigger_age(self.tolerance);
+        // A drift-free backend never triggers: leave the clock unscaled
+        // instead of dividing infinity.
+        let time_scale = if age.is_finite() {
+            age / self.trigger_in.as_secs_f64().max(1e-12)
+        } else {
+            1.0
+        };
+        let mut runner = runner_with_decay(
             &registry,
             refitter,
+            decay,
             self.tolerance,
             time_scale,
             metrics.clone(),
@@ -236,7 +281,10 @@ impl SimPoolBuilder {
         let mut workers = Vec::with_capacity(self.workers);
         let mut task_worker = BTreeMap::new();
         for _ in 0..self.workers {
-            let mut scfg = self.sched_cfg;
+            let mut scfg = match &self.backend {
+                Some(b) => b.adapt_sched(self.sched_cfg),
+                None => self.sched_cfg,
+            };
             if let Some(c) = self.coupling {
                 scfg = scfg.coupling(c);
             }
@@ -324,6 +372,7 @@ impl SimPool {
             coord: None,
             refit_advance: Duration::ZERO,
             sched_cfg: SchedConfig::for_layer(128, 128, 8).seq(320),
+            backend: None,
         }
     }
 

@@ -1,0 +1,415 @@
+//! Backend-HAL conformance suite (`serve::hal`).
+//!
+//! Pinned:
+//!
+//! * **Default-backend equivalence.** A `SimPool` built on an explicit
+//!   `PcmPjrt::default()` backend produces a bit-identical batch and
+//!   swap trace to the builder default (no backend), and the backend's
+//!   cost model IS the scheduler's latency table — the HAL introduces
+//!   zero behavior change on the reference substrate (which is why the
+//!   four existing conformance suites pass unmodified on it).
+//! * **Heterogeneous routing.** On a mixed PCM + digital-reference
+//!   pool, each task routes to the backend minimising modeled service
+//!   plus tolerance-maintenance cost: tight tolerances leave the
+//!   drifting substrate, relaxed ones stay on the fast one, and the
+//!   routed assignment is strictly cheaper than a cost-blind
+//!   round-robin placement of the same tasks.
+//! * **Routing properties** (property tests over random cost tables):
+//!   the decision is deterministic, stays in range, respects pins, and
+//!   never places a task on a backend that cannot sustain its arrival
+//!   rate while another can.
+//! * **Hermetic serving.** A `DigitalRef` pool stands up a REAL
+//!   `Server` (threads, channels, admission) with no artifacts and no
+//!   XLA, serves deterministic logits, and a mixed pool routes
+//!   requests through the backend cost models end to end.
+//! * **Build validation.** Cross-config mistakes fail fast as typed
+//!   `BuildError`s, before any manifest I/O — so they are pinned here
+//!   without artifacts (the `--no-default-features` lean build
+//!   compiles and runs every ungated test in this file).
+
+#[path = "common/refresh_sim.rs"]
+mod refresh_sim;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use ahwa_lora::model::params::ParamStore;
+use ahwa_lora::pcm::PcmModel;
+use ahwa_lora::serve::hal::{route_one, route_tasks};
+use ahwa_lora::serve::registry::SharedRegistry;
+use ahwa_lora::serve::{
+    Backend, BackendProfile, BatchScheduler, BuildError, CoordConfig, CostModel, DecayModel,
+    PcmPjrt, RefreshCoupling, SchedConfig, Server, TaskProfile,
+};
+use ahwa_lora::util::proptest::check;
+use refresh_sim::SimPool;
+
+const TASKS: [&str; 3] = ["t0", "t1", "t2"];
+/// 3 trigger cycles on the builder default (`trigger_in` = 100 ms,
+/// 500 µs arrivals).
+const ROUNDS: usize = 600;
+const IA: Duration = Duration::from_micros(500);
+
+type BatchTrace = Vec<(usize, String, Duration, Duration, usize, u64)>;
+type SwapTrace = Vec<(String, Duration, u64)>;
+
+/// Drive the standard workload and return the full observable trace,
+/// with instants rebased onto the pool's own epoch so traces from two
+/// pools (two `VirtualClock`s) compare exactly.
+fn drive(mut pool: SimPool) -> (BatchTrace, SwapTrace) {
+    let t0 = pool.now();
+    pool.run_rounds(ROUNDS, IA);
+    pool.flush(IA);
+    let batches = pool
+        .batches
+        .iter()
+        .map(|b| {
+            (
+                b.worker,
+                b.task.clone(),
+                b.popped_at.saturating_duration_since(t0),
+                b.done_at.saturating_duration_since(t0),
+                b.fill,
+                b.version,
+            )
+        })
+        .collect();
+    let swaps = pool
+        .swaps
+        .iter()
+        .map(|s| (s.task.clone(), s.at.saturating_duration_since(t0), s.version))
+        .collect();
+    (batches, swaps)
+}
+
+#[test]
+fn explicit_pcm_backend_is_behavior_identical_to_the_default_pool() {
+    let base = || SimPool::builder().workers(2).tasks(&TASKS);
+    let (batches, swaps) = drive(base().build());
+    let (hal_batches, hal_swaps) = drive(base().backend(Arc::new(PcmPjrt::default())).build());
+    assert!(!batches.is_empty(), "the trace exercised the serve path");
+    assert!(!swaps.is_empty(), "the trace exercised the refresh path");
+    assert_eq!(batches, hal_batches, "batch trace must be bit-identical");
+    assert_eq!(swaps, hal_swaps, "swap trace must be bit-identical");
+}
+
+#[test]
+fn pcm_cost_model_is_the_scheduler_latency_table() {
+    let layer = SchedConfig::for_layer(128, 128, 8).seq(320);
+    let be = PcmPjrt::default();
+    let adapted = be.adapt_sched(layer);
+    assert_eq!(
+        adapted.t_int_ns, layer.t_int_ns,
+        "PcmPjrt::adapt_sched is the identity"
+    );
+    let cm = be.cost_model(&layer, refresh_sim::MAX_BATCH);
+    let sched = BatchScheduler::new(layer, refresh_sim::MAX_BATCH, Duration::from_millis(5));
+    for fill in 1..=refresh_sim::MAX_BATCH {
+        assert_eq!(
+            cm.batch_ns(fill),
+            sched.modeled_batch_ns(fill),
+            "placement and batch-close decisions diverged at fill {fill}"
+        );
+    }
+}
+
+#[test]
+fn routing_decision_properties() {
+    check("route_one: deterministic, in range, sustaining-first", 300, |g| {
+        let n = g.usize_in(1, 4);
+        let backends: Vec<BackendProfile> = (0..n)
+            .map(|i| {
+                let base = g.f64_in(50.0, 5_000.0);
+                let table: Vec<f64> = (1..=4u32)
+                    .map(|b| base * f64::from(b).powf(g.f64_in(0.5, 1.0)))
+                    .collect();
+                BackendProfile {
+                    name: format!("b{i}"),
+                    cost: CostModel::from_table(table),
+                    drift: if g.bool() {
+                        Some(DecayModel::analytic(PcmModel::default()))
+                    } else {
+                        None
+                    },
+                    refit_ns: g.f64_in(0.0, 1e7),
+                }
+            })
+            .collect();
+        let gap = g.f64_in(10.0, 1e7);
+        let tol = g.f64_in(1e-4, 0.9);
+        let picked = route_one(&backends, gap, tol);
+        assert!(picked < n, "route stays in range");
+        assert_eq!(picked, route_one(&backends, gap, tol), "decision is deterministic");
+        if backends.iter().any(|b| b.cost.can_sustain(gap)) {
+            assert!(
+                backends[picked].cost.can_sustain(gap),
+                "never a non-sustaining backend while another sustains"
+            );
+        }
+        let pin = g.usize_in(0, n - 1);
+        let tasks = vec![
+            TaskProfile {
+                task: "pinned".into(),
+                tolerance: tol,
+                interarrival_ns: gap,
+                pinned: Some(pin),
+            },
+            TaskProfile {
+                task: "free".into(),
+                tolerance: tol,
+                interarrival_ns: gap,
+                pinned: None,
+            },
+        ];
+        let routed = route_tasks(&backends, &tasks);
+        assert_eq!(routed[0], pin, "pins override the cost decision");
+        assert_eq!(routed[1], picked, "unpinned tasks follow route_one");
+    });
+}
+
+#[test]
+fn builder_validation_fails_fast_before_io() {
+    // none of these configurations reach the manifest: every error
+    // below is produced hermetically, with no artifacts on disk
+    let coupled = SchedConfig::for_layer(128, 128, 8).coupling(RefreshCoupling::default());
+    let err = Server::builder("any")
+        .scheduler(coupled)
+        .build(ParamStore::default(), SharedRegistry::new())
+        .unwrap_err();
+    assert_eq!(err, BuildError::CouplingWithoutRefresh);
+
+    let err = Server::builder("any")
+        .coordination(CoordConfig::default())
+        .build(ParamStore::default(), SharedRegistry::new())
+        .unwrap_err();
+    assert_eq!(err, BuildError::CoordinationWithoutCoupling);
+
+    let err = Server::builder("any")
+        .workers(1)
+        .backend(Arc::new(PcmPjrt::default()))
+        .backend(Arc::new(PcmPjrt::default()))
+        .build(ParamStore::default(), SharedRegistry::new())
+        .unwrap_err();
+    assert!(
+        matches!(&err, BuildError::Backends { detail } if detail.contains("at least one worker")),
+        "2 backends cannot share 1 worker: {err}"
+    );
+
+    let err = Server::builder("any")
+        .workers(2)
+        .backend(Arc::new(PcmPjrt::default()))
+        .backend(Arc::new(PcmPjrt::default()))
+        .build(ParamStore::default(), SharedRegistry::new())
+        .unwrap_err();
+    assert!(
+        matches!(&err, BuildError::Backends { detail } if detail.contains("duplicate")),
+        "backend names must be unique: {err}"
+    );
+
+    let err = Server::builder("any")
+        .pin_task("task", 3)
+        .build(ParamStore::default(), SharedRegistry::new())
+        .unwrap_err();
+    assert!(
+        matches!(&err, BuildError::Backends { detail } if detail.contains("pinned")),
+        "pins must address a registered backend: {err}"
+    );
+}
+
+#[cfg(feature = "digital-ref")]
+mod digital {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    use ahwa_lora::config::manifest::{GraphSpec, HwDefaults, IoSpec, Manifest, Role, VariantCfg};
+    use ahwa_lora::serve::hal::assignment_cost;
+    use ahwa_lora::serve::{DigitalRef, FnRefitter, Refit, Refitter, RefreshConfig};
+    use refresh_sim::adapter;
+
+    #[test]
+    fn drift_free_backend_never_refits_and_prices_the_slowdown() {
+        let base = SimPool::builder().workers(2).tasks(&TASKS).build();
+        let mut pool = SimPool::builder()
+            .workers(2)
+            .tasks(&TASKS)
+            .backend(Arc::new(DigitalRef::default()))
+            .build();
+        pool.run_rounds(ROUNDS, IA);
+        pool.flush(IA);
+        assert_eq!(pool.served(), ROUNDS * TASKS.len(), "every request served");
+        assert!(pool.swaps.is_empty(), "a drift-free substrate never triggers a refresh");
+        for fill in 1..=refresh_sim::MAX_BATCH {
+            assert!(
+                pool.modeled_batch_ns(fill) > base.modeled_batch_ns(fill),
+                "the digital slowdown must be priced into the worker schedulers (fill {fill})"
+            );
+        }
+    }
+
+    #[test]
+    fn routed_placement_beats_cost_blind_round_robin() {
+        let layer = SchedConfig::for_layer(128, 128, 8).seq(320);
+        let backends = vec![
+            BackendProfile::of(&PcmPjrt::default(), &layer, 8),
+            BackendProfile::of(&DigitalRef::default(), &layer, 8),
+        ];
+        // slow traffic: every backend sustains the rate, so the
+        // decision is pure placement cost — tight tolerances pay a
+        // huge PCM maintenance bill, relaxed ones only the digital
+        // slowdown
+        let tasks: Vec<TaskProfile> = (0..6)
+            .map(|i| TaskProfile {
+                task: format!("t{i}"),
+                tolerance: if i % 2 == 0 { 1e-6 } else { 0.5 },
+                interarrival_ns: 1e9,
+                pinned: None,
+            })
+            .collect();
+        let routed = route_tasks(&backends, &tasks);
+        for (t, &b) in tasks.iter().zip(&routed) {
+            let expect = usize::from(t.tolerance < 0.5);
+            assert_eq!(b, expect, "task {} (tolerance {})", t.task, t.tolerance);
+            for (other, profile) in backends.iter().enumerate() {
+                assert!(
+                    backends[b].placement_cost(t.interarrival_ns, t.tolerance)
+                        <= profile.placement_cost(t.interarrival_ns, t.tolerance),
+                    "task {} routed to {b} but backend {other} is cheaper",
+                    t.task
+                );
+            }
+        }
+        // the cost-blind baseline: round-robin in task order, which
+        // misplaces every task of this trace
+        let naive: Vec<usize> = (0..tasks.len()).map(|i| i % backends.len()).collect();
+        let routed_cost = assignment_cost(&backends, &tasks, &routed);
+        let naive_cost = assignment_cost(&backends, &tasks, &naive);
+        assert!(
+            routed_cost < naive_cost,
+            "cost-model routing ({routed_cost:.0} ns) must beat round-robin ({naive_cost:.0} ns)"
+        );
+    }
+
+    /// Shapes-only manifest: enough for admission (variant + graph
+    /// seq) and for the digital forward, with no files behind it.
+    fn cls_manifest() -> Manifest {
+        let variant = VariantCfg {
+            name: "base".into(),
+            kind: "encoder".into(),
+            vocab: 100,
+            seq: 16,
+            d_model: 128,
+            n_layers: 2,
+            n_heads: 4,
+            d_ff: 256,
+            d_emb: 128,
+            n_cls: 3,
+            rank: 8,
+            lora_alpha: 16.0,
+            train_batch: 8,
+            eval_batch: 8,
+        };
+        let graph = GraphSpec {
+            key: "base/fwd_cls".into(),
+            kind: "fwd_cls".into(),
+            variant: "base".into(),
+            file: String::new(),
+            inputs: vec![IoSpec {
+                name: "data/tokens".into(),
+                role: Role::Data,
+                shape: vec![4, 16],
+                dtype: "i32".into(),
+            }],
+            outputs: vec![IoSpec {
+                name: "logits".into(),
+                role: Role::Logits,
+                shape: vec![4, 3],
+                dtype: "f32".into(),
+            }],
+        };
+        Manifest {
+            root: std::path::PathBuf::from("hal-conformance-unused"),
+            hw: HwDefaults {
+                weight_noise: 0.0,
+                adc_noise: 0.0,
+                clip_sigma: 127.0,
+                dac_bits: 8,
+                adc_bits: 8,
+                g_max_us: 25.0,
+                t0_seconds: 20.0,
+            },
+            grpo_group: 1,
+            variants: BTreeMap::from([("base".to_string(), variant)]),
+            graphs: BTreeMap::from([("base/fwd_cls".to_string(), graph)]),
+        }
+    }
+
+    #[test]
+    fn digital_pool_serves_hermetically_with_deterministic_logits() {
+        let registry = SharedRegistry::new();
+        registry.deploy("task", adapter(1.0));
+        let server = Server::builder("base")
+            .manifest(cls_manifest())
+            .workers(2)
+            .backend(Arc::new(DigitalRef::default()))
+            .build(ParamStore::default(), registry)
+            .expect("a digital pool needs no artifacts");
+        let client = server.client();
+        let tokens: Vec<i32> = (0..16).collect();
+        let a = client.submit("task", &tokens).unwrap().wait().unwrap();
+        let b = client.submit("task", &tokens).unwrap().wait().unwrap();
+        assert_eq!(a.logits.len(), 3, "one class-logit row");
+        assert!(a.logits.iter().all(|v| v.is_finite()));
+        assert_eq!(a.logits, b.logits, "the digital forward is deterministic");
+        assert!(server.routing().is_empty(), "one backend: no router, hash placement");
+        server.shutdown().expect("clean shutdown");
+    }
+
+    #[test]
+    fn mixed_pool_routes_and_serves_through_backend_cost_models() {
+        let registry = SharedRegistry::new();
+        registry.deploy("tight", adapter(1.0));
+        registry.deploy("relaxed", adapter(2.0));
+        let refitter: Arc<dyn Refitter> = Arc::new(FnRefitter(
+            |_: &str,
+             current: &ParamStore,
+             _: &ParamStore,
+             budget: usize|
+             -> anyhow::Result<Refit> {
+                Ok(Refit {
+                    params: current.clone(),
+                    steps: budget,
+                })
+            },
+        ));
+        let refresh = RefreshConfig::new(DecayModel::analytic(PcmModel::default()), refitter)
+            .tolerance(0.5)
+            .task_tolerance("tight", 1e-6);
+        // a deliberately expensive PCM refit: keeping the tight task
+        // inside tolerance on the drifting substrate dwarfs the
+        // digital slowdown, so the cost model MUST move it — while
+        // the relaxed task's once-in-an-epoch refresh keeps it on the
+        // faster analog path
+        let server = Server::builder("base")
+            .manifest(cls_manifest())
+            .workers(2)
+            .backend(Arc::new(PcmPjrt::default().refit_ns(5.0e9)))
+            .backend(Arc::new(DigitalRef::default()))
+            .refresh(refresh)
+            .build(ParamStore::default(), registry)
+            .expect("a mixed pool builds without artifacts");
+        assert_eq!(
+            server.routing(),
+            vec![("relaxed".to_string(), 0), ("tight".to_string(), 1)],
+            "tight tolerance moves to the drift-free backend, relaxed stays on PCM"
+        );
+        let client = server.client();
+        let tokens: Vec<i32> = (0..16).collect();
+        let resp = client.submit("tight", &tokens).unwrap().wait().unwrap();
+        assert_eq!(resp.worker, 1, "the digital backend owns worker span [1, 2)");
+        assert_eq!(resp.logits.len(), 3);
+        // worker 0 is a PCM+PJRT worker with no artifacts behind it:
+        // its bring-up failure surfaces at shutdown — the digital span
+        // served real traffic regardless, which is the point
+        assert!(server.shutdown().is_err());
+    }
+}

@@ -15,7 +15,7 @@ use ahwa_lora::model::params::{ParamStore, Tensor};
 use ahwa_lora::pcm::PcmModel;
 use ahwa_lora::serve::registry::SharedRegistry;
 use ahwa_lora::serve::{
-    submit_wave, Clock, CoordConfig, DecayModel, FnRefitter, Metrics, Pending, Refit,
+    submit_wave, BuildError, Clock, CoordConfig, DecayModel, FnRefitter, Metrics, Pending, Refit,
     RefreshConfig, RefreshCoordinator, RefreshRunner, SchedConfig, ServeError, Server,
     ServerBuilder, VirtualClock,
 };
@@ -760,10 +760,12 @@ fn builder_rejects_unknown_variant_and_graph() {
     let err = Server::builder("no-such-variant")
         .build(meta.clone(), SharedRegistry::new())
         .unwrap_err();
-    assert!(matches!(err, ServeError::Init { .. }));
+    assert!(matches!(err, BuildError::Manifest { .. }));
+    // build errors stay representable as the serving error type
+    assert!(matches!(ServeError::from(err), ServeError::Init { .. }));
     let err = Server::builder("tiny")
         .graph("tiny/no_such_graph")
         .build(meta, SharedRegistry::new())
         .unwrap_err();
-    assert!(matches!(err, ServeError::Init { .. }));
+    assert!(matches!(err, BuildError::Graph { .. }));
 }
