@@ -65,6 +65,11 @@ a failure here is in a HERMETIC suite (no engine, no wall clock):
   - decode conformance            cargo test -q --test decode_conformance
   - adapter-cache conformance     cargo test -q --test cache_conformance
   - backend-HAL conformance       cargo test -q --test hal_conformance
+    (includes the adaptive-rebalance/hysteresis property tests and the
+    live span-migration suite on the routed SimPool virtual clock; the
+    crossover gaps are MEASURED from the cost model at runtime, so a
+    failure usually means a latency-model change moved a crossover, not
+    a broken scheduler)
   - scheduler property tests      cargo test -q --test sched_properties
   - PCM property tests            cargo test -q --test pcm_properties
   - pipeline golden values        cargo test -q --test pipeline_golden

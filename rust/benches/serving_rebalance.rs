@@ -1,0 +1,123 @@
+//! Adaptive heterogeneous routing: the cadenced rebalancer vs sticky
+//! cold placement on shifted traffic — hermetic (no artifacts), zero
+//! real sleeps: both drives run on the SAME routed `SimPool`
+//! virtual-clock harness the conformance suite uses
+//! (`tests/common/refresh_sim.rs`).
+//!
+//! Scenario: two PCM substrates whose service/maintenance trade flips
+//! with arrival rate — a fast tier with an expensive refit against a
+//! 4× slower lean tier that refits for free. Tasks cold-place on the
+//! fast tier (cheapest at saturation, the only evidence at build
+//! time); the measured traffic then arrives at an inter-arrival
+//! provably past the cost crossover, so the sticky pool keeps paying
+//! the maintenance bill while the adaptive pool migrates away from it
+//! after the arrival EWMAs seed.
+//!
+//! Reported: wall time of each 60-round drive, the modeled
+//! per-request placement cost p99 of both modes, the p99 win, and the
+//! number of migrations the rebalancer applied.
+
+#[path = "../tests/common/refresh_sim.rs"]
+mod refresh_sim;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use ahwa_lora::serve::hal::route_one;
+use ahwa_lora::serve::{Backend, BackendProfile, PcmPjrt, RebalanceConfig, SchedConfig};
+use ahwa_lora::util::bench::Bencher;
+use ahwa_lora::util::stats;
+use refresh_sim::{gap_shifting_from, SimPool};
+
+/// The crossover geometry of the conformance suite's migration tests:
+/// `(backends, ia)` with the hysteresis gate provably open toward the
+/// lean tier at inter-arrival `ia` — the saving over 600 cooldown
+/// arrivals clears a 0.5 hysteresis bar with 2× margin.
+fn shift_geometry() -> (Vec<Arc<dyn Backend>>, Duration) {
+    let fast: Arc<dyn Backend> = Arc::new(PcmPjrt::default().refit_ns(5.0e9));
+    let lean: Arc<dyn Backend> = Arc::new(
+        PcmPjrt::default()
+            .named("pcm-lean")
+            .t_int_scale(4.0)
+            .refit_ns(0.0)
+            .deploy_latency(Duration::from_micros(100)),
+    );
+    let backends = vec![fast, lean];
+    let layer = SchedConfig::for_layer(128, 128, 8).seq(320);
+    let profiles: Vec<BackendProfile> = backends
+        .iter()
+        .map(|b| BackendProfile::of(b.as_ref(), &layer, refresh_sim::MAX_BATCH))
+        .collect();
+    let cold = route_one(&profiles, f64::INFINITY, 0.05);
+    let dest = 1 - cold;
+    let need = 0.5 * profiles[dest].deploy_latency.as_nanos() as f64 * 2.0 / 600.0;
+    let gap = gap_shifting_from(&profiles, cold, 0.05, need).expect("crossover gap exists");
+    let ia_ns = gap.ceil();
+    assert_eq!(
+        route_one(&profiles, ia_ns, 0.05),
+        dest,
+        "still shifted at the integer gap"
+    );
+    (backends, Duration::from_nanos(ia_ns as u64))
+}
+
+/// One 60-round drive (3 tasks, 180 requests): 3 warmup rounds seed
+/// the arrival EWMAs (and let the adaptive pool converge), then a
+/// clean 57-round window is measured.
+fn drive(adaptive: bool) -> SimPool {
+    let (backends, ia) = shift_geometry();
+    let mut b = SimPool::builder()
+        .workers(2)
+        .tasks(&["s0", "s1", "s2"])
+        .backends(&backends)
+        .trigger_in(Duration::from_secs(1_000_000_000));
+    if adaptive {
+        b = b.rebalance(
+            RebalanceConfig::new()
+                .hysteresis(0.5)
+                .cooldown(ia * 600)
+                .idle_retire(None),
+        );
+    }
+    let mut pool = b.build();
+    pool.run_rounds(3, ia);
+    pool.modeled_cost_ns.clear();
+    pool.run_rounds(57, ia);
+    pool.flush(ia);
+    assert_eq!(pool.lat_ns.len(), 180, "every request served");
+    pool
+}
+
+fn main() {
+    let mut b = Bencher::with_budget(0.5);
+
+    let adaptive = b.once("rebalance/adaptive drive (60 rounds x 3 tasks)", || drive(true));
+    let sticky = b.once("rebalance/sticky drive (60 rounds x 3 tasks)", || drive(false));
+
+    let pa = stats::percentile(&adaptive.modeled_cost_ns, 99.0);
+    let ps = stats::percentile(&sticky.modeled_cost_ns, 99.0);
+    b.once_modeled("rebalance/adaptive modeled p99", pa, || ());
+    b.once_modeled("rebalance/sticky modeled p99", ps, || ());
+    b.once_modeled("rebalance/p99 win (sticky - adaptive)", ps - pa, || ());
+    b.once_modeled("rebalance/migrations applied", adaptive.moves.len() as f64, || ());
+
+    assert!(sticky.moves.is_empty(), "the sticky pool never moves");
+    assert!(
+        !adaptive.moves.is_empty(),
+        "the adaptive pool must migrate off the cold placement"
+    );
+    assert!(
+        pa < ps,
+        "adaptive modeled p99 ({pa:.0} ns) must beat sticky ({ps:.0} ns) on shifted traffic"
+    );
+    println!(
+        "rebalance: {} migrations cut the modeled placement p99 {:.0} ns -> {:.0} ns",
+        adaptive.moves.len(),
+        ps,
+        pa,
+    );
+
+    if let Err(e) = b.write_json("serving_rebalance") {
+        eprintln!("could not write BENCH_serving_rebalance.json: {e}");
+    }
+}

@@ -41,7 +41,10 @@ use crate::util::stats;
 use super::cache::{AdapterCache, CacheConfig, CacheLookup};
 use super::coord::{CoordConfig, RefreshCoordinator};
 use super::decode::{GenConfig, Generation, TokenEvent};
-use super::hal::{drift_free, Backend, BackendProfile, PcmPjrt, Router};
+use super::hal::{
+    drift_free, spawn_rebalance_worker, Backend, BackendProfile, PcmPjrt, PlannedMove,
+    RebalanceConfig, RebalanceRunner, Router,
+};
 use super::pool::{self, GenRequest, Job, WorkRequest, WorkerHandle};
 use super::refresh::{spawn_refresh_worker, RefreshConfig, RefreshEvent, RefreshRunner};
 use super::registry::SharedRegistry;
@@ -414,6 +417,13 @@ pub struct Metrics {
     /// Cold requests shed because the adapter load queue was full
     /// (typed [`ServeError::AdapterCold`] with `loading: false`).
     pub cache_shed: AtomicU64,
+    /// Span migrations applied by the cadenced rebalancer
+    /// ([`super::hal::RebalanceRunner`]); stays 0 when rebalance is off
+    /// — and, post-convergence, under stationary traffic (hysteresis).
+    pub rebalance_moves: AtomicU64,
+    /// Router placements retired after the configured idle horizon
+    /// ([`super::hal::RebalanceConfig::idle_retire`]).
+    pub tasks_retired: AtomicU64,
     latencies_us: Mutex<Vec<f64>>,
     batch_sizes: Mutex<Vec<f64>>,
     /// Scheduler-modeled batch latency samples (µs), recorded alongside
@@ -534,6 +544,8 @@ impl Metrics {
             cache_evictions: self.cache_evictions.load(Ordering::Relaxed),
             cache_prefetch_hits: self.cache_prefetch_hits.load(Ordering::Relaxed),
             cache_shed: self.cache_shed.load(Ordering::Relaxed),
+            rebalance_moves: self.rebalance_moves.load(Ordering::Relaxed),
+            tasks_retired: self.tasks_retired.load(Ordering::Relaxed),
             cold_start_p99_ms: stats::percentile(&cold, 99.0) / 1e6,
             batch_mean: stats::mean(&bs),
             lat_p50_ms: stats::percentile(&lat, 50.0) / 1e3,
@@ -603,6 +615,11 @@ pub struct MetricsSnapshot {
     pub cache_prefetch_hits: u64,
     /// Cold requests shed with a full load queue.
     pub cache_shed: u64,
+    /// Span migrations applied by the cadenced rebalancer (0 when
+    /// rebalance is off or placement has converged).
+    pub rebalance_moves: u64,
+    /// Router placements retired after the idle horizon.
+    pub tasks_retired: u64,
     /// p99 cold-start wait, ms: first demand miss → resident again (0
     /// when nothing ever went cold).
     pub cold_start_p99_ms: f64,
@@ -694,6 +711,13 @@ impl fmt::Display for MetricsSnapshot {
                 write!(f, " mid_seq_swaps={}", self.mid_seq_swaps)?;
             }
         }
+        if self.rebalance_moves > 0 || self.tasks_retired > 0 {
+            write!(
+                f,
+                " rebalance_moves={} tasks_retired={}",
+                self.rebalance_moves, self.tasks_retired
+            )?;
+        }
         if self.cache_hits + self.cache_misses > 0 {
             write!(
                 f,
@@ -743,6 +767,8 @@ pub fn aggregate<'a>(workers: impl IntoIterator<Item = &'a Metrics>) -> MetricsS
         out.cache_evictions += m.cache_evictions.load(Ordering::Relaxed);
         out.cache_prefetch_hits += m.cache_prefetch_hits.load(Ordering::Relaxed);
         out.cache_shed += m.cache_shed.load(Ordering::Relaxed);
+        out.rebalance_moves += m.rebalance_moves.load(Ordering::Relaxed);
+        out.tasks_retired += m.tasks_retired.load(Ordering::Relaxed);
         // the gap is a worst-case, not a flow: max, not sum — and so are
         // the hold peak (each worker records the pool-wide count it saw)
         // and the stagger shift
@@ -878,6 +904,7 @@ pub struct ServerBuilder {
     cache: Option<CacheConfig>,
     backends: Vec<Arc<dyn Backend>>,
     pins: BTreeMap<String, usize>,
+    rebalance: Option<RebalanceConfig>,
     clock: Arc<dyn Clock>,
 }
 
@@ -900,6 +927,7 @@ impl fmt::Debug for ServerBuilder {
             .field("cache", &self.cache)
             .field("backends", &backends)
             .field("pins", &self.pins)
+            .field("rebalance", &self.rebalance)
             .finish_non_exhaustive()
     }
 }
@@ -924,6 +952,7 @@ impl ServerBuilder {
             cache: None,
             backends: Vec::new(),
             pins: BTreeMap::new(),
+            rebalance: None,
             clock: Arc::new(RealClock),
         }
     }
@@ -1069,6 +1098,19 @@ impl ServerBuilder {
         self
     }
 
+    /// Adaptive placement ([`super::hal::RebalanceRunner`]): a cadenced
+    /// background pass re-runs routing against the measured arrival
+    /// EWMAs and migrates tasks between backend spans live — gated by
+    /// hysteresis (a move must save a configurable multiple of the
+    /// destination's deploy latency) and a per-task cooldown so
+    /// placement never flaps. Requires at least two registered
+    /// [`Self::backend`]s (a single-substrate pool has nothing to
+    /// rebalance — [`Self::build`] rejects the combination).
+    pub fn rebalance(mut self, cfg: RebalanceConfig) -> Self {
+        self.rebalance = Some(cfg);
+        self
+    }
+
     /// Time source for enqueue stamps, deadline math, and latency
     /// metrics. Production keeps [`RealClock`]. Note the workers'
     /// *channel waits* are wall-clock either way — deterministic-clock
@@ -1098,6 +1140,15 @@ impl ServerBuilder {
             && (self.refresh.is_none() || !matches!(&self.sched, Some(s) if s.coupling.is_some()))
         {
             return Err(BuildError::CoordinationWithoutCoupling);
+        }
+        if self.rebalance.is_some() && self.backends.len() < 2 {
+            return Err(BuildError::Backends {
+                detail: format!(
+                    "rebalance configured with {} backend(s); adaptive placement \
+                     needs at least two (a single-substrate pool has no router)",
+                    self.backends.len()
+                ),
+            });
         }
 
         // hardware backends: zero registrations = the implicit PCM+PJRT
@@ -1368,6 +1419,39 @@ impl ServerBuilder {
             None => None,
         };
 
+        // adaptive placement: spawned LAST — it reads the router the
+        // client routes through and carries migrations through the
+        // refresh and cache surfaces built above
+        let rebalance = match (self.rebalance, &client.router) {
+            (Some(rcfg), Some(rt)) => {
+                let cadence = rcfg.tick_cadence();
+                let metrics = Arc::new(Metrics::default());
+                let mut runner = RebalanceRunner::new(rcfg, rt.clone(), backends.clone())
+                    .with_metrics(metrics.clone());
+                if let (Some(h), Some(rs)) = (&lifecycle, &refresh) {
+                    runner = runner.with_refresh(h.clone(), rs.runner.clone());
+                }
+                if let Some(c) = &cache {
+                    runner = runner.with_cache(c.clone());
+                }
+                let runner = Arc::new(runner);
+                let (stop, join) =
+                    spawn_rebalance_worker(runner.clone(), self.clock.clone(), cadence).map_err(
+                        |e| BuildError::Spawn {
+                            what: "rebalance worker".to_string(),
+                            detail: e.to_string(),
+                        },
+                    )?;
+                Some(RebalanceState {
+                    runner,
+                    metrics,
+                    stop,
+                    join: Some(join),
+                })
+            }
+            _ => None,
+        };
+
         Ok(Server {
             client,
             registry,
@@ -1375,6 +1459,7 @@ impl ServerBuilder {
             joins,
             clock: self.clock,
             refresh,
+            rebalance,
             cache,
         })
     }
@@ -1643,6 +1728,16 @@ struct RefreshState {
     join: Option<std::thread::JoinHandle<()>>,
 }
 
+/// The adaptive-placement worker attached to a heterogeneous pool: the
+/// cadenced [`RebalanceRunner`] plus its counters and stop/join
+/// plumbing (same shutdown discipline as [`RefreshState`]).
+struct RebalanceState {
+    runner: Arc<RebalanceRunner>,
+    metrics: Arc<Metrics>,
+    stop: Sender<()>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
 /// Handle to a running pool: hands out clients, reports metrics, and
 /// owns graceful shutdown (drain everything, join every worker).
 pub struct Server {
@@ -1652,6 +1747,7 @@ pub struct Server {
     joins: Vec<std::thread::JoinHandle<ServeResult<()>>>,
     clock: Arc<dyn Clock>,
     refresh: Option<RefreshState>,
+    rebalance: Option<RebalanceState>,
     cache: Option<Arc<AdapterCache>>,
 }
 
@@ -1705,6 +1801,7 @@ impl Server {
             self.worker_metrics
                 .iter()
                 .chain(self.refresh.as_ref().map(|r| &r.metrics))
+                .chain(self.rebalance.as_ref().map(|r| &r.metrics))
                 .chain(self.cache.as_ref().map(|c| c.metrics()))
                 .map(|m| m.as_ref()),
         )
@@ -1719,6 +1816,10 @@ impl Server {
         }
         if let Some(r) = &self.refresh {
             out.push_str(&r.metrics.snapshot("refresh").to_string());
+            out.push('\n');
+        }
+        if let Some(r) = &self.rebalance {
+            out.push_str(&r.metrics.snapshot("rebalance").to_string());
             out.push('\n');
         }
         if let Some(c) = &self.cache {
@@ -1739,6 +1840,18 @@ impl Server {
         }
     }
 
+    /// Force an immediate rebalance pass on the pool clock (the
+    /// background worker does this every
+    /// [`RebalanceConfig::tick_cadence`]). Returns the span migrations
+    /// applied; empty when rebalance is not configured, placement has
+    /// converged, or every candidate move failed the hysteresis gate.
+    pub fn rebalance_tick_now(&self) -> Vec<PlannedMove> {
+        match &self.rebalance {
+            Some(r) => r.runner.tick(self.clock.now()),
+            None => Vec::new(),
+        }
+    }
+
     /// Refresh activity so far (trigger age, pre/post predicted decay,
     /// steps spent, swap version per event). Empty when refresh is off.
     pub fn refresh_events(&self) -> Vec<RefreshEvent> {
@@ -1752,6 +1865,7 @@ impl Server {
     /// every queue (all pending tickets resolve), join all workers.
     /// Returns the first worker error, if any.
     pub fn shutdown(mut self) -> ServeResult<()> {
+        self.stop_rebalance();
         self.stop_refresh();
         self.begin_shutdown();
         let mut first_err = None;
@@ -1789,12 +1903,24 @@ impl Server {
             }
         }
     }
+
+    /// Stopped BEFORE refresh: a mid-shutdown migration would re-flag
+    /// tasks on spans whose workers are about to drain for good.
+    fn stop_rebalance(&mut self) {
+        if let Some(r) = self.rebalance.as_mut() {
+            let _ = r.stop.send(());
+            if let Some(j) = r.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
         // if `shutdown` was not called, still stop the workers so
         // lingering Client clones cannot keep threads alive forever.
+        self.stop_rebalance();
         self.stop_refresh();
         if !self.joins.is_empty() {
             self.begin_shutdown();

@@ -125,6 +125,26 @@ impl<T> Batcher<T> {
         Some(q.drain(..n).map(|p| p.item).collect())
     }
 
+    /// Remove one task's ENTIRE queue with the enqueue stamps intact
+    /// (`None` when empty) — the span-migration handoff primitive: the
+    /// extracted entries re-enter the destination span's batcher
+    /// through [`Batcher::adopt`], so a moved request keeps its
+    /// original deadline instead of restarting its wait.
+    pub fn take_task(&mut self, task: &str) -> Option<Vec<Pending<T>>> {
+        let q = self.queues.remove(task)?;
+        if q.is_empty() {
+            return None;
+        }
+        Some(q.into_iter().collect())
+    }
+
+    /// Append entries previously extracted by [`Batcher::take_task`],
+    /// preserving their enqueue stamps (and therefore their deadlines
+    /// and head-of-line age ordering).
+    pub fn adopt(&mut self, task: &str, items: Vec<Pending<T>>) {
+        self.queues.entry(task.to_string()).or_default().extend(items);
+    }
+
     /// Drain everything regardless of deadlines (shutdown path).
     pub fn drain_all(&mut self) -> Vec<(String, Vec<T>)> {
         let mut out = Vec::new();

@@ -256,6 +256,10 @@ pub struct AdapterCache {
     /// what an eviction keeps and a reload restores. Kept fresh by the
     /// deploy hook (manual deploys AND refresh CAS swaps land here).
     backing: Mutex<BTreeMap<String, (Arc<ParamStore>, u64)>>,
+    /// Live per-task upload-latency overrides, written by the span
+    /// rebalancer when a task migrates to a backend with different
+    /// deploy characteristics (leaf lock; never held across `state`).
+    latency_overrides: Mutex<BTreeMap<String, Duration>>,
 }
 
 impl AdapterCache {
@@ -280,6 +284,7 @@ impl AdapterCache {
             refresh: Mutex::new(None),
             pending: Mutex::new(Vec::new()),
             backing: Mutex::new(BTreeMap::new()),
+            latency_overrides: Mutex::new(BTreeMap::new()),
         });
         let weak: Weak<AdapterCache> = Arc::downgrade(&cache);
         registry.set_deploy_hook(Arc::new(move |task, params, version| {
@@ -396,7 +401,7 @@ impl AdapterCache {
             }
             return CacheLookup::Shed;
         }
-        let ready_at = Self::start_load(&mut st, &self.cfg, task, now, (weight > 0).then_some(now));
+        let ready_at = self.start_load(&mut st, task, now, (weight > 0).then_some(now));
         CacheLookup::Queued { ready_at }
     }
 
@@ -485,7 +490,7 @@ impl AdapterCache {
             let predicted = rate.predicted_next();
             let imminent = predicted <= now + horizon && predicted + horizon >= now;
             if imminent {
-                Self::start_load(&mut st, &self.cfg, task, now, None);
+                self.start_load(&mut st, task, now, None);
                 started += 1;
             }
         }
@@ -575,9 +580,32 @@ impl AdapterCache {
         true
     }
 
+    /// Override the upload latency charged when `task` is next paged
+    /// in. The span rebalancer calls this mid-migration so cache
+    /// residency follows the task: a reload after the move pays the
+    /// NEW backend's deploy cost, not the build-time one.
+    pub fn set_task_load_latency(&self, task: &str, d: Duration) {
+        self.latency_overrides
+            .lock()
+            .unwrap()
+            .insert(task.to_string(), d);
+    }
+
+    /// The upload latency charged for paging `task` in: the live
+    /// migration override when one exists, the build-time config
+    /// otherwise.
+    pub fn load_latency_for(&self, task: &str) -> Duration {
+        self.latency_overrides
+            .lock()
+            .unwrap()
+            .get(task)
+            .copied()
+            .unwrap_or_else(|| self.cfg.load_latency_for(task))
+    }
+
     fn start_load(
+        &self,
         st: &mut CacheState,
-        cfg: &CacheConfig,
         task: &str,
         now: Instant,
         requested: Option<Instant>,
@@ -587,7 +615,7 @@ impl AdapterCache {
             Some(r) if r > now => r,
             _ => now,
         };
-        let ready_at = begin + cfg.load_latency_for(task);
+        let ready_at = begin + self.load_latency_for(task);
         st.last_ready = Some(ready_at);
         st.loading.insert(task.to_string(), Load { ready_at, requested });
         ready_at

@@ -573,6 +573,7 @@ mod tests {
             staggered_at: None,
             window: None,
             hold: None,
+            migrating: false,
         }
     }
 

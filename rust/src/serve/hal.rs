@@ -61,6 +61,38 @@
 //! The pure decision functions ([`route_one`], [`route_tasks`]) are
 //! deterministic and side-effect free — `tests/hal_conformance.rs`
 //! property-tests them directly.
+//!
+//! # Adaptive rebalance
+//!
+//! First-use routing guesses from whatever arrival evidence exists at
+//! that instant — often none. The cadenced rebalancer
+//! ([`RebalanceRunner`], spawned by `ServerBuilder::rebalance` the same
+//! way the refresh runner is) periodically re-prices every placed task
+//! against its **measured** arrival EWMA and migrates it when — and
+//! only when — the move pays for itself:
+//!
+//! ```text
+//! move t: from → to  fires iff
+//!   (cost_from − cost_to) · (cooldown_ns / gap_ns)
+//!        ≥ hysteresis · deploy_ns(to)
+//!   AND now − moved_at(t) ≥ cooldown
+//! ```
+//!
+//! i.e. the modeled per-request saving, accumulated over one cooldown
+//! horizon of traffic at the task's observed rate, must repay the
+//! destination's deploy latency `hysteresis` times over — and a task
+//! that just moved cannot move again inside the cooldown. Under
+//! stationary traffic the EWMAs converge, the saving of any further
+//! move drops below the gate, and placement reaches a fixed point:
+//! zero moves, no flapping (the conformance suite pins this).
+//!
+//! A migration is drain-free: the task is flagged as migrating through
+//! [`super::refresh::RefreshHandle`] (its old span serves out the
+//! queue at the next batch boundary, in drain mode), its drift physics
+//! and page-in cost are re-parameterized for the destination substrate
+//! *without touching the drift anchor* — a migration is not a
+//! redeploy — and only then does the routing table flip, so new
+//! submissions land on the new span from one instant on.
 
 use std::collections::BTreeMap;
 use std::rc::Rc;
@@ -270,6 +302,10 @@ pub struct BackendProfile {
     /// `None` = drift-free.
     pub drift: Option<DecayModel>,
     pub refit_ns: f64,
+    /// Modeled adapter deploy latency onto this substrate — what one
+    /// migration ONTO it costs. The rebalance hysteresis gate prices
+    /// every move against the destination's deploy latency.
+    pub deploy_latency: Duration,
 }
 
 impl BackendProfile {
@@ -280,6 +316,7 @@ impl BackendProfile {
             cost: backend.cost_model(layer, max_batch),
             drift: backend.drift_model(),
             refit_ns: backend.refit_ns(),
+            deploy_latency: backend.deploy_latency(),
         }
     }
 
@@ -374,6 +411,16 @@ pub fn route_tasks(backends: &[BackendProfile], tasks: &[TaskProfile]) -> Vec<us
 /// Total modeled per-request cost of an explicit `assignment`
 /// (`assignment[i]` = backend index of `tasks[i]`) — what
 /// `hal_conformance` compares routed vs naive placements on.
+///
+/// # Precondition
+///
+/// Every `assignment[i]` must be a valid backend index
+/// (`assignment[i] < backends.len()`). An out-of-range index is a
+/// caller bug: debug builds panic on it; release builds clamp to the
+/// last backend so a malformed operator assignment degrades to a
+/// costed placement rather than a crash. The routing property suite
+/// pins that every assignment produced by [`route_tasks`] and
+/// [`Router`] satisfies this invariant.
 pub fn assignment_cost(
     backends: &[BackendProfile],
     tasks: &[TaskProfile],
@@ -383,6 +430,11 @@ pub fn assignment_cost(
         .iter()
         .zip(assignment)
         .map(|(t, &b)| {
+            debug_assert!(
+                b < backends.len(),
+                "assignment_cost: backend index {b} out of range ({} backends)",
+                backends.len()
+            );
             backends[b.min(backends.len() - 1)].placement_cost(t.interarrival_ns, t.tolerance)
         })
         .sum()
@@ -405,6 +457,131 @@ struct RouterState {
     /// Sticky task→backend decisions (route-on-first-use).
     table: BTreeMap<String, usize>,
     arrivals: BTreeMap<String, RouterArrival>,
+    /// When each task last migrated (the rebalance cooldown clock).
+    moved_at: BTreeMap<String, Instant>,
+}
+
+// ---------------------------------------------------------------------------
+// Rebalance configuration
+// ---------------------------------------------------------------------------
+
+/// Knobs for the cadenced adaptive rebalancer (builder-style setters,
+/// wired through `ServerBuilder::rebalance`). See the module docs for
+/// the hysteresis gate the defaults parameterize.
+#[derive(Clone, Debug)]
+pub struct RebalanceConfig {
+    cadence: Duration,
+    hysteresis: f64,
+    cooldown: Duration,
+    idle_retire: Option<Duration>,
+    max_moves_per_tick: usize,
+    resize_spans: bool,
+}
+
+impl Default for RebalanceConfig {
+    fn default() -> RebalanceConfig {
+        RebalanceConfig {
+            cadence: Duration::from_millis(250),
+            hysteresis: 2.0,
+            cooldown: Duration::from_secs(2),
+            idle_retire: Some(Duration::from_secs(60)),
+            max_moves_per_tick: 4,
+            resize_spans: false,
+        }
+    }
+}
+
+impl RebalanceConfig {
+    pub fn new() -> RebalanceConfig {
+        RebalanceConfig::default()
+    }
+
+    /// How often the background rebalance tick fires.
+    pub fn cadence(mut self, d: Duration) -> Self {
+        if !d.is_zero() {
+            self.cadence = d;
+        }
+        self
+    }
+
+    /// Hysteresis multiple: a move fires only when the modeled saving
+    /// over one cooldown horizon exceeds `h ×` the destination's
+    /// deploy latency. Higher = stickier placement.
+    pub fn hysteresis(mut self, h: f64) -> Self {
+        if h.is_finite() && h >= 0.0 {
+            self.hysteresis = h;
+        }
+        self
+    }
+
+    /// Per-task cooldown: a task that just migrated cannot migrate
+    /// again before this much pool-clock time passes. Doubles as the
+    /// payback horizon the hysteresis gate amortises savings over.
+    pub fn cooldown(mut self, d: Duration) -> Self {
+        if !d.is_zero() {
+            self.cooldown = d;
+        }
+        self
+    }
+
+    /// Retire tasks whose last arrival is older than this horizon from
+    /// the router's arrival/table maps (they re-route on next use).
+    /// `None` disables retirement.
+    pub fn idle_retire(mut self, horizon: Option<Duration>) -> Self {
+        self.idle_retire = horizon.filter(|d| !d.is_zero());
+        self
+    }
+
+    /// Migration budget per tick: at most this many moves fire per
+    /// rebalance pass (best savings first).
+    pub fn max_moves_per_tick(mut self, n: usize) -> Self {
+        self.max_moves_per_tick = n.max(1);
+        self
+    }
+
+    /// Re-size worker spans proportionally to routed traffic share
+    /// after each tick that moved tasks. Only safe for pools whose
+    /// workers can re-bind to a new backend (the Sim harness); the
+    /// real pool's forward executors are thread-bound, so it leaves
+    /// this off.
+    pub fn span_resize(mut self, on: bool) -> Self {
+        self.resize_spans = on;
+        self
+    }
+
+    pub fn tick_cadence(&self) -> Duration {
+        self.cadence
+    }
+
+    pub fn cooldown_horizon(&self) -> Duration {
+        self.cooldown
+    }
+
+    pub fn idle_horizon(&self) -> Option<Duration> {
+        self.idle_retire
+    }
+
+    pub fn move_budget(&self) -> usize {
+        self.max_moves_per_tick
+    }
+
+    pub fn resizes_spans(&self) -> bool {
+        self.resize_spans
+    }
+}
+
+/// One hysteresis-approved placement move, with the modeled
+/// per-request costs that justified it (`cost_to < cost_from` always —
+/// the property suite pins that every applied move is cost-improving).
+#[derive(Clone, Debug)]
+pub struct PlannedMove {
+    pub task: String,
+    pub from: usize,
+    pub to: usize,
+    /// Modeled per-request cost on the current backend.
+    pub cost_from: f64,
+    /// Modeled per-request cost on the destination backend.
+    pub cost_to: f64,
 }
 
 /// Task→backend routing for a pool with more than one backend.
@@ -420,8 +597,10 @@ struct RouterState {
 /// all workers exactly as before the HAL existed.
 pub struct Router {
     profiles: Vec<BackendProfile>,
-    /// `ranges[i]` = contiguous `[start, end)` worker span of backend `i`.
-    ranges: Vec<(usize, usize)>,
+    /// `ranges[i]` = contiguous `[start, end)` worker span of backend
+    /// `i`. Behind a lock so [`Router::resize_spans`] can follow
+    /// routed traffic share at runtime.
+    ranges: Mutex<Vec<(usize, usize)>>,
     default_tolerance: f64,
     tolerances: BTreeMap<String, f64>,
     pins: BTreeMap<String, usize>,
@@ -446,7 +625,7 @@ impl Router {
         );
         Router {
             profiles,
-            ranges,
+            ranges: Mutex::new(ranges),
             default_tolerance,
             tolerances,
             pins,
@@ -459,8 +638,10 @@ impl Router {
         &self.profiles
     }
 
-    pub fn ranges(&self) -> &[(usize, usize)] {
-        &self.ranges
+    /// Current worker spans, `(start, end)` per backend (snapshot —
+    /// [`Router::resize_spans`] may change them between reads).
+    pub fn ranges(&self) -> Vec<(usize, usize)> {
+        self.ranges.lock().expect("router ranges").clone()
     }
 
     fn tolerance_of(&self, task: &str) -> f64 {
@@ -510,8 +691,22 @@ impl Router {
     /// a homogeneous pool uses across all workers).
     pub fn worker_for(&self, task: &str) -> usize {
         self.note_arrival(task, self.clock.now());
-        let (start, end) = self.ranges[self.backend_of(task)];
+        self.worker_of(task)
+    }
+
+    /// Worker index `task` currently maps to WITHOUT recording an
+    /// arrival — introspection and migration handoff (the destination
+    /// worker of an applied move, with no EWMA perturbation).
+    pub fn worker_of(&self, task: &str) -> usize {
+        let (start, end) = self.ranges.lock().expect("router ranges")[self.backend_of(task)];
         start + (super::api::fnv1a(task) % (end - start) as u64) as usize
+    }
+
+    /// Measured inter-arrival EWMA of `task`, ns (`None` until two
+    /// arrivals have been observed).
+    pub fn arrival_ewma_ns(&self, task: &str) -> Option<f64> {
+        let st = self.state.lock().expect("router state");
+        st.arrivals.get(task).and_then(|a| a.ewma_ns)
     }
 
     /// Current sticky assignments, `(task, backend index)`.
@@ -521,7 +716,10 @@ impl Router {
     }
 
     /// Re-route every unpinned task against its measured EWMA; apply
-    /// and return the moves as `(task, from, to)`.
+    /// and return the moves as `(task, from, to)`. This is the FORCED
+    /// variant — no hysteresis, no cooldown — for operators that want
+    /// an immediate re-placement. The cadenced loop goes through
+    /// [`Router::plan_rebalance`] instead.
     pub fn rebalance(&self) -> Vec<(String, usize, usize)> {
         let mut st = self.state.lock().expect("router state");
         let snapshot: Vec<(String, usize, f64)> = st
@@ -546,6 +744,344 @@ impl Router {
         }
         moves
     }
+
+    /// Plan one hysteresis-gated rebalance pass at `now` WITHOUT
+    /// touching the routing table (pure read — the caller migrates
+    /// per-task state and then flips each move via
+    /// [`Router::apply_move`]). A move survives the gate when:
+    ///
+    /// * the task is unpinned and has a measured arrival EWMA (a cold
+    ///   task has no traffic to amortise a deploy against),
+    /// * its cooldown has expired (`now − moved_at ≥ cooldown`),
+    /// * the destination strictly improves the modeled per-request
+    ///   cost, and
+    /// * the saving over one cooldown horizon of traffic repays
+    ///   `hysteresis ×` the destination's deploy latency (module docs).
+    ///
+    /// At most [`RebalanceConfig::move_budget`] moves are returned,
+    /// best absolute saving first (ties → task name order, from the
+    /// sorted snapshot).
+    pub fn plan_rebalance(&self, cfg: &RebalanceConfig, now: Instant) -> Vec<PlannedMove> {
+        let st = self.state.lock().expect("router state");
+        let cooldown_ns = cfg.cooldown.as_nanos() as f64;
+        let mut planned: Vec<PlannedMove> = Vec::new();
+        for (task, &from) in &st.table {
+            if self.pins.contains_key(task) {
+                continue;
+            }
+            if let Some(&moved) = st.moved_at.get(task) {
+                if now.saturating_duration_since(moved) < cfg.cooldown {
+                    continue;
+                }
+            }
+            let Some(gap) = st.arrivals.get(task).and_then(|a| a.ewma_ns) else {
+                continue;
+            };
+            if !gap.is_finite() || gap <= 0.0 {
+                continue;
+            }
+            let tolerance = self.tolerance_of(task);
+            let to = route_one(&self.profiles, gap, tolerance);
+            if to == from {
+                continue;
+            }
+            let cost_from = self.profiles[from].placement_cost(gap, tolerance);
+            let cost_to = self.profiles[to].placement_cost(gap, tolerance);
+            if !(cost_to < cost_from) {
+                continue;
+            }
+            let saving = (cost_from - cost_to) * (cooldown_ns / gap);
+            let deploy_ns = self.profiles[to].deploy_latency.as_nanos() as f64;
+            if saving < cfg.hysteresis * deploy_ns {
+                continue;
+            }
+            planned.push(PlannedMove {
+                task: task.clone(),
+                from,
+                to,
+                cost_from,
+                cost_to,
+            });
+        }
+        planned.sort_by(|a, b| {
+            let sa = a.cost_from - a.cost_to;
+            let sb = b.cost_from - b.cost_to;
+            sb.partial_cmp(&sa).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        planned.truncate(cfg.max_moves_per_tick);
+        planned
+    }
+
+    /// Flip `task`'s routing-table entry to backend `to` and stamp its
+    /// cooldown clock. New submissions route to the new span from this
+    /// call on; requests already queued on the old span drain there.
+    pub fn apply_move(&self, task: &str, to: usize, now: Instant) {
+        assert!(to < self.profiles.len(), "apply_move: backend {to} out of range");
+        let mut st = self.state.lock().expect("router state");
+        st.table.insert(task.to_string(), to);
+        st.moved_at.insert(task.to_string(), now);
+    }
+
+    /// Plan + apply one hysteresis-gated pass (tests and pools without
+    /// per-task migration state use this directly; `RebalanceRunner`
+    /// interleaves the state carry between plan and apply).
+    pub fn rebalance_with(&self, cfg: &RebalanceConfig, now: Instant) -> Vec<PlannedMove> {
+        let planned = self.plan_rebalance(cfg, now);
+        for m in &planned {
+            self.apply_move(&m.task, m.to, now);
+        }
+        planned
+    }
+
+    /// Retire tasks whose last observed arrival predates `now −
+    /// horizon`: their arrival EWMA, sticky table entry, and cooldown
+    /// stamp are dropped (bounding all three maps under task churn) —
+    /// a retired task that comes back simply re-routes on first use.
+    /// Build-time placements that never saw an arrival are kept: they
+    /// are bounded by the deployed task set, not by traffic. Returns
+    /// the retired task names.
+    pub fn retire_idle(&self, horizon: Duration, now: Instant) -> Vec<String> {
+        let mut st = self.state.lock().expect("router state");
+        let idle: Vec<String> = st
+            .arrivals
+            .iter()
+            .filter(|(_, a)| {
+                a.last
+                    .map(|l| now.saturating_duration_since(l) >= horizon)
+                    .unwrap_or(false)
+            })
+            .map(|(t, _)| t.clone())
+            .collect();
+        for task in &idle {
+            st.arrivals.remove(task);
+            st.table.remove(task);
+            st.moved_at.remove(task);
+        }
+        idle
+    }
+
+    /// `(table entries, arrival EWMAs)` — what the churn regression
+    /// test bounds.
+    pub fn map_sizes(&self) -> (usize, usize) {
+        let st = self.state.lock().expect("router state");
+        (st.table.len(), st.arrivals.len())
+    }
+
+    /// Re-size the contiguous worker spans proportionally to each
+    /// backend's routed traffic share (Σ of its tasks' arrival rates,
+    /// `1/ewma`). Every backend keeps at least one worker; the total
+    /// worker count and the backend order are preserved; leftover
+    /// workers go to the largest fractional remainders (ties → lower
+    /// index). With no measured traffic at all the spans are left
+    /// untouched. Returns the spans now in effect.
+    ///
+    /// Only pools whose workers can re-bind to a backend should call
+    /// this (see [`RebalanceConfig::span_resize`]).
+    pub fn resize_spans(&self) -> Vec<(usize, usize)> {
+        let n = self.profiles.len();
+        let mut weights = vec![0.0f64; n];
+        {
+            let st = self.state.lock().expect("router state");
+            for (task, &b) in &st.table {
+                if let Some(ewma) = st.arrivals.get(task).and_then(|a| a.ewma_ns) {
+                    if ewma.is_finite() && ewma > 0.0 {
+                        weights[b] += 1.0 / ewma;
+                    }
+                }
+            }
+        }
+        let total_weight: f64 = weights.iter().sum();
+        let mut ranges = self.ranges.lock().expect("router ranges");
+        if total_weight <= 0.0 {
+            return ranges.clone();
+        }
+        let workers: usize = ranges.iter().map(|&(s, e)| e - s).sum();
+        // one guaranteed worker each; the rest follow traffic share
+        let spare = workers - n;
+        let ideal: Vec<f64> = weights
+            .iter()
+            .map(|w| spare as f64 * w / total_weight)
+            .collect();
+        let mut sizes: Vec<usize> = ideal.iter().map(|&x| 1 + x.floor() as usize).collect();
+        let mut leftover = workers - sizes.iter().sum::<usize>();
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| {
+            let fa = ideal[a] - ideal[a].floor();
+            let fb = ideal[b] - ideal[b].floor();
+            fb.partial_cmp(&fa)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let mut next = 0usize;
+        while leftover > 0 {
+            sizes[order[next % n]] += 1;
+            leftover -= 1;
+            next += 1;
+        }
+        let mut start = 0;
+        for (i, size) in sizes.iter().enumerate() {
+            ranges[i] = (start, start + size);
+            start += size;
+        }
+        ranges.clone()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RebalanceRunner — the cadenced adaptive loop over a Router
+// ---------------------------------------------------------------------------
+
+/// Executes the plan → migrate → flip cycle over a [`Router`] on a
+/// cadence (spawned by `ServerBuilder::rebalance` exactly like the
+/// refresh runner: wall-clock ticks for stop promptness, pool-clock
+/// decisions). Each approved move runs the drain-free handoff:
+///
+/// 1. **freeze** — the task is flagged migrating through the
+///    [`RefreshHandle`](super::refresh::RefreshHandle); its old span's
+///    scheduler serves out the queue at the next batch boundary in
+///    drain mode, and the worker clears the flag once the queue is
+///    empty.
+/// 2. **carry** — drift physics move to the destination backend's
+///    [`DecayModel`] *without re-anchoring* `deployed_at` (a migration
+///    is not a redeploy: the substrate the adapter came from kept
+///    drifting, and the destination inherits that age), and the
+///    capacity tier's page-in latency is re-priced to the
+///    destination's deploy cost. Cache residency is task-keyed and
+///    survives untouched.
+/// 3. **flip** — [`Router::apply_move`] redirects all new submissions
+///    to the destination span and stamps the cooldown clock.
+pub struct RebalanceRunner {
+    cfg: RebalanceConfig,
+    router: Arc<Router>,
+    backends: Vec<Arc<dyn Backend>>,
+    refresh: Option<super::refresh::RefreshHandle>,
+    refresh_runner: Option<Arc<Mutex<super::refresh::RefreshRunner>>>,
+    cache: Option<Arc<super::cache::AdapterCache>>,
+    metrics: Option<Arc<super::api::Metrics>>,
+}
+
+impl RebalanceRunner {
+    pub fn new(cfg: RebalanceConfig, router: Arc<Router>, backends: Vec<Arc<dyn Backend>>) -> RebalanceRunner {
+        assert_eq!(
+            router.profiles().len(),
+            backends.len(),
+            "one backend per routed profile"
+        );
+        RebalanceRunner {
+            cfg,
+            router,
+            backends,
+            refresh: None,
+            refresh_runner: None,
+            cache: None,
+            metrics: None,
+        }
+    }
+
+    /// Attach the refresh surfaces: the shared handle carries the
+    /// migrating flag, the runner re-parameterizes the migrated task's
+    /// decay physics (anchor-preserving).
+    pub fn with_refresh(
+        mut self,
+        handle: super::refresh::RefreshHandle,
+        runner: Arc<Mutex<super::refresh::RefreshRunner>>,
+    ) -> RebalanceRunner {
+        self.refresh = Some(handle);
+        self.refresh_runner = Some(runner);
+        self
+    }
+
+    /// Attach the capacity tier so a migrated task's page-in latency
+    /// follows it to the destination substrate.
+    pub fn with_cache(mut self, cache: Arc<super::cache::AdapterCache>) -> RebalanceRunner {
+        self.cache = Some(cache);
+        self
+    }
+
+    /// Attach a metrics sink (`rebalance_moves` / `tasks_retired`).
+    pub fn with_metrics(mut self, metrics: Arc<super::api::Metrics>) -> RebalanceRunner {
+        self.metrics = Some(metrics);
+        self
+    }
+
+    pub fn config(&self) -> &RebalanceConfig {
+        &self.cfg
+    }
+
+    pub fn router(&self) -> &Arc<Router> {
+        &self.router
+    }
+
+    /// One rebalance pass at `now`: retire idle tasks, plan under the
+    /// hysteresis gate, run the three-step handoff per approved move,
+    /// then (when enabled) follow traffic share with the worker spans.
+    /// Returns the applied moves.
+    pub fn tick(&self, now: Instant) -> Vec<PlannedMove> {
+        if let Some(horizon) = self.cfg.idle_retire {
+            let retired = self.router.retire_idle(horizon, now);
+            if let (Some(m), false) = (&self.metrics, retired.is_empty()) {
+                m.tasks_retired
+                    .fetch_add(retired.len() as u64, std::sync::atomic::Ordering::Relaxed);
+            }
+        }
+        let planned = self.router.plan_rebalance(&self.cfg, now);
+        for mv in &planned {
+            self.migrate(mv, now);
+        }
+        if self.cfg.resize_spans && !planned.is_empty() {
+            self.router.resize_spans();
+        }
+        planned
+    }
+
+    fn migrate(&self, mv: &PlannedMove, now: Instant) {
+        // 1. freeze: old-span schedulers drain the task at the next
+        // batch boundary; the worker clears the flag at queue-empty
+        if let Some(h) = &self.refresh {
+            h.set_migrating(&mv.task, true);
+        }
+        // 2. carry: destination drift physics (anchor preserved) and
+        // destination page-in cost
+        if let Some(rr) = &self.refresh_runner {
+            let decay = self.backends[mv.to].drift_model().unwrap_or_else(drift_free);
+            rr.lock()
+                .expect("refresh runner")
+                .policy_mut()
+                .set_task_decay(&mv.task, decay);
+        }
+        if let Some(c) = &self.cache {
+            c.set_task_load_latency(&mv.task, self.backends[mv.to].deploy_latency());
+        }
+        // 3. flip: new submissions land on the destination span
+        self.router.apply_move(&mv.task, mv.to, now);
+        if let Some(m) = &self.metrics {
+            m.rebalance_moves
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        }
+    }
+}
+
+/// Spawn the cadenced rebalance thread (same stop/tick discipline as
+/// `spawn_refresh_worker`: the stop channel doubles as the tick timer
+/// so shutdown is prompt even under a virtual pool clock).
+pub(crate) fn spawn_rebalance_worker(
+    runner: Arc<RebalanceRunner>,
+    clock: Arc<dyn Clock>,
+    cadence: Duration,
+) -> std::io::Result<(std::sync::mpsc::Sender<()>, std::thread::JoinHandle<()>)> {
+    use std::sync::mpsc::{channel, RecvTimeoutError};
+    let (stop_tx, stop_rx) = channel::<()>();
+    let join = std::thread::Builder::new()
+        .name("ahwa-rebalance".to_string())
+        .spawn(move || loop {
+            match stop_rx.recv_timeout(cadence) {
+                Ok(()) | Err(RecvTimeoutError::Disconnected) => break,
+                Err(RecvTimeoutError::Timeout) => {
+                    runner.tick(clock.now());
+                }
+            }
+        })?;
+    Ok((stop_tx, join))
 }
 
 // ---------------------------------------------------------------------------
@@ -559,15 +1095,21 @@ impl Router {
 /// pool.
 #[derive(Clone, Debug)]
 pub struct PcmPjrt {
+    name: String,
     model: PcmModel,
     g_rel: f32,
     deploy_latency: Duration,
     refit_ns: f64,
+    /// Integration-time multiplier for the scheduler/cost model
+    /// (1.0 = the reference tile bank, bit-identical to the pre-HAL
+    /// pool; a conservative bank integrates longer per MVM).
+    t_int_scale: f64,
 }
 
 impl Default for PcmPjrt {
     fn default() -> Self {
         PcmPjrt {
+            name: "pcm-pjrt".to_string(),
             model: PcmModel::default(),
             g_rel: 0.5,
             // tile conductance programming dominates adapter page-in;
@@ -575,6 +1117,7 @@ impl Default for PcmPjrt {
             deploy_latency: Duration::from_micros(500),
             // one bounded-budget LoRA refit on the PMCA, modeled ns
             refit_ns: 5.0e6,
+            t_int_scale: 1.0,
         }
     }
 }
@@ -582,6 +1125,36 @@ impl Default for PcmPjrt {
 impl PcmPjrt {
     pub fn new() -> PcmPjrt {
         PcmPjrt::default()
+    }
+
+    /// A conservative slow-drift tile bank: programmed for retention
+    /// over speed. Its drift dispersion is scaled down (`noise_scale
+    /// 0.4`) and its drift reference time stretched (`t0` 60 s), so
+    /// tolerance-crossing ages are much longer — at the price of a
+    /// 1.5× integration time, a slower (more careful) programming
+    /// pass, and a costlier refit. The third profile in a three-way
+    /// routed pool: middle tolerance bands land here when the default
+    /// bank's refresh upkeep outweighs the slowdown.
+    pub fn conservative() -> PcmPjrt {
+        PcmPjrt {
+            name: "pcm-conservative".to_string(),
+            model: PcmModel {
+                t0: 60.0,
+                noise_scale: 0.4,
+                ..PcmModel::default()
+            },
+            g_rel: 0.5,
+            deploy_latency: Duration::from_micros(800),
+            refit_ns: 8.0e6,
+            t_int_scale: 1.5,
+        }
+    }
+
+    /// Override the pool-unique backend name (two tile banks of the
+    /// same kind need distinct names to coexist in one pool).
+    pub fn named(mut self, name: &str) -> Self {
+        self.name = name.to_string();
+        self
     }
 
     /// Override the drift statistics (e.g. a fast-drifting tile bank).
@@ -603,6 +1176,16 @@ impl PcmPjrt {
 
     pub fn refit_ns(mut self, ns: f64) -> Self {
         self.refit_ns = ns.max(0.0);
+        self
+    }
+
+    /// Integration-time multiplier (> 0) applied through
+    /// [`Backend::adapt_sched`]; 1.0 leaves the scheduler model — and
+    /// the default pool's bit-identity — untouched.
+    pub fn t_int_scale(mut self, s: f64) -> Self {
+        if s.is_finite() && s > 0.0 {
+            self.t_int_scale = s;
+        }
         self
     }
 }
@@ -657,7 +1240,7 @@ impl Forward for PjrtForward {
 
 impl Backend for PcmPjrt {
     fn name(&self) -> &str {
-        "pcm-pjrt"
+        &self.name
     }
 
     fn drift_model(&self) -> Option<DecayModel> {
@@ -673,6 +1256,18 @@ impl Backend for PcmPjrt {
 
     fn refit_ns(&self) -> f64 {
         self.refit_ns
+    }
+
+    /// Identity at the reference scale (`t_int_scale == 1.0`, the
+    /// bit-identical default); a conservative bank stretches the
+    /// integration time its scheduler and cost model price.
+    fn adapt_sched(&self, cfg: SchedConfig) -> SchedConfig {
+        if self.t_int_scale == 1.0 {
+            cfg
+        } else {
+            let t = cfg.t_int_ns * self.t_int_scale;
+            cfg.t_int(t)
+        }
     }
 
     fn forward(&self, manifest: &Manifest, graph_key: &str) -> Result<Box<dyn Forward>> {
@@ -702,6 +1297,16 @@ impl Backend for PcmPjrt {
 pub struct DigitalRef {
     slowdown: f64,
     deploy_latency: Duration,
+    /// Numerics knobs ([`PcmModel`]): `noise_scale` scales a
+    /// deterministic programming-noise perturbation of every logit
+    /// (σ from `prog_coeff` at the logit's own magnitude), `q_s_max`
+    /// is the quantization grid the perturbed logits snap to, and
+    /// `nu_clip.1` bounds the total per-logit deviation — the same
+    /// "how wrong can one device be" clamp the analog drift model
+    /// uses. The default is [`PcmModel::ideal`] (`noise_scale` 0):
+    /// numerics off, logits bit-identical to the clean reference —
+    /// which is exactly the analog path at drift age 0.
+    model: PcmModel,
 }
 
 #[cfg(feature = "digital-ref")]
@@ -712,6 +1317,8 @@ impl Default for DigitalRef {
             slowdown: 4.0,
             // adapter deploy is a memcpy, not conductance programming
             deploy_latency: Duration::from_micros(50),
+            // numerics off: the clean deterministic-hash reference
+            model: PcmModel::ideal(),
         }
     }
 }
@@ -734,6 +1341,22 @@ impl DigitalRef {
         self.deploy_latency = d;
         self
     }
+
+    /// Install the full numerics model (quantization grid, noise
+    /// polynomial, deviation clamp — see the `model` field docs).
+    pub fn model(mut self, model: PcmModel) -> Self {
+        self.model = model;
+        self
+    }
+
+    /// Convenience: scale the numerics perturbation without replacing
+    /// the whole model. `0.0` restores exact clean-reference logits.
+    pub fn noise_scale(mut self, scale: f32) -> Self {
+        if scale.is_finite() && scale >= 0.0 {
+            self.model.noise_scale = scale;
+        }
+        self
+    }
 }
 
 #[cfg(feature = "digital-ref")]
@@ -743,6 +1366,8 @@ struct DigitalForward {
     /// Output tensor shape of the graph (`[b, classes]` or
     /// `[b, s, vocab]`) — logit buffers mirror its element count.
     out: Vec<usize>,
+    /// Numerics model (see [`DigitalRef`]'s `model` field).
+    model: PcmModel,
 }
 
 #[cfg(feature = "digital-ref")]
@@ -765,6 +1390,29 @@ impl DigitalForward {
     fn hw_bits(hw: [f32; 5]) -> u64 {
         hw.iter()
             .fold(0u64, |acc, v| splitmix(acc ^ v.to_bits() as u64))
+    }
+
+    /// One logit through the numerics model: a deterministic
+    /// programming-noise draw (σ from the `prog_coeff` polynomial at
+    /// the logit's own magnitude, scaled by `noise_scale`), snapped to
+    /// the `q_s_max` quantization grid, with the total deviation
+    /// clamped to `nu_clip.1`. With `noise_scale == 0` the clean logit
+    /// passes through BIT-IDENTICALLY — no grid, no clamp — which is
+    /// what makes the digital substrate exactly equal the analog path
+    /// at drift age 0.
+    fn emit(&self, clean: f32, h: u64) -> f32 {
+        let m = &self.model;
+        if m.noise_scale == 0.0 {
+            return clean;
+        }
+        // prog_sigma already folds in noise_scale; the draw is a
+        // deterministic unit sample keyed off the logit's own hash
+        let sigma = crate::pcm::programming::prog_sigma(m, clean.abs() * m.g_max);
+        let draw = unit_logit(splitmix(h ^ 0x5109_c0de));
+        let noisy = clean + sigma * draw;
+        let grid = m.q_s_max.max(1e-6);
+        let quant = (noisy / grid).round() * grid;
+        clean + (quant - clean).clamp(-m.nu_clip.1, m.nu_clip.1)
     }
 }
 
@@ -820,7 +1468,14 @@ impl Forward for DigitalForward {
             for &t in &tokens[r * s..(r + 1) * s] {
                 h = splitmix(h ^ t as u64);
             }
-            result.push((0..classes).map(|c| unit_logit(splitmix(h ^ c as u64))).collect());
+            result.push(
+                (0..classes)
+                    .map(|c| {
+                        let hc = splitmix(h ^ c as u64);
+                        self.emit(unit_logit(hc), hc)
+                    })
+                    .collect(),
+            );
         }
         Ok(result)
     }
@@ -854,7 +1509,8 @@ impl Forward for DigitalForward {
                 h = splitmix(h ^ (t as u64).wrapping_add((i as u64) << 32));
             }
             for i in 0..per_row {
-                out.push(unit_logit(splitmix(h ^ i as u64)));
+                let hi = splitmix(h ^ i as u64);
+                out.push(self.emit(unit_logit(hi), hi));
             }
         }
         Ok(out)
@@ -909,6 +1565,7 @@ impl Backend for DigitalRef {
             batch: io.shape[0],
             seq: io.shape[1],
             out: out.shape.clone(),
+            model: self.model.clone(),
         }))
     }
 }
@@ -964,12 +1621,14 @@ mod tests {
             cost: cm.clone(),
             drift: Some(DecayModel::analytic(PcmModel::default())),
             refit_ns: 1e6,
+            deploy_latency: Duration::from_micros(500),
         };
         let free = BackendProfile {
             name: "digital".into(),
             cost: cm,
             drift: None,
             refit_ns: 0.0,
+            deploy_latency: Duration::from_micros(50),
         };
         assert_eq!(free.maintenance_ns(1e6, 0.01), 0.0);
         // tighter tolerance → shorter trigger age → higher upkeep
@@ -988,12 +1647,14 @@ mod tests {
             cost: CostModel::from_table(vec![1000.0, 1800.0]),
             drift: None,
             refit_ns: 0.0,
+            deploy_latency: Duration::from_micros(50),
         };
         let fast = BackendProfile {
             name: "fast".into(),
             cost: CostModel::from_table(vec![400.0, 700.0]),
             drift: None,
             refit_ns: 0.0,
+            deploy_latency: Duration::from_micros(50),
         };
         let backends = [slow, fast];
         // gap 500ns: only `fast` sustains (400 ≤ 500)
@@ -1030,6 +1691,7 @@ mod tests {
             cost: CostModel::from_table(vec![100.0]),
             drift: None,
             refit_ns: 0.0,
+            deploy_latency: Duration::from_micros(50),
         };
         let backends = [b.clone(), b];
         let tasks = vec![
@@ -1057,6 +1719,7 @@ mod tests {
             cost: CostModel::from_table(vec![ns]),
             drift: None,
             refit_ns: 0.0,
+            deploy_latency: Duration::from_micros(50),
         };
         let clock = Arc::new(VirtualClock::new());
         let r = Router::new(

@@ -122,6 +122,35 @@
 //!       │  and CACHE then read that task's drift model and       │
 //!       │  deploy latency from ITS backend                       │
 //!       └────────────────────────────────────────────────────────┘
+//!
+//!       ┌─────────────────────── REBALANCE ──────────────────────┐
+//!       │  hal::RebalanceRunner — cadenced adaptive placement    │
+//!       │  (opt-in via ServerBuilder::rebalance, ≥ 2 backends)   │
+//!       │                                                        │
+//!       │  every tick: retire idle tasks, then re-route against  │
+//!       │  measured arrival EWMAs under the HYSTERESIS gate —    │
+//!       │  a move fires only when (cost_from − cost_to) over one │
+//!       │  cooldown of traffic repays h × the destination's      │
+//!       │  deploy latency, AND the task's cooldown expired       │
+//!       │  (stationary traffic ⇒ ZERO moves after convergence)   │
+//!       │                                                        │
+//!       │  approved move = drain-free 3-step handoff:            │
+//!       │   1 freeze ─► RefreshHandle::set_migrating: the old    │
+//!       │     span's scheduler serves the queue out at the next  │
+//!       │     batch boundary (drain mode, outranks holds); the   │
+//!       │     worker clears the flag at queue-empty              │
+//!       │   2 carry ──► drift physics re-read from the NEW       │
+//!       │     backend WITHOUT re-anchoring deployed_at           │
+//!       │     (set_task_decay: accumulated drift age survives);  │
+//!       │     cache page-in re-priced to the new deploy cost;    │
+//!       │     residency + EWMAs are task-keyed and follow free   │
+//!       │   3 flip ───► Router::apply_move: new submissions land │
+//!       │     on the destination span; in-flight tickets resolve │
+//!       │     on the old span exactly once                       │
+//!       │                                                        │
+//!       │  (SimPool-only: span_resize follows traffic share —    │
+//!       │   the real pool's executors are thread-bound)          │
+//!       └────────────────────────────────────────────────────────┘
 //! ```
 //!
 //! # Streaming tickets
@@ -180,9 +209,14 @@
 //! * [`hal`]      — the hardware abstraction behind the pool: a
 //!   [`hal::Backend`] trait over deploy / forward / drift-model /
 //!   cost-model, the [`hal::PcmPjrt`] reference substrate (the exact
-//!   pre-HAL path), the feature-gated drift-free [`hal::DigitalRef`],
-//!   and the [`hal::Router`] that places tasks on heterogeneous pools
-//!   by modeled service + tolerance-maintenance cost.
+//!   pre-HAL path; [`hal::PcmPjrt::conservative`] is a slow-drift
+//!   retention-tuned bank), the feature-gated [`hal::DigitalRef`]
+//!   (drift-free, with optional [`crate::pcm::PcmModel`] quantization/
+//!   programming-noise numerics), the [`hal::Router`] that places
+//!   tasks on heterogeneous pools by modeled service +
+//!   tolerance-maintenance cost, and the cadenced
+//!   [`hal::RebalanceRunner`] that keeps placement tracking measured
+//!   traffic under a hysteresis gate with live span migration.
 //!
 //! (The deprecated `serve::router` / `serve::server` shims from the
 //! pre-builder API are gone; [`api`] is the only serving surface.)
@@ -214,8 +248,10 @@
 //! (all on the shared `tests/common/refresh_sim.rs` harness); the
 //! scheduler-policy property tests in `tests/sched_properties.rs`; the
 //! capacity-tier conformance suite in `tests/cache_conformance.rs`; the
-//! backend-HAL suite (mixed-pool routing, default-backend equivalence)
-//! in `tests/hal_conformance.rs`.
+//! backend-HAL suite (mixed-pool routing, default-backend equivalence,
+//! adaptive-rebalance hysteresis properties, migration safety, and the
+//! DigitalRef-numerics digital-vs-analog comparison) in
+//! `tests/hal_conformance.rs`.
 
 pub mod api;
 pub mod batcher;
@@ -235,7 +271,8 @@ pub use api::{
 #[cfg(feature = "digital-ref")]
 pub use hal::DigitalRef;
 pub use hal::{
-    drift_free, Backend, BackendProfile, CostModel, Forward, PcmPjrt, Router, TaskProfile,
+    drift_free, Backend, BackendProfile, CostModel, Forward, PcmPjrt, PlannedMove,
+    RebalanceConfig, RebalanceRunner, Router, TaskProfile,
 };
 pub use cache::{AdapterCache, CacheConfig, CacheLookup};
 pub use decode::{

@@ -339,7 +339,20 @@ fn worker_loop(
                             }
                             holding_task = None;
                         }
-                        batcher.pop_task(&task, fill).map(|items| (task, items))
+                        let popped = batcher.pop_task(&task, fill);
+                        // span-migration handoff completes HERE: once a
+                        // migrating task's queue is served out, this
+                        // worker (the old span) clears the flag — new
+                        // submissions already route to the destination
+                        // span, so the queue cannot refill
+                        if popped.is_some() && batcher.pending_for(&task) == 0 {
+                            if let Some(h) = cfg.refresh.as_ref() {
+                                if h.is_migrating(&task) {
+                                    h.set_migrating(&task, false);
+                                }
+                            }
+                        }
+                        popped.map(|items| (task, items))
                     }
                     Decision::Hold { task, until } => {
                         // publish the deferral (on transitions only):

@@ -553,6 +553,13 @@ struct TrackedTask {
     /// the anchor untouched: the adapter comes back owing its full
     /// accumulated drift age, not a fresh-looking clock.
     evicted: bool,
+    /// The task is mid-migration between backend worker spans
+    /// (`serve::hal::RebalanceRunner`): its OLD span's scheduler must
+    /// serve out the queue at the next batch boundary (drain mode,
+    /// outranking holds), and the worker clears the flag once that
+    /// queue is empty. Placement state, not deployment state — it
+    /// survives re-tracks.
+    migrating: bool,
 }
 
 /// Cloneable, thread-safe view of the per-task refresh lifecycle.
@@ -622,6 +629,7 @@ impl RefreshHandle {
             staggered_at: t.staggered_at,
             window: t.adaptive_window,
             hold: t.adaptive_hold,
+            migrating: t.migrating,
         })
     }
 
@@ -662,6 +670,28 @@ impl RefreshHandle {
     /// `true` while the capacity tier has `task` paged out.
     pub fn is_evicted(&self, task: &str) -> bool {
         self.read().get(task).map(|t| t.evicted).unwrap_or(false)
+    }
+
+    /// Flag `task` as migrating between backend worker spans (set by
+    /// the rebalance runner before the routing-table flip, cleared by
+    /// the old span's worker once it has drained the task's queue —
+    /// see [`RefreshView::migrating`]). No-op for untracked tasks.
+    pub fn set_migrating(&self, task: &str, migrating: bool) {
+        if let Some(t) = self.write().get_mut(task) {
+            t.migrating = migrating;
+        }
+    }
+
+    /// `true` while `task` is mid-migration between worker spans.
+    pub fn is_migrating(&self, task: &str) -> bool {
+        self.read().get(task).map(|t| t.migrating).unwrap_or(false)
+    }
+
+    /// The pool-clock instant `task` was (re-)deployed at — its drift
+    /// anchor. Migration conformance pins that this survives a span
+    /// move bit-identically.
+    pub fn deployed_at(&self, task: &str) -> Option<Instant> {
+        self.read().get(task).map(|t| t.deployed_at)
     }
 
     pub(crate) fn begin_refit(&self, task: &str) {
@@ -842,6 +872,10 @@ pub struct RefreshView {
     /// Coordinator-adapted hold bound (overrides the fixed
     /// [`RefreshCoupling::hold`](super::sched::RefreshCoupling)).
     pub hold: Option<Duration>,
+    /// Mid-migration between backend worker spans: the scheduler must
+    /// serve this task's queue out NOW (drain mode), outranking holds,
+    /// so the span handoff completes at the next batch boundary.
+    pub migrating: bool,
 }
 
 impl RefreshView {
@@ -917,15 +951,41 @@ impl RefreshPolicy {
                 adaptive_hold: prev.as_ref().and_then(|t| t.adaptive_hold),
                 gap_ewma_ns: prev.as_ref().and_then(|t| t.gap_ewma_ns),
                 refit_ewma_ns: prev.as_ref().and_then(|t| t.refit_ewma_ns),
-                holding: prev.map(|t| t.holding).unwrap_or(false),
+                holding: prev.as_ref().map(|t| t.holding).unwrap_or(false),
                 // a (re-)track is a deployment: the adapter is resident
                 evicted: false,
+                // placement state: a redeploy mid-migration must not
+                // stall the old span's drain
+                migrating: prev.map(|t| t.migrating).unwrap_or(false),
             },
         );
     }
 
     pub fn forget(&mut self, task: &str) {
         self.tracked.write().remove(task);
+    }
+
+    /// Swap `task`'s drift physics in place — the span-migration carry.
+    ///
+    /// Unlike [`RefreshPolicy::track`], this does NOT re-anchor
+    /// `deployed_at`: a migration moves the adapter between substrates
+    /// without reprogramming it, so the drift clock keeps its
+    /// accumulated age and only the model mapping that age to decay
+    /// changes. The cached tolerance-crossing instant is recomputed
+    /// from the SURVIVING anchor under the new physics; a coordinator
+    /// stagger computed for the old physics is cleared (the
+    /// coordinator re-phases against the new trigger on its next
+    /// pass). Version, EWMAs, holds, and flags are untouched.
+    pub fn set_task_decay(&mut self, task: &str, decay: DecayModel) {
+        let age = decay.trigger_age(self.cfg.tolerance_for(task));
+        let scaled = age / self.cfg.time_scale;
+        self.cfg.per_task_decay.insert(task.to_string(), decay);
+        let mut map = self.tracked.write();
+        if let Some(t) = map.get_mut(task) {
+            t.due_at = (scaled.is_finite() && scaled < MAX_DUE_SECS)
+                .then(|| t.deployed_at + Duration::from_secs_f64(scaled));
+            t.staggered_at = None;
+        }
     }
 
     pub fn tasks(&self) -> Vec<String> {

@@ -646,6 +646,17 @@ impl BatchScheduler {
         let v = view.as_ref();
         let pressure = self.pressure_from(v, now);
         let deadline = self.coupled_deadline(head, pressure);
+        // mid-migration between backend worker spans: serve this queue
+        // out NOW in drain mode, outranking the hold gate — the span
+        // handoff completes at the next batch boundary and every
+        // deferred request would otherwise resolve against the old
+        // span after the router has flipped
+        if v.map(|view| view.migrating).unwrap_or(false) {
+            return TaskState::Ready {
+                fill: len.min(self.max_batch).max(1),
+                drained: true,
+            };
+        }
         // overdue for the swap (or mid-refit): hold the queue briefly so
         // the refreshed adapter serves the next batch; liveness bounded
         // by the hold budget past the already-tightened deadline — the

@@ -26,18 +26,20 @@
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::Ordering;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use ahwa_lora::model::params::{ParamStore, Tensor};
 use ahwa_lora::pcm::PcmModel;
 use ahwa_lora::serve::batcher::Batcher;
+use ahwa_lora::serve::hal::route_one;
 use ahwa_lora::serve::registry::SharedRegistry;
 use ahwa_lora::serve::{
-    drift_free, step_gate, AdapterCache, Backend, BatchScheduler, CacheConfig, CacheLookup, Clock,
-    CoordConfig, DecayModel, Decision, FnRefitter, Metrics, Refit, Refitter, RefreshConfig,
-    RefreshCoordinator, RefreshCoupling, RefreshHandle, RefreshRunner, SchedConfig, StepEngine,
-    StepGate, VirtualClock,
+    drift_free, step_gate, AdapterCache, Backend, BackendProfile, BatchScheduler, CacheConfig,
+    CacheLookup, Clock, CoordConfig, DecayModel, Decision, FnRefitter, Metrics, PlannedMove,
+    Refit, Refitter, RebalanceConfig, RebalanceRunner, RefreshConfig, RefreshCoordinator,
+    RefreshCoupling, RefreshHandle, RefreshRunner, Router, SchedConfig, StepEngine, StepGate,
+    VirtualClock,
 };
 use ahwa_lora::util::rng::Pcg64;
 use ahwa_lora::util::stats;
@@ -96,6 +98,26 @@ pub fn runner_with_decay(
         Arc::new(ParamStore::default()),
         metrics,
     )
+}
+
+/// First arrival gap on a log grid (1e2 .. ~9e15 ns) where the modeled
+/// optimum differs from backend `from` AND the per-request saving
+/// clears `need_ns` — how the rebalance suite and bench find a traffic
+/// regime that provably opens the hysteresis gate, instead of
+/// hard-coding magnitudes against the data-driven cost tables.
+pub fn gap_shifting_from(
+    profiles: &[BackendProfile],
+    from: usize,
+    tolerance: f64,
+    need_ns: f64,
+) -> Option<f64> {
+    (0..280).map(|i| 10f64.powf(2.0 + i as f64 * 0.05)).find(|&gap| {
+        let to = route_one(profiles, gap, tolerance);
+        to != from
+            && profiles[from].placement_cost(gap, tolerance)
+                - profiles[to].placement_cost(gap, tolerance)
+                > need_ns
+    })
 }
 
 /// One simulated served batch: worker, pop instant, modeled completion,
@@ -157,6 +179,11 @@ pub struct SimPoolBuilder {
     /// HAL backend whose drift model and scheduler adaptation the pool
     /// runs on; `None` keeps the historical analytic-PCM default.
     backend: Option<Arc<dyn Backend>>,
+    /// ROUTED mode: ≥ 2 backends sharing the worker set behind a
+    /// `Router` (contiguous even spans). Exclusive with `backend`.
+    multi: Vec<Arc<dyn Backend>>,
+    /// Cadenced adaptive rebalancer over the routed pool.
+    rebalance: Option<RebalanceConfig>,
 }
 
 impl SimPoolBuilder {
@@ -220,6 +247,25 @@ impl SimPoolBuilder {
         self
     }
 
+    /// Run a ROUTED heterogeneous pool: the worker set is split into
+    /// contiguous spans (even split, remainder to the earlier spans),
+    /// every push routes through a [`Router`], and each task's drift
+    /// physics follow its routed substrate. Requires at least one
+    /// worker per backend; exclusive with [`Self::backend`].
+    pub fn backends(mut self, bs: &[Arc<dyn Backend>]) -> Self {
+        self.multi = bs.to_vec();
+        self
+    }
+
+    /// Attach the cadenced adaptive rebalancer to a routed pool. The
+    /// sim ticks it once per round ([`SimPool::rebalance_tick`]) — the
+    /// background `ahwa-rebalance` thread's timer, on the virtual
+    /// clock. The hysteresis/cooldown gates still run on virtual time.
+    pub fn rebalance(mut self, cfg: RebalanceConfig) -> Self {
+        self.rebalance = Some(cfg);
+        self
+    }
+
     pub fn build(self) -> SimPool {
         let clock = Arc::new(VirtualClock::new());
         let registry = SharedRegistry::new();
@@ -248,11 +294,34 @@ impl SimPoolBuilder {
             ))
         };
 
-        let decay = match &self.backend {
-            Some(b) => b.drift_model().unwrap_or_else(drift_free),
-            None => DecayModel::analytic(PcmModel::default()),
+        let routed = !self.multi.is_empty();
+        assert!(
+            self.backend.is_none() || !routed,
+            "single-backend mode and routed mode are exclusive"
+        );
+        let decay = if routed {
+            self.multi[0].drift_model().unwrap_or_else(drift_free)
+        } else {
+            match &self.backend {
+                Some(b) => b.drift_model().unwrap_or_else(drift_free),
+                None => DecayModel::analytic(PcmModel::default()),
+            }
         };
-        let age = decay.trigger_age(self.tolerance);
+        // in routed mode the clock compression follows the FASTEST
+        // drifting substrate (the one the trigger_in deadline is about)
+        let age = if routed {
+            self.multi
+                .iter()
+                .map(|b| {
+                    b.drift_model()
+                        .unwrap_or_else(drift_free)
+                        .trigger_age(self.tolerance)
+                })
+                .filter(|a| a.is_finite())
+                .fold(f64::INFINITY, f64::min)
+        } else {
+            decay.trigger_age(self.tolerance)
+        };
         // A drift-free backend never triggers: leave the clock unscaled
         // instead of dividing infinity.
         let time_scale = if age.is_finite() {
@@ -277,13 +346,67 @@ impl SimPoolBuilder {
             c
         });
 
-        // one scheduler + batcher per worker, tasks assigned round-robin
+        // routed mode: profiles + contiguous even worker spans behind a
+        // Router; every task is placed up front (route-on-first-use on
+        // whatever evidence exists — none yet, so costed at saturation)
+        // and its drift physics follow the routed substrate
+        let router: Option<Arc<Router>> = if routed {
+            let k = self.multi.len();
+            assert!(
+                self.workers >= k,
+                "routed pool needs at least one worker per backend ({} workers, {k} backends)",
+                self.workers
+            );
+            let profiles: Vec<BackendProfile> = self
+                .multi
+                .iter()
+                .map(|b| BackendProfile::of(b.as_ref(), &self.sched_cfg, self.max_batch))
+                .collect();
+            let (base, rem) = (self.workers / k, self.workers % k);
+            let mut ranges = Vec::with_capacity(k);
+            let mut start = 0;
+            for i in 0..k {
+                let size = base + usize::from(i < rem);
+                ranges.push((start, start + size));
+                start += size;
+            }
+            Some(Arc::new(Router::new(
+                profiles,
+                ranges,
+                self.tolerance,
+                BTreeMap::new(),
+                BTreeMap::new(),
+                clock.clone() as Arc<dyn Clock>,
+            )))
+        } else {
+            None
+        };
+        if let Some(rt) = &router {
+            for t in &self.tasks {
+                let b = rt.backend_of(t);
+                runner
+                    .policy_mut()
+                    .set_task_decay(t, self.multi[b].drift_model().unwrap_or_else(drift_free));
+            }
+        }
+
+        // one scheduler + batcher per worker; in routed mode each
+        // worker batches on ITS span's backend-adapted layer model
         let mut workers = Vec::with_capacity(self.workers);
         let mut task_worker = BTreeMap::new();
-        for _ in 0..self.workers {
-            let mut scfg = match &self.backend {
-                Some(b) => b.adapt_sched(self.sched_cfg),
-                None => self.sched_cfg,
+        for w in 0..self.workers {
+            let mut scfg = if let Some(rt) = &router {
+                let bi = rt
+                    .ranges()
+                    .iter()
+                    .position(|&(s, e)| w >= s && w < e)
+                    .expect("every worker belongs to a span");
+                self.multi[bi].adapt_sched(self.sched_cfg)
+            } else {
+                match &self.backend {
+                    Some(b) => b.adapt_sched(self.sched_cfg),
+                    None => self.sched_cfg,
+                }
             };
             if let Some(c) = self.coupling {
                 scfg = scfg.coupling(c);
@@ -300,8 +423,13 @@ impl SimPoolBuilder {
                 holding: None,
             });
         }
+        // task→worker: routed pools follow the router's span hash,
+        // homogeneous pools keep the historical round-robin
         for (i, t) in self.tasks.iter().enumerate() {
-            let w = i % workers.len();
+            let w = match &router {
+                Some(rt) => rt.worker_of(t),
+                None => i % workers.len(),
+            };
             workers[w].tasks.push(t.clone());
             task_worker.insert(t.clone(), w);
         }
@@ -311,6 +439,17 @@ impl SimPoolBuilder {
             .filter_map(|t| handle.trigger_at(t).map(|at| (t.clone(), at)))
             .collect();
 
+        let runner = Arc::new(Mutex::new(runner));
+        let rebalancer = match (&router, self.rebalance) {
+            (Some(rt), Some(rcfg)) => Some(
+                RebalanceRunner::new(rcfg, rt.clone(), self.multi.clone())
+                    .with_refresh(handle.clone(), runner.clone())
+                    .with_metrics(metrics.clone()),
+            ),
+            (None, Some(_)) => panic!("rebalance needs a routed (multi-backend) SimPool"),
+            _ => None,
+        };
+
         SimPool {
             clock,
             registry,
@@ -318,11 +457,16 @@ impl SimPoolBuilder {
             coordinator,
             handle,
             metrics,
+            router,
+            rebalancer,
+            tolerance: self.tolerance,
             workers,
             task_worker,
             modeled_due,
             batches: Vec::new(),
             swaps: Vec::new(),
+            moves: Vec::new(),
+            modeled_cost_ns: Vec::new(),
             drains: 0,
             holds: 0,
             max_holding: 0,
@@ -336,10 +480,16 @@ impl SimPoolBuilder {
 pub struct SimPool {
     pub clock: Arc<VirtualClock>,
     pub registry: SharedRegistry,
-    pub runner: RefreshRunner,
+    pub runner: Arc<Mutex<RefreshRunner>>,
     pub coordinator: Option<Arc<RefreshCoordinator>>,
     pub handle: RefreshHandle,
     pub metrics: Arc<Metrics>,
+    /// Routed mode only: the task→backend router behind the spans.
+    pub router: Option<Arc<Router>>,
+    /// Routed mode + [`SimPoolBuilder::rebalance`] only.
+    rebalancer: Option<RebalanceRunner>,
+    /// The pool-wide drift tolerance (routing default).
+    tolerance: f64,
     workers: Vec<SimWorker>,
     task_worker: BTreeMap<String, usize>,
     /// Modeled (pre-stagger) tolerance crossing of each task's CURRENT
@@ -347,6 +497,13 @@ pub struct SimPool {
     modeled_due: BTreeMap<String, Instant>,
     pub batches: Vec<SimBatch>,
     pub swaps: Vec<SwapRecord>,
+    /// Applied rebalance moves, stamped with their handoff instant.
+    pub moves: Vec<(Instant, PlannedMove)>,
+    /// Routed mode: modeled per-request placement cost of the routing
+    /// in effect at each push (service + tolerance maintenance on the
+    /// request's CURRENT backend) — the adaptive-vs-sticky comparison
+    /// statistic the rebalance suite and bench aggregate.
+    pub modeled_cost_ns: Vec<f64>,
     /// Pressure-shaped (`Decision::Drain`) closes observed.
     pub drains: usize,
     /// `Decision::Hold` deferrals observed.
@@ -373,6 +530,8 @@ impl SimPool {
             refit_advance: Duration::ZERO,
             sched_cfg: SchedConfig::for_layer(128, 128, 8).seq(320),
             backend: None,
+            multi: Vec::new(),
+            rebalance: None,
         }
     }
 
@@ -391,11 +550,25 @@ impl SimPool {
         self.workers[0].sched.modeled_batch_ns(fill)
     }
 
-    /// Enqueue one request for `task` at the current instant on its
-    /// pinned worker (also feeds the worker's arrival-rate estimator).
+    /// Enqueue one request for `task` at the current instant: routed
+    /// pools consult the router (feeding its arrival EWMA and logging
+    /// the modeled placement cost of the routing in effect),
+    /// homogeneous pools use the fixed task→worker pin. Either way the
+    /// chosen worker's arrival-rate estimator sees the request.
     pub fn push(&mut self, task: &str) {
         let now = self.clock.now();
-        let w = *self.task_worker.get(task).expect("deployed task");
+        let w = match &self.router {
+            Some(rt) => {
+                let w = rt.worker_for(task);
+                let b = rt.backend_of(task);
+                let gap = rt.arrival_ewma_ns(task).unwrap_or(f64::INFINITY);
+                self.modeled_cost_ns
+                    .push(rt.profiles()[b].placement_cost(gap, self.tolerance));
+                self.task_worker.insert(task.to_string(), w);
+                w
+            }
+            None => *self.task_worker.get(task).expect("deployed task"),
+        };
         self.workers[w].sched.observe_arrival(task, now);
         self.workers[w].batcher.push(task, now);
     }
@@ -403,7 +576,12 @@ impl SimPool {
     /// One refresh-runner evaluation at the current instant, recording
     /// every hot-swap against the modeled due time it replaced.
     pub fn tick(&mut self) {
-        for ev in self.runner.tick(self.clock.now()) {
+        let events = self
+            .runner
+            .lock()
+            .expect("refresh runner")
+            .tick(self.clock.now());
+        for ev in events {
             let modeled_due = self.modeled_due.get(&ev.task).copied().unwrap_or(ev.at);
             self.swaps.push(SwapRecord {
                 task: ev.task.clone(),
@@ -469,6 +647,13 @@ impl SimPool {
                     .pop_task(&task, fill)
                     .expect("ready batch");
                 assert_eq!(reqs.len(), fill, "pop honours the decided fill");
+                // migration freeze lifts at queue-empty — exactly the
+                // real worker loop's discipline (serve::pool)
+                if self.workers[w].batcher.pending_for(&task) == 0
+                    && self.handle.is_migrating(&task)
+                {
+                    self.handle.set_migrating(&task, false);
+                }
                 let (_, version) = self.registry.snapshot(&task).expect("deployed");
                 let done_at = now + self.workers[w].sched.modeled_batch(fill);
                 for enqueued in &reqs {
@@ -501,12 +686,59 @@ impl SimPool {
         }
     }
 
+    /// One cadenced rebalance pass at the current instant (the sim's
+    /// analogue of the background `ahwa-rebalance` thread's timer; a
+    /// no-op without [`SimPoolBuilder::rebalance`]): the runner
+    /// retires idle tasks, plans under the hysteresis gate, and runs
+    /// the freeze → carry → flip handoff per approved move. The sim
+    /// then hands each moved task's queued requests to the destination
+    /// span's batcher with their enqueue stamps intact and lifts the
+    /// migration freeze — the batch-boundary queue-empty handoff,
+    /// compressed to one virtual-clock instant.
+    pub fn rebalance_tick(&mut self) -> Vec<PlannedMove> {
+        if self.rebalancer.is_none() {
+            return Vec::new();
+        }
+        let now = self.clock.now();
+        let moves = self.rebalancer.as_ref().expect("checked above").tick(now);
+        let router = self.router.as_ref().expect("routed pool").clone();
+        for mv in &moves {
+            let dest = router.worker_of(&mv.task);
+            if let Some(src) = self.task_worker.insert(mv.task.clone(), dest) {
+                if src != dest {
+                    if let Some(items) = self.workers[src].batcher.take_task(&mv.task) {
+                        self.workers[dest].batcher.adopt(&mv.task, items);
+                    }
+                    if self.workers[src].holding.as_deref() == Some(mv.task.as_str()) {
+                        self.handle.set_holding(&mv.task, false);
+                        self.workers[src].holding = None;
+                    }
+                    self.workers[src].tasks.retain(|t| t != &mv.task);
+                    if !self.workers[dest].tasks.contains(&mv.task) {
+                        self.workers[dest].tasks.push(mv.task.clone());
+                    }
+                }
+            }
+            // the handoff emptied the old span at this same instant,
+            // so the freeze lifts at once (the real worker clears the
+            // flag at queue-empty)
+            if self.handle.is_migrating(&mv.task) {
+                self.handle.set_migrating(&mv.task, false);
+            }
+            self.moves.push((now, mv.clone()));
+        }
+        moves
+    }
+
     /// Drive `rounds` arrival rounds: each round advances the clock by
     /// `ia`, enqueues one request per task, drains every worker, then
-    /// runs one refresh tick (the background worker's check cadence).
-    /// Draining BEFORE the tick means the first serve of a refreshed
-    /// version lands one round after its swap — a stable, non-zero
-    /// swap gap the adaptive window must learn.
+    /// runs one refresh tick (the background worker's check cadence)
+    /// and one rebalance tick (a no-op unless the pool is routed with
+    /// a rebalance config). Draining BEFORE the ticks means the first
+    /// serve of a refreshed version lands one round after its swap —
+    /// a stable, non-zero swap gap the adaptive window must learn —
+    /// and that a migration's queue handoff happens at a batch
+    /// boundary, never mid-drain.
     pub fn run_rounds(&mut self, rounds: usize, ia: Duration) {
         let tasks: Vec<String> = self.task_worker.keys().cloned().collect();
         for _ in 0..rounds {
@@ -516,6 +748,7 @@ impl SimPool {
             }
             self.drain();
             self.tick();
+            self.rebalance_tick();
         }
     }
 

@@ -17,7 +17,26 @@
 //! * **Routing properties** (property tests over random cost tables):
 //!   the decision is deterministic, stays in range, respects pins, and
 //!   never places a task on a backend that cannot sustain its arrival
-//!   rate while another can.
+//!   rate while another can; `assignment_cost` totals are valid for
+//!   every routed assignment (its in-range precondition is pinned with
+//!   a debug-build panic test).
+//! * **Cadenced rebalance** (property tests over synthetic crossover
+//!   geometries): under stationary traffic every applied move strictly
+//!   improves the modeled cost, each task converges in the first few
+//!   ticks and then the router goes silent; under adversarial
+//!   regime-flapping traffic moves never exceed the per-tick budget,
+//!   never regress cost, and consecutive moves are spaced by at least
+//!   the cooldown. Idle retirement bounds the router maps under task
+//!   churn.
+//! * **Live migration.** On the routed `SimPool` virtual clock a
+//!   rebalance move is exactly-once (no request dropped or
+//!   double-served), nothing serves on the old span after the handoff,
+//!   and the drift anchor (`deployed_at` / `trigger_at`) survives
+//!   bit-identically — a migration is not a redeploy. The migrating
+//!   freeze drains at the batch boundary and lifts at queue-empty, and
+//!   the capacity tier re-prices page-in to the destination's deploy
+//!   cost without evicting the resident adapter. The adaptive pool
+//!   provably beats sticky routing on shifted traffic (modeled p99).
 //! * **Hermetic serving.** A `DigitalRef` pool stands up a REAL
 //!   `Server` (threads, channels, admission) with no artifacts and no
 //!   XLA, serves deterministic logits, and a mixed pool routes
@@ -30,19 +49,23 @@
 #[path = "common/refresh_sim.rs"]
 mod refresh_sim;
 
+use std::collections::BTreeMap;
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use ahwa_lora::model::params::ParamStore;
 use ahwa_lora::pcm::PcmModel;
-use ahwa_lora::serve::hal::{route_one, route_tasks};
+use ahwa_lora::serve::hal::{assignment_cost, route_one, route_tasks};
 use ahwa_lora::serve::registry::SharedRegistry;
 use ahwa_lora::serve::{
-    Backend, BackendProfile, BatchScheduler, BuildError, CoordConfig, CostModel, DecayModel,
-    PcmPjrt, RefreshCoupling, SchedConfig, Server, TaskProfile,
+    drift_free, AdapterCache, Backend, BackendProfile, BatchScheduler, BuildError, CacheConfig,
+    CacheLookup, Clock, CoordConfig, CostModel, DecayModel, Metrics, PcmPjrt, RebalanceConfig,
+    RebalanceRunner, RefreshCoupling, Router, SchedConfig, Server, TaskProfile, VirtualClock,
 };
 use ahwa_lora::util::proptest::check;
-use refresh_sim::SimPool;
+use ahwa_lora::util::stats;
+use refresh_sim::{adapter, gap_shifting_from, SimPool};
 
 const TASKS: [&str; 3] = ["t0", "t1", "t2"];
 /// 3 trigger cycles on the builder default (`trigger_in` = 100 ms,
@@ -132,6 +155,7 @@ fn routing_decision_properties() {
                         None
                     },
                     refit_ns: g.f64_in(0.0, 1e7),
+                    deploy_latency: Duration::from_micros(g.usize_in(10, 2000) as u64),
                 }
             })
             .collect();
@@ -164,7 +188,40 @@ fn routing_decision_properties() {
         let routed = route_tasks(&backends, &tasks);
         assert_eq!(routed[0], pin, "pins override the cost decision");
         assert_eq!(routed[1], picked, "unpinned tasks follow route_one");
+        // every assignment route_tasks emits satisfies assignment_cost's
+        // documented in-range precondition, and the total it prices is a
+        // valid, deterministic cost
+        assert!(routed.iter().all(|&b| b < n), "route_tasks emits only valid backend indices");
+        let cost = assignment_cost(&backends, &tasks, &routed);
+        assert!(!cost.is_nan() && cost >= 0.0, "assignment cost is a valid total: {cost}");
+        assert_eq!(
+            cost,
+            assignment_cost(&backends, &tasks, &routed),
+            "assignment cost is deterministic"
+        );
     });
+}
+
+/// `assignment_cost`'s precondition (every index in range) is a
+/// `debug_assert` — out-of-range input must panic in debug builds
+/// rather than silently clamp.
+#[cfg(debug_assertions)]
+#[test]
+#[should_panic(expected = "assignment_cost: backend index")]
+fn assignment_cost_rejects_out_of_range_backends_in_debug() {
+    let layer = SchedConfig::for_layer(128, 128, 8).seq(320);
+    let backends = vec![BackendProfile::of(
+        &PcmPjrt::default(),
+        &layer,
+        refresh_sim::MAX_BATCH,
+    )];
+    let tasks = vec![TaskProfile {
+        task: "t".into(),
+        tolerance: 0.05,
+        interarrival_ns: 1e6,
+        pinned: None,
+    }];
+    assignment_cost(&backends, &tasks, &[1]);
 }
 
 #[test]
@@ -216,15 +273,520 @@ fn builder_validation_fails_fast_before_io() {
     );
 }
 
+// ---------------------------------------------------------------------------
+// Cadenced rebalance: hysteresis + cooldown property tests
+// ---------------------------------------------------------------------------
+
+/// Synthetic two-backend crossover geometry: a drifting "analog"
+/// backend with a sublinear batch table against a `mult`× slower
+/// drift-free "digital" one. `refit_ns` prices the analog
+/// tolerance-maintenance bill, so the crossover gap — below it analog
+/// wins, above it digital does — is set by the generator, not
+/// hard-coded against any real cost table.
+fn crossover_profiles(base: f64, mult: f64, refit_ns: f64) -> Vec<BackendProfile> {
+    let table: Vec<f64> = (1..=4u32).map(|b| base * f64::from(b).powf(0.7)).collect();
+    vec![
+        BackendProfile {
+            name: "analog".into(),
+            cost: CostModel::from_table(table.clone()),
+            drift: Some(DecayModel::analytic(PcmModel::default())),
+            refit_ns,
+            deploy_latency: Duration::from_nanos(400),
+        },
+        BackendProfile {
+            name: "digital".into(),
+            cost: CostModel::from_table(table.iter().map(|c| c * mult).collect()),
+            drift: None,
+            refit_ns: 0.0,
+            deploy_latency: Duration::from_nanos(120),
+        },
+    ]
+}
+
+/// Two-span router over `profiles` on a virtual clock — the pure
+/// routing-state harness the property tests drive without a worker
+/// pool behind it.
+fn synthetic_router(
+    profiles: Vec<BackendProfile>,
+    pins: BTreeMap<String, usize>,
+    clock: Arc<VirtualClock>,
+) -> Router {
+    Router::new(
+        profiles,
+        vec![(0, 1), (1, 2)],
+        0.05,
+        BTreeMap::new(),
+        pins,
+        clock as Arc<dyn Clock>,
+    )
+}
+
+#[test]
+fn hysteresis_stationary_traffic_converges_then_goes_quiet() {
+    check("rebalance: converge and go silent", 25, |g| {
+        let base = g.f64_in(80.0, 400.0);
+        let mult = g.f64_in(2.0, 6.0);
+        let h = g.f64_in(0.25, 2.0);
+        let age = DecayModel::analytic(PcmModel::default()).trigger_age(0.05);
+        let refit = g.f64_in(0.001, 0.3) * (mult - 1.0) * age * 1e9;
+        let profiles = crossover_profiles(base, mult, refit);
+        // a gap where digital wins by at least 2× the hysteresis bar
+        // (saving over the 512-arrival cooldown vs h × deploy(digital))
+        let need = h * 120.0 * 2.0 / 512.0;
+        let gap = gap_shifting_from(&profiles, 0, 0.05, need).expect("crossover gap exists");
+        let ia_ns = gap.ceil();
+        assert_eq!(route_one(&profiles, ia_ns, 0.05), 1, "still shifted at the integer gap");
+        assert!(
+            profiles[0].placement_cost(ia_ns, 0.05) - profiles[1].placement_cost(ia_ns, 0.05)
+                > need,
+            "saving still clears the bar at the integer gap"
+        );
+        let ia = Duration::from_nanos(ia_ns as u64);
+
+        let clock = Arc::new(VirtualClock::new());
+        let pins = BTreeMap::from([("pinned".to_string(), 0usize)]);
+        let router = synthetic_router(profiles, pins, clock.clone());
+        let tasks = ["a", "b", "c", "pinned"];
+        for t in tasks {
+            assert_eq!(router.backend_of(t), 0, "cold placement lands on analog");
+        }
+        let cfg = RebalanceConfig::new()
+            .hysteresis(h)
+            .cooldown(Duration::from_nanos((ia_ns * 512.0) as u64))
+            .max_moves_per_tick(2)
+            .idle_retire(None);
+
+        let mut move_round: BTreeMap<String, usize> = BTreeMap::new();
+        for round in 0..90 {
+            clock.advance(ia);
+            let now = clock.now();
+            for t in tasks {
+                router.note_arrival(t, now);
+            }
+            let moves = router.rebalance_with(&cfg, now);
+            assert!(moves.len() <= 2, "per-tick move budget respected");
+            for mv in moves {
+                assert_ne!(mv.task, "pinned", "pins never migrate");
+                assert_eq!((mv.from, mv.to), (0, 1), "moves follow the crossover");
+                assert!(mv.cost_to < mv.cost_from, "every move strictly improves");
+                assert!(
+                    move_round.insert(mv.task.clone(), round).is_none(),
+                    "stationary traffic: one move per task, then silence ({})",
+                    mv.task
+                );
+            }
+        }
+        for t in ["a", "b", "c"] {
+            let round = move_round.get(t).copied().expect("every free task converged");
+            assert!(round < 8, "convergence happens in the first ticks, not eventually");
+            assert_eq!(router.backend_of(t), 1);
+        }
+        assert_eq!(router.backend_of("pinned"), 0, "the pin held through 90 ticks");
+        assert_eq!(move_round.len(), 3, "exactly the three free tasks moved");
+    });
+}
+
+#[test]
+fn cooldown_spacing_holds_under_regime_flapping_traffic() {
+    check("rebalance: cooldown under flapping", 20, |g| {
+        let base = g.f64_in(100.0, 300.0);
+        let mult = g.f64_in(2.5, 3.5);
+        let age = DecayModel::analytic(PcmModel::default()).trigger_age(0.05);
+        let refit = g.f64_in(0.01, 0.05) * (mult - 1.0) * age * 1e9;
+        let profiles = crossover_profiles(base, mult, refit);
+        let hi = gap_shifting_from(&profiles, 0, 0.05, 3.5 * base)
+            .expect("crossover gap exists")
+            .ceil();
+        assert_eq!(route_one(&profiles, hi, 0.05), 1, "slow regime routes digital");
+        let lo = 100.0;
+        assert_eq!(route_one(&profiles, lo, 0.05), 0, "fast regime routes analog");
+        let cooldown = Duration::from_nanos((20.0 * hi) as u64);
+
+        let clock = Arc::new(VirtualClock::new());
+        let router = synthetic_router(profiles, BTreeMap::new(), clock.clone());
+        assert_eq!(router.backend_of("flap"), 0);
+        let cfg = RebalanceConfig::new()
+            .hysteresis(0.0)
+            .cooldown(cooldown)
+            .max_moves_per_tick(1)
+            .idle_retire(None);
+
+        // adversarial flapping: alternate slow and fast half-cycles so
+        // the modeled optimum keeps switching sides
+        let mut move_at: Vec<Instant> = Vec::new();
+        for _cycle in 0..10 {
+            for &gap_ns in &[hi, lo] {
+                let gap = Duration::from_nanos(gap_ns as u64);
+                for _ in 0..14 {
+                    clock.advance(gap);
+                    let now = clock.now();
+                    router.note_arrival("flap", now);
+                    let moves = router.rebalance_with(&cfg, now);
+                    assert!(moves.len() <= 1, "per-tick budget holds while flapping");
+                    for mv in moves {
+                        assert!(mv.cost_to < mv.cost_from, "flapping never regresses cost");
+                        move_at.push(now);
+                    }
+                }
+            }
+        }
+        assert!(
+            move_at.len() >= 2,
+            "the flapping traffic drove at least one migration each way"
+        );
+        for w in move_at.windows(2) {
+            assert!(
+                w[1].duration_since(w[0]) >= cooldown,
+                "consecutive moves of one task are spaced by the cooldown"
+            );
+        }
+    });
+}
+
+#[test]
+fn idle_retirement_bounds_router_maps_under_task_churn() {
+    let clock = Arc::new(VirtualClock::new());
+    let backends: Vec<Arc<dyn Backend>> = vec![
+        Arc::new(PcmPjrt::default()),
+        Arc::new(PcmPjrt::conservative()),
+    ];
+    let layer = SchedConfig::for_layer(128, 128, 8).seq(320);
+    let profiles: Vec<BackendProfile> = backends
+        .iter()
+        .map(|b| BackendProfile::of(b.as_ref(), &layer, refresh_sim::MAX_BATCH))
+        .collect();
+    let router = Arc::new(Router::new(
+        profiles,
+        vec![(0, 1), (1, 2)],
+        0.05,
+        BTreeMap::new(),
+        BTreeMap::new(),
+        clock.clone() as Arc<dyn Clock>,
+    ));
+    let metrics = Arc::new(Metrics::default());
+    let runner = RebalanceRunner::new(
+        RebalanceConfig::new().idle_retire(Some(Duration::from_millis(10))),
+        router.clone(),
+        backends,
+    )
+    .with_metrics(metrics.clone());
+
+    let persistent = ["p0", "p1", "p2", "p3"];
+    for i in 0..400usize {
+        clock.advance(Duration::from_millis(1));
+        let now = clock.now();
+        // a fresh one-shot task every round — the unbounded-growth
+        // regression: before idle retirement these entries lived forever
+        let churn = format!("churn{i}");
+        router.note_arrival(&churn, now);
+        router.backend_of(&churn);
+        for t in persistent {
+            router.note_arrival(t, now);
+            router.backend_of(t);
+        }
+        runner.tick(now);
+        let (table, arrivals) = router.map_sizes();
+        assert!(
+            table <= 16 && arrivals <= 16,
+            "router maps stay bounded under churn (round {i}: table {table}, arrivals {arrivals})"
+        );
+    }
+    assert!(
+        metrics.tasks_retired.load(Ordering::Relaxed) >= 380,
+        "nearly every one-shot task was retired"
+    );
+    for t in persistent {
+        let placed = router.assignments().iter().any(|(task, _)| task == t);
+        assert!(placed, "persistent task {t} survived retirement");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Live span migration on the routed SimPool virtual clock
+// ---------------------------------------------------------------------------
+
+/// The ungated PCM pair whose service/maintenance trade flips with
+/// arrival rate — a fast substrate with an expensive refit against a
+/// 4× slower one that refits for free — plus a measured gap provably
+/// past the crossover. Returns `(backends, profiles, cold, dest, ia)`:
+/// tasks cold-place on `cold` and the hysteresis gate provably opens
+/// toward `dest` at inter-arrival `ia` (the saving over
+/// `cooldown_arrivals` arrivals clears `hysteresis ×` the
+/// destination's deploy latency with 2× margin).
+fn pcm_shift_geometry(
+    hysteresis: f64,
+    cooldown_arrivals: f64,
+) -> (Vec<Arc<dyn Backend>>, Vec<BackendProfile>, usize, usize, Duration) {
+    let fast: Arc<dyn Backend> = Arc::new(PcmPjrt::default().refit_ns(5.0e9));
+    let lean: Arc<dyn Backend> = Arc::new(
+        PcmPjrt::default()
+            .named("pcm-lean")
+            .t_int_scale(4.0)
+            .refit_ns(0.0)
+            .deploy_latency(Duration::from_micros(100)),
+    );
+    let backends = vec![fast, lean];
+    let layer = SchedConfig::for_layer(128, 128, 8).seq(320);
+    let profiles: Vec<BackendProfile> = backends
+        .iter()
+        .map(|b| BackendProfile::of(b.as_ref(), &layer, refresh_sim::MAX_BATCH))
+        .collect();
+    let cold = route_one(&profiles, f64::INFINITY, 0.05);
+    let dest = 1 - cold;
+    let need =
+        hysteresis * profiles[dest].deploy_latency.as_nanos() as f64 * 2.0 / cooldown_arrivals;
+    let gap = gap_shifting_from(&profiles, cold, 0.05, need).expect("crossover gap exists");
+    let ia_ns = gap.ceil();
+    assert_eq!(
+        route_one(&profiles, ia_ns, 0.05),
+        dest,
+        "still shifted at the integer gap"
+    );
+    assert!(
+        profiles[cold].placement_cost(ia_ns, 0.05) - profiles[dest].placement_cost(ia_ns, 0.05)
+            > need,
+        "saving still clears the hysteresis bar at the integer gap"
+    );
+    (backends, profiles, cold, dest, Duration::from_nanos(ia_ns as u64))
+}
+
+#[test]
+fn migrating_freeze_drains_at_batch_boundary_and_lifts_at_queue_empty() {
+    let mut pool = SimPool::builder().workers(1).tasks(&["t0"]).build();
+    pool.advance(IA);
+    pool.push("t0");
+    pool.handle.set_migrating("t0", true);
+    let drains_before = pool.drains;
+    pool.drain();
+    assert_eq!(pool.pending(), 0, "the freeze drains the queue, it does not park it");
+    assert!(
+        pool.drains > drains_before,
+        "a migrating task's close is pressure-shaped (drain), not a deadline wait"
+    );
+    assert!(
+        !pool.handle.is_migrating("t0"),
+        "the freeze lifts at queue-empty, exactly the worker-loop discipline"
+    );
+}
+
+#[test]
+fn live_migration_is_exactly_once_and_preserves_the_drift_anchor() {
+    let (backends, _, cold, dest, ia) = pcm_shift_geometry(0.5, 600.0);
+    let tasks = ["m0", "m1", "m2"];
+    let mut pool = SimPool::builder()
+        .workers(2)
+        .tasks(&tasks)
+        .backends(&backends)
+        .rebalance(
+            RebalanceConfig::new()
+                .hysteresis(0.5)
+                .cooldown(ia * 600)
+                .idle_retire(None),
+        )
+        .trigger_in(Duration::from_secs(1_000_000_000))
+        .build();
+    let router = pool.router.clone().expect("routed pool");
+    let anchors: Vec<_> = tasks
+        .iter()
+        .map(|t| (pool.handle.deployed_at(t), pool.handle.trigger_at(t)))
+        .collect();
+    assert!(anchors.iter().all(|(d, _)| d.is_some()), "deployments tracked");
+
+    pool.run_rounds(40, ia);
+    pool.flush(ia);
+
+    // exactly-once: every enqueued request served exactly once
+    assert_eq!(pool.served(), 120, "40 rounds × 3 tasks, nothing dropped or doubled");
+    assert_eq!(pool.lat_ns.len(), 120);
+    // every task crossed once, under the measured shifted traffic
+    assert_eq!(pool.moves.len(), 3, "one move per task");
+    let mut moved: Vec<&str> = pool.moves.iter().map(|(_, m)| m.task.as_str()).collect();
+    moved.sort_unstable();
+    assert_eq!(moved, tasks);
+    for (_, mv) in &pool.moves {
+        assert_eq!((mv.from, mv.to), (cold, dest));
+        assert!(mv.cost_to < mv.cost_from, "every applied move strictly improves");
+    }
+    // nothing serves on the old span after its task's handoff
+    let (span_start, span_end) = router.ranges()[dest];
+    for b in &pool.batches {
+        let moved_at = pool
+            .moves
+            .iter()
+            .find(|(_, m)| m.task == b.task)
+            .map(|&(at, _)| at)
+            .expect("every task moved");
+        if b.popped_at > moved_at {
+            assert!(
+                b.worker >= span_start && b.worker < span_end,
+                "task {} served on worker {} after its move off span {cold}",
+                b.task,
+                b.worker
+            );
+        }
+    }
+    // a migration is not a redeploy: no refresh fired, and both drift
+    // anchors survive bit-identically through freeze → carry → flip
+    assert!(pool.swaps.is_empty(), "no refresh during the migration window");
+    for (t, (deployed, trigger)) in tasks.iter().zip(&anchors) {
+        assert_eq!(pool.handle.deployed_at(t), *deployed, "deployed_at preserved for {t}");
+        assert_eq!(pool.handle.trigger_at(t), *trigger, "trigger_at preserved for {t}");
+    }
+    // the EWMA the move was planned against is the exact arrival gap
+    for t in tasks {
+        let ewma = router.arrival_ewma_ns(t).expect("measured");
+        let ia_ns = ia.as_nanos() as f64;
+        assert!((ewma - ia_ns).abs() <= 1e-9 * ia_ns, "constant gaps → exact EWMA");
+    }
+}
+
+#[test]
+fn migration_reprices_page_in_and_keeps_residency() {
+    let (backends, profiles, cold, dest, ia) = pcm_shift_geometry(1.0, 64.0);
+    let clock = Arc::new(VirtualClock::new());
+    let registry = SharedRegistry::new();
+    registry.deploy("t0", adapter(1.0));
+    let metrics = Arc::new(Metrics::default());
+    let cache = AdapterCache::new(
+        CacheConfig::new(4).load_latency(Duration::from_micros(777)),
+        registry.clone(),
+        clock.clone() as Arc<dyn Clock>,
+        metrics.clone(),
+    );
+    let router = Arc::new(Router::new(
+        profiles,
+        vec![(0, 1), (1, 2)],
+        0.05,
+        BTreeMap::new(),
+        BTreeMap::new(),
+        clock.clone() as Arc<dyn Clock>,
+    ));
+    assert_eq!(router.backend_of("t0"), cold, "cold placement");
+    let runner = RebalanceRunner::new(
+        RebalanceConfig::new()
+            .hysteresis(1.0)
+            .cooldown(ia * 64)
+            .idle_retire(None),
+        router.clone(),
+        backends.clone(),
+    )
+    .with_cache(cache.clone())
+    .with_metrics(metrics.clone());
+
+    // page the adapter in at the configured (pre-migration) latency
+    match cache.lookup("t0", clock.now(), 1) {
+        CacheLookup::Hit | CacheLookup::Loading { .. } | CacheLookup::Queued { .. } => {}
+        CacheLookup::Shed | CacheLookup::Unknown => panic!("deployed task must be admissible"),
+    }
+    clock.advance(Duration::from_secs(1));
+    cache.poll(clock.now());
+    assert!(cache.is_resident("t0"));
+    assert_eq!(cache.load_latency_for("t0"), Duration::from_micros(777));
+
+    let mut moves = Vec::new();
+    for _ in 0..4 {
+        clock.advance(ia);
+        router.note_arrival("t0", clock.now());
+        moves.extend(runner.tick(clock.now()));
+    }
+    assert_eq!(moves.len(), 1, "the shifted traffic drove exactly one move");
+    assert_eq!((moves[0].from, moves[0].to), (cold, dest));
+    assert_eq!(metrics.rebalance_moves.load(Ordering::Relaxed), 1);
+    // residency is task-keyed: the move re-prices future page-ins to
+    // the destination's deploy cost WITHOUT evicting the hot adapter
+    assert!(cache.is_resident("t0"), "migration must not evict the resident adapter");
+    assert_eq!(
+        cache.load_latency_for("t0"),
+        backends[dest].deploy_latency(),
+        "page-in now costs the destination substrate's deploy latency"
+    );
+    assert_ne!(cache.load_latency_for("t0"), Duration::from_micros(777));
+}
+
+#[test]
+fn adaptive_rebalance_beats_sticky_routing_on_shifted_traffic() {
+    let run = |adaptive: bool| {
+        let (backends, _, _, _, ia) = pcm_shift_geometry(0.5, 600.0);
+        let mut b = SimPool::builder()
+            .workers(2)
+            .tasks(&["s0", "s1", "s2"])
+            .backends(&backends)
+            .trigger_in(Duration::from_secs(1_000_000_000));
+        if adaptive {
+            b = b.rebalance(
+                RebalanceConfig::new()
+                    .hysteresis(0.5)
+                    .cooldown(ia * 600)
+                    .idle_retire(None),
+            );
+        }
+        let mut pool = b.build();
+        // warmup: seed the EWMAs (and let the adaptive pool converge),
+        // then measure a clean window
+        pool.run_rounds(3, ia);
+        pool.modeled_cost_ns.clear();
+        pool.run_rounds(57, ia);
+        pool.flush(ia);
+        assert_eq!(pool.lat_ns.len(), 180, "every request served");
+        pool
+    };
+    let adaptive = run(true);
+    let sticky = run(false);
+    assert!(!adaptive.moves.is_empty(), "the adaptive pool migrated");
+    assert!(sticky.moves.is_empty(), "the sticky pool never moves");
+    let (pa, ps) = (
+        stats::percentile(&adaptive.modeled_cost_ns, 99.0),
+        stats::percentile(&sticky.modeled_cost_ns, 99.0),
+    );
+    assert!(
+        pa < ps,
+        "adaptive modeled p99 ({pa:.0} ns) must beat sticky ({ps:.0} ns) on shifted traffic"
+    );
+    assert!(
+        stats::mean(&adaptive.modeled_cost_ns) < stats::mean(&sticky.modeled_cost_ns),
+        "and the mean moves the same way"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// DigitalRef numerics knobs: drift-age separation (ungated slice)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn analog_profiles_separate_by_drift_age_and_the_digital_reference_is_drift_free() {
+    let def = PcmPjrt::default().drift_model().expect("default PCM drifts");
+    let cons = PcmPjrt::conservative().drift_model().expect("conservative PCM drifts");
+    let digital = drift_free();
+    let ages = [120.0, 1.2e3, 1.2e4, 1.2e5];
+    let (mut prev_d, mut prev_c) = (0.0, 0.0);
+    for &age in &ages {
+        let d = def.predicted_decay(age);
+        let c = cons.predicted_decay(age);
+        assert_eq!(digital.predicted_decay(age), 0.0, "ideal substrate never decays");
+        assert!(d > 0.0 && c > 0.0, "both analog substrates decay at age {age}");
+        assert!(c < d, "the conservative profile decays slower at age {age}");
+        assert!(d >= prev_d && c >= prev_c, "decay is monotone in age");
+        (prev_d, prev_c) = (d, c);
+    }
+    // same tolerance → later trigger on the conservative substrate:
+    // the separation the router's maintenance term prices
+    let tol = def.predicted_decay(1000.0);
+    let (td, tc) = (def.trigger_age(tol), cons.trigger_age(tol));
+    assert!(td.is_finite() && td > 0.0, "the default substrate triggers");
+    assert!(tc > td, "the conservative substrate triggers later at tolerance {tol}");
+    assert!(
+        digital.trigger_age(tol).is_infinite(),
+        "the drift-free reference never triggers"
+    );
+}
+
 #[cfg(feature = "digital-ref")]
 mod digital {
     use super::*;
     use std::collections::BTreeMap;
 
     use ahwa_lora::config::manifest::{GraphSpec, HwDefaults, IoSpec, Manifest, Role, VariantCfg};
-    use ahwa_lora::serve::hal::assignment_cost;
-    use ahwa_lora::serve::{DigitalRef, FnRefitter, Refit, Refitter, RefreshConfig};
-    use refresh_sim::adapter;
+    use ahwa_lora::serve::{DigitalRef, Forward, FnRefitter, Refit, Refitter, RefreshConfig};
 
     #[test]
     fn drift_free_backend_never_refits_and_prices_the_slowdown() {
@@ -410,6 +972,248 @@ mod digital {
         // worker 0 is a PCM+PJRT worker with no artifacts behind it:
         // its bring-up failure surfaces at shutdown — the digital span
         // served real traffic regardless, which is the point
+        assert!(server.shutdown().is_err());
+    }
+
+    /// The DigitalRef numerics knobs: with a PCM model attached the
+    /// digital reference reproduces the analog error envelope —
+    /// programming-noise σ(g_rel), the read-quantization grid, the
+    /// ν-clip deviation clamp — fully deterministically, and turning
+    /// `noise_scale` to zero restores the bit-exact clean path.
+    #[test]
+    fn digital_numerics_knobs_match_the_pcm_reference_envelope() {
+        let m = cls_manifest();
+        let meta = ParamStore::default();
+        let lora = adapter(1.0);
+        let tokens: Vec<i32> = (0..64).collect(); // 4 rows of seq 16
+        let hw = [0.0f32, 0.0, 127.0, 8.0, 8.0];
+        let logits = |backend: DigitalRef| {
+            let fwd = backend.forward(&m, "base/fwd_cls").expect("hermetic forward");
+            fwd.cls_logits(&meta, &lora, &tokens, hw, 7).expect("digital emit")
+        };
+        let clean = logits(DigitalRef::default());
+        assert_eq!(clean.len(), 4, "one class-logit row per seq-length request");
+        assert!(clean.iter().all(|r| r.len() == 3));
+        assert_eq!(clean, logits(DigitalRef::default()), "the clean path is deterministic");
+
+        let model = PcmModel::default();
+        let off = logits(DigitalRef::default().model(model.clone()).noise_scale(0.0));
+        assert_eq!(off, clean, "noise_scale 0 must restore the bit-exact clean path");
+
+        let noisy = logits(DigitalRef::default().model(model.clone()));
+        assert_eq!(
+            noisy,
+            logits(DigitalRef::default().model(model.clone())),
+            "the PCM error envelope is seeded, not stochastic"
+        );
+        let clip = model.nu_clip.1 + 1e-6;
+        let mut perturbed = false;
+        for (nr, cr) in noisy.iter().zip(&clean) {
+            for (n, c) in nr.iter().zip(cr) {
+                assert!(n.is_finite());
+                assert!(
+                    (n - c).abs() <= clip,
+                    "deviation {n} vs {c} exceeds the ν-clip bound {clip}"
+                );
+                perturbed |= n != c;
+            }
+        }
+        assert!(perturbed, "PCM numerics must actually perturb the logits");
+    }
+
+    /// Three-substrate adaptive pool end-to-end on the virtual clock:
+    /// a fast-drifting PCM, a conservative PCM (slower service,
+    /// cheaper maintenance), and the drift-free digital reference.
+    /// Three tasks with order-of-magnitude different arrival rates
+    /// start cold on the cheapest substrate; the cadenced rebalancer
+    /// migrates each to its cost-optimal backend exactly once, and
+    /// the drift physics follow the move — the fast-PCM resident
+    /// keeps refreshing while the migrated tasks never swap again.
+    #[test]
+    fn adaptive_pool_separates_three_substrates_by_arrival_rate() {
+        // the conservative refit is re-priced so that all three cost
+        // crossovers land on the measured gap grid below (the stock
+        // horizon puts the digital crossover past any plausible EWMA)
+        let backends: Vec<Arc<dyn Backend>> = vec![
+            Arc::new(PcmPjrt::default().refit_ns(5.0e9)),
+            Arc::new(PcmPjrt::conservative().refit_ns(2.0e9)),
+            Arc::new(DigitalRef::default()),
+        ];
+        let layer = SchedConfig::for_layer(128, 128, 8).seq(320);
+        let profiles: Vec<BackendProfile> = backends
+            .iter()
+            .map(|b| BackendProfile::of(b.as_ref(), &layer, refresh_sim::MAX_BATCH))
+            .collect();
+        // first measured gap that routes to `want` with every other
+        // substrate at least 10% more expensive — a margin the traffic
+        // simulation cannot erode; integer ns so the constant-gap EWMA
+        // reproduces the scanned value exactly
+        let gap_of = |want: usize| -> u64 {
+            (0..280)
+                .map(|k| 10f64.powf(2.0 + k as f64 * 0.05).ceil())
+                .find(|&gap| {
+                    let costs: Vec<f64> =
+                        profiles.iter().map(|p| p.placement_cost(gap, 0.05)).collect();
+                    route_one(&profiles, gap, 0.05) == want
+                        && costs
+                            .iter()
+                            .enumerate()
+                            .all(|(i, &c)| i == want || costs[want] * 1.1 < c)
+                })
+                .unwrap_or_else(|| panic!("no margined gap routes to backend {want}"))
+                as u64
+        };
+        let cold = route_one(&profiles, f64::INFINITY, 0.05);
+        assert_eq!(cold, 0, "at saturation the fast PCM is the cheapest substrate");
+        let (g0, g1, g2) = (gap_of(0), gap_of(1), gap_of(2));
+        assert!(g0 < g1 && g1 < g2, "crossover gaps must be ordered");
+
+        let mut pool = SimPool::builder()
+            .workers(3)
+            .tasks(&["fast", "mid", "slow"])
+            .backends(&backends)
+            .rebalance(
+                RebalanceConfig::new()
+                    .hysteresis(0.05)
+                    .cooldown(Duration::from_nanos(g2.saturating_mul(512)))
+                    .idle_retire(None),
+            )
+            .trigger_in(Duration::from_nanos(4 * g2))
+            .build();
+
+        // merged arrival timeline: 40 arrivals per task at its own gap,
+        // advanced event by event so rebalance sees every arrival
+        let names = ["fast", "mid", "slow"];
+        let gaps = [g0, g1, g2];
+        let mut next = gaps;
+        let mut left = [40usize; 3];
+        let mut elapsed: u64 = 0;
+        while let Some(i) = (0..3usize).filter(|&i| left[i] > 0).min_by_key(|&i| next[i]) {
+            pool.advance(Duration::from_nanos(next[i] - elapsed));
+            elapsed = next[i];
+            pool.push(names[i]);
+            left[i] -= 1;
+            next[i] += gaps[i];
+            pool.drain();
+            pool.tick();
+            pool.rebalance_tick();
+        }
+        pool.flush(Duration::from_millis(5));
+
+        assert_eq!(pool.lat_ns.len(), 120, "every request served");
+        let target: BTreeMap<&str, usize> =
+            BTreeMap::from([("fast", 0), ("mid", 1), ("slow", 2)]);
+        let router = pool.router.clone().expect("routed pool");
+        for (task, &want) in &target {
+            assert_eq!(
+                router.backend_of(task),
+                want,
+                "task {task} must end on its cost-optimal substrate"
+            );
+        }
+        // exactly one migration per task that did not start on its
+        // optimum, none for the one that did
+        assert_eq!(pool.moves.len(), 2, "mid and slow move, fast stays");
+        for (_, mv) in &pool.moves {
+            assert_eq!(mv.from, cold, "every migration leaves the cold placement");
+            assert_eq!(mv.to, target[mv.task.as_str()]);
+        }
+        let moved: Vec<&str> = pool.moves.iter().map(|(_, mv)| mv.task.as_str()).collect();
+        assert_eq!(moved, vec!["mid", "slow"], "moves land in arrival-evidence order");
+        // drift physics follow the migration: the fast-PCM resident
+        // keeps refreshing, the conservative horizon exceeds the run,
+        // and the migrated-to-digital task stops triggering at all
+        assert!(!pool.swaps_for("fast").is_empty(), "fast-PCM resident keeps refreshing");
+        assert!(pool.handle.trigger_at("fast").is_some());
+        assert!(
+            pool.swaps_for("mid").is_empty(),
+            "the conservative drift horizon exceeds the run"
+        );
+        assert!(pool.swaps_for("slow").is_empty(), "drift-free substrate never refreshes");
+        assert_eq!(
+            pool.handle.trigger_at("slow"),
+            None,
+            "migration rewired the slow task onto drift-free physics"
+        );
+    }
+
+    /// Three-way Server routing through per-task tolerances: the
+    /// relaxed task stays on the fast PCM, the tight task is priced
+    /// off it by the maintenance bill, and a pinned task overrides
+    /// the cost model onto the digital span — and serves real traffic
+    /// there.
+    #[test]
+    fn three_backend_server_routes_tolerances_and_honors_pins() {
+        let pcm = PcmPjrt::default().refit_ns(5.0e9);
+        let cons = PcmPjrt::conservative().refit_ns(5.0e9);
+        let dig = DigitalRef::default();
+        // mirror the server's own placement inputs (graph seq 16,
+        // builder max_batch 8): which substrate wins the tight task is
+        // the calibrated latency model's call, so the test derives the
+        // expectation from the same profiles the server routes on
+        let layer = SchedConfig::for_layer(128, 128, 8).seq(16);
+        let profiles = vec![
+            BackendProfile::of(&pcm, &layer, 8),
+            BackendProfile::of(&cons, &layer, 8),
+            BackendProfile::of(&dig, &layer, 8),
+        ];
+        let expected_tight = route_one(&profiles, f64::INFINITY, 1e-6);
+        assert_ne!(
+            expected_tight, 0,
+            "a tight tolerance must price the fast PCM out of the running"
+        );
+        assert_eq!(
+            route_one(&profiles, f64::INFINITY, 0.5),
+            0,
+            "a relaxed tolerance keeps the fast PCM"
+        );
+
+        let registry = SharedRegistry::new();
+        registry.deploy("tight", adapter(1.0));
+        registry.deploy("relaxed", adapter(2.0));
+        registry.deploy("pinned", adapter(3.0));
+        let refitter: Arc<dyn Refitter> = Arc::new(FnRefitter(
+            |_: &str,
+             current: &ParamStore,
+             _: &ParamStore,
+             budget: usize|
+             -> anyhow::Result<Refit> {
+                Ok(Refit {
+                    params: current.clone(),
+                    steps: budget,
+                })
+            },
+        ));
+        let refresh = RefreshConfig::new(DecayModel::analytic(PcmModel::default()), refitter)
+            .tolerance(0.5)
+            .task_tolerance("tight", 1e-6);
+        let server = Server::builder("base")
+            .manifest(cls_manifest())
+            .workers(3)
+            .backend(Arc::new(pcm))
+            .backend(Arc::new(cons))
+            .backend(Arc::new(dig))
+            .pin_task("pinned", 2)
+            .refresh(refresh)
+            .build(ParamStore::default(), registry)
+            .expect("a three-backend pool builds without artifacts");
+        assert_eq!(
+            server.routing(),
+            vec![
+                ("pinned".to_string(), 2),
+                ("relaxed".to_string(), 0),
+                ("tight".to_string(), expected_tight),
+            ],
+            "tolerances route through the cost model, pins override it"
+        );
+        let client = server.client();
+        let tokens: Vec<i32> = (0..16).collect();
+        let resp = client.submit("pinned", &tokens).unwrap().wait().unwrap();
+        assert_eq!(resp.worker, 2, "the pinned task serves on the digital span [2, 3)");
+        assert_eq!(resp.logits.len(), 3);
+        assert!(resp.logits.iter().all(|v| v.is_finite()));
+        // the two PCM+PJRT workers have no artifacts: their bring-up
+        // failures surface at shutdown, after the digital span served
         assert!(server.shutdown().is_err());
     }
 }
