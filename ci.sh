@@ -3,7 +3,8 @@
 #
 #   ./ci.sh                   # every stage, in order
 #   ./ci.sh --stage <name>    # one stage: fmt | clippy | test | test-release |
-#                             # features | doc (CI fans these out as jobs)
+#                             # features | bench-smoke | doc (CI fans these
+#                             # out as jobs)
 #   ./ci.sh --fix             # apply rustfmt instead of checking
 #
 # PJRT-backed integration tests self-skip when `artifacts/` has not
@@ -122,6 +123,17 @@ stage_features() {
     endgroup
 }
 
+# compile (but do not run) every bench target: the benches are plain
+# `fn main` programs on the in-tree harness and sit outside the normal
+# test graph, so without this stage a benches/-only breakage (e.g. an
+# API change under benches/hot_paths.rs) lands silently and is found by
+# the next person profiling a regression.
+stage_bench_smoke() {
+    group bench-smoke
+    cargo bench --no-run
+    endgroup
+}
+
 stage_doc() {
     group doc
     RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
@@ -135,9 +147,10 @@ run_stage() {
         test)         stage_test ;;
         test-release) stage_test_release ;;
         features)     stage_features ;;
+        bench-smoke)  stage_bench_smoke ;;
         doc)          stage_doc ;;
         *)
-            echo "ci.sh: unknown stage '$1' (fmt|clippy|test|test-release|features|doc)" >&2
+            echo "ci.sh: unknown stage '$1' (fmt|clippy|test|test-release|features|bench-smoke|doc)" >&2
             exit 2
             ;;
     esac
@@ -148,15 +161,15 @@ case "${1:-}" in
         # apply rustfmt, then still run the rest of the gate (the
         # pre-stage script behaved this way too)
         cargo fmt --all
-        for s in clippy test test-release features doc; do
+        for s in clippy test test-release features bench-smoke doc; do
             run_stage "$s"
         done
         ;;
     --stage)
-        run_stage "${2:?usage: ci.sh --stage <fmt|clippy|test|test-release|features|doc>}"
+        run_stage "${2:?usage: ci.sh --stage <fmt|clippy|test|test-release|features|bench-smoke|doc>}"
         ;;
     "")
-        for s in fmt clippy test test-release features doc; do
+        for s in fmt clippy test test-release features bench-smoke doc; do
             run_stage "$s"
         done
         ;;

@@ -5,10 +5,15 @@
 //! PCM pipeline throughput bounds the whole evaluation harness; the
 //! batcher/JSON/quant paths bound the serving coordinator.
 
+use std::time::Duration;
+
 use ahwa_lora::aimc::mapping::program_tensor;
 use ahwa_lora::aimc::quant;
 use ahwa_lora::pcm::{read_tensor, PcmModel};
+use ahwa_lora::runtime::pack::PaddedChunks;
+use ahwa_lora::runtime::PrepackedBuf;
 use ahwa_lora::serve::batcher::Batcher;
+use ahwa_lora::serve::sched::{BatchScheduler, SchedConfig};
 use ahwa_lora::util::bench::{black_box, Bencher};
 use ahwa_lora::util::json::Value;
 use ahwa_lora::util::rng::Pcg64;
@@ -64,5 +69,93 @@ fn main() {
         });
     }
 
+    // Host-side batch packing on the scheduler's committed fills: the
+    // padded reference path re-allocates a chunk buffer and zeroes the
+    // tail every batch, the compile pipeline's prepacked buffer zeroes
+    // the tail once at build and head-copies per batch, and fill ==
+    // graph batch is a pure pass-through (no host work at all).
+    let sched = BatchScheduler::new(
+        SchedConfig::for_layer(128, 128, 8).seq(320),
+        8,
+        Duration::from_millis(5),
+    );
+    let fills = sched.committed_fills();
+    println!("committed fills (per-request frontier of the cost table): {fills:?}");
+    let (batch, seq) = (8usize, 320usize);
+    let tokens = vec![7i32; batch * seq];
+    for &f in &fills {
+        let want = &tokens[..f * seq];
+        if f == batch {
+            b.bench_items(&format!("pack/pass-through fill={f}/{batch}"), Some(f as u64), || {
+                black_box(want);
+            });
+            continue;
+        }
+        b.bench_items(&format!("pack/padded fill={f}/{batch}"), Some(f as u64), || {
+            let mut chunks = PaddedChunks::new(want, batch, seq);
+            let (chunk, take, _) = chunks.next_chunk().unwrap();
+            black_box((chunk[0], take));
+        });
+        let mut pre = PrepackedBuf::new(f, batch, seq);
+        b.bench_items(&format!("pack/prepacked fill={f}/{batch}"), Some(f as u64), || {
+            black_box(pre.pack(want).unwrap()[0]);
+        });
+    }
+
+    // End-to-end forward through real PJRT executables, padded vs
+    // shape-specialized, per committed fill (needs built artifacts).
+    if let Err(e) = bench_pjrt_forward(&mut b, &fills) {
+        eprintln!("skipping PJRT forward benches: {e:#}");
+    }
+
+    if let Err(e) = b.write_json("hot_paths") {
+        eprintln!("could not write BENCH_hot_paths.json: {e}");
+    }
     println!("\nall hot-path benches done");
+}
+
+/// Per-request forward latency on the committed fills: the padded
+/// reference path (an unspecialized pipeline, which falls back to the
+/// max-shape chunk walk) against the AOT-specialized pipeline, both
+/// through the same `cls_logits` entry point so the comparison is the
+/// lowering alone. The item count is the fill, so the reported
+/// throughput is requests/second and `mean_ns / fill` is the
+/// per-request latency ISSUE acceptance asks for.
+fn bench_pjrt_forward(b: &mut Bencher, fills: &[usize]) -> anyhow::Result<()> {
+    use ahwa_lora::config::manifest::{Manifest, Role};
+    use ahwa_lora::model::params::ParamStore;
+    use ahwa_lora::runtime::FwdPipeline;
+
+    let dir = ahwa_lora::config::manifest::default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        anyhow::bail!("artifacts not built at {}", dir.display());
+    }
+    let manifest = Manifest::load(&dir)?;
+    let key = manifest
+        .graphs
+        .values()
+        .find(|g| g.kind == "fwd_cls")
+        .map(|g| g.key.clone())
+        .ok_or_else(|| anyhow::anyhow!("no fwd_cls graph in the manifest"))?;
+
+    let padded = FwdPipeline::compile(manifest.clone(), &key)?;
+    let mut specialized = FwdPipeline::compile(manifest, &key)?;
+    specialized.specialize(fills)?;
+
+    let spec = &padded.base().spec;
+    let meta = ParamStore::zeros_like_role(spec, Role::Meta);
+    let train = ParamStore::zeros_like_role(spec, Role::Train);
+    let (batch, seq) = (padded.ir().batch, padded.ir().seq);
+    let hw = [0.0f32, 3.0, 127.0, 127.0, 0.04];
+
+    for &f in fills.iter().filter(|&&f| f > 0 && f <= batch) {
+        let tokens = vec![11i32; f * seq];
+        b.bench_items(&format!("fwd/padded fill={f}/{batch}"), Some(f as u64), || {
+            black_box(padded.cls_logits(&meta, &train, &tokens, hw, 42).unwrap());
+        });
+        b.bench_items(&format!("fwd/specialized fill={f}/{batch}"), Some(f as u64), || {
+            black_box(specialized.cls_logits(&meta, &train, &tokens, hw, 42).unwrap());
+        });
+    }
+    Ok(())
 }

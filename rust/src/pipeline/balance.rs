@@ -110,6 +110,34 @@ pub fn latency_table(
     (balance, table)
 }
 
+/// The fills a rate-driven consumer of `table` can ever commit to:
+/// the per-request-latency frontier.
+///
+/// Fill `b` is on the frontier iff its per-request latency
+/// `table[b-1] / b` strictly beats every smaller fill — which is
+/// exactly the image of the "smallest fill that keeps up" rule
+/// ([`crate::serve::sched::BatchScheduler::target_fill`],
+/// [`crate::serve::hal::CostModel::sustainable_fill`]) over all
+/// arrival rates — plus the maximum fill, the fallback when no
+/// tabulated fill sustains the rate. Sorted ascending; this is the
+/// set `ServerBuilder::build` AOT shape-specializes each worker's
+/// forward executor for (`runtime::compile`).
+pub fn frontier_fills(table: &[f64]) -> Vec<usize> {
+    let mut fills = Vec::new();
+    let mut best = f64::INFINITY;
+    for (i, &ns) in table.iter().enumerate() {
+        let per_req = ns / (i + 1) as f64;
+        if per_req < best {
+            best = per_req;
+            fills.push(i + 1);
+        }
+    }
+    if !table.is_empty() && fills.last() != Some(&table.len()) {
+        fills.push(table.len());
+    }
+    fills
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -132,6 +160,63 @@ mod tests {
         // latency grows with fill
         for i in 1..table.len() {
             assert!(table[i] > table[i - 1]);
+        }
+    }
+
+    #[test]
+    fn frontier_is_image_of_smallest_sustainable_fill() {
+        // per-request: 100, 75, 80, 90, 160 — fill 2 dominates 3 and 4
+        let table = vec![100.0, 150.0, 240.0, 360.0, 800.0];
+        assert_eq!(frontier_fills(&table), vec![1, 2, 5]);
+        // exhaustively: the target-fill rule over a rate sweep reaches
+        // exactly the frontier fills, nothing else
+        let target = |gap: f64| {
+            (1..=table.len())
+                .find(|&b| table[b - 1] / b as f64 <= gap)
+                .unwrap_or(table.len())
+        };
+        let mut image: Vec<usize> = Vec::new();
+        for gap in [5.0, 50.0, 74.0, 75.0, 76.0, 79.0, 80.0, 85.0, 100.0, 1e12] {
+            let b = target(gap);
+            if !image.contains(&b) {
+                image.push(b);
+            }
+        }
+        image.sort_unstable();
+        assert_eq!(frontier_fills(&table), image);
+    }
+
+    #[test]
+    fn frontier_edge_cases() {
+        assert_eq!(frontier_fills(&[]), Vec::<usize>::new());
+        assert_eq!(frontier_fills(&[42.0]), vec![1]);
+        // strictly sublinear growth: every fill improves per-request
+        assert_eq!(frontier_fills(&[100.0, 150.0, 180.0]), vec![1, 2, 3]);
+        // the real model's table is on its own frontier at every fill
+        // up to where overhead amortizes; max fill is always present
+        let (_, table) = latency_table(
+            128,
+            128,
+            8,
+            256.0,
+            320,
+            8,
+            &SnitchCluster::default(),
+            &RedMulE::default(),
+        );
+        let fills = frontier_fills(&table);
+        assert_eq!(fills.first(), Some(&1));
+        assert_eq!(fills.last(), Some(&8), "max fill is always committed");
+        for w in fills.windows(2) {
+            if w[1] == table.len() {
+                // the max fill may be the appended unsustainable-rate
+                // fallback rather than a frontier point of its own
+                continue;
+            }
+            assert!(
+                table[w[1] - 1] / w[1] as f64 < table[w[0] - 1] / w[0] as f64,
+                "non-max frontier fills must strictly improve per-request latency"
+            );
         }
     }
 

@@ -2,12 +2,13 @@
 
 use std::cell::RefCell;
 use std::collections::HashMap;
+use std::path::Path;
 use std::rc::Rc;
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
-use crate::config::manifest::{GraphSpec, Manifest};
+use crate::config::manifest::{GraphSpec, Manifest, Role};
 
 /// One compiled HLO graph ready to execute.
 pub struct LoadedGraph {
@@ -46,11 +47,35 @@ impl LoadedGraph {
     }
 }
 
-/// PJRT engine: owns the CPU client, the manifest, and the compile cache.
+/// The HLO text loader takes a `&str` path: surface a non-UTF-8
+/// artifacts directory as a contextual error instead of panicking in
+/// the worker thread that compiles the graph.
+pub fn hlo_path_str(path: &Path) -> Result<&str> {
+    path.to_str().ok_or_else(|| {
+        anyhow!(
+            "HLO artifact path {} is not valid UTF-8 (the PJRT text loader needs a UTF-8 path)",
+            path.display()
+        )
+    })
+}
+
+/// Native batch dimension of a graph's first data input (0 when the
+/// graph has none — such graphs never shape-specialize).
+fn native_batch(spec: &GraphSpec) -> usize {
+    spec.inputs_with_role(Role::Data)
+        .next()
+        .and_then(|io| io.shape.first().copied())
+        .unwrap_or(0)
+}
+
+/// PJRT engine: owns the CPU client, the manifest, and the compile
+/// cache — keyed by `(graph key, batch shape)` so one logical graph
+/// can hold both its native-shape executable and exact-shape
+/// specializations ([`Engine::load_specialized`]) side by side.
 pub struct Engine {
     pub client: xla::PjRtClient,
     pub manifest: Manifest,
-    cache: RefCell<HashMap<String, Rc<LoadedGraph>>>,
+    cache: RefCell<HashMap<(String, usize), Rc<LoadedGraph>>>,
     pub verbose: bool,
 }
 
@@ -71,32 +96,64 @@ impl Engine {
         Engine::new(Manifest::load(dir)?)
     }
 
-    /// Fetch (compiling + caching on first use) the graph for `key`.
+    /// Fetch (compiling + caching on first use) the graph for `key` at
+    /// its native batch shape.
     pub fn load(&self, key: &str) -> Result<Rc<LoadedGraph>> {
-        if let Some(g) = self.cache.borrow().get(key) {
+        let spec = self.manifest.graph(key)?.clone();
+        let cache_key = (key.to_string(), native_batch(&spec));
+        if let Some(g) = self.cache.borrow().get(&cache_key) {
             return Ok(g.clone());
         }
-        let spec = self.manifest.graph(key)?.clone();
-        let path = self.manifest.hlo_path(&spec);
+        let g = self.compile_spec(&spec)?;
+        self.cache.borrow_mut().insert(cache_key, g.clone());
+        Ok(g)
+    }
+
+    /// Fetch an exact-shape specialization of `key`: a manifest graph
+    /// of the same kind and variant whose data batch is exactly
+    /// `batch`. Returns `Ok(None)` when the manifest carries no such
+    /// artifact — callers fall back to the padded max-shape graph, so
+    /// a sparse export degrades instead of failing. Cached under
+    /// `(key, batch)`.
+    pub fn load_specialized(&self, key: &str, batch: usize) -> Result<Option<Rc<LoadedGraph>>> {
+        let cache_key = (key.to_string(), batch);
+        if let Some(g) = self.cache.borrow().get(&cache_key) {
+            return Ok(Some(g.clone()));
+        }
+        let want = self.manifest.graph(key)?.clone();
+        let sibling = self.manifest.graphs.values().find(|g| {
+            g.key != want.key
+                && g.kind == want.kind
+                && g.variant == want.variant
+                && native_batch(g) == batch
+        });
+        let Some(spec) = sibling.cloned() else {
+            return Ok(None);
+        };
+        let g = self.compile_spec(&spec)?;
+        self.cache.borrow_mut().insert(cache_key, g.clone());
+        Ok(Some(g))
+    }
+
+    fn compile_spec(&self, spec: &GraphSpec) -> Result<Rc<LoadedGraph>> {
+        let path = self.manifest.hlo_path(spec);
         let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+        let proto = xla::HloModuleProto::from_text_file(hlo_path_str(&path)?)
             .with_context(|| format!("parsing HLO text {}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self
             .client
             .compile(&comp)
-            .with_context(|| format!("PJRT compile of '{key}'"))?;
+            .with_context(|| format!("PJRT compile of '{}'", spec.key))?;
         let compile_ms = t0.elapsed().as_millis();
         if self.verbose {
-            eprintln!("[runtime] compiled '{key}' in {compile_ms} ms");
+            eprintln!("[runtime] compiled '{}' in {compile_ms} ms", spec.key);
         }
-        let g = Rc::new(LoadedGraph {
-            spec,
+        Ok(Rc::new(LoadedGraph {
+            spec: spec.clone(),
             exe,
             compile_ms,
-        });
-        self.cache.borrow_mut().insert(key.to_string(), g.clone());
-        Ok(g)
+        }))
     }
 
     pub fn cached_graphs(&self) -> usize {
@@ -104,9 +161,31 @@ impl Engine {
     }
 
     /// Total PJRT compile wall-time across cached graphs — the startup
-    /// cost each serving worker pays for its private engine, surfaced
-    /// in the pool's per-worker metrics.
+    /// cost each serving worker pays for its private engine (base
+    /// graphs plus any shape specializations), surfaced in the pool's
+    /// per-worker metrics.
     pub fn total_compile_ms(&self) -> u128 {
         self.cache.borrow().values().map(|g| g.compile_ms).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hlo_path_str_passes_utf8_through() {
+        let p = Path::new("/artifacts/tiny/fwd_cls.hlo.txt");
+        assert_eq!(hlo_path_str(p).unwrap(), "/artifacts/tiny/fwd_cls.hlo.txt");
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn hlo_path_str_reports_non_utf8_instead_of_panicking() {
+        use std::ffi::OsStr;
+        use std::os::unix::ffi::OsStrExt;
+        let p = Path::new(OsStr::from_bytes(b"/artifacts/\xff\xfe/fwd.hlo.txt"));
+        let err = hlo_path_str(p).unwrap_err().to_string();
+        assert!(err.contains("not valid UTF-8"), "{err}");
     }
 }

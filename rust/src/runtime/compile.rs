@@ -1,0 +1,661 @@
+//! Staged forward-graph compile pipeline.
+//!
+//! Forward-graph bring-up used to be one implicit step — `Engine::load`
+//! parsed the HLO text and compiled it, and every shape decision
+//! (padding partial batches up to the one AOT batch dimension) was
+//! made per batch on the request path. This module restructures that
+//! into explicit stages, SionFlowRT-style:
+//!
+//! ```text
+//! manifest load ──► graph IR ──► passes ──► lowering ──► per-shape
+//!  (GraphSpec)    (GraphIr:    shape inference         PJRT compile
+//!                  role        input-segment layout    ((key, batch)-
+//!                  segments)   dead-output elision      keyed cache)
+//! ```
+//!
+//! The payoff is at the end: [`FwdPipeline::specialize`] lowers each
+//! batch fill the scheduler commits to
+//! ([`crate::serve::sched::BatchScheduler::committed_fills`]) into the
+//! cheapest execution that is **bit-identical** to the padded
+//! reference path:
+//!
+//! * [`Lowering::Exact`] — the manifest carries a sibling graph of the
+//!   same kind/variant whose data batch is exactly the fill: compile
+//!   it ([`crate::runtime::Engine::load_specialized`]) and execute with
+//!   zero padding and zero re-pack.
+//! * [`Lowering::PassThrough`] — the fill equals the graph batch: the
+//!   token buffer is already the exact shape, no copy at all.
+//! * [`Lowering::Padded`] — a persistent [`PrepackedBuf`] whose tail
+//!   was zeroed ONCE at specialization time; each batch overwrites the
+//!   head rows only. Same executable, same input bytes as the per-call
+//!   padded path — minus its per-batch allocation and tail zero-fill.
+//!
+//! Fills that were never specialized (or exceed the graph batch) fall
+//! back to the unchanged padded reference loop in
+//! [`crate::eval::drift_eval`]. Bit-identity across all four paths is
+//! pinned by `tests/compile_golden.rs`.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use crate::config::manifest::{GraphSpec, Manifest, Role};
+use crate::model::params::ParamStore;
+use crate::runtime::client::{Engine, LoadedGraph};
+use crate::runtime::pack::{assemble_inputs, literal_to_f32, DataArg};
+
+// ---------------------------------------------------------------------------
+// Graph IR + passes
+// ---------------------------------------------------------------------------
+
+/// Canonical input-segment rank (aot.py exports every graph's inputs
+/// in this order: `meta | train | m | v | data... | key | hw | [opt]`).
+fn segment_rank(role: Role) -> Option<usize> {
+    match role {
+        Role::Meta => Some(0),
+        Role::Train => Some(1),
+        Role::M => Some(2),
+        Role::V => Some(3),
+        Role::Data => Some(4),
+        Role::Key => Some(5),
+        Role::Hw => Some(6),
+        Role::Opt => Some(7),
+        _ => None,
+    }
+}
+
+/// The ingestion product of the compile pipeline: one graph's spec
+/// plus everything the passes derived from it — the `[batch, seq]`
+/// shape, the input-segment layout, and the live-output mask.
+///
+/// Built by [`GraphIr::build`], which runs the pass sequence (shape
+/// inference → input-segment layout validation → dead-output elision)
+/// and fails with the graph key on any manifest inconsistency, so a
+/// malformed export is rejected at bring-up instead of panicking (or
+/// silently mis-packing) on the first batch.
+#[derive(Clone, Debug)]
+pub struct GraphIr {
+    pub spec: GraphSpec,
+    /// Native batch dimension of the data inputs.
+    pub batch: usize,
+    /// Sequence length of the data inputs.
+    pub seq: usize,
+    /// `(role, input count)` runs, in canonical segment order.
+    pub segments: Vec<(Role, usize)>,
+    /// `live[i]` ⇔ `spec.outputs[i]` is read by the forward consumers;
+    /// lowering skips the host conversion of dead outputs.
+    pub live_outputs: Vec<bool>,
+}
+
+impl GraphIr {
+    /// Run the pass sequence over one graph spec.
+    pub fn build(spec: &GraphSpec) -> Result<GraphIr> {
+        let mut ir = GraphIr {
+            spec: spec.clone(),
+            batch: 0,
+            seq: 0,
+            segments: Vec::new(),
+            live_outputs: Vec::new(),
+        };
+        ir.infer_shapes()?;
+        ir.validate_layout()?;
+        ir.elide_dead_outputs();
+        Ok(ir)
+    }
+
+    /// Pass 1 — shape inference: derive `[batch, seq]` from the data
+    /// inputs and check every data input and batched output agrees.
+    fn infer_shapes(&mut self) -> Result<()> {
+        let mut data = self.spec.inputs_with_role(Role::Data);
+        let Some(first) = data.next() else {
+            bail!(
+                "graph '{}': no data input to infer a batch shape from",
+                self.spec.key
+            );
+        };
+        if first.shape.len() < 2 || first.shape[0] == 0 || first.shape[1] == 0 {
+            bail!(
+                "graph '{}': data input '{}' is not [batch, seq] (shape {:?})",
+                self.spec.key,
+                first.name,
+                first.shape
+            );
+        }
+        self.batch = first.shape[0];
+        self.seq = first.shape[1];
+        for io in data {
+            if io.shape.first() != Some(&self.batch) {
+                bail!(
+                    "graph '{}': data input '{}' batch {:?} disagrees with inferred batch {}",
+                    self.spec.key,
+                    io.name,
+                    io.shape.first(),
+                    self.batch
+                );
+            }
+        }
+        for out in self.spec.outputs.iter().filter(|o| o.role == Role::Logits) {
+            if out.shape.first() != Some(&self.batch) {
+                bail!(
+                    "graph '{}': logits output '{}' batch {:?} disagrees with inferred batch {}",
+                    self.spec.key,
+                    out.name,
+                    out.shape.first(),
+                    self.batch
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Pass 2 — input-segment layout validation: the inputs must form
+    /// contiguous role runs in canonical order, because
+    /// [`assemble_inputs`] packs positionally and a re-ordered export
+    /// would bind literals to the wrong parameters.
+    fn validate_layout(&mut self) -> Result<()> {
+        self.segments.clear();
+        let mut last_rank = 0usize;
+        for io in &self.spec.inputs {
+            let Some(rank) = segment_rank(io.role) else {
+                bail!(
+                    "graph '{}': input '{}' has role {:?}, which is not a valid input segment",
+                    self.spec.key,
+                    io.name,
+                    io.role
+                );
+            };
+            match self.segments.last_mut() {
+                Some((role, n)) if *role == io.role => *n += 1,
+                _ => {
+                    if rank < last_rank {
+                        bail!(
+                            "graph '{}': input '{}' (role {:?}) is out of canonical \
+                             segment order (meta|train|m|v|data|key|hw|opt)",
+                            self.spec.key,
+                            io.name,
+                            io.role
+                        );
+                    }
+                    if self.segments.iter().any(|(r, _)| *r == io.role) {
+                        bail!(
+                            "graph '{}': role {:?} appears in two non-contiguous input segments",
+                            self.spec.key,
+                            io.role
+                        );
+                    }
+                    self.segments.push((io.role, 1));
+                    last_rank = rank;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Pass 3 — dead-output elision: mark which outputs the forward
+    /// consumers actually read. Forward graphs are read for their
+    /// logits only; every other output's host conversion is skipped at
+    /// lowering. Non-forward kinds keep everything live (the training
+    /// step reads all of `train'|m'|v'|loss`).
+    fn elide_dead_outputs(&mut self) {
+        let fwd = self.spec.kind.starts_with("fwd");
+        self.live_outputs = self
+            .spec
+            .outputs
+            .iter()
+            .map(|o| !fwd || o.role == Role::Logits)
+            .collect();
+    }
+
+    /// Index of the first live logits output (what the cls path reads).
+    fn logits_index(&self) -> Result<usize> {
+        self.spec
+            .outputs
+            .iter()
+            .position(|o| o.role == Role::Logits)
+            .ok_or_else(|| {
+                anyhow::anyhow!("graph '{}': no logits output", self.spec.key)
+            })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lowering
+// ---------------------------------------------------------------------------
+
+/// Public tag for how one committed fill was lowered (introspection
+/// for tests and benches; the executable choice lives in the private
+/// enum).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Lowering {
+    /// Exact-shape sibling executable — zero padding, zero re-pack.
+    Exact,
+    /// Fill equals the graph batch — the token buffer is used as-is.
+    PassThrough,
+    /// Max-shape executable fed from a persistent [`PrepackedBuf`].
+    Padded,
+}
+
+enum Lowered {
+    Exact(Rc<LoadedGraph>),
+    PassThrough,
+    Padded(RefCell<PrepackedBuf>),
+}
+
+impl Lowered {
+    fn tag(&self) -> Lowering {
+        match self {
+            Lowered::Exact(_) => Lowering::Exact,
+            Lowered::PassThrough => Lowering::PassThrough,
+            Lowered::Padded(_) => Lowering::Padded,
+        }
+    }
+}
+
+/// Persistent pre-zeroed pack buffer for one committed fill: the tail
+/// rows are zeroed exactly once (at construction) and never rewritten,
+/// so each batch pays a head-row copy instead of the per-call
+/// allocate + copy + tail-zero of
+/// [`crate::runtime::pack::PaddedChunks`]. The produced bytes are
+/// identical to a `PaddedChunks` chunk for the same tokens, which is
+/// what keeps the specialized path bit-identical (pinned in
+/// `tests/compile_golden.rs`).
+pub struct PrepackedBuf {
+    buf: Vec<i32>,
+    fill: usize,
+    seq: usize,
+}
+
+impl PrepackedBuf {
+    /// Buffer for batches of exactly `fill` rows, padded to
+    /// `[batch, seq]`.
+    pub fn new(fill: usize, batch: usize, seq: usize) -> PrepackedBuf {
+        debug_assert!(fill > 0 && fill <= batch && seq > 0);
+        PrepackedBuf {
+            buf: vec![0i32; batch * seq],
+            fill,
+            seq,
+        }
+    }
+
+    /// Overwrite the head rows with `tokens` (which must be exactly
+    /// `fill` rows) and return the full padded buffer.
+    pub fn pack(&mut self, tokens: &[i32]) -> Result<&[i32]> {
+        if tokens.len() != self.fill * self.seq {
+            bail!(
+                "prepacked buffer holds {} rows of {} tokens, got {} tokens",
+                self.fill,
+                self.seq,
+                tokens.len()
+            );
+        }
+        self.buf[..tokens.len()].copy_from_slice(tokens);
+        Ok(&self.buf)
+    }
+
+    pub fn fill(&self) -> usize {
+        self.fill
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The compiled pipeline
+// ---------------------------------------------------------------------------
+
+/// One forward graph, taken through the full pipeline and ready to
+/// execute at any fill: the max-shape base executable plus the
+/// per-fill specializations [`FwdPipeline::specialize`] lowered.
+///
+/// Not `Send` (it owns PJRT handles) — the pool builds one per worker
+/// thread, exactly like the engine it wraps.
+pub struct FwdPipeline {
+    engine: Engine,
+    key: String,
+    ir: GraphIr,
+    base: Rc<LoadedGraph>,
+    shapes: BTreeMap<usize, Lowered>,
+}
+
+impl FwdPipeline {
+    /// Run the staged pipeline for `key`: manifest load → IR → passes
+    /// → lowering of the native shape (the max-shape base executable).
+    pub fn compile(manifest: Manifest, key: &str) -> Result<FwdPipeline> {
+        let engine = Engine::new(manifest)?;
+        let base = engine.load(key)?;
+        let ir = GraphIr::build(&base.spec)?;
+        Ok(FwdPipeline {
+            engine,
+            key: key.to_string(),
+            ir,
+            base,
+            shapes: BTreeMap::new(),
+        })
+    }
+
+    pub fn ir(&self) -> &GraphIr {
+        &self.ir
+    }
+
+    pub fn base(&self) -> &Rc<LoadedGraph> {
+        &self.base
+    }
+
+    /// Total PJRT compile wall-time (base + specializations) — grows
+    /// when [`Self::specialize`] compiles exact-shape siblings.
+    pub fn compile_ms(&self) -> u128 {
+        self.engine.total_compile_ms()
+    }
+
+    /// Lower each committed fill to its cheapest bit-identical
+    /// execution (see the module docs for the three lowerings). Fills
+    /// larger than the graph batch stay on the multi-chunk padded
+    /// path and are skipped, not errors; a zero fill is a caller bug.
+    pub fn specialize(&mut self, fills: &[usize]) -> Result<()> {
+        for &fill in fills {
+            if fill == 0 {
+                bail!("graph '{}': cannot specialize a zero batch fill", self.key);
+            }
+            if fill > self.ir.batch || self.shapes.contains_key(&fill) {
+                continue;
+            }
+            let lowered = if fill == self.ir.batch {
+                Lowered::PassThrough
+            } else {
+                match self.engine.load_specialized(&self.key, fill)? {
+                    Some(g) => {
+                        let sib = GraphIr::build(&g.spec)?;
+                        if sib.seq != self.ir.seq {
+                            bail!(
+                                "graph '{}': exact-shape sibling '{}' has seq {}, base has {}",
+                                self.key,
+                                g.spec.key,
+                                sib.seq,
+                                self.ir.seq
+                            );
+                        }
+                        Lowered::Exact(g)
+                    }
+                    None => Lowered::Padded(RefCell::new(PrepackedBuf::new(
+                        fill,
+                        self.ir.batch,
+                        self.ir.seq,
+                    ))),
+                }
+            };
+            self.shapes.insert(fill, lowered);
+        }
+        Ok(())
+    }
+
+    /// The fills specialized so far, ascending.
+    pub fn specialized_fills(&self) -> Vec<usize> {
+        self.shapes.keys().copied().collect()
+    }
+
+    /// How `fill` was lowered (`None` = not specialized: the per-call
+    /// padded reference path serves it).
+    pub fn lowering(&self, fill: usize) -> Option<Lowering> {
+        self.shapes.get(&fill).map(Lowered::tag)
+    }
+
+    /// The executable serving a `token_len`-token batch: the exact
+    /// sibling when one was lowered, the base graph otherwise.
+    fn graph_for(&self, token_len: usize) -> &Rc<LoadedGraph> {
+        if self.ir.seq > 0 && token_len % self.ir.seq == 0 {
+            if let Some(Lowered::Exact(g)) = self.shapes.get(&(token_len / self.ir.seq)) {
+                return g;
+            }
+        }
+        &self.base
+    }
+
+    /// Classification logit rows, through the specialized lowering for
+    /// this batch's fill when one exists.
+    ///
+    /// Single-chunk seeds: the padded reference XORs each chunk's seed
+    /// with its row offset, and every specialized execution is one
+    /// chunk at offset 0 — the raw seed passes through on both sides,
+    /// which is what makes the paths bit-comparable at all.
+    pub fn cls_logits(
+        &self,
+        meta: &ParamStore,
+        adapter: &ParamStore,
+        tokens: &[i32],
+        hw: [f32; 5],
+        seed: u64,
+    ) -> Result<Vec<Vec<f32>>> {
+        let (b, s) = (self.ir.batch, self.ir.seq);
+        if tokens.is_empty() {
+            return Ok(Vec::new());
+        }
+        if tokens.len() % s != 0 {
+            // the padded reference path owns the whole-rows contract
+            return crate::eval::drift_eval::cls_logits(
+                &self.base, meta, adapter, tokens, hw, seed,
+            );
+        }
+        let rows = tokens.len() / s;
+        if rows == b {
+            // trivially exact: the buffer already is [batch, seq]
+            return self.run_cls(&self.base, tokens, rows, meta, adapter, hw, seed);
+        }
+        match self.shapes.get(&rows) {
+            Some(Lowered::Exact(g)) => self.run_cls(g, tokens, rows, meta, adapter, hw, seed),
+            Some(Lowered::Padded(buf)) => {
+                let mut buf = buf.borrow_mut();
+                let chunk = buf.pack(tokens)?;
+                self.run_cls(&self.base, chunk, rows, meta, adapter, hw, seed)
+            }
+            // rows == b was handled above; anything else un-specialized
+            // (including multi-chunk fills) takes the reference loop
+            _ => crate::eval::drift_eval::cls_logits(&self.base, meta, adapter, tokens, hw, seed),
+        }
+    }
+
+    /// One single-chunk execution of `g` (whose data input `data`
+    /// already matches exactly), returning the first `rows` logit
+    /// rows. Only the live logits output is converted to host floats —
+    /// this is where the dead-output elision pays.
+    #[allow(clippy::too_many_arguments)]
+    fn run_cls(
+        &self,
+        g: &LoadedGraph,
+        data: &[i32],
+        rows: usize,
+        meta: &ParamStore,
+        adapter: &ParamStore,
+        hw: [f32; 5],
+        seed: u64,
+    ) -> Result<Vec<Vec<f32>>> {
+        let inputs = assemble_inputs(
+            &g.spec,
+            meta,
+            adapter,
+            None,
+            &[DataArg::I32(data)],
+            seed,
+            hw,
+            None,
+        )?;
+        let outs = g.run(&inputs)?;
+        let idx = self.ir.logits_index()?;
+        let n_cls = g.spec.outputs[idx].shape[1];
+        let logits = literal_to_f32(&outs[idx])?;
+        Ok((0..rows)
+            .map(|i| logits[i * n_cls..(i + 1) * n_cls].to_vec())
+            .collect())
+    }
+
+    /// QA span predictions. The eval-path decode rule lives in
+    /// [`crate::eval::drift_eval::qa_predict`]; specialization only
+    /// swaps in the exact-shape executable when one was lowered, so
+    /// the span window/offset logic cannot diverge between paths.
+    pub fn qa_predict(
+        &self,
+        meta: &ParamStore,
+        adapter: &ParamStore,
+        tokens: &[i32],
+        hw: [f32; 5],
+        seed: u64,
+    ) -> Result<Vec<(usize, usize)>> {
+        let g = self.graph_for(tokens.len());
+        crate::eval::drift_eval::qa_predict(g, meta, adapter, tokens, hw, seed)
+    }
+
+    /// Full-sequence LM logits (exact `[batch, seq]` contract —
+    /// already shape-exact, nothing to specialize).
+    pub fn lm_logits(
+        &self,
+        meta: &ParamStore,
+        adapter: &ParamStore,
+        tokens: &[i32],
+        hw: [f32; 5],
+        seed: u64,
+    ) -> Result<Vec<f32>> {
+        crate::eval::drift_eval::lm_logits(&self.base, meta, adapter, tokens, hw, seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::manifest::IoSpec;
+    use crate::runtime::pack::PaddedChunks;
+
+    fn io(name: &str, role: Role, shape: &[usize], dtype: &str) -> IoSpec {
+        IoSpec {
+            name: name.into(),
+            role,
+            shape: shape.to_vec(),
+            dtype: dtype.into(),
+        }
+    }
+
+    fn fwd_spec() -> GraphSpec {
+        GraphSpec {
+            key: "base/fwd_cls".into(),
+            kind: "fwd_cls".into(),
+            variant: "base".into(),
+            file: String::new(),
+            inputs: vec![
+                io("meta/emb", Role::Meta, &[8, 4], "float32"),
+                io("train/a", Role::Train, &[4, 2], "float32"),
+                io("data/tokens", Role::Data, &[4, 16], "int32"),
+                io("key", Role::Key, &[2], "uint32"),
+                io("hw", Role::Hw, &[5], "float32"),
+            ],
+            outputs: vec![io("logits", Role::Logits, &[4, 3], "float32")],
+        }
+    }
+
+    #[test]
+    fn shape_inference_and_segments() {
+        let ir = GraphIr::build(&fwd_spec()).unwrap();
+        assert_eq!((ir.batch, ir.seq), (4, 16));
+        assert_eq!(
+            ir.segments,
+            vec![
+                (Role::Meta, 1),
+                (Role::Train, 1),
+                (Role::Data, 1),
+                (Role::Key, 1),
+                (Role::Hw, 1),
+            ]
+        );
+        assert_eq!(ir.live_outputs, vec![true]);
+        assert_eq!(ir.logits_index().unwrap(), 0);
+    }
+
+    #[test]
+    fn shape_inference_rejects_batch_disagreement() {
+        let mut spec = fwd_spec();
+        spec.inputs
+            .insert(3, io("data/mask", Role::Data, &[2, 16], "int32"));
+        let err = GraphIr::build(&spec).unwrap_err().to_string();
+        assert!(err.contains("base/fwd_cls"), "{err}");
+        assert!(err.contains("disagrees"), "{err}");
+    }
+
+    #[test]
+    fn shape_inference_rejects_missing_data_input() {
+        let mut spec = fwd_spec();
+        spec.inputs.retain(|i| i.role != Role::Data);
+        let err = GraphIr::build(&spec).unwrap_err().to_string();
+        assert!(err.contains("no data input"), "{err}");
+    }
+
+    #[test]
+    fn layout_validation_rejects_out_of_order_segments() {
+        let mut spec = fwd_spec();
+        spec.inputs.swap(0, 2); // data before meta
+        let err = GraphIr::build(&spec).unwrap_err().to_string();
+        assert!(err.contains("canonical"), "{err}");
+    }
+
+    #[test]
+    fn layout_validation_rejects_split_segments() {
+        let mut spec = fwd_spec();
+        // meta | train | meta — rank goes backwards
+        spec.inputs
+            .insert(2, io("meta/late", Role::Meta, &[2, 2], "float32"));
+        let err = GraphIr::build(&spec).unwrap_err().to_string();
+        assert!(err.contains("canonical") || err.contains("non-contiguous"), "{err}");
+    }
+
+    #[test]
+    fn layout_validation_rejects_output_roles_as_inputs() {
+        let mut spec = fwd_spec();
+        spec.inputs
+            .push(io("loss", Role::Loss, &[], "float32"));
+        let err = GraphIr::build(&spec).unwrap_err().to_string();
+        assert!(err.contains("not a valid input segment"), "{err}");
+    }
+
+    #[test]
+    fn dead_output_elision_keeps_step_outputs_live() {
+        let mut spec = fwd_spec();
+        spec.kind = "step_cls_lora".into();
+        spec.outputs = vec![
+            io("train/a", Role::Train, &[4, 2], "float32"),
+            io("m/a", Role::M, &[4, 2], "float32"),
+            io("v/a", Role::V, &[4, 2], "float32"),
+            io("loss", Role::Loss, &[], "float32"),
+        ];
+        let ir = GraphIr::build(&spec).unwrap();
+        assert_eq!(ir.live_outputs, vec![true; 4]);
+    }
+
+    // ── PrepackedBuf: the packing half of the golden bit-identity ──
+
+    #[test]
+    fn prepacked_buf_matches_padded_chunks_bit_for_bit() {
+        let (b, s) = (8usize, 5usize);
+        for fill in 1..b {
+            let tokens: Vec<i32> = (0..(fill * s) as i32).map(|t| t * 7 - 3).collect();
+            let mut reference = PaddedChunks::new(&tokens, b, s);
+            let (chunk, take, offset) = reference.next_chunk().unwrap();
+            assert_eq!((take, offset), (fill, 0));
+            let mut buf = PrepackedBuf::new(fill, b, s);
+            assert_eq!(buf.pack(&tokens).unwrap(), chunk, "fill {fill}");
+        }
+    }
+
+    #[test]
+    fn prepacked_buf_tail_stays_zero_across_packs() {
+        let mut buf = PrepackedBuf::new(2, 4, 3);
+        for round in 0..3 {
+            let tokens = vec![round + 1; 6];
+            let packed = buf.pack(&tokens).unwrap();
+            assert_eq!(&packed[..6], &tokens[..]);
+            assert!(packed[6..].iter().all(|&v| v == 0), "round {round}");
+        }
+        assert_eq!(buf.fill(), 2);
+    }
+
+    #[test]
+    fn prepacked_buf_rejects_wrong_fill() {
+        let mut buf = PrepackedBuf::new(2, 4, 3);
+        assert!(buf.pack(&[1, 2, 3]).is_err());
+    }
+}

@@ -11,9 +11,17 @@
 //! with a shared, already-parsed manifest — parse once, compile per
 //! worker.
 //!
+//! [`compile`] is the staged front half of that story: manifest →
+//! graph IR → passes (shape inference, input-segment layout
+//! validation, dead-output elision) → lowering → per-`(key, batch)`
+//! compilation, with ahead-of-time shape specialization for the batch
+//! fills the serving scheduler commits to.
+//!
 //! [`ParamStore`]: crate::model::params::ParamStore
 
 pub mod client;
+pub mod compile;
 pub mod pack;
 
 pub use client::{Engine, LoadedGraph};
+pub use compile::{FwdPipeline, GraphIr, Lowering, PrepackedBuf};

@@ -83,6 +83,21 @@ pub fn update_store(store: &mut ParamStore, lits: &[xla::Literal]) -> Result<()>
 /// for names/shapes.
 pub fn store_from_outputs(spec: &GraphSpec, role: Role, lits: &[xla::Literal], offset: usize) -> Result<ParamStore> {
     let ios: Vec<_> = spec.outputs.iter().filter(|o| o.role == role).collect();
+    // a runtime that returns fewer outputs than the manifest claims
+    // (truncated tuple, stale artifact) must surface as a typed error,
+    // not an index panic in the worker thread
+    if offset + ios.len() > lits.len() {
+        bail!(
+            "graph '{}': {} output(s) with role {:?} expected at literals [{}, {}), \
+             but only {} literal(s) were returned (truncated output list)",
+            spec.key,
+            ios.len(),
+            role,
+            offset,
+            offset + ios.len(),
+            lits.len()
+        );
+    }
     let mut tensors = Vec::with_capacity(ios.len());
     for (i, io) in ios.iter().enumerate() {
         let v = lits[offset + i].to_vec::<f32>()?;
@@ -230,15 +245,41 @@ pub fn assemble_inputs(
 }
 
 /// Parse a training-step graph's outputs: (train', m', v', loss).
+///
+/// The step layout is `train' | m' | v' | loss`, one moment tensor per
+/// trainable tensor — a manifest where the per-role counts disagree
+/// (or a runtime that returns a truncated list) gets a typed error
+/// naming the graph and role instead of a misaligned read or a panic.
 pub fn parse_step_outputs(
     spec: &GraphSpec,
     lits: &[xla::Literal],
 ) -> Result<(ParamStore, ParamStore, ParamStore, f32)> {
     let n = spec.outputs.iter().filter(|o| o.role == Role::Train).count();
+    let n_m = spec.outputs.iter().filter(|o| o.role == Role::M).count();
+    let n_v = spec.outputs.iter().filter(|o| o.role == Role::V).count();
+    if n_m != n || n_v != n {
+        bail!(
+            "graph '{}': step outputs must carry one {:?} and one {:?} per {:?} tensor \
+             (got {n} train, {n_m} m, {n_v} v)",
+            spec.key,
+            Role::M,
+            Role::V,
+            Role::Train,
+        );
+    }
     let train = store_from_outputs(spec, Role::Train, lits, 0)?;
     let m = store_from_outputs(spec, Role::M, lits, n)?;
     let v = store_from_outputs(spec, Role::V, lits, 2 * n)?;
-    let loss = scalar_f32(&lits[3 * n])?;
+    let loss = lits.get(3 * n).ok_or_else(|| {
+        anyhow::anyhow!(
+            "graph '{}': loss output expected at literal index {}, \
+             but only {} literal(s) were returned",
+            spec.key,
+            3 * n,
+            lits.len()
+        )
+    })?;
+    let loss = scalar_f32(loss)?;
     Ok((train, m, v, loss))
 }
 
@@ -288,6 +329,84 @@ mod tests {
     fn padded_chunks_empty_input_yields_nothing() {
         let mut chunks = PaddedChunks::new(&[], 4, 8);
         assert!(chunks.next_chunk().is_none());
+    }
+
+    fn step_spec() -> GraphSpec {
+        let out = |name: &str, role: Role| crate::config::manifest::IoSpec {
+            name: name.into(),
+            role,
+            shape: vec![2],
+            dtype: "float32".into(),
+        };
+        GraphSpec {
+            key: "tiny/step_qa_lora".into(),
+            kind: "step_qa_lora".into(),
+            variant: "tiny".into(),
+            file: String::new(),
+            inputs: Vec::new(),
+            outputs: vec![
+                out("train/a", Role::Train),
+                out("train/b", Role::Train),
+                out("m/a", Role::M),
+                out("m/b", Role::M),
+                out("v/a", Role::V),
+                out("v/b", Role::V),
+                crate::config::manifest::IoSpec {
+                    name: "loss".into(),
+                    role: Role::Loss,
+                    shape: vec![],
+                    dtype: "float32".into(),
+                },
+            ],
+        }
+    }
+
+    fn lits(n: usize) -> Vec<xla::Literal> {
+        (0..n)
+            .map(|i| f32_literal(&[2], &[i as f32, i as f32]).unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn truncated_output_list_is_a_typed_error_not_a_panic() {
+        let spec = step_spec();
+        // 4 of the 7 promised literals: the V segment is truncated
+        let err = parse_step_outputs(&spec, &lits(4)).unwrap_err().to_string();
+        assert!(err.contains("tiny/step_qa_lora"), "{err}");
+        assert!(err.contains("V"), "{err}");
+        assert!(err.contains("truncated"), "{err}");
+        // all tensors present but the trailing loss scalar missing
+        let err = parse_step_outputs(&spec, &lits(6)).unwrap_err().to_string();
+        assert!(err.contains("tiny/step_qa_lora"), "{err}");
+        assert!(err.contains("loss"), "{err}");
+        // store_from_outputs itself reports the role it ran out at
+        let err = store_from_outputs(&spec, Role::M, &lits(3), 2)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("tiny/step_qa_lora"), "{err}");
+        assert!(err.contains("M"), "{err}");
+    }
+
+    #[test]
+    fn mismatched_moment_counts_are_rejected() {
+        let mut spec = step_spec();
+        spec.outputs.remove(4); // drop one V tensor: |V| != |Train|
+        let err = parse_step_outputs(&spec, &lits(7)).unwrap_err().to_string();
+        assert!(err.contains("tiny/step_qa_lora"), "{err}");
+        assert!(err.contains("2 train"), "{err}");
+        assert!(err.contains("1 v"), "{err}");
+    }
+
+    #[test]
+    fn full_output_list_still_parses() {
+        let spec = step_spec();
+        let mut all = lits(6);
+        all.push(f32_literal(&[], &[0.25]).unwrap());
+        let (train, m, v, loss) = parse_step_outputs(&spec, &all).unwrap();
+        assert_eq!(train.len(), 2);
+        assert_eq!(m.len(), 2);
+        assert_eq!(v.len(), 2);
+        assert_eq!(loss, 0.25);
     }
 
     #[test]

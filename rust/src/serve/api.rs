@@ -1226,6 +1226,22 @@ impl ServerBuilder {
             s
         });
 
+        // AOT shape specialization (`runtime::compile`): each worker
+        // specializes its forward executor for the batch fills its
+        // backend's scheduler can ever commit to — the per-request-
+        // latency frontier of the backend-adapted cost table. The
+        // worker's BatchScheduler reads the SAME table (adapt_sched →
+        // latency_table), so this set is the scheduler's actual
+        // commitment, not a guess. Without cost-based scheduling there
+        // is no commitment and the executors keep the padded path.
+        let committed: Vec<Vec<usize>> = backends
+            .iter()
+            .map(|b| match &sched {
+                Some(s) => b.cost_model(s, self.max_batch).committed_fills(),
+                None => Vec::new(),
+            })
+            .collect();
+
         // one contiguous worker span per backend, registration order;
         // the remainder pads the front spans so every span is non-empty
         let base = self.workers / n_backends;
@@ -1365,6 +1381,7 @@ impl ServerBuilder {
                 max_wait: self.max_wait,
                 hw: self.hw,
                 fail_every: self.fail_every,
+                specialize: committed[owner].clone(),
                 // the backend re-shapes the scheduler's hardware model
                 // (e.g. the digital reference's integration-time
                 // slowdown); identity for PcmPjrt

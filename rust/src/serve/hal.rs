@@ -95,7 +95,6 @@
 //! submissions land on the new span from one instant on.
 
 use std::collections::BTreeMap;
-use std::rc::Rc;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -136,6 +135,27 @@ pub trait Forward {
 
     /// Milliseconds spent compiling/bringing up this executor.
     fn compile_ms(&self) -> u64;
+
+    /// Ahead-of-time shape-specialize for the batch fills the
+    /// scheduler commits to
+    /// ([`super::sched::BatchScheduler::committed_fills`]), so those
+    /// fills execute without per-batch padding or re-pack
+    /// (`runtime::compile`). Every specialized path must stay
+    /// bit-identical to the padded reference — `compile_golden` pins
+    /// it. Fills the executor cannot specialize (larger than the graph
+    /// batch) are skipped, not errors; a zero fill is a caller bug and
+    /// errors. The default is a no-op: substrates serve correctly
+    /// without specialization, just slower.
+    fn specialize(&mut self, fills: &[usize]) -> Result<()> {
+        let _ = fills;
+        Ok(())
+    }
+
+    /// The fills this executor was specialized for (ascending; empty
+    /// until [`Forward::specialize`] runs).
+    fn specialized_fills(&self) -> Vec<usize> {
+        Vec::new()
+    }
 
     /// Classification logit rows for `tokens` (one row of class logits
     /// per `seq`-length request).
@@ -276,6 +296,16 @@ impl CostModel {
         self.sustainable_fill(interarrival_ns).is_some()
     }
 
+    /// The fills a scheduler batching on this table can ever commit a
+    /// batch at ([`crate::pipeline::balance::frontier_fills`]): what
+    /// `ServerBuilder::build` AOT shape-specializes each worker's
+    /// forward executor for. Reads the SAME table the backend's
+    /// [`super::sched::BatchScheduler`] batches on, so the specialized
+    /// set and the scheduler's commitment cannot disagree.
+    pub fn committed_fills(&self) -> Vec<usize> {
+        crate::pipeline::balance::frontier_fills(&self.modeled_ns)
+    }
+
     /// Uniformly scaled copy (a substrate `factor`× slower per batch).
     pub fn scaled(&self, factor: f64) -> CostModel {
         let f = if factor.is_finite() && factor > 0.0 {
@@ -397,12 +427,30 @@ pub fn route_one(backends: &[BackendProfile], interarrival_ns: f64, tolerance: f
     best
 }
 
-/// Route every task ([`route_one`] per task; pins clamp to range).
+/// Route every task ([`route_one`] per task).
+///
+/// # Precondition
+///
+/// Every pin must be a valid backend index. `ServerBuilder::build`
+/// rejects out-of-range pins with `BuildError::Backends`, so a pin
+/// that gets here out of range is a caller bug: debug builds panic on
+/// it (the [`assignment_cost`] idiom); release builds clamp to the
+/// last backend so a typo'd operator pin degrades to a real substrate
+/// rather than a crash — but no longer silently, since the debug lane
+/// catches it first.
 pub fn route_tasks(backends: &[BackendProfile], tasks: &[TaskProfile]) -> Vec<usize> {
     tasks
         .iter()
         .map(|t| match t.pinned {
-            Some(p) => p.min(backends.len().saturating_sub(1)),
+            Some(p) => {
+                debug_assert!(
+                    p < backends.len(),
+                    "route_tasks: task '{}' pinned to backend {p}, but only {} exist",
+                    t.task,
+                    backends.len()
+                );
+                p.min(backends.len().saturating_sub(1))
+            }
             None => route_one(backends, t.interarrival_ns, t.tolerance),
         })
         .collect()
@@ -653,6 +701,12 @@ impl Router {
 
     fn decide(&self, task: &str, interarrival_ns: f64) -> usize {
         if let Some(&p) = self.pins.get(task) {
+            // out-of-range pins are rejected at build; see route_tasks
+            debug_assert!(
+                p < self.profiles.len(),
+                "router: task '{task}' pinned to backend {p}, but only {} exist",
+                self.profiles.len()
+            );
             return p.min(self.profiles.len() - 1);
         }
         route_one(&self.profiles, interarrival_ns, self.tolerance_of(task))
@@ -1190,20 +1244,21 @@ impl PcmPjrt {
     }
 }
 
+/// The PJRT executor behind [`PcmPjrt`]: the staged compile pipeline
+/// (`runtime::compile`), which owns the engine, the graph IR, the
+/// max-shape base executable, and any per-fill shape specializations.
 struct PjrtForward {
-    graph: Rc<crate::runtime::LoadedGraph>,
-    compile_ms: u64,
-    // keeps the PJRT client alive for as long as the executable runs
-    _engine: crate::runtime::Engine,
+    pipe: crate::runtime::compile::FwdPipeline,
 }
 
 impl Forward for PjrtForward {
     fn batch_shape(&self) -> (usize, usize) {
-        crate::eval::drift_eval::fwd_batch_shape(&self.graph)
+        (self.pipe.ir().batch, self.pipe.ir().seq)
     }
 
     fn vocab(&self) -> Option<usize> {
-        self.graph
+        self.pipe
+            .base()
             .spec
             .outputs
             .first()
@@ -1211,8 +1266,19 @@ impl Forward for PjrtForward {
             .map(|o| o.shape[2])
     }
 
+    /// Total compile time so far — grows when [`Forward::specialize`]
+    /// compiles exact-shape siblings, so the pool reads it AFTER
+    /// specialization and the metric covers the whole bring-up.
     fn compile_ms(&self) -> u64 {
-        self.compile_ms
+        self.pipe.compile_ms() as u64
+    }
+
+    fn specialize(&mut self, fills: &[usize]) -> Result<()> {
+        self.pipe.specialize(fills)
+    }
+
+    fn specialized_fills(&self) -> Vec<usize> {
+        self.pipe.specialized_fills()
     }
 
     fn cls_logits(
@@ -1223,7 +1289,7 @@ impl Forward for PjrtForward {
         hw: [f32; 5],
         seed: u64,
     ) -> Result<Vec<Vec<f32>>> {
-        crate::eval::drift_eval::cls_logits(&self.graph, meta, adapter, tokens, hw, seed)
+        self.pipe.cls_logits(meta, adapter, tokens, hw, seed)
     }
 
     fn lm_logits(
@@ -1234,7 +1300,7 @@ impl Forward for PjrtForward {
         hw: [f32; 5],
         seed: u64,
     ) -> Result<Vec<f32>> {
-        crate::eval::drift_eval::lm_logits(&self.graph, meta, adapter, tokens, hw, seed)
+        self.pipe.lm_logits(meta, adapter, tokens, hw, seed)
     }
 }
 
@@ -1271,14 +1337,8 @@ impl Backend for PcmPjrt {
     }
 
     fn forward(&self, manifest: &Manifest, graph_key: &str) -> Result<Box<dyn Forward>> {
-        let engine = crate::runtime::Engine::new(manifest.clone())?;
-        let graph = engine.load(graph_key)?;
-        let compile_ms = engine.total_compile_ms() as u64;
-        Ok(Box::new(PjrtForward {
-            graph,
-            compile_ms,
-            _engine: engine,
-        }))
+        let pipe = crate::runtime::compile::FwdPipeline::compile(manifest.clone(), graph_key)?;
+        Ok(Box::new(PjrtForward { pipe }))
     }
 }
 
@@ -1368,6 +1428,12 @@ struct DigitalForward {
     out: Vec<usize>,
     /// Numerics model (see [`DigitalRef`]'s `model` field).
     model: PcmModel,
+    /// Fills accepted by [`Forward::specialize`]. The row-wise hash
+    /// forward is already exact-shape at every fill (no padding to
+    /// elide), so this only records the commitment — and validates it,
+    /// which is what keeps a bad committed-fill set from reaching the
+    /// analog substrates unnoticed in hermetic CI.
+    specialized: Vec<usize>,
 }
 
 #[cfg(feature = "digital-ref")]
@@ -1448,6 +1514,26 @@ impl Forward for DigitalForward {
 
     fn compile_ms(&self) -> u64 {
         0
+    }
+
+    fn specialize(&mut self, fills: &[usize]) -> Result<()> {
+        for &f in fills {
+            if f == 0 {
+                return Err(anyhow!(
+                    "digital-ref: cannot specialize a zero batch fill"
+                ));
+            }
+        }
+        // already exact-shape row-wise; record fills ≤ the graph batch
+        // (larger fills chunk, exactly like the padded reference)
+        self.specialized = fills.iter().copied().filter(|&f| f <= self.batch).collect();
+        self.specialized.sort_unstable();
+        self.specialized.dedup();
+        Ok(())
+    }
+
+    fn specialized_fills(&self) -> Vec<usize> {
+        self.specialized.clone()
     }
 
     fn cls_logits(
@@ -1566,6 +1652,7 @@ impl Backend for DigitalRef {
             seq: io.shape[1],
             out: out.shape.clone(),
             model: self.model.clone(),
+            specialized: Vec::new(),
         }))
     }
 }
@@ -1684,31 +1771,68 @@ mod tests {
         let _ = pcm;
     }
 
-    #[test]
-    fn pinned_tasks_are_respected() {
-        let b = BackendProfile {
+    fn pin_profile() -> BackendProfile {
+        BackendProfile {
             name: "only".into(),
             cost: CostModel::from_table(vec![100.0]),
             drift: None,
             refit_ns: 0.0,
             deploy_latency: Duration::from_micros(50),
-        };
-        let backends = [b.clone(), b];
-        let tasks = vec![
-            TaskProfile {
-                task: "a".into(),
-                tolerance: 0.1,
-                interarrival_ns: f64::INFINITY,
-                pinned: Some(1),
-            },
-            TaskProfile {
-                task: "b".into(),
-                tolerance: 0.1,
-                interarrival_ns: f64::INFINITY,
-                pinned: Some(99),
-            },
-        ];
-        assert_eq!(route_tasks(&backends, &tasks), vec![1, 1]);
+        }
+    }
+
+    fn pinned_task(name: &str, pin: usize) -> TaskProfile {
+        TaskProfile {
+            task: name.into(),
+            tolerance: 0.1,
+            interarrival_ns: f64::INFINITY,
+            pinned: Some(pin),
+        }
+    }
+
+    #[test]
+    fn pinned_tasks_are_respected() {
+        let backends = [pin_profile(), pin_profile()];
+        let tasks = vec![pinned_task("a", 1), pinned_task("b", 0)];
+        assert_eq!(route_tasks(&backends, &tasks), vec![1, 0]);
+    }
+
+    /// An out-of-range pin is rejected by `ServerBuilder::build`; a
+    /// pin that reaches routing out of range anyway is a caller bug
+    /// the debug lane must catch loudly (release clamps — covered by
+    /// the release-only branch below).
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "pinned to backend 99")]
+    fn out_of_range_pin_panics_in_debug() {
+        let backends = [pin_profile(), pin_profile()];
+        route_tasks(&backends, &[pinned_task("typo", 99)]);
+    }
+
+    #[cfg(not(debug_assertions))]
+    #[test]
+    fn out_of_range_pin_clamps_in_release() {
+        let backends = [pin_profile(), pin_profile()];
+        assert_eq!(route_tasks(&backends, &[pinned_task("typo", 99)]), vec![1]);
+    }
+
+    #[test]
+    fn committed_fills_match_scheduler_commitment() {
+        let cfg = layer();
+        let cm = CostModel::from_layer(&cfg, 8);
+        let sched = BatchScheduler::new(cfg, 8, Duration::from_millis(5));
+        assert_eq!(
+            cm.committed_fills(),
+            sched.committed_fills(),
+            "placement and batching must agree on the committed fill set"
+        );
+        assert_eq!(cm.committed_fills().last(), Some(&8));
+        // an adapted (slower) table commits the same frontier SHAPE
+        // guarantees: max fill present, all fills within range
+        let scaled = cm.scaled(4.0);
+        let fills = scaled.committed_fills();
+        assert!(fills.iter().all(|&f| f >= 1 && f <= 8));
+        assert_eq!(fills.last(), Some(&8));
     }
 
     #[test]
@@ -1814,6 +1938,26 @@ mod tests {
             assert!(a[0].iter().all(|v| v.is_finite() && v.abs() <= 1.0));
             assert_eq!(a, b, "same inputs must reproduce");
             assert_ne!(a, c, "a refit adapter must change the logits");
+        }
+
+        #[test]
+        fn specialize_records_fills_and_keeps_logits_bit_identical() {
+            let be = DigitalRef::default();
+            let meta = ParamStore::default();
+            let hw = [0.0, 0.0, 127.0, 127.0, 0.0];
+            let plain = be.forward(&manifest(), "base/fwd_cls").unwrap();
+            let mut spec = be.forward(&manifest(), "base/fwd_cls").unwrap();
+            assert!(spec.specialized_fills().is_empty());
+            // graph batch is 4; 8 exceeds it and is skipped, not an error
+            spec.specialize(&[1, 2, 4, 8]).unwrap();
+            assert_eq!(spec.specialized_fills(), vec![1, 2, 4]);
+            for fill in 1..=4usize {
+                let tokens: Vec<i32> = (0..(fill * 16) as i32).collect();
+                let a = plain.cls_logits(&meta, &adapter(1.0), &tokens, hw, 7).unwrap();
+                let b = spec.cls_logits(&meta, &adapter(1.0), &tokens, hw, 7).unwrap();
+                assert_eq!(a, b, "fill {fill} must be bit-identical after specialization");
+            }
+            assert!(spec.specialize(&[0]).is_err(), "zero fill is a caller bug");
         }
 
         #[test]

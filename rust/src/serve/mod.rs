@@ -123,6 +123,29 @@
 //!       │  deploy latency from ITS backend                       │
 //!       └────────────────────────────────────────────────────────┘
 //!
+//!       ┌──────────────────────── COMPILE ───────────────────────┐
+//!       │  runtime::compile — the staged forward-graph pipeline  │
+//!       │  manifest → graph IR (role segments) → passes (shape   │
+//!       │  inference · input-segment layout validation · dead-   │
+//!       │  output elision) → lowering → per-(key, batch) PJRT    │
+//!       │  compile cache                                         │
+//!       │                                                        │
+//!       │  build time: each worker reads its backend scheduler's │
+//!       │  fill commitment (committed_fills — the per-request-   │
+//!       │  latency frontier of the SAME cost table that closes   │
+//!       │  batches) and AOT-specializes its executor for exactly │
+//!       │  those fills:                                          │
+//!       │    exact-shape sibling artifact → compiled directly    │
+//!       │      (zero padding, zero re-pack)                      │
+//!       │    fill == graph batch → pass-through (zero copy)      │
+//!       │    otherwise → persistent prepacked buffer (tail       │
+//!       │      zeroed ONCE at build, not per batch)              │
+//!       │  odd fills fall back to the padded max-shape path;     │
+//!       │  every path is bit-identical (compile_golden pins it)  │
+//!       │  ──► SCHEDULE: the fill set COMPILE specializes IS the │
+//!       │      scheduler's commitment — one table, no disagree   │
+//!       └────────────────────────────────────────────────────────┘
+//!
 //!       ┌─────────────────────── REBALANCE ──────────────────────┐
 //!       │  hal::RebalanceRunner — cadenced adaptive placement    │
 //!       │  (opt-in via ServerBuilder::rebalance, ≥ 2 backends)   │
@@ -216,7 +239,11 @@
 //!   tasks on heterogeneous pools by modeled service +
 //!   tolerance-maintenance cost, and the cadenced
 //!   [`hal::RebalanceRunner`] that keeps placement tracking measured
-//!   traffic under a hysteresis gate with live span migration.
+//!   traffic under a hysteresis gate with live span migration. At
+//!   build, [`api::ServerBuilder`] feeds each backend scheduler's
+//!   [`sched::BatchScheduler::committed_fills`] into
+//!   [`hal::Forward::specialize`] so the COMPILE stage above pre-lowers
+//!   exactly the fills the scheduler will close.
 //!
 //! (The deprecated `serve::router` / `serve::server` shims from the
 //! pre-builder API are gone; [`api`] is the only serving surface.)

@@ -73,6 +73,12 @@ pub(crate) struct WorkerConfig {
     pub hw: [f32; 5],
     /// Chaos knob: fail every n-th batch (0 = off).
     pub fail_every: u64,
+    /// Batch fills to AOT shape-specialize the forward executor for
+    /// (`runtime::compile`) — the committed-fill frontier of this
+    /// worker's backend-adapted cost table, computed by the builder.
+    /// Empty when the pool runs without cost-based scheduling (no fill
+    /// commitment exists to specialize for).
+    pub specialize: Vec<usize>,
     /// Pipeline-aware scheduling: when set, batch fills come from the
     /// AIMC/PMCA cost model instead of the fixed size/deadline policy.
     pub sched: Option<SchedConfig>,
@@ -188,7 +194,7 @@ fn worker_loop(
     // forward handles (PJRT executables) are not Send: the executor is
     // brought up HERE, through the worker's backend, from the manifest
     // the builder parsed once for the whole pool.
-    let fwd = match cfg.backend.forward(&manifest, &cfg.graph_key) {
+    let mut fwd = match cfg.backend.forward(&manifest, &cfg.graph_key) {
         Ok(f) => f,
         Err(e) => {
             return fail_all(
@@ -204,7 +210,22 @@ fn worker_loop(
             )
         }
     };
+    // AOT shape specialization for the scheduler's committed fills.
+    // Failure is non-fatal: the padded max-shape path serves every
+    // fill bit-identically, so a worker degrades to it rather than
+    // refusing traffic.
+    if !cfg.specialize.is_empty() {
+        if let Err(e) = fwd.specialize(&cfg.specialize) {
+            eprintln!(
+                "[serve] worker {} (backend '{}'): shape specialization failed ({e:#}); \
+                 serving on the padded path",
+                cfg.worker,
+                cfg.backend.name()
+            );
+        }
+    }
     let fwd: &dyn Forward = fwd.as_ref();
+    // read AFTER specialize: covers base compile + specializations
     metrics
         .compile_ms
         .store(fwd.compile_ms(), Ordering::Relaxed);

@@ -477,6 +477,24 @@ impl BatchScheduler {
         self.modeled_ns.len()
     }
 
+    /// The fills this scheduler can ever commit a batch at: the image
+    /// of [`Self::target_fill`] over every arrival rate — the
+    /// per-request-latency frontier of the modeled table plus the
+    /// max-batch fallback for unsustainable rates
+    /// ([`crate::pipeline::balance::frontier_fills`]).
+    ///
+    /// Known at build time, which is what makes ahead-of-time shape
+    /// specialization possible: `ServerBuilder::build` hands this set
+    /// to each worker's forward executor
+    /// ([`crate::serve::hal::Forward::specialize`]) so the common
+    /// fills execute without per-batch padding or re-pack
+    /// (`runtime::compile`). Deadline pressure and refresh coupling
+    /// can shrink a batch *below* its target fill — those odd fills
+    /// fall back to the padded max-shape path, bit-identically.
+    pub fn committed_fills(&self) -> Vec<usize> {
+        crate::pipeline::balance::frontier_fills(&self.modeled_ns)
+    }
+
     /// Current inter-arrival estimate for a task (ns).
     ///
     /// Cold-start rule: until a task has TWO observed arrivals there is
@@ -774,6 +792,23 @@ mod tests {
                 assert_eq!(s.t_opt(), b.t, "{m}x{n}@{t_int}");
                 assert!(s.balance_point().fits_tcdm || !b.fits_tcdm);
             }
+        }
+    }
+
+    #[test]
+    fn committed_fills_cover_every_target_fill() {
+        let s = sched(8);
+        let fills = s.committed_fills();
+        assert_eq!(fills.last(), Some(&8), "max batch is always committed");
+        // sweep arrival gaps across the whole modeled range: every
+        // fill the scheduler can target must be in the committed set
+        let mut gaps: Vec<f64> = (0..400)
+            .map(|i| s.modeled_batch_ns(8) * (i as f64 / 100.0))
+            .collect();
+        gaps.push(f64::INFINITY);
+        for gap in gaps {
+            let t = s.target_fill(gap);
+            assert!(fills.contains(&t), "target_fill({gap}) = {t} not committed");
         }
     }
 

@@ -1,0 +1,274 @@
+//! Golden bit-identity tests for the staged compile pipeline
+//! (`runtime::compile`).
+//!
+//! The pipeline's contract is that shape specialization is purely a
+//! latency optimization: for every fill the scheduler can commit to —
+//! and for every odd fill that falls back to the padded reference path
+//! — the logits must match the unspecialized pipeline bit for bit, on
+//! both the cls and qa heads. The host-side packing invariants are
+//! property-tested hermetically; the PJRT goldens self-skip (with a
+//! note on stderr) when the tiny artifacts have not been built.
+
+use std::time::Duration;
+
+use ahwa_lora::config::manifest::{default_artifacts_dir, GraphSpec, Manifest, Role};
+use ahwa_lora::model::params::ParamStore;
+use ahwa_lora::runtime::pack::PaddedChunks;
+use ahwa_lora::runtime::{FwdPipeline, PrepackedBuf};
+use ahwa_lora::serve::sched::{BatchScheduler, SchedConfig};
+use ahwa_lora::util::proptest::check;
+use ahwa_lora::util::rng::Pcg64;
+
+// ---------------------------------------------------------------------------
+// Host-side packing properties (hermetic)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn whole_multiple_inputs_never_emit_a_spurious_padded_chunk() {
+    check("padded-chunks-whole-multiple", 64, |g| {
+        let b = g.usize_in(1, 8);
+        let s = g.usize_in(1, 12);
+        let k = g.usize_in(1, 6); // full chunks
+        let n = k * b;
+        let tokens: Vec<i32> = (0..(n * s) as i32).collect();
+        let mut chunks = PaddedChunks::new(&tokens, b, s);
+        let mut seen = 0usize;
+        while let Some((chunk, take, offset)) = chunks.next_chunk() {
+            assert_eq!(take, b, "n % b == 0 must fill every chunk completely");
+            assert_eq!(offset, seen * b, "chunk row offsets must be contiguous");
+            assert_eq!(
+                chunk,
+                &tokens[seen * b * s..(seen + 1) * b * s],
+                "a full chunk is a pure copy, no padding"
+            );
+            seen += 1;
+        }
+        assert_eq!(seen, k, "n % b == 0 must yield exactly n / b chunks");
+    });
+}
+
+#[test]
+fn partial_tail_chunk_is_zero_padded_and_counted_once() {
+    check("padded-chunks-tail", 64, |g| {
+        let b = g.usize_in(2, 8);
+        let s = g.usize_in(1, 12);
+        let n = g.usize_in(1, 3 * b);
+        // 1-based payload so a zeroed pad row is distinguishable
+        let tokens: Vec<i32> = (1..=(n * s) as i32).collect();
+        let mut chunks = PaddedChunks::new(&tokens, b, s);
+        let (mut rows, mut count) = (0usize, 0usize);
+        while let Some((chunk, take, _)) = chunks.next_chunk() {
+            assert!((1..=b).contains(&take));
+            assert!(
+                chunk[take * s..].iter().all(|&v| v == 0),
+                "rows past the fill must be zero padding"
+            );
+            rows += take;
+            count += 1;
+        }
+        assert_eq!(rows, n, "every input row must be yielded exactly once");
+        assert_eq!(count, n.div_ceil(b));
+    });
+}
+
+#[test]
+fn prepacked_buffer_is_bit_identical_to_the_padded_reference() {
+    check("prepacked-vs-padded", 64, |g| {
+        let b = g.usize_in(1, 8);
+        let s = g.usize_in(1, 12);
+        let f = g.usize_in(1, b);
+        let mut pre = PrepackedBuf::new(f, b, s);
+        // two rounds with different payloads: the tail must stay zero
+        // across packs, not just after construction
+        for round in 0..2i32 {
+            let tokens: Vec<i32> = (0..(f * s) as i32).map(|t| t + 1 + round * 1000).collect();
+            let mut chunks = PaddedChunks::new(&tokens, b, s);
+            let (reference, take, _) = chunks.next_chunk().unwrap();
+            assert_eq!(take, f);
+            assert_eq!(
+                pre.pack(&tokens).unwrap(),
+                reference,
+                "prepacked buffer must produce the exact bytes of the padded path"
+            );
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Digital-ref golden (hermetic, through the serve HAL's public surface)
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "digital-ref")]
+mod digital_golden {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    use ahwa_lora::config::manifest::{HwDefaults, IoSpec};
+    use ahwa_lora::model::params::Tensor;
+    use ahwa_lora::serve::{Backend, DigitalRef, Forward};
+
+    fn manifest() -> Manifest {
+        let spec = GraphSpec {
+            key: "base/fwd_cls".into(),
+            kind: "fwd_cls".into(),
+            variant: "base".into(),
+            file: String::new(),
+            inputs: vec![IoSpec {
+                name: "data/tokens".into(),
+                role: Role::Data,
+                shape: vec![4, 16],
+                dtype: "i32".into(),
+            }],
+            outputs: vec![IoSpec {
+                name: "logits".into(),
+                role: Role::Logits,
+                shape: vec![4, 3],
+                dtype: "f32".into(),
+            }],
+        };
+        Manifest {
+            root: std::path::PathBuf::from("unused"),
+            hw: HwDefaults {
+                weight_noise: 0.0,
+                adc_noise: 0.0,
+                clip_sigma: 127.0,
+                dac_bits: 8,
+                adc_bits: 8,
+                g_max_us: 25.0,
+                t0_seconds: 20.0,
+            },
+            grpo_group: 1,
+            variants: BTreeMap::new(),
+            graphs: BTreeMap::from([("base/fwd_cls".to_string(), spec)]),
+        }
+    }
+
+    #[test]
+    fn digital_backend_specialization_is_bit_identical_at_every_fill() {
+        let be = DigitalRef::default();
+        let m = manifest();
+        let plain = be.forward(&m, "base/fwd_cls").unwrap();
+        let mut spec = be.forward(&m, "base/fwd_cls").unwrap();
+
+        // commit exactly what a scheduler on this substrate would
+        let sched = BatchScheduler::new(
+            be.adapt_sched(SchedConfig::for_layer(64, 64, 4).seq(16)),
+            4,
+            Duration::from_millis(5),
+        );
+        let fills = sched.committed_fills();
+        assert!(!fills.is_empty());
+        spec.specialize(&fills).unwrap();
+
+        let meta = ParamStore::default();
+        let mut t = Tensor::zeros("train/a", &[2, 2]);
+        t.data[0] = 1.5;
+        let adapter = ParamStore::from_tensors(vec![t]);
+        let hw = [0.0, 0.0, 127.0, 127.0, 0.0];
+        // every fill — committed or odd — must agree bit for bit
+        for fill in 1..=4usize {
+            let tokens: Vec<i32> = (0..(fill * 16) as i32).collect();
+            let a = plain.cls_logits(&meta, &adapter, &tokens, hw, 7).unwrap();
+            let b = spec.cls_logits(&meta, &adapter, &tokens, hw, 7).unwrap();
+            assert_eq!(a.len(), fill);
+            assert_eq!(a, b, "fill {fill}: specialization changed the logits");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT goldens (need built artifacts; self-skip otherwise)
+// ---------------------------------------------------------------------------
+
+fn manifest_if_built() -> Option<Manifest> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (`make artifacts`)");
+        return None;
+    }
+    Some(Manifest::load(dir).unwrap())
+}
+
+fn graph_key(manifest: &Manifest, kind: &str) -> Option<String> {
+    manifest
+        .graphs
+        .values()
+        .find(|g| g.kind == kind)
+        .map(|g| g.key.clone())
+}
+
+/// Deterministic non-trivial parameters for a role, shaped by the spec.
+fn randomized(spec: &GraphSpec, role: Role, seed: u64) -> ParamStore {
+    let mut store = ParamStore::zeros_like_role(spec, role);
+    let mut rng = Pcg64::new(seed);
+    for t in &mut store.tensors {
+        rng.fill_normal(&mut t.data, 0.0, 0.05);
+    }
+    store
+}
+
+/// Compile the same graph twice — once untouched (the padded reference
+/// path) and once specialized on the scheduler's committed fills.
+fn padded_and_specialized(manifest: &Manifest, key: &str) -> (FwdPipeline, FwdPipeline) {
+    let padded = FwdPipeline::compile(manifest.clone(), key).unwrap();
+    let mut specialized = FwdPipeline::compile(manifest.clone(), key).unwrap();
+    let (batch, seq) = (padded.ir().batch, padded.ir().seq);
+    let sched = BatchScheduler::new(
+        SchedConfig::for_layer(128, 128, 8).seq(seq),
+        batch,
+        Duration::from_millis(5),
+    );
+    specialized.specialize(&sched.committed_fills()).unwrap();
+    assert!(!specialized.specialized_fills().is_empty());
+    (padded, specialized)
+}
+
+#[test]
+fn specialized_cls_logits_match_the_padded_path_bit_for_bit() {
+    let Some(manifest) = manifest_if_built() else { return };
+    let Some(key) = graph_key(&manifest, "fwd_cls") else {
+        eprintln!("skipping: no fwd_cls graph in the manifest");
+        return;
+    };
+    let (padded, specialized) = padded_and_specialized(&manifest, &key);
+    let spec = &padded.base().spec;
+    let meta = randomized(spec, Role::Meta, 11);
+    let train = randomized(spec, Role::Train, 13);
+    let hw = [0.0f32, 3.0, 127.0, 127.0, 0.04];
+    let (batch, seq) = (padded.ir().batch, padded.ir().seq);
+    // every fill — the committed ones exercise the lowered paths, the
+    // rest must fall back to the padded reference unchanged
+    for fill in 1..=batch {
+        let tokens: Vec<i32> = (0..(fill * seq) as i32).map(|t| t % 50).collect();
+        let a = padded.cls_logits(&meta, &train, &tokens, hw, 42).unwrap();
+        let b = specialized.cls_logits(&meta, &train, &tokens, hw, 42).unwrap();
+        assert_eq!(a.len(), fill);
+        assert_eq!(
+            a, b,
+            "fill {fill} (lowering {:?}): specialization changed the logits",
+            specialized.lowering(fill)
+        );
+    }
+}
+
+#[test]
+fn specialized_qa_predictions_match_the_padded_path() {
+    let Some(manifest) = manifest_if_built() else { return };
+    let Some(key) = graph_key(&manifest, "fwd_qa") else {
+        eprintln!("skipping: no fwd_qa graph in the manifest");
+        return;
+    };
+    let (padded, specialized) = padded_and_specialized(&manifest, &key);
+    let spec = &padded.base().spec;
+    let meta = randomized(spec, Role::Meta, 17);
+    let train = randomized(spec, Role::Train, 19);
+    let hw = [0.0f32, 3.0, 127.0, 127.0, 0.04];
+    let (batch, seq) = (padded.ir().batch, padded.ir().seq);
+    for fill in 1..=batch {
+        let tokens: Vec<i32> = (0..(fill * seq) as i32).map(|t| t % 50).collect();
+        let a = padded.qa_predict(&meta, &train, &tokens, hw, 42).unwrap();
+        let b = specialized.qa_predict(&meta, &train, &tokens, hw, 42).unwrap();
+        assert_eq!(a.len(), fill);
+        assert_eq!(a, b, "fill {fill}: specialization changed the qa spans");
+    }
+}
